@@ -1,0 +1,102 @@
+"""AOT build: lower chunk-program variants to HLO *text* artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts land in ``artifacts/`` with a ``manifest.txt`` the Rust runtime
+parses:
+
+    so2dr-artifact-manifest v1
+    name=<id> kind=<kind> k=<k> rows=<H> cols=<W> radius=<r> file=<f>
+
+Variant set: every (kind, k, rows) the default demo geometries need —
+SO2DR k_on-step kernels, ResReu single-step kernels and in-core kernels
+for the e2e example plus the quickstart geometry. Python runs once at
+build time; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def demo_variants():
+    """The artifact set for the shipped examples (see examples/).
+
+    e2e_paper geometry: grid 512x512, d=4 chunks (128 owned rows),
+    S_TB=8, k_on=4, n divisible by S_TB.
+      - SO2DR buffers: 128 + 2*8*r rows, k=4
+      - ResReu buffers: 128 + 8*r + r rows, k=1
+      - in-core: 512 rows, k=4
+    quickstart geometry: grid 256x256, d=4, S_TB=4, k_on=2 (box2d1r +
+    gradient2d).
+    """
+    variants = []
+    for kind in ref.PAPER_KINDS:
+        r = ref.kind_radius(kind)
+        variants.append((kind, 4, 128 + 2 * 8 * r, 512))   # SO2DR e2e
+        variants.append((kind, 1, 128 + 8 * r + r, 512))   # ResReu e2e
+        variants.append((kind, 4, 512, 512))                # in-core e2e
+    for kind in ("box2d1r", "gradient2d"):
+        r = ref.kind_radius(kind)
+        variants.append((kind, 2, 64 + 2 * 4 * r, 256))     # SO2DR quickstart
+    return variants
+
+
+def variant_name(kind: str, k: int, rows: int, cols: int) -> str:
+    return f"{kind}_k{k}_{rows}x{cols}"
+
+
+def build(outdir: str, variants=None, verbose: bool = True) -> list[str]:
+    os.makedirs(outdir, exist_ok=True)
+    variants = variants if variants is not None else demo_variants()
+    lines = ["so2dr-artifact-manifest v1"]
+    written = []
+    for kind, k, rows, cols in variants:
+        name = variant_name(kind, k, rows, cols)
+        fname = f"{name}.hlo.txt"
+        lowered = model.lower_variant(kind, k, rows, cols)
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        r = ref.kind_radius(kind)
+        lines.append(
+            f"name={name} kind={kind} k={k} rows={rows} cols={cols} "
+            f"radius={r} file={fname}")
+        written.append(path)
+        if verbose:
+            print(f"  aot: {name} ({len(text)} chars)")
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    if verbose:
+        print(f"  aot: manifest.txt ({len(written)} artifacts) -> {outdir}")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory (default: ../artifacts)")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Pure-jnp oracle for the stencil kernels.
+
+This file is the *numerical contract* shared with the Rust host engines
+(``rust/src/stencil/``): the box weights and the gradient2d expression are
+computed with the exact same formulas and association order. Do not change
+either side independently.
+
+Benchmarks (paper Table III):
+  box2d{1..4}r  -- separable, mildly asymmetric box stencil of radius r,
+                   2*(2r+1)^2 - 1 FLOPS/element
+  gradient2d    -- 5-point gradient-weighted diffusion, 19 FLOPS/element
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+GRADIENT_ALPHA = 0.05
+
+PAPER_KINDS = ("box2d1r", "box2d2r", "box2d3r", "box2d4r", "gradient2d")
+
+
+def kind_radius(kind: str) -> int:
+    """Stencil radius of a benchmark name."""
+    if kind == "gradient2d":
+        return 1
+    if kind.startswith("box2d") and kind.endswith("r"):
+        return int(kind[len("box2d"):-1])
+    raise ValueError(f"unknown stencil kind {kind!r}")
+
+
+def box_u(radius: int) -> np.ndarray:
+    """Row-factor weights; mirrors StencilKind::box_u (computed in f64)."""
+    n = float(2 * radius + 1)
+    di = np.arange(-radius, radius + 1, dtype=np.float64)
+    return ((1.0 + 0.1 * di / (radius + 1.0)) / n).astype(np.float32)
+
+
+def box_v(radius: int) -> np.ndarray:
+    """Column-factor weights; mirrors StencilKind::box_v."""
+    n = float(2 * radius + 1)
+    dj = np.arange(-radius, radius + 1, dtype=np.float64)
+    return ((1.0 + 0.05 * dj / (radius + 1.0)) / n).astype(np.float32)
+
+
+def box_weights(radius: int) -> np.ndarray:
+    """Full (2r+1)^2 table w(di,dj) = u(di) * v(dj), f32 (as in Rust)."""
+    u, v = box_u(radius), box_v(radius)
+    return (u[:, None] * v[None, :]).astype(np.float32)
+
+
+def stencil_candidate(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """One-step stencil value at every cell, computed with wrap-around
+    shifts. Only cells at least ``radius`` away from the edges are valid;
+    callers mask invalid cells out. Accumulation order is di-major then dj
+    (mirrors the Rust naive engine).
+    """
+    r = kind_radius(kind)
+    if kind == "gradient2d":
+        n = jnp.roll(x, 1, axis=0)   # x[i-1, j]
+        s = jnp.roll(x, -1, axis=0)  # x[i+1, j]
+        w = jnp.roll(x, 1, axis=1)   # x[i, j-1]
+        e = jnp.roll(x, -1, axis=1)  # x[i, j+1]
+        c = x
+        lap = ((n + s) + e) + w - 4.0 * c
+        gx = e - w
+        gy = s - n
+        g2 = gx * gx + gy * gy
+        coef = jnp.float32(GRADIENT_ALPHA) / jnp.sqrt(1.0 + g2)
+        return c + coef * lap
+    weights = box_weights(r)
+    acc = jnp.zeros_like(x)
+    for di in range(-r, r + 1):
+        for dj in range(-r, r + 1):
+            wij = weights[di + r, dj + r]
+            # rolled[i, j] == x[i + di, j + dj]
+            acc = acc + wij * jnp.roll(x, (-di, -dj), axis=(0, 1))
+    return acc
+
+
+def masked_step(x: jnp.ndarray, kind: str, lo, hi) -> jnp.ndarray:
+    """One masked time step: rows in [lo, hi) and interior columns are
+    updated, everything else passes through -- the semantic contract of the
+    AOT chunk program (fixed-shape + select masking)."""
+    r = kind_radius(kind)
+    H, W = x.shape
+    cand = stencil_candidate(x, kind)
+    rows = jnp.arange(H, dtype=jnp.int32)[:, None]
+    cols = jnp.arange(W, dtype=jnp.int32)[None, :]
+    mask = (rows >= lo) & (rows < hi) & (cols >= r) & (cols < W - r)
+    return jnp.where(mask, cand, x)
+
+
+def multistep_ref(x: jnp.ndarray, kind: str, windows) -> jnp.ndarray:
+    """Reference k-step chunk program: ``windows`` is a (k, 2) array of
+    row windows (already clamped); steps are applied in order."""
+    windows = jnp.asarray(windows, dtype=jnp.int32)
+    for s in range(windows.shape[0]):
+        x = masked_step(x, kind, windows[s, 0], windows[s, 1])
+    return x
+
+
+def reference_run(x: jnp.ndarray, kind: str, n: int) -> jnp.ndarray:
+    """n full-interior steps (Dirichlet boundary)."""
+    r = kind_radius(kind)
+    H, _ = x.shape
+    for _ in range(n):
+        x = masked_step(x, kind, r, H - r)
+    return x

@@ -1,0 +1,113 @@
+"""L1: the Pallas multi-step stencil kernel (on-chip data reuse).
+
+The TPU re-think of AN5D's CUDA temporal blocking (DESIGN.md
+section "Hardware adaptation"):
+
+* one grid cell owns one output row-tile of ``tile_rows`` rows;
+* the tile plus a ``k*r`` halo *skirt* is loaded into VMEM once
+  (``pl.load`` with a dynamic, clamped row offset);
+* all ``k`` fused time steps run over values held on-chip, with the valid
+  region shrinking by ``r`` rows per step — tiles recompute their skirt
+  instead of synchronizing with neighbors (the paper's redundant-compute
+  idea, recursed from the device-memory level down to VMEM);
+* only the final ``tile_rows x W`` block is written back.
+
+Off-chip traffic per k steps is ``(tile + skirt) + tile`` instead of
+``2 * tile * k`` — the on-chip reuse that single-step kernels cannot have.
+
+Compute windows arrive as a ``(k, 2) i32`` operand (row ``[lo, hi)`` per
+fused step) so one fixed-shape AOT executable serves every chunk position
+and trapezoid phase; cells outside a step's window pass through unchanged.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU performance is *estimated structurally* (VMEM
+footprint, traffic ratio) in DESIGN.md / EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def pick_tile_rows(H: int, pref: int = 128) -> int:
+    """Largest divisor of H not exceeding ``pref`` (so the output grid
+    tiles H exactly; pallas block shapes must divide the array)."""
+    t = min(pref, H)
+    while H % t != 0:
+        t -= 1
+    return t
+
+
+def vmem_bytes_estimate(tile_rows: int, W: int, k: int, radius: int) -> int:
+    """Structural VMEM footprint estimate per tile: the resident slab, one
+    candidate array and the mask (bytes). Used by the perf report."""
+    slab = tile_rows + 2 * k * radius
+    return slab * W * 4 * 2 + slab * W  # state + candidate (f32) + mask (i8)
+
+
+def offchip_traffic_ratio(tile_rows: int, k: int, radius: int) -> float:
+    """Off-chip traffic of k fused steps relative to k single-step sweeps
+    (lower is better): ((tile+skirt) + tile) / (2 * tile * k)."""
+    slab = tile_rows + 2 * k * radius
+    return (slab + tile_rows) / (2.0 * tile_rows * k)
+
+
+def _kernel(win_ref, x_ref, o_ref, *, kind: str, k: int, H: int, W: int,
+            tile_rows: int, slab: int):
+    r = ref.kind_radius(kind)
+    t = pl.program_id(0)
+    # Clamped slab start: interior tiles center their halo skirt; edge
+    # tiles slide inward (their outer rows are Dirichlet cells anyway).
+    start = jnp.clip(t * tile_rows - (slab - tile_rows) // 2, 0, H - slab)
+    state = pl.load(x_ref, (pl.ds(start, slab), slice(None)))
+    rows_g = start + jax.lax.broadcasted_iota(jnp.int32, (slab, 1), 0)
+    cols_g = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+    col_mask = (cols_g >= r) & (cols_g < W - r)
+    for s in range(k):
+        lo = win_ref[s, 0]
+        hi = win_ref[s, 1]
+        cand = ref.stencil_candidate(state, kind)
+        mask = (rows_g >= lo) & (rows_g < hi) & col_mask
+        state = jnp.where(mask, cand, state)
+    out = jax.lax.dynamic_slice(state, (t * tile_rows - start, 0), (tile_rows, W))
+    o_ref[...] = out
+
+
+def multistep_stencil(x: jnp.ndarray, windows: jnp.ndarray, *, kind: str,
+                      tile_rows: int | None = None) -> jnp.ndarray:
+    """Apply ``k = windows.shape[0]`` fused masked steps of ``kind`` to the
+    chunk buffer ``x`` (f32[H, W]); ``windows`` is i32[k, 2] row windows.
+
+    Semantically identical to ``ref.multistep_ref`` — property-tested in
+    ``python/tests/test_kernel.py``.
+    """
+    H, W = x.shape
+    k = int(windows.shape[0])
+    r = ref.kind_radius(kind)
+    T = tile_rows if tile_rows is not None else pick_tile_rows(H)
+    assert H % T == 0, f"tile_rows {T} must divide H={H}"
+    slab = T + 2 * k * r
+    if slab >= H:
+        # Degenerate: one tile covering the whole buffer.
+        T, slab = H, H
+    n_tiles = H // T
+
+    kernel = functools.partial(
+        _kernel, kind=kind, k=k, H=H, W=W, tile_rows=T, slab=slab)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((k, 2), lambda t: (0, 0)),   # windows: whole array
+            pl.BlockSpec((H, W), lambda t: (0, 0)),   # chunk buffer: whole
+        ],
+        out_specs=pl.BlockSpec((T, W), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, W), jnp.float32),
+        interpret=True,
+    )(windows.astype(jnp.int32), x.astype(jnp.float32))

@@ -1,0 +1,51 @@
+"""L2: the fixed-shape chunk program.
+
+The chunk program is the unit the Rust runtime executes: a jitted function
+
+    (buf f32[H, W], windows i32[k, 2]) -> (f32[H, W],)
+
+applying ``k`` fused, window-masked stencil steps by calling the L1 Pallas
+kernel. One AOT executable is compiled per (kind, k, H, W) variant; the
+window operand makes a single executable serve every chunk position,
+trapezoid phase and epoch of a run (fixed-shape AOT masking — DESIGN.md
+section "Hardware adaptation").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, stencil2d
+
+
+def make_chunk_program(kind: str, tile_rows: int | None = None):
+    """Build the traceable chunk-program function for ``kind``.
+
+    The fused-step count ``k`` and the buffer shape are taken from the
+    arguments at trace time, so the same callable is lowered once per
+    variant by :mod:`compile.aot`.
+    """
+    def chunk_program(buf: jnp.ndarray, windows: jnp.ndarray):
+        out = stencil2d.multistep_stencil(
+            buf, windows, kind=kind, tile_rows=tile_rows)
+        return (out,)
+
+    return chunk_program
+
+
+def make_chunk_program_ref(kind: str):
+    """Oracle variant of the chunk program (pure jnp, no Pallas)."""
+    def chunk_program(buf: jnp.ndarray, windows: jnp.ndarray):
+        return (ref.multistep_ref(buf, kind, windows),)
+
+    return chunk_program
+
+
+def lower_variant(kind: str, k: int, rows: int, cols: int,
+                  tile_rows: int | None = None):
+    """Jit-lower one chunk-program variant; returns the jax Lowered."""
+    fn = make_chunk_program(kind, tile_rows=tile_rows)
+    buf = jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+    win = jax.ShapeDtypeStruct((k, 2), jnp.int32)
+    return jax.jit(fn).lower(buf, win)

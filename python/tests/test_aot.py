@@ -1,0 +1,47 @@
+"""AOT artifact build: manifest format and HLO text validity."""
+
+import os
+import tempfile
+
+import sys
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from compile import aot
+from compile.kernels import ref
+
+
+def test_build_small_set(tmp_path=None):
+    with tempfile.TemporaryDirectory() as d:
+        variants = [("box2d1r", 1, 24, 32), ("gradient2d", 2, 24, 32)]
+        written = aot.build(d, variants=variants, verbose=False)
+        assert len(written) == 2
+        for p in written:
+            with open(p) as f:
+                txt = f.read()
+            assert txt.startswith("HloModule")
+            # return_tuple=True: root is a tuple.
+            assert "tuple(" in txt or "tuple " in txt
+        with open(os.path.join(d, "manifest.txt")) as f:
+            lines = f.read().strip().splitlines()
+        assert lines[0] == "so2dr-artifact-manifest v1"
+        assert len(lines) == 3
+        fields = dict(kv.split("=", 1) for kv in lines[1].split())
+        assert fields["kind"] == "box2d1r"
+        assert fields["k"] == "1"
+        assert fields["rows"] == "24"
+        assert fields["radius"] == "1"
+        assert fields["file"].endswith(".hlo.txt")
+
+
+def test_demo_variants_cover_paper_kinds():
+    vs = aot.demo_variants()
+    kinds = {v[0] for v in vs}
+    assert kinds == set(ref.PAPER_KINDS)
+    # Every kind has SO2DR (k=4), ResReu (k=1) and in-core (k=4, 512 rows).
+    for kind in ref.PAPER_KINDS:
+        ks = sorted(v[1] for v in vs if v[0] == kind)
+        assert 1 in ks and 4 in ks
+        assert any(v[2] == 512 for v in vs if v[0] == kind)
+
+
+def test_variant_name_roundtrip():
+    assert aot.variant_name("box2d3r", 4, 176, 512) == "box2d3r_k4_176x512"

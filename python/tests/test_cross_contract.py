@@ -1,0 +1,46 @@
+"""Cross-language numerical contract: the box weights must match the Rust
+side bit for bit (StencilKind::box_u / box_v in rust/src/stencil/kind.rs).
+
+The golden values below are independently asserted by the Rust test
+`box_weights_normalized_and_asymmetric` companion assertions; if either
+side changes its formula, one of the two suites fails.
+"""
+
+import struct
+
+import numpy as np
+
+import sys, os
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from compile.kernels import ref
+
+
+def f32_bits(x: np.float32) -> int:
+    return struct.unpack("<I", struct.pack("<f", float(x)))[0]
+
+
+def test_box_u_golden_bits():
+    # u(di) = (1 + 0.1*di/(r+1)) / (2r+1), computed in f64 then cast.
+    golden = {
+        1: [(1.0 - 0.05) / 3.0, 1.0 / 3.0, (1.0 + 0.05) / 3.0],
+        2: [(1.0 + 0.1 * di / 3.0) / 5.0 for di in range(-2, 3)],
+        4: [(1.0 + 0.1 * di / 5.0) / 9.0 for di in range(-4, 5)],
+    }
+    for r, expect in golden.items():
+        u = ref.box_u(r)
+        for a, b in zip(u, expect):
+            assert f32_bits(a) == f32_bits(np.float32(b)), (r, a, b)
+
+
+def test_weights_are_exact_products():
+    for r in (1, 2, 3, 4):
+        w = ref.box_weights(r)
+        u, v = ref.box_u(r), ref.box_v(r)
+        for i in range(2 * r + 1):
+            for j in range(2 * r + 1):
+                assert f32_bits(w[i, j]) == f32_bits(np.float32(u[i]) * np.float32(v[j]))
+
+
+def test_gradient_constants_match_rust():
+    # GRADIENT_ALPHA in ref.py vs rust stencil::kind::GRADIENT_ALPHA.
+    assert ref.GRADIENT_ALPHA == 0.05

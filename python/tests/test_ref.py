@@ -1,0 +1,83 @@
+"""Oracle invariants: physics/shape sanity of the pure-jnp reference."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import sys, os
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("kind", ref.PAPER_KINDS)
+def test_constant_field_is_fixed_point(kind):
+    x = jnp.full((24, 24), 1.75, jnp.float32)
+    y = ref.reference_run(x, kind, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=2e-6)
+
+
+@pytest.mark.parametrize("kind", ref.PAPER_KINDS)
+def test_frame_passthrough(kind):
+    r = ref.kind_radius(kind)
+    x = jnp.asarray(np.random.RandomState(1).rand(20, 20).astype(np.float32))
+    y = ref.reference_run(x, kind, 2)
+    xs, ys = np.asarray(x), np.asarray(y)
+    # Dirichlet ring unchanged, bitwise.
+    np.testing.assert_array_equal(ys[:r, :], xs[:r, :])
+    np.testing.assert_array_equal(ys[-r:, :], xs[-r:, :])
+    np.testing.assert_array_equal(ys[:, :r], xs[:, :r])
+    np.testing.assert_array_equal(ys[:, -r:], xs[:, -r:])
+
+
+def test_box_weights_normalized_and_match_rust_formula():
+    for r in range(1, 5):
+        w = ref.box_weights(r)
+        assert w.shape == (2 * r + 1, 2 * r + 1)
+        assert abs(float(w.sum()) - 1.0) < 1e-6
+        # Spot-check the closed form at the corner (f64 then cast).
+        n = float(2 * r + 1)
+        u0 = np.float32((1.0 - 0.1 * r / (r + 1.0)) / n)
+        v0 = np.float32((1.0 - 0.05 * r / (r + 1.0)) / n)
+        assert w[0, 0] == np.float32(u0 * v0)
+
+
+def test_spike_spreads_to_radius():
+    for kind in ("box2d1r", "box2d3r"):
+        r = ref.kind_radius(kind)
+        x = np.zeros((19, 19), np.float32)
+        x[9, 9] = 1.0
+        y = np.asarray(ref.reference_run(jnp.asarray(x), kind, 1))
+        assert y[9, 9 + r] != 0.0
+        assert y[9, 9 + r + 1] == 0.0
+
+
+def test_masked_step_window_semantics():
+    x = jnp.asarray(np.random.RandomState(2).rand(16, 16).astype(np.float32))
+    y = np.asarray(ref.masked_step(x, "box2d1r", 5, 9))
+    xs = np.asarray(x)
+    np.testing.assert_array_equal(y[:5, :], xs[:5, :])
+    np.testing.assert_array_equal(y[9:, :], xs[9:, :])
+    assert (y[5:9, 1:15] != xs[5:9, 1:15]).any()
+
+
+def test_empty_window_is_identity():
+    x = jnp.asarray(np.random.RandomState(3).rand(12, 12).astype(np.float32))
+    y = ref.masked_step(x, "gradient2d", 6, 6)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_gradient_is_damped_diffusion():
+    x = jnp.asarray(np.random.RandomState(4).rand(32, 32).astype(np.float32))
+    y = ref.reference_run(x, "gradient2d", 10)
+    assert float(jnp.max(jnp.abs(y))) <= float(jnp.max(jnp.abs(x))) + 1e-5
+    # Interior variance strictly decreases (smoothing).
+    vi = float(jnp.var(x[4:-4, 4:-4]))
+    vo = float(jnp.var(y[4:-4, 4:-4]))
+    assert vo < vi
+
+
+def test_kind_radius_parsing():
+    assert ref.kind_radius("box2d4r") == 4
+    assert ref.kind_radius("gradient2d") == 1
+    with pytest.raises(ValueError):
+        ref.kind_radius("nope")

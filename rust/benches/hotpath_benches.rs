@@ -1,0 +1,148 @@
+//! Hot-path benchmarks (`cargo bench --bench hotpath_benches`): real wall
+//! time of the pieces on the request path. These feed EXPERIMENTS.md
+//! §Perf (before/after table).
+//!
+//! Groups:
+//!  - stencil engines: naive vs optimized (separable + threads), per kind;
+//!  - region-sharing copies (extract/insert rows);
+//!  - end-to-end real-numerics runs per scheme (host backend);
+//!  - DES throughput (ops/s priced and scheduled);
+//!  - PJRT chunk-program execution (when artifacts are present).
+
+use so2dr::chunking::Scheme;
+use so2dr::coordinator::{run_scheme, HostBackend, KernelBackend, RegionShareBuffer};
+use so2dr::gpu::cost::{CostModel, MachineSpec};
+use so2dr::gpu::des::simulate;
+use so2dr::gpu::flatten::flatten_run;
+use so2dr::runtime::PjrtBackend;
+use so2dr::stencil::{apply_step, NaiveEngine, OptimizedEngine, StencilEngine, StencilKind};
+use so2dr::util::timer::measure;
+use so2dr::{Array2, Rect, RowSpan};
+
+fn gflops(kind: StencilKind, elems: f64, secs: f64) -> f64 {
+    elems * kind.flops_per_elem() / secs / 1e9
+}
+
+fn bench_engines() {
+    println!("\n=== engines: one full-interior step at 2048x2048 ===");
+    let input = Array2::synthetic(2048, 2048, 1);
+    let mut out = Array2::zeros(2048, 2048);
+    let window = Rect::new(0, 2048, 0, 2048);
+    for kind in StencilKind::paper_set() {
+        let opt1 = OptimizedEngine::new(1);
+        let optn = OptimizedEngine::default();
+        for (name, engine) in [
+            ("naive", &NaiveEngine as &dyn StencilEngine),
+            ("opt-1t", &opt1 as &dyn StencilEngine),
+            ("opt-Nt", &optn as &dyn StencilEngine),
+        ] {
+            let (iters, per) = measure(0.25, 2, || {
+                apply_step(engine, kind, &input, &mut out, window);
+            });
+            println!(
+                "[{:10} {:7}] {iters:3} iters  {:8.3} ms/step  {:7.2} GFLOP/s  {:6.2} GB/s",
+                kind.name(),
+                name,
+                per * 1e3,
+                gflops(kind, 2046.0 * 2046.0, per),
+                2.0 * 4.0 * 2048.0 * 2048.0 / per / 1e9,
+            );
+        }
+    }
+}
+
+fn bench_rs_copies() {
+    println!("\n=== region-sharing buffer: 64-row x 4096-col regions ===");
+    let src = Array2::synthetic(256, 4096, 2);
+    let mut rs = RegionShareBuffer::new();
+    let span = RowSpan::new(64, 128);
+    let (iters, per) = measure(0.2, 10, || {
+        rs.write(span, 0, src.extract_rows(span));
+        let _ = rs.read(span, 0).unwrap();
+    });
+    let bytes = (64 * 4096 * 4) as f64;
+    println!(
+        "[rs write+read] {iters} iters  {:6.1} us  {:6.2} GB/s",
+        per * 1e6,
+        2.0 * bytes / per / 1e9
+    );
+}
+
+fn bench_schemes() {
+    println!("\n=== end-to-end real numerics: 768x768, n=24, host-opt backend ===");
+    let initial = Array2::synthetic(768, 768, 3);
+    for (scheme, k_on) in [(Scheme::So2dr, 4), (Scheme::ResReu, 1), (Scheme::InCore, 4)] {
+        let (iters, per) = measure(0.3, 1, || {
+            let mut backend = HostBackend::new(OptimizedEngine::default());
+            let _ = run_scheme(
+                scheme,
+                &initial,
+                StencilKind::Box { radius: 1 },
+                24,
+                4,
+                8,
+                k_on,
+                &mut backend,
+            )
+            .unwrap();
+        });
+        let steps_elems = 24.0 * 766.0 * 766.0;
+        println!(
+            "[{:7}] {iters:2} iters  {:8.1} ms  {:6.1} Msteps-elems/s",
+            scheme.name(),
+            per * 1e3,
+            steps_elems / per / 1e6
+        );
+    }
+}
+
+fn bench_des() {
+    println!("\n=== DES throughput (paper-scale ResReu op graph) ===");
+    let dc = so2dr::Decomposition::new(38400, 38400, 8, 1);
+    let plans = so2dr::chunking::plan::plan_run(Scheme::ResReu, &dc, 640, 40, 1);
+    let buf_rows =
+        so2dr::coordinator::PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+    let ops = flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows);
+    let cost = CostModel::new(MachineSpec::rtx3080());
+    let (iters, per) = measure(0.3, 2, || {
+        let _ = simulate(&ops, &cost, 3);
+    });
+    println!(
+        "[des] {} ops, {iters} iters, {:.2} ms/replay, {:.2} Mops/s",
+        ops.len(),
+        per * 1e3,
+        ops.len() as f64 / per / 1e6
+    );
+}
+
+fn bench_pjrt() {
+    println!("\n=== PJRT chunk program (box2d1r k=4 144x512) ===");
+    let Ok(mut backend) = PjrtBackend::from_artifacts(&so2dr::runtime::default_artifact_dir())
+    else {
+        println!("[pjrt] artifacts missing — skipped (run `make artifacts`)");
+        return;
+    };
+    let mut cur = Array2::synthetic(144, 512, 4);
+    let mut scratch = Array2::zeros(144, 512);
+    let windows: Vec<Rect> = (0..4usize).map(|s| Rect::new(8 + s, 136 - s, 1, 511)).collect();
+    let (iters, per) = measure(0.5, 5, || {
+        backend
+            .run_kernel(StencilKind::Box { radius: 1 }, &mut cur, &mut scratch, &windows)
+            .unwrap();
+    });
+    println!(
+        "[pjrt 4-step kernel] {iters} iters  {:7.2} ms/invocation  ({:.1} Melem-steps/s)",
+        per * 1e3,
+        4.0 * 144.0 * 512.0 / per / 1e6
+    );
+}
+
+fn main() {
+    println!("hotpath_benches (real wall time on this CPU)");
+    bench_engines();
+    bench_rs_copies();
+    bench_schemes();
+    bench_des();
+    bench_pjrt();
+    println!("\nhotpath_benches done.");
+}

@@ -1,0 +1,78 @@
+//! Paper benchmark harness (`cargo bench --bench paper_benches`): one
+//! group per evaluation table/figure. Regenerates the paper's series on
+//! the modeled machine and times the harness itself (criterion is
+//! unavailable offline; timing uses the in-repo measure loop).
+
+use so2dr::chunking::Scheme;
+use so2dr::figures;
+use so2dr::gpu::MachineSpec;
+use so2dr::stencil::StencilKind;
+use so2dr::util::timer::measure;
+
+fn group(name: &str, body: impl FnOnce()) {
+    println!("\n=== bench group: {name} ===");
+    body();
+}
+
+fn timed(label: &str, mut f: impl FnMut()) {
+    let (iters, per) = measure(0.2, 3, || f());
+    println!("[{label}] {iters} iters, {:.3} ms/iter", per * 1e3);
+}
+
+fn main() {
+    let machine = MachineSpec::rtx3080();
+    println!("paper_benches on modeled {}", machine.name);
+
+    group("fig3b: motivation breakdown (ResReu, d=8, S_TB=40, n=320)", || {
+        timed("simulate", || {
+            let _ = figures::simulate_config(
+                &machine,
+                Scheme::ResReu,
+                StencilKind::Box { radius: 1 },
+                figures::SZ_OOC,
+                8,
+                40,
+                1,
+                320,
+            );
+        });
+        print!("{}", figures::fig3b(&machine));
+    });
+
+    group("fig5: configuration sweep (d x S_TB, all benchmarks)", || {
+        timed("full sweep", || {
+            let _ = figures::fig5(&machine);
+        });
+        let txt = figures::fig5(&machine);
+        let head: String = txt.lines().take(18).collect::<Vec<_>>().join("\n");
+        println!("{head}\n... (full output via `so2dr figures --fig 5`)");
+    });
+
+    group("fig6: SO2DR vs ResReu speedups (headline)", || {
+        timed("five benchmarks x two schemes", || {
+            let _ = figures::fig6(&machine);
+        });
+        print!("{}", figures::fig6(&machine));
+    });
+
+    group("fig7: out-of-core breakdown", || {
+        print!("{}", figures::fig7(&machine));
+    });
+
+    group("fig8: single-step kernel times across radii", || {
+        print!("{}", figures::fig8(&machine));
+    });
+
+    group("fig9: in-core vs out-of-core (1.2 GB)", || {
+        timed("three schemes x five benchmarks", || {
+            let _ = figures::fig9(&machine);
+        });
+        print!("{}", figures::fig9(&machine));
+    });
+
+    group("fig10: SO2DR vs in-core breakdown", || {
+        print!("{}", figures::fig10(&machine));
+    });
+
+    println!("\npaper_benches done.");
+}

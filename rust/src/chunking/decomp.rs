@@ -1,0 +1,428 @@
+//! The decomposition and raw span algebra.
+
+use crate::core::geom::RowSpan;
+use crate::stencil::StencilKind;
+use crate::util::threads::split_range;
+
+/// A 1-D (row-band) decomposition of a `rows x cols` grid into `d` chunks
+/// for a stencil of radius `radius`.
+#[derive(Debug, Clone)]
+pub struct Decomposition {
+    rows: usize,
+    cols: usize,
+    d: usize,
+    radius: usize,
+    /// `d + 1` chunk bounds: chunk `i` owns rows `[bounds[i], bounds[i+1])`.
+    bounds: Vec<usize>,
+}
+
+impl Decomposition {
+    /// Near-equal split. Panics if `d == 0` or `d > rows`.
+    pub fn new(rows: usize, cols: usize, d: usize, radius: usize) -> Self {
+        assert!(d > 0 && d <= rows, "invalid chunk count d={d} for {rows} rows");
+        assert!(radius > 0, "radius must be positive");
+        let parts = split_range(0, rows, d);
+        assert_eq!(parts.len(), d, "rows too few for d={d}");
+        let mut bounds: Vec<usize> = parts.iter().map(|&(a, _)| a).collect();
+        bounds.push(rows);
+        Self { rows, cols, d, radius, bounds }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.d
+    }
+
+    pub fn radius(&self) -> usize {
+        self.radius
+    }
+
+    /// Rows owned by chunk `i`.
+    pub fn owned(&self, i: usize) -> RowSpan {
+        RowSpan::new(self.bounds[i], self.bounds[i + 1])
+    }
+
+    /// Smallest chunk height.
+    pub fn min_chunk_rows(&self) -> usize {
+        (0..self.d).map(|i| self.owned(i).len()).min().unwrap()
+    }
+
+    /// Skirt height `h = steps * radius` for an epoch of `steps`.
+    pub fn skirt(&self, steps: usize) -> usize {
+        steps * self.radius
+    }
+
+    /// Check the feasibility precondition for an epoch of `steps` TB steps:
+    /// the skirt plus one radius must fit inside every chunk, so compute
+    /// windows stay affine in the step index (paper constraint
+    /// `W_halo * S_TB <= D_chk`, tightened by `r` for the Dirichlet ring).
+    pub fn feasible(&self, steps: usize) -> bool {
+        self.skirt(steps) + self.radius <= self.min_chunk_rows()
+    }
+
+    /// Assert feasibility with a readable message.
+    pub fn check(&self, steps: usize) {
+        assert!(
+            self.feasible(steps),
+            "infeasible: skirt {} + r {} > min chunk {} (d={}, steps={})",
+            self.skirt(steps),
+            self.radius,
+            self.min_chunk_rows(),
+            self.d,
+            steps
+        );
+    }
+
+    // ---------------------------------------------------------------
+    // SO2DR (trapezoid) spans, parameterized by the epoch's step count.
+    // ---------------------------------------------------------------
+
+    /// Rows resident on the device for chunk `i` during an epoch of
+    /// `steps`: owned rows plus the `h`-row skirt on each side (clamped).
+    pub fn so2dr_resident(&self, i: usize, steps: usize) -> RowSpan {
+        let h = self.skirt(steps) as i64;
+        let o = self.owned(i);
+        RowSpan::clamped(o.lo as i64 - h, o.hi as i64 + h, self.rows)
+    }
+
+    /// Rows transferred host→device for chunk `i`: the resident span minus
+    /// what the region-sharing buffer provides (raw rows saved by chunk
+    /// `i-1`). Chunk 0 transfers its whole resident span. Per epoch the
+    /// HtoD spans partition `[0, rows)` — zero redundant transfer.
+    pub fn so2dr_htod(&self, i: usize, steps: usize) -> RowSpan {
+        let h = self.skirt(steps) as i64;
+        let o = self.owned(i);
+        if i == 0 {
+            RowSpan::clamped(0, o.hi as i64 + h, self.rows)
+        } else {
+            RowSpan::clamped(o.lo as i64 + h, o.hi as i64 + h, self.rows)
+        }
+    }
+
+    /// Raw (epoch-start) rows chunk `i` reads from the region-sharing
+    /// buffer: its lower skirt plus its own first `h` rows, all saved by
+    /// chunk `i-1`. Empty for chunk 0.
+    pub fn so2dr_rs_read(&self, i: usize, steps: usize) -> RowSpan {
+        if i == 0 {
+            return RowSpan::empty();
+        }
+        let h = self.skirt(steps) as i64;
+        let o = self.owned(i);
+        RowSpan::clamped(o.lo as i64 - h, o.lo as i64 + h, self.rows)
+    }
+
+    /// Raw rows chunk `i` writes to the region-sharing buffer for chunk
+    /// `i+1` (must happen before its kernels overwrite them). Empty for the
+    /// last chunk.
+    pub fn so2dr_rs_write(&self, i: usize, steps: usize) -> RowSpan {
+        if i + 1 == self.d {
+            return RowSpan::empty();
+        }
+        let h = self.skirt(steps) as i64;
+        let b = self.bounds[i + 1] as i64;
+        RowSpan::clamped(b - h, b + h, self.rows)
+    }
+
+    /// Rows transferred device→host after the epoch: exactly the owned rows.
+    pub fn so2dr_dtoh(&self, i: usize) -> RowSpan {
+        self.owned(i)
+    }
+
+    /// Compute window (rows) for chunk `i` at TB step `s` (1-based,
+    /// `1 <= s <= steps`): the trapezoid `[a_i - (steps-s)*r,
+    /// a_{i+1} + (steps-s)*r)`, clamped to the Dirichlet interior
+    /// `[r, rows-r)`.
+    pub fn so2dr_window(&self, i: usize, steps: usize, s: usize) -> RowSpan {
+        assert!((1..=steps).contains(&s));
+        let grow = ((steps - s) * self.radius) as i64;
+        let o = self.owned(i);
+        let lo = o.lo as i64 - grow;
+        let hi = o.hi as i64 + grow;
+        let r = self.radius as i64;
+        RowSpan::clamped(lo.max(r), hi.min(self.rows as i64 - r), self.rows)
+    }
+
+    /// Redundant rows computed at step `s` across all chunk boundaries
+    /// (each boundary overlap is `2*(steps-s)*r` rows, clamped by the
+    /// interior). Used to cross-check the closed-form redundancy model.
+    pub fn so2dr_redundant_rows(&self, steps: usize, s: usize) -> usize {
+        let mut total = 0usize;
+        for i in 0..self.d.saturating_sub(1) {
+            let a = self.so2dr_window(i, steps, s);
+            let b = self.so2dr_window(i + 1, steps, s);
+            total += a.intersect(&b).len();
+        }
+        total
+    }
+
+    // ---------------------------------------------------------------
+    // ResReu (skewed parallelogram) spans.
+    // ---------------------------------------------------------------
+
+    /// Rows resident for chunk `i` under ResReu: owned rows plus the lower
+    /// working space of `h + r` rows (windows shift downward by `h` over
+    /// the epoch and the final window still reads `r` rows below itself).
+    /// The last chunk additionally keeps its bottom rows (its window's
+    /// upper edge does not shift).
+    pub fn resreu_resident(&self, i: usize, steps: usize) -> RowSpan {
+        let h = (self.skirt(steps) + self.radius) as i64;
+        let o = self.owned(i);
+        RowSpan::clamped(o.lo as i64 - h, o.hi as i64, self.rows)
+    }
+
+    /// HtoD span under ResReu: exactly the owned rows (intermediate halo
+    /// data arrives through the region-sharing buffer).
+    pub fn resreu_htod(&self, i: usize) -> RowSpan {
+        self.owned(i)
+    }
+
+    /// Compute window at step `s` (1-based): `[a_i - s*r, a_{i+1} - s*r)`
+    /// shifted by the skew; chunk 0's lower edge clamps at the interior
+    /// boundary and the last chunk's upper edge stays at `rows - r`.
+    pub fn resreu_window(&self, i: usize, steps: usize, s: usize) -> RowSpan {
+        assert!((1..=steps).contains(&s));
+        let shift = (s * self.radius) as i64;
+        let o = self.owned(i);
+        let r = self.radius as i64;
+        let lo = if i == 0 { r } else { o.lo as i64 - shift };
+        let hi = if i + 1 == self.d { self.rows as i64 - r } else { o.hi as i64 - shift };
+        RowSpan::clamped(lo.max(r), hi.min(self.rows as i64 - r), self.rows)
+    }
+
+    /// Rows (time `s-1` data) chunk `i` reads from the RS buffer before
+    /// step `s`: `2r` rows below its shifted window, produced by chunk
+    /// `i-1`. Empty for chunk 0.
+    pub fn resreu_rs_read(&self, i: usize, s: usize) -> RowSpan {
+        if i == 0 {
+            return RowSpan::empty();
+        }
+        let a = self.bounds[i] as i64;
+        let r = self.radius as i64;
+        let s = s as i64;
+        RowSpan::clamped(a - s * r - r, a - (s - 1) * r, self.rows)
+    }
+
+    /// Rows (time `s-1` data) chunk `i` writes to the RS buffer before
+    /// step `s` for chunk `i+1`; by construction
+    /// `resreu_rs_write(i, s) == resreu_rs_read(i+1, s)`. Empty for the
+    /// last chunk.
+    pub fn resreu_rs_write(&self, i: usize, s: usize) -> RowSpan {
+        if i + 1 == self.d {
+            return RowSpan::empty();
+        }
+        let b = self.bounds[i + 1] as i64;
+        let r = self.radius as i64;
+        let s = s as i64;
+        RowSpan::clamped(b - s * r - r, b - (s - 1) * r, self.rows)
+    }
+
+    /// DtoH span after an epoch of `steps`: the skew-shifted owned rows
+    /// (chunk 0 keeps its top, the last chunk keeps its bottom); the spans
+    /// partition `[0, rows)`.
+    pub fn resreu_dtoh(&self, i: usize, steps: usize) -> RowSpan {
+        let h = self.skirt(steps) as i64;
+        let o = self.owned(i);
+        let lo = if i == 0 { 0 } else { o.lo as i64 - h };
+        let hi = if i + 1 == self.d { self.rows as i64 } else { o.hi as i64 - h };
+        RowSpan::clamped(lo, hi, self.rows)
+    }
+
+    // ---------------------------------------------------------------
+    // Paper model quantities (Section III / IV-C).
+    // ---------------------------------------------------------------
+
+    /// `D_chk` in bytes for one chunk (f32 elements).
+    pub fn chunk_bytes(&self, i: usize) -> u64 {
+        (self.owned(i).len() * self.cols * 4) as u64
+    }
+
+    /// `W_halo` in bytes: one radius-deep halo region pair
+    /// (`2r * cols` elements), the paper's per-TB-step working space.
+    pub fn halo_bytes_per_step(&self) -> u64 {
+        (2 * self.radius * self.cols * 4) as u64
+    }
+
+    /// Device-resident bytes for chunk `i` during an epoch of `steps`
+    /// (`D_chk + W_halo*S_TB`), for the memory-capacity constraint.
+    pub fn resident_bytes(&self, i: usize, steps: usize, kind: StencilKind) -> u64 {
+        let _ = kind; // radius already captured in self.radius
+        self.chunk_bytes(i) + self.halo_bytes_per_step() * steps as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dec(rows: usize, d: usize, r: usize) -> Decomposition {
+        Decomposition::new(rows, 64, d, r)
+    }
+
+    #[test]
+    fn bounds_partition_rows() {
+        let dc = dec(103, 4, 1);
+        let mut cur = 0;
+        for i in 0..4 {
+            let o = dc.owned(i);
+            assert_eq!(o.lo, cur);
+            cur = o.hi;
+        }
+        assert_eq!(cur, 103);
+    }
+
+    #[test]
+    fn so2dr_htod_partitions_grid() {
+        for (rows, d, r, steps) in [(120, 4, 1, 8), (200, 5, 2, 4), (96, 3, 4, 2)] {
+            let dc = dec(rows, d, r);
+            dc.check(steps);
+            let mut cur = 0;
+            for i in 0..d {
+                let t = dc.so2dr_htod(i, steps);
+                assert_eq!(t.lo, cur, "chunk {i}");
+                cur = t.hi;
+            }
+            assert_eq!(cur, rows);
+        }
+    }
+
+    #[test]
+    fn so2dr_rs_pairs_match() {
+        let dc = dec(160, 4, 2);
+        let steps = 6;
+        for i in 1..4 {
+            assert_eq!(dc.so2dr_rs_read(i, steps), dc.so2dr_rs_write(i - 1, steps));
+        }
+        assert!(dc.so2dr_rs_read(0, steps).is_empty());
+        assert!(dc.so2dr_rs_write(3, steps).is_empty());
+    }
+
+    #[test]
+    fn so2dr_window_shrinks_to_owned() {
+        let dc = dec(160, 4, 2);
+        let steps = 6;
+        // Final step's window == owned rows (clamped to interior).
+        for i in 0..4 {
+            let w = dc.so2dr_window(i, steps, steps);
+            let o = dc.owned(i);
+            let expect = RowSpan::clamped(
+                o.lo.max(2) as i64,
+                o.hi.min(158) as i64,
+                160,
+            );
+            assert_eq!(w, expect, "chunk {i}");
+        }
+        // Windows grow toward earlier steps.
+        for s in 1..steps {
+            assert!(dc.so2dr_window(1, steps, s).len() > dc.so2dr_window(1, steps, s + 1).len());
+        }
+    }
+
+    #[test]
+    fn so2dr_window_within_resident_minus_r() {
+        let dc = dec(160, 4, 2);
+        let steps = 6;
+        for i in 0..4 {
+            let res = dc.so2dr_resident(i, steps);
+            for s in 1..=steps {
+                let w = dc.so2dr_window(i, steps, s);
+                assert!(w.lo >= res.lo + 2 || (res.lo == 0 && w.lo >= 2));
+                assert!(w.hi + 2 <= res.hi || (res.hi == 160 && w.hi <= 158));
+            }
+        }
+    }
+
+    #[test]
+    fn so2dr_redundancy_closed_form() {
+        let dc = dec(400, 4, 1);
+        let steps = 10;
+        for s in 1..=steps {
+            // Interior boundaries, no clamping at this size:
+            // overlap per boundary = 2*(steps-s)*r.
+            assert_eq!(dc.so2dr_redundant_rows(steps, s), 3 * 2 * (steps - s));
+        }
+    }
+
+    #[test]
+    fn resreu_windows_tile_interior() {
+        let dc = dec(200, 4, 2);
+        let steps = 5;
+        dc.check(steps);
+        for s in 1..=steps {
+            let mut cur = 2; // interior starts at r
+            for i in 0..4 {
+                let w = dc.resreu_window(i, steps, s);
+                assert_eq!(w.lo, cur, "step {s} chunk {i}");
+                cur = w.hi;
+            }
+            assert_eq!(cur, 198); // rows - r
+        }
+    }
+
+    #[test]
+    fn resreu_rs_pairs_match() {
+        let dc = dec(200, 4, 2);
+        for s in 1..=5 {
+            for i in 1..4 {
+                assert_eq!(dc.resreu_rs_read(i, s), dc.resreu_rs_write(i - 1, s));
+                assert_eq!(dc.resreu_rs_read(i, s).len(), 2 * 2); // 2r rows
+            }
+        }
+    }
+
+    #[test]
+    fn resreu_dtoh_partitions_grid() {
+        let dc = dec(200, 4, 2);
+        let steps = 5;
+        let mut cur = 0;
+        for i in 0..4 {
+            let t = dc.resreu_dtoh(i, steps);
+            assert_eq!(t.lo, cur);
+            cur = t.hi;
+        }
+        assert_eq!(cur, 200);
+    }
+
+    #[test]
+    fn resreu_window_needs_only_resident_rows() {
+        let dc = dec(200, 4, 2);
+        let steps = 5;
+        for i in 0..4 {
+            let res = dc.resreu_resident(i, steps);
+            for s in 1..=steps {
+                let w = dc.resreu_window(i, steps, s);
+                // Reads beyond the lower edge are satisfied by RS reads
+                // of 2r rows just below w.lo, which land inside resident.
+                let rs = dc.resreu_rs_read(i, s);
+                if i > 0 {
+                    assert!(res.contains_span(&rs), "chunk {i} step {s}: rs {rs} vs res {res}");
+                }
+                assert!(w.hi + 2 <= res.hi + 2 + 1, "upper edge inside resident + r");
+            }
+        }
+    }
+
+    #[test]
+    fn feasibility_boundary() {
+        let dc = dec(100, 4, 1); // chunks of 25 rows
+        assert!(dc.feasible(24));
+        assert!(!dc.feasible(25));
+    }
+
+    #[test]
+    fn paper_model_bytes() {
+        let dc = Decomposition::new(1000, 500, 4, 2);
+        assert_eq!(dc.chunk_bytes(0), 250 * 500 * 4);
+        assert_eq!(dc.halo_bytes_per_step(), 2 * 2 * 500 * 4);
+        assert_eq!(
+            dc.resident_bytes(0, 10, StencilKind::Box { radius: 2 }),
+            250 * 500 * 4 + 10 * 2 * 2 * 500 * 4
+        );
+    }
+}

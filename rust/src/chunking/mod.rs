@@ -1,0 +1,35 @@
+//! Row-band chunk decomposition and region-sharing geometry.
+//!
+//! The grid (`rows x cols`) is split along rows into `d` chunks — the
+//! paper's 1-D decomposition (`D_chk = sz(sz+2r)^{dim-1}/d`). This module
+//! is pure integer geometry: all spans are in *global grid coordinates*;
+//! the coordinator translates to chunk-buffer-local coordinates.
+//!
+//! Two sharing schemes are supported (see DESIGN.md §4):
+//!
+//! * **SO2DR (trapezoid + redundant computation).** An epoch of `S` steps
+//!   gives each chunk a *skirt* of `h = S*r` rows on each side. Epoch-start
+//!   (raw) halo rows are shared via the region-sharing buffer; rows near a
+//!   chunk boundary are computed by both neighbors (redundant compute), in
+//!   exchange for `S` uninterrupted steps per chunk.
+//! * **ResReu (skewed parallelogram, Jin et al. 2013).** Compute windows
+//!   shift down by `r` rows per step; before each step a chunk reads `2r`
+//!   rows of the *previous step's intermediate results* produced by its
+//!   lower neighbor and writes its own trailing `2r` rows for the upper
+//!   neighbor. No redundant transfer or compute — but kernels are
+//!   structurally single-step.
+//!
+//! Invariants (property-tested in `rust/tests/prop_chunking.rs`):
+//! - per epoch, HtoD spans partition `[0, rows)` exactly (both schemes);
+//! - per epoch, DtoH spans partition `[0, rows)` exactly;
+//! - every compute window stays inside the chunk's resident span shrunk by
+//!   `r` (all stencil reads hit resident data);
+//! - ResReu windows at a given step tile the interior exactly (no
+//!   redundant compute), SO2DR windows overlap by `2*(S-s)*r` rows
+//!   (measured redundant compute matches the closed form).
+
+pub mod decomp;
+pub mod plan;
+
+pub use decomp::Decomposition;
+pub use plan::{ChunkEpochPlan, EpochPlan, KernelInvocation, RegionOp, Scheme};

@@ -1,0 +1,340 @@
+//! Epoch plans: the schedule IR produced by the coordinator and consumed by
+//! both interpreters (the real-numerics executor and the device simulator).
+//!
+//! Algorithm 1 of the paper maps onto this IR directly: an outer loop over
+//! epochs (`N_t = ceil(n / k_off)`, last epoch possibly short), an inner
+//! loop over chunks, and per chunk the op sequence
+//! `HtoD -> RS read -> RS write -> kernels -> DtoH` (SO2DR) or
+//! `HtoD -> (RS read/write + 1-step kernel) * steps -> DtoH` (ResReu).
+
+use super::decomp::Decomposition;
+use crate::core::geom::RowSpan;
+
+/// Out-of-core sharing scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// The paper's contribution: trapezoid sharing + redundant compute,
+    /// multi-step (`k_on`) kernels.
+    So2dr,
+    /// Jin et al. 2013 baseline: intermediate-result reuse, single-step
+    /// kernels.
+    ResReu,
+    /// Whole grid resident; no per-epoch transfers (paper §V-D).
+    InCore,
+}
+
+impl Scheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::So2dr => "so2dr",
+            Scheme::ResReu => "resreu",
+            Scheme::InCore => "incore",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s {
+            "so2dr" => Some(Scheme::So2dr),
+            "resreu" => Some(Scheme::ResReu),
+            "incore" => Some(Scheme::InCore),
+            _ => None,
+        }
+    }
+}
+
+/// A region-sharing copy (device-to-device) in global row coordinates.
+/// `time_step` is the epoch-local time index of the data being moved
+/// (0 = epoch-start raw data) — used by tests to validate causality.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegionOp {
+    pub span: RowSpan,
+    pub time_step: usize,
+}
+
+/// One fused kernel launch: `windows[t]` is the compute-row window of
+/// fused step `t` (global coordinates, already clamped to the Dirichlet
+/// interior). `first_step` is the 1-based epoch-local index of the first
+/// fused step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelInvocation {
+    pub first_step: usize,
+    pub windows: Vec<RowSpan>,
+}
+
+impl KernelInvocation {
+    pub fn fused_steps(&self) -> usize {
+        self.windows.len()
+    }
+
+    /// Total compute area in rows (summed over fused steps).
+    pub fn window_rows(&self) -> usize {
+        self.windows.iter().map(|w| w.len()).sum()
+    }
+}
+
+/// One operation in a chunk's epoch sequence.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChunkOp {
+    HtoD { span: RowSpan },
+    RsRead(RegionOp),
+    RsWrite(RegionOp),
+    Kernel(KernelInvocation),
+    DtoH { span: RowSpan },
+}
+
+/// All ops of one chunk within one epoch, in execution order.
+#[derive(Debug, Clone)]
+pub struct ChunkEpochPlan {
+    pub chunk: usize,
+    pub ops: Vec<ChunkOp>,
+}
+
+/// One epoch: `steps` TB steps (`k'_off` in Algorithm 1) across all chunks.
+#[derive(Debug, Clone)]
+pub struct EpochPlan {
+    pub scheme: Scheme,
+    /// Epoch-local number of TB steps (`k'_off`).
+    pub steps: usize,
+    /// First global time-step index covered by this epoch (0-based).
+    pub start_step: usize,
+    pub chunks: Vec<ChunkEpochPlan>,
+}
+
+impl EpochPlan {
+    /// Iterate `(chunk_index_in_plan, op_index, op)` in the canonical
+    /// sequential execution order (chunk-major).
+    pub fn iter_ops(&self) -> impl Iterator<Item = (usize, usize, &ChunkOp)> {
+        self.chunks
+            .iter()
+            .enumerate()
+            .flat_map(|(ci, c)| c.ops.iter().enumerate().map(move |(oi, op)| (ci, oi, op)))
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.chunks.iter().map(|c| c.ops.len()).sum()
+    }
+}
+
+/// Build one SO2DR epoch (Algorithm 1 lines 4–16) of `steps` TB steps with
+/// `k_on`-step fused kernels.
+pub fn so2dr_epoch(dc: &Decomposition, steps: usize, k_on: usize, start_step: usize) -> EpochPlan {
+    assert!(steps >= 1 && k_on >= 1);
+    dc.check(steps);
+    let mut chunks = Vec::with_capacity(dc.n_chunks());
+    for i in 0..dc.n_chunks() {
+        let mut ops = Vec::new();
+        ops.push(ChunkOp::HtoD { span: dc.so2dr_htod(i, steps) });
+        let rs_read = dc.so2dr_rs_read(i, steps);
+        if !rs_read.is_empty() {
+            ops.push(ChunkOp::RsRead(RegionOp { span: rs_read, time_step: 0 }));
+        }
+        let rs_write = dc.so2dr_rs_write(i, steps);
+        if !rs_write.is_empty() {
+            ops.push(ChunkOp::RsWrite(RegionOp { span: rs_write, time_step: 0 }));
+        }
+        // Lines 7–14: ceil(steps / k_on) kernels, the last possibly short.
+        let mut s = 1usize;
+        while s <= steps {
+            let fused = k_on.min(steps - s + 1);
+            let windows: Vec<RowSpan> =
+                (0..fused).map(|t| dc.so2dr_window(i, steps, s + t)).collect();
+            ops.push(ChunkOp::Kernel(KernelInvocation { first_step: s, windows }));
+            s += fused;
+        }
+        ops.push(ChunkOp::DtoH { span: dc.so2dr_dtoh(i) });
+        chunks.push(ChunkEpochPlan { chunk: i, ops });
+    }
+    EpochPlan { scheme: Scheme::So2dr, steps, start_step, chunks }
+}
+
+/// Build one ResReu epoch: single-step kernels interleaved with RS
+/// reads/writes of intermediate results (paper Fig. 2b).
+pub fn resreu_epoch(dc: &Decomposition, steps: usize, start_step: usize) -> EpochPlan {
+    assert!(steps >= 1);
+    dc.check(steps);
+    let mut chunks = Vec::with_capacity(dc.n_chunks());
+    for i in 0..dc.n_chunks() {
+        let mut ops = Vec::new();
+        ops.push(ChunkOp::HtoD { span: dc.resreu_htod(i) });
+        for s in 1..=steps {
+            // Write our trailing rows (time s-1) for the upper neighbor,
+            // then read our lower halo (time s-1) from the lower neighbor.
+            let w = dc.resreu_rs_write(i, s);
+            if !w.is_empty() {
+                ops.push(ChunkOp::RsWrite(RegionOp { span: w, time_step: s - 1 }));
+            }
+            let r = dc.resreu_rs_read(i, s);
+            if !r.is_empty() {
+                ops.push(ChunkOp::RsRead(RegionOp { span: r, time_step: s - 1 }));
+            }
+            ops.push(ChunkOp::Kernel(KernelInvocation {
+                first_step: s,
+                windows: vec![dc.resreu_window(i, steps, s)],
+            }));
+        }
+        ops.push(ChunkOp::DtoH { span: dc.resreu_dtoh(i, steps) });
+        chunks.push(ChunkEpochPlan { chunk: i, ops });
+    }
+    EpochPlan { scheme: Scheme::ResReu, steps, start_step, chunks }
+}
+
+/// Build the in-core "epoch": the whole grid is one resident chunk and all
+/// `steps` are applied as `k_on`-fused kernels over the full interior.
+/// No HtoD/DtoH ops are emitted (the paper excludes the two one-time
+/// transfers from the in-core measurements, §V-D).
+pub fn incore_epoch(
+    rows: usize,
+    radius: usize,
+    steps: usize,
+    k_on: usize,
+    start_step: usize,
+) -> EpochPlan {
+    assert!(steps >= 1 && k_on >= 1);
+    let interior = RowSpan::new(radius.min(rows), rows.saturating_sub(radius).max(radius.min(rows)));
+    let mut ops = Vec::new();
+    let mut s = 1usize;
+    while s <= steps {
+        let fused = k_on.min(steps - s + 1);
+        ops.push(ChunkOp::Kernel(KernelInvocation {
+            first_step: s,
+            windows: vec![interior; fused],
+        }));
+        s += fused;
+    }
+    EpochPlan {
+        scheme: Scheme::InCore,
+        steps,
+        start_step,
+        chunks: vec![ChunkEpochPlan { chunk: 0, ops }],
+    }
+}
+
+/// Split a total of `n` steps into epochs of at most `s_tb` (Algorithm 1
+/// lines 1–3) and build the per-epoch plans.
+pub fn plan_run(
+    scheme: Scheme,
+    dc: &Decomposition,
+    n: usize,
+    s_tb: usize,
+    k_on: usize,
+) -> Vec<EpochPlan> {
+    assert!(n >= 1 && s_tb >= 1);
+    let mut plans = Vec::new();
+    let mut done = 0usize;
+    while done < n {
+        let steps = s_tb.min(n - done);
+        let plan = match scheme {
+            Scheme::So2dr => so2dr_epoch(dc, steps, k_on, done),
+            Scheme::ResReu => resreu_epoch(dc, steps, done),
+            Scheme::InCore => incore_epoch(dc.rows(), dc.radius(), steps, k_on, done),
+        };
+        plans.push(plan);
+        done += steps;
+    }
+    plans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dc() -> Decomposition {
+        Decomposition::new(240, 64, 4, 2)
+    }
+
+    #[test]
+    fn so2dr_epoch_structure() {
+        let plan = so2dr_epoch(&dc(), 8, 4, 0);
+        assert_eq!(plan.chunks.len(), 4);
+        let c1 = &plan.chunks[1];
+        // HtoD, RsRead, RsWrite, 2 kernels (8/4), DtoH.
+        assert_eq!(c1.ops.len(), 6);
+        assert!(matches!(c1.ops[0], ChunkOp::HtoD { .. }));
+        assert!(matches!(c1.ops[1], ChunkOp::RsRead(_)));
+        assert!(matches!(c1.ops[2], ChunkOp::RsWrite(_)));
+        assert!(matches!(c1.ops[3], ChunkOp::Kernel(_)));
+        assert!(matches!(c1.ops[5], ChunkOp::DtoH { .. }));
+        // First chunk has no RsRead; last no RsWrite.
+        assert!(!plan.chunks[0].ops.iter().any(|o| matches!(o, ChunkOp::RsRead(_))));
+        assert!(!plan.chunks[3].ops.iter().any(|o| matches!(o, ChunkOp::RsWrite(_))));
+    }
+
+    #[test]
+    fn so2dr_residual_kernel() {
+        let plan = so2dr_epoch(&dc(), 7, 4, 0);
+        let kernels: Vec<&KernelInvocation> = plan.chunks[0]
+            .ops
+            .iter()
+            .filter_map(|o| match o {
+                ChunkOp::Kernel(k) => Some(k),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(kernels.len(), 2);
+        assert_eq!(kernels[0].fused_steps(), 4);
+        assert_eq!(kernels[1].fused_steps(), 3); // k'_off % k_on
+        assert_eq!(kernels[1].first_step, 5);
+    }
+
+    #[test]
+    fn resreu_epoch_structure() {
+        let plan = resreu_epoch(&dc(), 5, 0);
+        let c1 = &plan.chunks[1];
+        // HtoD + 5*(write+read+kernel) + DtoH
+        assert_eq!(c1.ops.len(), 1 + 5 * 3 + 1);
+        // All kernels single-step.
+        for op in &c1.ops {
+            if let ChunkOp::Kernel(k) = op {
+                assert_eq!(k.fused_steps(), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_run_epoch_split() {
+        let plans = plan_run(Scheme::So2dr, &dc(), 20, 8, 4);
+        assert_eq!(plans.len(), 3);
+        assert_eq!(plans[0].steps, 8);
+        assert_eq!(plans[2].steps, 4); // n % s_tb
+        assert_eq!(plans[2].start_step, 16);
+    }
+
+    #[test]
+    fn incore_plan_has_no_transfers() {
+        let plans = plan_run(Scheme::InCore, &dc(), 10, 10, 4);
+        assert_eq!(plans.len(), 1);
+        for (_, _, op) in plans[0].iter_ops() {
+            assert!(matches!(op, ChunkOp::Kernel(_)));
+        }
+        // ceil(10/4) = 3 kernels.
+        assert_eq!(plans[0].n_ops(), 3);
+    }
+
+    #[test]
+    fn resreu_causality_pairs() {
+        // RsWrite(i, s) span+time must equal RsRead(i+1, s).
+        let plan = resreu_epoch(&dc(), 5, 0);
+        for i in 0..3 {
+            let writes: Vec<&RegionOp> = plan.chunks[i]
+                .ops
+                .iter()
+                .filter_map(|o| match o {
+                    ChunkOp::RsWrite(r) => Some(r),
+                    _ => None,
+                })
+                .collect();
+            let reads: Vec<&RegionOp> = plan.chunks[i + 1]
+                .ops
+                .iter()
+                .filter_map(|o| match o {
+                    ChunkOp::RsRead(r) => Some(r),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(writes.len(), reads.len());
+            for (w, r) in writes.iter().zip(&reads) {
+                assert_eq!(w, r);
+            }
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Configuration: run configs (Table I), benchmark set (Table III) and
+//! the mini-TOML loader.
+
+pub mod run;
+pub mod toml_mini;
+
+pub use run::RunConfig;

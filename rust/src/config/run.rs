@@ -1,0 +1,182 @@
+//! Run configuration (paper Table I) with TOML loading and validation.
+
+use super::toml_mini::{parse, Section};
+use crate::chunking::Scheme;
+use crate::stencil::StencilKind;
+use anyhow::{bail, Context, Result};
+
+/// Everything needed to launch a run (Table I's variables plus scheme and
+/// backend selection).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub scheme: Scheme,
+    pub kind: StencilKind,
+    /// Grid size along each dimension (`sz`).
+    pub rows: usize,
+    pub cols: usize,
+    /// Number of chunks (`d`).
+    pub d: usize,
+    /// TB steps per epoch (`S_TB`).
+    pub s_tb: usize,
+    /// Fused steps per kernel (`k_on`; structurally 1 for ResReu).
+    pub k_on: usize,
+    /// Total time steps (`S_tot`).
+    pub n: usize,
+    /// CUDA-stream analog count (`N_strm`).
+    pub n_strm: usize,
+    /// Synthetic-field seed.
+    pub seed: u64,
+    /// Kernel backend: "host-naive", "host-opt" or "pjrt".
+    pub backend: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            scheme: Scheme::So2dr,
+            kind: StencilKind::Box { radius: 1 },
+            rows: 512,
+            cols: 512,
+            d: 4,
+            s_tb: 8,
+            k_on: 4,
+            n: 64,
+            n_strm: 3,
+            seed: 42,
+            backend: "host-opt".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from mini-TOML text. Unknown keys are rejected so typos in
+    /// config files fail loudly.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = parse(text)?;
+        let mut cfg = RunConfig::default();
+        for (section, table) in &doc {
+            if !section.is_empty() && section != "run" {
+                bail!("unknown section [{section}]");
+            }
+            let s = Section(table);
+            for key in table.keys() {
+                match key.as_str() {
+                    "scheme" => {
+                        let v = s.str_or("scheme", "");
+                        cfg.scheme =
+                            Scheme::parse(&v).with_context(|| format!("bad scheme {v:?}"))?;
+                    }
+                    "kind" | "benchmark" => {
+                        let v = s.str_or(key, "");
+                        cfg.kind = StencilKind::parse(&v)
+                            .with_context(|| format!("bad benchmark {v:?}"))?;
+                    }
+                    "rows" => cfg.rows = s.usize_req("rows")?,
+                    "cols" => cfg.cols = s.usize_req("cols")?,
+                    "sz" => {
+                        cfg.rows = s.usize_req("sz")?;
+                        cfg.cols = cfg.rows;
+                    }
+                    "d" => cfg.d = s.usize_req("d")?,
+                    "s_tb" => cfg.s_tb = s.usize_req("s_tb")?,
+                    "k_on" => cfg.k_on = s.usize_req("k_on")?,
+                    "n" => cfg.n = s.usize_req("n")?,
+                    "n_strm" => cfg.n_strm = s.usize_req("n_strm")?,
+                    "seed" => cfg.seed = s.int_or("seed", 42) as u64,
+                    "backend" => cfg.backend = s.str_or("backend", "host-opt"),
+                    other => bail!("unknown key {other:?}"),
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Structural validation (feasibility is checked separately by
+    /// `params::heuristic`).
+    pub fn validate(&self) -> Result<()> {
+        if self.rows == 0 || self.cols == 0 || self.n == 0 {
+            bail!("rows/cols/n must be positive");
+        }
+        if self.d == 0 || self.s_tb == 0 || self.k_on == 0 || self.n_strm == 0 {
+            bail!("d/s_tb/k_on/n_strm must be positive");
+        }
+        if self.scheme == Scheme::ResReu && self.k_on != 1 {
+            bail!("ResReu structurally requires k_on = 1 (single-step kernels)");
+        }
+        let min_chunk = self.rows / self.d;
+        let skirt = self.s_tb * self.kind.radius();
+        if self.scheme != Scheme::InCore && skirt + self.kind.radius() > min_chunk {
+            bail!(
+                "infeasible: halo working space {} + r exceeds chunk height {} \
+                 (W_halo * S_TB <= D_chk, paper §IV-C)",
+                skirt,
+                min_chunk
+            );
+        }
+        match self.backend.as_str() {
+            "host-naive" | "host-opt" | "pjrt" => Ok(()),
+            other => bail!("unknown backend {other:?} (host-naive|host-opt|pjrt)"),
+        }
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} {} {}x{} d={} S_TB={} k_on={} n={} N_strm={} backend={}",
+            self.scheme.name(),
+            self.kind.name(),
+            self.rows,
+            self.cols,
+            self.d,
+            self.s_tb,
+            self.k_on,
+            self.n,
+            self.n_strm,
+            self.backend
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = RunConfig::from_toml(
+            "scheme = \"resreu\"\nkind = \"box2d2r\"\nsz = 1024\nd = 8\n\
+             s_tb = 16\nk_on = 1\nn = 64\nbackend = \"host-naive\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.scheme, Scheme::ResReu);
+        assert_eq!(cfg.kind, StencilKind::Box { radius: 2 });
+        assert_eq!(cfg.rows, 1024);
+        assert_eq!(cfg.d, 8);
+    }
+
+    #[test]
+    fn rejects_unknown_key_and_bad_combos() {
+        assert!(RunConfig::from_toml("zzz = 1\n").is_err());
+        assert!(RunConfig::from_toml("scheme = \"resreu\"\nk_on = 4\n").is_err());
+        // Infeasible skirt: s_tb*r + r > rows/d.
+        assert!(RunConfig::from_toml("sz = 64\nd = 4\ns_tb = 16\n").is_err());
+    }
+
+    #[test]
+    fn summary_mentions_key_params() {
+        let s = RunConfig::default().summary();
+        assert!(s.contains("so2dr") && s.contains("S_TB=8"));
+    }
+}

@@ -1,0 +1,187 @@
+//! Minimal TOML-subset parser (the environment is offline; no serde/toml
+//! crates). Supports what the run configs need: `[section]` headers,
+//! `key = value` with string/integer/float/boolean values, `#` comments,
+//! and blank lines. Nested tables, arrays and datetimes are out of scope
+//! and rejected with a clear error.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section -> key -> value`; keys before any `[section]` land in `""`.
+pub type Document = BTreeMap<String, BTreeMap<String, Value>>;
+
+fn parse_value(raw: &str, line_no: usize) -> Result<Value> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        bail!("line {line_no}: empty value");
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .with_context(|| format!("line {line_no}: unterminated string"))?;
+        if inner.contains('"') {
+            bail!("line {line_no}: embedded quotes unsupported");
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match raw {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = raw.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = raw.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    if raw.starts_with('[') {
+        bail!("line {line_no}: arrays are not supported by the mini parser");
+    }
+    bail!("line {line_no}: cannot parse value {raw:?}")
+}
+
+/// Parse a document.
+pub fn parse(text: &str) -> Result<Document> {
+    let mut doc: Document = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (i, line) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = match line.find('#') {
+            // A '#' inside a quoted string would be cut; the subset
+            // forbids '#' in strings (checked below).
+            Some(pos) if !line[..pos].contains('"') || line[..pos].matches('"').count() % 2 == 0 => {
+                &line[..pos]
+            }
+            _ => line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .with_context(|| format!("line {line_no}: unterminated section header"))?
+                .trim();
+            if name.contains('.') || name.contains('[') {
+                bail!("line {line_no}: nested tables unsupported");
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {line_no}: expected key = value"))?;
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {line_no}: empty key");
+        }
+        let value = parse_value(value, line_no)?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+/// Typed lookup helpers over a parsed document.
+pub struct Section<'a>(pub &'a BTreeMap<String, Value>);
+
+impl<'a> Section<'a> {
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.0.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.0.get(key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    pub fn usize_req(&self, key: &str) -> Result<usize> {
+        self.0
+            .get(key)
+            .and_then(|v| v.as_int())
+            .filter(|&v| v >= 0)
+            .map(|v| v as usize)
+            .with_context(|| format!("missing or invalid integer key {key:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = parse(
+            "# run config\nscheme = \"so2dr\"\n[grid]\nrows = 38_400\n\
+             cols = 38400\n[run]\nd = 4\ns_tb = 160  # TB steps\nuse_pjrt = false\nratio = 1.5\n",
+        )
+        .unwrap();
+        assert_eq!(doc[""]["scheme"], Value::Str("so2dr".into()));
+        assert_eq!(doc["grid"]["rows"], Value::Int(38400));
+        assert_eq!(doc["run"]["s_tb"], Value::Int(160));
+        assert_eq!(doc["run"]["use_pjrt"], Value::Bool(false));
+        assert_eq!(doc["run"]["ratio"], Value::Float(1.5));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("key only\n").is_err());
+        assert!(parse("k = [1, 2]\n").is_err());
+        assert!(parse("k = \"open\n").is_err());
+        assert!(parse("[a.b]\nk = 1\n").is_err());
+    }
+
+    #[test]
+    fn section_helpers() {
+        let doc = parse("[x]\na = 3\nb = \"hi\"\n").unwrap();
+        let s = Section(&doc["x"]);
+        assert_eq!(s.int_or("a", 0), 3);
+        assert_eq!(s.str_or("b", "no"), "hi");
+        assert_eq!(s.str_or("c", "no"), "no");
+        assert_eq!(s.usize_req("a").unwrap(), 3);
+        assert!(s.usize_req("zzz").is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! Kernel backends: who actually computes a fused kernel invocation.
+//!
+//! The contract mirrors the L1/L2 chunk program: given a chunk buffer and
+//! one row/col window per fused step (buffer-local, pre-clamped), apply the
+//! steps and leave the result in `cur`. Cells outside a step's window keep
+//! their previous value (pass-through), which is what the AOT executable's
+//! `select` masking does and what `apply_step`'s frame copy does.
+
+use crate::core::{Array2, Rect};
+use crate::stencil::{multi_step, StencilEngine, StencilKind};
+use anyhow::Result;
+
+/// A backend that can run fused stencil kernels on chunk buffers.
+pub trait KernelBackend {
+    /// Apply `windows.len()` fused steps of `kind` to `cur` (ping-pong via
+    /// `scratch`); postcondition: the final state is in `cur`.
+    fn run_kernel(
+        &mut self,
+        kind: StencilKind,
+        cur: &mut Array2,
+        scratch: &mut Array2,
+        windows: &[Rect],
+    ) -> Result<()>;
+
+    /// Human-readable backend name for reports.
+    fn name(&self) -> String;
+}
+
+/// Host backend: runs kernels with a host [`StencilEngine`]. With the
+/// naive engine this is the golden path used by equivalence tests; with
+/// the optimized engine it is the fast real-numerics path.
+pub struct HostBackend<E: StencilEngine> {
+    engine: E,
+}
+
+impl<E: StencilEngine> HostBackend<E> {
+    pub fn new(engine: E) -> Self {
+        Self { engine }
+    }
+
+    pub fn engine(&self) -> &E {
+        &self.engine
+    }
+}
+
+impl<E: StencilEngine> KernelBackend for HostBackend<E> {
+    fn run_kernel(
+        &mut self,
+        kind: StencilKind,
+        cur: &mut Array2,
+        scratch: &mut Array2,
+        windows: &[Rect],
+    ) -> Result<()> {
+        multi_step(&self.engine, kind, cur, scratch, windows);
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        format!("host/{}", self.engine.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::NaiveEngine;
+
+    #[test]
+    fn host_backend_runs_fused_steps() {
+        let kind = StencilKind::Box { radius: 1 };
+        let mut cur = Array2::synthetic(16, 16, 2);
+        let expect = {
+            let mut buf = cur.clone();
+            let mut scratch = Array2::zeros(16, 16);
+            let w = vec![Rect::new(1, 15, 1, 15); 3];
+            multi_step(&NaiveEngine, kind, &mut buf, &mut scratch, &w);
+            buf
+        };
+        let mut scratch = Array2::zeros(16, 16);
+        let mut be = HostBackend::new(NaiveEngine);
+        be.run_kernel(kind, &mut cur, &mut scratch, &vec![Rect::new(1, 15, 1, 15); 3]).unwrap();
+        assert!(cur.bit_eq(&expect));
+        assert_eq!(be.name(), "host/naive");
+    }
+}

@@ -1,0 +1,149 @@
+//! High-level entry points: run a scheme end to end, or the in-core
+//! reference sweep.
+
+use crate::chunking::plan::{plan_run, Scheme};
+use crate::chunking::Decomposition;
+use crate::coordinator::backend::KernelBackend;
+use crate::coordinator::exec::{ExecStats, PlanExecutor};
+use crate::core::{Array2, Rect};
+use crate::stencil::{apply_step, StencilEngine, StencilKind};
+use anyhow::Result;
+
+/// Result of a full out-of-core (or in-core) run.
+#[derive(Debug)]
+pub struct RunOutcome {
+    pub grid: Array2,
+    pub stats: ExecStats,
+}
+
+/// Golden reference: `n` full-interior steps with a host engine,
+/// ping-ponged on the whole grid. All schemes must reproduce this
+/// bit-exactly when they use the same engine.
+pub fn reference_run(
+    initial: &Array2,
+    kind: StencilKind,
+    n: usize,
+    engine: &dyn StencilEngine,
+) -> Array2 {
+    let r = kind.radius();
+    let rows = initial.rows();
+    let cols = initial.cols();
+    let window = Rect::new(r.min(rows), rows.saturating_sub(r), r.min(cols), cols.saturating_sub(r));
+    let mut cur = initial.clone();
+    let mut nxt = Array2::zeros(rows, cols);
+    for _ in 0..n {
+        apply_step(engine, kind, &cur, &mut nxt, window);
+        std::mem::swap(&mut cur, &mut nxt);
+    }
+    cur
+}
+
+/// Run `n` time steps of `kind` over `initial` under the given scheme and
+/// run-time configuration (`d` chunks, `s_tb` TB steps per epoch, `k_on`
+/// fused steps per kernel), on the given backend.
+pub fn run_scheme(
+    scheme: Scheme,
+    initial: &Array2,
+    kind: StencilKind,
+    n: usize,
+    d: usize,
+    s_tb: usize,
+    k_on: usize,
+    backend: &mut dyn KernelBackend,
+) -> Result<RunOutcome> {
+    let dc = Decomposition::new(initial.rows(), initial.cols(), d, kind.radius());
+    let plans = plan_run(scheme, &dc, n, s_tb, k_on);
+    let mut grid = initial.clone();
+    let mut exec = PlanExecutor::new(backend, kind);
+    exec.run(&mut grid, &dc, &plans)?;
+    let stats = exec.stats.clone();
+    Ok(RunOutcome { grid, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::HostBackend;
+    use crate::stencil::NaiveEngine;
+
+    fn check_equiv(scheme: Scheme, kind: StencilKind, rows: usize, n: usize, d: usize, s_tb: usize, k_on: usize) {
+        let initial = Array2::synthetic(rows, rows / 2, 13);
+        let reference = reference_run(&initial, kind, n, &NaiveEngine);
+        let mut backend = HostBackend::new(NaiveEngine);
+        let out =
+            run_scheme(scheme, &initial, kind, n, d, s_tb, k_on, &mut backend).unwrap();
+        let diff = out.grid.max_abs_diff(&reference);
+        assert!(
+            out.grid.bit_eq(&reference),
+            "{} {} rows={rows} n={n} d={d} s_tb={s_tb} k_on={k_on}: diff={diff}",
+            scheme.name(),
+            kind.name(),
+        );
+    }
+
+    #[test]
+    fn so2dr_matches_reference_box1() {
+        check_equiv(Scheme::So2dr, StencilKind::Box { radius: 1 }, 96, 12, 3, 6, 2);
+    }
+
+    #[test]
+    fn so2dr_matches_reference_gradient() {
+        check_equiv(Scheme::So2dr, StencilKind::Gradient2d, 96, 8, 4, 4, 4);
+    }
+
+    #[test]
+    fn so2dr_matches_reference_residuals() {
+        // n % s_tb != 0 and s_tb % k_on != 0 — Algorithm 1 lines 3 & 11.
+        check_equiv(Scheme::So2dr, StencilKind::Box { radius: 1 }, 120, 13, 3, 5, 2);
+    }
+
+    #[test]
+    fn resreu_matches_reference() {
+        check_equiv(Scheme::ResReu, StencilKind::Box { radius: 1 }, 96, 12, 3, 6, 1);
+    }
+
+    #[test]
+    fn resreu_matches_reference_radius2() {
+        check_equiv(Scheme::ResReu, StencilKind::Box { radius: 2 }, 140, 10, 4, 5, 1);
+    }
+
+    #[test]
+    fn incore_matches_reference() {
+        check_equiv(Scheme::InCore, StencilKind::Gradient2d, 64, 10, 1, 10, 4);
+    }
+
+    #[test]
+    fn so2dr_transfer_bytes_are_minimal() {
+        // Per epoch, HtoD and DtoH must each move exactly the grid once.
+        let initial = Array2::synthetic(96, 48, 1);
+        let kind = StencilKind::Box { radius: 1 };
+        let mut backend = HostBackend::new(NaiveEngine);
+        let out = run_scheme(Scheme::So2dr, &initial, kind, 12, 3, 6, 2, &mut backend).unwrap();
+        let grid_bytes = (96 * 48 * 4) as u64;
+        assert_eq!(out.stats.epochs, 2);
+        assert_eq!(out.stats.htod_bytes, 2 * grid_bytes);
+        assert_eq!(out.stats.dtoh_bytes, 2 * grid_bytes);
+    }
+
+    #[test]
+    fn resreu_has_no_redundant_compute() {
+        let initial = Array2::synthetic(96, 48, 1);
+        let kind = StencilKind::Box { radius: 1 };
+        let mut backend = HostBackend::new(NaiveEngine);
+        let out = run_scheme(Scheme::ResReu, &initial, kind, 12, 3, 6, 1, &mut backend).unwrap();
+        let interior = ((96 - 2) * (48 - 2)) as u64;
+        assert_eq!(out.stats.computed_elems, interior * 12);
+    }
+
+    #[test]
+    fn so2dr_redundancy_is_positive_and_bounded() {
+        let initial = Array2::synthetic(96, 48, 1);
+        let kind = StencilKind::Box { radius: 1 };
+        let mut backend = HostBackend::new(NaiveEngine);
+        let out = run_scheme(Scheme::So2dr, &initial, kind, 12, 3, 6, 2, &mut backend).unwrap();
+        let interior = ((96 - 2) * (48 - 2)) as u64;
+        let red = out.stats.redundancy(interior, 12);
+        assert!(red > 0.0, "SO2DR must do redundant compute");
+        assert!(red < 0.25, "redundancy should be modest, got {red}");
+    }
+}

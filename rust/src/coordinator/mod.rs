@@ -1,0 +1,23 @@
+//! The out-of-core coordinator (L3): executes epoch plans with real
+//! numerics against a pluggable kernel backend.
+//!
+//! The coordinator is the paper's system contribution: it owns the chunk
+//! lifecycle (HtoD → region sharing → temporally-blocked kernels → DtoH),
+//! the region-sharing buffer, and the device-arena accounting. Two
+//! *interpreters* consume the same [`EpochPlan`](crate::chunking::EpochPlan)
+//! IR:
+//! - this module — real data, correctness is the point;
+//! - [`crate::gpu`] — a discrete-event replay on the paper's machine model,
+//!   timing is the point.
+
+pub mod backend;
+pub mod driver;
+pub mod exec;
+pub mod pipeline;
+pub mod rs_buffer;
+
+pub use backend::{HostBackend, KernelBackend};
+pub use driver::{reference_run, run_scheme, RunOutcome};
+pub use exec::{ExecStats, PlanExecutor};
+pub use pipeline::{run_pipeline, PipelineStats, Segment};
+pub use rs_buffer::RegionShareBuffer;

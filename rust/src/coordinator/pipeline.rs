@@ -1,0 +1,140 @@
+//! Multi-stencil pipelines — the paper's §VII future work ("extending
+//! this work to multi-stencil codes").
+//!
+//! A pipeline is a sequence of segments, each applying `steps` time steps
+//! of one stencil; segment `i+1` consumes segment `i`'s output. The
+//! coordinator runs every segment out-of-core with its own feasible
+//! temporal blocking (the skirt depends on each segment's radius), while
+//! the grid stays on the host between segments — exactly how a
+//! multi-physics code alternates operators.
+
+use crate::chunking::plan::Scheme;
+use crate::coordinator::backend::KernelBackend;
+use crate::coordinator::driver::{run_scheme, RunOutcome};
+use crate::coordinator::exec::ExecStats;
+use crate::core::Array2;
+use crate::stencil::StencilKind;
+use anyhow::{bail, Context, Result};
+
+/// One pipeline stage: `steps` time steps of `kind`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    pub kind: StencilKind,
+    pub steps: usize,
+}
+
+impl Segment {
+    pub fn new(kind: StencilKind, steps: usize) -> Self {
+        Self { kind, steps }
+    }
+}
+
+/// Aggregate stats over all segments.
+#[derive(Debug, Default, Clone)]
+pub struct PipelineStats {
+    pub per_segment: Vec<(StencilKind, ExecStats)>,
+}
+
+impl PipelineStats {
+    pub fn total_htod_bytes(&self) -> u64 {
+        self.per_segment.iter().map(|(_, s)| s.htod_bytes).sum()
+    }
+
+    pub fn total_kernels(&self) -> u64 {
+        self.per_segment.iter().map(|(_, s)| s.kernel_invocations).sum()
+    }
+}
+
+/// Run a multi-stencil pipeline under one scheme and run-time config.
+/// `s_tb` is clamped per segment so each segment's halo working space
+/// stays feasible for its radius (larger radii get fewer TB steps, as
+/// the §IV-C constraint demands).
+#[allow(clippy::too_many_arguments)]
+pub fn run_pipeline(
+    scheme: Scheme,
+    initial: &Array2,
+    segments: &[Segment],
+    d: usize,
+    s_tb: usize,
+    k_on: usize,
+    backend: &mut dyn KernelBackend,
+) -> Result<(RunOutcome, PipelineStats)> {
+    if segments.is_empty() {
+        bail!("empty pipeline");
+    }
+    let mut grid = initial.clone();
+    let mut stats = PipelineStats::default();
+    let mut last = None;
+    for (i, seg) in segments.iter().enumerate() {
+        // Clamp S_TB to this segment's feasibility (skirt + r <= chunk).
+        let min_chunk = initial.rows() / d;
+        let max_tb = (min_chunk.saturating_sub(seg.kind.radius())) / seg.kind.radius();
+        let seg_tb = s_tb.min(max_tb.max(1)).min(seg.steps.max(1));
+        let out = run_scheme(scheme, &grid, seg.kind, seg.steps, d, seg_tb, k_on, backend)
+            .with_context(|| format!("pipeline segment {i} ({})", seg.kind.name()))?;
+        grid = out.grid.clone();
+        stats.per_segment.push((seg.kind, out.stats.clone()));
+        last = Some(out);
+    }
+    let mut outcome = last.unwrap();
+    outcome.grid = grid;
+    Ok((outcome, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::driver::reference_run;
+    use crate::coordinator::HostBackend;
+    use crate::stencil::NaiveEngine;
+
+    fn segments() -> Vec<Segment> {
+        vec![
+            Segment::new(StencilKind::Gradient2d, 6),
+            Segment::new(StencilKind::Box { radius: 2 }, 4),
+            Segment::new(StencilKind::Box { radius: 1 }, 5),
+        ]
+    }
+
+    fn reference_pipeline(initial: &Array2, segs: &[Segment]) -> Array2 {
+        let mut grid = initial.clone();
+        for s in segs {
+            grid = reference_run(&grid, s.kind, s.steps, &NaiveEngine);
+        }
+        grid
+    }
+
+    #[test]
+    fn pipeline_matches_segmentwise_reference() {
+        let initial = Array2::synthetic(120, 80, 17);
+        let expect = reference_pipeline(&initial, &segments());
+        for scheme in [Scheme::So2dr, Scheme::ResReu] {
+            let mut backend = HostBackend::new(NaiveEngine);
+            let k_on = if scheme == Scheme::ResReu { 1 } else { 3 };
+            let (out, stats) =
+                run_pipeline(scheme, &initial, &segments(), 3, 5, k_on, &mut backend).unwrap();
+            assert!(out.grid.bit_eq(&expect), "{}", scheme.name());
+            assert_eq!(stats.per_segment.len(), 3);
+            assert!(stats.total_kernels() > 0);
+        }
+    }
+
+    #[test]
+    fn per_segment_tb_clamping() {
+        // radius-4 segment forces a smaller S_TB than requested.
+        let initial = Array2::synthetic(96, 64, 3);
+        let segs = vec![Segment::new(StencilKind::Box { radius: 4 }, 6)];
+        let mut backend = HostBackend::new(NaiveEngine);
+        let (out, _) =
+            run_pipeline(Scheme::So2dr, &initial, &segs, 3, 50, 2, &mut backend).unwrap();
+        let expect = reference_run(&initial, StencilKind::Box { radius: 4 }, 6, &NaiveEngine);
+        assert!(out.grid.bit_eq(&expect));
+    }
+
+    #[test]
+    fn empty_pipeline_rejected() {
+        let initial = Array2::synthetic(32, 32, 1);
+        let mut backend = HostBackend::new(NaiveEngine);
+        assert!(run_pipeline(Scheme::So2dr, &initial, &[], 2, 4, 2, &mut backend).is_err());
+    }
+}

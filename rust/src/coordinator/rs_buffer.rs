@@ -1,0 +1,127 @@
+//! The region-sharing buffer: device-resident storage through which
+//! adjacent chunks exchange overlap regions (paper Fig. 2b / Fig. 4).
+//!
+//! Regions are keyed by `(row span, time_step)`; SO2DR exchanges one raw
+//! (`time_step = 0`) region pair per boundary per epoch, ResReu exchanges
+//! one intermediate-result pair per boundary per time step. The buffer
+//! tracks byte high-water marks so capacity accounting and the paper's
+//! memory constraint can be checked by tests.
+
+use crate::core::{Array2, RowSpan};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct Key {
+    lo: usize,
+    hi: usize,
+    time_step: usize,
+}
+
+/// Device-resident region store with byte accounting.
+#[derive(Debug, Default)]
+pub struct RegionShareBuffer {
+    regions: HashMap<Key, Array2>,
+    cur_bytes: u64,
+    peak_bytes: u64,
+    writes: u64,
+    reads: u64,
+    bytes_written: u64,
+    bytes_read: u64,
+}
+
+impl RegionShareBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Store a region (copy of `rows` of `src`, in global coordinates
+    /// `span`). Overwrites any previous region with the same key.
+    pub fn write(&mut self, span: RowSpan, time_step: usize, data: Array2) {
+        assert_eq!(data.rows(), span.len(), "region shape mismatch");
+        let key = Key { lo: span.lo, hi: span.hi, time_step };
+        let bytes = data.size_bytes();
+        if let Some(old) = self.regions.insert(key, data) {
+            self.cur_bytes -= old.size_bytes();
+        }
+        self.cur_bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.cur_bytes);
+        self.writes += 1;
+        self.bytes_written += bytes;
+    }
+
+    /// Fetch a region previously written with exactly this `(span,
+    /// time_step)`. Returns `None` when the producer never wrote it — a
+    /// scheduling bug the executor turns into an error.
+    pub fn read(&mut self, span: RowSpan, time_step: usize) -> Option<&Array2> {
+        let key = Key { lo: span.lo, hi: span.hi, time_step };
+        let found = self.regions.get(&key);
+        if let Some(a) = found {
+            self.reads += 1;
+            self.bytes_read += a.size_bytes();
+        }
+        self.regions.get(&Key { lo: span.lo, hi: span.hi, time_step })
+    }
+
+    /// Drop all regions (end of epoch). Peak accounting is preserved.
+    pub fn clear(&mut self) {
+        self.regions.clear();
+        self.cur_bytes = 0;
+    }
+
+    pub fn current_bytes(&self) -> u64 {
+        self.cur_bytes
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+
+    pub fn n_writes(&self) -> u64 {
+        self.writes
+    }
+
+    pub fn n_reads(&self) -> u64 {
+        self.reads
+    }
+
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written
+    }
+
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut rs = RegionShareBuffer::new();
+        let data = Array2::random(4, 8, 1, 0.0, 1.0);
+        rs.write(RowSpan::new(10, 14), 0, data.clone());
+        let got = rs.read(RowSpan::new(10, 14), 0).unwrap();
+        assert!(got.bit_eq(&data));
+        assert!(rs.read(RowSpan::new(10, 14), 1).is_none());
+        assert!(rs.read(RowSpan::new(10, 13), 0).is_none());
+    }
+
+    #[test]
+    fn byte_accounting_and_overwrite() {
+        let mut rs = RegionShareBuffer::new();
+        rs.write(RowSpan::new(0, 4), 0, Array2::zeros(4, 8));
+        assert_eq!(rs.current_bytes(), 4 * 8 * 4);
+        rs.write(RowSpan::new(4, 8), 1, Array2::zeros(4, 8));
+        assert_eq!(rs.current_bytes(), 2 * 4 * 8 * 4);
+        // Overwrite same key: no growth.
+        rs.write(RowSpan::new(0, 4), 0, Array2::zeros(4, 8));
+        assert_eq!(rs.current_bytes(), 2 * 4 * 8 * 4);
+        assert_eq!(rs.peak_bytes(), 2 * 4 * 8 * 4);
+        rs.clear();
+        assert_eq!(rs.current_bytes(), 0);
+        assert_eq!(rs.peak_bytes(), 2 * 4 * 8 * 4);
+        assert_eq!(rs.n_writes(), 3);
+    }
+}

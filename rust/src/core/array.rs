@@ -1,0 +1,257 @@
+//! Dense row-major 2-D f32 array.
+//!
+//! The single array type used for host grids, device-arena chunk buffers and
+//! region-sharing regions. Row-major so a `RowSpan` maps to one contiguous
+//! slice — all transfers in the 1-D decomposition are `memcpy`s.
+
+use super::geom::{Rect, RowSpan};
+use crate::util::prng::XorShift64;
+
+/// Dense row-major 2-D array of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Array2 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Array2 {
+    /// Zero-filled array.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Constant-filled array.
+    pub fn full(rows: usize, cols: usize, v: f32) -> Self {
+        Self { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// From an existing row-major buffer (length must be rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Deterministic pseudo-random field in [lo, hi), seeded.
+    pub fn random(rows: usize, cols: usize, seed: u64, lo: f32, hi: f32) -> Self {
+        let mut rng = XorShift64::new(seed);
+        let data = (0..rows * cols).map(|_| rng.range_f32(lo, hi)).collect();
+        Self { rows, cols, data }
+    }
+
+    /// A smooth synthetic field (sum of two low-frequency modes plus a
+    /// deterministic ripple) — nicer than white noise for diffusion-style
+    /// stencils because values stay O(1) over many steps.
+    pub fn synthetic(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut a = Self::zeros(rows, cols);
+        let s = (seed % 97) as f32 * 0.013;
+        for r in 0..rows {
+            let fr = r as f32 / rows.max(1) as f32;
+            for c in 0..cols {
+                let fc = c as f32 / cols.max(1) as f32;
+                let v = (6.283 * (fr + s)).sin() * (12.566 * fc).cos()
+                    + 0.5 * (25.13 * (fr * fc + s)).sin()
+                    + 0.01 * ((r * 31 + c * 17) % 101) as f32 / 101.0;
+                a[(r, c)] = v;
+            }
+        }
+        a
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        (self.data.len() * std::mem::size_of::<f32>()) as u64
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// One contiguous row.
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Contiguous slice covering a row span.
+    pub fn rows_slice(&self, span: RowSpan) -> &[f32] {
+        debug_assert!(span.hi <= self.rows);
+        &self.data[span.lo * self.cols..span.hi * self.cols]
+    }
+
+    pub fn rows_slice_mut(&mut self, span: RowSpan) -> &mut [f32] {
+        debug_assert!(span.hi <= self.rows);
+        &mut self.data[span.lo * self.cols..span.hi * self.cols]
+    }
+
+    /// Copy `span` rows out into a new (len x cols) array.
+    pub fn extract_rows(&self, span: RowSpan) -> Array2 {
+        Array2::from_vec(span.len(), self.cols, self.rows_slice(span).to_vec())
+    }
+
+    /// Copy rows from `src` (whole array) into `span` of self.
+    pub fn insert_rows(&mut self, span: RowSpan, src: &Array2) {
+        assert_eq!(src.cols, self.cols, "column mismatch");
+        assert_eq!(src.rows, span.len(), "row-count mismatch");
+        self.rows_slice_mut(span).copy_from_slice(&src.data);
+    }
+
+    /// Copy a row range from another array (same cols), mapping
+    /// `src_span` in `src` onto `dst_span` in self (equal lengths).
+    pub fn copy_rows_from(&mut self, dst_span: RowSpan, src: &Array2, src_span: RowSpan) {
+        assert_eq!(src.cols, self.cols, "column mismatch");
+        assert_eq!(dst_span.len(), src_span.len(), "span length mismatch");
+        self.rows_slice_mut(dst_span).copy_from_slice(src.rows_slice(src_span));
+    }
+
+    /// Maximum absolute difference over all elements (arrays must be
+    /// congruent).
+    pub fn max_abs_diff(&self, other: &Array2) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Bit-exact equality (NaN-sensitive, used by orchestration tests).
+    pub fn bit_eq(&self, other: &Array2) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.data.iter().zip(&other.data).all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+
+    /// Order-independent checksum for cheap change detection in logs.
+    pub fn checksum(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64; // FNV offset basis
+        for v in &self.data {
+            h ^= v.to_bits() as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// Sum over a rectangle (f64 accumulator), for physical sanity checks.
+    pub fn sum_rect(&self, rect: Rect) -> f64 {
+        let mut s = 0f64;
+        for r in rect.r0..rect.r1 {
+            for v in &self.row(r)[rect.c0..rect.c1] {
+                s += *v as f64;
+            }
+        }
+        s
+    }
+
+    /// Maximum absolute value.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Array2 {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Array2 {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let mut a = Array2::zeros(3, 4);
+        a[(2, 3)] = 5.0;
+        assert_eq!(a[(2, 3)], 5.0);
+        assert_eq!(a.len(), 12);
+        assert_eq!(a.size_bytes(), 48);
+    }
+
+    #[test]
+    fn row_slices_are_contiguous() {
+        let a = Array2::from_vec(3, 2, vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(a.row(1), &[2., 3.]);
+        assert_eq!(a.rows_slice(RowSpan::new(1, 3)), &[2., 3., 4., 5.]);
+    }
+
+    #[test]
+    fn extract_insert_roundtrip() {
+        let a = Array2::random(6, 5, 1, -1.0, 1.0);
+        let span = RowSpan::new(2, 5);
+        let piece = a.extract_rows(span);
+        let mut b = Array2::zeros(6, 5);
+        b.insert_rows(span, &piece);
+        assert_eq!(b.rows_slice(span), a.rows_slice(span));
+        assert_eq!(b.row(0), vec![0f32; 5].as_slice());
+    }
+
+    #[test]
+    fn copy_rows_between_offsets() {
+        let src = Array2::from_vec(4, 2, (0..8).map(|v| v as f32).collect());
+        let mut dst = Array2::zeros(4, 2);
+        dst.copy_rows_from(RowSpan::new(0, 2), &src, RowSpan::new(2, 4));
+        assert_eq!(dst.row(0), &[4., 5.]);
+        assert_eq!(dst.row(1), &[6., 7.]);
+    }
+
+    #[test]
+    fn diff_and_checksum() {
+        let a = Array2::random(4, 4, 3, 0.0, 1.0);
+        let mut b = a.clone();
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        assert!(a.bit_eq(&b));
+        assert_eq!(a.checksum(), b.checksum());
+        b[(0, 0)] += 0.5;
+        assert!(a.max_abs_diff(&b) >= 0.5);
+        assert!(!a.bit_eq(&b));
+        assert_ne!(a.checksum(), b.checksum());
+    }
+
+    #[test]
+    fn synthetic_is_bounded_and_deterministic() {
+        let a = Array2::synthetic(32, 32, 7);
+        let b = Array2::synthetic(32, 32, 7);
+        assert!(a.bit_eq(&b));
+        assert!(a.max_abs() < 2.0);
+    }
+
+    #[test]
+    fn sum_rect() {
+        let a = Array2::full(4, 4, 2.0);
+        assert_eq!(a.sum_rect(Rect::new(1, 3, 1, 3)), 8.0);
+    }
+}

@@ -1,0 +1,200 @@
+//! Integer geometry for row-band decomposition and compute windows.
+
+/// A half-open row interval `[lo, hi)`. The workhorse of the 1-D (row-band)
+/// chunk decomposition: transfer spans, region-sharing spans, and compute
+/// windows are all `RowSpan`s over the global grid coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RowSpan {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl RowSpan {
+    pub fn new(lo: usize, hi: usize) -> Self {
+        assert!(lo <= hi, "invalid span [{lo}, {hi})");
+        Self { lo, hi }
+    }
+
+    /// Construct from possibly-negative signed bounds, clamped to [0, max].
+    pub fn clamped(lo: i64, hi: i64, max: usize) -> Self {
+        let lo = lo.clamp(0, max as i64) as usize;
+        let hi = hi.clamp(0, max as i64) as usize;
+        Self::new(lo, hi.max(lo))
+    }
+
+    pub fn empty() -> Self {
+        Self { lo: 0, hi: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    pub fn contains(&self, row: usize) -> bool {
+        (self.lo..self.hi).contains(&row)
+    }
+
+    pub fn contains_span(&self, other: &RowSpan) -> bool {
+        other.is_empty() || (other.lo >= self.lo && other.hi <= self.hi)
+    }
+
+    /// Intersection (possibly empty).
+    pub fn intersect(&self, other: &RowSpan) -> RowSpan {
+        let lo = self.lo.max(other.lo);
+        let hi = self.hi.min(other.hi);
+        if lo >= hi {
+            RowSpan::empty()
+        } else {
+            RowSpan::new(lo, hi)
+        }
+    }
+
+    /// Smallest span covering both.
+    pub fn hull(&self, other: &RowSpan) -> RowSpan {
+        if self.is_empty() {
+            return *other;
+        }
+        if other.is_empty() {
+            return *self;
+        }
+        RowSpan::new(self.lo.min(other.lo), self.hi.max(other.hi))
+    }
+
+    pub fn overlaps(&self, other: &RowSpan) -> bool {
+        !self.intersect(other).is_empty()
+    }
+
+    /// Shift by a signed offset, clamping at [0, max].
+    pub fn shift_clamped(&self, delta: i64, max: usize) -> RowSpan {
+        RowSpan::clamped(self.lo as i64 + delta, self.hi as i64 + delta, max)
+    }
+}
+
+impl std::fmt::Display for RowSpan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}, {})", self.lo, self.hi)
+    }
+}
+
+/// A half-open 2-D rectangle `[r0, r1) x [c0, c1)` in grid coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rect {
+    pub r0: usize,
+    pub r1: usize,
+    pub c0: usize,
+    pub c1: usize,
+}
+
+impl Rect {
+    pub fn new(r0: usize, r1: usize, c0: usize, c1: usize) -> Self {
+        assert!(r0 <= r1 && c0 <= c1, "invalid rect [{r0},{r1})x[{c0},{c1})");
+        Self { r0, r1, c0, c1 }
+    }
+
+    pub fn from_spans(rows: RowSpan, c0: usize, c1: usize) -> Self {
+        Self::new(rows.lo, rows.hi, c0, c1)
+    }
+
+    pub fn rows(&self) -> RowSpan {
+        RowSpan::new(self.r0, self.r1)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.r1 - self.r0
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.c1 - self.c0
+    }
+
+    pub fn area(&self) -> usize {
+        self.n_rows() * self.n_cols()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.area() == 0
+    }
+
+    pub fn intersect(&self, o: &Rect) -> Rect {
+        let r0 = self.r0.max(o.r0);
+        let r1 = self.r1.min(o.r1).max(r0);
+        let c0 = self.c0.max(o.c0);
+        let c1 = self.c1.min(o.c1).max(c0);
+        Rect { r0, r1, c0, c1 }
+    }
+
+    pub fn contains_cell(&self, r: usize, c: usize) -> bool {
+        (self.r0..self.r1).contains(&r) && (self.c0..self.c1).contains(&c)
+    }
+}
+
+impl std::fmt::Display for Rect {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{},{})x[{},{})", self.r0, self.r1, self.c0, self.c1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_basics() {
+        let s = RowSpan::new(3, 10);
+        assert_eq!(s.len(), 7);
+        assert!(s.contains(3) && !s.contains(10));
+        assert!(!s.is_empty());
+        assert!(RowSpan::empty().is_empty());
+    }
+
+    #[test]
+    fn span_clamped_negative() {
+        let s = RowSpan::clamped(-5, 4, 10);
+        assert_eq!(s, RowSpan::new(0, 4));
+        let s = RowSpan::clamped(8, 20, 10);
+        assert_eq!(s, RowSpan::new(8, 10));
+        let s = RowSpan::clamped(-10, -2, 10);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn span_set_ops() {
+        let a = RowSpan::new(0, 10);
+        let b = RowSpan::new(5, 15);
+        assert_eq!(a.intersect(&b), RowSpan::new(5, 10));
+        assert_eq!(a.hull(&b), RowSpan::new(0, 15));
+        assert!(a.overlaps(&b));
+        assert!(!a.overlaps(&RowSpan::new(10, 12)));
+        assert!(a.contains_span(&RowSpan::new(2, 9)));
+        assert!(!a.contains_span(&b));
+    }
+
+    #[test]
+    fn span_shift() {
+        let s = RowSpan::new(2, 6);
+        assert_eq!(s.shift_clamped(-3, 100), RowSpan::new(0, 3));
+        assert_eq!(s.shift_clamped(96, 100), RowSpan::new(98, 100));
+    }
+
+    #[test]
+    fn rect_basics() {
+        let r = Rect::new(0, 4, 2, 10);
+        assert_eq!(r.area(), 32);
+        assert_eq!(r.n_rows(), 4);
+        assert_eq!(r.n_cols(), 8);
+        assert!(r.contains_cell(3, 9));
+        assert!(!r.contains_cell(4, 2));
+        let i = r.intersect(&Rect::new(2, 8, 0, 5));
+        assert_eq!(i, Rect::new(2, 4, 2, 5));
+    }
+
+    #[test]
+    fn rect_empty_intersection() {
+        let r = Rect::new(0, 2, 0, 2).intersect(&Rect::new(5, 8, 5, 8));
+        assert!(r.is_empty());
+    }
+}

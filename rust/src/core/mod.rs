@@ -1,0 +1,7 @@
+//! Core data types: dense 2-D arrays and integer geometry.
+
+pub mod array;
+pub mod geom;
+
+pub use array::Array2;
+pub use geom::{Rect, RowSpan};

@@ -1,0 +1,332 @@
+//! The discrete-event simulator: replays a flattened op graph on the
+//! machine model and reports makespan + per-category breakdown.
+//!
+//! Resources (as on the modeled GPU):
+//! - one HtoD PCIe channel and one DtoH channel (full duplex);
+//! - one on-device copy engine (region-sharing copies);
+//! - a kernel engine with `kernel_concurrency` slots; when more than one
+//!   kernel is in flight, each runs `overlap_speedup` faster (cross-stream
+//!   memory/compute phase overlap — the effect that lets multi-stream
+//!   SO2DR beat the single-stream in-core code, paper §V-D).
+//!
+//! Streams are in-order queues: an op may start only when (a) it is at
+//! the head of its stream, (b) its dependency edges are satisfied, and
+//! (c) its resource has a free slot. Device-memory occupancy is tracked
+//! from the ops' alloc/free deltas and checked against capacity.
+
+use super::cost::CostModel;
+use super::flatten::{OpKind, SimOp};
+use std::collections::HashMap;
+
+/// Simulation outcome.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    /// End-to-end wall time (s).
+    pub makespan: f64,
+    /// Total busy seconds per category (sum over ops; concurrency can
+    /// make a category's busy time exceed the makespan).
+    pub busy: HashMap<OpKind, f64>,
+    pub op_counts: HashMap<OpKind, usize>,
+    /// Peak device-memory occupancy (bytes).
+    pub peak_dmem: u64,
+    /// True when peak occupancy exceeded capacity (the run would have
+    /// failed on the real machine).
+    pub capacity_exceeded: bool,
+}
+
+impl SimReport {
+    pub fn busy_of(&self, k: OpKind) -> f64 {
+        self.busy.get(&k).copied().unwrap_or(0.0)
+    }
+
+    pub fn count_of(&self, k: OpKind) -> usize {
+        self.op_counts.get(&k).copied().unwrap_or(0)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum OpState {
+    Waiting,
+    Running { end: f64 },
+    Done,
+}
+
+/// Run the simulation. `ops` must be topologically ordered by id (the
+/// flattener guarantees this).
+pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
+    let n = ops.len();
+    let mut state = vec![OpState::Waiting; n];
+    let mut deps_left: Vec<usize> = ops.iter().map(|o| o.deps.len()).collect();
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for op in ops {
+        for &d in &op.deps {
+            dependents[d].push(op.id);
+        }
+    }
+    // Per-stream FIFO cursors.
+    let n_strm = n_strm.max(1);
+    let mut stream_q: Vec<Vec<usize>> = vec![Vec::new(); n_strm];
+    for op in ops {
+        stream_q[op.stream % n_strm].push(op.id);
+    }
+    let mut stream_head = vec![0usize; n_strm];
+
+    // Resource occupancy.
+    let mut busy_slots: HashMap<OpKind, usize> = HashMap::new();
+    let slots_of = |k: OpKind| -> usize {
+        match k {
+            OpKind::Kernel => cost.machine.kernel_concurrency.max(1),
+            _ => 1,
+        }
+    };
+
+    let mut now = 0.0f64;
+    let mut report = SimReport::default();
+    let mut dmem: i64 = 0;
+    let mut running: Vec<usize> = Vec::new();
+    let mut done_count = 0usize;
+
+    // Try to start every startable op; returns true if any started.
+    fn try_start(
+        ops: &[SimOp],
+        cost: &CostModel,
+        now: f64,
+        state: &mut [OpState],
+        deps_left: &[usize],
+        stream_q: &[Vec<usize>],
+        stream_head: &mut [usize],
+        busy_slots: &mut HashMap<OpKind, usize>,
+        slots_of: &dyn Fn(OpKind) -> usize,
+        running: &mut Vec<usize>,
+        report: &mut SimReport,
+        dmem: &mut i64,
+    ) -> bool {
+        let mut any = false;
+        for s in 0..stream_q.len() {
+            loop {
+                let Some(&cand) = stream_q[s].get(stream_head[s]) else { break };
+                if state[cand] != OpState::Waiting || deps_left[cand] > 0 {
+                    break;
+                }
+                let op = &ops[cand];
+                let used = busy_slots.get(&op.kind).copied().unwrap_or(0);
+                if used >= slots_of(op.kind) {
+                    break;
+                }
+                // Start it.
+                let mut dur = match op.kind {
+                    OpKind::HtoD => cost.htod_time(op.bytes),
+                    OpKind::DtoH => cost.dtoh_time(op.bytes),
+                    OpKind::D2D => cost.d2d_time(op.bytes),
+                    OpKind::Kernel => cost.kernel_time(op.stencil, &op.areas),
+                };
+                if op.kind == OpKind::Kernel && used >= 1 {
+                    dur /= cost.machine.overlap_speedup;
+                }
+                *busy_slots.entry(op.kind).or_insert(0) += 1;
+                *dmem += op.alloc_delta;
+                report.peak_dmem = report.peak_dmem.max((*dmem).max(0) as u64);
+                *report.busy.entry(op.kind).or_insert(0.0) += dur;
+                *report.op_counts.entry(op.kind).or_insert(0) += 1;
+                state[cand] = OpState::Running { end: now + dur };
+                running.push(cand);
+                any = true;
+                // CUDA-stream semantics: the next op of this stream may
+                // only start after this one COMPLETES; the head advances
+                // in the completion handler.
+                break;
+            }
+        }
+        any
+    }
+
+    loop {
+        // Start everything startable at `now` (repeat until fixpoint —
+        // starting one op can unblock the next op of the same stream only
+        // via completion, but can free no resources, so one pass per
+        // stream suffices; dependencies across streams need the loop).
+        loop {
+            let started = try_start(
+                ops,
+                cost,
+                now,
+                &mut state,
+                &deps_left,
+                &stream_q,
+                &mut stream_head,
+                &mut busy_slots,
+                &|k| slots_of(k),
+                &mut running,
+                &mut report,
+                &mut dmem,
+            );
+            if !started {
+                break;
+            }
+        }
+        if done_count == n {
+            break;
+        }
+        // Advance to the earliest completion.
+        let (idx, end) = running
+            .iter()
+            .enumerate()
+            .filter_map(|(ri, &oid)| match state[oid] {
+                OpState::Running { end } => Some((ri, end)),
+                _ => None,
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .expect("deadlock: nothing running but ops remain");
+        now = end;
+        // Complete every op finishing at `now` (within epsilon).
+        let mut finished: Vec<usize> = Vec::new();
+        running.retain(|&oid| {
+            if let OpState::Running { end } = state[oid] {
+                if end <= now + 1e-15 {
+                    finished.push(oid);
+                    return false;
+                }
+            }
+            true
+        });
+        let _ = idx;
+        for oid in finished {
+            state[oid] = OpState::Done;
+            done_count += 1;
+            let op = &ops[oid];
+            *busy_slots.get_mut(&op.kind).unwrap() -= 1;
+            dmem += op.free_delta;
+            let s = op.stream % n_strm;
+            debug_assert_eq!(stream_q[s][stream_head[s]], oid, "stream completion order");
+            stream_head[s] += 1;
+            for &dep in &dependents[oid] {
+                deps_left[dep] -= 1;
+            }
+        }
+        // `deps_left` is mutated above; rebind for the closure borrow.
+        // (No action needed — next loop iteration re-reads it.)
+    }
+    report.makespan = now;
+    if report.peak_dmem > cost.machine.c_dmem {
+        report.capacity_exceeded = true;
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunking::plan::{plan_run, Scheme};
+    use crate::chunking::Decomposition;
+    use crate::coordinator::{HostBackend, PlanExecutor};
+    use crate::gpu::cost::MachineSpec;
+    use crate::gpu::flatten::flatten_run;
+    use crate::stencil::{NaiveEngine, StencilKind};
+
+    fn sim(scheme: Scheme, d: usize, s_tb: usize, k_on: usize, n: usize) -> SimReport {
+        let kind = StencilKind::Box { radius: 1 };
+        let dc = Decomposition::new(38400, 38400, d, 1);
+        let plans = plan_run(scheme, &dc, n, s_tb, k_on);
+        let buf_rows =
+            PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+        let ops = flatten_run(&plans, &dc, kind, 3, buf_rows);
+        let cost = CostModel::new(MachineSpec::rtx3080());
+        simulate(&ops, &cost, 3)
+    }
+
+    #[test]
+    fn all_ops_complete_and_makespan_bounds() {
+        let rep = sim(Scheme::So2dr, 4, 8, 4, 16);
+        assert!(rep.makespan > 0.0);
+        // Makespan at least the single-resource lower bounds.
+        for k in [OpKind::HtoD, OpKind::DtoH] {
+            assert!(rep.makespan >= rep.busy_of(k) * 0.99, "{k:?}");
+        }
+        // With 3 streams, transfers and kernels overlap: makespan must be
+        // below the serial sum.
+        let serial: f64 = rep.busy.values().sum();
+        assert!(rep.makespan < serial);
+    }
+
+    #[test]
+    fn so2dr_beats_resreu_at_paper_scale() {
+        // The headline (Fig. 6): same transfers, much faster kernels.
+        let so2dr = sim(Scheme::So2dr, 4, 160, 4, 640);
+        let resreu = sim(Scheme::ResReu, 4, 160, 1, 640);
+        let speedup = resreu.makespan / so2dr.makespan;
+        assert!(speedup > 2.0, "expected >2x, got {speedup:.2}");
+        assert!(speedup < 8.0, "suspiciously large: {speedup:.2}");
+    }
+
+    #[test]
+    fn kernel_bound_for_large_s_tb() {
+        // Fig. 3a/3b: large S_TB shifts the bottleneck to kernels.
+        let rep = sim(Scheme::ResReu, 8, 40, 1, 320);
+        let ratio = rep.busy_of(OpKind::Kernel) / rep.busy_of(OpKind::HtoD);
+        assert!((1.5..3.5).contains(&ratio), "expected ~2.3, got {ratio:.2}");
+    }
+
+    #[test]
+    fn capacity_checking_fires() {
+        // d=2 at 38400^2 with huge skirts: chunk buffers exceed 10 GB.
+        let rep = sim(Scheme::So2dr, 2, 640, 4, 640);
+        assert!(rep.capacity_exceeded, "peak {}", rep.peak_dmem);
+    }
+
+    #[test]
+    fn incore_has_only_kernels() {
+        let rep = sim(Scheme::InCore, 1, 16, 4, 16);
+        assert_eq!(rep.count_of(OpKind::HtoD), 0);
+        assert_eq!(rep.count_of(OpKind::DtoH), 0);
+        assert!(rep.count_of(OpKind::Kernel) > 0);
+    }
+}
+
+#[cfg(test)]
+mod determinism_tests {
+    use super::*;
+    use crate::chunking::plan::{plan_run, Scheme};
+    use crate::chunking::Decomposition;
+    use crate::coordinator::{HostBackend, PlanExecutor};
+    use crate::gpu::cost::{CostModel, MachineSpec};
+    use crate::gpu::flatten::flatten_run;
+    use crate::stencil::{NaiveEngine, StencilKind};
+
+    /// The DES is a pure function of (ops, machine): repeated replays give
+    /// identical makespans and breakdowns (needed for reproducible figures).
+    #[test]
+    fn replay_is_deterministic() {
+        let dc = Decomposition::new(38400, 38400, 4, 1);
+        let plans = plan_run(Scheme::So2dr, &dc, 64, 16, 4);
+        let buf_rows =
+            PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+        let ops = flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows);
+        let cost = CostModel::new(MachineSpec::rtx3080());
+        let a = simulate(&ops, &cost, 3);
+        let b = simulate(&ops, &cost, 3);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.peak_dmem, b.peak_dmem);
+        for (k, v) in &a.busy {
+            assert_eq!(v.to_bits(), b.busy[k].to_bits());
+        }
+    }
+
+    /// More streams cannot make the makespan worse (monotone resource
+    /// availability) for the paper's configurations.
+    #[test]
+    fn more_streams_never_hurt() {
+        let dc = Decomposition::new(38400, 38400, 8, 1);
+        let plans = plan_run(Scheme::So2dr, &dc, 80, 40, 4);
+        let buf_rows =
+            PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+        let cost = CostModel::new(MachineSpec::rtx3080());
+        let mk = |n_strm: usize| {
+            let ops =
+                flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, n_strm, buf_rows);
+            simulate(&ops, &cost, n_strm).makespan
+        };
+        let m1 = mk(1);
+        let m3 = mk(3);
+        assert!(m3 <= m1 * 1.001, "3 streams {m3} vs 1 stream {m1}");
+    }
+}

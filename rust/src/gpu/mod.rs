@@ -1,0 +1,17 @@
+//! The simulated device: a discrete-event model of the paper's
+//! experimental machine (Table II) that replays epoch plans and prices
+//! every operation with a calibrated cost model.
+//!
+//! This is the substitution for the RTX 3080 testbed (DESIGN.md §3): the
+//! paper's claims are about which resource saturates (interconnect vs.
+//! device memory vs. compute) and how streams overlap; a calibrated DES
+//! reproduces those crossovers at the paper's true data sizes without
+//! allocating them.
+
+pub mod cost;
+pub mod des;
+pub mod flatten;
+
+pub use cost::{CostModel, MachineSpec};
+pub use des::{simulate, SimReport};
+pub use flatten::{flatten_run, OpKind, SimOp};

@@ -1,0 +1,33 @@
+//! # SO2DR — on-/off-chip data-reuse synergy for out-of-core stencils
+//!
+//! A Rust + JAX + Pallas reproduction of *“A Synergy between On- and
+//! Off-Chip Data Reuse for GPU-based Out-of-Core Stencil Computation”*
+//! (Shen et al., 2023). See `DESIGN.md` for the system inventory and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! Layer map:
+//! - **L3 (this crate):** out-of-core coordinator — chunk streaming,
+//!   region sharing, temporal blocking, parameter selection, a simulated
+//!   device (DES) for paper-scale performance studies, and a PJRT runtime
+//!   that executes AOT-compiled chunk programs for real numerics.
+//! - **L2 (`python/compile/model.py`):** the fixed-shape chunk program,
+//!   AOT-lowered to HLO text.
+//! - **L1 (`python/compile/kernels/`):** the Pallas multi-step stencil
+//!   kernel (on-chip data reuse) and its pure-jnp oracle.
+
+pub mod chunking;
+pub mod coordinator;
+pub mod config;
+pub mod figures;
+pub mod gpu;
+pub mod metrics;
+pub mod params;
+pub mod core;
+pub mod runtime;
+pub mod stencil;
+pub mod transfer;
+pub mod util;
+
+pub use crate::core::{Array2, Rect, RowSpan};
+pub use chunking::{Decomposition, Scheme};
+pub use stencil::StencilKind;

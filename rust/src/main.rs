@@ -1,0 +1,345 @@
+//! `so2dr` — launcher for the SO2DR out-of-core stencil framework.
+//!
+//! Subcommands:
+//!   info                     platform, artifact inventory
+//!   run [opts]               real-numerics run + verification + counters
+//!   validate                 cross-scheme equivalence suite
+//!   autotune [opts]          §IV-C heuristic + DES ranking
+//!   simulate [opts]          price one configuration on the machine model
+//!   figures [--fig NAME]     regenerate the paper's tables and figures
+//!
+//! Run `so2dr <cmd> --help` for the options of each command.
+
+use anyhow::{bail, Context, Result};
+use so2dr::chunking::Scheme;
+use so2dr::config::RunConfig;
+use so2dr::coordinator::{reference_run, run_scheme, HostBackend, KernelBackend};
+use so2dr::gpu::MachineSpec;
+use so2dr::metrics::emit;
+use so2dr::runtime::PjrtBackend;
+use so2dr::stencil::{NaiveEngine, OptimizedEngine, StencilKind};
+use so2dr::util::{fmt_bytes, fmt_secs, Table};
+use so2dr::Array2;
+use std::collections::HashMap;
+
+/// Tiny flag parser: `--key value` pairs plus positional args.
+struct Args {
+    #[allow(dead_code)]
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key == "help" {
+                    flags.insert("help".into(), "1".into());
+                    continue;
+                }
+                let val = it
+                    .next()
+                    .with_context(|| format!("flag --{key} needs a value"))?
+                    .clone();
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Self { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    fn help(&self) -> bool {
+        self.flags.contains_key("help")
+    }
+}
+
+fn machine_of(args: &Args) -> Result<MachineSpec> {
+    match args.get("machine").unwrap_or("rtx3080") {
+        "rtx3080" => Ok(MachineSpec::rtx3080()),
+        "rtx3080-pcie4" => Ok(MachineSpec::rtx3080_pcie4()),
+        other => bail!("unknown machine {other:?} (rtx3080|rtx3080-pcie4)"),
+    }
+}
+
+fn config_of(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(v) = args.get("scheme") {
+        cfg.scheme = Scheme::parse(v).with_context(|| format!("bad scheme {v:?}"))?;
+    }
+    if let Some(v) = args.get("kind") {
+        cfg.kind = StencilKind::parse(v).with_context(|| format!("bad benchmark {v:?}"))?;
+    }
+    if let Some(v) = args.get("backend") {
+        cfg.backend = v.to_string();
+    }
+    cfg.rows = args.usize_or("rows", cfg.rows)?;
+    cfg.cols = args.usize_or("cols", cfg.cols)?;
+    if let Some(v) = args.get("sz") {
+        cfg.rows = v.parse()?;
+        cfg.cols = cfg.rows;
+    }
+    cfg.d = args.usize_or("d", cfg.d)?;
+    cfg.s_tb = args.usize_or("s-tb", cfg.s_tb)?;
+    cfg.k_on = args.usize_or("k-on", cfg.k_on)?;
+    cfg.n = args.usize_or("n", cfg.n)?;
+    cfg.n_strm = args.usize_or("n-strm", cfg.n_strm)?;
+    if cfg.scheme == Scheme::ResReu {
+        cfg.k_on = 1;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn make_backend(cfg: &RunConfig) -> Result<Box<dyn KernelBackend>> {
+    Ok(match cfg.backend.as_str() {
+        "host-naive" => Box::new(HostBackend::new(NaiveEngine)),
+        "host-opt" => Box::new(HostBackend::new(OptimizedEngine::default())),
+        "pjrt" => Box::new(PjrtBackend::from_artifacts(&so2dr::runtime::default_artifact_dir())?),
+        other => bail!("unknown backend {other:?}"),
+    })
+}
+
+fn cmd_info() -> Result<()> {
+    println!("so2dr {} — SO2DR reproduction (Shen et al., 2023)", env!("CARGO_PKG_VERSION"));
+    let dir = so2dr::runtime::default_artifact_dir();
+    match so2dr::runtime::ArtifactManifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} variants in {}", m.entries.len(), dir.display());
+            let mut t = Table::new(vec!["name", "kind", "k", "shape"]);
+            for e in &m.entries {
+                t.row(vec![
+                    e.name.clone(),
+                    e.kind.name(),
+                    e.k.to_string(),
+                    format!("{}x{}", e.rows, e.cols),
+                ]);
+            }
+            print!("{t}");
+        }
+        Err(e) => println!("artifacts: unavailable ({e}); run `make artifacts`"),
+    }
+    match xla::PjRtClient::cpu() {
+        Ok(c) => println!("pjrt: platform={} devices={}", c.platform_name(), c.device_count()),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    if args.help() {
+        println!(
+            "so2dr run [--config f.toml] [--scheme so2dr|resreu|incore] [--kind box2d1r|...|gradient2d]\n\
+             \x20         [--sz N | --rows N --cols N] [--d N] [--s-tb N] [--k-on N] [--n N]\n\
+             \x20         [--backend host-naive|host-opt|pjrt] [--no-verify x]"
+        );
+        return Ok(());
+    }
+    let cfg = config_of(args)?;
+    println!("run: {}", cfg.summary());
+    let initial = Array2::synthetic(cfg.rows, cfg.cols, cfg.seed);
+    let mut backend = make_backend(&cfg)?;
+    let t0 = std::time::Instant::now();
+    let out = run_scheme(
+        cfg.scheme, &initial, cfg.kind, cfg.n, cfg.d, cfg.s_tb, cfg.k_on, backend.as_mut(),
+    )?;
+    let wall = t0.elapsed().as_secs_f64();
+    let s = &out.stats;
+    println!("backend: {}", backend.name());
+    println!("wall time: {}", fmt_secs(wall));
+    println!(
+        "epochs {}  kernels {}  fused-steps {}  HtoD {}  DtoH {}  O/D {}",
+        s.epochs,
+        s.kernel_invocations,
+        s.fused_steps,
+        fmt_bytes(s.htod_bytes),
+        fmt_bytes(s.dtoh_bytes),
+        fmt_bytes(s.od_bytes),
+    );
+    let interior =
+        ((cfg.rows - 2 * cfg.kind.radius()) * (cfg.cols - 2 * cfg.kind.radius())) as u64;
+    println!("redundant compute: {:.2}%", 100.0 * s.redundancy(interior, cfg.n as u64));
+    println!("checksum: {:016x}", out.grid.checksum());
+    if args.get("no-verify").is_none() {
+        let reference = reference_run(&initial, cfg.kind, cfg.n, &NaiveEngine);
+        let diff = out.grid.max_abs_diff(&reference);
+        let ok = if cfg.backend == "host-naive" { diff == 0.0 } else { diff < 1e-4 };
+        println!(
+            "verify vs reference: max|diff| = {diff:.2e} -> {}",
+            if ok { "OK" } else { "FAIL" }
+        );
+        if !ok {
+            bail!("verification failed");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_validate() -> Result<()> {
+    // Cross-scheme equivalence on a medium grid, host-naive backend.
+    let mut failures = 0;
+    for kind in StencilKind::paper_set() {
+        let r = kind.radius();
+        let initial = Array2::synthetic(48 * r + 96, 120, 7);
+        let reference = reference_run(&initial, kind, 12, &NaiveEngine);
+        for (scheme, k_on) in [(Scheme::So2dr, 4), (Scheme::ResReu, 1), (Scheme::InCore, 4)] {
+            let mut backend = HostBackend::new(NaiveEngine);
+            let out = run_scheme(scheme, &initial, kind, 12, 3, 6, k_on, &mut backend)?;
+            let ok = out.grid.bit_eq(&reference);
+            println!(
+                "{:10} {:10} -> {}",
+                scheme.name(),
+                kind.name(),
+                if ok { "bit-exact" } else { "MISMATCH" }
+            );
+            if !ok {
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} equivalence failures");
+    }
+    println!("all schemes bit-exact vs reference");
+    Ok(())
+}
+
+fn cmd_autotune(args: &Args) -> Result<()> {
+    if args.help() {
+        println!("so2dr autotune [--kind K] [--sz N] [--n N] [--machine M]");
+        return Ok(());
+    }
+    let machine = machine_of(args)?;
+    let kind = StencilKind::parse(args.get("kind").unwrap_or("box2d1r")).context("bad kind")?;
+    let sz = args.usize_or("sz", so2dr::figures::SZ_OOC)?;
+    let n = args.usize_or("n", so2dr::figures::N_STEPS)?;
+    let cands = so2dr::params::autotune(
+        &machine,
+        kind,
+        sz,
+        n,
+        so2dr::figures::K_ON,
+        so2dr::figures::N_STRM,
+        &[4, 8, 16],
+        &[40, 80, 160, 320, 640],
+    );
+    let mut t = Table::new(vec!["d", "S_TB", "feasibility", "kernel/transfer", "makespan (s)"]);
+    for c in &cands {
+        t.row(vec![
+            c.d.to_string(),
+            c.s_tb.to_string(),
+            format!("{:?}", c.feasibility),
+            format!("{:.2}", c.ratio),
+            c.makespan.map(|m| format!("{m:.3}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    print!("{t}");
+    if let Some(best) = cands.iter().find(|c| c.feasibility == so2dr::params::Feasibility::Ok) {
+        let target = so2dr::params::select_target(
+            &machine, kind, sz, best.d, best.s_tb, so2dr::figures::K_ON,
+        );
+        println!(
+            "best: d={} S_TB={} -> predicted bottleneck: {:?} (Fig. 3a target selection)",
+            best.d, best.s_tb, target
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    if args.help() {
+        println!(
+            "so2dr simulate [--scheme S] [--kind K] [--sz N] [--d N] [--s-tb N] [--k-on N] [--n N] [--machine M]"
+        );
+        return Ok(());
+    }
+    let machine = machine_of(args)?;
+    let scheme = Scheme::parse(args.get("scheme").unwrap_or("so2dr")).context("bad scheme")?;
+    let kind = StencilKind::parse(args.get("kind").unwrap_or("box2d1r")).context("bad kind")?;
+    let sz = args.usize_or("sz", so2dr::figures::SZ_OOC)?;
+    let d = args.usize_or("d", 4)?;
+    let s_tb = args.usize_or("s-tb", 160)?;
+    let k_on = if scheme == Scheme::ResReu { 1 } else { args.usize_or("k-on", 4)? };
+    let n = args.usize_or("n", so2dr::figures::N_STEPS)?;
+    let rep = so2dr::figures::simulate_config(&machine, scheme, kind, sz, d, s_tb, k_on, n);
+    print!(
+        "{}",
+        so2dr::metrics::breakdown_table(&[(
+            format!("{} {} d={d} S_TB={s_tb}", scheme.name(), kind.name()),
+            &rep
+        )])
+    );
+    println!(
+        "peak device memory: {}{}",
+        fmt_bytes(rep.peak_dmem),
+        if rep.capacity_exceeded { "  (EXCEEDS CAPACITY)" } else { "" }
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    if args.help() {
+        println!("so2dr figures [--fig tables|3b|5|6|7|8|9|10] [--machine M]");
+        return Ok(());
+    }
+    let machine = machine_of(args)?;
+    let want = args.get("fig");
+    for (name, body) in so2dr::figures::all(&machine) {
+        let short = name.trim_start_matches("fig");
+        if let Some(w) = want {
+            if w != name && w != short {
+                continue;
+            }
+        }
+        println!("{}", emit(name, &body));
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(&argv[argv.len().min(1)..])?;
+    match cmd {
+        "info" => cmd_info(),
+        "run" => cmd_run(&args),
+        "validate" => cmd_validate(),
+        "autotune" => cmd_autotune(&args),
+        "simulate" => cmd_simulate(&args),
+        "figures" => cmd_figures(&args),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+const HELP: &str = "so2dr — SO2DR out-of-core stencil framework (paper reproduction)\n\n\
+USAGE: so2dr <info|run|validate|autotune|simulate|figures> [options]\n\n\
+  info       platform + AOT artifact inventory\n\
+  run        execute a configuration with real numerics and verify it\n\
+  validate   bit-exact equivalence of all schemes vs the reference\n\
+  autotune   rank run-time configurations (paper §IV-C + simulator)\n\
+  simulate   price one configuration on the modeled RTX 3080\n\
+  figures    regenerate the paper's tables and figures (results/)\n";

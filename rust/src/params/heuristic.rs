@@ -1,0 +1,320 @@
+//! The Section IV-C heuristic: enumerate feasible `(d, S_TB)` pairs for a
+//! stencil code + machine, then rank them with the DES.
+//!
+//! Model variables (Table I) and constraints:
+//!
+//! ```text
+//! satisfy    (D_chk + W_halo*S_TB) * N_a / BW_dmem  >  D_chk * (N_a - 1) / BW_intc
+//! subject to (D_chk + W_halo*S_TB) * N_strm * N_buf <= C_dmem
+//!            W_halo * S_TB <= D_chk
+//!            d > N_strm
+//! where      D_chk  = sz * (sz + 2r)^(dim-1) / d      (bytes via b_elem)
+//!            W_halo = 2r * (sz + 2r)^(dim-1)
+//! ```
+//!
+//! The satisfy-clause keeps the kernel-to-transfer time ratio high (the
+//! regime the paper targets); the heuristic returns feasible-but-possibly-
+//! suboptimal points, so `autotune` additionally prices each candidate on
+//! the simulator — exactly what the paper does manually in §V-B.
+
+use crate::chunking::plan::{plan_run, Scheme};
+use crate::chunking::Decomposition;
+use crate::coordinator::{HostBackend, PlanExecutor};
+use crate::gpu::cost::CostModel;
+use crate::gpu::des::simulate;
+use crate::gpu::flatten::flatten_run;
+use crate::gpu::MachineSpec;
+use crate::stencil::{NaiveEngine, StencilKind};
+
+/// Why a configuration is (in)feasible.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Feasibility {
+    Ok,
+    /// Device memory exceeded: `(required, capacity)` bytes.
+    Memory(u64, u64),
+    /// Halo working space exceeds the chunk (`W_halo*S_TB > D_chk`).
+    HaloTooLarge,
+    /// Not enough chunks to keep the streams busy (`d <= N_strm`).
+    TooFewChunks,
+}
+
+/// Paper model quantities for a square `sz x sz` f32 grid split into `d`
+/// chunks with stencil radius `r`.
+fn model_bytes(sz: usize, d: usize, r: usize) -> (u64, u64) {
+    let row = (sz + 2 * r) as u64 * 4;
+    let d_chk = (sz as u64 / d as u64) * row;
+    let w_halo = 2 * r as u64 * row;
+    (d_chk, w_halo)
+}
+
+/// Check the §IV-C constraint system. `n_buf = 2` models double buffering
+/// of each resident chunk (in/out arrays).
+pub fn check_feasible(
+    machine: &MachineSpec,
+    kind: StencilKind,
+    sz: usize,
+    d: usize,
+    s_tb: usize,
+    n_strm: usize,
+) -> Feasibility {
+    let r = kind.radius();
+    let (d_chk, w_halo) = model_bytes(sz, d, r);
+    if w_halo * s_tb as u64 > d_chk {
+        return Feasibility::HaloTooLarge;
+    }
+    if d <= n_strm {
+        return Feasibility::TooFewChunks;
+    }
+    let n_buf = 2u64;
+    let required = (d_chk + w_halo * s_tb as u64) * n_strm as u64 * n_buf;
+    if required > machine.c_dmem {
+        return Feasibility::Memory(required, machine.c_dmem);
+    }
+    Feasibility::Ok
+}
+
+/// Predicted kernel-to-transfer time ratio of one epoch under the model's
+/// satisfy-clause (larger = more kernel-bound).
+pub fn kernel_transfer_ratio(
+    machine: &MachineSpec,
+    kind: StencilKind,
+    sz: usize,
+    d: usize,
+    s_tb: usize,
+) -> f64 {
+    let cost = CostModel::new(machine.clone());
+    let r = kind.radius();
+    let chunk_rows = sz / d;
+    let area = (chunk_rows * sz) as u64;
+    // Per chunk per epoch: s_tb steps of fused kernels vs one HtoD.
+    let kernel = (s_tb as f64 / 4.0) * cost.kernel_time(kind, &[area; 4]);
+    let _ = r;
+    let transfer = cost.htod_time(area * 4);
+    kernel / transfer
+}
+
+/// A ranked run-time configuration.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub d: usize,
+    pub s_tb: usize,
+    pub feasibility: Feasibility,
+    /// Predicted kernel/transfer ratio (satisfy-clause).
+    pub ratio: f64,
+    /// DES-predicted makespan in seconds (filled by [`autotune`]).
+    pub makespan: Option<f64>,
+}
+
+/// Enumerate the paper's candidate grid (`d in {4, 8}` etc. by default,
+/// or custom sets) and tag feasibility.
+pub fn candidates(
+    machine: &MachineSpec,
+    kind: StencilKind,
+    sz: usize,
+    n_strm: usize,
+    ds: &[usize],
+    s_tbs: &[usize],
+) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for &d in ds {
+        for &s_tb in s_tbs {
+            let feasibility = check_feasible(machine, kind, sz, d, s_tb, n_strm);
+            let ratio = kernel_transfer_ratio(machine, kind, sz, d, s_tb);
+            out.push(Candidate { d, s_tb, feasibility, ratio, makespan: None });
+        }
+    }
+    out
+}
+
+/// DES-predicted makespan of one configuration at paper scale.
+pub fn predict(
+    machine: &MachineSpec,
+    kind: StencilKind,
+    scheme: Scheme,
+    sz: usize,
+    d: usize,
+    s_tb: usize,
+    k_on: usize,
+    n: usize,
+    n_strm: usize,
+) -> f64 {
+    let dc = Decomposition::new(sz, sz, d, kind.radius());
+    let plans = plan_run(scheme, &dc, n, s_tb, k_on);
+    let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+    let ops = flatten_run(&plans, &dc, kind, n_strm, buf_rows);
+    let cost = CostModel::new(machine.clone());
+    simulate(&ops, &cost, n_strm).makespan
+}
+
+/// Rank feasible candidates by simulated makespan (best first); returns
+/// all candidates with `makespan` filled for the feasible ones.
+pub fn autotune(
+    machine: &MachineSpec,
+    kind: StencilKind,
+    sz: usize,
+    n: usize,
+    k_on: usize,
+    n_strm: usize,
+    ds: &[usize],
+    s_tbs: &[usize],
+) -> Vec<Candidate> {
+    let mut cands = candidates(machine, kind, sz, n_strm, ds, s_tbs);
+    for c in &mut cands {
+        if c.feasibility == Feasibility::Ok {
+            c.makespan =
+                Some(predict(machine, kind, Scheme::So2dr, sz, c.d, c.s_tb, k_on, n, n_strm));
+        }
+    }
+    cands.sort_by(|a, b| {
+        let ka = a.makespan.unwrap_or(f64::INFINITY);
+        let kb = b.makespan.unwrap_or(f64::INFINITY);
+        ka.partial_cmp(&kb).unwrap()
+    });
+    cands
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SZ: usize = 38400;
+
+    #[test]
+    fn paper_configs_are_feasible() {
+        // §V-B selected configs.
+        let m = MachineSpec::rtx3080();
+        for (kind, d, s_tb) in [
+            (StencilKind::Box { radius: 1 }, 4, 160),
+            (StencilKind::Box { radius: 2 }, 4, 160),
+            (StencilKind::Box { radius: 3 }, 4, 80),
+            (StencilKind::Box { radius: 4 }, 4, 40),
+            (StencilKind::Gradient2d, 4, 160),
+        ] {
+            assert_eq!(check_feasible(&m, kind, SZ, d, s_tb, 3), Feasibility::Ok, "{kind} {d} {s_tb}");
+        }
+    }
+
+    #[test]
+    fn infeasible_cases_detected() {
+        let m = MachineSpec::rtx3080();
+        // Too few chunks for the streams.
+        assert_eq!(
+            check_feasible(&m, StencilKind::Box { radius: 1 }, SZ, 2, 40, 3),
+            Feasibility::TooFewChunks
+        );
+        // Huge skirt: W_halo * S_TB > D_chk (d=8 chunk=4800 rows; r=4:
+        // skirt rows = 2*4*S_TB > 4800 at S_TB=640).
+        assert_eq!(
+            check_feasible(&m, StencilKind::Box { radius: 4 }, SZ, 8, 640, 3),
+            Feasibility::HaloTooLarge
+        );
+        // Memory: d=4 at r=4, S_TB=320 -> resident > 10 GB / (3 streams*2).
+        match check_feasible(&m, StencilKind::Box { radius: 4 }, SZ, 4, 320, 3) {
+            Feasibility::Memory(req, cap) => assert!(req > cap),
+            other => panic!("expected Memory, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ratio_grows_with_s_tb() {
+        let m = MachineSpec::rtx3080();
+        let k = StencilKind::Box { radius: 1 };
+        let r40 = kernel_transfer_ratio(&m, k, SZ, 4, 40);
+        let r160 = kernel_transfer_ratio(&m, k, SZ, 4, 160);
+        assert!(r160 > 2.0 * r40);
+    }
+
+    #[test]
+    fn autotune_prefers_larger_s_tb_for_box1r() {
+        // §V-B: d=4, S_TB=160 wins for box2d1r among the paper's grid.
+        let m = MachineSpec::rtx3080();
+        let cands = autotune(
+            &m,
+            StencilKind::Box { radius: 1 },
+            SZ,
+            640,
+            4,
+            3,
+            &[4, 8],
+            &[40, 80, 160, 320, 640],
+        );
+        let best = &cands[0];
+        assert_eq!(best.feasibility, Feasibility::Ok);
+        assert_eq!(best.d, 4, "paper: small d favorable");
+        assert!(best.s_tb >= 160, "paper: large S_TB favorable, got {}", best.s_tb);
+    }
+}
+
+/// Which resource the model predicts as the bottleneck for a
+/// configuration — the paper's Fig. 3a decision, automated (the authors
+/// list this as future work in §VII).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizationTarget {
+    /// Kernel execution dominates: invest in on-chip reuse (larger k_on).
+    KernelExecution,
+    /// CPU-GPU transfer dominates: invest in transfer reduction
+    /// (region sharing, larger S_TB, compression).
+    DataTransfer,
+}
+
+/// Select the optimization target from the §III model: compare the
+/// per-epoch kernel time against the per-epoch transfer time.
+pub fn select_target(
+    machine: &MachineSpec,
+    kind: StencilKind,
+    sz: usize,
+    d: usize,
+    s_tb: usize,
+    k_on: usize,
+) -> OptimizationTarget {
+    let cost = CostModel::new(machine.clone());
+    let chunk_rows = sz / d;
+    let area = (chunk_rows * sz) as u64;
+    let fused = k_on.max(1);
+    let kernels_per_epoch = (s_tb + fused - 1) / fused;
+    let kernel = kernels_per_epoch as f64 * cost.kernel_time(kind, &vec![area; fused]);
+    let transfer = cost.htod_time(area * 4) + cost.dtoh_time(area * 4);
+    if kernel > transfer {
+        OptimizationTarget::KernelExecution
+    } else {
+        OptimizationTarget::DataTransfer
+    }
+}
+
+#[cfg(test)]
+mod target_tests {
+    use super::*;
+
+    /// Fig. 3a/3b: single-step kernels with S_TB=40 are already
+    /// kernel-bound; tiny S_TB with fused kernels is transfer-bound.
+    #[test]
+    fn target_crossover_matches_motivation() {
+        let m = MachineSpec::rtx3080();
+        let k = StencilKind::Box { radius: 1 };
+        assert_eq!(
+            select_target(&m, k, 38400, 8, 40, 1),
+            OptimizationTarget::KernelExecution,
+            "paper Fig 3b: ResReu at S_TB=40 is kernel-bound"
+        );
+        assert_eq!(
+            select_target(&m, k, 38400, 4, 4, 4),
+            OptimizationTarget::DataTransfer,
+            "few fused TB steps: transfers dominate"
+        );
+    }
+
+    /// With SO2DR's fused kernels the boundary shifts: more TB steps are
+    /// needed before kernels dominate — exactly why the paper can afford
+    /// large S_TB.
+    #[test]
+    fn fused_kernels_shift_the_boundary() {
+        let m = MachineSpec::rtx3080();
+        let k = StencilKind::Box { radius: 1 };
+        let first_kernel_bound = |k_on: usize| {
+            (1..=640usize)
+                .find(|&s| select_target(&m, k, 38400, 4, s, k_on) == OptimizationTarget::KernelExecution)
+                .unwrap_or(usize::MAX)
+        };
+        assert!(first_kernel_bound(4) > first_kernel_bound(1));
+    }
+}

@@ -1,0 +1,5 @@
+//! Run-time parameter selection (paper §IV-C).
+
+pub mod heuristic;
+
+pub use heuristic::{autotune, candidates, check_feasible, predict, select_target, Candidate, Feasibility, OptimizationTarget};

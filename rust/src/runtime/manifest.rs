@@ -1,0 +1,176 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (writer)
+//! and the PJRT runtime (reader).
+//!
+//! Format (one artifact per line after the header):
+//!
+//! ```text
+//! so2dr-artifact-manifest v1
+//! name=<id> kind=<kind> k=<k> rows=<H> cols=<W> radius=<r> file=<f>
+//! ```
+
+use crate::stencil::StencilKind;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled chunk-program variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: StencilKind,
+    /// Fused steps per invocation.
+    pub k: usize,
+    /// Chunk-buffer shape the executable was compiled for.
+    pub rows: usize,
+    pub cols: usize,
+    pub radius: usize,
+    /// HLO text file, relative to the manifest's directory.
+    pub file: String,
+}
+
+/// Parsed manifest plus its base directory.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl ArtifactManifest {
+    /// Parse `dir/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        match lines.next() {
+            Some("so2dr-artifact-manifest v1") => {}
+            Some(h) => bail!("unsupported manifest header {h:?}"),
+            None => bail!("empty manifest"),
+        }
+        let mut entries = Vec::new();
+        for (ln, line) in lines.enumerate() {
+            let mut name = None;
+            let mut kind = None;
+            let mut k = None;
+            let mut rows = None;
+            let mut cols = None;
+            let mut radius = None;
+            let mut file = None;
+            for kv in line.split_whitespace() {
+                let (key, value) = kv
+                    .split_once('=')
+                    .with_context(|| format!("line {}: bad field {kv:?}", ln + 2))?;
+                match key {
+                    "name" => name = Some(value.to_string()),
+                    "kind" => {
+                        kind = Some(
+                            StencilKind::parse(value)
+                                .with_context(|| format!("unknown kind {value:?}"))?,
+                        )
+                    }
+                    "k" => k = Some(value.parse::<usize>()?),
+                    "rows" => rows = Some(value.parse::<usize>()?),
+                    "cols" => cols = Some(value.parse::<usize>()?),
+                    "radius" => radius = Some(value.parse::<usize>()?),
+                    "file" => file = Some(value.to_string()),
+                    other => bail!("line {}: unknown key {other:?}", ln + 2),
+                }
+            }
+            let entry = ArtifactEntry {
+                name: name.context("missing name")?,
+                kind: kind.context("missing kind")?,
+                k: k.context("missing k")?,
+                rows: rows.context("missing rows")?,
+                cols: cols.context("missing cols")?,
+                radius: radius.context("missing radius")?,
+                file: file.context("missing file")?,
+            };
+            if entry.kind.radius() != entry.radius {
+                bail!("entry {}: radius {} inconsistent with kind", entry.name, entry.radius);
+            }
+            entries.push(entry);
+        }
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Find the variant for a (kind, fused-steps, buffer-shape) request.
+    pub fn find(&self, kind: StencilKind, k: usize, rows: usize, cols: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.k == k && e.rows == rows && e.cols == cols)
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// All distinct kinds present.
+    pub fn kinds(&self) -> Vec<StencilKind> {
+        let mut v: Vec<StencilKind> = self.entries.iter().map(|e| e.kind).collect();
+        v.dedup();
+        v.sort_by_key(|k| k.name());
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "so2dr-artifact-manifest v1\n\
+        name=box2d1r_k4_144x512 kind=box2d1r k=4 rows=144 cols=512 radius=1 file=a.hlo.txt\n\
+        name=gradient2d_k1_137x512 kind=gradient2d k=1 rows=137 cols=512 radius=1 file=b.hlo.txt\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.find(StencilKind::Box { radius: 1 }, 4, 144, 512).unwrap();
+        assert_eq!(e.name, "box2d1r_k4_144x512");
+        assert_eq!(m.path_of(e), Path::new("/tmp/a/a.hlo.txt"));
+        assert!(m.find(StencilKind::Box { radius: 2 }, 4, 144, 512).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(ArtifactManifest::parse("nope v9\n", Path::new(".")).is_err());
+        assert!(ArtifactManifest::parse("", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_radius() {
+        let bad = "so2dr-artifact-manifest v1\n\
+            name=x kind=box2d2r k=1 rows=10 cols=10 radius=1 file=x.hlo.txt\n";
+        assert!(ArtifactManifest::parse(bad, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_field() {
+        let bad = "so2dr-artifact-manifest v1\nname=x kind=box2d1r k=1 rows=10 cols=10 radius=1\n";
+        assert!(ArtifactManifest::parse(bad, Path::new(".")).is_err());
+    }
+}
+
+#[cfg(test)]
+mod kinds_tests {
+    use super::*;
+
+    #[test]
+    fn kinds_are_deduped_and_sorted() {
+        let text = "so2dr-artifact-manifest v1\n\
+            name=a kind=box2d1r k=4 rows=10 cols=10 radius=1 file=a.hlo.txt\n\
+            name=b kind=box2d1r k=1 rows=10 cols=10 radius=1 file=b.hlo.txt\n\
+            name=c kind=gradient2d k=1 rows=10 cols=10 radius=1 file=c.hlo.txt\n";
+        let m = ArtifactManifest::parse(text, Path::new(".")).unwrap();
+        let kinds = m.kinds();
+        assert_eq!(kinds.len(), 2);
+        assert_eq!(kinds[0].name(), "box2d1r");
+        assert_eq!(kinds[1].name(), "gradient2d");
+    }
+}

@@ -1,0 +1,16 @@
+//! Runtime: executes AOT-compiled chunk programs via PJRT (the `xla`
+//! crate). Build artifacts with `make artifacts`; at run time the Rust
+//! binary is self-contained.
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{ArtifactEntry, ArtifactManifest};
+pub use pjrt::PjrtBackend;
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$SO2DR_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("SO2DR_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

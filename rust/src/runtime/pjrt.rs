@@ -1,0 +1,120 @@
+//! PJRT runtime: load AOT-compiled HLO-text chunk programs and execute
+//! them from the Rust hot path. Python is never involved at run time.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled lazily per artifact variant and cached.
+
+use crate::coordinator::backend::KernelBackend;
+use crate::core::{Array2, Rect};
+use crate::runtime::manifest::{ArtifactEntry, ArtifactManifest};
+use crate::stencil::StencilKind;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A PJRT-backed kernel backend.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Number of kernel executions performed (for reports).
+    pub executions: u64,
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client and load the artifact manifest from `dir`.
+    pub fn from_artifacts(dir: &Path) -> Result<Self> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest, executables: HashMap::new(), executions: 0 })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn get_or_compile(&mut self, entry: &ArtifactEntry) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(&entry.name) {
+            let path = self.manifest.path_of(entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {}", entry.name))?;
+            self.executables.insert(entry.name.clone(), exe);
+        }
+        Ok(&self.executables[&entry.name])
+    }
+
+    /// Validate that the window sequence matches the executable contract:
+    /// fixed interior columns, row windows free.
+    fn windows_to_literal(windows: &[Rect], radius: usize, cols: usize) -> Result<xla::Literal> {
+        let mut flat = Vec::with_capacity(windows.len() * 2);
+        for w in windows {
+            if w.c0 != radius || w.c1 != cols - radius {
+                bail!(
+                    "column window [{}, {}) violates the AOT contract [{}, {})",
+                    w.c0,
+                    w.c1,
+                    radius,
+                    cols - radius
+                );
+            }
+            flat.push(w.r0 as i32);
+            flat.push(w.r1 as i32);
+        }
+        Ok(xla::Literal::vec1(&flat).reshape(&[windows.len() as i64, 2])?)
+    }
+}
+
+impl KernelBackend for PjrtBackend {
+    fn run_kernel(
+        &mut self,
+        kind: StencilKind,
+        cur: &mut Array2,
+        _scratch: &mut Array2,
+        windows: &[Rect],
+    ) -> Result<()> {
+        let (rows, cols) = (cur.rows(), cur.cols());
+        let k = windows.len();
+        let entry = self
+            .manifest
+            .find(kind, k, rows, cols)
+            .with_context(|| {
+                format!(
+                    "no artifact for kind={} k={k} rows={rows} cols={cols}; \
+                     re-run `make artifacts` with this variant (see python/compile/aot.py)",
+                    kind.name()
+                )
+            })?
+            .clone();
+        let radius = entry.radius;
+        let win = Self::windows_to_literal(windows, radius, cols)?;
+        let buf = xla::Literal::vec1(cur.as_slice()).reshape(&[rows as i64, cols as i64])?;
+        let exe = self.get_or_compile(&entry)?;
+        let result = exe.execute::<xla::Literal>(&[buf, win])?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        let values = out.to_vec::<f32>()?;
+        if values.len() != cur.len() {
+            bail!("result size {} != buffer size {}", values.len(), cur.len());
+        }
+        cur.as_mut_slice().copy_from_slice(&values);
+        self.executions += 1;
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt/{}", self.client.platform_name())
+    }
+}

@@ -1,0 +1,181 @@
+//! Stencil kinds and their coefficients (Table III of the paper).
+
+/// Damping coefficient of the gradient2d stencil (see [`StencilKind::Gradient2d`]).
+pub const GRADIENT_ALPHA: f64 = 0.05;
+
+/// One of the five benchmark stencils.
+///
+/// * `Box { radius }` — box-type stencil: a weighted average over the
+///   `(2r+1) x (2r+1)` neighborhood. The weight matrix is *separable*
+///   (`w(di,dj) = u(di) * v(dj)`) and mildly asymmetric so that indexing
+///   bugs (e.g. transposed offsets) change results. Arithmetic intensity:
+///   `2(2r+1)^2 - 1` FLOPS/element, matching Table III.
+/// * `Gradient2d` — 5-point nonlinear stencil
+///   `out = c + alpha * lap / sqrt(1 + |grad|^2)` (gradient-weighted
+///   diffusion), 19 FLOPS/element as in Table III.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StencilKind {
+    Box { radius: usize },
+    Gradient2d,
+}
+
+impl StencilKind {
+    /// The five benchmarks of Table III, in paper order.
+    pub fn paper_set() -> Vec<StencilKind> {
+        vec![
+            StencilKind::Box { radius: 1 },
+            StencilKind::Box { radius: 2 },
+            StencilKind::Box { radius: 3 },
+            StencilKind::Box { radius: 4 },
+            StencilKind::Gradient2d,
+        ]
+    }
+
+    /// Stencil radius `r` (halo width per time step).
+    pub fn radius(&self) -> usize {
+        match self {
+            StencilKind::Box { radius } => *radius,
+            StencilKind::Gradient2d => 1,
+        }
+    }
+
+    /// Number of points read per output element.
+    pub fn points(&self) -> usize {
+        match self {
+            StencilKind::Box { radius } => (2 * radius + 1) * (2 * radius + 1),
+            StencilKind::Gradient2d => 5,
+        }
+    }
+
+    /// FLOPS per element per time step (Table III).
+    pub fn flops_per_elem(&self) -> f64 {
+        match self {
+            StencilKind::Box { radius } => {
+                let p = (2 * radius + 1) * (2 * radius + 1);
+                (2 * p - 1) as f64
+            }
+            StencilKind::Gradient2d => 19.0,
+        }
+    }
+
+    /// Benchmark name as used in the paper's figures.
+    pub fn name(&self) -> String {
+        match self {
+            StencilKind::Box { radius } => format!("box2d{radius}r"),
+            StencilKind::Gradient2d => "gradient2d".to_string(),
+        }
+    }
+
+    /// Parse a benchmark name (`box2d3r`, `gradient2d`).
+    pub fn parse(s: &str) -> Option<StencilKind> {
+        if s == "gradient2d" {
+            return Some(StencilKind::Gradient2d);
+        }
+        let rest = s.strip_prefix("box2d")?.strip_suffix('r')?;
+        let radius: usize = rest.parse().ok()?;
+        if (1..=8).contains(&radius) {
+            Some(StencilKind::Box { radius })
+        } else {
+            None
+        }
+    }
+
+    /// Row-factor weights `u(di)`, `di = -r..=r`, as f32 (computed in f64).
+    ///
+    /// `u(di) = (1 + 0.1*di/(r+1)) / (2r+1)`; the linear terms cancel so
+    /// `sum(u) * (2r+1) = 2r+1`, i.e. `sum(u) == 1` in exact arithmetic.
+    /// The same formula is implemented in `python/compile/kernels/ref.py`
+    /// and must not be changed independently.
+    pub fn box_u(radius: usize) -> Vec<f32> {
+        let n = (2 * radius + 1) as f64;
+        (-(radius as i64)..=radius as i64)
+            .map(|di| ((1.0 + 0.1 * di as f64 / (radius as f64 + 1.0)) / n) as f32)
+            .collect()
+    }
+
+    /// Column-factor weights `v(dj)` (slope 0.05, distinct from `u`).
+    pub fn box_v(radius: usize) -> Vec<f32> {
+        let n = (2 * radius + 1) as f64;
+        (-(radius as i64)..=radius as i64)
+            .map(|dj| ((1.0 + 0.05 * dj as f64 / (radius as f64 + 1.0)) / n) as f32)
+            .collect()
+    }
+
+    /// Full `(2r+1)^2` weight table, row-major over (di, dj):
+    /// `w(di,dj) = u(di) * v(dj)` (computed in f32, same as the engines).
+    pub fn box_weights(radius: usize) -> Vec<f32> {
+        let u = Self::box_u(radius);
+        let v = Self::box_v(radius);
+        let mut w = Vec::with_capacity(u.len() * v.len());
+        for ui in &u {
+            for vj in &v {
+                w.push(ui * vj);
+            }
+        }
+        w
+    }
+}
+
+impl std::fmt::Display for StencilKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_set_matches_table_iii() {
+        let set = StencilKind::paper_set();
+        assert_eq!(set.len(), 5);
+        assert_eq!(set[0].name(), "box2d1r");
+        assert_eq!(set[4].name(), "gradient2d");
+        // Arithmetic intensities from Table III.
+        assert_eq!(set[0].flops_per_elem(), 17.0); // 2*9-1
+        assert_eq!(set[1].flops_per_elem(), 49.0); // 2*25-1
+        assert_eq!(set[2].flops_per_elem(), 97.0); // 2*49-1
+        assert_eq!(set[3].flops_per_elem(), 161.0); // 2*81-1
+        assert_eq!(set[4].flops_per_elem(), 19.0);
+    }
+
+    #[test]
+    fn radii_and_points() {
+        assert_eq!(StencilKind::Box { radius: 3 }.radius(), 3);
+        assert_eq!(StencilKind::Box { radius: 3 }.points(), 49);
+        assert_eq!(StencilKind::Gradient2d.radius(), 1);
+        assert_eq!(StencilKind::Gradient2d.points(), 5);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in StencilKind::paper_set() {
+            assert_eq!(StencilKind::parse(&k.name()), Some(k));
+        }
+        assert_eq!(StencilKind::parse("box2d9r"), None);
+        assert_eq!(StencilKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn box_weights_normalized_and_asymmetric() {
+        for r in 1..=4 {
+            let w = StencilKind::box_weights(r);
+            assert_eq!(w.len(), (2 * r + 1) * (2 * r + 1));
+            let sum: f64 = w.iter().map(|&x| x as f64).sum();
+            assert!((sum - 1.0).abs() < 1e-6, "r={r} sum={sum}");
+            // Asymmetry: first != last (catches transposed/reflected offsets).
+            assert_ne!(w.first(), w.last());
+        }
+    }
+
+    #[test]
+    fn separable_factors_normalized() {
+        for r in 1..=4 {
+            let su: f64 = StencilKind::box_u(r).iter().map(|&x| x as f64).sum();
+            let sv: f64 = StencilKind::box_v(r).iter().map(|&x| x as f64).sum();
+            assert!((su - 1.0).abs() < 1e-6);
+            assert!((sv - 1.0).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Stencil definitions and host compute engines.
+//!
+//! The five paper benchmarks (Table III): `box2d{1,2,3,4}r` — box-type
+//! stencils of radius 1..4 with `(2x+1)^2` points — and `gradient2d`, a
+//! 5-point nonlinear (gradient-weighted diffusion) stencil with
+//! 19 FLOPS/element.
+//!
+//! Two host engines implement the same math:
+//! - [`NaiveEngine`] — direct loops; the golden reference all other
+//!   backends (optimized host, PJRT/Pallas artifacts, schedulers) are
+//!   validated against.
+//! - [`OptimizedEngine`] — the performance-optimized hot path: separable
+//!   two-pass box convolution plus multithreaded row bands.
+
+pub mod engine;
+pub mod kind;
+pub mod naive;
+pub mod optimized;
+
+pub use engine::{apply_step, multi_step, StencilEngine};
+pub use kind::StencilKind;
+pub use naive::NaiveEngine;
+pub use optimized::OptimizedEngine;

@@ -1,0 +1,174 @@
+//! Naive direct-loop engine — the golden numerical reference.
+//!
+//! Every other backend (optimized host engine, PJRT/Pallas artifacts, and
+//! the out-of-core schedulers) is validated against this implementation.
+//! Accumulation order is fixed (di-major, then dj) and mirrored by the
+//! pure-jnp oracle in `python/compile/kernels/ref.py`.
+
+use crate::core::{Array2, Rect};
+use crate::stencil::engine::StencilEngine;
+use crate::stencil::kind::{StencilKind, GRADIENT_ALPHA};
+
+/// Direct-loop reference engine.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NaiveEngine;
+
+impl NaiveEngine {
+    fn box_window(&self, radius: usize, input: &Array2, out: &mut Array2, w: Rect) {
+        let weights = StencilKind::box_weights(radius);
+        let n = 2 * radius + 1;
+        for i in w.r0..w.r1 {
+            for j in w.c0..w.c1 {
+                let mut acc = 0f32;
+                for di in 0..n {
+                    let row = input.row(i + di - radius);
+                    let wrow = &weights[di * n..(di + 1) * n];
+                    for dj in 0..n {
+                        acc += wrow[dj] * row[j + dj - radius];
+                    }
+                }
+                out[(i, j)] = acc;
+            }
+        }
+    }
+
+    fn gradient_window(&self, input: &Array2, out: &mut Array2, w: Rect) {
+        let alpha = GRADIENT_ALPHA as f32;
+        for i in w.r0..w.r1 {
+            let up = input.row(i - 1);
+            let mid = input.row(i);
+            let dn = input.row(i + 1);
+            let orow = out.row_mut(i);
+            for j in w.c0..w.c1 {
+                let n = up[j];
+                let s = dn[j];
+                let wv = mid[j - 1];
+                let e = mid[j + 1];
+                let c = mid[j];
+                // Fixed association order (mirrored in ref.py):
+                // lap = ((n + s) + e) + w - 4c
+                let lap = ((n + s) + e) + wv - 4.0 * c;
+                let gx = e - wv;
+                let gy = s - n;
+                let g2 = gx * gx + gy * gy;
+                let coef = alpha / (1.0 + g2).sqrt();
+                orow[j] = c + coef * lap;
+            }
+        }
+    }
+}
+
+impl StencilEngine for NaiveEngine {
+    fn compute_window(&self, kind: StencilKind, input: &Array2, out: &mut Array2, w: Rect) {
+        if w.is_empty() {
+            return;
+        }
+        debug_assert!(w.r0 >= kind.radius() && w.r1 + kind.radius() <= input.rows());
+        debug_assert!(w.c0 >= kind.radius() && w.c1 + kind.radius() <= input.cols());
+        match kind {
+            StencilKind::Box { radius } => self.box_window(radius, input, out, w),
+            StencilKind::Gradient2d => self.gradient_window(input, out, w),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::engine::apply_step;
+
+    /// A constant field is a fixed point of the (normalized) box stencil.
+    #[test]
+    fn box_preserves_constant_field() {
+        for radius in 1..=4 {
+            let k = StencilKind::Box { radius };
+            let input = Array2::full(16, 16, 3.5);
+            let mut out = Array2::zeros(16, 16);
+            apply_step(&NaiveEngine, k, &input, &mut out, Rect::new(0, 16, 0, 16));
+            let diff = input.max_abs_diff(&out);
+            assert!(diff < 1e-5, "r={radius} diff={diff}");
+        }
+    }
+
+    /// The gradient stencil leaves a constant field exactly unchanged
+    /// (laplacian is 0).
+    #[test]
+    fn gradient_preserves_constant_field() {
+        let input = Array2::full(12, 12, -1.25);
+        let mut out = Array2::zeros(12, 12);
+        apply_step(&NaiveEngine, StencilKind::Gradient2d, &input, &mut out, Rect::new(0, 12, 0, 12));
+        assert!(input.bit_eq(&out));
+    }
+
+    /// Box smoothing must strictly reduce the range of a noisy field
+    /// (interior cells).
+    #[test]
+    fn box_smooths_noise() {
+        let k = StencilKind::Box { radius: 2 };
+        let input = Array2::random(32, 32, 5, -1.0, 1.0);
+        let mut out = Array2::zeros(32, 32);
+        apply_step(&NaiveEngine, k, &input, &mut out, Rect::new(0, 32, 0, 32));
+        let interior = Rect::new(2, 30, 2, 30);
+        let mut in_max = 0f32;
+        let mut out_max = 0f32;
+        for r in interior.r0..interior.r1 {
+            for c in interior.c0..interior.c1 {
+                in_max = in_max.max(input[(r, c)].abs());
+                out_max = out_max.max(out[(r, c)].abs());
+            }
+        }
+        assert!(out_max < in_max * 0.9, "out {out_max} vs in {in_max}");
+    }
+
+    /// A single spike spreads exactly to radius r in one step.
+    #[test]
+    fn spike_spreads_to_radius() {
+        for radius in 1..=3 {
+            let k = StencilKind::Box { radius };
+            let mut input = Array2::zeros(17, 17);
+            input[(8, 8)] = 1.0;
+            let mut out = Array2::zeros(17, 17);
+            apply_step(&NaiveEngine, k, &input, &mut out, Rect::new(0, 17, 0, 17));
+            assert!(out[(8, 8 + radius)] > 0.0);
+            assert_eq!(out[(8, 8 + radius + 1)], 0.0);
+            assert!(out[(8 - radius, 8)] > 0.0);
+            assert_eq!(out[(8 - radius - 1, 8)], 0.0);
+        }
+    }
+
+    /// Asymmetric weights: flipping the input flips the output
+    /// differently (guards against accidentally symmetric kernels).
+    #[test]
+    fn box_is_asymmetric() {
+        let k = StencilKind::Box { radius: 1 };
+        let mut input = Array2::zeros(8, 8);
+        input[(4, 3)] = 1.0;
+        let mut out = Array2::zeros(8, 8);
+        apply_step(&NaiveEngine, k, &input, &mut out, Rect::new(0, 8, 0, 8));
+        assert_ne!(out[(4, 2)], out[(4, 4)], "v-weights must be asymmetric");
+        assert_ne!(out[(3, 3)], out[(5, 3)], "u-weights must be asymmetric");
+    }
+
+    /// Gradient stencil damps a noisy field (diffusion) and is bounded.
+    #[test]
+    fn gradient_damps_noise() {
+        let mut cur = Array2::random(24, 24, 9, -1.0, 1.0);
+        let mut nxt = Array2::zeros(24, 24);
+        let mut range0 = 0f32;
+        let interior = Rect::new(1, 23, 1, 23);
+        for r in interior.r0..interior.r1 {
+            for c in interior.c0..interior.c1 {
+                range0 = range0.max(cur[(r, c)].abs());
+            }
+        }
+        for _ in 0..20 {
+            apply_step(&NaiveEngine, StencilKind::Gradient2d, &cur, &mut nxt, interior);
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        assert!(cur.max_abs() <= range0 * 1.01 + 1e-6);
+    }
+}

@@ -1,0 +1,118 @@
+//! bf16 truncation codec: fp32 → bfloat16 with round-to-nearest-even,
+//! halving transfer payloads at a bounded relative error (~2^-8).
+
+use crate::core::Array2;
+
+/// Round-to-nearest-even fp32 → bf16 (upper 16 bits).
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Quiet NaN, preserved sign.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // RNE: add half ULP of the truncated mantissa plus the sticky lsb.
+    let rounding_bias = 0x7FFF + ((bits >> 16) & 1);
+    ((bits + rounding_bias) >> 16) as u16
+}
+
+/// bf16 → fp32 (exact).
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Stateless codec with byte accounting.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Bf16Codec;
+
+impl Bf16Codec {
+    /// Compressed size of `n` f32 elements.
+    pub fn compressed_bytes(n: usize) -> u64 {
+        (n * 2) as u64
+    }
+
+    /// Compression ratio vs raw fp32.
+    pub fn ratio() -> f64 {
+        2.0
+    }
+}
+
+/// Compress a row slab into bf16 words.
+pub fn compress_rows(data: &[f32]) -> Vec<u16> {
+    data.iter().map(|&x| f32_to_bf16(x)).collect()
+}
+
+/// Decompress bf16 words back to f32.
+pub fn decompress_rows(words: &[u16]) -> Vec<f32> {
+    words.iter().map(|&h| bf16_to_f32(h)).collect()
+}
+
+/// Max absolute round-trip error over an array (for accuracy reports).
+pub fn max_roundtrip_error(a: &Array2) -> f32 {
+    a.as_slice()
+        .iter()
+        .map(|&x| (bf16_to_f32(f32_to_bf16(x)) - x).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    #[test]
+    fn exact_for_bf16_representable() {
+        for v in [0.0f32, 1.0, -2.0, 0.5, 256.0, -0.25] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(v)), v);
+        }
+    }
+
+    #[test]
+    fn rne_rounding() {
+        // Exactly halfway between bf16 0x3F80 (even) and 0x3F81: ties to
+        // even keeps 0x3F80.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80, "ties to even");
+        // Just above halfway rounds up.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8001)), 0x3F81);
+        // Halfway with an odd lower bit rounds up to the even neighbor.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82);
+        // Below halfway truncates.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_7FFF)), 0x3F80);
+    }
+
+    #[test]
+    fn bounded_relative_error() {
+        let mut rng = XorShift64::new(5);
+        for _ in 0..10_000 {
+            let v = (rng.next_f32() - 0.5) * 2000.0;
+            let r = bf16_to_f32(f32_to_bf16(v));
+            let rel = ((r - v) / v.abs().max(1e-20)).abs();
+            assert!(rel <= 1.0 / 256.0 + 1e-6, "v={v} r={r} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn nan_and_inf_survive() {
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn slab_roundtrip_and_accounting() {
+        let a = Array2::synthetic(32, 32, 9);
+        let packed = compress_rows(a.as_slice());
+        assert_eq!(packed.len(), 1024);
+        assert_eq!(Bf16Codec::compressed_bytes(1024), 2048);
+        let back = decompress_rows(&packed);
+        let max_err = a
+            .as_slice()
+            .iter()
+            .zip(&back)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err <= max_roundtrip_error(&a) + 1e-9);
+        assert!(max_err < 0.01);
+    }
+}

@@ -1,0 +1,12 @@
+//! Transfer compression substrate (related work: BurstZ/BurstZ+, Sun et
+//! al. — the paper notes compression "can be leveraged in combination
+//! with ours" to further cut interconnect traffic).
+//!
+//! Implements a real bf16 truncation codec (fp32 → upper 16 bits, round
+//! to nearest even) halving every HtoD/DtoH payload, plus a machine-model
+//! hook so the DES can price compressed transfers — a what-if study the
+//! combined system would enable.
+
+pub mod bf16;
+
+pub use bf16::{compress_rows, decompress_rows, max_roundtrip_error, Bf16Codec};

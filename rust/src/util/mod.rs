@@ -1,0 +1,64 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is offline with a minimal vendored crate set, so the
+//! pieces a project would normally pull from crates.io (PRNG, property-test
+//! harness, thread pool, table printer, CLI parsing) are implemented here.
+
+pub mod prng;
+pub mod table;
+pub mod testkit;
+pub mod threads;
+pub mod timer;
+
+pub use prng::XorShift64;
+pub use table::Table;
+pub use timer::Stopwatch;
+
+/// Format a byte count using binary units (KiB/MiB/GiB).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a duration given in seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(11 * 1024 * 1024 * 1024), "11.00 GiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+        assert_eq!(fmt_secs(0.0025), "2.500 ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.500 us");
+        assert_eq!(fmt_secs(2.5e-9), "2.5 ns");
+    }
+}

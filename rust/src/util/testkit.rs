@@ -1,0 +1,115 @@
+//! Minimal property-based testing harness (proptest is unavailable offline).
+//!
+//! Provides `forall`: run a property over `n` pseudo-random cases drawn from
+//! a generator; on failure, greedily shrink the failing case with a
+//! user-provided shrinker and report the smallest counterexample found.
+
+use super::prng::XorShift64;
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult {
+    Ok { cases: usize },
+    Failed { case: String, shrunk: String, seed: u64 },
+}
+
+/// Run `prop` over `cases` inputs drawn from `gen`. If a case fails, shrink
+/// it with `shrink` (which proposes smaller candidates) until no proposed
+/// candidate still fails, then panic with a readable report.
+///
+/// `T: Debug` is used for the report; generation is deterministic from
+/// `seed` so failures are reproducible.
+pub fn forall<T, G, S, P>(seed: u64, cases: usize, mut gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut XorShift64) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = XorShift64::new(seed);
+    for i in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first failing candidate.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut budget = 200usize;
+            'outer: while budget > 0 {
+                for cand in shrink(&best) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={seed}, case {i}/{cases})\n  original: {input:?}\n  \
+                 shrunk:   {best:?}\n  error:    {best_msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: shrinker for `usize`-like scalar tuples — halve each field
+/// toward a floor. Returns candidates with one field shrunk at a time.
+pub fn shrink_usize_toward(v: usize, floor: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if v > floor {
+        out.push(floor);
+        let mid = floor + (v - floor) / 2;
+        if mid != floor && mid != v {
+            out.push(mid);
+        }
+        if v - 1 != mid && v - 1 != floor {
+            out.push(v - 1);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall(
+            1,
+            200,
+            |rng| rng.range_usize(0, 1000),
+            |_| vec![],
+            |&x| if x < 1000 { Ok(()) } else { Err("oob".into()) },
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                2,
+                500,
+                |rng| rng.range_usize(0, 1000),
+                |&x| shrink_usize_toward(x, 0),
+                |&x| if x < 50 { Ok(()) } else { Err(format!("{x} >= 50")) },
+            );
+        });
+        let err = *result.unwrap_err().downcast::<String>().unwrap();
+        // The shrinker should walk failures down toward the boundary.
+        assert!(err.contains("property failed"), "{err}");
+        assert!(err.contains("shrunk"), "{err}");
+    }
+
+    #[test]
+    fn shrink_candidates_are_smaller() {
+        for c in shrink_usize_toward(100, 3) {
+            assert!(c < 100 && c >= 3);
+        }
+        assert!(shrink_usize_toward(3, 3).is_empty());
+    }
+}

@@ -1,0 +1,135 @@
+//! Scoped data-parallel helpers (rayon is unavailable offline).
+
+/// Number of worker threads to use for data-parallel loops.
+///
+/// Respects `SO2DR_THREADS` if set, otherwise uses available parallelism
+/// capped at 16 (stencil sweeps are memory-bound; more threads rarely help).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("SO2DR_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+}
+
+/// Split the half-open range [lo, hi) into at most `parts` contiguous
+/// sub-ranges of near-equal size. Never returns empty sub-ranges.
+pub fn split_range(lo: usize, hi: usize, parts: usize) -> Vec<(usize, usize)> {
+    assert!(lo <= hi);
+    let n = hi - lo;
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.max(1).min(n);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut cur = lo;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push((cur, cur + len));
+        cur += len;
+    }
+    debug_assert_eq!(cur, hi);
+    out
+}
+
+/// Run `f(lo, hi)` over disjoint row sub-ranges of [lo, hi) on `nthreads`
+/// scoped threads. `f` must be safe to run concurrently on disjoint ranges.
+pub fn parallel_ranges<F>(lo: usize, hi: usize, nthreads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let ranges = split_range(lo, hi, nthreads);
+    if ranges.len() <= 1 {
+        if let Some(&(a, b)) = ranges.first() {
+            f(a, b);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        for &(a, b) in &ranges {
+            let f = &f;
+            scope.spawn(move || f(a, b));
+        }
+    });
+}
+
+/// A mutable-slice variant: partitions `data` into row-aligned disjoint
+/// mutable sub-slices (each `rows_per_item * row_len` long) and maps `f`
+/// over them in parallel. Used by the optimized stencil engine to write
+/// disjoint output bands without unsafe code.
+pub fn parallel_row_bands<F>(data: &mut [f32], row_len: usize, nthreads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert_eq!(data.len() % row_len, 0, "data not row-aligned");
+    let nrows = data.len() / row_len;
+    let ranges = split_range(0, nrows, nthreads);
+    if ranges.len() <= 1 {
+        if !data.is_empty() {
+            f(0, data);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut offset = 0usize;
+        for &(a, b) in &ranges {
+            let (band, tail) = rest.split_at_mut((b - a) * row_len);
+            rest = tail;
+            let f = &f;
+            let start_row = offset;
+            scope.spawn(move || f(start_row, band));
+            offset = b;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn split_covers_exactly() {
+        for (lo, hi, p) in [(0, 10, 3), (5, 6, 4), (0, 0, 2), (3, 100, 7)] {
+            let parts = split_range(lo, hi, p);
+            let mut cur = lo;
+            for (a, b) in parts {
+                assert_eq!(a, cur);
+                assert!(b > a);
+                cur = b;
+            }
+            assert_eq!(cur, if hi > lo { hi } else { lo });
+        }
+    }
+
+    #[test]
+    fn parallel_ranges_visits_all() {
+        let total = AtomicUsize::new(0);
+        parallel_ranges(0, 1000, 4, |a, b| {
+            total.fetch_add(b - a, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn row_bands_disjoint_write() {
+        let mut data = vec![0f32; 8 * 4];
+        parallel_row_bands(&mut data, 4, 3, |start_row, band| {
+            for (i, v) in band.iter_mut().enumerate() {
+                *v = (start_row * 4 + i) as f32;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn empty_range_ok() {
+        parallel_ranges(5, 5, 4, |_, _| panic!("must not be called"));
+    }
+}

@@ -1,0 +1,94 @@
+//! Wall-clock timing helpers used by the metrics layer and bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A resettable stopwatch accumulating named durations.
+#[derive(Debug, Clone, Default)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start (or restart) the current lap.
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    /// Stop the current lap and add it to the total. No-op when not running.
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed();
+        }
+    }
+
+    /// Accumulated time in seconds.
+    pub fn secs(&self) -> f64 {
+        self.total.as_secs_f64()
+    }
+
+    /// Time a closure, accumulating its duration, and return its value.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let v = f();
+        self.stop();
+        v
+    }
+}
+
+/// Measure a closure's wall time in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64())
+}
+
+/// Run `f` repeatedly for at least `min_secs` (and at least `min_iters`
+/// times), returning (iterations, mean seconds per iteration).
+///
+/// This is the measurement core of the in-repo bench harness (criterion is
+/// unavailable offline).
+pub fn measure(min_secs: f64, min_iters: u64, mut f: impl FnMut()) -> (u64, f64) {
+    // Warm-up: one call.
+    f();
+    let t0 = Instant::now();
+    let mut iters = 0u64;
+    while iters < min_iters || t0.elapsed().as_secs_f64() < min_secs {
+        f();
+        iters += 1;
+    }
+    (iters, t0.elapsed().as_secs_f64() / iters as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(2)));
+        sw.time(|| std::thread::sleep(Duration::from_millis(2)));
+        assert!(sw.secs() >= 0.004);
+    }
+
+    #[test]
+    fn stop_without_start_is_noop() {
+        let mut sw = Stopwatch::new();
+        sw.stop();
+        assert_eq!(sw.secs(), 0.0);
+    }
+
+    #[test]
+    fn measure_runs_min_iters() {
+        let mut n = 0u64;
+        let (iters, per) = measure(0.0, 10, || n += 1);
+        assert!(iters >= 10);
+        assert!(per >= 0.0);
+        assert!(n >= iters);
+    }
+}

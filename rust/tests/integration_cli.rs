@@ -1,0 +1,88 @@
+//! CLI integration: drive the built `so2dr` binary end to end.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_so2dr"))
+        .args(args)
+        .env("SO2DR_ARTIFACTS", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .output()
+        .expect("binary runs");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (ok, text) = run(&["help"]);
+    assert!(ok);
+    for cmd in ["run", "validate", "autotune", "simulate", "figures"] {
+        assert!(text.contains(cmd), "missing {cmd} in help:\n{text}");
+    }
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"));
+}
+
+#[test]
+fn run_small_config_verifies() {
+    let (ok, text) = run(&[
+        "run", "--scheme", "so2dr", "--kind", "box2d1r", "--sz", "128", "--d", "4", "--s-tb",
+        "4", "--k-on", "2", "--n", "8", "--backend", "host-naive",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("OK"), "{text}");
+    assert!(text.contains("redundant compute"), "{text}");
+}
+
+#[test]
+fn run_rejects_infeasible_config() {
+    let (ok, text) = run(&[
+        "run", "--scheme", "so2dr", "--kind", "box2d4r", "--sz", "64", "--d", "4", "--s-tb",
+        "16", "--n", "8",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("infeasible"), "{text}");
+}
+
+#[test]
+fn simulate_reports_breakdown() {
+    let (ok, text) = run(&[
+        "simulate", "--scheme", "resreu", "--kind", "box2d1r", "--d", "8", "--s-tb", "40",
+        "--n", "320",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("peak device memory"), "{text}");
+    assert!(text.contains("kernel"), "{text}");
+}
+
+#[test]
+fn figures_single_figure() {
+    let (ok, text) = run(&["figures", "--fig", "8"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Fig. 8"), "{text}");
+    assert!(!text.contains("Fig. 6"), "filter must exclude others");
+}
+
+#[test]
+fn config_file_roundtrip() {
+    let dir = std::env::temp_dir().join("so2dr_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cfg.toml");
+    std::fs::write(
+        &path,
+        "scheme = \"resreu\"\nkind = \"gradient2d\"\nsz = 96\nd = 3\ns_tb = 4\nk_on = 1\nn = 8\nbackend = \"host-naive\"\n",
+    )
+    .unwrap();
+    let (ok, text) = run(&["run", "--config", path.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("resreu gradient2d"), "{text}");
+}

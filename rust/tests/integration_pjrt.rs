@@ -1,0 +1,63 @@
+//! Integration: the three layers composed — Rust coordinator executing
+//! AOT-compiled Pallas chunk programs through PJRT, validated against the
+//! host reference.
+//!
+//! Requires `make artifacts` (skips with a clear message otherwise).
+
+use so2dr::chunking::Scheme;
+use so2dr::coordinator::{reference_run, run_scheme};
+use so2dr::runtime::PjrtBackend;
+use so2dr::stencil::NaiveEngine;
+use so2dr::{Array2, StencilKind};
+
+fn backend_or_skip() -> Option<PjrtBackend> {
+    let dir = so2dr::runtime::default_artifact_dir();
+    match PjrtBackend::from_artifacts(&dir) {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts` first): {e:#}");
+            None
+        }
+    }
+}
+
+/// Quickstart geometry: 256x256 grid, d=4, S_TB=4, k_on=2 (artifact
+/// box2d1r_k2_72x256). PJRT numerics accumulate ~1 ULP per step vs the
+/// host engine (FMA contraction), so compare with a tight tolerance.
+#[test]
+fn so2dr_pjrt_matches_host_reference() {
+    let Some(mut backend) = backend_or_skip() else { return };
+    let kind = StencilKind::Box { radius: 1 };
+    let initial = Array2::synthetic(256, 256, 42);
+    let n = 8;
+    let reference = reference_run(&initial, kind, n, &NaiveEngine);
+    let out = run_scheme(Scheme::So2dr, &initial, kind, n, 4, 4, 2, &mut backend).unwrap();
+    let diff = out.grid.max_abs_diff(&reference);
+    assert!(diff < 1e-5, "PJRT vs host reference diff {diff}");
+    assert!(backend.executions > 0);
+}
+
+#[test]
+fn gradient_pjrt_matches_host_reference() {
+    let Some(mut backend) = backend_or_skip() else { return };
+    let kind = StencilKind::Gradient2d;
+    let initial = Array2::synthetic(256, 256, 7);
+    let n = 8;
+    let reference = reference_run(&initial, kind, n, &NaiveEngine);
+    let out = run_scheme(Scheme::So2dr, &initial, kind, n, 4, 4, 2, &mut backend).unwrap();
+    let diff = out.grid.max_abs_diff(&reference);
+    assert!(diff < 1e-5, "PJRT vs host reference diff {diff}");
+}
+
+#[test]
+fn missing_artifact_is_a_clear_error() {
+    let Some(mut backend) = backend_or_skip() else { return };
+    let kind = StencilKind::Box { radius: 1 };
+    let initial = Array2::synthetic(64, 64, 1);
+    // No artifact exists for this geometry.
+    let err = run_scheme(Scheme::So2dr, &initial, kind, 4, 2, 2, 2, &mut backend)
+        .err()
+        .expect("must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no artifact"), "unexpected error: {msg}");
+}

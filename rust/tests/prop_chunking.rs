@@ -1,0 +1,228 @@
+//! Property tests over the decomposition/sharing geometry and the DES,
+//! using the in-repo harness (`util::testkit::forall`).
+
+use so2dr::chunking::plan::{plan_run, ChunkOp, Scheme};
+use so2dr::chunking::Decomposition;
+use so2dr::coordinator::{HostBackend, PlanExecutor};
+use so2dr::gpu::cost::{CostModel, MachineSpec};
+use so2dr::gpu::des::simulate;
+use so2dr::gpu::flatten::{flatten_run, OpKind};
+use so2dr::stencil::{NaiveEngine, StencilKind};
+use so2dr::util::testkit::{forall, shrink_usize_toward};
+use so2dr::util::XorShift64;
+
+/// A random but feasible decomposition + epoch configuration.
+#[derive(Debug, Clone)]
+struct Case {
+    rows: usize,
+    d: usize,
+    radius: usize,
+    steps: usize,
+}
+
+fn gen_case(rng: &mut XorShift64) -> Case {
+    let radius = rng.range_usize(1, 5);
+    let d = rng.range_usize(2, 7);
+    // Ensure feasibility: chunk >= steps*r + r.
+    let steps = rng.range_usize(1, 9);
+    let min_chunk = steps * radius + radius;
+    let rows = d * (min_chunk + rng.range_usize(0, 40));
+    Case { rows, d, radius, steps }
+}
+
+fn shrink_case(c: &Case) -> Vec<Case> {
+    let mut out = Vec::new();
+    for s in shrink_usize_toward(c.steps, 1) {
+        out.push(Case { steps: s, ..c.clone() });
+    }
+    for d in shrink_usize_toward(c.d, 2) {
+        out.push(Case { d, ..c.clone() });
+    }
+    for rows in shrink_usize_toward(c.rows, c.d * (c.steps * c.radius + c.radius)) {
+        if rows >= c.d * (c.steps * c.radius + c.radius) {
+            out.push(Case { rows, ..c.clone() });
+        }
+    }
+    out
+}
+
+/// Both schemes must transfer every grid row exactly once per epoch, in
+/// both directions.
+#[test]
+fn prop_transfers_partition_grid() {
+    forall(11, 120, gen_case, shrink_case, |c| {
+        let dc = Decomposition::new(c.rows, 32, c.d, c.radius);
+        if !dc.feasible(c.steps) {
+            return Ok(()); // generator slack can under-shoot; skip
+        }
+        for scheme in [Scheme::So2dr, Scheme::ResReu] {
+            let plans = plan_run(scheme, &dc, c.steps, c.steps, 2.min(c.steps));
+            let plan = &plans[0];
+            for dir in ["htod", "dtoh"] {
+                let mut covered = vec![0u8; c.rows];
+                for (_, _, op) in plan.iter_ops() {
+                    let span = match (dir, op) {
+                        ("htod", ChunkOp::HtoD { span }) => *span,
+                        ("dtoh", ChunkOp::DtoH { span }) => *span,
+                        _ => continue,
+                    };
+                    for r in span.lo..span.hi {
+                        covered[r] += 1;
+                    }
+                }
+                if covered.iter().any(|&x| x != 1) {
+                    return Err(format!(
+                        "{} {dir} coverage != 1 somewhere (counts: min {:?} max {:?})",
+                        scheme.name(),
+                        covered.iter().min(),
+                        covered.iter().max()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Every RS read must have a matching earlier RS write (causality), for
+/// both schemes, in the sequential chunk order.
+#[test]
+fn prop_rs_causality() {
+    forall(12, 120, gen_case, shrink_case, |c| {
+        let dc = Decomposition::new(c.rows, 32, c.d, c.radius);
+        if !dc.feasible(c.steps) {
+            return Ok(());
+        }
+        for scheme in [Scheme::So2dr, Scheme::ResReu] {
+            let plans = plan_run(scheme, &dc, c.steps, c.steps, 1);
+            let mut written = std::collections::HashSet::new();
+            for (_, _, op) in plans[0].iter_ops() {
+                match op {
+                    ChunkOp::RsWrite(r) => {
+                        written.insert((r.span.lo, r.span.hi, r.time_step));
+                    }
+                    ChunkOp::RsRead(r) => {
+                        if !written.contains(&(r.span.lo, r.span.hi, r.time_step)) {
+                            return Err(format!(
+                                "{}: read {} @t{} before write",
+                                scheme.name(),
+                                r.span,
+                                r.time_step
+                            ));
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// ResReu windows tile the interior exactly at every step (no redundant
+/// compute); SO2DR windows cover it with overlap >= 0.
+#[test]
+fn prop_window_coverage() {
+    forall(13, 120, gen_case, shrink_case, |c| {
+        let dc = Decomposition::new(c.rows, 32, c.d, c.radius);
+        if !dc.feasible(c.steps) {
+            return Ok(());
+        }
+        for s in 1..=c.steps {
+            let mut cover = vec![0u32; c.rows];
+            for i in 0..c.d {
+                let w = dc.resreu_window(i, c.steps, s);
+                for r in w.lo..w.hi {
+                    cover[r] += 1;
+                }
+            }
+            for r in c.radius..c.rows - c.radius {
+                if cover[r] != 1 {
+                    return Err(format!("resreu step {s} row {r}: cover {}", cover[r]));
+                }
+            }
+            let mut cover2 = vec![0u32; c.rows];
+            for i in 0..c.d {
+                let w = dc.so2dr_window(i, c.steps, s);
+                for r in w.lo..w.hi {
+                    cover2[r] += 1;
+                }
+            }
+            for r in c.radius..c.rows - c.radius {
+                if cover2[r] < 1 {
+                    return Err(format!("so2dr step {s} row {r}: uncovered"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// DES sanity: makespan is at least every single-resource busy time and
+/// at most the serial sum; all ops complete.
+#[test]
+fn prop_des_makespan_bounds() {
+    forall(14, 40, gen_case, shrink_case, |c| {
+        let dc = Decomposition::new(c.rows, 256, c.d, c.radius);
+        if !dc.feasible(c.steps) {
+            return Ok(());
+        }
+        let kind = StencilKind::Box { radius: c.radius };
+        for scheme in [Scheme::So2dr, Scheme::ResReu] {
+            let plans = plan_run(scheme, &dc, 2 * c.steps, c.steps, 2.min(c.steps));
+            let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+            let ops = flatten_run(&plans, &dc, kind, 3, buf_rows);
+            let n_ops = ops.len();
+            let rep = simulate(&ops, &CostModel::new(MachineSpec::rtx3080()), 3);
+            let total_ops: usize = rep.op_counts.values().sum();
+            if total_ops != n_ops {
+                return Err(format!("{}: {total_ops}/{n_ops} ops completed", scheme.name()));
+            }
+            let serial: f64 = rep.busy.values().sum();
+            for k in [OpKind::HtoD, OpKind::DtoH] {
+                if rep.makespan < rep.busy_of(k) - 1e-9 {
+                    return Err(format!("makespan below {k:?} busy time"));
+                }
+            }
+            if rep.makespan > serial + 1e-9 {
+                return Err(format!(
+                    "{}: makespan {} above serial {serial}",
+                    scheme.name(),
+                    rep.makespan
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The real executor reproduces the reference for random feasible
+/// configurations — the strongest invariant we have, randomized.
+#[test]
+fn prop_random_configs_bit_exact() {
+    use so2dr::coordinator::{reference_run, run_scheme};
+    use so2dr::Array2;
+    forall(15, 25, gen_case, shrink_case, |c| {
+        let dc_check = Decomposition::new(c.rows, 40, c.d, c.radius);
+        if !dc_check.feasible(c.steps) {
+            return Ok(());
+        }
+        let kind = StencilKind::Box { radius: c.radius };
+        let n = c.steps + (c.steps / 2).max(1); // force a residual epoch
+        let initial = Array2::synthetic(c.rows, 40, c.rows as u64);
+        let reference = reference_run(&initial, kind, n, &NaiveEngine);
+        for (scheme, k_on) in [(Scheme::So2dr, 2), (Scheme::ResReu, 1)] {
+            let mut backend = HostBackend::new(NaiveEngine);
+            let out = run_scheme(scheme, &initial, kind, n, c.d, c.steps, k_on, &mut backend)
+                .map_err(|e| format!("{e:#}"))?;
+            if !out.grid.bit_eq(&reference) {
+                return Err(format!(
+                    "{} diverged: max diff {}",
+                    scheme.name(),
+                    out.grid.max_abs_diff(&reference)
+                ));
+            }
+        }
+        Ok(())
+    });
+}
