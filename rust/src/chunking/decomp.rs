@@ -257,6 +257,97 @@ impl Decomposition {
     }
 }
 
+/// Assignment of chunks to devices for a sharded (multi-GPU) run.
+///
+/// Chunks are mapped to devices in contiguous near-equal blocks, so the
+/// only inter-device halo traffic is at the `n_devices - 1` block
+/// boundaries — every interior region share stays a cheap on-device copy,
+/// and a boundary share becomes a peer-to-peer (`D2D`) link transfer.
+/// Devices are modeled homogeneous (same capacity and bandwidths).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeviceAssignment {
+    n_devices: usize,
+    /// `of_chunk[i]` = device owning chunk `i` (non-decreasing).
+    of_chunk: Vec<usize>,
+}
+
+impl DeviceAssignment {
+    /// Contiguous near-equal split of `n_chunks` chunks over `n_devices`
+    /// devices. Panics if `n_devices == 0` or `n_devices > n_chunks`.
+    pub fn contiguous(n_chunks: usize, n_devices: usize) -> Self {
+        assert!(
+            n_devices > 0 && n_devices <= n_chunks,
+            "invalid device count {n_devices} for {n_chunks} chunks"
+        );
+        let parts = split_range(0, n_chunks, n_devices);
+        assert_eq!(parts.len(), n_devices);
+        let mut of_chunk = vec![0usize; n_chunks];
+        for (dev, &(a, b)) in parts.iter().enumerate() {
+            for item in of_chunk.iter_mut().take(b).skip(a) {
+                *item = dev;
+            }
+        }
+        Self { n_devices, of_chunk }
+    }
+
+    /// Everything on one device (the seed's original behavior).
+    pub fn single(n_chunks: usize) -> Self {
+        Self::contiguous(n_chunks, 1)
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.of_chunk.len()
+    }
+
+    /// Device owning chunk `i`.
+    pub fn device_of(&self, chunk: usize) -> usize {
+        self.of_chunk[chunk]
+    }
+
+    /// Chunk index range owned by device `dev`.
+    pub fn chunks_on(&self, dev: usize) -> std::ops::Range<usize> {
+        let lo = self.of_chunk.iter().position(|&d| d == dev).unwrap_or(0);
+        let hi = self.of_chunk.iter().rposition(|&d| d == dev).map(|p| p + 1).unwrap_or(0);
+        lo..hi
+    }
+
+    /// True when chunks `i` and `i + 1` live on different devices, i.e.
+    /// their region share must cross the inter-device link.
+    pub fn crosses_boundary(&self, i: usize) -> bool {
+        i + 1 < self.of_chunk.len() && self.of_chunk[i] != self.of_chunk[i + 1]
+    }
+
+    /// Per-device capacity accounting: device-memory bytes demanded on
+    /// each device when up to `n_strm` chunk pipelines are in flight per
+    /// device, each double buffered, during an epoch of `steps` —
+    /// the multi-device analog of the §IV-C memory constraint
+    /// `(D_chk + W_halo*S_TB) * N_strm * N_buf <= C_dmem`, now checked
+    /// per shard instead of globally.
+    pub fn device_memory_demand(
+        &self,
+        dc: &Decomposition,
+        steps: usize,
+        n_strm: usize,
+        kind: StencilKind,
+    ) -> Vec<u64> {
+        (0..self.n_devices)
+            .map(|dev| {
+                let chunks = self.chunks_on(dev);
+                let live = n_strm.max(1).min(chunks.len().max(1)) as u64;
+                let worst = chunks
+                    .map(|i| dc.resident_bytes(i, steps, kind))
+                    .max()
+                    .unwrap_or(0);
+                live * 2 * worst
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -424,5 +515,59 @@ mod tests {
             dc.resident_bytes(0, 10, StencilKind::Box { radius: 2 }),
             250 * 500 * 4 + 10 * 2 * 2 * 500 * 4
         );
+    }
+
+    #[test]
+    fn device_assignment_contiguous_blocks() {
+        let devs = DeviceAssignment::contiguous(8, 4);
+        assert_eq!(devs.n_devices(), 4);
+        assert_eq!(devs.n_chunks(), 8);
+        for i in 0..8 {
+            assert_eq!(devs.device_of(i), i / 2);
+        }
+        assert_eq!(devs.chunks_on(0), 0..2);
+        assert_eq!(devs.chunks_on(3), 6..8);
+        // Boundaries exactly between blocks.
+        let boundaries: Vec<usize> = (0..7).filter(|&i| devs.crosses_boundary(i)).collect();
+        assert_eq!(boundaries, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn device_assignment_uneven_split() {
+        let devs = DeviceAssignment::contiguous(5, 2);
+        // Non-decreasing, both devices non-empty, sizes differ by <= 1.
+        let on0 = devs.chunks_on(0).len();
+        let on1 = devs.chunks_on(1).len();
+        assert_eq!(on0 + on1, 5);
+        assert!(on0.abs_diff(on1) <= 1);
+        for i in 1..5 {
+            assert!(devs.device_of(i) >= devs.device_of(i - 1));
+        }
+    }
+
+    #[test]
+    fn single_device_has_no_boundaries() {
+        let devs = DeviceAssignment::single(6);
+        assert_eq!(devs.n_devices(), 1);
+        assert!((0..6).all(|i| !devs.crosses_boundary(i)));
+        assert_eq!(devs.chunks_on(0), 0..6);
+    }
+
+    #[test]
+    fn device_memory_demand_shrinks_with_more_devices() {
+        let dc = Decomposition::new(960, 256, 8, 1);
+        let kind = StencilKind::Box { radius: 1 };
+        let one = DeviceAssignment::single(8).device_memory_demand(&dc, 8, 3, kind);
+        let four = DeviceAssignment::contiguous(8, 4).device_memory_demand(&dc, 8, 3, kind);
+        assert_eq!(one.len(), 1);
+        assert_eq!(four.len(), 4);
+        // Fewer in-flight pipelines per shard -> lower per-device demand.
+        assert!(four.iter().max().unwrap() <= &one[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid device count")]
+    fn more_devices_than_chunks_rejected() {
+        DeviceAssignment::contiguous(2, 3);
     }
 }

@@ -31,5 +31,5 @@
 pub mod decomp;
 pub mod plan;
 
-pub use decomp::Decomposition;
+pub use decomp::{Decomposition, DeviceAssignment};
 pub use plan::{ChunkEpochPlan, EpochPlan, KernelInvocation, RegionOp, Scheme};

@@ -7,7 +7,7 @@
 //! `HtoD -> RS read -> RS write -> kernels -> DtoH` (SO2DR) or
 //! `HtoD -> (RS read/write + 1-step kernel) * steps -> DtoH` (ResReu).
 
-use super::decomp::Decomposition;
+use super::decomp::{Decomposition, DeviceAssignment};
 use crate::core::geom::RowSpan;
 
 /// Out-of-core sharing scheme.
@@ -78,6 +78,17 @@ pub enum ChunkOp {
     HtoD { span: RowSpan },
     RsRead(RegionOp),
     RsWrite(RegionOp),
+    /// Peer-to-peer halo exchange: move the `(span, time_step)` region
+    /// just published by this chunk's `RsWrite` from `src_dev`'s sharing
+    /// buffer to `dst_dev`'s, across the inter-device link. Emitted only
+    /// when the producing and consuming chunks live on different devices;
+    /// the consumer's `RsRead` then hits its own device's buffer.
+    ///
+    /// Naming note: this is the *inter-device* transfer — the flattener
+    /// maps it to `OpKind::P2p`, priced by the link channel. It is
+    /// unrelated to `OpKind::D2D`, which is the *on-device* sharing copy
+    /// produced by `RsWrite`/`RsRead` (the paper's "O/D" category).
+    D2D { src_dev: usize, dst_dev: usize, span: RowSpan, time_step: usize },
     Kernel(KernelInvocation),
     DtoH { span: RowSpan },
 }
@@ -86,6 +97,8 @@ pub enum ChunkOp {
 #[derive(Debug, Clone)]
 pub struct ChunkEpochPlan {
     pub chunk: usize,
+    /// Device the chunk is sharded onto (0 for single-device runs).
+    pub device: usize,
     pub ops: Vec<ChunkOp>,
 }
 
@@ -97,6 +110,8 @@ pub struct EpochPlan {
     pub steps: usize,
     /// First global time-step index covered by this epoch (0-based).
     pub start_step: usize,
+    /// Devices the epoch is sharded over (1 = the seed's single-GPU plan).
+    pub n_devices: usize,
     pub chunks: Vec<ChunkEpochPlan>,
 }
 
@@ -116,9 +131,18 @@ impl EpochPlan {
 }
 
 /// Build one SO2DR epoch (Algorithm 1 lines 4–16) of `steps` TB steps with
-/// `k_on`-step fused kernels.
-pub fn so2dr_epoch(dc: &Decomposition, steps: usize, k_on: usize, start_step: usize) -> EpochPlan {
+/// `k_on`-step fused kernels, sharded over `devs`. When the consumer of a
+/// region share lives on another device, the share is followed by a
+/// [`ChunkOp::D2D`] halo exchange over the inter-device link.
+pub fn so2dr_epoch(
+    dc: &Decomposition,
+    devs: &DeviceAssignment,
+    steps: usize,
+    k_on: usize,
+    start_step: usize,
+) -> EpochPlan {
     assert!(steps >= 1 && k_on >= 1);
+    assert_eq!(devs.n_chunks(), dc.n_chunks(), "device assignment shape mismatch");
     dc.check(steps);
     let mut chunks = Vec::with_capacity(dc.n_chunks());
     for i in 0..dc.n_chunks() {
@@ -131,6 +155,14 @@ pub fn so2dr_epoch(dc: &Decomposition, steps: usize, k_on: usize, start_step: us
         let rs_write = dc.so2dr_rs_write(i, steps);
         if !rs_write.is_empty() {
             ops.push(ChunkOp::RsWrite(RegionOp { span: rs_write, time_step: 0 }));
+            if devs.crosses_boundary(i) {
+                ops.push(ChunkOp::D2D {
+                    src_dev: devs.device_of(i),
+                    dst_dev: devs.device_of(i + 1),
+                    span: rs_write,
+                    time_step: 0,
+                });
+            }
         }
         // Lines 7–14: ceil(steps / k_on) kernels, the last possibly short.
         let mut s = 1usize;
@@ -142,15 +174,28 @@ pub fn so2dr_epoch(dc: &Decomposition, steps: usize, k_on: usize, start_step: us
             s += fused;
         }
         ops.push(ChunkOp::DtoH { span: dc.so2dr_dtoh(i) });
-        chunks.push(ChunkEpochPlan { chunk: i, ops });
+        chunks.push(ChunkEpochPlan { chunk: i, device: devs.device_of(i), ops });
     }
-    EpochPlan { scheme: Scheme::So2dr, steps, start_step, chunks }
+    EpochPlan {
+        scheme: Scheme::So2dr,
+        steps,
+        start_step,
+        n_devices: devs.n_devices(),
+        chunks,
+    }
 }
 
 /// Build one ResReu epoch: single-step kernels interleaved with RS
-/// reads/writes of intermediate results (paper Fig. 2b).
-pub fn resreu_epoch(dc: &Decomposition, steps: usize, start_step: usize) -> EpochPlan {
+/// reads/writes of intermediate results (paper Fig. 2b), sharded over
+/// `devs` with per-step [`ChunkOp::D2D`] exchanges at device boundaries.
+pub fn resreu_epoch(
+    dc: &Decomposition,
+    devs: &DeviceAssignment,
+    steps: usize,
+    start_step: usize,
+) -> EpochPlan {
     assert!(steps >= 1);
+    assert_eq!(devs.n_chunks(), dc.n_chunks(), "device assignment shape mismatch");
     dc.check(steps);
     let mut chunks = Vec::with_capacity(dc.n_chunks());
     for i in 0..dc.n_chunks() {
@@ -162,6 +207,14 @@ pub fn resreu_epoch(dc: &Decomposition, steps: usize, start_step: usize) -> Epoc
             let w = dc.resreu_rs_write(i, s);
             if !w.is_empty() {
                 ops.push(ChunkOp::RsWrite(RegionOp { span: w, time_step: s - 1 }));
+                if devs.crosses_boundary(i) {
+                    ops.push(ChunkOp::D2D {
+                        src_dev: devs.device_of(i),
+                        dst_dev: devs.device_of(i + 1),
+                        span: w,
+                        time_step: s - 1,
+                    });
+                }
             }
             let r = dc.resreu_rs_read(i, s);
             if !r.is_empty() {
@@ -173,9 +226,15 @@ pub fn resreu_epoch(dc: &Decomposition, steps: usize, start_step: usize) -> Epoc
             }));
         }
         ops.push(ChunkOp::DtoH { span: dc.resreu_dtoh(i, steps) });
-        chunks.push(ChunkEpochPlan { chunk: i, ops });
+        chunks.push(ChunkEpochPlan { chunk: i, device: devs.device_of(i), ops });
     }
-    EpochPlan { scheme: Scheme::ResReu, steps, start_step, chunks }
+    EpochPlan {
+        scheme: Scheme::ResReu,
+        steps,
+        start_step,
+        n_devices: devs.n_devices(),
+        chunks,
+    }
 }
 
 /// Build the in-core "epoch": the whole grid is one resident chunk and all
@@ -205,15 +264,18 @@ pub fn incore_epoch(
         scheme: Scheme::InCore,
         steps,
         start_step,
-        chunks: vec![ChunkEpochPlan { chunk: 0, ops }],
+        n_devices: 1,
+        chunks: vec![ChunkEpochPlan { chunk: 0, device: 0, ops }],
     }
 }
 
 /// Split a total of `n` steps into epochs of at most `s_tb` (Algorithm 1
-/// lines 1–3) and build the per-epoch plans.
-pub fn plan_run(
+/// lines 1–3) and build the per-epoch plans, sharded over `devs`. The
+/// in-core scheme is inherently single-device and ignores the assignment.
+pub fn plan_run_devices(
     scheme: Scheme,
     dc: &Decomposition,
+    devs: &DeviceAssignment,
     n: usize,
     s_tb: usize,
     k_on: usize,
@@ -224,14 +286,25 @@ pub fn plan_run(
     while done < n {
         let steps = s_tb.min(n - done);
         let plan = match scheme {
-            Scheme::So2dr => so2dr_epoch(dc, steps, k_on, done),
-            Scheme::ResReu => resreu_epoch(dc, steps, done),
+            Scheme::So2dr => so2dr_epoch(dc, devs, steps, k_on, done),
+            Scheme::ResReu => resreu_epoch(dc, devs, steps, done),
             Scheme::InCore => incore_epoch(dc.rows(), dc.radius(), steps, k_on, done),
         };
         plans.push(plan);
         done += steps;
     }
     plans
+}
+
+/// Single-device [`plan_run_devices`] (the seed's original entry point).
+pub fn plan_run(
+    scheme: Scheme,
+    dc: &Decomposition,
+    n: usize,
+    s_tb: usize,
+    k_on: usize,
+) -> Vec<EpochPlan> {
+    plan_run_devices(scheme, dc, &DeviceAssignment::single(dc.n_chunks()), n, s_tb, k_on)
 }
 
 #[cfg(test)]
@@ -242,9 +315,13 @@ mod tests {
         Decomposition::new(240, 64, 4, 2)
     }
 
+    fn one_dev() -> DeviceAssignment {
+        DeviceAssignment::single(4)
+    }
+
     #[test]
     fn so2dr_epoch_structure() {
-        let plan = so2dr_epoch(&dc(), 8, 4, 0);
+        let plan = so2dr_epoch(&dc(), &one_dev(), 8, 4, 0);
         assert_eq!(plan.chunks.len(), 4);
         let c1 = &plan.chunks[1];
         // HtoD, RsRead, RsWrite, 2 kernels (8/4), DtoH.
@@ -261,7 +338,7 @@ mod tests {
 
     #[test]
     fn so2dr_residual_kernel() {
-        let plan = so2dr_epoch(&dc(), 7, 4, 0);
+        let plan = so2dr_epoch(&dc(), &one_dev(), 7, 4, 0);
         let kernels: Vec<&KernelInvocation> = plan.chunks[0]
             .ops
             .iter()
@@ -278,7 +355,7 @@ mod tests {
 
     #[test]
     fn resreu_epoch_structure() {
-        let plan = resreu_epoch(&dc(), 5, 0);
+        let plan = resreu_epoch(&dc(), &one_dev(), 5, 0);
         let c1 = &plan.chunks[1];
         // HtoD + 5*(write+read+kernel) + DtoH
         assert_eq!(c1.ops.len(), 1 + 5 * 3 + 1);
@@ -313,7 +390,7 @@ mod tests {
     #[test]
     fn resreu_causality_pairs() {
         // RsWrite(i, s) span+time must equal RsRead(i+1, s).
-        let plan = resreu_epoch(&dc(), 5, 0);
+        let plan = resreu_epoch(&dc(), &one_dev(), 5, 0);
         for i in 0..3 {
             let writes: Vec<&RegionOp> = plan.chunks[i]
                 .ops
@@ -334,6 +411,183 @@ mod tests {
             assert_eq!(writes.len(), reads.len());
             for (w, r) in writes.iter().zip(&reads) {
                 assert_eq!(w, r);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod device_tests {
+    use super::*;
+    use std::collections::{HashMap, HashSet};
+
+    fn dc() -> Decomposition {
+        Decomposition::new(240, 64, 4, 2)
+    }
+
+    /// Walk a plan in canonical execution order and verify plan causality:
+    /// - a chunk never publishes (`RsWrite`) data of a time step it has
+    ///   not yet computed (`time_step <= kernel steps completed so far`);
+    /// - a `D2D` only moves a region its source device already holds;
+    /// - an `RsRead` only consumes a region available on the reader's own
+    ///   device;
+    /// - every region a kernel step depends on arrived before the kernel
+    ///   (reads precede the kernel of their `first_step` in op order).
+    fn check_causality(plan: &EpochPlan) {
+        // (span.lo, span.hi, time_step) -> devices holding the region.
+        let mut available: HashMap<(usize, usize, usize), HashSet<usize>> = HashMap::new();
+        for cp in &plan.chunks {
+            let mut steps_done = 0usize;
+            for op in &cp.ops {
+                match op {
+                    ChunkOp::RsWrite(r) => {
+                        assert!(
+                            r.time_step <= steps_done,
+                            "chunk {} publishes t{} after only {} steps",
+                            cp.chunk,
+                            r.time_step,
+                            steps_done
+                        );
+                        available
+                            .entry((r.span.lo, r.span.hi, r.time_step))
+                            .or_default()
+                            .insert(cp.device);
+                    }
+                    ChunkOp::D2D { src_dev, dst_dev, span, time_step } => {
+                        assert_eq!(*src_dev, cp.device, "D2D source must be the producer");
+                        assert_ne!(src_dev, dst_dev, "D2D must cross devices");
+                        let holders = available
+                            .get(&(span.lo, span.hi, *time_step))
+                            .unwrap_or_else(|| panic!("D2D of unpublished region {span}"));
+                        assert!(
+                            holders.contains(src_dev),
+                            "D2D from dev {src_dev} which does not hold {span} @t{time_step}"
+                        );
+                        available
+                            .entry((span.lo, span.hi, *time_step))
+                            .or_default()
+                            .insert(*dst_dev);
+                    }
+                    ChunkOp::RsRead(r) => {
+                        let holders = available
+                            .get(&(r.span.lo, r.span.hi, r.time_step))
+                            .unwrap_or_else(|| {
+                                panic!(
+                                    "chunk {} reads unpublished region {} @t{}",
+                                    cp.chunk, r.span, r.time_step
+                                )
+                            });
+                        assert!(
+                            holders.contains(&cp.device),
+                            "chunk {} (dev {}) reads {} @t{} not on its device",
+                            cp.chunk,
+                            cp.device,
+                            r.span,
+                            r.time_step
+                        );
+                        // Halo data must predate the steps it feeds.
+                        assert!(
+                            r.time_step <= steps_done,
+                            "read of future time step t{}",
+                            r.time_step
+                        );
+                    }
+                    ChunkOp::Kernel(k) => {
+                        assert_eq!(k.first_step, steps_done + 1, "kernel steps out of order");
+                        steps_done += k.fused_steps();
+                    }
+                    ChunkOp::HtoD { .. } | ChunkOp::DtoH { .. } => {}
+                }
+            }
+            assert_eq!(steps_done, plan.steps, "chunk {} step count", cp.chunk);
+        }
+    }
+
+    #[test]
+    fn so2dr_causality_across_device_counts() {
+        for n_dev in [1, 2, 4] {
+            let devs = DeviceAssignment::contiguous(4, n_dev);
+            check_causality(&so2dr_epoch(&dc(), &devs, 8, 4, 0));
+        }
+    }
+
+    #[test]
+    fn resreu_causality_across_device_counts() {
+        for n_dev in [1, 2, 4] {
+            let devs = DeviceAssignment::contiguous(4, n_dev);
+            check_causality(&resreu_epoch(&dc(), &devs, 5, 0));
+        }
+    }
+
+    #[test]
+    fn d2d_emitted_exactly_at_device_boundaries() {
+        let devs = DeviceAssignment::contiguous(4, 2); // boundary between chunks 1|2
+        let plan = so2dr_epoch(&dc(), &devs, 8, 4, 0);
+        for cp in &plan.chunks {
+            let d2d: Vec<&ChunkOp> = cp
+                .ops
+                .iter()
+                .filter(|o| matches!(o, ChunkOp::D2D { .. }))
+                .collect();
+            if cp.chunk == 1 {
+                assert_eq!(d2d.len(), 1, "one raw-halo exchange per epoch at the boundary");
+                if let ChunkOp::D2D { src_dev, dst_dev, span, time_step } = d2d[0] {
+                    assert_eq!((*src_dev, *dst_dev, *time_step), (0, 1, 0));
+                    assert_eq!(*span, dc().so2dr_rs_write(1, 8));
+                }
+            } else {
+                assert!(d2d.is_empty(), "chunk {} must not exchange", cp.chunk);
+            }
+        }
+    }
+
+    #[test]
+    fn resreu_d2d_one_per_step_at_boundary() {
+        let devs = DeviceAssignment::contiguous(4, 4);
+        let plan = resreu_epoch(&dc(), &devs, 5, 0);
+        // Every non-last chunk crosses a boundary: one D2D per step.
+        for cp in &plan.chunks {
+            let n_d2d = cp.ops.iter().filter(|o| matches!(o, ChunkOp::D2D { .. })).count();
+            if cp.chunk + 1 < 4 {
+                assert_eq!(n_d2d, 5, "chunk {}", cp.chunk);
+            } else {
+                assert_eq!(n_d2d, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn d2d_follows_its_write_immediately() {
+        let devs = DeviceAssignment::contiguous(4, 4);
+        for plan in [
+            so2dr_epoch(&dc(), &devs, 6, 2, 0),
+            resreu_epoch(&dc(), &devs, 5, 0),
+        ] {
+            for cp in &plan.chunks {
+                for (oi, op) in cp.ops.iter().enumerate() {
+                    if let ChunkOp::D2D { span, time_step, .. } = op {
+                        match &cp.ops[oi - 1] {
+                            ChunkOp::RsWrite(r) => {
+                                assert_eq!((r.span, r.time_step), (*span, *time_step));
+                            }
+                            other => panic!("D2D not preceded by its RsWrite: {other:?}"),
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_device_plans_have_no_d2d() {
+        let devs = DeviceAssignment::single(4);
+        for plan in [
+            so2dr_epoch(&dc(), &devs, 8, 4, 0),
+            resreu_epoch(&dc(), &devs, 5, 0),
+        ] {
+            assert_eq!(plan.n_devices, 1);
+            for (_, _, op) in plan.iter_ops() {
+                assert!(!matches!(op, ChunkOp::D2D { .. }));
             }
         }
     }

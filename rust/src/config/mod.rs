@@ -4,4 +4,4 @@
 pub mod run;
 pub mod toml_mini;
 
-pub use run::RunConfig;
+pub use run::{validate_devices, RunConfig};

@@ -22,12 +22,32 @@ pub struct RunConfig {
     pub k_on: usize,
     /// Total time steps (`S_tot`).
     pub n: usize,
-    /// CUDA-stream analog count (`N_strm`).
+    /// CUDA-stream analog count (`N_strm`, per device).
     pub n_strm: usize,
+    /// Simulated device (GPU) count; chunks are sharded contiguously.
+    pub devices: usize,
+    /// Inter-device link bandwidth override in GB/s (peer-to-peer halo
+    /// exchange); `None` keeps the selected machine's `bw_link`.
+    pub d2d_gbps: Option<f64>,
     /// Synthetic-field seed.
     pub seed: u64,
     /// Kernel backend: "host-naive", "host-opt" or "pjrt".
     pub backend: String,
+}
+
+/// Structural device-count rules, shared by [`RunConfig::validate`] and
+/// the `simulate` CLI path so the two cannot drift.
+pub fn validate_devices(scheme: Scheme, d: usize, devices: usize) -> Result<()> {
+    if devices == 0 {
+        bail!("devices must be positive");
+    }
+    if devices > d {
+        bail!("devices ({devices}) must not exceed chunk count d ({d}): every device needs a chunk");
+    }
+    if scheme == Scheme::InCore && devices > 1 {
+        bail!("the in-core scheme is single-device (use so2dr/resreu for --devices > 1)");
+    }
+    Ok(())
 }
 
 impl Default for RunConfig {
@@ -42,6 +62,8 @@ impl Default for RunConfig {
             k_on: 4,
             n: 64,
             n_strm: 3,
+            devices: 1,
+            d2d_gbps: None,
             seed: 42,
             backend: "host-opt".into(),
         }
@@ -82,6 +104,8 @@ impl RunConfig {
                     "k_on" => cfg.k_on = s.usize_req("k_on")?,
                     "n" => cfg.n = s.usize_req("n")?,
                     "n_strm" => cfg.n_strm = s.usize_req("n_strm")?,
+                    "devices" => cfg.devices = s.usize_req("devices")?,
+                    "d2d_gbps" => cfg.d2d_gbps = Some(s.float_req("d2d_gbps")?),
                     "seed" => cfg.seed = s.int_or("seed", 42) as u64,
                     "backend" => cfg.backend = s.str_or("backend", "host-opt"),
                     other => bail!("unknown key {other:?}"),
@@ -107,6 +131,12 @@ impl RunConfig {
         if self.d == 0 || self.s_tb == 0 || self.k_on == 0 || self.n_strm == 0 {
             bail!("d/s_tb/k_on/n_strm must be positive");
         }
+        validate_devices(self.scheme, self.d, self.devices)?;
+        if let Some(gbps) = self.d2d_gbps {
+            if !(gbps > 0.0) {
+                bail!("d2d_gbps must be positive");
+            }
+        }
         if self.scheme == Scheme::ResReu && self.k_on != 1 {
             bail!("ResReu structurally requires k_on = 1 (single-step kernels)");
         }
@@ -129,7 +159,7 @@ impl RunConfig {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "{} {} {}x{} d={} S_TB={} k_on={} n={} N_strm={} backend={}",
+            "{} {} {}x{} d={} S_TB={} k_on={} n={} N_strm={} devices={} backend={}",
             self.scheme.name(),
             self.kind.name(),
             self.rows,
@@ -139,6 +169,7 @@ impl RunConfig {
             self.k_on,
             self.n,
             self.n_strm,
+            self.devices,
             self.backend
         )
     }
@@ -175,8 +206,22 @@ mod tests {
     }
 
     #[test]
+    fn parses_multi_device_keys() {
+        let cfg = RunConfig::from_toml("d = 8\ndevices = 4\nd2d_gbps = 25.0\n").unwrap();
+        assert_eq!(cfg.devices, 4);
+        assert_eq!(cfg.d2d_gbps, Some(25.0));
+        assert_eq!(RunConfig::default().d2d_gbps, None, "default keeps the machine's bw_link");
+        // Non-numeric override must fail loudly, not fall back silently.
+        assert!(RunConfig::from_toml("d2d_gbps = \"fast\"\n").is_err());
+        // More devices than chunks is structurally invalid.
+        assert!(RunConfig::from_toml("d = 2\ndevices = 4\n").is_err());
+        assert!(RunConfig::from_toml("devices = 0\n").is_err());
+        assert!(RunConfig::from_toml("scheme = \"incore\"\ndevices = 2\n").is_err());
+    }
+
+    #[test]
     fn summary_mentions_key_params() {
         let s = RunConfig::default().summary();
-        assert!(s.contains("so2dr") && s.contains("S_TB=8"));
+        assert!(s.contains("so2dr") && s.contains("S_TB=8") && s.contains("devices=1"));
     }
 }

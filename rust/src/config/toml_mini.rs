@@ -137,6 +137,13 @@ impl<'a> Section<'a> {
         self.0.get(key).and_then(|v| v.as_int()).unwrap_or(default)
     }
 
+    pub fn float_req(&self, key: &str) -> Result<f64> {
+        self.0
+            .get(key)
+            .and_then(|v| v.as_float())
+            .with_context(|| format!("missing or invalid number key {key:?}"))
+    }
+
     pub fn usize_req(&self, key: &str) -> Result<usize> {
         self.0
             .get(key)
@@ -179,6 +186,9 @@ mod tests {
         let doc = parse("[x]\na = 3\nb = \"hi\"\n").unwrap();
         let s = Section(&doc["x"]);
         assert_eq!(s.int_or("a", 0), 3);
+        assert_eq!(s.float_req("a").unwrap(), 3.0);
+        assert!(s.float_req("b").is_err(), "string is not a number");
+        assert!(s.float_req("missing").is_err());
         assert_eq!(s.str_or("b", "no"), "hi");
         assert_eq!(s.str_or("c", "no"), "no");
         assert_eq!(s.usize_req("a").unwrap(), 3);

@@ -1,8 +1,8 @@
 //! High-level entry points: run a scheme end to end, or the in-core
 //! reference sweep.
 
-use crate::chunking::plan::{plan_run, Scheme};
-use crate::chunking::Decomposition;
+use crate::chunking::plan::{plan_run_devices, Scheme};
+use crate::chunking::{Decomposition, DeviceAssignment};
 use crate::coordinator::backend::KernelBackend;
 use crate::coordinator::exec::{ExecStats, PlanExecutor};
 use crate::core::{Array2, Rect};
@@ -39,8 +39,38 @@ pub fn reference_run(
 }
 
 /// Run `n` time steps of `kind` over `initial` under the given scheme and
-/// run-time configuration (`d` chunks, `s_tb` TB steps per epoch, `k_on`
-/// fused steps per kernel), on the given backend.
+/// run-time configuration (`d` chunks sharded over `n_devices` simulated
+/// devices, `s_tb` TB steps per epoch, `k_on` fused steps per kernel), on
+/// the given backend. The in-core scheme is inherently single-device.
+#[allow(clippy::too_many_arguments)]
+pub fn run_scheme_on(
+    scheme: Scheme,
+    initial: &Array2,
+    kind: StencilKind,
+    n: usize,
+    d: usize,
+    n_devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    backend: &mut dyn KernelBackend,
+) -> Result<RunOutcome> {
+    crate::config::validate_devices(scheme, d, n_devices)?;
+    let dc = Decomposition::new(initial.rows(), initial.cols(), d, kind.radius());
+    let devs = if scheme == Scheme::InCore {
+        DeviceAssignment::single(dc.n_chunks())
+    } else {
+        DeviceAssignment::contiguous(dc.n_chunks(), n_devices)
+    };
+    let plans = plan_run_devices(scheme, &dc, &devs, n, s_tb, k_on);
+    let mut grid = initial.clone();
+    let mut exec = PlanExecutor::new(backend, kind);
+    exec.run(&mut grid, &dc, &plans)?;
+    let stats = exec.stats.clone();
+    Ok(RunOutcome { grid, stats })
+}
+
+/// Single-device [`run_scheme_on`] (the seed's original entry point).
+#[allow(clippy::too_many_arguments)]
 pub fn run_scheme(
     scheme: Scheme,
     initial: &Array2,
@@ -51,13 +81,7 @@ pub fn run_scheme(
     k_on: usize,
     backend: &mut dyn KernelBackend,
 ) -> Result<RunOutcome> {
-    let dc = Decomposition::new(initial.rows(), initial.cols(), d, kind.radius());
-    let plans = plan_run(scheme, &dc, n, s_tb, k_on);
-    let mut grid = initial.clone();
-    let mut exec = PlanExecutor::new(backend, kind);
-    exec.run(&mut grid, &dc, &plans)?;
-    let stats = exec.stats.clone();
-    Ok(RunOutcome { grid, stats })
+    run_scheme_on(scheme, initial, kind, n, d, 1, s_tb, k_on, backend)
 }
 
 #[cfg(test)]
@@ -110,6 +134,48 @@ mod tests {
     #[test]
     fn incore_matches_reference() {
         check_equiv(Scheme::InCore, StencilKind::Gradient2d, 64, 10, 1, 10, 4);
+    }
+
+    #[test]
+    fn multi_device_matches_reference_bit_exactly() {
+        let kind = StencilKind::Box { radius: 1 };
+        let initial = Array2::synthetic(160, 64, 21);
+        let reference = reference_run(&initial, kind, 12, &NaiveEngine);
+        for (scheme, k_on) in [(Scheme::So2dr, 3), (Scheme::ResReu, 1)] {
+            let mut single_stats = None;
+            for n_devices in [1usize, 2, 4] {
+                let mut backend = HostBackend::new(NaiveEngine);
+                let out = run_scheme_on(
+                    scheme, &initial, kind, 12, 4, n_devices, 6, k_on, &mut backend,
+                )
+                .unwrap();
+                assert!(
+                    out.grid.bit_eq(&reference),
+                    "{} on {n_devices} devices diverged: {}",
+                    scheme.name(),
+                    out.grid.max_abs_diff(&reference)
+                );
+                if n_devices > 1 {
+                    assert!(out.stats.p2p_copies > 0, "{} must exchange halos", scheme.name());
+                } else {
+                    assert_eq!(out.stats.p2p_bytes, 0);
+                }
+                // Logical transfer/sharing traffic is a property of the
+                // plan, not the sharding: only the D2D counters may vary
+                // with the device count.
+                match &single_stats {
+                    None => single_stats = Some(out.stats.clone()),
+                    Some(s) => {
+                        assert_eq!(s.htod_bytes, out.stats.htod_bytes);
+                        assert_eq!(s.dtoh_bytes, out.stats.dtoh_bytes);
+                        assert_eq!(s.od_bytes, out.stats.od_bytes, "{}", scheme.name());
+                        assert_eq!(s.rs_reads, out.stats.rs_reads);
+                        assert_eq!(s.rs_writes, out.stats.rs_writes);
+                        assert_eq!(s.computed_elems, out.stats.computed_elems);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,11 +1,14 @@
 //! The real-numerics interpreter of epoch plans.
 //!
 //! Executes an [`EpochPlan`] against actual data: the host grid plays the
-//! host memory, per-chunk `Array2` buffers play the device arena, and a
-//! [`RegionShareBuffer`] plays the device-resident sharing buffer. The
-//! result must match the in-core reference bit-exactly (same backend) —
-//! this is the correctness core of the reproduction: it exercises region
-//! sharing, trapezoid clamping, skewed windows, and epoch residuals.
+//! host memory, per-device `Array2` double buffers play the device
+//! arenas, and one [`RegionShareBuffer`] per device plays that device's
+//! resident sharing buffer. `D2D` ops move regions between device
+//! buffers — the real-numerics analog of a peer-to-peer halo exchange.
+//! The result must match the in-core reference bit-exactly (same
+//! backend) — this is the correctness core of the reproduction: it
+//! exercises region sharing, trapezoid clamping, skewed windows, epoch
+//! residuals, and multi-device sharding.
 
 use crate::chunking::plan::{ChunkOp, EpochPlan, Scheme};
 use crate::chunking::Decomposition;
@@ -28,12 +31,17 @@ pub struct ExecStats {
     pub rs_writes: u64,
     pub kernel_invocations: u64,
     pub fused_steps: u64,
+    /// Inter-device (peer-to-peer) halo-exchange traffic, in bytes —
+    /// executed `ChunkOp::D2D` ops, the DES's `OpKind::P2p` category.
+    pub p2p_bytes: u64,
+    /// Number of inter-device halo exchanges performed.
+    pub p2p_copies: u64,
     /// Total elements computed by kernels (sum of window areas).
     pub computed_elems: u64,
-    /// Peak bytes held by the region-sharing buffer.
+    /// Peak bytes held by the region-sharing buffers (summed over devices).
     pub rs_peak_bytes: u64,
     /// Peak bytes of chunk buffers live at once (sequential real path:
-    /// one chunk's double buffer).
+    /// one double buffer per device).
     pub arena_peak_bytes: u64,
 }
 
@@ -106,25 +114,35 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
     ) -> Result<()> {
         let buf_rows = Self::buffer_rows(dc, plans);
         let cols = dc.cols();
-        let mut rs = RegionShareBuffer::new();
-        // §Perf iteration 2: one double buffer reused across chunks and
-        // epochs (the device arena would do the same). Safe because every
-        // live row is written (HtoD/RS read) before any kernel reads it —
-        // the bit-exact equivalence suite guards this invariant.
-        let mut bufs = (Array2::zeros(buf_rows, cols), Array2::zeros(buf_rows, cols));
+        let n_devices = plans.iter().map(|p| p.n_devices).max().unwrap_or(1);
+        // One sharing buffer per device: an RS read only ever sees data
+        // resident on its own device (D2D ops bridge the gap).
+        let mut rs: Vec<RegionShareBuffer> =
+            (0..n_devices).map(|_| RegionShareBuffer::new()).collect();
+        // §Perf iteration 2: one double buffer per device, reused across
+        // chunks and epochs (the device arenas would do the same). Safe
+        // because every live row is written (HtoD/RS read) before any
+        // kernel reads it — the bit-exact equivalence suite guards this
+        // invariant.
+        let mut bufs: Vec<(Array2, Array2)> = (0..n_devices)
+            .map(|_| (Array2::zeros(buf_rows, cols), Array2::zeros(buf_rows, cols)))
+            .collect();
         for plan in plans {
             self.run_epoch(grid, dc, plan, buf_rows, cols, &mut rs, &mut bufs)
                 .with_context(|| format!("epoch at step {}", plan.start_step))?;
-            rs.clear();
+            for r in rs.iter_mut() {
+                r.clear();
+            }
             self.stats.epochs += 1;
         }
-        self.stats.rs_peak_bytes = rs.peak_bytes();
-        self.stats.od_bytes = rs.bytes_read() + rs.bytes_written();
-        self.stats.rs_reads = rs.n_reads();
-        self.stats.rs_writes = rs.n_writes();
+        self.stats.rs_peak_bytes = rs.iter().map(|r| r.peak_bytes()).sum();
+        self.stats.od_bytes = rs.iter().map(|r| r.bytes_read() + r.bytes_written()).sum();
+        self.stats.rs_reads = rs.iter().map(|r| r.n_reads()).sum();
+        self.stats.rs_writes = rs.iter().map(|r| r.n_writes()).sum();
         Ok(())
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn run_epoch(
         &mut self,
         grid: &mut Array2,
@@ -132,16 +150,16 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         plan: &EpochPlan,
         buf_rows: usize,
         cols: usize,
-        rs: &mut RegionShareBuffer,
-        bufs: &mut (Array2, Array2),
+        rs: &mut [RegionShareBuffer],
+        bufs: &mut [(Array2, Array2)],
     ) -> Result<()> {
         let radius = dc.radius();
-        let arena_bytes = 2 * (buf_rows * cols * 4) as u64;
+        let arena_bytes = plan.n_devices as u64 * 2 * (buf_rows * cols * 4) as u64;
         self.stats.arena_peak_bytes = self.stats.arena_peak_bytes.max(arena_bytes);
-        let (cur, scratch) = bufs;
-        let (cur, scratch) = (&mut *cur, &mut *scratch);
         for cp in &plan.chunks {
             let base = Self::buffer_base(dc, plan, cp.chunk);
+            let pair = &mut bufs[cp.device];
+            let (cur, scratch) = (&mut pair.0, &mut pair.1);
             if plan.scheme == Scheme::InCore {
                 // One-time residency: the whole grid lives on the device;
                 // the paper excludes these two transfers from timing.
@@ -162,12 +180,12 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                     }
                     ChunkOp::RsRead(region) => {
                         let local = Self::to_local(region.span, base, buf_rows)?;
-                        let data = rs
+                        let data = rs[cp.device]
                             .read(region.span, region.time_step)
                             .with_context(|| {
                                 format!(
-                                    "RS region {} @t{} missing (chunk {})",
-                                    region.span, region.time_step, cp.chunk
+                                    "RS region {} @t{} missing on device {} (chunk {})",
+                                    region.span, region.time_step, cp.device, cp.chunk
                                 )
                             })?
                             .clone();
@@ -176,7 +194,21 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                     ChunkOp::RsWrite(region) => {
                         let local = Self::to_local(region.span, base, buf_rows)?;
                         let data = cur.extract_rows(local);
-                        rs.write(region.span, region.time_step, data);
+                        rs[cp.device].write(region.span, region.time_step, data);
+                    }
+                    ChunkOp::D2D { src_dev, dst_dev, span, time_step } => {
+                        let data = rs[*src_dev]
+                            .peek(*span, *time_step)
+                            .with_context(|| {
+                                format!(
+                                    "D2D region {} @t{} missing on source device {}",
+                                    span, time_step, src_dev
+                                )
+                            })?
+                            .clone();
+                        self.stats.p2p_bytes += data.size_bytes();
+                        self.stats.p2p_copies += 1;
+                        rs[*dst_dev].receive(*span, *time_step, data);
                     }
                     ChunkOp::Kernel(inv) => {
                         let mut local_windows = Vec::with_capacity(inv.windows.len());

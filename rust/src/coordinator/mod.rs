@@ -17,7 +17,7 @@ pub mod pipeline;
 pub mod rs_buffer;
 
 pub use backend::{HostBackend, KernelBackend};
-pub use driver::{reference_run, run_scheme, RunOutcome};
+pub use driver::{reference_run, run_scheme, run_scheme_on, RunOutcome};
 pub use exec::{ExecStats, PlanExecutor};
 pub use pipeline::{run_pipeline, PipelineStats, Segment};
 pub use rs_buffer::RegionShareBuffer;

@@ -37,14 +37,8 @@ impl RegionShareBuffer {
     /// Store a region (copy of `rows` of `src`, in global coordinates
     /// `span`). Overwrites any previous region with the same key.
     pub fn write(&mut self, span: RowSpan, time_step: usize, data: Array2) {
-        assert_eq!(data.rows(), span.len(), "region shape mismatch");
-        let key = Key { lo: span.lo, hi: span.hi, time_step };
         let bytes = data.size_bytes();
-        if let Some(old) = self.regions.insert(key, data) {
-            self.cur_bytes -= old.size_bytes();
-        }
-        self.cur_bytes += bytes;
-        self.peak_bytes = self.peak_bytes.max(self.cur_bytes);
+        self.receive(span, time_step, data);
         self.writes += 1;
         self.bytes_written += bytes;
     }
@@ -60,6 +54,29 @@ impl RegionShareBuffer {
             self.bytes_read += a.size_bytes();
         }
         self.regions.get(&Key { lo: span.lo, hi: span.hi, time_step })
+    }
+
+    /// Non-accounting lookup, used by inter-device (D2D) halo exchange:
+    /// the link transfer is priced and counted separately from the
+    /// region-share read/write traffic, so peeking the source region must
+    /// not inflate the on-device copy counters.
+    pub fn peek(&self, span: RowSpan, time_step: usize) -> Option<&Array2> {
+        self.regions.get(&Key { lo: span.lo, hi: span.hi, time_step })
+    }
+
+    /// Land a region that arrived over the inter-device link. Tracks the
+    /// memory footprint (current/peak bytes) but not the copy counters:
+    /// the transfer is priced and counted as P2P traffic by the caller,
+    /// keeping `od_bytes`/`rs_writes` comparable across device counts.
+    pub fn receive(&mut self, span: RowSpan, time_step: usize, data: Array2) {
+        assert_eq!(data.rows(), span.len(), "region shape mismatch");
+        let key = Key { lo: span.lo, hi: span.hi, time_step };
+        let bytes = data.size_bytes();
+        if let Some(old) = self.regions.insert(key, data) {
+            self.cur_bytes -= old.size_bytes();
+        }
+        self.cur_bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.cur_bytes);
     }
 
     /// Drop all regions (end of epoch). Peak accounting is preserved.
@@ -106,6 +123,20 @@ mod tests {
         assert!(got.bit_eq(&data));
         assert!(rs.read(RowSpan::new(10, 14), 1).is_none());
         assert!(rs.read(RowSpan::new(10, 13), 0).is_none());
+    }
+
+    #[test]
+    fn receive_tracks_footprint_but_not_copy_counters() {
+        let mut rs = RegionShareBuffer::new();
+        let data = Array2::random(4, 8, 2, 0.0, 1.0);
+        rs.receive(RowSpan::new(3, 7), 1, data.clone());
+        assert_eq!(rs.current_bytes(), 4 * 8 * 4);
+        assert_eq!(rs.peak_bytes(), 4 * 8 * 4);
+        assert_eq!(rs.n_writes(), 0, "link landings are not on-device copies");
+        assert_eq!(rs.bytes_written(), 0);
+        // The landed region is readable like any other.
+        assert!(rs.read(RowSpan::new(3, 7), 1).unwrap().bit_eq(&data));
+        assert_eq!(rs.n_reads(), 1);
     }
 
     #[test]

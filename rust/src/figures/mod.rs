@@ -5,8 +5,8 @@
 //! Absolute seconds are *model outputs*; the claims under test are the
 //! shapes: who wins, by what factor, and where the crossovers fall.
 
-use crate::chunking::plan::{plan_run, Scheme};
-use crate::chunking::Decomposition;
+use crate::chunking::plan::{plan_run_devices, Scheme};
+use crate::chunking::{Decomposition, DeviceAssignment};
 use crate::coordinator::{HostBackend, PlanExecutor};
 use crate::gpu::cost::{CostModel, MachineSpec};
 use crate::gpu::des::{simulate, SimReport};
@@ -36,7 +36,56 @@ pub fn chosen_config(kind: StencilKind) -> (usize, usize) {
     }
 }
 
-/// Simulate one configuration at any grid size.
+/// Simulate one configuration on an arbitrary (possibly non-square)
+/// grid, sharded over `devices` simulated GPUs (contiguous chunk blocks,
+/// P2P halo exchange at the device boundaries). This is the single
+/// pricing pipeline behind `simulate_config*` and `so2dr run`'s modeled
+/// makespan line.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_grid_devices(
+    machine: &MachineSpec,
+    scheme: Scheme,
+    kind: StencilKind,
+    rows: usize,
+    cols: usize,
+    d: usize,
+    devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    n: usize,
+    n_strm: usize,
+) -> SimReport {
+    let dc = Decomposition::new(rows, cols, d, kind.radius());
+    let devs = if scheme == Scheme::InCore {
+        DeviceAssignment::single(dc.n_chunks())
+    } else {
+        DeviceAssignment::contiguous(dc.n_chunks(), devices)
+    };
+    let plans = plan_run_devices(scheme, &dc, &devs, n, s_tb, k_on);
+    let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+    let ops = flatten_run(&plans, &dc, kind, n_strm, buf_rows);
+    simulate(&ops, &CostModel::new(machine.clone()), n_strm)
+}
+
+/// Simulate one square configuration at any grid size, sharded over
+/// `devices` simulated GPUs.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_config_devices(
+    machine: &MachineSpec,
+    scheme: Scheme,
+    kind: StencilKind,
+    sz: usize,
+    d: usize,
+    devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    n: usize,
+) -> SimReport {
+    simulate_grid_devices(machine, scheme, kind, sz, sz, d, devices, s_tb, k_on, n, N_STRM)
+}
+
+/// Simulate one single-device configuration at any grid size.
+#[allow(clippy::too_many_arguments)]
 pub fn simulate_config(
     machine: &MachineSpec,
     scheme: Scheme,
@@ -47,11 +96,7 @@ pub fn simulate_config(
     k_on: usize,
     n: usize,
 ) -> SimReport {
-    let dc = Decomposition::new(sz, sz, d, kind.radius());
-    let plans = plan_run(scheme, &dc, n, s_tb, k_on);
-    let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
-    let ops = flatten_run(&plans, &dc, kind, N_STRM, buf_rows);
-    simulate(&ops, &CostModel::new(machine.clone()), N_STRM)
+    simulate_config_devices(machine, scheme, kind, sz, d, 1, s_tb, k_on, n)
 }
 
 /// Tables I–III: variable glossary, machine, benchmark set.
@@ -239,6 +284,40 @@ pub fn fig10(machine: &MachineSpec) -> String {
     format!("== Fig. 10: breakdown, SO2DR vs in-core ==\n{}", breakdown_table(&refs).render())
 }
 
+/// Strong scaling across simulated GPU counts (beyond the paper: the
+/// ROADMAP's sharded direction). Work is held fixed (same grid, chunking
+/// and schedule); chunks are sharded over 1/2/4/8 devices with P2P halo
+/// exchange at the shard boundaries.
+pub fn scaling(machine: &MachineSpec) -> String {
+    let mut out = String::from(
+        "== Strong scaling: sharded SO2DR epochs over multiple simulated GPUs ==\n\
+         (d=8 chunks, paper-scale grid; P2P halo exchange at shard boundaries)\n",
+    );
+    let d = 8;
+    for kind in [StencilKind::Box { radius: 1 }, StencilKind::Gradient2d] {
+        let (_, s_tb) = chosen_config(kind);
+        let mut t = Table::new(vec!["devices", "time (s)", "speedup", "P2P (s)", "peak mem/dev"]);
+        let mut base = f64::NAN;
+        for devices in [1usize, 2, 4, 8] {
+            let rep = simulate_config_devices(
+                machine, Scheme::So2dr, kind, SZ_OOC, d, devices, s_tb, K_ON, N_STEPS,
+            );
+            if devices == 1 {
+                base = rep.makespan;
+            }
+            t.row(vec![
+                devices.to_string(),
+                format!("{:.3}", rep.makespan),
+                format!("{:.2}x", base / rep.makespan),
+                format!("{:.3}", rep.busy_of(OpKind::P2p)),
+                crate::util::fmt_bytes(rep.peak_dmem),
+            ]);
+        }
+        out.push_str(&format!("\n-- {} (S_TB={s_tb}) --\n{}", kind.name(), t.render()));
+    }
+    out
+}
+
 /// All figures in order.
 pub fn all(machine: &MachineSpec) -> Vec<(&'static str, String)> {
     vec![
@@ -251,6 +330,7 @@ pub fn all(machine: &MachineSpec) -> Vec<(&'static str, String)> {
         ("fig9", fig9(machine)),
         ("fig10", fig10(machine)),
         ("ablation_kon", ablation_kon(machine)),
+        ("scaling", scaling(machine)),
     ]
 }
 
@@ -263,6 +343,21 @@ mod tests {
         let m = MachineSpec::rtx3080();
         let txt = fig6(&m);
         assert!(txt.contains("box2d1r") && txt.contains("average speedup"));
+    }
+
+    #[test]
+    fn scaling_figure_reports_all_device_counts() {
+        let m = MachineSpec::rtx3080();
+        let txt = scaling(&m);
+        assert!(txt.contains("Strong scaling"));
+        assert!(txt.contains("box2d1r") && txt.contains("gradient2d"));
+        // One row per device count per benchmark.
+        for dev in ["1", "2", "4", "8"] {
+            assert!(
+                txt.lines().any(|l| l.trim_start().starts_with(dev)),
+                "missing row for {dev} devices:\n{txt}"
+            );
+        }
     }
 
     #[test]

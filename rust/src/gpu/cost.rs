@@ -50,8 +50,16 @@ pub struct MachineSpec {
     /// Speed factor a kernel gains when another kernel is in flight
     /// (cross-stream memory/compute phase overlap).
     pub overlap_speedup: f64,
-    /// Max kernels in flight.
+    /// Max kernels in flight (per device in multi-device runs).
     pub kernel_concurrency: usize,
+    /// Inter-device (peer-to-peer) link effective bandwidth (B/s) —
+    /// PCIe P2P on the modeled testbed; NVLink-class values can be set
+    /// with `--d2d-gbps`. Devices are modeled homogeneous, one directed
+    /// link per adjacent device pair (contiguous 1-D sharding only ever
+    /// exchanges with a neighbor).
+    pub bw_link: f64,
+    /// Fixed inter-device transfer launch latency (s).
+    pub link_latency_s: f64,
 }
 
 impl MachineSpec {
@@ -72,6 +80,8 @@ impl MachineSpec {
             eff_compute: 0.45,
             overlap_speedup: 1.22,
             kernel_concurrency: 2,
+            bw_link: 11.0e9,
+            link_latency_s: 8.0e-6,
         }
     }
 
@@ -81,7 +91,14 @@ impl MachineSpec {
         m.name = "RTX 3080 / PCIe 4.0 x16 (what-if)".into();
         m.bw_htod = 24.0e9;
         m.bw_dtoh = 24.0e9;
+        m.bw_link = 20.0e9;
         m
+    }
+
+    /// Override the inter-device link bandwidth (`--d2d-gbps`).
+    pub fn with_d2d_gbps(mut self, gbps: f64) -> Self {
+        self.bw_link = gbps * 1e9;
+        self
     }
 }
 
@@ -118,6 +135,11 @@ impl CostModel {
     /// twice (read + write).
     pub fn d2d_time(&self, bytes: u64) -> f64 {
         self.machine.copy_launch_s + 2.0 * bytes as f64 / self.machine.bw_dmem
+    }
+
+    /// Inter-device (peer-to-peer) halo-exchange transfer over the link.
+    pub fn link_time(&self, bytes: u64) -> f64 {
+        self.machine.link_latency_s + bytes as f64 / self.machine.bw_link
     }
 
     /// Fused-kernel service time. `areas[t]` is the number of elements
@@ -167,6 +189,20 @@ mod tests {
         let t2 = c.htod_time(2 << 30);
         assert!(t2 > 1.9 * t1 && t2 < 2.1 * t1);
         assert!(c.htod_time(0) > 0.0, "launch latency");
+    }
+
+    #[test]
+    fn link_time_scales_and_overrides() {
+        let c = cm();
+        let t1 = c.link_time(1 << 30);
+        let t2 = c.link_time(2 << 30);
+        assert!(t2 > 1.9 * t1 && t2 < 2.1 * t1);
+        assert!(c.link_time(0) > 0.0, "link launch latency");
+        // The link is slower than device memory: P2P halo exchange must
+        // cost more than the equivalent on-device copy at scale.
+        assert!(c.link_time(1 << 30) > c.d2d_time(1 << 30));
+        let fast = CostModel::new(MachineSpec::rtx3080().with_d2d_gbps(50.0));
+        assert!(fast.link_time(1 << 30) < t1);
     }
 
     #[test]

@@ -1,18 +1,22 @@
 //! The discrete-event simulator: replays a flattened op graph on the
 //! machine model and reports makespan + per-category breakdown.
 //!
-//! Resources (as on the modeled GPU):
-//! - one HtoD PCIe channel and one DtoH channel (full duplex);
-//! - one on-device copy engine (region-sharing copies);
-//! - a kernel engine with `kernel_concurrency` slots; when more than one
-//!   kernel is in flight, each runs `overlap_speedup` faster (cross-stream
-//!   memory/compute phase overlap — the effect that lets multi-stream
-//!   SO2DR beat the single-stream in-core code, paper §V-D).
+//! Resources (as on the modeled GPUs — homogeneous, one set per device):
+//! - one HtoD PCIe channel and one DtoH channel per device (full duplex);
+//! - one on-device copy engine per device (region-sharing copies);
+//! - per device, a kernel engine with `kernel_concurrency` slots; when
+//!   more than one kernel is in flight on a device, each runs
+//!   `overlap_speedup` faster (cross-stream memory/compute phase overlap
+//!   — the effect that lets multi-stream SO2DR beat the single-stream
+//!   in-core code, paper §V-D);
+//! - one directed peer-to-peer link per adjacent device pair (`P2p`
+//!   halo-exchange transfers, priced by `CostModel::link_time`).
 //!
 //! Streams are in-order queues: an op may start only when (a) it is at
 //! the head of its stream, (b) its dependency edges are satisfied, and
-//! (c) its resource has a free slot. Device-memory occupancy is tracked
-//! from the ops' alloc/free deltas and checked against capacity.
+//! (c) its resource instance has a free slot. Memory occupancy is
+//! tracked per device from the ops' alloc/free deltas (`mem_device`) and
+//! checked against the per-device capacity.
 
 use super::cost::CostModel;
 use super::flatten::{OpKind, SimOp};
@@ -26,11 +30,16 @@ pub struct SimReport {
     /// Total busy seconds per category (sum over ops; concurrency can
     /// make a category's busy time exceed the makespan).
     pub busy: HashMap<OpKind, f64>,
+    /// Busy seconds per `(device, category)` — for `P2p` the source
+    /// device of the link.
+    pub busy_dev: HashMap<(usize, OpKind), f64>,
     pub op_counts: HashMap<OpKind, usize>,
-    /// Peak device-memory occupancy (bytes).
+    /// Peak memory occupancy of the most-loaded device (bytes).
     pub peak_dmem: u64,
-    /// True when peak occupancy exceeded capacity (the run would have
-    /// failed on the real machine).
+    /// Peak memory occupancy per device (bytes).
+    pub peak_dmem_per_device: Vec<u64>,
+    /// True when any device's peak occupancy exceeded its capacity (the
+    /// run would have failed on the real machine).
     pub capacity_exceeded: bool,
 }
 
@@ -39,8 +48,18 @@ impl SimReport {
         self.busy.get(&k).copied().unwrap_or(0.0)
     }
 
+    /// Busy seconds of one category on one device.
+    pub fn busy_of_dev(&self, device: usize, k: OpKind) -> f64 {
+        self.busy_dev.get(&(device, k)).copied().unwrap_or(0.0)
+    }
+
     pub fn count_of(&self, k: OpKind) -> usize {
         self.op_counts.get(&k).copied().unwrap_or(0)
+    }
+
+    /// Number of devices that appeared in the replayed op graph.
+    pub fn n_devices(&self) -> usize {
+        self.peak_dmem_per_device.len().max(1)
     }
 }
 
@@ -52,7 +71,9 @@ enum OpState {
 }
 
 /// Run the simulation. `ops` must be topologically ordered by id (the
-/// flattener guarantees this).
+/// flattener guarantees this). `n_strm` is the per-device stream count;
+/// the queue array grows automatically to cover every stream id the
+/// flattener assigned (multi-device plans use `n_devices * n_strm`).
 pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
     let n = ops.len();
     let mut state = vec![OpState::Waiting; n];
@@ -64,15 +85,19 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
         }
     }
     // Per-stream FIFO cursors.
-    let n_strm = n_strm.max(1);
+    let n_strm = n_strm
+        .max(1)
+        .max(ops.iter().map(|o| o.stream + 1).max().unwrap_or(1));
     let mut stream_q: Vec<Vec<usize>> = vec![Vec::new(); n_strm];
     for op in ops {
         stream_q[op.stream % n_strm].push(op.id);
     }
     let mut stream_head = vec![0usize; n_strm];
 
-    // Resource occupancy.
-    let mut busy_slots: HashMap<OpKind, usize> = HashMap::new();
+    // Resource occupancy, per (category, resource instance): each device
+    // has its own PCIe channels, copy engine and kernel slots; each P2p
+    // link is its own instance.
+    let mut busy_slots: HashMap<(OpKind, usize), usize> = HashMap::new();
     let slots_of = |k: OpKind| -> usize {
         match k {
             OpKind::Kernel => cost.machine.kernel_concurrency.max(1),
@@ -80,13 +105,20 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
         }
     };
 
+    let n_devices = ops
+        .iter()
+        .map(|o| o.mem_device.max(o.device) + 1)
+        .max()
+        .unwrap_or(1);
     let mut now = 0.0f64;
     let mut report = SimReport::default();
-    let mut dmem: i64 = 0;
+    report.peak_dmem_per_device = vec![0u64; n_devices];
+    let mut dmem: Vec<i64> = vec![0; n_devices];
     let mut running: Vec<usize> = Vec::new();
     let mut done_count = 0usize;
 
     // Try to start every startable op; returns true if any started.
+    #[allow(clippy::too_many_arguments)]
     fn try_start(
         ops: &[SimOp],
         cost: &CostModel,
@@ -95,11 +127,11 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
         deps_left: &[usize],
         stream_q: &[Vec<usize>],
         stream_head: &mut [usize],
-        busy_slots: &mut HashMap<OpKind, usize>,
+        busy_slots: &mut HashMap<(OpKind, usize), usize>,
         slots_of: &dyn Fn(OpKind) -> usize,
         running: &mut Vec<usize>,
         report: &mut SimReport,
-        dmem: &mut i64,
+        dmem: &mut [i64],
     ) -> bool {
         let mut any = false;
         for s in 0..stream_q.len() {
@@ -109,7 +141,8 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
                     break;
                 }
                 let op = &ops[cand];
-                let used = busy_slots.get(&op.kind).copied().unwrap_or(0);
+                let res = (op.kind, op.resource);
+                let used = busy_slots.get(&res).copied().unwrap_or(0);
                 if used >= slots_of(op.kind) {
                     break;
                 }
@@ -118,15 +151,18 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
                     OpKind::HtoD => cost.htod_time(op.bytes),
                     OpKind::DtoH => cost.dtoh_time(op.bytes),
                     OpKind::D2D => cost.d2d_time(op.bytes),
+                    OpKind::P2p => cost.link_time(op.bytes),
                     OpKind::Kernel => cost.kernel_time(op.stencil, &op.areas),
                 };
                 if op.kind == OpKind::Kernel && used >= 1 {
                     dur /= cost.machine.overlap_speedup;
                 }
-                *busy_slots.entry(op.kind).or_insert(0) += 1;
-                *dmem += op.alloc_delta;
-                report.peak_dmem = report.peak_dmem.max((*dmem).max(0) as u64);
+                *busy_slots.entry(res).or_insert(0) += 1;
+                dmem[op.mem_device] += op.alloc_delta;
+                let dev_peak = &mut report.peak_dmem_per_device[op.mem_device];
+                *dev_peak = (*dev_peak).max(dmem[op.mem_device].max(0) as u64);
                 *report.busy.entry(op.kind).or_insert(0.0) += dur;
+                *report.busy_dev.entry((op.device, op.kind)).or_insert(0.0) += dur;
                 *report.op_counts.entry(op.kind).or_insert(0) += 1;
                 state[cand] = OpState::Running { end: now + dur };
                 running.push(cand);
@@ -194,8 +230,8 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
             state[oid] = OpState::Done;
             done_count += 1;
             let op = &ops[oid];
-            *busy_slots.get_mut(&op.kind).unwrap() -= 1;
-            dmem += op.free_delta;
+            *busy_slots.get_mut(&(op.kind, op.resource)).unwrap() -= 1;
+            dmem[op.mem_device] += op.free_delta;
             let s = op.stream % n_strm;
             debug_assert_eq!(stream_q[s][stream_head[s]], oid, "stream completion order");
             stream_head[s] += 1;
@@ -207,6 +243,7 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
         // (No action needed — next loop iteration re-reads it.)
     }
     report.makespan = now;
+    report.peak_dmem = report.peak_dmem_per_device.iter().copied().max().unwrap_or(0);
     if report.peak_dmem > cost.machine.c_dmem {
         report.capacity_exceeded = true;
     }

@@ -3,12 +3,22 @@
 //!
 //! Dependency structure (mirrors what CUDA events would enforce):
 //! - ops of one chunk-epoch are FIFO on their stream (chunks round-robin
-//!   over `n_strm` streams, as in the paper);
-//! - `RsRead` waits for the matching `RsWrite` of the neighbor chunk
-//!   (same epoch, span and time step) — for ResReu this creates the
-//!   one-step-skewed wavefront pipeline across chunks;
+//!   over `n_strm` streams *per device*, as in the paper; stream ids are
+//!   `device * n_strm + chunk % n_strm`);
+//! - `RsRead` waits for the latest provider of the matching region (same
+//!   epoch, span and time step): the neighbor's `RsWrite`, or — when the
+//!   producer lives on another device — the `P2p` link transfer that
+//!   lands the region on the reader's device. For ResReu this creates
+//!   the one-step-skewed wavefront pipeline across chunks and devices;
 //! - an epoch's `HtoD` waits for every previous-epoch `DtoH` whose rows
 //!   overlap it (host data must be final).
+//!
+//! Resources are per device (each simulated GPU has its own PCIe pair,
+//! copy engine and kernel slots); `P2p` transfers occupy one directed
+//! link per adjacent device pair. Memory deltas are tracked per device
+//! (`mem_device`): a link transfer allocates the region copy on the
+//! destination device, and the producing chunk's retirement releases the
+//! source copy.
 
 use crate::chunking::plan::{ChunkOp, EpochPlan, Scheme};
 use crate::chunking::Decomposition;
@@ -23,6 +33,8 @@ pub enum OpKind {
     DtoH,
     /// On-device region-sharing copy.
     D2D,
+    /// Inter-device (peer-to-peer) halo exchange over the link.
+    P2p,
     Kernel,
 }
 
@@ -32,6 +44,7 @@ impl OpKind {
             OpKind::HtoD => "HtoD",
             OpKind::DtoH => "DtoH",
             OpKind::D2D => "O/D",
+            OpKind::P2p => "P2P",
             OpKind::Kernel => "kernel",
         }
     }
@@ -45,6 +58,15 @@ pub struct SimOp {
     pub stream: usize,
     pub chunk: usize,
     pub epoch: usize,
+    /// Device executing the op (for `P2p`: the source device).
+    pub device: usize,
+    /// Resource instance the op occupies: the device id for per-device
+    /// engines, a directed-pair id for `P2p` links. Resource instances
+    /// are scoped per `OpKind`, so ids never collide across kinds.
+    pub resource: usize,
+    /// Device whose memory `alloc_delta`/`free_delta` apply to (for
+    /// `P2p`: the destination device, which receives the region copy).
+    pub mem_device: usize,
     /// Transfer/copy payload (bytes); 0 for kernels.
     pub bytes: u64,
     /// Kernel fused-step areas (elements); empty for copies.
@@ -57,6 +79,11 @@ pub struct SimOp {
     pub alloc_delta: i64,
     /// ... and when it COMPLETES (buffer frees are negative).
     pub free_delta: i64,
+}
+
+/// Directed-pair resource id for a P2P link (scoped to `OpKind::P2p`).
+fn link_resource(src_dev: usize, dst_dev: usize) -> usize {
+    src_dev * 4096 + dst_dev
 }
 
 /// Flatten a multi-epoch run. `n_strm` streams; chunk buffers are double
@@ -81,17 +108,29 @@ pub fn flatten_run(
     for (e, plan) in plans.iter().enumerate() {
         let mut this_dtoh: Vec<(RowSpan, usize)> = Vec::new();
         for cp in &plan.chunks {
-            let stream = cp.chunk % n_strm.max(1);
+            let stream = cp.device * n_strm.max(1) + cp.chunk % n_strm.max(1);
             let mut first_of_chunk = true;
             let n_ops = cp.ops.len();
             // RS regions are freed by their consumer: every byte this
             // chunk reads from the sharing buffer is released when the
-            // chunk retires (matches the producer's alloc at RsWrite).
+            // chunk retires (matches the alloc of the region's provider —
+            // the neighbor's RsWrite, or the P2p landing it here).
             let rs_read_bytes: u64 = cp
                 .ops
                 .iter()
                 .map(|op| match op {
                     ChunkOp::RsRead(r) => r.span.len() as u64 * row_bytes,
+                    _ => 0,
+                })
+                .sum();
+            // Source-side copies this chunk shipped to another device are
+            // released when the chunk retires (the destination copy is
+            // released by its consumer, above).
+            let p2p_out_bytes: u64 = cp
+                .ops
+                .iter()
+                .map(|op| match op {
+                    ChunkOp::D2D { span, .. } => span.len() as u64 * row_bytes,
                     _ => 0,
                 })
                 .sum();
@@ -116,6 +155,13 @@ pub fn flatten_run(
                         rs_writers.insert((e, r.span.lo, r.span.hi, r.time_step), id);
                         (OpKind::D2D, r.span.len() as u64 * row_bytes, vec![], vec![])
                     }
+                    ChunkOp::D2D { span, time_step, .. } => {
+                        // The link transfer becomes the region's provider:
+                        // the consumer on the other device must wait for
+                        // it, not for the source-side write.
+                        rs_writers.insert((e, span.lo, span.hi, *time_step), id);
+                        (OpKind::P2p, span.len() as u64 * row_bytes, vec![], vec![])
+                    }
                     ChunkOp::RsRead(r) => {
                         let deps = rs_writers
                             .get(&(e, r.span.lo, r.span.hi, r.time_step))
@@ -139,19 +185,23 @@ pub fn flatten_run(
                 if !first_of_chunk {
                     deps.push(id - 1);
                 }
+                let (resource, mem_device) = match op {
+                    ChunkOp::D2D { src_dev, dst_dev, .. } => {
+                        (link_resource(*src_dev, *dst_dev), *dst_dev)
+                    }
+                    _ => (cp.device, cp.device),
+                };
                 let alloc_delta = if first_of_chunk && plan.scheme != Scheme::InCore {
                     buf_bytes as i64
-                } else if matches!(op, ChunkOp::RsWrite(r) if r.span.len() > 0) {
-                    if let ChunkOp::RsWrite(r) = op {
-                        (r.span.len() as u64 * row_bytes) as i64
-                    } else {
-                        0
-                    }
                 } else {
-                    0
+                    match op {
+                        ChunkOp::RsWrite(r) => (r.span.len() as u64 * row_bytes) as i64,
+                        ChunkOp::D2D { span, .. } => (span.len() as u64 * row_bytes) as i64,
+                        _ => 0,
+                    }
                 };
                 let free_delta = if last_of_chunk && plan.scheme != Scheme::InCore {
-                    -(buf_bytes as i64) - rs_read_bytes as i64
+                    -(buf_bytes as i64) - rs_read_bytes as i64 - p2p_out_bytes as i64
                 } else {
                     0
                 };
@@ -161,6 +211,9 @@ pub fn flatten_run(
                     stream,
                     chunk: cp.chunk,
                     epoch: e,
+                    device: cp.device,
+                    resource,
+                    mem_device,
                     bytes,
                     areas,
                     stencil: kind,
@@ -252,5 +305,85 @@ mod tests {
                 assert!(d < op.id, "dep {d} not before {}", op.id);
             }
         }
+    }
+
+    #[test]
+    fn single_device_ops_have_no_p2p() {
+        for scheme in [Scheme::So2dr, Scheme::ResReu] {
+            let (_, ops) = setup(scheme);
+            assert!(ops.iter().all(|o| o.kind != OpKind::P2p), "{}", scheme.name());
+            assert!(ops.iter().all(|o| o.device == 0 && o.mem_device == 0));
+        }
+    }
+}
+
+#[cfg(test)]
+mod device_tests {
+    use super::*;
+    use crate::chunking::plan::plan_run_devices;
+    use crate::chunking::DeviceAssignment;
+
+    fn setup(scheme: Scheme, n_dev: usize) -> Vec<SimOp> {
+        let dc = Decomposition::new(240, 64, 4, 1);
+        let devs = DeviceAssignment::contiguous(4, n_dev);
+        let plans = plan_run_devices(scheme, &dc, &devs, 12, 6, 2);
+        let buf_rows = crate::coordinator::PlanExecutor::<
+            crate::coordinator::HostBackend<crate::stencil::NaiveEngine>,
+        >::buffer_rows(&dc, &plans);
+        flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows)
+    }
+
+    #[test]
+    fn streams_are_per_device() {
+        let ops = setup(Scheme::So2dr, 2);
+        for op in &ops {
+            assert_eq!(op.stream, op.device * 3 + op.chunk % 3);
+        }
+        // Both devices contribute streams.
+        assert!(ops.iter().any(|o| o.stream < 3));
+        assert!(ops.iter().any(|o| o.stream >= 3));
+    }
+
+    #[test]
+    fn p2p_ops_appear_at_boundaries_and_provide_regions() {
+        let ops = setup(Scheme::So2dr, 2);
+        let p2p: Vec<&SimOp> = ops.iter().filter(|o| o.kind == OpKind::P2p).collect();
+        // One boundary, one raw exchange per epoch, two epochs.
+        assert_eq!(p2p.len(), 2);
+        for op in &p2p {
+            assert_eq!(op.device, 0, "producer side of the 1|2 boundary");
+            assert_eq!(op.mem_device, 1, "region lands on the consumer device");
+            assert!(op.bytes > 0);
+            // Cross-device reads must chain through the link transfer.
+            let readers: Vec<&SimOp> = ops
+                .iter()
+                .filter(|o| o.kind == OpKind::D2D && o.deps.contains(&op.id))
+                .collect();
+            assert_eq!(readers.len(), 1, "exactly one consumer per exchange");
+            assert_eq!(readers[0].device, 1);
+        }
+    }
+
+    #[test]
+    fn alloc_balances_free_across_devices() {
+        for scheme in [Scheme::So2dr, Scheme::ResReu] {
+            for n_dev in [2usize, 4] {
+                let ops = setup(scheme, n_dev);
+                let alloc: i64 = ops.iter().map(|o| o.alloc_delta).sum();
+                let free: i64 = ops.iter().map(|o| o.free_delta).sum();
+                assert_eq!(alloc + free, 0, "{} on {n_dev} devices", scheme.name());
+            }
+        }
+    }
+
+    #[test]
+    fn p2p_links_are_distinct_directed_resources() {
+        let ops = setup(Scheme::ResReu, 4);
+        let mut links: Vec<usize> =
+            ops.iter().filter(|o| o.kind == OpKind::P2p).map(|o| o.resource).collect();
+        links.sort_unstable();
+        links.dedup();
+        // Three device boundaries, all flowing low -> high device.
+        assert_eq!(links.len(), 3);
     }
 }

@@ -10,6 +10,16 @@
 //!   region sharing, temporal blocking, parameter selection, a simulated
 //!   device (DES) for paper-scale performance studies, and a PJRT runtime
 //!   that executes AOT-compiled chunk programs for real numerics.
+//!   - **Multi-device sharding:** epoch plans carry a chunk→device
+//!     assignment ([`chunking::DeviceAssignment`], contiguous blocks);
+//!     region shares that cross a device boundary become peer-to-peer
+//!     halo exchanges (`ChunkOp::D2D`). Both interpreters honor it: the
+//!     real-numerics executor runs per-device arenas + sharing buffers
+//!     (bit-exact vs. the reference at every device count), and the DES
+//!     models per-device PCIe/copy/kernel resources plus an inter-device
+//!     link channel (`MachineSpec::bw_link`, `--d2d-gbps`). Known
+//!     simplifications: homogeneous devices, one directed link per
+//!     adjacent pair, host-mediated epoch boundaries.
 //! - **L2 (`python/compile/model.py`):** the fixed-shape chunk program,
 //!   AOT-lowered to HLO text.
 //! - **L1 (`python/compile/kernels/`):** the Pallas multi-step stencil

@@ -13,7 +13,7 @@
 use anyhow::{bail, Context, Result};
 use so2dr::chunking::Scheme;
 use so2dr::config::RunConfig;
-use so2dr::coordinator::{reference_run, run_scheme, HostBackend, KernelBackend};
+use so2dr::coordinator::{reference_run, run_scheme, run_scheme_on, HostBackend, KernelBackend};
 use so2dr::gpu::MachineSpec;
 use so2dr::metrics::emit;
 use so2dr::runtime::PjrtBackend;
@@ -69,10 +69,20 @@ impl Args {
 }
 
 fn machine_of(args: &Args) -> Result<MachineSpec> {
-    match args.get("machine").unwrap_or("rtx3080") {
-        "rtx3080" => Ok(MachineSpec::rtx3080()),
-        "rtx3080-pcie4" => Ok(MachineSpec::rtx3080_pcie4()),
+    let machine = match args.get("machine").unwrap_or("rtx3080") {
+        "rtx3080" => MachineSpec::rtx3080(),
+        "rtx3080-pcie4" => MachineSpec::rtx3080_pcie4(),
         other => bail!("unknown machine {other:?} (rtx3080|rtx3080-pcie4)"),
+    };
+    match args.get("d2d-gbps") {
+        Some(v) => {
+            let gbps: f64 = v.parse().context("--d2d-gbps must be a number")?;
+            if !(gbps > 0.0) {
+                bail!("--d2d-gbps must be positive");
+            }
+            Ok(machine.with_d2d_gbps(gbps))
+        }
+        None => Ok(machine),
     }
 }
 
@@ -101,6 +111,10 @@ fn config_of(args: &Args) -> Result<RunConfig> {
     cfg.k_on = args.usize_or("k-on", cfg.k_on)?;
     cfg.n = args.usize_or("n", cfg.n)?;
     cfg.n_strm = args.usize_or("n-strm", cfg.n_strm)?;
+    cfg.devices = args.usize_or("devices", cfg.devices)?;
+    if let Some(v) = args.get("d2d-gbps") {
+        cfg.d2d_gbps = Some(v.parse().context("--d2d-gbps must be a number")?);
+    }
     if cfg.scheme == Scheme::ResReu {
         cfg.k_on = 1;
     }
@@ -148,31 +162,70 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!(
             "so2dr run [--config f.toml] [--scheme so2dr|resreu|incore] [--kind box2d1r|...|gradient2d]\n\
              \x20         [--sz N | --rows N --cols N] [--d N] [--s-tb N] [--k-on N] [--n N]\n\
+             \x20         [--devices N] [--d2d-gbps X]\n\
              \x20         [--backend host-naive|host-opt|pjrt] [--no-verify x]"
         );
         return Ok(());
     }
     let cfg = config_of(args)?;
+    // Resolve the pricing machine up front so a bad --machine fails
+    // before the expensive real-numerics run, not after it.
+    // (machine_of already applies the --d2d-gbps flag; a config-file
+    // override is applied on top without clobbering --machine defaults.)
+    let pricing_machine = if cfg.devices > 1 {
+        let mut machine = machine_of(args)?;
+        if let Some(gbps) = cfg.d2d_gbps {
+            machine = machine.with_d2d_gbps(gbps);
+        }
+        Some(machine)
+    } else {
+        None
+    };
     println!("run: {}", cfg.summary());
     let initial = Array2::synthetic(cfg.rows, cfg.cols, cfg.seed);
     let mut backend = make_backend(&cfg)?;
     let t0 = std::time::Instant::now();
-    let out = run_scheme(
-        cfg.scheme, &initial, cfg.kind, cfg.n, cfg.d, cfg.s_tb, cfg.k_on, backend.as_mut(),
+    let out = run_scheme_on(
+        cfg.scheme,
+        &initial,
+        cfg.kind,
+        cfg.n,
+        cfg.d,
+        cfg.devices,
+        cfg.s_tb,
+        cfg.k_on,
+        backend.as_mut(),
     )?;
     let wall = t0.elapsed().as_secs_f64();
     let s = &out.stats;
     println!("backend: {}", backend.name());
     println!("wall time: {}", fmt_secs(wall));
     println!(
-        "epochs {}  kernels {}  fused-steps {}  HtoD {}  DtoH {}  O/D {}",
+        "epochs {}  kernels {}  fused-steps {}  HtoD {}  DtoH {}  O/D {}  P2P {} ({} copies)",
         s.epochs,
         s.kernel_invocations,
         s.fused_steps,
         fmt_bytes(s.htod_bytes),
         fmt_bytes(s.dtoh_bytes),
         fmt_bytes(s.od_bytes),
+        fmt_bytes(s.p2p_bytes),
+        s.p2p_copies,
     );
+    if let Some(machine) = pricing_machine {
+        // Price the executed schedule on the machine model so --devices /
+        // --d2d-gbps show their performance effect next to the real run.
+        let link_gbps = machine.bw_link / 1e9;
+        let rep = so2dr::figures::simulate_grid_devices(
+            &machine, cfg.scheme, cfg.kind, cfg.rows, cfg.cols, cfg.d, cfg.devices, cfg.s_tb,
+            cfg.k_on, cfg.n, cfg.n_strm,
+        );
+        println!(
+            "modeled makespan on {} simulated GPUs (link {link_gbps:.1} GB/s): {}  (P2P busy {})",
+            cfg.devices,
+            fmt_secs(rep.makespan),
+            fmt_secs(rep.busy_of(so2dr::gpu::OpKind::P2p)),
+        );
+    }
     let interior =
         ((cfg.rows - 2 * cfg.kind.radius()) * (cfg.cols - 2 * cfg.kind.radius())) as u64;
     println!("redundant compute: {:.2}%", 100.0 * s.redundancy(interior, cfg.n as u64));
@@ -266,7 +319,8 @@ fn cmd_autotune(args: &Args) -> Result<()> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     if args.help() {
         println!(
-            "so2dr simulate [--scheme S] [--kind K] [--sz N] [--d N] [--s-tb N] [--k-on N] [--n N] [--machine M]"
+            "so2dr simulate [--scheme S] [--kind K] [--sz N] [--d N] [--devices N] [--d2d-gbps X]\n\
+             \x20              [--s-tb N] [--k-on N] [--n N] [--machine M]"
         );
         return Ok(());
     }
@@ -275,17 +329,39 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let kind = StencilKind::parse(args.get("kind").unwrap_or("box2d1r")).context("bad kind")?;
     let sz = args.usize_or("sz", so2dr::figures::SZ_OOC)?;
     let d = args.usize_or("d", 4)?;
+    let devices = args.usize_or("devices", 1)?;
+    so2dr::config::validate_devices(scheme, d, devices)?;
     let s_tb = args.usize_or("s-tb", 160)?;
     let k_on = if scheme == Scheme::ResReu { 1 } else { args.usize_or("k-on", 4)? };
     let n = args.usize_or("n", so2dr::figures::N_STEPS)?;
-    let rep = so2dr::figures::simulate_config(&machine, scheme, kind, sz, d, s_tb, k_on, n);
+    if scheme != Scheme::InCore {
+        // Pre-flight the §IV-C constraints per shard (the DES reports the
+        // observed peak below; this is the check the autotuner applies).
+        match so2dr::params::check_feasible_devices(
+            &machine, kind, sz, d, devices, s_tb, so2dr::figures::N_STRM,
+        ) {
+            so2dr::params::Feasibility::Ok => {}
+            so2dr::params::Feasibility::Memory(req, cap) => println!(
+                "note: modeled per-device memory demand {} exceeds capacity {}",
+                fmt_bytes(req),
+                fmt_bytes(cap)
+            ),
+            other => println!("note: §IV-C heuristic flags this configuration: {other:?}"),
+        }
+    }
+    let rep = so2dr::figures::simulate_config_devices(
+        &machine, scheme, kind, sz, d, devices, s_tb, k_on, n,
+    );
     print!(
         "{}",
         so2dr::metrics::breakdown_table(&[(
-            format!("{} {} d={d} S_TB={s_tb}", scheme.name(), kind.name()),
+            format!("{} {} d={d} devs={devices} S_TB={s_tb}", scheme.name(), kind.name()),
             &rep
         )])
     );
+    if devices > 1 {
+        print!("{}", so2dr::metrics::device_breakdown_table(&rep));
+    }
     println!(
         "peak device memory: {}{}",
         fmt_bytes(rep.peak_dmem),
@@ -296,7 +372,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
 fn cmd_figures(args: &Args) -> Result<()> {
     if args.help() {
-        println!("so2dr figures [--fig tables|3b|5|6|7|8|9|10] [--machine M]");
+        println!("so2dr figures [--fig tables|3b|5|6|7|8|9|10|ablation_kon|scaling] [--machine M]");
         return Ok(());
     }
     let machine = machine_of(args)?;
@@ -341,5 +417,7 @@ USAGE: so2dr <info|run|validate|autotune|simulate|figures> [options]\n\n\
   run        execute a configuration with real numerics and verify it\n\
   validate   bit-exact equivalence of all schemes vs the reference\n\
   autotune   rank run-time configurations (paper §IV-C + simulator)\n\
-  simulate   price one configuration on the modeled RTX 3080\n\
-  figures    regenerate the paper's tables and figures (results/)\n";
+  simulate   price one configuration on the modeled RTX 3080(s)\n\
+  figures    regenerate the paper's tables and figures (results/)\n\n\
+Multi-device: `--devices N` shards chunks over N simulated GPUs with\n\
+peer-to-peer halo exchange; `--d2d-gbps X` sets the link bandwidth.\n";

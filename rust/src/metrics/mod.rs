@@ -4,23 +4,48 @@ use crate::gpu::des::SimReport;
 use crate::gpu::flatten::OpKind;
 use crate::util::Table;
 
-/// Categories in paper order (Fig. 7/10 legends).
-pub const CATEGORIES: [OpKind; 4] = [OpKind::HtoD, OpKind::D2D, OpKind::Kernel, OpKind::DtoH];
+/// Categories in paper order (Fig. 7/10 legends), plus the multi-device
+/// peer-to-peer link channel.
+pub const CATEGORIES: [OpKind; 5] =
+    [OpKind::HtoD, OpKind::D2D, OpKind::P2p, OpKind::Kernel, OpKind::DtoH];
 
 /// Render a per-category busy-time breakdown (plus makespan) for one or
 /// more labeled reports.
 pub fn breakdown_table(rows: &[(String, &SimReport)]) -> Table {
     let mut t = Table::new(vec![
-        "config", "HtoD (s)", "O/D (s)", "kernel (s)", "DtoH (s)", "total (s)",
+        "config", "HtoD (s)", "O/D (s)", "P2P (s)", "kernel (s)", "DtoH (s)", "total (s)",
     ]);
     for (label, rep) in rows {
         t.row(vec![
             label.clone(),
             format!("{:.3}", rep.busy_of(OpKind::HtoD)),
             format!("{:.3}", rep.busy_of(OpKind::D2D)),
+            format!("{:.3}", rep.busy_of(OpKind::P2p)),
             format!("{:.3}", rep.busy_of(OpKind::Kernel)),
             format!("{:.3}", rep.busy_of(OpKind::DtoH)),
             format!("{:.3}", rep.makespan),
+        ]);
+    }
+    t
+}
+
+/// Render the per-device busy breakdown of one multi-device replay
+/// (one row per simulated GPU, plus its peak memory occupancy).
+pub fn device_breakdown_table(rep: &SimReport) -> Table {
+    let mut t = Table::new(vec![
+        "device", "HtoD (s)", "O/D (s)", "P2P (s)", "kernel (s)", "DtoH (s)", "peak mem",
+    ]);
+    for dev in 0..rep.n_devices() {
+        t.row(vec![
+            format!("gpu{dev}"),
+            format!("{:.3}", rep.busy_of_dev(dev, OpKind::HtoD)),
+            format!("{:.3}", rep.busy_of_dev(dev, OpKind::D2D)),
+            format!("{:.3}", rep.busy_of_dev(dev, OpKind::P2p)),
+            format!("{:.3}", rep.busy_of_dev(dev, OpKind::Kernel)),
+            format!("{:.3}", rep.busy_of_dev(dev, OpKind::DtoH)),
+            crate::util::fmt_bytes(
+                rep.peak_dmem_per_device.get(dev).copied().unwrap_or(0),
+            ),
         ]);
     }
     t
@@ -67,6 +92,17 @@ mod tests {
         let rep = SimReport { makespan: 1.5, ..Default::default() };
         let t = breakdown_table(&[("x".into(), &rep)]);
         assert!(t.render().contains("1.500"));
+    }
+
+    #[test]
+    fn device_breakdown_renders_one_row_per_device() {
+        let mut rep = SimReport { makespan: 1.0, ..Default::default() };
+        rep.peak_dmem_per_device = vec![1 << 30, 2 << 30];
+        rep.busy_dev.insert((1, OpKind::P2p), 0.25);
+        let text = device_breakdown_table(&rep).render();
+        assert!(text.contains("gpu0") && text.contains("gpu1"));
+        assert!(text.contains("0.250"));
+        assert!(text.contains("2.00 GiB"));
     }
 }
 

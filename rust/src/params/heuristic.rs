@@ -18,7 +18,7 @@
 //! the simulator — exactly what the paper does manually in §V-B.
 
 use crate::chunking::plan::{plan_run, Scheme};
-use crate::chunking::Decomposition;
+use crate::chunking::{Decomposition, DeviceAssignment};
 use crate::coordinator::{HostBackend, PlanExecutor};
 use crate::gpu::cost::CostModel;
 use crate::gpu::des::simulate;
@@ -71,6 +71,36 @@ pub fn check_feasible(
         return Feasibility::Memory(required, machine.c_dmem);
     }
     Feasibility::Ok
+}
+
+/// Multi-device §IV-C feasibility. The structural clauses (halo working
+/// space, chunks-per-stream) are shard-independent and inherited from
+/// [`check_feasible`]; the memory constraint is re-evaluated per shard
+/// using the exact decomposition geometry
+/// ([`DeviceAssignment::device_memory_demand`]) rather than the
+/// closed-form model — sharding relaxes only the memory clause.
+pub fn check_feasible_devices(
+    machine: &MachineSpec,
+    kind: StencilKind,
+    sz: usize,
+    d: usize,
+    devices: usize,
+    s_tb: usize,
+    n_strm: usize,
+) -> Feasibility {
+    match check_feasible(machine, kind, sz, d, s_tb, n_strm) {
+        Feasibility::Ok | Feasibility::Memory(..) => {}
+        structural => return structural,
+    }
+    let dc = Decomposition::new(sz, sz, d, kind.radius());
+    let devs = DeviceAssignment::contiguous(d, devices);
+    let demand = devs.device_memory_demand(&dc, s_tb, n_strm, kind);
+    match demand.into_iter().max() {
+        Some(required) if required > machine.c_dmem => {
+            Feasibility::Memory(required, machine.c_dmem)
+        }
+        _ => Feasibility::Ok,
+    }
 }
 
 /// Predicted kernel-to-transfer time ratio of one epoch under the model's
@@ -213,6 +243,30 @@ mod tests {
             Feasibility::Memory(req, cap) => assert!(req > cap),
             other => panic!("expected Memory, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn sharding_restores_memory_feasibility() {
+        // d=4, r=4, S_TB=320 exceeds one device (see
+        // infeasible_cases_detected); sharding the same chunks over four
+        // devices leaves each shard one pipeline that fits comfortably.
+        let m = MachineSpec::rtx3080();
+        let k = StencilKind::Box { radius: 4 };
+        match check_feasible_devices(&m, k, SZ, 4, 1, 320, 3) {
+            Feasibility::Memory(req, cap) => assert!(req > cap),
+            other => panic!("expected Memory on one device, got {other:?}"),
+        }
+        assert_eq!(check_feasible_devices(&m, k, SZ, 4, 4, 320, 3), Feasibility::Ok);
+        // Structural clauses are shard-independent: sharding cannot fix a
+        // halo that exceeds the chunk or too few chunks for the streams.
+        assert_eq!(
+            check_feasible_devices(&m, k, SZ, 8, 8, 640, 3),
+            Feasibility::HaloTooLarge
+        );
+        assert_eq!(
+            check_feasible_devices(&m, StencilKind::Box { radius: 1 }, SZ, 2, 2, 40, 3),
+            Feasibility::TooFewChunks
+        );
     }
 
     #[test]

@@ -2,4 +2,7 @@
 
 pub mod heuristic;
 
-pub use heuristic::{autotune, candidates, check_feasible, predict, select_target, Candidate, Feasibility, OptimizationTarget};
+pub use heuristic::{
+    autotune, candidates, check_feasible, check_feasible_devices, predict, select_target,
+    Candidate, Feasibility, OptimizationTarget,
+};

@@ -1,0 +1,188 @@
+//! DES invariants across device counts: conservation (every flattened op
+//! is simulated exactly once), physical lower bounds (makespan dominates
+//! every resource's busy time divided by its slots), per-device capacity
+//! checking, and the multi-device contract (sharding the same plan over
+//! more simulated GPUs never slows it down, and hits the strong-scaling
+//! target at paper scale).
+
+use so2dr::chunking::plan::{plan_run_devices, Scheme};
+use so2dr::chunking::{Decomposition, DeviceAssignment};
+use so2dr::coordinator::{HostBackend, PlanExecutor};
+use so2dr::gpu::cost::{CostModel, MachineSpec};
+use so2dr::gpu::des::{simulate, SimReport};
+use so2dr::gpu::flatten::{flatten_run, OpKind, SimOp};
+use so2dr::stencil::{NaiveEngine, StencilKind};
+use std::collections::HashMap;
+
+const N_STRM: usize = 3;
+
+fn flatten_paper(
+    scheme: Scheme,
+    d: usize,
+    devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    n: usize,
+) -> Vec<SimOp> {
+    let dc = Decomposition::new(38400, 38400, d, 1);
+    let devs = DeviceAssignment::contiguous(d, devices);
+    let plans = plan_run_devices(scheme, &dc, &devs, n, s_tb, k_on);
+    let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+    flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, N_STRM, buf_rows)
+}
+
+fn sim(ops: &[SimOp], machine: MachineSpec) -> SimReport {
+    simulate(ops, &CostModel::new(machine), N_STRM)
+}
+
+#[test]
+fn makespan_dominates_every_resource_busy_time() {
+    let machine = MachineSpec::rtx3080();
+    for devices in [1usize, 2, 4] {
+        let ops = flatten_paper(Scheme::So2dr, 8, devices, 40, 4, 80);
+        let rep = sim(&ops, machine.clone());
+        assert!(rep.makespan > 0.0);
+        // Per (device, category): busy time / slots is a lower bound on
+        // the makespan (a resource cannot be busier than wall time allows).
+        for (&(dev, kind), &busy) in &rep.busy_dev {
+            let slots = match kind {
+                OpKind::Kernel => machine.kernel_concurrency.max(1) as f64,
+                _ => 1.0,
+            };
+            assert!(
+                rep.makespan >= busy / slots - 1e-9,
+                "{devices} devices: ({dev}, {kind:?}) busy {busy} vs makespan {}",
+                rep.makespan
+            );
+        }
+        // And the serial sum is an upper bound.
+        let serial: f64 = rep.busy.values().sum();
+        assert!(rep.makespan <= serial + 1e-9);
+    }
+}
+
+#[test]
+fn op_counts_conserved_between_flattener_and_simulator() {
+    for (scheme, k_on) in [(Scheme::So2dr, 4), (Scheme::ResReu, 1)] {
+        for devices in [1usize, 4] {
+            let ops = flatten_paper(scheme, 8, devices, 20, k_on, 40);
+            let rep = sim(&ops, MachineSpec::rtx3080());
+            // Per-kind counts match what the flattener produced...
+            let mut expect: HashMap<OpKind, usize> = HashMap::new();
+            for op in &ops {
+                *expect.entry(op.kind).or_insert(0) += 1;
+            }
+            for (kind, &n) in &expect {
+                assert_eq!(
+                    rep.count_of(*kind),
+                    n,
+                    "{} {devices}dev: {kind:?}",
+                    scheme.name()
+                );
+            }
+            // ... and nothing was invented or dropped.
+            let total: usize = rep.op_counts.values().sum();
+            assert_eq!(total, ops.len(), "{} {devices} devices", scheme.name());
+            // Busy-time breakdown is consistent per device too.
+            for kind in [OpKind::HtoD, OpKind::DtoH, OpKind::D2D, OpKind::P2p, OpKind::Kernel] {
+                let per_dev: f64 =
+                    (0..rep.n_devices()).map(|dev| rep.busy_of_dev(dev, kind)).sum();
+                assert!(
+                    (per_dev - rep.busy_of(kind)).abs() <= 1e-9 * per_dev.max(1.0),
+                    "{kind:?}: per-device busy does not sum to the total"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn capacity_exceeded_fires_on_an_undersized_device() {
+    let ops = flatten_paper(Scheme::So2dr, 8, 4, 40, 4, 80);
+    // Plenty of memory: fine.
+    let roomy = sim(&ops, MachineSpec::rtx3080());
+    assert!(!roomy.capacity_exceeded, "peak {}", roomy.peak_dmem);
+    // Same plan on devices with 256 MiB each: the per-device peak must
+    // trip the capacity check.
+    let mut tiny = MachineSpec::rtx3080();
+    tiny.c_dmem = 256 * 1024 * 1024;
+    let rep = sim(&ops, tiny);
+    assert!(rep.capacity_exceeded, "peak {} fits 256 MiB?", rep.peak_dmem);
+    // The per-device view agrees with the headline number.
+    assert_eq!(
+        rep.peak_dmem,
+        rep.peak_dmem_per_device.iter().copied().max().unwrap()
+    );
+}
+
+#[test]
+fn more_devices_never_slow_the_same_plan_down() {
+    let machine = MachineSpec::rtx3080();
+    let m1 = sim(&flatten_paper(Scheme::So2dr, 8, 1, 160, 4, 320), machine.clone()).makespan;
+    for devices in [2usize, 4, 8] {
+        let m = sim(
+            &flatten_paper(Scheme::So2dr, 8, devices, 160, 4, 320),
+            machine.clone(),
+        )
+        .makespan;
+        assert!(
+            m <= m1 * 1.001,
+            "{devices} devices: {m} vs single-device {m1}"
+        );
+    }
+}
+
+/// Acceptance criterion: >= 1.5x simulated strong-scaling speedup at four
+/// devices for a Table III benchmark at paper-scale grid size.
+#[test]
+fn four_devices_give_strong_scaling_speedup_at_paper_scale() {
+    let machine = MachineSpec::rtx3080();
+    for kind in [StencilKind::Box { radius: 1 }, StencilKind::Gradient2d] {
+        let mk = |devices: usize| {
+            so2dr::figures::simulate_config_devices(
+                &machine,
+                Scheme::So2dr,
+                kind,
+                so2dr::figures::SZ_OOC,
+                8,
+                devices,
+                160,
+                4,
+                so2dr::figures::N_STEPS,
+            )
+        };
+        let one = mk(1);
+        let four = mk(4);
+        let speedup = one.makespan / four.makespan;
+        assert!(
+            speedup >= 1.5,
+            "{}: 4-device speedup {speedup:.2}x < 1.5x ({} -> {})",
+            kind.name(),
+            one.makespan,
+            four.makespan
+        );
+        // The exchange traffic actually flowed over the link.
+        assert!(four.count_of(OpKind::P2p) > 0);
+        assert!(four.busy_of(OpKind::P2p) > 0.0);
+    }
+}
+
+#[test]
+fn p2p_ops_exist_only_when_sharded() {
+    let single = flatten_paper(Scheme::So2dr, 8, 1, 40, 4, 80);
+    assert!(single.iter().all(|o| o.kind != OpKind::P2p));
+    let sharded = flatten_paper(Scheme::So2dr, 8, 4, 40, 4, 80);
+    let p2p = sharded.iter().filter(|o| o.kind == OpKind::P2p).count();
+    // One exchange per device boundary (3) per epoch (2).
+    assert_eq!(p2p, 3 * 2);
+}
+
+#[test]
+fn faster_link_shortens_sharded_resreu() {
+    // ResReu exchanges halos every step, so the link bandwidth must be
+    // visible in the makespan; SO2DR amortizes it per epoch.
+    let ops = flatten_paper(Scheme::ResReu, 8, 4, 40, 1, 80);
+    let slow = sim(&ops, MachineSpec::rtx3080().with_d2d_gbps(1.0)).makespan;
+    let fast = sim(&ops, MachineSpec::rtx3080().with_d2d_gbps(50.0)).makespan;
+    assert!(fast < slow, "link bandwidth had no effect: {fast} vs {slow}");
+}

@@ -1,0 +1,188 @@
+//! Minimal, offline drop-in for the subset of the `anyhow` crate used by
+//! this repository: [`Error`], [`Result`], the [`Context`] extension trait
+//! and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Semantics mirror the real crate where it matters here:
+//! - `Display` prints the outermost message; the alternate form (`{:#}`)
+//!   prints the whole context chain joined by `": "`;
+//! - `Debug` prints the outermost message plus a `Caused by:` list, which
+//!   is what `fn main() -> Result<()>` shows on error;
+//! - any `std::error::Error + Send + Sync + 'static` converts via `?`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A context-carrying error. Outermost message first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn from_std(e: &(dyn StdError + 'static)) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut cur = e.source();
+        while let Some(src) = cur {
+            chain.push(src.to_string());
+            cur = src.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`, which
+// is what makes this blanket conversion coherent (same trick as the real
+// crate).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::from_std(&e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from_std(&e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from_std(&e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_and_alternate_forms() {
+        let e: Error = Err::<(), _>(io_err()).context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: file missing");
+        assert_eq!(e.root_cause(), "file missing");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("outer").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer") && dbg.contains("Caused by:") && dbg.contains("file missing"));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let v: Result<i32> = None.context("missing value");
+        assert_eq!(format!("{:#}", v.unwrap_err()), "missing value");
+        let f = || -> Result<()> { bail!("bad {}", 7) };
+        assert_eq!(format!("{}", f().unwrap_err()), "bad 7");
+        let g = |x: i32| -> Result<()> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(())
+        };
+        assert!(g(1).is_ok());
+        assert!(g(-1).is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let f = || -> Result<usize> { Ok("12".parse::<usize>()?) };
+        assert_eq!(f().unwrap(), 12);
+        let g = || -> Result<usize> { Ok("nope".parse::<usize>()?) };
+        assert!(g().is_err());
+    }
+}
