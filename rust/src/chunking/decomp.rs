@@ -235,6 +235,99 @@ impl Decomposition {
     }
 
     // ---------------------------------------------------------------
+    // Resident-model spans (cross-epoch residency; see chunking::plan).
+    //
+    // After an epoch, each chunk's arena holds a *settled* span: rows
+    // valid at the epoch-end time step. The settled spans partition
+    // `[0, rows)`, so an evicted chunk can spill exactly its settled
+    // span and re-fetch it from the host later, while the epoch-start
+    // skirt/halo of the next epoch is refreshed from the neighbors'
+    // settled spans (fetch spans below) instead of a host round trip.
+    // ---------------------------------------------------------------
+
+    /// Rows of chunk `i` that are valid at the current time step in its
+    /// arena after an epoch of `steps`: the chunk's writeback span. For
+    /// SO2DR this is the owned span (the last trapezoid step computes
+    /// exactly the owned rows); for ResReu it is the skew-shifted
+    /// [`Self::resreu_dtoh`] span. Settled spans partition `[0, rows)`.
+    pub fn settled(&self, scheme: crate::chunking::Scheme, i: usize, steps: usize) -> RowSpan {
+        match scheme {
+            crate::chunking::Scheme::So2dr => self.owned(i),
+            crate::chunking::Scheme::ResReu => self.resreu_dtoh(i, steps),
+            crate::chunking::Scheme::InCore => RowSpan::new(0, self.rows),
+        }
+    }
+
+    /// Lower skirt chunk `i` must fetch at the start of a resident SO2DR
+    /// epoch of `steps`: `[lo - h', lo)`, produced (settled) by chunk
+    /// `i-1`. Empty for chunk 0 (clamped at the grid edge).
+    pub fn so2dr_fetch_low(&self, i: usize, steps: usize) -> RowSpan {
+        let h = self.skirt(steps) as i64;
+        let o = self.owned(i);
+        RowSpan::clamped(o.lo as i64 - h, o.lo as i64, self.rows)
+    }
+
+    /// Upper skirt chunk `i` must fetch at the start of a resident SO2DR
+    /// epoch of `steps`: `[hi, hi + h')`, settled by chunk `i+1`. Empty
+    /// for the last chunk.
+    pub fn so2dr_fetch_high(&self, i: usize, steps: usize) -> RowSpan {
+        let h = self.skirt(steps) as i64;
+        let o = self.owned(i);
+        RowSpan::clamped(o.hi as i64, o.hi as i64 + h, self.rows)
+    }
+
+    /// Rows chunk `i` must fetch at the start of a resident ResReu epoch:
+    /// the previous epoch's windows shifted down by `h_prev`, so the top
+    /// `[hi - h_prev, hi)` of the owned span is settled in chunk `i+1`'s
+    /// arena. Empty for the last chunk (its window's upper edge does not
+    /// shift, so it settles its whole tail itself).
+    pub fn resreu_fetch(&self, i: usize, prev_steps: usize) -> RowSpan {
+        if i + 1 == self.d {
+            return RowSpan::empty();
+        }
+        let h = self.skirt(prev_steps) as i64;
+        let o = self.owned(i);
+        RowSpan::clamped(o.hi as i64 - h, o.hi as i64, self.rows)
+    }
+
+    /// Uniform chunk-arena height for a whole run with at most `s_max` TB
+    /// steps per epoch: tall enough for the largest epoch of any chunk, so
+    /// fixed-shape (AOT-compiled) kernels serve every chunk and epoch and
+    /// resident arenas keep a stable base across epochs.
+    pub fn uniform_buffer_rows(&self, scheme: crate::chunking::Scheme, s_max: usize) -> usize {
+        let max_own = (0..self.d).map(|i| self.owned(i).len()).max().unwrap();
+        match scheme {
+            crate::chunking::Scheme::So2dr => max_own + 2 * s_max * self.radius,
+            crate::chunking::Scheme::ResReu => max_own + s_max * self.radius + self.radius,
+            crate::chunking::Scheme::InCore => self.rows,
+        }
+    }
+
+    /// Signed global row of chunk `i`'s arena base under the resident
+    /// execution model: fixed across epochs (sized for `s_max`), so data
+    /// keeps its arena offset from one epoch to the next.
+    pub fn resident_base(
+        &self,
+        scheme: crate::chunking::Scheme,
+        s_max: usize,
+        i: usize,
+    ) -> i64 {
+        let r = self.radius as i64;
+        let h = (s_max * self.radius) as i64;
+        match scheme {
+            crate::chunking::Scheme::So2dr => self.owned(i).lo as i64 - h,
+            crate::chunking::Scheme::ResReu => self.owned(i).lo as i64 - h - r,
+            crate::chunking::Scheme::InCore => 0,
+        }
+    }
+
+    /// Bytes of one chunk arena (input + output double buffer) at the
+    /// uniform height `buf_rows`.
+    pub fn arena_bytes(&self, buf_rows: usize) -> u64 {
+        2 * (buf_rows * self.cols * 4) as u64
+    }
+
+    // ---------------------------------------------------------------
     // Paper model quantities (Section III / IV-C).
     // ---------------------------------------------------------------
 
@@ -343,6 +436,69 @@ impl DeviceAssignment {
                     .max()
                     .unwrap_or(0);
                 live * 2 * worst
+            })
+            .collect()
+    }
+
+    /// Device-memory demand (bytes) of a resident-model run on device
+    /// `dev`: one arena per chunk assigned to the device, plus a
+    /// region-sharing slack of `12 * h_max` rows per chunk.
+    ///
+    /// The arena term charges *every* chunk — not just pinned ones —
+    /// because resident epochs execute in two phases (all arrivals and
+    /// publishes before any fetch/kernel/eviction), so at the epoch
+    /// boundary every chunk's arena on the device is live at once:
+    /// spilled chunks re-allocate in phase A and only release at their
+    /// phase-B `Evict`. Spilling therefore saves host traffic modeling,
+    /// not peak arena footprint, in the current execution model;
+    /// staggering spilled arrivals to reclaim that peak is a ROADMAP
+    /// follow-on. The slack dominates the worst case of either scheme:
+    /// a chunk-epoch's sharing allocations (its region writes,
+    /// publishes, and incoming link copies) total at most `4 * h` rows
+    /// for SO2DR and `6 * h` for ResReu, live until their consumer
+    /// retires, and at most two adjacent epochs' regions can overlap on
+    /// a device. The DES's observed peak never exceeds this bound,
+    /// which is what lets the planner promise `capacity_exceeded` won't
+    /// fire on accepted plans.
+    pub fn resident_memory_demand(
+        &self,
+        dc: &Decomposition,
+        dev: usize,
+        buf_rows: usize,
+        h_max: usize,
+    ) -> u64 {
+        let nc = self.chunks_on(dev).len() as u64;
+        let rs_slack = nc * 12 * (h_max * dc.cols() * 4) as u64;
+        nc * dc.arena_bytes(buf_rows) + rs_slack
+    }
+
+    /// Per-device pinned-chunk counts under `cap` bytes and
+    /// [`Self::resident_memory_demand`]. Because the epoch-boundary
+    /// footprint is the same whether chunks pin or spill (see above),
+    /// the decision is all-or-nothing per device: pin everything when
+    /// the device's demand fits (pinning only removes host traffic),
+    /// else pin nothing and spill every epoch. `None` caps nothing
+    /// (keep all).
+    pub fn resident_keep_counts(
+        &self,
+        dc: &Decomposition,
+        buf_rows: usize,
+        h_max: usize,
+        cap: Option<u64>,
+    ) -> Vec<usize> {
+        (0..self.n_devices)
+            .map(|dev| {
+                let nc = self.chunks_on(dev).len();
+                match cap {
+                    None => nc,
+                    Some(cap) => {
+                        if self.resident_memory_demand(dc, dev, buf_rows, h_max) <= cap {
+                            nc
+                        } else {
+                            0
+                        }
+                    }
+                }
             })
             .collect()
     }
@@ -569,5 +725,124 @@ mod tests {
     #[should_panic(expected = "invalid device count")]
     fn more_devices_than_chunks_rejected() {
         DeviceAssignment::contiguous(2, 3);
+    }
+
+    #[test]
+    fn settled_spans_partition_grid() {
+        use crate::chunking::Scheme;
+        let dc = dec(200, 4, 2);
+        for (scheme, steps) in [(Scheme::So2dr, 6), (Scheme::ResReu, 5)] {
+            let mut cur = 0;
+            for i in 0..4 {
+                let s = dc.settled(scheme, i, steps);
+                assert_eq!(s.lo, cur, "{scheme:?} chunk {i}");
+                cur = s.hi;
+            }
+            assert_eq!(cur, 200, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn so2dr_fetch_spans_come_from_neighbor_settled() {
+        use crate::chunking::Scheme;
+        let dc = dec(200, 4, 2);
+        let steps = 6;
+        for i in 0..4 {
+            let low = dc.so2dr_fetch_low(i, steps);
+            let high = dc.so2dr_fetch_high(i, steps);
+            if i == 0 {
+                assert!(low.is_empty(), "chunk 0 has no lower neighbor");
+            } else {
+                assert_eq!(low.len(), dc.skirt(steps));
+                assert!(dc.settled(Scheme::So2dr, i - 1, steps).contains_span(&low));
+            }
+            if i + 1 == 4 {
+                assert!(high.is_empty(), "last chunk has no upper neighbor");
+            } else {
+                assert_eq!(high.len(), dc.skirt(steps));
+                assert!(dc.settled(Scheme::So2dr, i + 1, steps).contains_span(&high));
+            }
+            // Settled + fetches cover the epoch's resident requirement.
+            let covered = low.hull(&dc.owned(i)).hull(&high);
+            assert_eq!(covered, dc.so2dr_resident(i, steps), "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn resreu_fetch_spans_come_from_upper_neighbor_settled() {
+        use crate::chunking::Scheme;
+        let dc = dec(200, 4, 2);
+        let prev_steps = 5;
+        for i in 0..4 {
+            let f = dc.resreu_fetch(i, prev_steps);
+            if i + 1 == 4 {
+                assert!(f.is_empty());
+                continue;
+            }
+            assert_eq!(f.len(), dc.skirt(prev_steps));
+            assert!(dc.settled(Scheme::ResReu, i + 1, prev_steps).contains_span(&f));
+            // Own settled + fetch covers the owned epoch-start span.
+            let s = dc.settled(Scheme::ResReu, i, prev_steps);
+            assert!(s.hull(&f).contains_span(&dc.owned(i)), "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn resident_keep_counts_scale_with_capacity() {
+        let dc = Decomposition::new(960, 256, 8, 1);
+        let devs = DeviceAssignment::contiguous(8, 2);
+        let buf_rows = dc.uniform_buffer_rows(crate::chunking::Scheme::So2dr, 8);
+        let none = devs.resident_keep_counts(&dc, buf_rows, 8, Some(1));
+        let all = devs.resident_keep_counts(&dc, buf_rows, 8, None);
+        let huge = devs.resident_keep_counts(&dc, buf_rows, 8, Some(u64::MAX));
+        assert_eq!(none, vec![0, 0], "1-byte cap pins nothing");
+        assert_eq!(all, vec![4, 4], "uncapped pins every chunk");
+        assert_eq!(huge, all);
+    }
+
+    #[test]
+    fn resident_demand_charges_every_chunk_arena() {
+        // The two-phase epoch boundary holds every chunk's arena at once
+        // (spilled chunks re-arrive in phase A and only evict in phase
+        // B), so demand must charge nc arenas — spilling cannot lower
+        // the modeled peak, only pinning-vs-not changes host traffic.
+        let dc = Decomposition::new(960, 256, 8, 1);
+        let devs = DeviceAssignment::contiguous(8, 2);
+        let buf_rows = dc.uniform_buffer_rows(crate::chunking::Scheme::So2dr, 8);
+        let nc = 4u64; // chunks per device
+        let demand = devs.resident_memory_demand(&dc, 0, buf_rows, 8);
+        let slack = nc * 12 * (8 * 256 * 4) as u64;
+        assert_eq!(demand, nc * dc.arena_bytes(buf_rows) + slack);
+        // A capacity exactly at the demand pins everything; one byte
+        // less pins nothing (all-or-nothing per device).
+        assert_eq!(devs.resident_keep_counts(&dc, buf_rows, 8, Some(demand)), vec![4, 4]);
+        assert_eq!(
+            devs.resident_keep_counts(&dc, buf_rows, 8, Some(demand - 1)),
+            vec![0, 0]
+        );
+    }
+
+    #[test]
+    fn uniform_buffer_rows_cover_every_epoch_span() {
+        use crate::chunking::Scheme;
+        let dc = dec(200, 4, 2);
+        let s_max = 6;
+        for scheme in [Scheme::So2dr, Scheme::ResReu] {
+            let rows = dc.uniform_buffer_rows(scheme, s_max);
+            for i in 0..4 {
+                let base = dc.resident_base(scheme, s_max, i);
+                for steps in 1..=s_max {
+                    let span = match scheme {
+                        Scheme::So2dr => dc.so2dr_resident(i, steps),
+                        _ => dc.resreu_resident(i, steps),
+                    };
+                    assert!(span.lo as i64 >= base, "{scheme:?} chunk {i} steps {steps}");
+                    assert!(
+                        span.hi as i64 <= base + rows as i64,
+                        "{scheme:?} chunk {i} steps {steps}"
+                    );
+                }
+            }
+        }
     }
 }

@@ -32,4 +32,7 @@ pub mod decomp;
 pub mod plan;
 
 pub use decomp::{Decomposition, DeviceAssignment};
-pub use plan::{ChunkEpochPlan, EpochPlan, KernelInvocation, RegionOp, Scheme};
+pub use plan::{
+    ChunkEpochPlan, EpochPlan, KernelInvocation, RegionOp, ResidencyConfig, ResidencySummary,
+    ResidentMode, Scheme,
+};

@@ -78,6 +78,22 @@ pub enum ChunkOp {
     HtoD { span: RowSpan },
     RsRead(RegionOp),
     RsWrite(RegionOp),
+    /// Resident-model marker: the chunk's settled `span` is already on
+    /// device from a previous epoch — no transfer. The executor checks the
+    /// arena is live; the flattener emits no op (zero traffic), only the
+    /// cross-epoch lifetime it implies.
+    Resident { span: RowSpan },
+    /// Resident-model epoch-start halo refresh: read a neighbor's settled
+    /// region (published via [`ChunkOp::RsWrite`], bridged by
+    /// [`ChunkOp::D2D`] when the publisher is remote) from this device's
+    /// sharing buffer instead of transferring it from the host. Same
+    /// mechanics as `RsRead`, counted separately as cross-epoch traffic.
+    Fetch(RegionOp),
+    /// Resident-model capacity spill: write the settled `span` back to the
+    /// host and release the chunk's arena. The next epoch re-fetches it
+    /// with an `HtoD` of the same span (the host copy is fresh by
+    /// construction — settled spans partition the grid).
+    Evict { span: RowSpan },
     /// Peer-to-peer halo exchange: move the `(span, time_step)` region
     /// just published by this chunk's `RsWrite` from `src_dev`'s sharing
     /// buffer to `dst_dev`'s, across the inter-device link. Emitted only
@@ -112,7 +128,37 @@ pub struct EpochPlan {
     pub start_step: usize,
     /// Devices the epoch is sharded over (1 = the seed's single-GPU plan).
     pub n_devices: usize,
+    /// True when this epoch belongs to a resident-model run: chunk arenas
+    /// persist across epoch boundaries (per-chunk, fixed base), ops may
+    /// include [`ChunkOp::Resident`]/[`ChunkOp::Fetch`]/[`ChunkOp::Evict`],
+    /// and both interpreters execute the epoch in two phases (all
+    /// epoch-start publishes before any fetch/kernel).
+    pub resident: bool,
     pub chunks: Vec<ChunkEpochPlan>,
+}
+
+/// Number of leading ops of a chunk-epoch forming its *arrival + publish*
+/// phase (phase A) under the resident execution model: the residency
+/// marker or host re-fetch, plus the epoch-start region publishes (and
+/// their link transfers). Resident epochs are executed in two phases —
+/// every chunk's phase A before any chunk's phase B — because fetches may
+/// consume publishes of *later* chunks (data flows both up and down the
+/// chunk order), which a single chunk-major sweep cannot order.
+/// The take-while is safe on staged epochs too: any `RsWrite` it admits
+/// precedes the chunk's first kernel in its own op order, so it only ever
+/// extracts epoch-start data.
+pub fn phase_a_len(ops: &[ChunkOp]) -> usize {
+    ops.iter()
+        .take_while(|op| {
+            matches!(
+                op,
+                ChunkOp::Resident { .. }
+                    | ChunkOp::HtoD { .. }
+                    | ChunkOp::RsWrite(_)
+                    | ChunkOp::D2D { .. }
+            )
+        })
+        .count()
 }
 
 impl EpochPlan {
@@ -181,6 +227,7 @@ pub fn so2dr_epoch(
         steps,
         start_step,
         n_devices: devs.n_devices(),
+        resident: false,
         chunks,
     }
 }
@@ -233,6 +280,7 @@ pub fn resreu_epoch(
         steps,
         start_step,
         n_devices: devs.n_devices(),
+        resident: false,
         chunks,
     }
 }
@@ -265,6 +313,7 @@ pub fn incore_epoch(
         steps,
         start_step,
         n_devices: 1,
+        resident: false,
         chunks: vec![ChunkEpochPlan { chunk: 0, device: 0, ops }],
     }
 }
@@ -305,6 +354,372 @@ pub fn plan_run(
     k_on: usize,
 ) -> Vec<EpochPlan> {
     plan_run_devices(scheme, dc, &DeviceAssignment::single(dc.n_chunks()), n, s_tb, k_on)
+}
+
+// -------------------------------------------------------------------
+// Residency planning: device-resident multi-epoch pipelining.
+//
+// A staged run synchronizes every epoch through the host: full HtoD of
+// every chunk at epoch start, full DtoH at epoch end, even when the same
+// chunk lands on the same device next epoch. The residency planner
+// replaces that assumption with explicit cross-epoch lifetimes: a chunk
+// is transferred HtoD once on first touch, its arena stays live across
+// epochs while per-device capacity allows, inter-epoch halo freshness is
+// satisfied by neighbor-arena publishes/fetches (on-device copies, or
+// P2P link transfers at shard boundaries), and only capacity victims
+// spill (`Evict`) and re-fetch. HtoD traffic drops by roughly the epoch
+// count when every chunk fits.
+// -------------------------------------------------------------------
+
+/// Resident-execution mode selected at the surface (`--resident`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResidentMode {
+    /// Staged epochs (host round trip every epoch) — the legacy model.
+    Off,
+    /// Keep chunks resident while the per-device capacity model allows;
+    /// spill the rest each epoch.
+    Auto,
+    /// Keep every chunk resident regardless of the capacity model.
+    Force,
+}
+
+impl ResidentMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ResidentMode::Off => "off",
+            ResidentMode::Auto => "auto",
+            ResidentMode::Force => "force",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ResidentMode> {
+        match s {
+            "off" => Some(ResidentMode::Off),
+            "auto" => Some(ResidentMode::Auto),
+            "force" => Some(ResidentMode::Force),
+            _ => None,
+        }
+    }
+}
+
+/// Inputs of the residency planner.
+#[derive(Debug, Clone)]
+pub struct ResidencyConfig {
+    pub mode: ResidentMode,
+    /// Per-device memory capacity (bytes) the planner must respect in
+    /// `Auto` mode; `None` means unconstrained.
+    pub cap_per_device: Option<u64>,
+    /// Streams per device. Reserved for staggered-arrival planning (a
+    /// ROADMAP follow-on): the current two-phase execution holds every
+    /// chunk arena across the epoch boundary, so the capacity model
+    /// does not yet depend on it.
+    pub n_strm: usize,
+}
+
+impl ResidencyConfig {
+    pub fn off() -> Self {
+        Self { mode: ResidentMode::Off, cap_per_device: None, n_strm: 1 }
+    }
+
+    pub fn force(n_strm: usize) -> Self {
+        Self { mode: ResidentMode::Force, cap_per_device: None, n_strm }
+    }
+
+    pub fn auto(cap_per_device: u64, n_strm: usize) -> Self {
+        Self { mode: ResidentMode::Auto, cap_per_device: Some(cap_per_device), n_strm }
+    }
+}
+
+/// What the residency planner decided, for reporting and tests.
+#[derive(Debug, Clone)]
+pub struct ResidencySummary {
+    /// False when the plan degenerated to the staged model (mode off,
+    /// in-core scheme, or a single epoch — nothing to keep resident).
+    pub enabled: bool,
+    /// Per chunk: does its arena stay live across epoch boundaries?
+    pub kept: Vec<bool>,
+    /// True when every device's modeled demand fits the capacity (always
+    /// true when no capacity was given). When false the plan still runs —
+    /// non-pinned chunks spill — but the planner makes no peak-memory
+    /// promise.
+    pub fits: bool,
+    /// Modeled worst-case device-memory demand per device (bytes).
+    pub demand_per_device: Vec<u64>,
+    /// `Evict` ops in the emitted plan (spills the run will perform).
+    pub planned_spills: usize,
+    /// HtoD bytes a staged run of the same configuration would move.
+    pub staged_htod_bytes: u64,
+    /// HtoD bytes the emitted plan moves (first touches + re-fetches).
+    pub planned_htod_bytes: u64,
+}
+
+impl ResidencySummary {
+    fn disabled(n_chunks: usize, htod_bytes: u64) -> Self {
+        Self {
+            enabled: false,
+            kept: vec![false; n_chunks],
+            fits: true,
+            demand_per_device: Vec::new(),
+            planned_spills: 0,
+            staged_htod_bytes: htod_bytes,
+            planned_htod_bytes: htod_bytes,
+        }
+    }
+
+    /// Host-transfer bytes the residency plan avoids vs the staged model.
+    pub fn saved_htod_bytes(&self) -> u64 {
+        self.staged_htod_bytes.saturating_sub(self.planned_htod_bytes)
+    }
+}
+
+fn htod_bytes_of(plans: &[EpochPlan], cols: usize) -> u64 {
+    plans
+        .iter()
+        .flat_map(|p| p.iter_ops())
+        .map(|(_, _, op)| match op {
+            ChunkOp::HtoD { span } => (span.len() * cols * 4) as u64,
+            _ => 0,
+        })
+        .sum()
+}
+
+/// Build one resident-model epoch: chunks arrive with their previous
+/// epoch's settled span on device (`kept`) or re-fetch it from the host
+/// (spilled), publish the boundary rows their neighbors need into the
+/// region-sharing buffer *before* any kernel runs, fetch their own
+/// epoch-start skirt from the neighbors' publishes, compute, and finally
+/// keep / spill (`Evict`) / write back (`DtoH`, final epoch only).
+#[allow(clippy::too_many_arguments)]
+fn resident_epoch(
+    scheme: Scheme,
+    dc: &Decomposition,
+    devs: &DeviceAssignment,
+    steps: usize,
+    k_on: usize,
+    start_step: usize,
+    prev_steps: usize,
+    kept: &[bool],
+    final_epoch: bool,
+) -> EpochPlan {
+    assert!(steps >= 1 && k_on >= 1 && prev_steps >= 1);
+    assert_eq!(devs.n_chunks(), dc.n_chunks(), "device assignment shape mismatch");
+    dc.check(steps);
+    let d = dc.n_chunks();
+    // Fetch span a chunk needs at epoch start, beyond its settled rows.
+    let fetch_low = |i: usize| -> RowSpan {
+        match scheme {
+            Scheme::So2dr => dc.so2dr_fetch_low(i, steps),
+            _ => RowSpan::empty(),
+        }
+    };
+    let fetch_high = |i: usize| -> RowSpan {
+        match scheme {
+            Scheme::So2dr => dc.so2dr_fetch_high(i, steps),
+            Scheme::ResReu => dc.resreu_fetch(i, prev_steps),
+            Scheme::InCore => RowSpan::empty(),
+        }
+    };
+    let mut chunks = Vec::with_capacity(d);
+    for i in 0..d {
+        let settled_prev = dc.settled(scheme, i, prev_steps);
+        let mut ops = Vec::new();
+        // Phase A: arrive (marker or host re-fetch), then publish the
+        // regions the neighbors will fetch — epoch-start data, extracted
+        // before any kernel of this epoch overwrites it.
+        if kept[i] {
+            ops.push(ChunkOp::Resident { span: settled_prev });
+        } else {
+            ops.push(ChunkOp::HtoD { span: settled_prev });
+        }
+        // This chunk settles the lower neighbor's upper fetch span and
+        // the upper neighbor's lower fetch span.
+        if i > 0 {
+            let span = fetch_high(i - 1);
+            if !span.is_empty() {
+                ops.push(ChunkOp::RsWrite(RegionOp { span, time_step: 0 }));
+                if devs.device_of(i) != devs.device_of(i - 1) {
+                    ops.push(ChunkOp::D2D {
+                        src_dev: devs.device_of(i),
+                        dst_dev: devs.device_of(i - 1),
+                        span,
+                        time_step: 0,
+                    });
+                }
+            }
+        }
+        if i + 1 < d {
+            let span = fetch_low(i + 1);
+            if !span.is_empty() {
+                ops.push(ChunkOp::RsWrite(RegionOp { span, time_step: 0 }));
+                if devs.device_of(i) != devs.device_of(i + 1) {
+                    ops.push(ChunkOp::D2D {
+                        src_dev: devs.device_of(i),
+                        dst_dev: devs.device_of(i + 1),
+                        span,
+                        time_step: 0,
+                    });
+                }
+            }
+        }
+        // Phase B: fetch this chunk's own epoch-start skirt, compute,
+        // retire.
+        for span in [fetch_low(i), fetch_high(i)] {
+            if !span.is_empty() {
+                ops.push(ChunkOp::Fetch(RegionOp { span, time_step: 0 }));
+            }
+        }
+        match scheme {
+            Scheme::So2dr => {
+                let mut s = 1usize;
+                while s <= steps {
+                    let fused = k_on.min(steps - s + 1);
+                    let windows: Vec<RowSpan> =
+                        (0..fused).map(|t| dc.so2dr_window(i, steps, s + t)).collect();
+                    ops.push(ChunkOp::Kernel(KernelInvocation { first_step: s, windows }));
+                    s += fused;
+                }
+            }
+            Scheme::ResReu => {
+                for s in 1..=steps {
+                    let w = dc.resreu_rs_write(i, s);
+                    if !w.is_empty() {
+                        ops.push(ChunkOp::RsWrite(RegionOp { span: w, time_step: s - 1 }));
+                        if devs.crosses_boundary(i) {
+                            ops.push(ChunkOp::D2D {
+                                src_dev: devs.device_of(i),
+                                dst_dev: devs.device_of(i + 1),
+                                span: w,
+                                time_step: s - 1,
+                            });
+                        }
+                    }
+                    let r = dc.resreu_rs_read(i, s);
+                    if !r.is_empty() {
+                        ops.push(ChunkOp::RsRead(RegionOp { span: r, time_step: s - 1 }));
+                    }
+                    ops.push(ChunkOp::Kernel(KernelInvocation {
+                        first_step: s,
+                        windows: vec![dc.resreu_window(i, steps, s)],
+                    }));
+                }
+            }
+            Scheme::InCore => unreachable!("in-core runs are never resident-planned"),
+        }
+        let settled_now = dc.settled(scheme, i, steps);
+        if final_epoch {
+            ops.push(ChunkOp::DtoH { span: settled_now });
+        } else if !kept[i] {
+            ops.push(ChunkOp::Evict { span: settled_now });
+        }
+        chunks.push(ChunkEpochPlan { chunk: i, device: devs.device_of(i), ops });
+    }
+    EpochPlan {
+        scheme,
+        steps,
+        start_step,
+        n_devices: devs.n_devices(),
+        resident: true,
+        chunks,
+    }
+}
+
+/// Plan a full run under the resident execution model. Returns the epoch
+/// plans plus the planner's decisions. Falls back to the staged plan
+/// (summary `enabled: false`) for `ResidentMode::Off`, the in-core
+/// scheme, or single-epoch runs, where residency has nothing to save.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_run_resident(
+    scheme: Scheme,
+    dc: &Decomposition,
+    devs: &DeviceAssignment,
+    n: usize,
+    s_tb: usize,
+    k_on: usize,
+    cfg: &ResidencyConfig,
+) -> (Vec<EpochPlan>, ResidencySummary) {
+    assert!(n >= 1 && s_tb >= 1);
+    let staged = plan_run_devices(scheme, dc, devs, n, s_tb, k_on);
+    let staged_htod = htod_bytes_of(&staged, dc.cols());
+    if cfg.mode == ResidentMode::Off || scheme == Scheme::InCore || staged.len() < 2 {
+        let summary = ResidencySummary::disabled(dc.n_chunks(), staged_htod);
+        return (staged, summary);
+    }
+    let s_max = staged.iter().map(|p| p.steps).max().unwrap();
+    let buf_rows = dc.uniform_buffer_rows(scheme, s_max);
+    let h_max = dc.skirt(s_max);
+    let cap = match cfg.mode {
+        ResidentMode::Force => None,
+        _ => cfg.cap_per_device,
+    };
+    let keep_counts = devs.resident_keep_counts(dc, buf_rows, h_max, cap);
+    let mut kept = vec![false; dc.n_chunks()];
+    for dev in 0..devs.n_devices() {
+        for (taken, i) in devs.chunks_on(dev).enumerate() {
+            kept[i] = taken < keep_counts[dev];
+        }
+    }
+    let demand_per_device: Vec<u64> = (0..devs.n_devices())
+        .map(|dev| devs.resident_memory_demand(dc, dev, buf_rows, h_max))
+        .collect();
+    let fits = match cap {
+        None => true,
+        Some(cap) => demand_per_device.iter().all(|&d| d <= cap),
+    };
+    // Epoch 0 is the staged epoch (every chunk starts cold), with the
+    // trailing DtoH replaced by the planner's keep/spill decision;
+    // subsequent epochs are resident epochs.
+    let mut plans = Vec::with_capacity(staged.len());
+    let n_epochs = staged.len();
+    let mut prev_steps = 0usize;
+    for (e, p) in staged.iter().enumerate() {
+        let final_epoch = e + 1 == n_epochs;
+        let plan = if e == 0 {
+            let mut plan = p.clone();
+            plan.resident = true;
+            for cp in plan.chunks.iter_mut() {
+                let Some(ChunkOp::DtoH { span }) = cp.ops.last().cloned() else {
+                    unreachable!("staged epochs end with DtoH");
+                };
+                if !final_epoch {
+                    cp.ops.pop();
+                    if !kept[cp.chunk] {
+                        cp.ops.push(ChunkOp::Evict { span });
+                    }
+                }
+            }
+            plan
+        } else {
+            resident_epoch(
+                scheme,
+                dc,
+                devs,
+                p.steps,
+                k_on,
+                p.start_step,
+                prev_steps,
+                &kept,
+                final_epoch,
+            )
+        };
+        prev_steps = p.steps;
+        plans.push(plan);
+    }
+    let planned_spills = plans
+        .iter()
+        .flat_map(|p| p.iter_ops())
+        .filter(|(_, _, op)| matches!(op, ChunkOp::Evict { .. }))
+        .count();
+    let planned_htod = htod_bytes_of(&plans, dc.cols());
+    let summary = ResidencySummary {
+        enabled: true,
+        kept,
+        fits,
+        demand_per_device,
+        planned_spills,
+        staged_htod_bytes: staged_htod,
+        planned_htod_bytes: planned_htod,
+    };
+    (plans, summary)
 }
 
 #[cfg(test)]
@@ -436,6 +851,30 @@ mod device_tests {
     fn check_causality(plan: &EpochPlan) {
         // (span.lo, span.hi, time_step) -> devices holding the region.
         let mut available: HashMap<(usize, usize, usize), HashSet<usize>> = HashMap::new();
+        if plan.resident {
+            // Resident epochs run two-phase: every chunk's arrival +
+            // publish prefix executes before any chunk's fetches/kernels,
+            // so pre-register all phase-A publications.
+            for cp in &plan.chunks {
+                for op in &cp.ops[..phase_a_len(&cp.ops)] {
+                    match op {
+                        ChunkOp::RsWrite(r) => {
+                            available
+                                .entry((r.span.lo, r.span.hi, r.time_step))
+                                .or_default()
+                                .insert(cp.device);
+                        }
+                        ChunkOp::D2D { dst_dev, span, time_step, .. } => {
+                            available
+                                .entry((span.lo, span.hi, *time_step))
+                                .or_default()
+                                .insert(*dst_dev);
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
         for cp in &plan.chunks {
             let mut steps_done = 0usize;
             for op in &cp.ops {
@@ -495,6 +934,28 @@ mod device_tests {
                     ChunkOp::Kernel(k) => {
                         assert_eq!(k.first_step, steps_done + 1, "kernel steps out of order");
                         steps_done += k.fused_steps();
+                    }
+                    ChunkOp::Fetch(r) => {
+                        // A fetch is an RsRead of epoch-start data: its
+                        // publisher must have run (in phase A) and the
+                        // region must sit on the reader's device.
+                        assert_eq!(r.time_step, 0, "fetches move epoch-start data");
+                        assert_eq!(steps_done, 0, "fetches precede kernels");
+                        let holders = available
+                            .get(&(r.span.lo, r.span.hi, r.time_step))
+                            .unwrap_or_else(|| {
+                                panic!("chunk {} fetches unpublished region {}", cp.chunk, r.span)
+                            });
+                        assert!(
+                            holders.contains(&cp.device),
+                            "chunk {} (dev {}) fetches {} not on its device",
+                            cp.chunk,
+                            cp.device,
+                            r.span
+                        );
+                    }
+                    ChunkOp::Resident { .. } | ChunkOp::Evict { .. } => {
+                        assert!(plan.resident, "resident ops only in resident plans");
                     }
                     ChunkOp::HtoD { .. } | ChunkOp::DtoH { .. } => {}
                 }
@@ -588,6 +1049,177 @@ mod device_tests {
             assert_eq!(plan.n_devices, 1);
             for (_, _, op) in plan.iter_ops() {
                 assert!(!matches!(op, ChunkOp::D2D { .. }));
+            }
+        }
+    }
+
+    fn count_ops(plans: &[EpochPlan], f: impl Fn(&ChunkOp) -> bool) -> usize {
+        plans.iter().flat_map(|p| p.iter_ops()).filter(|&(_, _, op)| f(op)).count()
+    }
+
+    #[test]
+    fn resident_force_transfers_each_chunk_once() {
+        let dc = dc();
+        for (scheme, k_on, n, s_tb) in [(Scheme::So2dr, 4, 20, 8), (Scheme::ResReu, 1, 15, 5)] {
+            for n_dev in [1usize, 2, 4] {
+                let devs = DeviceAssignment::contiguous(4, n_dev);
+                let (plans, summary) = plan_run_resident(
+                    scheme,
+                    &dc,
+                    &devs,
+                    n,
+                    s_tb,
+                    k_on,
+                    &ResidencyConfig::force(3),
+                );
+                assert!(summary.enabled);
+                assert!(summary.fits);
+                assert!(summary.kept.iter().all(|&k| k));
+                assert_eq!(summary.planned_spills, 0);
+                // One HtoD per chunk (first touch), one DtoH per chunk
+                // (final writeback), markers everywhere in between.
+                assert_eq!(count_ops(&plans, |op| matches!(op, ChunkOp::HtoD { .. })), 4);
+                assert_eq!(count_ops(&plans, |op| matches!(op, ChunkOp::DtoH { .. })), 4);
+                assert_eq!(count_ops(&plans, |op| matches!(op, ChunkOp::Evict { .. })), 0);
+                assert_eq!(
+                    count_ops(&plans, |op| matches!(op, ChunkOp::Resident { .. })),
+                    (plans.len() - 1) * 4,
+                    "{} on {n_dev} devices",
+                    scheme.name()
+                );
+                // HtoD drops by the epoch count vs the staged plan.
+                assert_eq!(
+                    summary.staged_htod_bytes,
+                    summary.planned_htod_bytes * plans.len() as u64,
+                    "{}",
+                    scheme.name()
+                );
+                for plan in &plans {
+                    check_causality(plan);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resident_tight_cap_spills_every_epoch() {
+        let dc = dc();
+        let devs = DeviceAssignment::contiguous(4, 2);
+        let (plans, summary) = plan_run_resident(
+            Scheme::So2dr,
+            &dc,
+            &devs,
+            20,
+            8,
+            4,
+            &ResidencyConfig::auto(1, 3),
+        );
+        assert!(summary.enabled);
+        assert!(!summary.fits, "a 1-byte capacity cannot fit the model");
+        assert!(summary.kept.iter().all(|&k| !k));
+        // Every chunk spills at the end of every non-final epoch...
+        assert_eq!(summary.planned_spills, (plans.len() - 1) * 4);
+        // ... so the host sees as many bytes as the staged plan.
+        assert_eq!(summary.planned_htod_bytes, summary.staged_htod_bytes);
+        assert_eq!(summary.saved_htod_bytes(), 0);
+        for plan in &plans {
+            check_causality(plan);
+        }
+    }
+
+    #[test]
+    fn resident_off_and_incore_and_single_epoch_degenerate_to_staged() {
+        let dc = dc();
+        let devs = DeviceAssignment::single(4);
+        for (scheme, cfg, n) in [
+            (Scheme::So2dr, ResidencyConfig::off(), 20),
+            (Scheme::InCore, ResidencyConfig::force(3), 20),
+            (Scheme::So2dr, ResidencyConfig::force(3), 6), // single epoch
+        ] {
+            let (plans, summary) = plan_run_resident(scheme, &dc, &devs, n, 8, 4, &cfg);
+            assert!(!summary.enabled);
+            assert_eq!(summary.saved_htod_bytes(), 0);
+            for p in &plans {
+                assert!(!p.resident);
+                for (_, _, op) in p.iter_ops() {
+                    assert!(!matches!(
+                        op,
+                        ChunkOp::Resident { .. } | ChunkOp::Fetch(_) | ChunkOp::Evict { .. }
+                    ));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resident_epoch_fetches_match_publishes_exactly() {
+        // RS keys are exact (span, time): every fetch must find a
+        // same-key publish, on the right device.
+        let dc = dc();
+        for (scheme, k_on) in [(Scheme::So2dr, 2), (Scheme::ResReu, 1)] {
+            let devs = DeviceAssignment::contiguous(4, 4);
+            let (plans, _) =
+                plan_run_resident(scheme, &dc, &devs, 20, 5, k_on, &ResidencyConfig::force(3));
+            for plan in plans.iter().skip(1) {
+                let mut published: HashSet<(usize, usize, usize, usize)> = HashSet::new();
+                for cp in &plan.chunks {
+                    for op in &cp.ops[..phase_a_len(&cp.ops)] {
+                        match op {
+                            ChunkOp::RsWrite(r) => {
+                                published.insert((r.span.lo, r.span.hi, r.time_step, cp.device));
+                            }
+                            ChunkOp::D2D { dst_dev, span, time_step, .. } => {
+                                published.insert((span.lo, span.hi, *time_step, *dst_dev));
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+                for cp in &plan.chunks {
+                    for op in &cp.ops {
+                        if let ChunkOp::Fetch(r) = op {
+                            assert!(
+                                published.contains(&(
+                                    r.span.lo, r.span.hi, r.time_step, cp.device
+                                )),
+                                "{}: chunk {} fetch {} has no same-device publish",
+                                scheme.name(),
+                                cp.chunk,
+                                r.span
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn phase_a_covers_arrival_and_publishes_only() {
+        let dc = dc();
+        let devs = DeviceAssignment::contiguous(4, 2);
+        // Staged epoch: phase A is the HtoD (chunk 1 reads before writing).
+        let staged = so2dr_epoch(&dc, &devs, 8, 4, 0);
+        assert_eq!(phase_a_len(&staged.chunks[1].ops), 1);
+        // Resident epoch: marker + publishes (+ link hops), then fetches.
+        let (plans, _) =
+            plan_run_resident(Scheme::So2dr, &dc, &devs, 20, 8, 4, &ResidencyConfig::force(3));
+        let mid = &plans[1];
+        for cp in &mid.chunks {
+            let a = phase_a_len(&cp.ops);
+            assert!(a >= 1, "arrival op");
+            assert!(matches!(cp.ops[0], ChunkOp::Resident { .. }));
+            for op in &cp.ops[a..] {
+                assert!(
+                    !matches!(op, ChunkOp::Resident { .. } | ChunkOp::HtoD { .. }),
+                    "arrival ops confined to phase A"
+                );
+            }
+            // Interior chunks fetch both skirts.
+            if cp.chunk > 0 && cp.chunk < 3 {
+                let fetches =
+                    cp.ops.iter().filter(|o| matches!(o, ChunkOp::Fetch(_))).count();
+                assert_eq!(fetches, 2, "chunk {}", cp.chunk);
             }
         }
     }

@@ -1,7 +1,7 @@
 //! Run configuration (paper Table I) with TOML loading and validation.
 
 use super::toml_mini::{parse, Section};
-use crate::chunking::Scheme;
+use crate::chunking::{ResidentMode, Scheme};
 use crate::stencil::StencilKind;
 use anyhow::{bail, Context, Result};
 
@@ -29,6 +29,10 @@ pub struct RunConfig {
     /// Inter-device link bandwidth override in GB/s (peer-to-peer halo
     /// exchange); `None` keeps the selected machine's `bw_link`.
     pub d2d_gbps: Option<f64>,
+    /// Resident execution model: `off` stages every epoch through the
+    /// host, `auto` keeps chunks device-resident while the machine's
+    /// per-device capacity allows, `force` pins everything.
+    pub resident: ResidentMode,
     /// Synthetic-field seed.
     pub seed: u64,
     /// Kernel backend: "host-naive", "host-opt" or "pjrt".
@@ -64,6 +68,7 @@ impl Default for RunConfig {
             n_strm: 3,
             devices: 1,
             d2d_gbps: None,
+            resident: ResidentMode::Off,
             seed: 42,
             backend: "host-opt".into(),
         }
@@ -106,6 +111,11 @@ impl RunConfig {
                     "n_strm" => cfg.n_strm = s.usize_req("n_strm")?,
                     "devices" => cfg.devices = s.usize_req("devices")?,
                     "d2d_gbps" => cfg.d2d_gbps = Some(s.float_req("d2d_gbps")?),
+                    "resident" => {
+                        let v = s.str_req("resident")?;
+                        cfg.resident = ResidentMode::parse(&v)
+                            .with_context(|| format!("bad resident mode {v:?} (off|auto|force)"))?;
+                    }
                     "seed" => cfg.seed = s.int_or("seed", 42) as u64,
                     "backend" => cfg.backend = s.str_or("backend", "host-opt"),
                     other => bail!("unknown key {other:?}"),
@@ -159,7 +169,7 @@ impl RunConfig {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "{} {} {}x{} d={} S_TB={} k_on={} n={} N_strm={} devices={} backend={}",
+            "{} {} {}x{} d={} S_TB={} k_on={} n={} N_strm={} devices={} resident={} backend={}",
             self.scheme.name(),
             self.kind.name(),
             self.rows,
@@ -170,6 +180,7 @@ impl RunConfig {
             self.n,
             self.n_strm,
             self.devices,
+            self.resident.name(),
             self.backend
         )
     }
@@ -203,6 +214,17 @@ mod tests {
         assert!(RunConfig::from_toml("scheme = \"resreu\"\nk_on = 4\n").is_err());
         // Infeasible skirt: s_tb*r + r > rows/d.
         assert!(RunConfig::from_toml("sz = 64\nd = 4\ns_tb = 16\n").is_err());
+    }
+
+    #[test]
+    fn parses_resident_mode() {
+        let cfg = RunConfig::from_toml("resident = \"auto\"\n").unwrap();
+        assert_eq!(cfg.resident, ResidentMode::Auto);
+        assert_eq!(RunConfig::default().resident, ResidentMode::Off);
+        assert!(RunConfig::from_toml("resident = \"sometimes\"\n").is_err());
+        // Unquoted or non-string values fail loudly.
+        assert!(RunConfig::from_toml("resident = 1\n").is_err());
+        assert!(RunConfig::default().summary().contains("resident=off"));
     }
 
     #[test]

@@ -133,6 +133,17 @@ impl<'a> Section<'a> {
         self.0.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
     }
 
+    /// Required string key: fails loudly when the key is missing or holds
+    /// a non-string value (a bare `auto` parses as... nothing — TOML
+    /// strings must be quoted, and this surfaces that early).
+    pub fn str_req(&self, key: &str) -> Result<String> {
+        self.0
+            .get(key)
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .with_context(|| format!("missing or invalid string key {key:?}"))
+    }
+
     pub fn int_or(&self, key: &str, default: i64) -> i64 {
         self.0.get(key).and_then(|v| v.as_int()).unwrap_or(default)
     }
@@ -185,6 +196,9 @@ mod tests {
     fn section_helpers() {
         let doc = parse("[x]\na = 3\nb = \"hi\"\n").unwrap();
         let s = Section(&doc["x"]);
+        assert_eq!(s.str_req("b").unwrap(), "hi");
+        assert!(s.str_req("a").is_err(), "integer is not a string");
+        assert!(s.str_req("missing").is_err());
         assert_eq!(s.int_or("a", 0), 3);
         assert_eq!(s.float_req("a").unwrap(), 3.0);
         assert!(s.float_req("b").is_err(), "string is not a number");

@@ -1,7 +1,9 @@
 //! High-level entry points: run a scheme end to end, or the in-core
 //! reference sweep.
 
-use crate::chunking::plan::{plan_run_devices, Scheme};
+use crate::chunking::plan::{
+    plan_run_devices, plan_run_resident, ResidencyConfig, ResidencySummary, Scheme,
+};
 use crate::chunking::{Decomposition, DeviceAssignment};
 use crate::coordinator::backend::KernelBackend;
 use crate::coordinator::exec::{ExecStats, PlanExecutor};
@@ -14,6 +16,9 @@ use anyhow::Result;
 pub struct RunOutcome {
     pub grid: Array2,
     pub stats: ExecStats,
+    /// What the residency planner decided (`None` for staged entry
+    /// points that never consulted it).
+    pub residency: Option<ResidencySummary>,
 }
 
 /// Golden reference: `n` full-interior steps with a host engine,
@@ -66,7 +71,43 @@ pub fn run_scheme_on(
     let mut exec = PlanExecutor::new(backend, kind);
     exec.run(&mut grid, &dc, &plans)?;
     let stats = exec.stats.clone();
-    Ok(RunOutcome { grid, stats })
+    Ok(RunOutcome { grid, stats, residency: None })
+}
+
+/// [`run_scheme_on`] under the resident execution model: the residency
+/// planner turns the epoch sequence into one cross-epoch plan (chunks
+/// transferred HtoD once on first touch, kept in per-device arenas while
+/// `resident.cap_per_device` allows, inter-epoch halos refreshed by
+/// neighbor-arena fetches, capacity victims spilled and re-fetched), and
+/// the executor interprets it with real numerics. Bit-exactness vs
+/// [`reference_run`] is preserved — the randomized differential suite
+/// enforces it across schemes, device counts and capacity settings.
+#[allow(clippy::too_many_arguments)]
+pub fn run_scheme_resident(
+    scheme: Scheme,
+    initial: &Array2,
+    kind: StencilKind,
+    n: usize,
+    d: usize,
+    n_devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    backend: &mut dyn KernelBackend,
+    resident: &ResidencyConfig,
+) -> Result<RunOutcome> {
+    crate::config::validate_devices(scheme, d, n_devices)?;
+    let dc = Decomposition::new(initial.rows(), initial.cols(), d, kind.radius());
+    let devs = if scheme == Scheme::InCore {
+        DeviceAssignment::single(dc.n_chunks())
+    } else {
+        DeviceAssignment::contiguous(dc.n_chunks(), n_devices)
+    };
+    let (plans, summary) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, resident);
+    let mut grid = initial.clone();
+    let mut exec = PlanExecutor::new(backend, kind);
+    exec.run(&mut grid, &dc, &plans)?;
+    let stats = exec.stats.clone();
+    Ok(RunOutcome { grid, stats, residency: Some(summary) })
 }
 
 /// Single-device [`run_scheme_on`] (the seed's original entry point).
@@ -199,6 +240,140 @@ mod tests {
         let out = run_scheme(Scheme::ResReu, &initial, kind, 12, 3, 6, 1, &mut backend).unwrap();
         let interior = ((96 - 2) * (48 - 2)) as u64;
         assert_eq!(out.stats.computed_elems, interior * 12);
+    }
+
+    #[test]
+    fn resident_force_matches_reference_and_drops_host_traffic() {
+        use crate::chunking::plan::ResidencyConfig;
+        let kind = StencilKind::Box { radius: 1 };
+        let initial = Array2::synthetic(160, 64, 21);
+        let reference = reference_run(&initial, kind, 12, &NaiveEngine);
+        let grid_bytes = (160 * 64 * 4) as u64;
+        for (scheme, k_on) in [(Scheme::So2dr, 3), (Scheme::ResReu, 1)] {
+            for n_devices in [1usize, 2, 4] {
+                let mut backend = HostBackend::new(NaiveEngine);
+                let out = run_scheme_resident(
+                    scheme,
+                    &initial,
+                    kind,
+                    12,
+                    4,
+                    n_devices,
+                    6,
+                    k_on,
+                    &mut backend,
+                    &ResidencyConfig::force(3),
+                )
+                .unwrap();
+                assert!(
+                    out.grid.bit_eq(&reference),
+                    "{} resident on {n_devices} devices diverged: {}",
+                    scheme.name(),
+                    out.grid.max_abs_diff(&reference)
+                );
+                // Two epochs staged would move the grid twice each way;
+                // resident moves it once each way and refreshes halos
+                // from neighbor arenas.
+                assert_eq!(out.stats.htod_bytes, grid_bytes, "{}", scheme.name());
+                assert_eq!(out.stats.dtoh_bytes, grid_bytes, "{}", scheme.name());
+                assert_eq!(out.stats.spills, 0);
+                assert!(out.stats.resident_hits > 0);
+                assert!(out.stats.fetch_reads > 0, "{}", scheme.name());
+                let summary = out.residency.unwrap();
+                assert!(summary.enabled && summary.fits);
+                assert_eq!(summary.saved_htod_bytes(), grid_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn resident_mixed_pinning_across_devices_stays_bit_exact() {
+        // d=5 over 2 devices splits 3|2; a capacity sized to the smaller
+        // device's demand pins its chunks while the larger device spills
+        // every epoch — kept and spilled chunks meet at the device
+        // boundary, exercising the mixed Resident/HtoD + publish/fetch
+        // interleaving with real numerics.
+        use crate::chunking::plan::ResidencyConfig;
+        let kind = StencilKind::Box { radius: 1 };
+        let initial = Array2::synthetic(200, 64, 11);
+        let reference = reference_run(&initial, kind, 18, &NaiveEngine);
+        for (scheme, k_on) in [(Scheme::So2dr, 3), (Scheme::ResReu, 1)] {
+            let dc = Decomposition::new(200, 64, 5, kind.radius());
+            let devs = DeviceAssignment::contiguous(5, 2);
+            let s_max = 6; // = min(s_tb, n) below
+            let buf_rows = dc.uniform_buffer_rows(scheme, s_max);
+            let h_max = dc.skirt(s_max);
+            let cap = (0..2)
+                .map(|dev| devs.resident_memory_demand(&dc, dev, buf_rows, h_max))
+                .min()
+                .unwrap();
+            let expected: Vec<bool> = (0..5)
+                .map(|i| {
+                    devs.resident_memory_demand(&dc, devs.device_of(i), buf_rows, h_max)
+                        <= cap
+                })
+                .collect();
+            assert!(
+                expected.iter().any(|&k| k) && expected.iter().any(|&k| !k),
+                "capacity must split the devices"
+            );
+            let mut backend = HostBackend::new(NaiveEngine);
+            let out = run_scheme_resident(
+                scheme,
+                &initial,
+                kind,
+                18,
+                5,
+                2,
+                6,
+                k_on,
+                &mut backend,
+                &ResidencyConfig::auto(cap, 3),
+            )
+            .unwrap();
+            assert!(
+                out.grid.bit_eq(&reference),
+                "{} mixed pinning diverged: {}",
+                scheme.name(),
+                out.grid.max_abs_diff(&reference)
+            );
+            let summary = out.residency.unwrap();
+            assert_eq!(summary.kept, expected, "{}", scheme.name());
+            assert!(out.stats.spills > 0, "{}", scheme.name());
+            assert!(out.stats.resident_hits > 0, "{}", scheme.name());
+        }
+    }
+
+    #[test]
+    fn resident_tight_cap_spills_and_stays_bit_exact() {
+        use crate::chunking::plan::ResidencyConfig;
+        let kind = StencilKind::Box { radius: 1 };
+        let initial = Array2::synthetic(160, 64, 5);
+        let reference = reference_run(&initial, kind, 18, &NaiveEngine);
+        let mut backend = HostBackend::new(NaiveEngine);
+        let out = run_scheme_resident(
+            Scheme::So2dr,
+            &initial,
+            kind,
+            18,
+            4,
+            2,
+            6,
+            3,
+            &mut backend,
+            &ResidencyConfig::auto(1, 3),
+        )
+        .unwrap();
+        assert!(out.grid.bit_eq(&reference), "diff {}", out.grid.max_abs_diff(&reference));
+        // Nothing fits a 1-byte device: every chunk spills at the end of
+        // each of the two non-final epochs, and the host traffic matches
+        // the staged model.
+        assert_eq!(out.stats.spills, 2 * 4);
+        assert_eq!(out.stats.htod_bytes, 3 * (160 * 64 * 4) as u64);
+        assert_eq!(out.stats.resident_hits, 0);
+        let summary = out.residency.unwrap();
+        assert!(summary.enabled && !summary.fits);
+        assert_eq!(summary.planned_spills, 8);
     }
 
     #[test]

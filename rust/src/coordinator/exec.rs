@@ -10,7 +10,7 @@
 //! exercises region sharing, trapezoid clamping, skewed windows, epoch
 //! residuals, and multi-device sharding.
 
-use crate::chunking::plan::{ChunkOp, EpochPlan, Scheme};
+use crate::chunking::plan::{phase_a_len, ChunkEpochPlan, ChunkOp, EpochPlan, Scheme};
 use crate::chunking::Decomposition;
 use crate::coordinator::backend::KernelBackend;
 use crate::coordinator::rs_buffer::RegionShareBuffer;
@@ -40,9 +40,21 @@ pub struct ExecStats {
     pub computed_elems: u64,
     /// Peak bytes held by the region-sharing buffers (summed over devices).
     pub rs_peak_bytes: u64,
-    /// Peak bytes of chunk buffers live at once (sequential real path:
-    /// one double buffer per device).
+    /// Peak bytes of chunk buffers live at once (staged path: one double
+    /// buffer per device; resident path: all live per-chunk arenas).
     pub arena_peak_bytes: u64,
+    /// Resident model: epoch-start halo rows refreshed from neighbor
+    /// arenas instead of the host (executed [`ChunkOp::Fetch`] traffic).
+    pub fetch_bytes: u64,
+    pub fetch_reads: u64,
+    /// Resident model: capacity spills (executed [`ChunkOp::Evict`] ops).
+    /// Spill bytes are also counted in `dtoh_bytes` — an eviction is a
+    /// real device-to-host transfer.
+    pub spills: u64,
+    pub spill_bytes: u64,
+    /// Resident model: chunk-epochs that arrived with their arena already
+    /// live (no host transfer at all).
+    pub resident_hits: u64,
 }
 
 impl ExecStats {
@@ -70,30 +82,25 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
     }
 
     /// Uniform chunk-buffer height for a whole run (so AOT-compiled
-    /// fixed-shape kernels can serve every chunk and epoch).
+    /// fixed-shape kernels can serve every chunk and epoch, and resident
+    /// arenas keep a stable base). Delegates to
+    /// [`Decomposition::uniform_buffer_rows`] so the executor, the
+    /// flattener and the residency planner agree on arena sizes.
     pub fn buffer_rows(dc: &Decomposition, plans: &[EpochPlan]) -> usize {
-        let max_own = (0..dc.n_chunks()).map(|i| dc.owned(i).len()).max().unwrap();
-        let r = dc.radius();
         plans
             .iter()
-            .map(|p| match p.scheme {
-                Scheme::So2dr => max_own + 2 * p.steps * r,
-                Scheme::ResReu => max_own + p.steps * r + r,
-                Scheme::InCore => dc.rows(),
-            })
+            .map(|p| dc.uniform_buffer_rows(p.scheme, p.steps))
             .max()
             .unwrap_or(dc.rows())
     }
 
-    /// Signed global row of the chunk buffer's first row for this epoch.
+    /// Signed global row of the chunk buffer's first row for this epoch:
+    /// the staged path re-bases per epoch (`plan.steps`), while the
+    /// resident path pins the base at the run maximum. Both delegate to
+    /// [`Decomposition::resident_base`] so the two executions can never
+    /// disagree on arena row addressing.
     fn buffer_base(dc: &Decomposition, plan: &EpochPlan, chunk: usize) -> i64 {
-        let r = dc.radius() as i64;
-        let steps = plan.steps as i64;
-        match plan.scheme {
-            Scheme::So2dr => dc.owned(chunk).lo as i64 - steps * r,
-            Scheme::ResReu => dc.owned(chunk).lo as i64 - steps * r - r,
-            Scheme::InCore => 0,
-        }
+        dc.resident_base(plan.scheme, plan.steps, chunk)
     }
 
     fn to_local(span: RowSpan, base: i64, buf_rows: usize) -> Result<RowSpan> {
@@ -119,21 +126,27 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         // resident on its own device (D2D ops bridge the gap).
         let mut rs: Vec<RegionShareBuffer> =
             (0..n_devices).map(|_| RegionShareBuffer::new()).collect();
-        // §Perf iteration 2: one double buffer per device, reused across
-        // chunks and epochs (the device arenas would do the same). Safe
-        // because every live row is written (HtoD/RS read) before any
-        // kernel reads it — the bit-exact equivalence suite guards this
-        // invariant.
-        let mut bufs: Vec<(Array2, Array2)> = (0..n_devices)
-            .map(|_| (Array2::zeros(buf_rows, cols), Array2::zeros(buf_rows, cols)))
-            .collect();
-        for plan in plans {
-            self.run_epoch(grid, dc, plan, buf_rows, cols, &mut rs, &mut bufs)
-                .with_context(|| format!("epoch at step {}", plan.start_step))?;
-            for r in rs.iter_mut() {
-                r.clear();
+        if plans.iter().any(|p| p.resident) {
+            // Resident execution model: per-chunk arenas persist across
+            // epochs (see `run_resident`).
+            self.run_resident(grid, dc, plans, buf_rows, cols, &mut rs)?;
+        } else {
+            // §Perf iteration 2: one double buffer per device, reused
+            // across chunks and epochs (the device arenas would do the
+            // same). Safe because every live row is written (HtoD/RS
+            // read) before any kernel reads it — the bit-exact
+            // equivalence suite guards this invariant.
+            let mut bufs: Vec<(Array2, Array2)> = (0..n_devices)
+                .map(|_| (Array2::zeros(buf_rows, cols), Array2::zeros(buf_rows, cols)))
+                .collect();
+            for plan in plans {
+                self.run_epoch(grid, dc, plan, buf_rows, cols, &mut rs, &mut bufs)
+                    .with_context(|| format!("epoch at step {}", plan.start_step))?;
+                for r in rs.iter_mut() {
+                    r.clear();
+                }
+                self.stats.epochs += 1;
             }
-            self.stats.epochs += 1;
         }
         self.stats.rs_peak_bytes = rs.iter().map(|r| r.peak_bytes()).sum();
         self.stats.od_bytes = rs.iter().map(|r| r.bytes_read() + r.bytes_written()).sum();
@@ -175,7 +188,7 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                     }
                     ChunkOp::DtoH { span } => {
                         let local = Self::to_local(*span, base, buf_rows)?;
-                        grid.copy_rows_from(*span, &cur, local);
+                        grid.copy_rows_from(*span, cur, local);
                         self.stats.dtoh_bytes += (span.len() * cols * 4) as u64;
                     }
                     ChunkOp::RsRead(region) => {
@@ -226,11 +239,189 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                         self.stats.kernel_invocations += 1;
                         self.stats.fused_steps += inv.windows.len() as u64;
                     }
+                    ChunkOp::Resident { .. } | ChunkOp::Fetch(_) | ChunkOp::Evict { .. } => {
+                        bail!("resident-model op in a staged epoch (plan bug)");
+                    }
                 }
             }
             if plan.scheme == Scheme::InCore {
                 let all = RowSpan::new(0, dc.rows());
-                grid.copy_rows_from(all, &cur, all);
+                grid.copy_rows_from(all, cur, all);
+            }
+        }
+        Ok(())
+    }
+
+    /// Resident execution model: one persistent arena per chunk, kept
+    /// alive across epoch boundaries. Each epoch runs in two phases —
+    /// every chunk's arrival + epoch-start publishes (phase A), then all
+    /// fetches, kernels and retirements (phase B) — because inter-epoch
+    /// halo data flows both up and down the chunk order, which a single
+    /// chunk-major sweep cannot serialize (a chunk's kernels would
+    /// overwrite rows its neighbor still has to fetch).
+    fn run_resident(
+        &mut self,
+        grid: &mut Array2,
+        dc: &Decomposition,
+        plans: &[EpochPlan],
+        buf_rows: usize,
+        cols: usize,
+        rs: &mut [RegionShareBuffer],
+    ) -> Result<()> {
+        let scheme = plans.first().map(|p| p.scheme).unwrap_or(Scheme::So2dr);
+        let s_max = plans.iter().map(|p| p.steps).max().unwrap_or(1);
+        let mut arenas: Vec<Option<(Array2, Array2)>> =
+            (0..dc.n_chunks()).map(|_| None).collect();
+        for plan in plans {
+            for pass in 0..2 {
+                for cp in &plan.chunks {
+                    let split = phase_a_len(&cp.ops);
+                    let ops = if pass == 0 { &cp.ops[..split] } else { &cp.ops[split..] };
+                    let base = dc.resident_base(scheme, s_max, cp.chunk);
+                    self.exec_resident_ops(
+                        grid, dc, cp, ops, base, buf_rows, cols, rs, &mut arenas,
+                    )
+                    .with_context(|| {
+                        format!("epoch at step {} chunk {}", plan.start_step, cp.chunk)
+                    })?;
+                }
+                if pass == 0 {
+                    // Peak arena occupancy: right after arrivals, before
+                    // this epoch's evictions.
+                    let live = arenas.iter().filter(|a| a.is_some()).count() as u64;
+                    self.stats.arena_peak_bytes = self
+                        .stats
+                        .arena_peak_bytes
+                        .max(live * dc.arena_bytes(buf_rows));
+                }
+            }
+            for r in rs.iter_mut() {
+                r.clear();
+            }
+            self.stats.epochs += 1;
+        }
+        Ok(())
+    }
+
+    /// Execute a slice of one chunk's ops against its own persistent
+    /// arena (allocated lazily on arrival, dropped on eviction).
+    #[allow(clippy::too_many_arguments)]
+    fn exec_resident_ops(
+        &mut self,
+        grid: &mut Array2,
+        dc: &Decomposition,
+        cp: &ChunkEpochPlan,
+        ops: &[ChunkOp],
+        base: i64,
+        buf_rows: usize,
+        cols: usize,
+        rs: &mut [RegionShareBuffer],
+        arenas: &mut [Option<(Array2, Array2)>],
+    ) -> Result<()> {
+        fn arena<'m>(
+            arenas: &'m mut [Option<(Array2, Array2)>],
+            chunk: usize,
+        ) -> Result<&'m mut (Array2, Array2)> {
+            arenas[chunk]
+                .as_mut()
+                .with_context(|| format!("chunk {chunk} arena is not live"))
+        }
+        let radius = dc.radius();
+        for op in ops {
+            match op {
+                ChunkOp::Resident { .. } => {
+                    if arenas[cp.chunk].is_none() {
+                        bail!("chunk {} marked resident but its arena is dead", cp.chunk);
+                    }
+                    self.stats.resident_hits += 1;
+                }
+                ChunkOp::HtoD { span } => {
+                    let local = Self::to_local(*span, base, buf_rows)?;
+                    let pair = arenas[cp.chunk].get_or_insert_with(|| {
+                        (Array2::zeros(buf_rows, cols), Array2::zeros(buf_rows, cols))
+                    });
+                    pair.0.copy_rows_from(local, grid, *span);
+                    self.stats.htod_bytes += (span.len() * cols * 4) as u64;
+                }
+                ChunkOp::DtoH { span } => {
+                    let local = Self::to_local(*span, base, buf_rows)?;
+                    let pair = arena(arenas, cp.chunk)?;
+                    grid.copy_rows_from(*span, &pair.0, local);
+                    self.stats.dtoh_bytes += (span.len() * cols * 4) as u64;
+                }
+                ChunkOp::Evict { span } => {
+                    let local = Self::to_local(*span, base, buf_rows)?;
+                    let pair = arena(arenas, cp.chunk)?;
+                    grid.copy_rows_from(*span, &pair.0, local);
+                    let bytes = (span.len() * cols * 4) as u64;
+                    self.stats.dtoh_bytes += bytes;
+                    self.stats.spill_bytes += bytes;
+                    self.stats.spills += 1;
+                    arenas[cp.chunk] = None;
+                }
+                ChunkOp::RsRead(region) => {
+                    let local = Self::to_local(region.span, base, buf_rows)?;
+                    let data = rs[cp.device]
+                        .read(region.span, region.time_step)
+                        .with_context(|| {
+                            format!(
+                                "RS region {} @t{} missing on device {} (chunk {})",
+                                region.span, region.time_step, cp.device, cp.chunk
+                            )
+                        })?
+                        .clone();
+                    arena(arenas, cp.chunk)?.0.insert_rows(local, &data);
+                }
+                ChunkOp::Fetch(region) => {
+                    let local = Self::to_local(region.span, base, buf_rows)?;
+                    let data = rs[cp.device]
+                        .read(region.span, region.time_step)
+                        .with_context(|| {
+                            format!(
+                                "fetch region {} missing on device {} (chunk {})",
+                                region.span, cp.device, cp.chunk
+                            )
+                        })?
+                        .clone();
+                    self.stats.fetch_bytes += data.size_bytes();
+                    self.stats.fetch_reads += 1;
+                    arena(arenas, cp.chunk)?.0.insert_rows(local, &data);
+                }
+                ChunkOp::RsWrite(region) => {
+                    let local = Self::to_local(region.span, base, buf_rows)?;
+                    let data = arena(arenas, cp.chunk)?.0.extract_rows(local);
+                    rs[cp.device].write(region.span, region.time_step, data);
+                }
+                ChunkOp::D2D { src_dev, dst_dev, span, time_step } => {
+                    let data = rs[*src_dev]
+                        .peek(*span, *time_step)
+                        .with_context(|| {
+                            format!(
+                                "D2D region {} @t{} missing on source device {}",
+                                span, time_step, src_dev
+                            )
+                        })?
+                        .clone();
+                    self.stats.p2p_bytes += data.size_bytes();
+                    self.stats.p2p_copies += 1;
+                    rs[*dst_dev].receive(*span, *time_step, data);
+                }
+                ChunkOp::Kernel(inv) => {
+                    let mut local_windows = Vec::with_capacity(inv.windows.len());
+                    for w in &inv.windows {
+                        let lw = Self::to_local(*w, base, buf_rows)?;
+                        local_windows.push(Rect::new(lw.lo, lw.hi, radius, cols - radius));
+                        self.stats.computed_elems += (lw.len() * (cols - 2 * radius)) as u64;
+                    }
+                    let pair = arena(arenas, cp.chunk)?;
+                    self.backend
+                        .run_kernel(self.kind, &mut pair.0, &mut pair.1, &local_windows)
+                        .with_context(|| {
+                            format!("kernel chunk {} step {}", cp.chunk, inv.first_step)
+                        })?;
+                    self.stats.kernel_invocations += 1;
+                    self.stats.fused_steps += inv.windows.len() as u64;
+                }
             }
         }
         Ok(())

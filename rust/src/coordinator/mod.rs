@@ -2,10 +2,11 @@
 //! numerics against a pluggable kernel backend.
 //!
 //! The coordinator is the paper's system contribution: it owns the chunk
-//! lifecycle (HtoD → region sharing → temporally-blocked kernels → DtoH),
-//! the region-sharing buffer, and the device-arena accounting. Two
-//! *interpreters* consume the same [`EpochPlan`](crate::chunking::EpochPlan)
-//! IR:
+//! lifecycle (HtoD → region sharing → temporally-blocked kernels → DtoH
+//! under the staged model; first-touch HtoD → publish/fetch halo refresh
+//! → kernels → keep/evict under the resident model), the region-sharing
+//! buffer, and the device-arena accounting. Two *interpreters* consume
+//! the same [`EpochPlan`](crate::chunking::EpochPlan) IR:
 //! - this module — real data, correctness is the point;
 //! - [`crate::gpu`] — a discrete-event replay on the paper's machine model,
 //!   timing is the point.
@@ -17,7 +18,7 @@ pub mod pipeline;
 pub mod rs_buffer;
 
 pub use backend::{HostBackend, KernelBackend};
-pub use driver::{reference_run, run_scheme, run_scheme_on, RunOutcome};
+pub use driver::{reference_run, run_scheme, run_scheme_on, run_scheme_resident, RunOutcome};
 pub use exec::{ExecStats, PlanExecutor};
-pub use pipeline::{run_pipeline, PipelineStats, Segment};
+pub use pipeline::{run_pipeline, run_pipeline_on, PipelineStats, Segment};
 pub use rs_buffer::RegionShareBuffer;

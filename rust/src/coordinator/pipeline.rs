@@ -7,10 +7,18 @@
 //! temporal blocking (the skirt depends on each segment's radius), while
 //! the grid stays on the host between segments — exactly how a
 //! multi-physics code alternates operators.
+//!
+//! Residency: each segment runs through the residency planner
+//! ([`ResidencyConfig`]), so multi-epoch segments keep their chunks
+//! device-resident *within* the segment. The segment boundary itself is
+//! still a host round trip: arenas are shaped by the segment's stencil
+//! radius (fixed-shape AOT kernels), so persisting them across a radius
+//! change needs a kind-carrying plan IR — a ROADMAP follow-on. The
+//! multi-device tests below lock today's boundary behavior in.
 
-use crate::chunking::plan::Scheme;
+use crate::chunking::plan::{ResidencyConfig, Scheme};
 use crate::coordinator::backend::KernelBackend;
-use crate::coordinator::driver::{run_scheme, RunOutcome};
+use crate::coordinator::driver::{run_scheme_resident, RunOutcome};
 use crate::coordinator::exec::ExecStats;
 use crate::core::Array2;
 use crate::stencil::StencilKind;
@@ -45,19 +53,23 @@ impl PipelineStats {
     }
 }
 
-/// Run a multi-stencil pipeline under one scheme and run-time config.
-/// `s_tb` is clamped per segment so each segment's halo working space
-/// stays feasible for its radius (larger radii get fewer TB steps, as
-/// the §IV-C constraint demands).
+/// Run a multi-stencil pipeline under one scheme and run-time config,
+/// sharded over `devices` simulated GPUs, with each segment planned by
+/// the residency planner (`resident`). `s_tb` is clamped per segment so
+/// each segment's halo working space stays feasible for its radius
+/// (larger radii get fewer TB steps, as the §IV-C constraint demands).
+/// The grid returns to the host between segments (see module docs).
 #[allow(clippy::too_many_arguments)]
-pub fn run_pipeline(
+pub fn run_pipeline_on(
     scheme: Scheme,
     initial: &Array2,
     segments: &[Segment],
     d: usize,
+    devices: usize,
     s_tb: usize,
     k_on: usize,
     backend: &mut dyn KernelBackend,
+    resident: &ResidencyConfig,
 ) -> Result<(RunOutcome, PipelineStats)> {
     if segments.is_empty() {
         bail!("empty pipeline");
@@ -70,8 +82,10 @@ pub fn run_pipeline(
         let min_chunk = initial.rows() / d;
         let max_tb = (min_chunk.saturating_sub(seg.kind.radius())) / seg.kind.radius();
         let seg_tb = s_tb.min(max_tb.max(1)).min(seg.steps.max(1));
-        let out = run_scheme(scheme, &grid, seg.kind, seg.steps, d, seg_tb, k_on, backend)
-            .with_context(|| format!("pipeline segment {i} ({})", seg.kind.name()))?;
+        let out = run_scheme_resident(
+            scheme, &grid, seg.kind, seg.steps, d, devices, seg_tb, k_on, backend, resident,
+        )
+        .with_context(|| format!("pipeline segment {i} ({})", seg.kind.name()))?;
         grid = out.grid.clone();
         stats.per_segment.push((seg.kind, out.stats.clone()));
         last = Some(out);
@@ -79,6 +93,31 @@ pub fn run_pipeline(
     let mut outcome = last.unwrap();
     outcome.grid = grid;
     Ok((outcome, stats))
+}
+
+/// Single-device, staged-epoch [`run_pipeline_on`] (the original entry
+/// point).
+#[allow(clippy::too_many_arguments)]
+pub fn run_pipeline(
+    scheme: Scheme,
+    initial: &Array2,
+    segments: &[Segment],
+    d: usize,
+    s_tb: usize,
+    k_on: usize,
+    backend: &mut dyn KernelBackend,
+) -> Result<(RunOutcome, PipelineStats)> {
+    run_pipeline_on(
+        scheme,
+        initial,
+        segments,
+        d,
+        1,
+        s_tb,
+        k_on,
+        backend,
+        &ResidencyConfig::off(),
+    )
 }
 
 #[cfg(test)]
@@ -136,5 +175,88 @@ mod tests {
         let initial = Array2::synthetic(32, 32, 1);
         let mut backend = HostBackend::new(NaiveEngine);
         assert!(run_pipeline(Scheme::So2dr, &initial, &[], 2, 4, 2, &mut backend).is_err());
+    }
+
+    #[test]
+    fn multi_device_pipeline_matches_reference_and_stages_at_boundaries() {
+        // Locks in today's segment-boundary contract across device
+        // counts: every segment returns the grid to the host, so each
+        // segment's HtoD moves at least the whole grid once, and the
+        // result stays bit-exact under sharding.
+        let initial = Array2::synthetic(120, 80, 17);
+        let expect = reference_pipeline(&initial, &segments());
+        let grid_bytes = (120 * 80 * 4) as u64;
+        for scheme in [Scheme::So2dr, Scheme::ResReu] {
+            let k_on = if scheme == Scheme::ResReu { 1 } else { 3 };
+            for devices in [1usize, 2, 3] {
+                let mut backend = HostBackend::new(NaiveEngine);
+                let (out, stats) = run_pipeline_on(
+                    scheme,
+                    &initial,
+                    &segments(),
+                    3,
+                    devices,
+                    5,
+                    k_on,
+                    &mut backend,
+                    &ResidencyConfig::off(),
+                )
+                .unwrap();
+                assert!(
+                    out.grid.bit_eq(&expect),
+                    "{} on {devices} devices",
+                    scheme.name()
+                );
+                for (kind, seg_stats) in &stats.per_segment {
+                    assert!(
+                        seg_stats.htod_bytes >= grid_bytes,
+                        "{} {}: segment must re-stage through the host",
+                        scheme.name(),
+                        kind.name()
+                    );
+                }
+                if devices > 1 {
+                    assert!(stats.per_segment.iter().any(|(_, s)| s.p2p_copies > 0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resident_pipeline_saves_within_segments_and_stays_bit_exact() {
+        // Multi-epoch segments keep chunks resident within the segment:
+        // HtoD per segment drops to one grid sweep while the boundary
+        // still stages through the host.
+        let initial = Array2::synthetic(120, 80, 23);
+        let segs = vec![
+            Segment::new(StencilKind::Box { radius: 1 }, 8),
+            Segment::new(StencilKind::Box { radius: 2 }, 6),
+        ];
+        let expect = reference_pipeline(&initial, &segs);
+        let grid_bytes = (120 * 80 * 4) as u64;
+        for devices in [1usize, 2] {
+            let mut backend = HostBackend::new(NaiveEngine);
+            let (out, stats) = run_pipeline_on(
+                Scheme::So2dr,
+                &initial,
+                &segs,
+                4,
+                devices,
+                4,
+                2,
+                &mut backend,
+                &ResidencyConfig::force(3),
+            )
+            .unwrap();
+            assert!(out.grid.bit_eq(&expect), "{devices} devices");
+            for (kind, seg_stats) in &stats.per_segment {
+                assert_eq!(
+                    seg_stats.htod_bytes, grid_bytes,
+                    "{}: resident segment transfers the grid exactly once",
+                    kind.name()
+                );
+                assert!(seg_stats.resident_hits > 0, "{}", kind.name());
+            }
+        }
     }
 }

@@ -3,9 +3,13 @@
 //!
 //! Regions are keyed by `(row span, time_step)`; SO2DR exchanges one raw
 //! (`time_step = 0`) region pair per boundary per epoch, ResReu exchanges
-//! one intermediate-result pair per boundary per time step. The buffer
-//! tracks byte high-water marks so capacity accounting and the paper's
-//! memory constraint can be checked by tests.
+//! one intermediate-result pair per boundary per time step. Under the
+//! resident execution model the same buffer carries the inter-epoch
+//! halo refresh: chunks publish (`RsWrite`) the boundary rows their
+//! neighbors need *before* any kernel of the new epoch runs, and the
+//! neighbors `Fetch` them — replacing the staged model's host round
+//! trip. The buffer tracks byte high-water marks so capacity accounting
+//! and the paper's memory constraint can be checked by tests.
 
 use crate::core::{Array2, RowSpan};
 use std::collections::HashMap;
@@ -48,12 +52,14 @@ impl RegionShareBuffer {
     /// scheduling bug the executor turns into an error.
     pub fn read(&mut self, span: RowSpan, time_step: usize) -> Option<&Array2> {
         let key = Key { lo: span.lo, hi: span.hi, time_step };
-        let found = self.regions.get(&key);
-        if let Some(a) = found {
-            self.reads += 1;
-            self.bytes_read += a.size_bytes();
+        match self.regions.get(&key) {
+            Some(a) => {
+                self.reads += 1;
+                self.bytes_read += a.size_bytes();
+                Some(a)
+            }
+            None => None,
         }
-        self.regions.get(&Key { lo: span.lo, hi: span.hi, time_step })
     }
 
     /// Non-accounting lookup, used by inter-device (D2D) halo exchange:
@@ -83,6 +89,11 @@ impl RegionShareBuffer {
     pub fn clear(&mut self) {
         self.regions.clear();
         self.cur_bytes = 0;
+    }
+
+    /// Number of regions currently stored (publishes not yet cleared).
+    pub fn n_regions(&self) -> usize {
+        self.regions.len()
     }
 
     pub fn current_bytes(&self) -> u64 {
@@ -150,7 +161,9 @@ mod tests {
         rs.write(RowSpan::new(0, 4), 0, Array2::zeros(4, 8));
         assert_eq!(rs.current_bytes(), 2 * 4 * 8 * 4);
         assert_eq!(rs.peak_bytes(), 2 * 4 * 8 * 4);
+        assert_eq!(rs.n_regions(), 2, "overwrite must not duplicate the key");
         rs.clear();
+        assert_eq!(rs.n_regions(), 0);
         assert_eq!(rs.current_bytes(), 0);
         assert_eq!(rs.peak_bytes(), 2 * 4 * 8 * 4);
         assert_eq!(rs.n_writes(), 3);

@@ -5,7 +5,9 @@
 //! Absolute seconds are *model outputs*; the claims under test are the
 //! shapes: who wins, by what factor, and where the crossovers fall.
 
-use crate::chunking::plan::{plan_run_devices, Scheme};
+use crate::chunking::plan::{
+    plan_run_devices, plan_run_resident, ResidencyConfig, ResidencySummary, Scheme,
+};
 use crate::chunking::{Decomposition, DeviceAssignment};
 use crate::coordinator::{HostBackend, PlanExecutor};
 use crate::gpu::cost::{CostModel, MachineSpec};
@@ -82,6 +84,36 @@ pub fn simulate_config_devices(
     n: usize,
 ) -> SimReport {
     simulate_grid_devices(machine, scheme, kind, sz, sz, d, devices, s_tb, k_on, n, N_STRM)
+}
+
+/// Like [`simulate_grid_devices`], but planned by the residency planner:
+/// returns the DES report plus what the planner decided (pinned chunks,
+/// modeled demand, planned spills and host-transfer savings).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_resident_grid_devices(
+    machine: &MachineSpec,
+    scheme: Scheme,
+    kind: StencilKind,
+    rows: usize,
+    cols: usize,
+    d: usize,
+    devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    n: usize,
+    n_strm: usize,
+    resident: &ResidencyConfig,
+) -> (SimReport, ResidencySummary) {
+    let dc = Decomposition::new(rows, cols, d, kind.radius());
+    let devs = if scheme == Scheme::InCore {
+        DeviceAssignment::single(dc.n_chunks())
+    } else {
+        DeviceAssignment::contiguous(dc.n_chunks(), devices)
+    };
+    let (plans, summary) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, resident);
+    let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+    let ops = flatten_run(&plans, &dc, kind, n_strm, buf_rows);
+    (simulate(&ops, &CostModel::new(machine.clone()), n_strm), summary)
 }
 
 /// Simulate one single-device configuration at any grid size.
@@ -318,21 +350,136 @@ pub fn scaling(machine: &MachineSpec) -> String {
     out
 }
 
-/// All figures in order.
-pub fn all(machine: &MachineSpec) -> Vec<(&'static str, String)> {
+/// One staged-vs-resident comparison point at the §V-B configuration,
+/// shared by the `resident` figure and `bench_pr2` so the two render the
+/// same sweep instead of each re-simulating it.
+struct ResidentComparison {
+    kind: StencilKind,
+    devices: usize,
+    staged: SimReport,
+    resident: SimReport,
+    summary: ResidencySummary,
+}
+
+fn staged_vs_resident_sweep(machine: &MachineSpec) -> Vec<ResidentComparison> {
+    let mut out = Vec::new();
+    for kind in StencilKind::paper_set() {
+        let (d, s_tb) = chosen_config(kind);
+        for devices in [1usize, 4] {
+            let staged = simulate_config_devices(
+                machine, Scheme::So2dr, kind, SZ_OOC, d, devices, s_tb, K_ON, N_STEPS,
+            );
+            let (res, summary) = simulate_resident_grid_devices(
+                machine,
+                Scheme::So2dr,
+                kind,
+                SZ_OOC,
+                SZ_OOC,
+                d,
+                devices,
+                s_tb,
+                K_ON,
+                N_STEPS,
+                N_STRM,
+                &ResidencyConfig::auto(machine.c_dmem, N_STRM),
+            );
+            out.push(ResidentComparison { kind, devices, staged, resident: res, summary });
+        }
+    }
+    out
+}
+
+/// Staged vs resident execution at paper scale (beyond the paper: the
+/// ROADMAP's device-resident multi-epoch pipelining). At one device the
+/// 11 GB grid cannot stay resident (the out-of-core premise), so the
+/// planner spills and host traffic matches the staged model; across four
+/// devices the grid fits, chunks pin, and per-run HtoD drops by the
+/// epoch count.
+pub fn resident(machine: &MachineSpec) -> String {
+    let mut out = String::from(
+        "== Resident vs staged epochs: host traffic and makespan ==\n\
+         (residency planner capped at C_dmem per device; S_TB per §V-B)\n",
+    );
+    let mut t = Table::new(vec![
+        "benchmark", "devices", "staged HtoD", "resident HtoD", "saved", "staged (s)",
+        "resident (s)", "spills",
+    ]);
+    for c in staged_vs_resident_sweep(machine) {
+        let staged_htod = c.staged.bytes_of(OpKind::HtoD);
+        let res_htod = c.resident.bytes_of(OpKind::HtoD);
+        let saved = 1.0 - res_htod as f64 / staged_htod.max(1) as f64;
+        t.row(vec![
+            c.kind.name(),
+            c.devices.to_string(),
+            crate::util::fmt_bytes(staged_htod),
+            crate::util::fmt_bytes(res_htod),
+            format!("{:.0}%", 100.0 * saved),
+            format!("{:.3}", c.staged.makespan),
+            format!("{:.3}", c.resident.makespan),
+            c.summary.planned_spills.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+/// Machine-readable perf snapshot for the repo's trajectory: the five
+/// paper benchmarks under staged vs resident execution at 1 and 4
+/// simulated devices. Written to `BENCH_pr2.json` (and returned for the
+/// figures report).
+pub fn bench_pr2(machine: &MachineSpec) -> String {
+    let mut entries: Vec<String> = Vec::new();
+    for c in staged_vs_resident_sweep(machine) {
+        for (mode, rep, spills) in
+            [("staged", &c.staged, 0usize), ("resident", &c.resident, c.summary.planned_spills)]
+        {
+            entries.push(format!(
+                "    {{\"benchmark\": \"{}\", \"mode\": \"{}\", \"devices\": {}, \
+                 \"makespan_s\": {:.6}, \"htod_bytes\": {}, \"dtoh_bytes\": {}, \
+                 \"p2p_bytes\": {}, \"peak_dmem_bytes\": {}, \"spills\": {}}}",
+                c.kind.name(),
+                mode,
+                c.devices,
+                rep.makespan,
+                rep.bytes_of(OpKind::HtoD),
+                rep.bytes_of(OpKind::DtoH),
+                rep.bytes_of(OpKind::P2p),
+                rep.peak_dmem,
+                spills,
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"pr\": 2,\n  \"what\": \"staged vs resident epochs, simulated\",\n  \
+         \"config\": {{\"sz\": {SZ_OOC}, \"n\": {N_STEPS}, \"k_on\": {K_ON}, \
+         \"n_strm\": {N_STRM}, \"scheme\": \"so2dr\"}},\n  \"results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    let _ = std::fs::write("BENCH_pr2.json", &json);
+    json
+}
+
+/// The figure registry, in report order: names paired with their
+/// builders. Kept lazy so the CLI's `--fig` filter selects *before*
+/// computing — figures run paper-scale DES sweeps (and `bench_pr2`
+/// writes a file), which unrequested figures must not pay or perform.
+pub fn registry() -> Vec<(&'static str, fn(&MachineSpec) -> String)> {
     vec![
-        ("tables", tables(machine)),
-        ("fig3b", fig3b(machine)),
-        ("fig5", fig5(machine)),
-        ("fig6", fig6(machine)),
-        ("fig7", fig7(machine)),
-        ("fig8", fig8(machine)),
-        ("fig9", fig9(machine)),
-        ("fig10", fig10(machine)),
-        ("ablation_kon", ablation_kon(machine)),
-        ("scaling", scaling(machine)),
+        ("tables", tables),
+        ("fig3b", fig3b),
+        ("fig5", fig5),
+        ("fig6", fig6),
+        ("fig7", fig7),
+        ("fig8", fig8),
+        ("fig9", fig9),
+        ("fig10", fig10),
+        ("ablation_kon", ablation_kon),
+        ("scaling", scaling),
+        ("resident", resident),
+        ("bench_pr2", bench_pr2),
     ]
 }
+
 
 #[cfg(test)]
 mod tests {
@@ -358,6 +505,30 @@ mod tests {
                 "missing row for {dev} devices:\n{txt}"
             );
         }
+    }
+
+    #[test]
+    fn resident_figure_shows_four_device_savings() {
+        let m = MachineSpec::rtx3080();
+        let txt = resident(&m);
+        assert!(txt.contains("Resident vs staged"));
+        assert!(txt.contains("box2d1r") && txt.contains("gradient2d"));
+        // At 4 devices the grid fits, every chunk pins, and the 4-epoch
+        // benchmarks save exactly 3 of 4 HtoD sweeps.
+        assert!(txt.contains("75%"), "{txt}");
+    }
+
+    #[test]
+    fn bench_pr2_json_emitted_and_well_formed() {
+        let m = MachineSpec::rtx3080();
+        let json = bench_pr2(&m);
+        assert!(json.contains("\"pr\": 2"), "{json}");
+        assert!(json.contains("\"mode\": \"staged\"") && json.contains("\"mode\": \"resident\""));
+        assert!(json.contains("box2d1r") && json.contains("gradient2d"));
+        assert!(json.contains("htod_bytes") && json.contains("makespan_s"));
+        // The file lands next to the manifest for the perf trajectory.
+        let written = std::fs::read_to_string("BENCH_pr2.json").unwrap();
+        assert_eq!(written, json);
     }
 
     #[test]

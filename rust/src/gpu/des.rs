@@ -16,7 +16,12 @@
 //! the head of its stream, (b) its dependency edges are satisfied, and
 //! (c) its resource instance has a free slot. Memory occupancy is
 //! tracked per device from the ops' alloc/free deltas (`mem_device`) and
-//! checked against the per-device capacity.
+//! checked against the per-device capacity. The simulator itself is
+//! residency-agnostic: resident plans arrive from the flattener as
+//! cross-epoch FIFO streams whose arena alloc/free deltas span epochs
+//! (pinned chunks allocate once and free at their final writeback), so
+//! `peak_dmem` naturally reflects pinned arenas plus transient spill
+//! traffic, and `capacity_exceeded` stays a faithful go/no-go signal.
 
 use super::cost::CostModel;
 use super::flatten::{OpKind, SimOp};
@@ -34,6 +39,10 @@ pub struct SimReport {
     /// device of the link.
     pub busy_dev: HashMap<(usize, OpKind), f64>,
     pub op_counts: HashMap<OpKind, usize>,
+    /// Total payload bytes simulated per category (kernels contribute 0).
+    /// This is what lets figures and tests compare staged vs resident
+    /// host-transfer totals without re-walking the op graph.
+    pub bytes: HashMap<OpKind, u64>,
     /// Peak memory occupancy of the most-loaded device (bytes).
     pub peak_dmem: u64,
     /// Peak memory occupancy per device (bytes).
@@ -55,6 +64,11 @@ impl SimReport {
 
     pub fn count_of(&self, k: OpKind) -> usize {
         self.op_counts.get(&k).copied().unwrap_or(0)
+    }
+
+    /// Total simulated payload bytes of one category.
+    pub fn bytes_of(&self, k: OpKind) -> u64 {
+        self.bytes.get(&k).copied().unwrap_or(0)
     }
 
     /// Number of devices that appeared in the replayed op graph.
@@ -111,8 +125,8 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
         .max()
         .unwrap_or(1);
     let mut now = 0.0f64;
-    let mut report = SimReport::default();
-    report.peak_dmem_per_device = vec![0u64; n_devices];
+    let mut report =
+        SimReport { peak_dmem_per_device: vec![0u64; n_devices], ..Default::default() };
     let mut dmem: Vec<i64> = vec![0; n_devices];
     let mut running: Vec<usize> = Vec::new();
     let mut done_count = 0usize;
@@ -164,6 +178,7 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
                 *report.busy.entry(op.kind).or_insert(0.0) += dur;
                 *report.busy_dev.entry((op.device, op.kind)).or_insert(0.0) += dur;
                 *report.op_counts.entry(op.kind).or_insert(0) += 1;
+                *report.bytes.entry(op.kind).or_insert(0) += op.bytes;
                 state[cand] = OpState::Running { end: now + dur };
                 running.push(cand);
                 any = true;

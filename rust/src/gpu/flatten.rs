@@ -19,8 +19,19 @@
 //! (`mem_device`): a link transfer allocates the region copy on the
 //! destination device, and the producing chunk's retirement releases the
 //! source copy.
+//!
+//! Resident plans (`EpochPlan::resident`) replace the per-epoch
+//! alloc/free cycle with cross-epoch lifetimes: a chunk's arena is
+//! allocated when its chunk-epoch starts cold (`HtoD` first — epoch 0 or
+//! a re-fetch after an `Evict`) and released only at its `Evict` or its
+//! final-epoch `DtoH`; kept chunk-epochs carry the arena straight
+//! through. `Resident` markers emit no op (zero traffic); `Fetch` ops
+//! are on-device sharing reads whose provider is the neighbor's
+//! epoch-start publish (or the `P2p` transfer landing it), so streams
+//! chain FIFO across epoch boundaries instead of through host `DtoH →
+//! HtoD` edges.
 
-use crate::chunking::plan::{ChunkOp, EpochPlan, Scheme};
+use crate::chunking::plan::{phase_a_len, ChunkOp, EpochPlan, Scheme};
 use crate::chunking::Decomposition;
 use crate::core::RowSpan;
 use crate::stencil::StencilKind;
@@ -89,6 +100,12 @@ fn link_resource(src_dev: usize, dst_dev: usize) -> usize {
 /// Flatten a multi-epoch run. `n_strm` streams; chunk buffers are double
 /// buffered on device (`2 * buf_bytes`); the in-core scheme allocates the
 /// whole grid once and is exempt from per-epoch transfers.
+///
+/// Staged epochs are emitted chunk-major. Resident epochs are emitted in
+/// their two execution phases — every chunk's arrival + publishes, then
+/// every chunk's fetches/kernels/retirement — so a `Fetch` always finds
+/// its provider already registered even when the publisher is a *later*
+/// chunk (inter-epoch halo data flows both up and down the chunk order).
 pub fn flatten_run(
     plans: &[EpochPlan],
     dc: &Decomposition,
@@ -107,10 +124,44 @@ pub fn flatten_run(
 
     for (e, plan) in plans.iter().enumerate() {
         let mut this_dtoh: Vec<(RowSpan, usize)> = Vec::new();
-        for cp in &plan.chunks {
+        // Emission order: (chunk index in plan, op range).
+        let mut sequences: Vec<(usize, std::ops::Range<usize>)> = Vec::new();
+        if plan.resident {
+            for (ci, cp) in plan.chunks.iter().enumerate() {
+                sequences.push((ci, 0..phase_a_len(&cp.ops)));
+            }
+            for (ci, cp) in plan.chunks.iter().enumerate() {
+                sequences.push((ci, phase_a_len(&cp.ops)..cp.ops.len()));
+            }
+        } else {
+            for (ci, cp) in plan.chunks.iter().enumerate() {
+                sequences.push((ci, 0..cp.ops.len()));
+            }
+        }
+        // Last emitted op of each chunk this epoch (the intra-chunk FIFO
+        // chain survives the phase split).
+        let mut prev_op_of_chunk: HashMap<usize, usize> = HashMap::new();
+        for (ci, range) in sequences {
+            let cp = &plan.chunks[ci];
             let stream = cp.device * n_strm.max(1) + cp.chunk % n_strm.max(1);
-            let mut first_of_chunk = true;
             let n_ops = cp.ops.len();
+            // Arena lifetime: staged plans allocate at the chunk-epoch's
+            // first op and free at its last; resident plans allocate only
+            // when the chunk-epoch starts cold (HtoD arrival) and free
+            // only when it lets the arena go (Evict, or the final
+            // writeback DtoH) — kept chunk-epochs pin it across epochs.
+            let arena_alloc_here = if plan.resident {
+                matches!(cp.ops.first(), Some(ChunkOp::HtoD { .. }))
+            } else {
+                plan.scheme != Scheme::InCore
+            };
+            let arena_free_here = if plan.resident {
+                cp.ops
+                    .iter()
+                    .any(|op| matches!(op, ChunkOp::Evict { .. } | ChunkOp::DtoH { .. }))
+            } else {
+                plan.scheme != Scheme::InCore
+            };
             // RS regions are freed by their consumer: every byte this
             // chunk reads from the sharing buffer is released when the
             // chunk retires (matches the alloc of the region's provider —
@@ -119,7 +170,7 @@ pub fn flatten_run(
                 .ops
                 .iter()
                 .map(|op| match op {
-                    ChunkOp::RsRead(r) => r.span.len() as u64 * row_bytes,
+                    ChunkOp::RsRead(r) | ChunkOp::Fetch(r) => r.span.len() as u64 * row_bytes,
                     _ => 0,
                 })
                 .sum();
@@ -134,12 +185,20 @@ pub fn flatten_run(
                     _ => 0,
                 })
                 .sum();
-            for (oi, op) in cp.ops.iter().enumerate() {
+            for oi in range {
+                let op = &cp.ops[oi];
                 let id = ops.len();
                 let last_of_chunk = oi + 1 == n_ops;
+                let first_of_chunk = !prev_op_of_chunk.contains_key(&cp.chunk);
                 let (kind_s, bytes, areas, mut deps) = match op {
+                    // A kept chunk's arrival is free: no transfer, no op.
+                    // Its stream simply continues from the previous
+                    // epoch's last kernel.
+                    ChunkOp::Resident { .. } => continue,
                     ChunkOp::HtoD { span } => {
-                        // Wait for overlapping previous-epoch DtoH.
+                        // Wait for overlapping previous-epoch DtoH (for a
+                        // resident re-fetch that is the chunk's own Evict,
+                        // whose span matches exactly).
                         let deps: Vec<usize> = prev_dtoh
                             .iter()
                             .filter(|(s, _)| s.overlaps(span))
@@ -148,6 +207,12 @@ pub fn flatten_run(
                         (OpKind::HtoD, span.len() as u64 * row_bytes, vec![], deps)
                     }
                     ChunkOp::DtoH { span } => {
+                        this_dtoh.push((*span, id));
+                        (OpKind::DtoH, span.len() as u64 * row_bytes, vec![], vec![])
+                    }
+                    ChunkOp::Evict { span } => {
+                        // A capacity spill is a real DtoH on the PCIe
+                        // channel; it also releases the arena (below).
                         this_dtoh.push((*span, id));
                         (OpKind::DtoH, span.len() as u64 * row_bytes, vec![], vec![])
                     }
@@ -162,7 +227,7 @@ pub fn flatten_run(
                         rs_writers.insert((e, span.lo, span.hi, *time_step), id);
                         (OpKind::P2p, span.len() as u64 * row_bytes, vec![], vec![])
                     }
-                    ChunkOp::RsRead(r) => {
+                    ChunkOp::RsRead(r) | ChunkOp::Fetch(r) => {
                         let deps = rs_writers
                             .get(&(e, r.span.lo, r.span.hi, r.time_step))
                             .map(|&w| vec![w])
@@ -181,9 +246,9 @@ pub fn flatten_run(
                 // Stream FIFO: depend on the previous op of this chunk
                 // (cross-chunk same-stream ordering is enforced by the
                 // DES stream queues; the explicit edge keeps intra-chunk
-                // order under any scheduler).
-                if !first_of_chunk {
-                    deps.push(id - 1);
+                // order under any scheduler, across the phase split).
+                if let Some(&p) = prev_op_of_chunk.get(&cp.chunk) {
+                    deps.push(p);
                 }
                 let (resource, mem_device) = match op {
                     ChunkOp::D2D { src_dev, dst_dev, .. } => {
@@ -191,20 +256,21 @@ pub fn flatten_run(
                     }
                     _ => (cp.device, cp.device),
                 };
-                let alloc_delta = if first_of_chunk && plan.scheme != Scheme::InCore {
-                    buf_bytes as i64
-                } else {
-                    match op {
-                        ChunkOp::RsWrite(r) => (r.span.len() as u64 * row_bytes) as i64,
-                        ChunkOp::D2D { span, .. } => (span.len() as u64 * row_bytes) as i64,
-                        _ => 0,
+                let mut alloc_delta = match op {
+                    ChunkOp::RsWrite(r) => (r.span.len() as u64 * row_bytes) as i64,
+                    ChunkOp::D2D { span, .. } => (span.len() as u64 * row_bytes) as i64,
+                    _ => 0,
+                };
+                if first_of_chunk && arena_alloc_here {
+                    alloc_delta += buf_bytes as i64;
+                }
+                let mut free_delta = 0i64;
+                if last_of_chunk && plan.scheme != Scheme::InCore {
+                    free_delta -= (rs_read_bytes + p2p_out_bytes) as i64;
+                    if arena_free_here {
+                        free_delta -= buf_bytes as i64;
                     }
-                };
-                let free_delta = if last_of_chunk && plan.scheme != Scheme::InCore {
-                    -(buf_bytes as i64) - rs_read_bytes as i64 - p2p_out_bytes as i64
-                } else {
-                    0
-                };
+                }
                 ops.push(SimOp {
                     id,
                     kind: kind_s,
@@ -221,7 +287,7 @@ pub fn flatten_run(
                     alloc_delta,
                     free_delta,
                 });
-                first_of_chunk = false;
+                prev_op_of_chunk.insert(cp.chunk, id);
             }
         }
         prev_dtoh = this_dtoh;
@@ -385,5 +451,133 @@ mod device_tests {
         links.dedup();
         // Three device boundaries, all flowing low -> high device.
         assert_eq!(links.len(), 3);
+    }
+}
+
+#[cfg(test)]
+mod resident_tests {
+    use super::*;
+    use crate::chunking::plan::{plan_run_resident, ResidencyConfig};
+    use crate::chunking::DeviceAssignment;
+    use crate::coordinator::{HostBackend, PlanExecutor};
+    use crate::stencil::NaiveEngine;
+
+    fn setup(
+        scheme: Scheme,
+        n_dev: usize,
+        cfg: &ResidencyConfig,
+    ) -> (Vec<crate::chunking::EpochPlan>, Vec<SimOp>) {
+        let dc = Decomposition::new(240, 64, 4, 1);
+        let devs = DeviceAssignment::contiguous(4, n_dev);
+        let k_on = if scheme == Scheme::ResReu { 1 } else { 2 };
+        let (plans, _) = plan_run_resident(scheme, &dc, &devs, 18, 6, k_on, cfg);
+        let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+        let ops = flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows);
+        (plans, ops)
+    }
+
+    #[test]
+    fn resident_force_has_first_touch_htod_and_final_dtoh_only() {
+        for scheme in [Scheme::So2dr, Scheme::ResReu] {
+            for n_dev in [1usize, 2] {
+                let (plans, ops) = setup(scheme, n_dev, &ResidencyConfig::force(3));
+                assert_eq!(plans.len(), 3);
+                let htod: Vec<&SimOp> =
+                    ops.iter().filter(|o| o.kind == OpKind::HtoD).collect();
+                let dtoh: Vec<&SimOp> =
+                    ops.iter().filter(|o| o.kind == OpKind::DtoH).collect();
+                assert_eq!(htod.len(), 4, "{}: one first touch per chunk", scheme.name());
+                assert!(htod.iter().all(|o| o.epoch == 0));
+                assert_eq!(dtoh.len(), 4, "{}: one final writeback per chunk", scheme.name());
+                assert!(dtoh.iter().all(|o| o.epoch == 2));
+                // HtoD byte total is the grid exactly once.
+                let htod_bytes: u64 = htod.iter().map(|o| o.bytes).sum();
+                assert_eq!(htod_bytes, (240 * 64 * 4) as u64, "{}", scheme.name());
+            }
+        }
+    }
+
+    #[test]
+    fn resident_alloc_balances_free() {
+        for scheme in [Scheme::So2dr, Scheme::ResReu] {
+            for cfg in [ResidencyConfig::force(3), ResidencyConfig::auto(1, 3)] {
+                for n_dev in [1usize, 2, 4] {
+                    let (_, ops) = setup(scheme, n_dev, &cfg);
+                    let alloc: i64 = ops.iter().map(|o| o.alloc_delta).sum();
+                    let free: i64 = ops.iter().map(|o| o.free_delta).sum();
+                    assert_eq!(
+                        alloc + free,
+                        0,
+                        "{} {:?} on {n_dev} devices",
+                        scheme.name(),
+                        cfg.mode
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resident_deps_are_acyclic_and_fetches_have_providers() {
+        for scheme in [Scheme::So2dr, Scheme::ResReu] {
+            let (_, ops) = setup(scheme, 2, &ResidencyConfig::force(3));
+            for op in &ops {
+                for &d in &op.deps {
+                    assert!(d < op.id, "dep {d} not before {}", op.id);
+                }
+            }
+            // In middle epochs, every sharing read (D2D op with deps)
+            // must chain to a same-epoch provider write/link transfer.
+            let reads: Vec<&SimOp> = ops
+                .iter()
+                .filter(|o| o.kind == OpKind::D2D && o.epoch == 1 && !o.deps.is_empty())
+                .collect();
+            assert!(!reads.is_empty(), "{}", scheme.name());
+            for r in reads {
+                assert!(
+                    r.deps.iter().any(|&d| {
+                        ops[d].epoch == 1
+                            && (ops[d].kind == OpKind::D2D || ops[d].kind == OpKind::P2p)
+                    }),
+                    "{}: read {} has no provider",
+                    scheme.name(),
+                    r.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tight_cap_emits_spill_dtoh_every_epoch() {
+        let (plans, ops) = setup(Scheme::So2dr, 2, &ResidencyConfig::auto(1, 3));
+        let n_epochs = plans.len();
+        for e in 0..n_epochs {
+            let dtoh = ops.iter().filter(|o| o.kind == OpKind::DtoH && o.epoch == e).count();
+            assert_eq!(dtoh, 4, "epoch {e}: every chunk spills or writes back");
+            if e > 0 {
+                let htod =
+                    ops.iter().filter(|o| o.kind == OpKind::HtoD && o.epoch == e).count();
+                assert_eq!(htod, 4, "epoch {e}: every chunk re-fetches");
+            }
+        }
+        // Re-fetches wait for the spill that freshened the host copy.
+        for h in ops.iter().filter(|o| o.kind == OpKind::HtoD && o.epoch > 0) {
+            assert!(
+                h.deps
+                    .iter()
+                    .any(|&d| ops[d].kind == OpKind::DtoH && ops[d].epoch + 1 == h.epoch),
+                "re-fetch {} without spill dep",
+                h.id
+            );
+        }
+    }
+
+    #[test]
+    fn p2p_flows_in_middle_epochs_when_sharded() {
+        let (_, ops) = setup(Scheme::So2dr, 2, &ResidencyConfig::force(3));
+        let mid_p2p =
+            ops.iter().filter(|o| o.kind == OpKind::P2p && o.epoch == 1).count();
+        // One boundary, publishes flow both directions across it.
+        assert_eq!(mid_p2p, 2);
     }
 }

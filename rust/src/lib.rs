@@ -19,7 +19,35 @@
 //!     models per-device PCIe/copy/kernel resources plus an inter-device
 //!     link channel (`MachineSpec::bw_link`, `--d2d-gbps`). Known
 //!     simplifications: homogeneous devices, one directed link per
-//!     adjacent pair, host-mediated epoch boundaries.
+//!     adjacent pair.
+//!   - **Resident execution model** (`--resident {off,auto,force}`):
+//!     epochs no longer synchronize through the host. The residency
+//!     planner ([`chunking::plan::plan_run_resident`]) emits one
+//!     cross-epoch plan: a chunk is transferred HtoD once on first
+//!     touch (`ChunkOp::HtoD`), stays in its per-chunk device arena
+//!     across epochs while per-device capacity allows
+//!     (`ChunkOp::Resident`), refreshes its epoch-start skirt from its
+//!     neighbors' arenas through the region-sharing buffer — publish
+//!     (`RsWrite`) before any kernel, `ChunkOp::Fetch` after; `D2D`
+//!     bridges shard boundaries — and spills only capacity victims
+//!     (`ChunkOp::Evict`), which re-fetch their settled span next epoch.
+//!     Invariants the suites enforce end to end:
+//!     1. *settled spans partition the grid* at every epoch boundary, so
+//!        spill + re-fetch round-trips are exact and the final writeback
+//!        reconstructs the host grid;
+//!     2. *two-phase epochs* — every chunk's arrival + publishes execute
+//!        before any chunk's fetches/kernels (inter-epoch halo data
+//!        flows both up and down the chunk order);
+//!     3. *bit-exactness vs `reference_run`* at every scheme, device
+//!        count and capacity (ample or spilling) — randomized
+//!        differential suite;
+//!     4. *host traffic only shrinks*: resident HtoD bytes ≤ staged on
+//!        every configuration, and equal to one grid sweep when all
+//!        chunks pin (HtoD drops by the epoch count);
+//!     5. *capacity honesty*: when the planner accepts
+//!        (`ResidencySummary::fits`), the DES never trips
+//!        `capacity_exceeded` (conservative demand model in
+//!        [`chunking::DeviceAssignment::resident_memory_demand`]).
 //! - **L2 (`python/compile/model.py`):** the fixed-shape chunk program,
 //!   AOT-lowered to HLO text.
 //! - **L1 (`python/compile/kernels/`):** the Pallas multi-step stencil

@@ -11,9 +11,11 @@
 //! Run `so2dr <cmd> --help` for the options of each command.
 
 use anyhow::{bail, Context, Result};
-use so2dr::chunking::Scheme;
+use so2dr::chunking::{ResidencyConfig, ResidentMode, Scheme};
 use so2dr::config::RunConfig;
-use so2dr::coordinator::{reference_run, run_scheme, run_scheme_on, HostBackend, KernelBackend};
+use so2dr::coordinator::{
+    reference_run, run_scheme, run_scheme_resident, HostBackend, KernelBackend,
+};
 use so2dr::gpu::MachineSpec;
 use so2dr::metrics::emit;
 use so2dr::runtime::PjrtBackend;
@@ -115,6 +117,10 @@ fn config_of(args: &Args) -> Result<RunConfig> {
     if let Some(v) = args.get("d2d-gbps") {
         cfg.d2d_gbps = Some(v.parse().context("--d2d-gbps must be a number")?);
     }
+    if let Some(v) = args.get("resident") {
+        cfg.resident = ResidentMode::parse(v)
+            .with_context(|| format!("bad --resident {v:?} (off|auto|force)"))?;
+    }
     if cfg.scheme == Scheme::ResReu {
         cfg.k_on = 1;
     }
@@ -162,7 +168,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!(
             "so2dr run [--config f.toml] [--scheme so2dr|resreu|incore] [--kind box2d1r|...|gradient2d]\n\
              \x20         [--sz N | --rows N --cols N] [--d N] [--s-tb N] [--k-on N] [--n N]\n\
-             \x20         [--devices N] [--d2d-gbps X]\n\
+             \x20         [--devices N] [--d2d-gbps X] [--resident off|auto|force]\n\
              \x20         [--backend host-naive|host-opt|pjrt] [--no-verify x]"
         );
         return Ok(());
@@ -172,7 +178,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     // before the expensive real-numerics run, not after it.
     // (machine_of already applies the --d2d-gbps flag; a config-file
     // override is applied on top without clobbering --machine defaults.)
-    let pricing_machine = if cfg.devices > 1 {
+    // Resident mode always needs the machine: its capacity model caps
+    // the per-device pinned arenas.
+    let pricing_machine = if cfg.devices > 1 || cfg.resident != ResidentMode::Off {
         let mut machine = machine_of(args)?;
         if let Some(gbps) = cfg.d2d_gbps {
             machine = machine.with_d2d_gbps(gbps);
@@ -182,10 +190,18 @@ fn cmd_run(args: &Args) -> Result<()> {
         None
     };
     println!("run: {}", cfg.summary());
+    let resident_cfg = match cfg.resident {
+        ResidentMode::Off => ResidencyConfig::off(),
+        ResidentMode::Force => ResidencyConfig::force(cfg.n_strm),
+        ResidentMode::Auto => ResidencyConfig::auto(
+            pricing_machine.as_ref().expect("resident auto resolves a machine").c_dmem,
+            cfg.n_strm,
+        ),
+    };
     let initial = Array2::synthetic(cfg.rows, cfg.cols, cfg.seed);
     let mut backend = make_backend(&cfg)?;
     let t0 = std::time::Instant::now();
-    let out = run_scheme_on(
+    let out = run_scheme_resident(
         cfg.scheme,
         &initial,
         cfg.kind,
@@ -195,6 +211,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.s_tb,
         cfg.k_on,
         backend.as_mut(),
+        &resident_cfg,
     )?;
     let wall = t0.elapsed().as_secs_f64();
     let s = &out.stats;
@@ -211,14 +228,36 @@ fn cmd_run(args: &Args) -> Result<()> {
         fmt_bytes(s.p2p_bytes),
         s.p2p_copies,
     );
+    if let Some(summary) = &out.residency {
+        println!("{}", so2dr::metrics::residency_line(summary, s));
+    }
     if let Some(machine) = pricing_machine {
         // Price the executed schedule on the machine model so --devices /
-        // --d2d-gbps show their performance effect next to the real run.
+        // --d2d-gbps / --resident show their performance effect next to
+        // the real run.
         let link_gbps = machine.bw_link / 1e9;
-        let rep = so2dr::figures::simulate_grid_devices(
-            &machine, cfg.scheme, cfg.kind, cfg.rows, cfg.cols, cfg.d, cfg.devices, cfg.s_tb,
-            cfg.k_on, cfg.n, cfg.n_strm,
-        );
+        let rep = if cfg.resident == ResidentMode::Off {
+            so2dr::figures::simulate_grid_devices(
+                &machine, cfg.scheme, cfg.kind, cfg.rows, cfg.cols, cfg.d, cfg.devices,
+                cfg.s_tb, cfg.k_on, cfg.n, cfg.n_strm,
+            )
+        } else {
+            so2dr::figures::simulate_resident_grid_devices(
+                &machine,
+                cfg.scheme,
+                cfg.kind,
+                cfg.rows,
+                cfg.cols,
+                cfg.d,
+                cfg.devices,
+                cfg.s_tb,
+                cfg.k_on,
+                cfg.n,
+                cfg.n_strm,
+                &resident_cfg,
+            )
+            .0
+        };
         println!(
             "modeled makespan on {} simulated GPUs (link {link_gbps:.1} GB/s): {}  (P2P busy {})",
             cfg.devices,
@@ -320,7 +359,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     if args.help() {
         println!(
             "so2dr simulate [--scheme S] [--kind K] [--sz N] [--d N] [--devices N] [--d2d-gbps X]\n\
-             \x20              [--s-tb N] [--k-on N] [--n N] [--machine M]"
+             \x20              [--s-tb N] [--k-on N] [--n N] [--machine M] [--resident off|auto|force]"
         );
         return Ok(());
     }
@@ -334,6 +373,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let s_tb = args.usize_or("s-tb", 160)?;
     let k_on = if scheme == Scheme::ResReu { 1 } else { args.usize_or("k-on", 4)? };
     let n = args.usize_or("n", so2dr::figures::N_STEPS)?;
+    let resident = ResidentMode::parse(args.get("resident").unwrap_or("off"))
+        .context("bad --resident (off|auto|force)")?;
     if scheme != Scheme::InCore {
         // Pre-flight the §IV-C constraints per shard (the DES reports the
         // observed peak below; this is the check the autotuner applies).
@@ -349,13 +390,53 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             other => println!("note: §IV-C heuristic flags this configuration: {other:?}"),
         }
     }
-    let rep = so2dr::figures::simulate_config_devices(
-        &machine, scheme, kind, sz, d, devices, s_tb, k_on, n,
-    );
+    let rep = match resident {
+        ResidentMode::Off => so2dr::figures::simulate_config_devices(
+            &machine, scheme, kind, sz, d, devices, s_tb, k_on, n,
+        ),
+        mode => {
+            let resident_cfg = match mode {
+                ResidentMode::Force => ResidencyConfig::force(so2dr::figures::N_STRM),
+                _ => ResidencyConfig::auto(machine.c_dmem, so2dr::figures::N_STRM),
+            };
+            let staged = so2dr::figures::simulate_config_devices(
+                &machine, scheme, kind, sz, d, devices, s_tb, k_on, n,
+            );
+            let (rep, summary) = so2dr::figures::simulate_resident_grid_devices(
+                &machine,
+                scheme,
+                kind,
+                sz,
+                sz,
+                d,
+                devices,
+                s_tb,
+                k_on,
+                n,
+                so2dr::figures::N_STRM,
+                &resident_cfg,
+            );
+            let kept = summary.kept.iter().filter(|&&k| k).count();
+            println!(
+                "residency: kept {kept}/{} chunks  HtoD {} (staged {})  spills {}  fits: {}",
+                summary.kept.len(),
+                fmt_bytes(rep.bytes_of(so2dr::gpu::OpKind::HtoD)),
+                fmt_bytes(staged.bytes_of(so2dr::gpu::OpKind::HtoD)),
+                summary.planned_spills,
+                summary.fits,
+            );
+            rep
+        }
+    };
     print!(
         "{}",
         so2dr::metrics::breakdown_table(&[(
-            format!("{} {} d={d} devs={devices} S_TB={s_tb}", scheme.name(), kind.name()),
+            format!(
+                "{} {} d={d} devs={devices} S_TB={s_tb} resident={}",
+                scheme.name(),
+                kind.name(),
+                resident.name()
+            ),
             &rep
         )])
     );
@@ -372,19 +453,24 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
 fn cmd_figures(args: &Args) -> Result<()> {
     if args.help() {
-        println!("so2dr figures [--fig tables|3b|5|6|7|8|9|10|ablation_kon|scaling] [--machine M]");
+        println!(
+            "so2dr figures [--fig tables|3b|5|6|7|8|9|10|ablation_kon|scaling|resident|bench_pr2]\n\
+             \x20             [--machine M]"
+        );
         return Ok(());
     }
     let machine = machine_of(args)?;
     let want = args.get("fig");
-    for (name, body) in so2dr::figures::all(&machine) {
+    // Filter before building: unrequested figures must not pay their
+    // paper-scale simulation sweeps (or side effects like BENCH_pr2.json).
+    for (name, build) in so2dr::figures::registry() {
         let short = name.trim_start_matches("fig");
         if let Some(w) = want {
             if w != name && w != short {
                 continue;
             }
         }
-        println!("{}", emit(name, &body));
+        println!("{}", emit(name, &build(&machine)));
     }
     Ok(())
 }
@@ -420,4 +506,8 @@ USAGE: so2dr <info|run|validate|autotune|simulate|figures> [options]\n\n\
   simulate   price one configuration on the modeled RTX 3080(s)\n\
   figures    regenerate the paper's tables and figures (results/)\n\n\
 Multi-device: `--devices N` shards chunks over N simulated GPUs with\n\
-peer-to-peer halo exchange; `--d2d-gbps X` sets the link bandwidth.\n";
+peer-to-peer halo exchange; `--d2d-gbps X` sets the link bandwidth.\n\
+Residency: `--resident auto|force` keeps chunks device-resident across\n\
+epochs (HtoD once on first touch, inter-epoch halos refreshed device-to-\n\
+device, capacity victims spilled) instead of staging every epoch through\n\
+the host.\n";

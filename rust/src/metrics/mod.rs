@@ -1,8 +1,11 @@
-//! Reporting: breakdown tables and figure output files.
+//! Reporting: breakdown tables, per-run residency savings, and figure
+//! output files.
 
+use crate::chunking::ResidencySummary;
+use crate::coordinator::ExecStats;
 use crate::gpu::des::SimReport;
 use crate::gpu::flatten::OpKind;
-use crate::util::Table;
+use crate::util::{fmt_bytes, Table};
 
 /// Categories in paper order (Fig. 7/10 legends), plus the multi-device
 /// peer-to-peer link channel.
@@ -51,6 +54,35 @@ pub fn device_breakdown_table(rep: &SimReport) -> Table {
     t
 }
 
+/// One-line residency report for `so2dr run`: what the planner pinned,
+/// the host-transfer bytes the run saved vs the staged model, and the
+/// spill traffic it paid for capacity.
+pub fn residency_line(summary: &ResidencySummary, stats: &ExecStats) -> String {
+    if !summary.enabled {
+        return "residency: off (staged epochs)".into();
+    }
+    let kept = summary.kept.iter().filter(|&&k| k).count();
+    let saved = summary.saved_htod_bytes();
+    let pct = if summary.staged_htod_bytes > 0 {
+        100.0 * saved as f64 / summary.staged_htod_bytes as f64
+    } else {
+        0.0
+    };
+    format!(
+        "residency: kept {kept}/{} chunks{}  HtoD {} -> {} (saved {}, {pct:.0}%)  \
+         fetches {} ({})  spills {} ({})",
+        summary.kept.len(),
+        if summary.fits { "" } else { " [demand exceeds capacity: spilling]" },
+        fmt_bytes(summary.staged_htod_bytes),
+        fmt_bytes(stats.htod_bytes),
+        fmt_bytes(saved),
+        stats.fetch_reads,
+        fmt_bytes(stats.fetch_bytes),
+        stats.spills,
+        fmt_bytes(stats.spill_bytes),
+    )
+}
+
 /// Geometric mean of a slice (used for paper-style average speedups the
 /// paper itself reports as arithmetic means; we print both).
 pub fn geomean(xs: &[f64]) -> f64 {
@@ -92,6 +124,41 @@ mod tests {
         let rep = SimReport { makespan: 1.5, ..Default::default() };
         let t = breakdown_table(&[("x".into(), &rep)]);
         assert!(t.render().contains("1.500"));
+    }
+
+    #[test]
+    fn residency_line_reports_savings_and_spills() {
+        let summary = ResidencySummary {
+            enabled: true,
+            kept: vec![true, false],
+            fits: false,
+            demand_per_device: vec![4096],
+            planned_spills: 2,
+            staged_htod_bytes: 2048,
+            planned_htod_bytes: 1024,
+        };
+        let stats = ExecStats {
+            htod_bytes: 1024,
+            fetch_reads: 3,
+            fetch_bytes: 256,
+            spills: 2,
+            spill_bytes: 512,
+            ..Default::default()
+        };
+        let line = residency_line(&summary, &stats);
+        assert!(line.contains("kept 1/2"), "{line}");
+        assert!(line.contains("spilling"), "{line}");
+        assert!(line.contains("50%"), "{line}");
+        let off = ResidencySummary {
+            enabled: false,
+            kept: vec![],
+            fits: true,
+            demand_per_device: vec![],
+            planned_spills: 0,
+            staged_htod_bytes: 0,
+            planned_htod_bytes: 0,
+        };
+        assert!(residency_line(&off, &ExecStats::default()).contains("off"));
     }
 
     #[test]

@@ -54,6 +54,36 @@ fn run_rejects_infeasible_config() {
 }
 
 #[test]
+fn run_resident_force_verifies_and_reports_savings() {
+    let (ok, text) = run(&[
+        "run", "--scheme", "so2dr", "--kind", "box2d1r", "--sz", "128", "--d", "4", "--s-tb",
+        "4", "--k-on", "2", "--n", "12", "--resident", "force", "--backend", "host-naive",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("residency: kept 4/4"), "{text}");
+    assert!(text.contains("saved"), "{text}");
+    assert!(text.contains("OK"), "{text}");
+}
+
+#[test]
+fn run_rejects_bad_resident_mode() {
+    let (ok, text) = run(&["run", "--resident", "sometimes"]);
+    assert!(!ok);
+    assert!(text.contains("resident"), "{text}");
+}
+
+#[test]
+fn simulate_resident_reports_pinning() {
+    let (ok, text) = run(&[
+        "simulate", "--scheme", "so2dr", "--kind", "box2d1r", "--d", "4", "--devices", "4",
+        "--s-tb", "160", "--n", "640", "--resident", "auto",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("residency: kept 4/4"), "{text}");
+    assert!(text.contains("resident=auto"), "{text}");
+}
+
+#[test]
 fn simulate_reports_breakdown() {
     let (ok, text) = run(&[
         "simulate", "--scheme", "resreu", "--kind", "box2d1r", "--d", "8", "--s-tb", "40",

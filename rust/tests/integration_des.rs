@@ -5,13 +5,14 @@
 //! more simulated GPUs never slows it down, and hits the strong-scaling
 //! target at paper scale).
 
-use so2dr::chunking::plan::{plan_run_devices, Scheme};
-use so2dr::chunking::{Decomposition, DeviceAssignment};
+use so2dr::chunking::plan::{plan_run_devices, plan_run_resident, Scheme};
+use so2dr::chunking::{Decomposition, DeviceAssignment, ResidencyConfig, ResidencySummary};
 use so2dr::coordinator::{HostBackend, PlanExecutor};
 use so2dr::gpu::cost::{CostModel, MachineSpec};
 use so2dr::gpu::des::{simulate, SimReport};
 use so2dr::gpu::flatten::{flatten_run, OpKind, SimOp};
 use so2dr::stencil::{NaiveEngine, StencilKind};
+use so2dr::util::XorShift64;
 use std::collections::HashMap;
 
 const N_STRM: usize = 3;
@@ -175,6 +176,157 @@ fn p2p_ops_exist_only_when_sharded() {
     let p2p = sharded.iter().filter(|o| o.kind == OpKind::P2p).count();
     // One exchange per device boundary (3) per epoch (2).
     assert_eq!(p2p, 3 * 2);
+}
+
+fn flatten_resident_paper(
+    scheme: Scheme,
+    d: usize,
+    devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    n: usize,
+    cfg: &ResidencyConfig,
+) -> (Vec<SimOp>, ResidencySummary) {
+    let dc = Decomposition::new(38400, 38400, d, 1);
+    let devs = DeviceAssignment::contiguous(d, devices);
+    let (plans, summary) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, cfg);
+    let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+    (
+        flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, N_STRM, buf_rows),
+        summary,
+    )
+}
+
+/// Seeded sweep: resident-mode simulated HtoD bytes never exceed the
+/// staged plan's, under ample and tight capacities alike (a pinned chunk
+/// transfers once; a spilled one transfers exactly what staging would).
+#[test]
+fn resident_htod_bytes_never_exceed_staged() {
+    let mut rng = XorShift64::new(0xDE5);
+    let machine = MachineSpec::rtx3080();
+    for case in 0..10 {
+        let d = [4usize, 8][rng.range_usize(0, 2)];
+        let devices = [1usize, 2, 4][rng.range_usize(0, 3)];
+        let s_tb = [20usize, 40][rng.range_usize(0, 2)];
+        let epochs = 2 + rng.range_usize(0, 3);
+        let n = s_tb * epochs;
+        let (scheme, k_on) =
+            if rng.range_usize(0, 2) == 0 { (Scheme::So2dr, 4) } else { (Scheme::ResReu, 1) };
+        let staged = sim(
+            &flatten_paper(scheme, d, devices, s_tb, k_on, n),
+            machine.clone(),
+        );
+        for cfg in [
+            ResidencyConfig::force(N_STRM),
+            ResidencyConfig::auto(machine.c_dmem, N_STRM),
+            ResidencyConfig::auto(1, N_STRM),
+        ] {
+            let (ops, _) = flatten_resident_paper(scheme, d, devices, s_tb, k_on, n, &cfg);
+            let rep = sim(&ops, machine.clone());
+            assert!(
+                rep.bytes_of(OpKind::HtoD) <= staged.bytes_of(OpKind::HtoD),
+                "case {case}: {} d={d} devs={devices} {:?}: resident {} > staged {}",
+                scheme.name(),
+                cfg.mode,
+                rep.bytes_of(OpKind::HtoD),
+                staged.bytes_of(OpKind::HtoD)
+            );
+        }
+    }
+}
+
+/// With ample memory the resident schedule can only shed work (host
+/// transfers disappear, sharing volume is unchanged): the simulated
+/// makespan must not regress.
+#[test]
+fn resident_makespan_not_worse_when_memory_is_ample() {
+    let machine = MachineSpec::rtx3080();
+    for (scheme, k_on) in [(Scheme::So2dr, 4), (Scheme::ResReu, 1)] {
+        for devices in [1usize, 4] {
+            let staged = sim(
+                &flatten_paper(scheme, 8, devices, 40, k_on, 160),
+                machine.clone(),
+            )
+            .makespan;
+            let (ops, summary) = flatten_resident_paper(
+                scheme,
+                8,
+                devices,
+                40,
+                k_on,
+                160,
+                &ResidencyConfig::force(N_STRM),
+            );
+            assert!(summary.kept.iter().all(|&k| k));
+            let res = sim(&ops, machine.clone()).makespan;
+            assert!(
+                res <= staged * 1.01,
+                "{} on {devices} devices: resident {res} vs staged {staged}",
+                scheme.name()
+            );
+        }
+    }
+}
+
+/// The planner's capacity promise: when `summary.fits` says the modeled
+/// demand fits the per-device capacity, the DES must never observe a
+/// peak above it (`capacity_exceeded` stays false).
+#[test]
+fn capacity_never_exceeded_when_planner_accepts() {
+    let machine = MachineSpec::rtx3080();
+    for (d, devices, s_tb, n) in
+        [(8usize, 1usize, 40usize, 120usize), (8, 4, 40, 160), (4, 4, 160, 640), (4, 2, 80, 320)]
+    {
+        let cfg = ResidencyConfig::auto(machine.c_dmem, N_STRM);
+        let (ops, summary) =
+            flatten_resident_paper(Scheme::So2dr, d, devices, s_tb, 4, n, &cfg);
+        let rep = sim(&ops, machine.clone());
+        if summary.fits {
+            assert!(
+                !rep.capacity_exceeded,
+                "planner accepted d={d} devs={devices} S_TB={s_tb} but DES peak {} > {}",
+                rep.peak_dmem,
+                machine.c_dmem
+            );
+            assert!(rep.peak_dmem <= *summary.demand_per_device.iter().max().unwrap());
+        } else {
+            // No promise made: the planner must also not have pinned
+            // anything on this homogeneous configuration (all-or-nothing
+            // per device), and the run still completes.
+            assert!(summary.kept.iter().all(|&k| !k), "d={d} devs={devices}");
+            assert!(rep.makespan > 0.0);
+        }
+    }
+}
+
+/// Acceptance criterion: at paper scale with the grid sharded across 4
+/// devices, the residency planner pins every chunk and the simulated
+/// HtoD byte total drops to 1/epochs (≤ 1/4 of staged at 4 epochs).
+#[test]
+fn four_device_resident_cuts_htod_by_the_epoch_count() {
+    let machine = MachineSpec::rtx3080();
+    let staged = sim(
+        &flatten_paper(Scheme::So2dr, 4, 4, 160, 4, 640),
+        machine.clone(),
+    );
+    let (ops, summary) = flatten_resident_paper(
+        Scheme::So2dr,
+        4,
+        4,
+        160,
+        4,
+        640,
+        &ResidencyConfig::auto(machine.c_dmem, N_STRM),
+    );
+    assert!(summary.fits, "one 1.5 GB chunk arena per 10 GiB device must fit");
+    assert!(summary.kept.iter().all(|&k| k), "all four chunks pinned");
+    let rep = sim(&ops, machine.clone());
+    // 640 steps at S_TB=160 -> 4 epochs: staged moves the grid 4x HtoD.
+    assert_eq!(staged.bytes_of(OpKind::HtoD), 4 * rep.bytes_of(OpKind::HtoD));
+    assert!(rep.bytes_of(OpKind::HtoD) * 4 <= staged.bytes_of(OpKind::HtoD));
+    assert!(!rep.capacity_exceeded);
+    // And it pays off end to end (tolerance for scheduling noise).
+    assert!(rep.makespan <= staged.makespan * 1.005);
 }
 
 #[test]

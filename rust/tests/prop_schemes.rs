@@ -9,8 +9,8 @@
 //! property; a failure reports the (shrunk) case and the seed, so it
 //! replays exactly.
 
-use so2dr::chunking::Scheme;
-use so2dr::coordinator::{reference_run, run_scheme_on, HostBackend};
+use so2dr::chunking::{ResidencyConfig, Scheme};
+use so2dr::coordinator::{reference_run, run_scheme_on, run_scheme_resident, HostBackend};
 use so2dr::stencil::{NaiveEngine, StencilKind};
 use so2dr::util::testkit::{forall, shrink_usize_toward};
 use so2dr::util::XorShift64;
@@ -170,6 +170,90 @@ fn prop_multi_device_runs_exchange_halos() {
             Ok(())
         },
     );
+}
+
+/// Check one case under the resident execution model with the given
+/// capacity config; `tight` selects the assertions (spills observed vs
+/// everything pinned).
+fn check_resident_case(c: &Case, cfg: &ResidencyConfig, tight: bool) -> Result<(), String> {
+    if !c.feasible() {
+        return Ok(());
+    }
+    let kind = c.kind();
+    let seed = (c.rows * 29 + c.cols * 13 + c.n) as u64;
+    let initial = Array2::synthetic(c.rows, c.cols, seed);
+    let reference = reference_run(&initial, kind, c.n, &NaiveEngine);
+    let grid_bytes = (c.rows * c.cols * 4) as u64;
+    let multi_epoch = c.n > c.s_tb;
+    for (scheme, k_on, devices) in [
+        (Scheme::So2dr, c.k_on, c.devices),
+        (Scheme::ResReu, 1, c.devices),
+        (Scheme::InCore, c.k_on, 1),
+    ] {
+        let mut backend = HostBackend::new(NaiveEngine);
+        let out = run_scheme_resident(
+            scheme, &initial, kind, c.n, c.d, devices, c.s_tb, k_on, &mut backend, cfg,
+        )
+        .map_err(|e| format!("{} resident failed: {e:#}", scheme.name()))?;
+        if !out.grid.bit_eq(&reference) {
+            return Err(format!(
+                "{} resident ({}) on {devices} device(s) diverged: max |diff| = {}",
+                scheme.name(),
+                if tight { "tight cap" } else { "ample" },
+                out.grid.max_abs_diff(&reference)
+            ));
+        }
+        if scheme == Scheme::InCore {
+            continue;
+        }
+        if tight {
+            if multi_epoch && out.stats.spills == 0 {
+                return Err(format!(
+                    "{} under a tight cap must evict (epochs {})",
+                    scheme.name(),
+                    out.stats.epochs
+                ));
+            }
+        } else {
+            if out.stats.spills != 0 {
+                return Err(format!("{} spilled under an ample cap", scheme.name()));
+            }
+            // Everything pinned: the host sees each chunk exactly once
+            // each way, regardless of the epoch count.
+            if out.stats.htod_bytes != grid_bytes || out.stats.dtoh_bytes != grid_bytes {
+                return Err(format!(
+                    "{} pinned run moved HtoD {} / DtoH {} (grid is {})",
+                    scheme.name(),
+                    out.stats.htod_bytes,
+                    out.stats.dtoh_bytes,
+                    grid_bytes
+                ));
+            }
+            if multi_epoch && out.stats.resident_hits == 0 {
+                return Err(format!("{} pinned run observed no resident arrivals", scheme.name()));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Resident-model differential property: every scheme, at every device
+/// count, under both an ample capacity (everything pinned) and a tight
+/// one (everything spills each epoch), must still reproduce the in-core
+/// reference bit-exactly — and the tight cap must actually exercise the
+/// spill path (evictions observed) on multi-epoch out-of-core runs.
+#[test]
+fn prop_resident_ample_cap_bit_exact_and_pins() {
+    forall(0x4E51D, 120, gen_case, shrink_case, |c| {
+        check_resident_case(c, &ResidencyConfig::force(3), false)
+    });
+}
+
+#[test]
+fn prop_resident_tight_cap_bit_exact_and_spills() {
+    forall(0x4E51D + 1, 120, gen_case, shrink_case, |c| {
+        check_resident_case(c, &ResidencyConfig::auto(1, 3), true)
+    });
 }
 
 /// The acceptance-criterion configuration, pinned: `--devices 4` at d=8
