@@ -327,6 +327,15 @@ impl Decomposition {
         2 * (buf_rows * self.cols * 4) as u64
     }
 
+    /// Uncompressed payload bytes of a transfer covering `span` rows.
+    /// The codec policy's size thresholds and the planner's byte
+    /// accounting go through here so they cannot drift; the executor's
+    /// counters and the flattener keep a hoisted `cols * 4` of the same
+    /// formula on their hot paths.
+    pub fn span_bytes(&self, span: RowSpan) -> u64 {
+        (span.len() * self.cols * 4) as u64
+    }
+
     // ---------------------------------------------------------------
     // Paper model quantities (Section III / IV-C).
     // ---------------------------------------------------------------

@@ -33,6 +33,6 @@ pub mod plan;
 
 pub use decomp::{Decomposition, DeviceAssignment};
 pub use plan::{
-    ChunkEpochPlan, EpochPlan, KernelInvocation, RegionOp, ResidencyConfig, ResidencySummary,
-    ResidentMode, Scheme,
+    apply_codec_policy, ChunkEpochPlan, EpochPlan, KernelInvocation, RegionOp, ResidencyConfig,
+    ResidencySummary, ResidentMode, Scheme,
 };

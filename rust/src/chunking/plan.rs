@@ -9,6 +9,7 @@
 
 use super::decomp::{Decomposition, DeviceAssignment};
 use crate::core::geom::RowSpan;
+use crate::transfer::codec::{CodecKind, CompressMode};
 
 /// Out-of-core sharing scheme.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -73,9 +74,15 @@ impl KernelInvocation {
 }
 
 /// One operation in a chunk's epoch sequence.
+///
+/// Transfer ops (`HtoD`/`DtoH`/`Evict`/`D2D`) carry a [`CodecKind`]:
+/// the codec the payload crosses its channel under. Epoch builders
+/// always emit [`CodecKind::Identity`]; [`apply_codec_policy`] retags
+/// plans according to the surface-level [`CompressMode`], so both
+/// interpreters execute/price exactly the same codec decisions.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ChunkOp {
-    HtoD { span: RowSpan },
+    HtoD { span: RowSpan, codec: CodecKind },
     RsRead(RegionOp),
     RsWrite(RegionOp),
     /// Resident-model marker: the chunk's settled `span` is already on
@@ -93,7 +100,7 @@ pub enum ChunkOp {
     /// host and release the chunk's arena. The next epoch re-fetches it
     /// with an `HtoD` of the same span (the host copy is fresh by
     /// construction — settled spans partition the grid).
-    Evict { span: RowSpan },
+    Evict { span: RowSpan, codec: CodecKind },
     /// Peer-to-peer halo exchange: move the `(span, time_step)` region
     /// just published by this chunk's `RsWrite` from `src_dev`'s sharing
     /// buffer to `dst_dev`'s, across the inter-device link. Emitted only
@@ -104,9 +111,9 @@ pub enum ChunkOp {
     /// maps it to `OpKind::P2p`, priced by the link channel. It is
     /// unrelated to `OpKind::D2D`, which is the *on-device* sharing copy
     /// produced by `RsWrite`/`RsRead` (the paper's "O/D" category).
-    D2D { src_dev: usize, dst_dev: usize, span: RowSpan, time_step: usize },
+    D2D { src_dev: usize, dst_dev: usize, span: RowSpan, time_step: usize, codec: CodecKind },
     Kernel(KernelInvocation),
-    DtoH { span: RowSpan },
+    DtoH { span: RowSpan, codec: CodecKind },
 }
 
 /// All ops of one chunk within one epoch, in execution order.
@@ -193,7 +200,7 @@ pub fn so2dr_epoch(
     let mut chunks = Vec::with_capacity(dc.n_chunks());
     for i in 0..dc.n_chunks() {
         let mut ops = Vec::new();
-        ops.push(ChunkOp::HtoD { span: dc.so2dr_htod(i, steps) });
+        ops.push(ChunkOp::HtoD { span: dc.so2dr_htod(i, steps), codec: CodecKind::Identity });
         let rs_read = dc.so2dr_rs_read(i, steps);
         if !rs_read.is_empty() {
             ops.push(ChunkOp::RsRead(RegionOp { span: rs_read, time_step: 0 }));
@@ -207,6 +214,7 @@ pub fn so2dr_epoch(
                     dst_dev: devs.device_of(i + 1),
                     span: rs_write,
                     time_step: 0,
+                    codec: CodecKind::Identity,
                 });
             }
         }
@@ -219,7 +227,7 @@ pub fn so2dr_epoch(
             ops.push(ChunkOp::Kernel(KernelInvocation { first_step: s, windows }));
             s += fused;
         }
-        ops.push(ChunkOp::DtoH { span: dc.so2dr_dtoh(i) });
+        ops.push(ChunkOp::DtoH { span: dc.so2dr_dtoh(i), codec: CodecKind::Identity });
         chunks.push(ChunkEpochPlan { chunk: i, device: devs.device_of(i), ops });
     }
     EpochPlan {
@@ -247,7 +255,7 @@ pub fn resreu_epoch(
     let mut chunks = Vec::with_capacity(dc.n_chunks());
     for i in 0..dc.n_chunks() {
         let mut ops = Vec::new();
-        ops.push(ChunkOp::HtoD { span: dc.resreu_htod(i) });
+        ops.push(ChunkOp::HtoD { span: dc.resreu_htod(i), codec: CodecKind::Identity });
         for s in 1..=steps {
             // Write our trailing rows (time s-1) for the upper neighbor,
             // then read our lower halo (time s-1) from the lower neighbor.
@@ -260,6 +268,7 @@ pub fn resreu_epoch(
                         dst_dev: devs.device_of(i + 1),
                         span: w,
                         time_step: s - 1,
+                        codec: CodecKind::Identity,
                     });
                 }
             }
@@ -272,7 +281,7 @@ pub fn resreu_epoch(
                 windows: vec![dc.resreu_window(i, steps, s)],
             }));
         }
-        ops.push(ChunkOp::DtoH { span: dc.resreu_dtoh(i, steps) });
+        ops.push(ChunkOp::DtoH { span: dc.resreu_dtoh(i, steps), codec: CodecKind::Identity });
         chunks.push(ChunkEpochPlan { chunk: i, device: devs.device_of(i), ops });
     }
     EpochPlan {
@@ -472,15 +481,47 @@ impl ResidencySummary {
     }
 }
 
-fn htod_bytes_of(plans: &[EpochPlan], cols: usize) -> u64 {
+fn htod_bytes_of(plans: &[EpochPlan], dc: &Decomposition) -> u64 {
     plans
         .iter()
         .flat_map(|p| p.iter_ops())
         .map(|(_, _, op)| match op {
-            ChunkOp::HtoD { span } => (span.len() * cols * 4) as u64,
+            ChunkOp::HtoD { span, .. } => dc.span_bytes(*span),
             _ => 0,
         })
         .sum()
+}
+
+/// Retag every transfer op of `plans` with the codec the surface-level
+/// policy selects (epoch builders always emit [`CodecKind::Identity`]).
+/// Host transfers (`HtoD`/`DtoH`/`Evict`) follow
+/// [`CompressMode::host_codec`]; inter-device hops (`D2D`) follow
+/// [`CompressMode::link_codec`], which never selects a lossy codec —
+/// halo regions are re-published every epoch, so quantization error
+/// would compound instead of staying one-round-trip-bounded. Applied as
+/// a post-pass so the real-numerics executor and the DES interpret the
+/// same codec decisions.
+pub fn apply_codec_policy(plans: &mut [EpochPlan], dc: &Decomposition, mode: CompressMode) {
+    if mode == CompressMode::Off {
+        return; // builders already emitted identity everywhere
+    }
+    for plan in plans.iter_mut() {
+        for cp in plan.chunks.iter_mut() {
+            for op in cp.ops.iter_mut() {
+                match op {
+                    ChunkOp::HtoD { span, codec }
+                    | ChunkOp::DtoH { span, codec }
+                    | ChunkOp::Evict { span, codec } => {
+                        *codec = mode.host_codec(dc.span_bytes(*span));
+                    }
+                    ChunkOp::D2D { span, codec, .. } => {
+                        *codec = mode.link_codec(dc.span_bytes(*span));
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
 }
 
 /// Build one resident-model epoch: chunks arrive with their previous
@@ -529,7 +570,7 @@ fn resident_epoch(
         if kept[i] {
             ops.push(ChunkOp::Resident { span: settled_prev });
         } else {
-            ops.push(ChunkOp::HtoD { span: settled_prev });
+            ops.push(ChunkOp::HtoD { span: settled_prev, codec: CodecKind::Identity });
         }
         // This chunk settles the lower neighbor's upper fetch span and
         // the upper neighbor's lower fetch span.
@@ -543,6 +584,7 @@ fn resident_epoch(
                         dst_dev: devs.device_of(i - 1),
                         span,
                         time_step: 0,
+                        codec: CodecKind::Identity,
                     });
                 }
             }
@@ -557,6 +599,7 @@ fn resident_epoch(
                         dst_dev: devs.device_of(i + 1),
                         span,
                         time_step: 0,
+                        codec: CodecKind::Identity,
                     });
                 }
             }
@@ -590,6 +633,7 @@ fn resident_epoch(
                                 dst_dev: devs.device_of(i + 1),
                                 span: w,
                                 time_step: s - 1,
+                                codec: CodecKind::Identity,
                             });
                         }
                     }
@@ -607,9 +651,9 @@ fn resident_epoch(
         }
         let settled_now = dc.settled(scheme, i, steps);
         if final_epoch {
-            ops.push(ChunkOp::DtoH { span: settled_now });
+            ops.push(ChunkOp::DtoH { span: settled_now, codec: CodecKind::Identity });
         } else if !kept[i] {
-            ops.push(ChunkOp::Evict { span: settled_now });
+            ops.push(ChunkOp::Evict { span: settled_now, codec: CodecKind::Identity });
         }
         chunks.push(ChunkEpochPlan { chunk: i, device: devs.device_of(i), ops });
     }
@@ -639,7 +683,7 @@ pub fn plan_run_resident(
 ) -> (Vec<EpochPlan>, ResidencySummary) {
     assert!(n >= 1 && s_tb >= 1);
     let staged = plan_run_devices(scheme, dc, devs, n, s_tb, k_on);
-    let staged_htod = htod_bytes_of(&staged, dc.cols());
+    let staged_htod = htod_bytes_of(&staged, dc);
     if cfg.mode == ResidentMode::Off || scheme == Scheme::InCore || staged.len() < 2 {
         let summary = ResidencySummary::disabled(dc.n_chunks(), staged_htod);
         return (staged, summary);
@@ -677,13 +721,13 @@ pub fn plan_run_resident(
             let mut plan = p.clone();
             plan.resident = true;
             for cp in plan.chunks.iter_mut() {
-                let Some(ChunkOp::DtoH { span }) = cp.ops.last().cloned() else {
+                let Some(ChunkOp::DtoH { span, codec }) = cp.ops.last().cloned() else {
                     unreachable!("staged epochs end with DtoH");
                 };
                 if !final_epoch {
                     cp.ops.pop();
                     if !kept[cp.chunk] {
-                        cp.ops.push(ChunkOp::Evict { span });
+                        cp.ops.push(ChunkOp::Evict { span, codec });
                     }
                 }
             }
@@ -709,7 +753,7 @@ pub fn plan_run_resident(
         .flat_map(|p| p.iter_ops())
         .filter(|(_, _, op)| matches!(op, ChunkOp::Evict { .. }))
         .count();
-    let planned_htod = htod_bytes_of(&plans, dc.cols());
+    let planned_htod = htod_bytes_of(&plans, dc);
     let summary = ResidencySummary {
         enabled: true,
         kept,
@@ -832,6 +876,128 @@ mod tests {
 }
 
 #[cfg(test)]
+mod codec_tests {
+    use super::*;
+    use crate::transfer::codec::AUTO_MIN_BYTES;
+
+    fn count_codecs(plans: &[EpochPlan]) -> (usize, usize, usize) {
+        let (mut host, mut lossy, mut lossless) = (0usize, 0usize, 0usize);
+        for (_, _, op) in plans.iter().flat_map(|p| p.iter_ops()) {
+            let codec = match op {
+                ChunkOp::HtoD { codec, .. }
+                | ChunkOp::DtoH { codec, .. }
+                | ChunkOp::Evict { codec, .. } => {
+                    host += 1;
+                    *codec
+                }
+                ChunkOp::D2D { codec, .. } => *codec,
+                _ => continue,
+            };
+            match codec {
+                CodecKind::Bf16 => lossy += 1,
+                CodecKind::Lossless => lossless += 1,
+                CodecKind::Identity => {}
+            }
+        }
+        (host, lossy, lossless)
+    }
+
+    #[test]
+    fn builders_emit_identity_and_off_keeps_it() {
+        let dc = Decomposition::new(240, 64, 4, 2);
+        let devs = DeviceAssignment::contiguous(4, 2);
+        let mut plans = plan_run_devices(Scheme::So2dr, &dc, &devs, 16, 8, 4);
+        let (host, lossy, lossless) = count_codecs(&plans);
+        assert!(host > 0);
+        assert_eq!((lossy, lossless), (0, 0));
+        apply_codec_policy(&mut plans, &dc, CompressMode::Off);
+        assert_eq!(count_codecs(&plans), (host, 0, 0));
+    }
+
+    #[test]
+    fn bf16_policy_tags_host_ops_but_never_the_link() {
+        let dc = Decomposition::new(240, 64, 4, 2);
+        let devs = DeviceAssignment::contiguous(4, 4);
+        let mut plans = plan_run_devices(Scheme::ResReu, &dc, &devs, 10, 5, 1);
+        apply_codec_policy(&mut plans, &dc, CompressMode::Bf16);
+        for (_, _, op) in plans.iter().flat_map(|p| p.iter_ops()) {
+            match op {
+                ChunkOp::HtoD { codec, .. }
+                | ChunkOp::DtoH { codec, .. }
+                | ChunkOp::Evict { codec, .. } => assert_eq!(*codec, CodecKind::Bf16),
+                ChunkOp::D2D { codec, .. } => {
+                    assert_eq!(*codec, CodecKind::Identity, "halo hops never quantize")
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn lossless_policy_tags_every_transfer_including_resident_spills() {
+        let dc = Decomposition::new(240, 64, 4, 2);
+        let devs = DeviceAssignment::contiguous(4, 2);
+        let (mut plans, _) = plan_run_resident(
+            Scheme::So2dr,
+            &dc,
+            &devs,
+            20,
+            8,
+            4,
+            &ResidencyConfig::auto(1, 3), // tight cap: every epoch evicts
+        );
+        apply_codec_policy(&mut plans, &dc, CompressMode::Lossless);
+        let mut evicts = 0;
+        for (_, _, op) in plans.iter().flat_map(|p| p.iter_ops()) {
+            match op {
+                ChunkOp::HtoD { codec, .. } | ChunkOp::DtoH { codec, .. } => {
+                    assert_eq!(*codec, CodecKind::Lossless)
+                }
+                ChunkOp::Evict { codec, .. } => {
+                    evicts += 1;
+                    assert_eq!(*codec, CodecKind::Lossless);
+                }
+                ChunkOp::D2D { codec, .. } => assert_eq!(*codec, CodecKind::Lossless),
+                _ => {}
+            }
+        }
+        assert!(evicts > 0, "tight cap must plan spills");
+    }
+
+    #[test]
+    fn auto_policy_splits_on_payload_size() {
+        // cols sized so a full-chunk transfer crosses the auto threshold
+        // while the 2-row halo exchange stays under it.
+        let rows = 64usize;
+        let cols = (AUTO_MIN_BYTES as usize) / (4 * (rows / 4)) + 1;
+        let dc = Decomposition::new(rows, cols, 4, 1);
+        let devs = DeviceAssignment::contiguous(4, 4);
+        let mut plans = plan_run_devices(Scheme::ResReu, &dc, &devs, 4, 4, 1);
+        apply_codec_policy(&mut plans, &dc, CompressMode::Auto);
+        let (mut big_lossless, mut small_identity) = (false, false);
+        for (_, _, op) in plans.iter().flat_map(|p| p.iter_ops()) {
+            match op {
+                ChunkOp::HtoD { span, codec } | ChunkOp::DtoH { span, codec } => {
+                    if dc.span_bytes(*span) >= AUTO_MIN_BYTES {
+                        assert_eq!(*codec, CodecKind::Lossless);
+                        big_lossless = true;
+                    } else {
+                        assert_eq!(*codec, CodecKind::Identity);
+                    }
+                }
+                ChunkOp::D2D { span, codec, .. } => {
+                    assert!(dc.span_bytes(*span) < AUTO_MIN_BYTES);
+                    assert_eq!(*codec, CodecKind::Identity);
+                    small_identity = true;
+                }
+                _ => {}
+            }
+        }
+        assert!(big_lossless && small_identity, "both policy branches exercised");
+    }
+}
+
+#[cfg(test)]
 mod device_tests {
     use super::*;
     use std::collections::{HashMap, HashSet};
@@ -892,7 +1058,7 @@ mod device_tests {
                             .or_default()
                             .insert(cp.device);
                     }
-                    ChunkOp::D2D { src_dev, dst_dev, span, time_step } => {
+                    ChunkOp::D2D { src_dev, dst_dev, span, time_step, .. } => {
                         assert_eq!(*src_dev, cp.device, "D2D source must be the producer");
                         assert_ne!(src_dev, dst_dev, "D2D must cross devices");
                         let holders = available
@@ -992,7 +1158,7 @@ mod device_tests {
                 .collect();
             if cp.chunk == 1 {
                 assert_eq!(d2d.len(), 1, "one raw-halo exchange per epoch at the boundary");
-                if let ChunkOp::D2D { src_dev, dst_dev, span, time_step } = d2d[0] {
+                if let ChunkOp::D2D { src_dev, dst_dev, span, time_step, .. } = d2d[0] {
                     assert_eq!((*src_dev, *dst_dev, *time_step), (0, 1, 0));
                     assert_eq!(*span, dc().so2dr_rs_write(1, 8));
                 }

@@ -3,6 +3,7 @@
 use super::toml_mini::{parse, Section};
 use crate::chunking::{ResidentMode, Scheme};
 use crate::stencil::StencilKind;
+use crate::transfer::CompressMode;
 use anyhow::{bail, Context, Result};
 
 /// Everything needed to launch a run (Table I's variables plus scheme and
@@ -33,6 +34,11 @@ pub struct RunConfig {
     /// host, `auto` keeps chunks device-resident while the machine's
     /// per-device capacity allows, `force` pins everything.
     pub resident: ResidentMode,
+    /// Transfer-compression policy: `off` moves raw f32 payloads,
+    /// `bf16` halves host transfers (lossy, bounded), `lossless`
+    /// byte-plane-compresses them bit-exactly, `auto` picks lossless for
+    /// payloads large enough to amortize the codec pass.
+    pub compress: CompressMode,
     /// Synthetic-field seed.
     pub seed: u64,
     /// Kernel backend: "host-naive", "host-opt" or "pjrt".
@@ -69,6 +75,7 @@ impl Default for RunConfig {
             devices: 1,
             d2d_gbps: None,
             resident: ResidentMode::Off,
+            compress: CompressMode::Off,
             seed: 42,
             backend: "host-opt".into(),
         }
@@ -115,6 +122,12 @@ impl RunConfig {
                         let v = s.str_req("resident")?;
                         cfg.resident = ResidentMode::parse(&v)
                             .with_context(|| format!("bad resident mode {v:?} (off|auto|force)"))?;
+                    }
+                    "compress" => {
+                        let v = s.str_req("compress")?;
+                        cfg.compress = CompressMode::parse(&v).with_context(|| {
+                            format!("bad compress mode {v:?} (off|bf16|lossless|auto)")
+                        })?;
                     }
                     "seed" => cfg.seed = s.int_or("seed", 42) as u64,
                     "backend" => cfg.backend = s.str_or("backend", "host-opt"),
@@ -169,7 +182,8 @@ impl RunConfig {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "{} {} {}x{} d={} S_TB={} k_on={} n={} N_strm={} devices={} resident={} backend={}",
+            "{} {} {}x{} d={} S_TB={} k_on={} n={} N_strm={} devices={} resident={} \
+             compress={} backend={}",
             self.scheme.name(),
             self.kind.name(),
             self.rows,
@@ -181,6 +195,7 @@ impl RunConfig {
             self.n_strm,
             self.devices,
             self.resident.name(),
+            self.compress.name(),
             self.backend
         )
     }
@@ -245,5 +260,73 @@ mod tests {
     fn summary_mentions_key_params() {
         let s = RunConfig::default().summary();
         assert!(s.contains("so2dr") && s.contains("S_TB=8") && s.contains("devices=1"));
+        assert!(s.contains("compress=off"));
+    }
+
+    #[test]
+    fn parses_compress_mode() {
+        for (text, mode) in [
+            ("compress = \"off\"\n", CompressMode::Off),
+            ("compress = \"bf16\"\n", CompressMode::Bf16),
+            ("compress = \"lossless\"\n", CompressMode::Lossless),
+            ("compress = \"auto\"\n", CompressMode::Auto),
+        ] {
+            assert_eq!(RunConfig::from_toml(text).unwrap().compress, mode, "{text}");
+        }
+        assert_eq!(RunConfig::default().compress, CompressMode::Off);
+    }
+
+    /// Table-driven accept/reject coverage of the TOML surface: every
+    /// key with a representative good value, plus the malformed spellings
+    /// that must fail loudly (unknown keys, wrong types, bad enum
+    /// values, structural violations).
+    #[test]
+    fn key_acceptance_table() {
+        let cases: &[(&str, bool)] = &[
+            // Accepted spellings.
+            ("", true),
+            ("[run]\nd = 8\n", true),
+            ("scheme = \"so2dr\"\n", true),
+            ("kind = \"gradient2d\"\n", true),
+            ("benchmark = \"box2d2r\"\n", true),
+            ("rows = 512\ncols = 256\n", true),
+            ("sz = 256\n", true),
+            ("seed = 7\n", true),
+            ("n_strm = 2\n", true),
+            ("compress = \"auto\"\nresident = \"force\"\n", true),
+            // Unknown keys and sections.
+            ("zzz = 1\n", false),
+            ("compres = \"off\"\n", false),
+            ("[grid]\nrows = 512\n", false),
+            // Wrong value types.
+            ("rows = \"many\"\n", false),
+            ("rows = -3\n", false),
+            ("d2d_gbps = \"fast\"\n", false),
+            ("resident = 1\n", false),
+            ("compress = 1\n", false),
+            ("compress = true\n", false),
+            // Bad enum values.
+            ("scheme = \"warp\"\n", false),
+            ("kind = \"box2d9r\"\n", false),
+            ("resident = \"sometimes\"\n", false),
+            ("compress = \"zstd\"\n", false),
+            ("compress = \"Lossless\"\n", false),
+            ("backend = \"cuda\"\n", false),
+            // Structural violations caught by validate().
+            ("d = 0\n", false),
+            ("n = 0\n", false),
+            ("scheme = \"resreu\"\nk_on = 4\n", false),
+            ("d = 2\ndevices = 4\n", false),
+            ("d2d_gbps = -1.0\n", false),
+            ("sz = 64\nd = 4\ns_tb = 16\n", false),
+        ];
+        for (text, ok) in cases {
+            assert_eq!(
+                RunConfig::from_toml(text).is_ok(),
+                *ok,
+                "config {text:?} expected {}",
+                if *ok { "accept" } else { "reject" }
+            );
+        }
     }
 }

@@ -192,6 +192,61 @@ mod tests {
         assert!(parse("[a.b]\nk = 1\n").is_err());
     }
 
+    /// Table-driven accept/reject sweep over the parser's value grammar:
+    /// every scalar spelling the subset supports, and the malformed
+    /// spellings that must fail with a line-numbered error.
+    #[test]
+    fn value_grammar_table() {
+        let accept: &[(&str, Value)] = &[
+            ("k = 1", Value::Int(1)),
+            ("k = -7", Value::Int(-7)),
+            ("k = 38_400", Value::Int(38400)),
+            ("k = 1.5", Value::Float(1.5)),
+            ("k = -0.25", Value::Float(-0.25)),
+            ("k = 2e3", Value::Float(2000.0)),
+            ("k = true", Value::Bool(true)),
+            ("k = false", Value::Bool(false)),
+            ("k = \"\"", Value::Str(String::new())),
+            ("k = \"so2dr\"", Value::Str("so2dr".into())),
+            ("k = \"a#b\"", Value::Str("a#b".into())),
+            ("k = 3  # trailing comment", Value::Int(3)),
+        ];
+        for (text, expect) in accept {
+            let doc = parse(text).unwrap_or_else(|e| panic!("{text:?} rejected: {e}"));
+            assert_eq!(doc[""]["k"], *expect, "{text:?}");
+        }
+        let reject = [
+            "k =",
+            "k = 1.2.3",
+            "k = 1970-01-01",
+            "k = [1, 2]",
+            "k = {a = 1}",
+            "k = \"open",
+            "k = \"a\"b\"",
+            "k = tru",
+            "= 1",
+            "just words",
+            "[unclosed",
+            "[a.b]",
+            "[a[b]]",
+        ];
+        for text in reject {
+            let err = parse(text).expect_err(&format!("{text:?} accepted"));
+            assert!(err.to_string().contains("line 1"), "{text:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins_and_sections_accumulate() {
+        // The subset keeps last-write-wins semantics (documented by this
+        // test, relied on by nobody — a typo'd duplicate is still caught
+        // by RunConfig's unknown-key pass only if the spelling differs).
+        let doc = parse("k = 1\nk = 2\n[s]\na = 1\n[s]\nb = 2\n").unwrap();
+        assert_eq!(doc[""]["k"], Value::Int(2));
+        assert_eq!(doc["s"]["a"], Value::Int(1));
+        assert_eq!(doc["s"]["b"], Value::Int(2));
+    }
+
     #[test]
     fn section_helpers() {
         let doc = parse("[x]\na = 3\nb = \"hi\"\n").unwrap();

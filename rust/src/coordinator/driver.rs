@@ -2,13 +2,15 @@
 //! reference sweep.
 
 use crate::chunking::plan::{
-    plan_run_devices, plan_run_resident, ResidencyConfig, ResidencySummary, Scheme,
+    apply_codec_policy, plan_run_devices, plan_run_resident, ResidencyConfig, ResidencySummary,
+    Scheme,
 };
 use crate::chunking::{Decomposition, DeviceAssignment};
 use crate::coordinator::backend::KernelBackend;
 use crate::coordinator::exec::{ExecStats, PlanExecutor};
 use crate::core::{Array2, Rect};
 use crate::stencil::{apply_step, StencilEngine, StencilKind};
+use crate::transfer::CompressMode;
 use anyhow::Result;
 
 /// Result of a full out-of-core (or in-core) run.
@@ -74,14 +76,49 @@ pub fn run_scheme_on(
     Ok(RunOutcome { grid, stats, residency: None })
 }
 
-/// [`run_scheme_on`] under the resident execution model: the residency
-/// planner turns the epoch sequence into one cross-epoch plan (chunks
-/// transferred HtoD once on first touch, kept in per-device arenas while
-/// `resident.cap_per_device` allows, inter-epoch halos refreshed by
-/// neighbor-arena fetches, capacity victims spilled and re-fetched), and
-/// the executor interprets it with real numerics. Bit-exactness vs
-/// [`reference_run`] is preserved — the randomized differential suite
-/// enforces it across schemes, device counts and capacity settings.
+/// The full-surface entry point: resident execution model *and* transfer
+/// compression. The residency planner turns the epoch sequence into one
+/// cross-epoch plan (chunks transferred HtoD once on first touch, kept
+/// in per-device arenas while `resident.cap_per_device` allows,
+/// inter-epoch halos refreshed by neighbor-arena fetches, capacity
+/// victims spilled and re-fetched), the codec policy retags its transfer
+/// ops, and the executor interprets the result with real numerics —
+/// payloads round-trip through the selected codec. Bit-exactness vs
+/// [`reference_run`] is preserved for every lossless policy (`off`,
+/// `lossless`, `auto`) — the randomized differential suite enforces it
+/// across schemes, device counts, capacity settings and codecs; the
+/// lossy `bf16` policy is bounded per transfer instead.
+#[allow(clippy::too_many_arguments)]
+pub fn run_scheme_full(
+    scheme: Scheme,
+    initial: &Array2,
+    kind: StencilKind,
+    n: usize,
+    d: usize,
+    n_devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    backend: &mut dyn KernelBackend,
+    resident: &ResidencyConfig,
+    compress: CompressMode,
+) -> Result<RunOutcome> {
+    crate::config::validate_devices(scheme, d, n_devices)?;
+    let dc = Decomposition::new(initial.rows(), initial.cols(), d, kind.radius());
+    let devs = if scheme == Scheme::InCore {
+        DeviceAssignment::single(dc.n_chunks())
+    } else {
+        DeviceAssignment::contiguous(dc.n_chunks(), n_devices)
+    };
+    let (mut plans, summary) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, resident);
+    apply_codec_policy(&mut plans, &dc, compress);
+    let mut grid = initial.clone();
+    let mut exec = PlanExecutor::new(backend, kind);
+    exec.run(&mut grid, &dc, &plans)?;
+    let stats = exec.stats.clone();
+    Ok(RunOutcome { grid, stats, residency: Some(summary) })
+}
+
+/// [`run_scheme_full`] without compression (the PR 2 entry point).
 #[allow(clippy::too_many_arguments)]
 pub fn run_scheme_resident(
     scheme: Scheme,
@@ -95,19 +132,19 @@ pub fn run_scheme_resident(
     backend: &mut dyn KernelBackend,
     resident: &ResidencyConfig,
 ) -> Result<RunOutcome> {
-    crate::config::validate_devices(scheme, d, n_devices)?;
-    let dc = Decomposition::new(initial.rows(), initial.cols(), d, kind.radius());
-    let devs = if scheme == Scheme::InCore {
-        DeviceAssignment::single(dc.n_chunks())
-    } else {
-        DeviceAssignment::contiguous(dc.n_chunks(), n_devices)
-    };
-    let (plans, summary) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, resident);
-    let mut grid = initial.clone();
-    let mut exec = PlanExecutor::new(backend, kind);
-    exec.run(&mut grid, &dc, &plans)?;
-    let stats = exec.stats.clone();
-    Ok(RunOutcome { grid, stats, residency: Some(summary) })
+    run_scheme_full(
+        scheme,
+        initial,
+        kind,
+        n,
+        d,
+        n_devices,
+        s_tb,
+        k_on,
+        backend,
+        resident,
+        CompressMode::Off,
+    )
 }
 
 /// Single-device [`run_scheme_on`] (the seed's original entry point).
@@ -374,6 +411,82 @@ mod tests {
         let summary = out.residency.unwrap();
         assert!(summary.enabled && !summary.fits);
         assert_eq!(summary.planned_spills, 8);
+    }
+
+    #[test]
+    fn lossless_compression_stays_bit_exact_and_shrinks_wire_bytes() {
+        use crate::transfer::CompressMode;
+        let kind = StencilKind::Box { radius: 1 };
+        let initial = Array2::synthetic(160, 64, 21);
+        let reference = reference_run(&initial, kind, 12, &NaiveEngine);
+        for resident in [ResidencyConfig::off(), ResidencyConfig::force(3)] {
+            for n_devices in [1usize, 2] {
+                let mut backend = HostBackend::new(NaiveEngine);
+                let out = run_scheme_full(
+                    Scheme::So2dr,
+                    &initial,
+                    kind,
+                    12,
+                    4,
+                    n_devices,
+                    6,
+                    3,
+                    &mut backend,
+                    &resident,
+                    CompressMode::Lossless,
+                )
+                .unwrap();
+                assert!(
+                    out.grid.bit_eq(&reference),
+                    "lossless on {n_devices} devices ({:?}) diverged: {}",
+                    resident.mode,
+                    out.grid.max_abs_diff(&reference)
+                );
+                assert!(out.stats.codec_ops > 0, "codec must engage");
+                assert!(
+                    out.stats.htod_wire_bytes < out.stats.htod_bytes,
+                    "smooth fields must compress: {} !< {}",
+                    out.stats.htod_wire_bytes,
+                    out.stats.htod_bytes
+                );
+                assert!(out.stats.dtoh_wire_bytes < out.stats.dtoh_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_compression_error_is_bounded_by_roundtrip_bound() {
+        use crate::transfer::{max_roundtrip_error, CompressMode};
+        let kind = StencilKind::Box { radius: 1 };
+        let initial = Array2::synthetic(160, 64, 21);
+        let reference = reference_run(&initial, kind, 12, &NaiveEngine);
+        let mut backend = HostBackend::new(NaiveEngine);
+        let out = run_scheme_full(
+            Scheme::So2dr,
+            &initial,
+            kind,
+            12,
+            4,
+            1,
+            6,
+            3,
+            &mut backend,
+            &ResidencyConfig::off(),
+            CompressMode::Bf16,
+        )
+        .unwrap();
+        let diff = out.grid.max_abs_diff(&reference);
+        assert!(diff > 0.0, "bf16 must actually quantize");
+        // Two staged epochs quantize each element at most four times
+        // (HtoD + DtoH per epoch); the box kernel's weights sum to 1, so
+        // per-step averaging cannot amplify the injected error. Bound by
+        // the measured single-round-trip error with a 4x safety margin.
+        let mre = max_roundtrip_error(&initial);
+        let bound = 4.0 * 4.0 * mre;
+        assert!(diff <= bound, "bf16 drift {diff} exceeds bound {bound}");
+        assert_eq!(out.stats.htod_wire_bytes * 2, out.stats.htod_bytes);
+        // Wire volume is exactly half on both host channels.
+        assert_eq!(out.stats.dtoh_wire_bytes * 2, out.stats.dtoh_bytes);
     }
 
     #[test]

@@ -1,24 +1,39 @@
 //! The real-numerics interpreter of epoch plans.
 //!
 //! Executes an [`EpochPlan`] against actual data: the host grid plays the
-//! host memory, per-device `Array2` double buffers play the device
-//! arenas, and one [`RegionShareBuffer`] per device plays that device's
-//! resident sharing buffer. `D2D` ops move regions between device
-//! buffers — the real-numerics analog of a peer-to-peer halo exchange.
-//! The result must match the in-core reference bit-exactly (same
-//! backend) — this is the correctness core of the reproduction: it
-//! exercises region sharing, trapezoid clamping, skewed windows, epoch
-//! residuals, and multi-device sharding.
+//! host memory, `Array2` double buffers play the device arenas, and one
+//! [`RegionShareBuffer`] per device plays that device's resident sharing
+//! buffer. `D2D` ops move regions between device buffers — the
+//! real-numerics analog of a peer-to-peer halo exchange. The result must
+//! match the in-core reference bit-exactly (same backend) — this is the
+//! correctness core of the reproduction: it exercises region sharing,
+//! trapezoid clamping, skewed windows, epoch residuals, multi-device
+//! sharding and the resident execution model.
+//!
+//! One op interpreter ([`PlanExecutor::exec_ops`]) serves both execution
+//! models; only the arena lookup differs ([`ArenaStore`]): staged epochs
+//! run on one double buffer per device, resident runs on one persistent
+//! arena per chunk (allocated on first touch, dropped on eviction).
+//!
+//! Transfer ops carry a [`CodecKind`]: host transfers and link hops are
+//! round-tripped through the selected codec, so a lossless tag is
+//! *proven* bit-exact by the differential suites and a lossy tag's error
+//! actually flows through the numerics (bounded by the bf16 round-trip
+//! bound per transfer).
 
 use crate::chunking::plan::{phase_a_len, ChunkEpochPlan, ChunkOp, EpochPlan, Scheme};
 use crate::chunking::Decomposition;
 use crate::coordinator::backend::KernelBackend;
 use crate::coordinator::rs_buffer::RegionShareBuffer;
 use crate::core::{Array2, Rect, RowSpan};
+use crate::transfer::codec::CodecKind;
 use anyhow::{bail, Context, Result};
 
 /// Byte/operation counters accumulated over a run. These are *logical*
 /// quantities (what a GPU would transfer/compute); the DES prices them.
+/// The `*_wire_bytes` counters are what actually crosses the channel
+/// after the transfer codec (equal to the raw counters when every op
+/// carries the identity codec).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ExecStats {
     pub epochs: usize,
@@ -55,6 +70,19 @@ pub struct ExecStats {
     /// Resident model: chunk-epochs that arrived with their arena already
     /// live (no host transfer at all).
     pub resident_hits: u64,
+    /// Bytes crossing the HtoD channel after the transfer codec.
+    pub htod_wire_bytes: u64,
+    /// Bytes crossing the DtoH channel after the transfer codec.
+    pub dtoh_wire_bytes: u64,
+    /// Bytes crossing the inter-device link after the transfer codec.
+    pub p2p_wire_bytes: u64,
+    /// Non-identity codec round trips executed.
+    pub codec_ops: u64,
+    /// Raw bytes pushed through a non-identity codec (for throughput).
+    pub codec_raw_bytes: u64,
+    /// Measured wall seconds spent compressing / decompressing.
+    pub codec_compress_s: f64,
+    pub codec_decompress_s: f64,
 }
 
 impl ExecStats {
@@ -66,6 +94,82 @@ impl ExecStats {
             return 0.0;
         }
         self.computed_elems as f64 / ideal as f64 - 1.0
+    }
+
+    /// Raw transfer bytes across host link + inter-device link.
+    pub fn transfer_raw_bytes(&self) -> u64 {
+        self.htod_bytes + self.dtoh_bytes + self.p2p_bytes
+    }
+
+    /// Wire bytes across the same channels after the codec.
+    pub fn transfer_wire_bytes(&self) -> u64 {
+        self.htod_wire_bytes + self.dtoh_wire_bytes + self.p2p_wire_bytes
+    }
+}
+
+/// Arena storage behind the unified op interpreter — the only thing the
+/// two execution models disagree on is where a chunk's `(cur, scratch)`
+/// pair lives and how long it stays alive.
+enum ArenaStore {
+    /// Staged epochs: one double buffer per *device*, reused across
+    /// chunks and epochs. Safe because every live row is written
+    /// (HtoD/RS read) before any kernel reads it — the bit-exact
+    /// equivalence suite guards this invariant.
+    Staged(Vec<(Array2, Array2)>),
+    /// Resident runs: one persistent arena per *chunk*, allocated lazily
+    /// on arrival and dropped on eviction.
+    Resident(Vec<Option<(Array2, Array2)>>),
+}
+
+impl ArenaStore {
+    /// The live `(cur, scratch)` pair of `cp` — an error when a resident
+    /// chunk's arena is dead (plan bug).
+    fn pair(&mut self, cp: &ChunkEpochPlan) -> Result<&mut (Array2, Array2)> {
+        match self {
+            ArenaStore::Staged(bufs) => Ok(&mut bufs[cp.device]),
+            ArenaStore::Resident(arenas) => arenas[cp.chunk]
+                .as_mut()
+                .with_context(|| format!("chunk {} arena is not live", cp.chunk)),
+        }
+    }
+
+    /// The pair an arriving `HtoD` writes into (resident stores allocate
+    /// here on first touch / re-fetch).
+    fn arrive(
+        &mut self,
+        cp: &ChunkEpochPlan,
+        buf_rows: usize,
+        cols: usize,
+    ) -> &mut (Array2, Array2) {
+        match self {
+            ArenaStore::Staged(bufs) => &mut bufs[cp.device],
+            ArenaStore::Resident(arenas) => arenas[cp.chunk].get_or_insert_with(|| {
+                (Array2::zeros(buf_rows, cols), Array2::zeros(buf_rows, cols))
+            }),
+        }
+    }
+
+    fn is_live(&self, chunk: usize) -> bool {
+        match self {
+            ArenaStore::Staged(_) => true,
+            ArenaStore::Resident(arenas) => arenas[chunk].is_some(),
+        }
+    }
+
+    /// Drop a chunk's arena (resident eviction; no-op for staged buffers,
+    /// which outlive every chunk by design).
+    fn release(&mut self, chunk: usize) {
+        if let ArenaStore::Resident(arenas) = self {
+            arenas[chunk] = None;
+        }
+    }
+
+    /// Live arena count (resident accounting).
+    fn live_arenas(&self) -> usize {
+        match self {
+            ArenaStore::Staged(bufs) => bufs.len(),
+            ArenaStore::Resident(arenas) => arenas.iter().filter(|a| a.is_some()).count(),
+        }
     }
 }
 
@@ -112,6 +216,32 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         Ok(RowSpan::new(lo as usize, hi as usize))
     }
 
+    /// Move `src` into `dst` through `codec`, returning the wire-payload
+    /// size. Identity short-circuits to a straight copy (no codec pass,
+    /// wire == raw); everything else performs the real compress →
+    /// decompress round trip, so codec semantics (bit-exact or bounded)
+    /// flow into the numerics the suites verify.
+    fn codec_copy(&mut self, codec: CodecKind, src: &[f32], dst: &mut [f32]) -> Result<u64> {
+        let raw = (src.len() * 4) as u64;
+        if codec == CodecKind::Identity {
+            dst.copy_from_slice(src);
+            return Ok(raw);
+        }
+        let c = codec.codec();
+        let t0 = std::time::Instant::now();
+        let wire = c.compress(src);
+        let t1 = std::time::Instant::now();
+        let decoded = c
+            .decompress(&wire, src.len())
+            .with_context(|| format!("{} codec round trip", codec.name()))?;
+        self.stats.codec_compress_s += (t1 - t0).as_secs_f64();
+        self.stats.codec_decompress_s += t1.elapsed().as_secs_f64();
+        self.stats.codec_ops += 1;
+        self.stats.codec_raw_bytes += raw;
+        dst.copy_from_slice(&decoded);
+        Ok(wire.len() as u64)
+    }
+
     /// Execute all epochs in sequence, updating `grid` in place.
     pub fn run(
         &mut self,
@@ -127,20 +257,15 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         let mut rs: Vec<RegionShareBuffer> =
             (0..n_devices).map(|_| RegionShareBuffer::new()).collect();
         if plans.iter().any(|p| p.resident) {
-            // Resident execution model: per-chunk arenas persist across
-            // epochs (see `run_resident`).
             self.run_resident(grid, dc, plans, buf_rows, cols, &mut rs)?;
         } else {
-            // §Perf iteration 2: one double buffer per device, reused
-            // across chunks and epochs (the device arenas would do the
-            // same). Safe because every live row is written (HtoD/RS
-            // read) before any kernel reads it — the bit-exact
-            // equivalence suite guards this invariant.
-            let mut bufs: Vec<(Array2, Array2)> = (0..n_devices)
-                .map(|_| (Array2::zeros(buf_rows, cols), Array2::zeros(buf_rows, cols)))
-                .collect();
+            let mut store = ArenaStore::Staged(
+                (0..n_devices)
+                    .map(|_| (Array2::zeros(buf_rows, cols), Array2::zeros(buf_rows, cols)))
+                    .collect(),
+            );
             for plan in plans {
-                self.run_epoch(grid, dc, plan, buf_rows, cols, &mut rs, &mut bufs)
+                self.run_epoch(grid, dc, plan, buf_rows, cols, &mut rs, &mut store)
                     .with_context(|| format!("epoch at step {}", plan.start_step))?;
                 for r in rs.iter_mut() {
                     r.clear();
@@ -155,6 +280,9 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         Ok(())
     }
 
+    /// One staged epoch, chunk-major. The in-core scheme's one-time
+    /// whole-grid residency (excluded from the paper's timings) wraps the
+    /// shared interpreter.
     #[allow(clippy::too_many_arguments)]
     fn run_epoch(
         &mut self,
@@ -164,89 +292,19 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         buf_rows: usize,
         cols: usize,
         rs: &mut [RegionShareBuffer],
-        bufs: &mut [(Array2, Array2)],
+        store: &mut ArenaStore,
     ) -> Result<()> {
-        let radius = dc.radius();
         let arena_bytes = plan.n_devices as u64 * 2 * (buf_rows * cols * 4) as u64;
         self.stats.arena_peak_bytes = self.stats.arena_peak_bytes.max(arena_bytes);
         for cp in &plan.chunks {
             let base = Self::buffer_base(dc, plan, cp.chunk);
-            let pair = &mut bufs[cp.device];
-            let (cur, scratch) = (&mut pair.0, &mut pair.1);
+            let all = RowSpan::new(0, dc.rows());
             if plan.scheme == Scheme::InCore {
-                // One-time residency: the whole grid lives on the device;
-                // the paper excludes these two transfers from timing.
-                let all = RowSpan::new(0, dc.rows());
-                cur.copy_rows_from(all, grid, all);
+                store.pair(cp)?.0.copy_rows_from(all, grid, all);
             }
-            for op in &cp.ops {
-                match op {
-                    ChunkOp::HtoD { span } => {
-                        let local = Self::to_local(*span, base, buf_rows)?;
-                        cur.copy_rows_from(local, grid, *span);
-                        self.stats.htod_bytes += (span.len() * cols * 4) as u64;
-                    }
-                    ChunkOp::DtoH { span } => {
-                        let local = Self::to_local(*span, base, buf_rows)?;
-                        grid.copy_rows_from(*span, cur, local);
-                        self.stats.dtoh_bytes += (span.len() * cols * 4) as u64;
-                    }
-                    ChunkOp::RsRead(region) => {
-                        let local = Self::to_local(region.span, base, buf_rows)?;
-                        let data = rs[cp.device]
-                            .read(region.span, region.time_step)
-                            .with_context(|| {
-                                format!(
-                                    "RS region {} @t{} missing on device {} (chunk {})",
-                                    region.span, region.time_step, cp.device, cp.chunk
-                                )
-                            })?
-                            .clone();
-                        cur.insert_rows(local, &data);
-                    }
-                    ChunkOp::RsWrite(region) => {
-                        let local = Self::to_local(region.span, base, buf_rows)?;
-                        let data = cur.extract_rows(local);
-                        rs[cp.device].write(region.span, region.time_step, data);
-                    }
-                    ChunkOp::D2D { src_dev, dst_dev, span, time_step } => {
-                        let data = rs[*src_dev]
-                            .peek(*span, *time_step)
-                            .with_context(|| {
-                                format!(
-                                    "D2D region {} @t{} missing on source device {}",
-                                    span, time_step, src_dev
-                                )
-                            })?
-                            .clone();
-                        self.stats.p2p_bytes += data.size_bytes();
-                        self.stats.p2p_copies += 1;
-                        rs[*dst_dev].receive(*span, *time_step, data);
-                    }
-                    ChunkOp::Kernel(inv) => {
-                        let mut local_windows = Vec::with_capacity(inv.windows.len());
-                        for w in &inv.windows {
-                            let lw = Self::to_local(*w, base, buf_rows)?;
-                            local_windows.push(Rect::new(lw.lo, lw.hi, radius, cols - radius));
-                            self.stats.computed_elems +=
-                                (lw.len() * (cols - 2 * radius)) as u64;
-                        }
-                        self.backend
-                            .run_kernel(self.kind, cur, scratch, &local_windows)
-                            .with_context(|| {
-                                format!("kernel chunk {} step {}", cp.chunk, inv.first_step)
-                            })?;
-                        self.stats.kernel_invocations += 1;
-                        self.stats.fused_steps += inv.windows.len() as u64;
-                    }
-                    ChunkOp::Resident { .. } | ChunkOp::Fetch(_) | ChunkOp::Evict { .. } => {
-                        bail!("resident-model op in a staged epoch (plan bug)");
-                    }
-                }
-            }
+            self.exec_ops(grid, dc, cp, &cp.ops, base, buf_rows, cols, false, rs, store)?;
             if plan.scheme == Scheme::InCore {
-                let all = RowSpan::new(0, dc.rows());
-                grid.copy_rows_from(all, cur, all);
+                grid.copy_rows_from(all, &store.pair(cp)?.0, all);
             }
         }
         Ok(())
@@ -270,16 +328,15 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
     ) -> Result<()> {
         let scheme = plans.first().map(|p| p.scheme).unwrap_or(Scheme::So2dr);
         let s_max = plans.iter().map(|p| p.steps).max().unwrap_or(1);
-        let mut arenas: Vec<Option<(Array2, Array2)>> =
-            (0..dc.n_chunks()).map(|_| None).collect();
+        let mut store = ArenaStore::Resident((0..dc.n_chunks()).map(|_| None).collect());
         for plan in plans {
             for pass in 0..2 {
                 for cp in &plan.chunks {
                     let split = phase_a_len(&cp.ops);
                     let ops = if pass == 0 { &cp.ops[..split] } else { &cp.ops[split..] };
                     let base = dc.resident_base(scheme, s_max, cp.chunk);
-                    self.exec_resident_ops(
-                        grid, dc, cp, ops, base, buf_rows, cols, rs, &mut arenas,
+                    self.exec_ops(
+                        grid, dc, cp, ops, base, buf_rows, cols, true, rs, &mut store,
                     )
                     .with_context(|| {
                         format!("epoch at step {} chunk {}", plan.start_step, cp.chunk)
@@ -288,7 +345,7 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                 if pass == 0 {
                     // Peak arena occupancy: right after arrivals, before
                     // this epoch's evictions.
-                    let live = arenas.iter().filter(|a| a.is_some()).count() as u64;
+                    let live = store.live_arenas() as u64;
                     self.stats.arena_peak_bytes = self
                         .stats
                         .arena_peak_bytes
@@ -303,10 +360,12 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         Ok(())
     }
 
-    /// Execute a slice of one chunk's ops against its own persistent
-    /// arena (allocated lazily on arrival, dropped on eviction).
+    /// The single op interpreter both execution models share: execute a
+    /// slice of one chunk's ops against its arena in `store`. `resident`
+    /// gates the resident-model ops (a staged plan containing them is a
+    /// plan bug, surfaced loudly).
     #[allow(clippy::too_many_arguments)]
-    fn exec_resident_ops(
+    fn exec_ops(
         &mut self,
         grid: &mut Array2,
         dc: &Decomposition,
@@ -315,49 +374,61 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         base: i64,
         buf_rows: usize,
         cols: usize,
+        resident: bool,
         rs: &mut [RegionShareBuffer],
-        arenas: &mut [Option<(Array2, Array2)>],
+        store: &mut ArenaStore,
     ) -> Result<()> {
-        fn arena<'m>(
-            arenas: &'m mut [Option<(Array2, Array2)>],
-            chunk: usize,
-        ) -> Result<&'m mut (Array2, Array2)> {
-            arenas[chunk]
-                .as_mut()
-                .with_context(|| format!("chunk {chunk} arena is not live"))
-        }
         let radius = dc.radius();
         for op in ops {
             match op {
                 ChunkOp::Resident { .. } => {
-                    if arenas[cp.chunk].is_none() {
+                    if !resident {
+                        bail!("resident-model op in a staged epoch (plan bug)");
+                    }
+                    if !store.is_live(cp.chunk) {
                         bail!("chunk {} marked resident but its arena is dead", cp.chunk);
                     }
                     self.stats.resident_hits += 1;
                 }
-                ChunkOp::HtoD { span } => {
+                ChunkOp::HtoD { span, codec } => {
                     let local = Self::to_local(*span, base, buf_rows)?;
-                    let pair = arenas[cp.chunk].get_or_insert_with(|| {
-                        (Array2::zeros(buf_rows, cols), Array2::zeros(buf_rows, cols))
-                    });
-                    pair.0.copy_rows_from(local, grid, *span);
+                    let pair = store.arrive(cp, buf_rows, cols);
+                    let wire = self.codec_copy(
+                        *codec,
+                        grid.rows_slice(*span),
+                        pair.0.rows_slice_mut(local),
+                    )?;
                     self.stats.htod_bytes += (span.len() * cols * 4) as u64;
+                    self.stats.htod_wire_bytes += wire;
                 }
-                ChunkOp::DtoH { span } => {
+                ChunkOp::DtoH { span, codec } => {
                     let local = Self::to_local(*span, base, buf_rows)?;
-                    let pair = arena(arenas, cp.chunk)?;
-                    grid.copy_rows_from(*span, &pair.0, local);
+                    let pair = store.pair(cp)?;
+                    let wire = self.codec_copy(
+                        *codec,
+                        pair.0.rows_slice(local),
+                        grid.rows_slice_mut(*span),
+                    )?;
                     self.stats.dtoh_bytes += (span.len() * cols * 4) as u64;
+                    self.stats.dtoh_wire_bytes += wire;
                 }
-                ChunkOp::Evict { span } => {
+                ChunkOp::Evict { span, codec } => {
+                    if !resident {
+                        bail!("resident-model op in a staged epoch (plan bug)");
+                    }
                     let local = Self::to_local(*span, base, buf_rows)?;
-                    let pair = arena(arenas, cp.chunk)?;
-                    grid.copy_rows_from(*span, &pair.0, local);
+                    let pair = store.pair(cp)?;
+                    let wire = self.codec_copy(
+                        *codec,
+                        pair.0.rows_slice(local),
+                        grid.rows_slice_mut(*span),
+                    )?;
                     let bytes = (span.len() * cols * 4) as u64;
                     self.stats.dtoh_bytes += bytes;
+                    self.stats.dtoh_wire_bytes += wire;
                     self.stats.spill_bytes += bytes;
                     self.stats.spills += 1;
-                    arenas[cp.chunk] = None;
+                    store.release(cp.chunk);
                 }
                 ChunkOp::RsRead(region) => {
                     let local = Self::to_local(region.span, base, buf_rows)?;
@@ -370,9 +441,12 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                             )
                         })?
                         .clone();
-                    arena(arenas, cp.chunk)?.0.insert_rows(local, &data);
+                    store.pair(cp)?.0.insert_rows(local, &data);
                 }
                 ChunkOp::Fetch(region) => {
+                    if !resident {
+                        bail!("resident-model op in a staged epoch (plan bug)");
+                    }
                     let local = Self::to_local(region.span, base, buf_rows)?;
                     let data = rs[cp.device]
                         .read(region.span, region.time_step)
@@ -385,14 +459,14 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                         .clone();
                     self.stats.fetch_bytes += data.size_bytes();
                     self.stats.fetch_reads += 1;
-                    arena(arenas, cp.chunk)?.0.insert_rows(local, &data);
+                    store.pair(cp)?.0.insert_rows(local, &data);
                 }
                 ChunkOp::RsWrite(region) => {
                     let local = Self::to_local(region.span, base, buf_rows)?;
-                    let data = arena(arenas, cp.chunk)?.0.extract_rows(local);
+                    let data = store.pair(cp)?.0.extract_rows(local);
                     rs[cp.device].write(region.span, region.time_step, data);
                 }
-                ChunkOp::D2D { src_dev, dst_dev, span, time_step } => {
+                ChunkOp::D2D { src_dev, dst_dev, span, time_step, codec } => {
                     let data = rs[*src_dev]
                         .peek(*span, *time_step)
                         .with_context(|| {
@@ -402,9 +476,24 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                             )
                         })?
                         .clone();
-                    self.stats.p2p_bytes += data.size_bytes();
+                    let raw = data.size_bytes();
+                    let landed = if *codec == CodecKind::Identity {
+                        self.stats.p2p_wire_bytes += raw;
+                        data
+                    } else {
+                        let mut landed = Array2::zeros(data.rows(), data.cols());
+                        let all = RowSpan::new(0, data.rows());
+                        let wire = self.codec_copy(
+                            *codec,
+                            data.as_slice(),
+                            landed.rows_slice_mut(all),
+                        )?;
+                        self.stats.p2p_wire_bytes += wire;
+                        landed
+                    };
+                    self.stats.p2p_bytes += raw;
                     self.stats.p2p_copies += 1;
-                    rs[*dst_dev].receive(*span, *time_step, data);
+                    rs[*dst_dev].receive(*span, *time_step, landed);
                 }
                 ChunkOp::Kernel(inv) => {
                     let mut local_windows = Vec::with_capacity(inv.windows.len());
@@ -413,7 +502,7 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                         local_windows.push(Rect::new(lw.lo, lw.hi, radius, cols - radius));
                         self.stats.computed_elems += (lw.len() * (cols - 2 * radius)) as u64;
                     }
-                    let pair = arena(arenas, cp.chunk)?;
+                    let pair = store.pair(cp)?;
                     self.backend
                         .run_kernel(self.kind, &mut pair.0, &mut pair.1, &local_windows)
                         .with_context(|| {

@@ -18,10 +18,11 @@
 
 use crate::chunking::plan::{ResidencyConfig, Scheme};
 use crate::coordinator::backend::KernelBackend;
-use crate::coordinator::driver::{run_scheme_resident, RunOutcome};
+use crate::coordinator::driver::{run_scheme_full, RunOutcome};
 use crate::coordinator::exec::ExecStats;
 use crate::core::Array2;
 use crate::stencil::StencilKind;
+use crate::transfer::CompressMode;
 use anyhow::{bail, Context, Result};
 
 /// One pipeline stage: `steps` time steps of `kind`.
@@ -55,10 +56,12 @@ impl PipelineStats {
 
 /// Run a multi-stencil pipeline under one scheme and run-time config,
 /// sharded over `devices` simulated GPUs, with each segment planned by
-/// the residency planner (`resident`). `s_tb` is clamped per segment so
-/// each segment's halo working space stays feasible for its radius
-/// (larger radii get fewer TB steps, as the §IV-C constraint demands).
-/// The grid returns to the host between segments (see module docs).
+/// the residency planner (`resident`) and its transfer ops tagged by the
+/// codec policy (`compress` — every segment shares one policy, as one
+/// run shares one `--compress`). `s_tb` is clamped per segment so each
+/// segment's halo working space stays feasible for its radius (larger
+/// radii get fewer TB steps, as the §IV-C constraint demands). The grid
+/// returns to the host between segments (see module docs).
 #[allow(clippy::too_many_arguments)]
 pub fn run_pipeline_on(
     scheme: Scheme,
@@ -70,6 +73,7 @@ pub fn run_pipeline_on(
     k_on: usize,
     backend: &mut dyn KernelBackend,
     resident: &ResidencyConfig,
+    compress: CompressMode,
 ) -> Result<(RunOutcome, PipelineStats)> {
     if segments.is_empty() {
         bail!("empty pipeline");
@@ -82,8 +86,9 @@ pub fn run_pipeline_on(
         let min_chunk = initial.rows() / d;
         let max_tb = (min_chunk.saturating_sub(seg.kind.radius())) / seg.kind.radius();
         let seg_tb = s_tb.min(max_tb.max(1)).min(seg.steps.max(1));
-        let out = run_scheme_resident(
+        let out = run_scheme_full(
             scheme, &grid, seg.kind, seg.steps, d, devices, seg_tb, k_on, backend, resident,
+            compress,
         )
         .with_context(|| format!("pipeline segment {i} ({})", seg.kind.name()))?;
         grid = out.grid.clone();
@@ -95,8 +100,8 @@ pub fn run_pipeline_on(
     Ok((outcome, stats))
 }
 
-/// Single-device, staged-epoch [`run_pipeline_on`] (the original entry
-/// point).
+/// Single-device, staged-epoch, uncompressed [`run_pipeline_on`] (the
+/// original entry point).
 #[allow(clippy::too_many_arguments)]
 pub fn run_pipeline(
     scheme: Scheme,
@@ -117,6 +122,7 @@ pub fn run_pipeline(
         k_on,
         backend,
         &ResidencyConfig::off(),
+        CompressMode::Off,
     )
 }
 
@@ -200,6 +206,7 @@ mod tests {
                     k_on,
                     &mut backend,
                     &ResidencyConfig::off(),
+                    CompressMode::Off,
                 )
                 .unwrap();
                 assert!(
@@ -246,6 +253,7 @@ mod tests {
                 2,
                 &mut backend,
                 &ResidencyConfig::force(3),
+                CompressMode::Off,
             )
             .unwrap();
             assert!(out.grid.bit_eq(&expect), "{devices} devices");
@@ -257,6 +265,43 @@ mod tests {
                 );
                 assert!(seg_stats.resident_hits > 0, "{}", kind.name());
             }
+        }
+    }
+
+    #[test]
+    fn lossless_compressed_pipeline_stays_bit_exact() {
+        // Compression composes with residency across segment boundaries:
+        // every segment's wire volume shrinks, the numerics don't move.
+        let initial = Array2::synthetic(120, 80, 23);
+        let segs = vec![
+            Segment::new(StencilKind::Box { radius: 1 }, 8),
+            Segment::new(StencilKind::Box { radius: 2 }, 6),
+        ];
+        let expect = reference_pipeline(&initial, &segs);
+        let mut backend = HostBackend::new(NaiveEngine);
+        let (out, stats) = run_pipeline_on(
+            Scheme::So2dr,
+            &initial,
+            &segs,
+            4,
+            2,
+            4,
+            2,
+            &mut backend,
+            &ResidencyConfig::force(3),
+            CompressMode::Lossless,
+        )
+        .unwrap();
+        assert!(out.grid.bit_eq(&expect));
+        for (kind, seg_stats) in &stats.per_segment {
+            assert!(seg_stats.codec_ops > 0, "{}", kind.name());
+            assert!(
+                seg_stats.htod_wire_bytes < seg_stats.htod_bytes,
+                "{}: wire {} !< raw {}",
+                kind.name(),
+                seg_stats.htod_wire_bytes,
+                seg_stats.htod_bytes
+            );
         }
     }
 }

@@ -6,7 +6,7 @@
 //! shapes: who wins, by what factor, and where the crossovers fall.
 
 use crate::chunking::plan::{
-    plan_run_devices, plan_run_resident, ResidencyConfig, ResidencySummary, Scheme,
+    apply_codec_policy, plan_run_resident, ResidencyConfig, ResidencySummary, Scheme,
 };
 use crate::chunking::{Decomposition, DeviceAssignment};
 use crate::coordinator::{HostBackend, PlanExecutor};
@@ -16,6 +16,7 @@ use crate::gpu::flatten::{flatten_run, OpKind};
 use crate::metrics::{breakdown_table, mean};
 use crate::params::{check_feasible, Feasibility};
 use crate::stencil::{NaiveEngine, StencilKind};
+use crate::transfer::CompressMode;
 use crate::util::Table;
 
 /// Out-of-core grid size (11.0 GB with two f32 arrays, Table III).
@@ -38,11 +39,41 @@ pub fn chosen_config(kind: StencilKind) -> (usize, usize) {
     }
 }
 
-/// Simulate one configuration on an arbitrary (possibly non-square)
-/// grid, sharded over `devices` simulated GPUs (contiguous chunk blocks,
-/// P2P halo exchange at the device boundaries). This is the single
-/// pricing pipeline behind `simulate_config*` and `so2dr run`'s modeled
-/// makespan line.
+/// The single pricing pipeline behind every `simulate_*` helper and the
+/// CLI's modeled-makespan lines: plan (staged or resident), retag the
+/// transfer ops under the codec policy, flatten, replay. Arbitrary
+/// (possibly non-square) grids, sharded over `devices` simulated GPUs
+/// (contiguous chunk blocks, P2P halo exchange at the boundaries).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_compressed_grid_devices(
+    machine: &MachineSpec,
+    scheme: Scheme,
+    kind: StencilKind,
+    rows: usize,
+    cols: usize,
+    d: usize,
+    devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    n: usize,
+    n_strm: usize,
+    resident: &ResidencyConfig,
+    compress: CompressMode,
+) -> (SimReport, ResidencySummary) {
+    let dc = Decomposition::new(rows, cols, d, kind.radius());
+    let devs = if scheme == Scheme::InCore {
+        DeviceAssignment::single(dc.n_chunks())
+    } else {
+        DeviceAssignment::contiguous(dc.n_chunks(), devices)
+    };
+    let (mut plans, summary) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, resident);
+    apply_codec_policy(&mut plans, &dc, compress);
+    let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+    let ops = flatten_run(&plans, &dc, kind, n_strm, buf_rows);
+    (simulate(&ops, &CostModel::new(machine.clone()), n_strm), summary)
+}
+
+/// Staged, uncompressed [`simulate_compressed_grid_devices`].
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_grid_devices(
     machine: &MachineSpec,
@@ -57,16 +88,22 @@ pub fn simulate_grid_devices(
     n: usize,
     n_strm: usize,
 ) -> SimReport {
-    let dc = Decomposition::new(rows, cols, d, kind.radius());
-    let devs = if scheme == Scheme::InCore {
-        DeviceAssignment::single(dc.n_chunks())
-    } else {
-        DeviceAssignment::contiguous(dc.n_chunks(), devices)
-    };
-    let plans = plan_run_devices(scheme, &dc, &devs, n, s_tb, k_on);
-    let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
-    let ops = flatten_run(&plans, &dc, kind, n_strm, buf_rows);
-    simulate(&ops, &CostModel::new(machine.clone()), n_strm)
+    simulate_compressed_grid_devices(
+        machine,
+        scheme,
+        kind,
+        rows,
+        cols,
+        d,
+        devices,
+        s_tb,
+        k_on,
+        n,
+        n_strm,
+        &ResidencyConfig::off(),
+        CompressMode::Off,
+    )
+    .0
 }
 
 /// Simulate one square configuration at any grid size, sharded over
@@ -104,16 +141,21 @@ pub fn simulate_resident_grid_devices(
     n_strm: usize,
     resident: &ResidencyConfig,
 ) -> (SimReport, ResidencySummary) {
-    let dc = Decomposition::new(rows, cols, d, kind.radius());
-    let devs = if scheme == Scheme::InCore {
-        DeviceAssignment::single(dc.n_chunks())
-    } else {
-        DeviceAssignment::contiguous(dc.n_chunks(), devices)
-    };
-    let (plans, summary) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, resident);
-    let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
-    let ops = flatten_run(&plans, &dc, kind, n_strm, buf_rows);
-    (simulate(&ops, &CostModel::new(machine.clone()), n_strm), summary)
+    simulate_compressed_grid_devices(
+        machine,
+        scheme,
+        kind,
+        rows,
+        cols,
+        d,
+        devices,
+        s_tb,
+        k_on,
+        n,
+        n_strm,
+        resident,
+        CompressMode::Off,
+    )
 }
 
 /// Simulate one single-device configuration at any grid size.
@@ -459,6 +501,120 @@ pub fn bench_pr2(machine: &MachineSpec) -> String {
     json
 }
 
+/// Transfer-compression what-if study (beyond the paper: the companion
+/// works arXiv 2109.05410 / 2204.11315 stack on-the-fly compression on
+/// top of region sharing). Two tables:
+///
+/// 1. a host-link bandwidth sweep at the §V-B box2d1r configuration —
+///    when does each codec's (reduced wire, codec compute) trade beat
+///    raw transfers? Compression pays exactly where the paper's premise
+///    holds (slow links); fast links flip the lossless trade;
+/// 2. stacking with residency and sharding at the modeled machine — the
+///    codec multiplies with the HtoD reduction residency already won.
+pub fn compress_fig(machine: &MachineSpec) -> String {
+    let kind = StencilKind::Box { radius: 1 };
+    let (d, s_tb) = chosen_config(kind);
+    let modes = [CompressMode::Off, CompressMode::Bf16, CompressMode::Lossless];
+    let mut out = String::from(
+        "== Transfer compression: codec trade across link bandwidths ==\n\
+         (box2d1r, §V-B config; makespan in seconds per --compress mode)\n",
+    );
+    let mut t = Table::new(vec!["PCIe GB/s", "off (s)", "bf16 (s)", "lossless (s)", "winner"]);
+    let mut best_bw: Vec<Option<f64>> = vec![None; modes.len()];
+    for gbps in [2.0f64, 4.0, 8.0, 12.6, 24.0, 32.0] {
+        let m = machine.clone().with_pcie_gbps(gbps);
+        let reps: Vec<SimReport> = modes
+            .iter()
+            .map(|&mode| {
+                simulate_compressed_grid_devices(
+                    &m,
+                    Scheme::So2dr,
+                    kind,
+                    SZ_OOC,
+                    SZ_OOC,
+                    d,
+                    1,
+                    s_tb,
+                    K_ON,
+                    N_STEPS,
+                    N_STRM,
+                    &ResidencyConfig::off(),
+                    mode,
+                )
+                .0
+            })
+            .collect();
+        let winner = (0..modes.len())
+            .min_by(|&a, &b| reps[a].makespan.partial_cmp(&reps[b].makespan).unwrap())
+            .unwrap();
+        for (i, rep) in reps.iter().enumerate() {
+            if i > 0 && rep.makespan < reps[0].makespan {
+                best_bw[i] = Some(gbps); // highest swept bw where codec i still wins
+            }
+        }
+        t.row(vec![
+            format!("{gbps:.1}"),
+            format!("{:.3}", reps[0].makespan),
+            format!("{:.3}", reps[1].makespan),
+            format!("{:.3}", reps[2].makespan),
+            modes[winner].name().to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    for (i, mode) in modes.iter().enumerate().skip(1) {
+        match best_bw[i] {
+            Some(bw) => out.push_str(&format!(
+                "crossover: {} beats raw transfers up to {bw:.1} GB/s in this sweep\n",
+                mode.name()
+            )),
+            None => out.push_str(&format!(
+                "crossover: {} never beats raw transfers in this sweep\n",
+                mode.name()
+            )),
+        }
+    }
+    // Stacking: compression x residency x sharding at the modeled machine.
+    out.push_str(
+        "\n-- stacking with --resident and multi-device sharding (modeled machine) --\n",
+    );
+    let mut t = Table::new(vec![
+        "devices", "resident", "compress", "HtoD raw", "HtoD wire", "time (s)",
+    ]);
+    for devices in [1usize, 4] {
+        for resident in [ResidencyConfig::off(), ResidencyConfig::auto(machine.c_dmem, N_STRM)]
+        {
+            for &mode in &modes {
+                let (rep, summary) = simulate_compressed_grid_devices(
+                    machine,
+                    Scheme::So2dr,
+                    kind,
+                    SZ_OOC,
+                    SZ_OOC,
+                    d,
+                    devices,
+                    s_tb,
+                    K_ON,
+                    N_STEPS,
+                    N_STRM,
+                    &resident,
+                    mode,
+                );
+                let res_label = if summary.enabled { "auto" } else { "off" };
+                t.row(vec![
+                    devices.to_string(),
+                    res_label.to_string(),
+                    mode.name().to_string(),
+                    crate::util::fmt_bytes(rep.raw_bytes_of(OpKind::HtoD)),
+                    crate::util::fmt_bytes(rep.bytes_of(OpKind::HtoD)),
+                    format!("{:.3}", rep.makespan),
+                ]);
+            }
+        }
+    }
+    out.push_str(&t.render());
+    out
+}
+
 /// The figure registry, in report order: names paired with their
 /// builders. Kept lazy so the CLI's `--fig` filter selects *before*
 /// computing — figures run paper-scale DES sweeps (and `bench_pr2`
@@ -476,6 +632,7 @@ pub fn registry() -> Vec<(&'static str, fn(&MachineSpec) -> String)> {
         ("ablation_kon", ablation_kon),
         ("scaling", scaling),
         ("resident", resident),
+        ("compress", compress_fig),
         ("bench_pr2", bench_pr2),
     ]
 }
@@ -516,6 +673,29 @@ mod tests {
         // At 4 devices the grid fits, every chunk pins, and the 4-epoch
         // benchmarks save exactly 3 of 4 HtoD sweeps.
         assert!(txt.contains("75%"), "{txt}");
+    }
+
+    #[test]
+    fn compress_figure_shows_sweep_and_crossovers() {
+        let m = MachineSpec::rtx3080();
+        let txt = compress_fig(&m);
+        assert!(txt.contains("Transfer compression"), "{txt}");
+        // One row per swept bandwidth, crossover lines for both codecs.
+        for bw in ["2.0", "12.6", "32.0"] {
+            assert!(
+                txt.lines().any(|l| l.trim_start().starts_with(bw)),
+                "missing {bw} GB/s row:\n{txt}"
+            );
+        }
+        assert!(txt.matches("crossover:").count() == 2, "{txt}");
+        // bf16 wins at the slow end of the sweep.
+        assert!(
+            txt.lines().any(|l| l.trim_start().starts_with("2.0") && l.contains("bf16")),
+            "{txt}"
+        );
+        // The stacking table reports wire vs raw HtoD.
+        assert!(txt.contains("HtoD wire"), "{txt}");
+        assert!(txt.contains("stacking"), "{txt}");
     }
 
     #[test]

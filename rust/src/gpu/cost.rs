@@ -22,6 +22,7 @@
 //!   held fixed for every experiment.
 
 use crate::stencil::StencilKind;
+use crate::transfer::CodecKind;
 
 /// Hardware parameters of the modeled machine.
 #[derive(Debug, Clone)]
@@ -60,6 +61,15 @@ pub struct MachineSpec {
     pub bw_link: f64,
     /// Fixed inter-device transfer launch latency (s).
     pub link_latency_s: f64,
+    /// Transfer-codec engine throughput (B/s of *raw* payload through
+    /// the compress+decompress pair, modeled as pipelined with the
+    /// channel — the codec term adds to the transfer time, the sum
+    /// modeling imperfect overlap exactly like the kernel model). The
+    /// bf16 pack/unpack kernels are trivially memory-bound; the
+    /// byte-plane lossless codec does real per-byte work (BurstZ-class
+    /// streaming engines).
+    pub bw_codec_bf16: f64,
+    pub bw_codec_lossless: f64,
 }
 
 impl MachineSpec {
@@ -82,6 +92,8 @@ impl MachineSpec {
             kernel_concurrency: 2,
             bw_link: 11.0e9,
             link_latency_s: 8.0e-6,
+            bw_codec_bf16: 200.0e9,
+            bw_codec_lossless: 60.0e9,
         }
     }
 
@@ -98,6 +110,14 @@ impl MachineSpec {
     /// Override the inter-device link bandwidth (`--d2d-gbps`).
     pub fn with_d2d_gbps(mut self, gbps: f64) -> Self {
         self.bw_link = gbps * 1e9;
+        self
+    }
+
+    /// Override the host-link bandwidth symmetrically (bandwidth-sweep
+    /// what-if studies, `figures --fig compress`).
+    pub fn with_pcie_gbps(mut self, gbps: f64) -> Self {
+        self.bw_htod = gbps * 1e9;
+        self.bw_dtoh = gbps * 1e9;
         self
     }
 }
@@ -140,6 +160,19 @@ impl CostModel {
     /// Inter-device (peer-to-peer) halo-exchange transfer over the link.
     pub fn link_time(&self, bytes: u64) -> f64 {
         self.machine.link_latency_s + bytes as f64 / self.machine.bw_link
+    }
+
+    /// Codec compute a transfer of `raw_bytes` pays on top of its
+    /// (wire-sized) channel time: the compress+decompress pair at the
+    /// machine's codec-engine throughput. Zero for the identity codec —
+    /// compression is a pure (codec-compute, reduced-bytes) trade.
+    pub fn codec_time(&self, codec: CodecKind, raw_bytes: u64) -> f64 {
+        let bw = match codec {
+            CodecKind::Identity => return 0.0,
+            CodecKind::Bf16 => self.machine.bw_codec_bf16,
+            CodecKind::Lossless => self.machine.bw_codec_lossless,
+        };
+        raw_bytes as f64 / bw
     }
 
     /// Fused-kernel service time. `areas[t]` is the number of elements
@@ -203,6 +236,31 @@ mod tests {
         assert!(c.link_time(1 << 30) > c.d2d_time(1 << 30));
         let fast = CostModel::new(MachineSpec::rtx3080().with_d2d_gbps(50.0));
         assert!(fast.link_time(1 << 30) < t1);
+    }
+
+    #[test]
+    fn codec_time_prices_the_compression_trade() {
+        let c = cm();
+        let raw = 1u64 << 30;
+        assert_eq!(c.codec_time(CodecKind::Identity, raw), 0.0);
+        // Lossless does more work per byte than the bf16 pack.
+        assert!(c.codec_time(CodecKind::Lossless, raw) > c.codec_time(CodecKind::Bf16, raw));
+        // At the modeled PCIe 3.0 bandwidth, bf16's halved wire plus its
+        // codec term beats the raw transfer (the companion papers'
+        // premise) ...
+        let bf16 = c.htod_time(CodecKind::Bf16.model_wire_bytes(raw))
+            + c.codec_time(CodecKind::Bf16, raw);
+        assert!(bf16 < c.htod_time(raw));
+        // ... and a fast enough link flips the trade for the lossless
+        // codec: its modest ratio stops paying for the codec pass.
+        let fast = CostModel::new(MachineSpec::rtx3080().with_pcie_gbps(64.0));
+        let lossless_fast = fast.htod_time(CodecKind::Lossless.model_wire_bytes(raw))
+            + fast.codec_time(CodecKind::Lossless, raw);
+        assert!(lossless_fast > fast.htod_time(raw), "crossover must exist");
+        let slow = CostModel::new(MachineSpec::rtx3080().with_pcie_gbps(4.0));
+        let lossless_slow = slow.htod_time(CodecKind::Lossless.model_wire_bytes(raw))
+            + slow.codec_time(CodecKind::Lossless, raw);
+        assert!(lossless_slow < slow.htod_time(raw));
     }
 
     #[test]

@@ -39,10 +39,15 @@ pub struct SimReport {
     /// device of the link.
     pub busy_dev: HashMap<(usize, OpKind), f64>,
     pub op_counts: HashMap<OpKind, usize>,
-    /// Total payload bytes simulated per category (kernels contribute 0).
+    /// Total *wire* bytes simulated per category (kernels contribute 0):
+    /// what actually crossed the channel after each op's transfer codec.
     /// This is what lets figures and tests compare staged vs resident
     /// host-transfer totals without re-walking the op graph.
     pub bytes: HashMap<OpKind, u64>,
+    /// Total uncompressed payload bytes per category — equal to `bytes`
+    /// when every op carries the identity codec; the gap is what the
+    /// codecs saved.
+    pub raw_bytes: HashMap<OpKind, u64>,
     /// Peak memory occupancy of the most-loaded device (bytes).
     pub peak_dmem: u64,
     /// Peak memory occupancy per device (bytes).
@@ -66,9 +71,14 @@ impl SimReport {
         self.op_counts.get(&k).copied().unwrap_or(0)
     }
 
-    /// Total simulated payload bytes of one category.
+    /// Total simulated wire bytes of one category.
     pub fn bytes_of(&self, k: OpKind) -> u64 {
         self.bytes.get(&k).copied().unwrap_or(0)
+    }
+
+    /// Total uncompressed payload bytes of one category.
+    pub fn raw_bytes_of(&self, k: OpKind) -> u64 {
+        self.raw_bytes.get(&k).copied().unwrap_or(0)
     }
 
     /// Number of devices that appeared in the replayed op graph.
@@ -160,12 +170,20 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
                 if used >= slots_of(op.kind) {
                     break;
                 }
-                // Start it.
+                // Start it. Transfers occupy their channel for the
+                // codec-reduced wire size plus the codec engine's pass
+                // over the raw payload (zero under identity).
                 let mut dur = match op.kind {
-                    OpKind::HtoD => cost.htod_time(op.bytes),
-                    OpKind::DtoH => cost.dtoh_time(op.bytes),
+                    OpKind::HtoD => {
+                        cost.htod_time(op.bytes) + cost.codec_time(op.codec, op.raw_bytes)
+                    }
+                    OpKind::DtoH => {
+                        cost.dtoh_time(op.bytes) + cost.codec_time(op.codec, op.raw_bytes)
+                    }
                     OpKind::D2D => cost.d2d_time(op.bytes),
-                    OpKind::P2p => cost.link_time(op.bytes),
+                    OpKind::P2p => {
+                        cost.link_time(op.bytes) + cost.codec_time(op.codec, op.raw_bytes)
+                    }
                     OpKind::Kernel => cost.kernel_time(op.stencil, &op.areas),
                 };
                 if op.kind == OpKind::Kernel && used >= 1 {
@@ -179,6 +197,7 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
                 *report.busy_dev.entry((op.device, op.kind)).or_insert(0.0) += dur;
                 *report.op_counts.entry(op.kind).or_insert(0) += 1;
                 *report.bytes.entry(op.kind).or_insert(0) += op.bytes;
+                *report.raw_bytes.entry(op.kind).or_insert(0) += op.raw_bytes;
                 state[cand] = OpState::Running { end: now + dur };
                 running.push(cand);
                 any = true;

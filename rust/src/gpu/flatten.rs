@@ -35,6 +35,7 @@ use crate::chunking::plan::{phase_a_len, ChunkOp, EpochPlan, Scheme};
 use crate::chunking::Decomposition;
 use crate::core::RowSpan;
 use crate::stencil::StencilKind;
+use crate::transfer::CodecKind;
 use std::collections::HashMap;
 
 /// Operation category for the simulator and the breakdown report.
@@ -78,8 +79,16 @@ pub struct SimOp {
     /// Device whose memory `alloc_delta`/`free_delta` apply to (for
     /// `P2p`: the destination device, which receives the region copy).
     pub mem_device: usize,
-    /// Transfer/copy payload (bytes); 0 for kernels.
+    /// Bytes actually crossing the op's channel — the codec's modeled
+    /// wire size ([`CodecKind::model_wire_bytes`]); equals `raw_bytes`
+    /// under the identity codec. 0 for kernels.
     pub bytes: u64,
+    /// Uncompressed payload bytes (the logical transfer volume the
+    /// codec engine processes); 0 for kernels.
+    pub raw_bytes: u64,
+    /// Transfer codec the payload crosses the channel under (identity
+    /// for kernels and on-device sharing copies).
+    pub codec: CodecKind,
     /// Kernel fused-step areas (elements); empty for copies.
     pub areas: Vec<u64>,
     pub stencil: StencilKind,
@@ -190,12 +199,12 @@ pub fn flatten_run(
                 let id = ops.len();
                 let last_of_chunk = oi + 1 == n_ops;
                 let first_of_chunk = !prev_op_of_chunk.contains_key(&cp.chunk);
-                let (kind_s, bytes, areas, mut deps) = match op {
+                let (kind_s, raw_bytes, codec, areas, mut deps) = match op {
                     // A kept chunk's arrival is free: no transfer, no op.
                     // Its stream simply continues from the previous
                     // epoch's last kernel.
                     ChunkOp::Resident { .. } => continue,
-                    ChunkOp::HtoD { span } => {
+                    ChunkOp::HtoD { span, codec } => {
                         // Wait for overlapping previous-epoch DtoH (for a
                         // resident re-fetch that is the chunk's own Evict,
                         // whose span matches exactly).
@@ -204,35 +213,47 @@ pub fn flatten_run(
                             .filter(|(s, _)| s.overlaps(span))
                             .map(|&(_, id)| id)
                             .collect();
-                        (OpKind::HtoD, span.len() as u64 * row_bytes, vec![], deps)
+                        (OpKind::HtoD, span.len() as u64 * row_bytes, *codec, vec![], deps)
                     }
-                    ChunkOp::DtoH { span } => {
+                    ChunkOp::DtoH { span, codec } => {
                         this_dtoh.push((*span, id));
-                        (OpKind::DtoH, span.len() as u64 * row_bytes, vec![], vec![])
+                        (OpKind::DtoH, span.len() as u64 * row_bytes, *codec, vec![], vec![])
                     }
-                    ChunkOp::Evict { span } => {
+                    ChunkOp::Evict { span, codec } => {
                         // A capacity spill is a real DtoH on the PCIe
                         // channel; it also releases the arena (below).
                         this_dtoh.push((*span, id));
-                        (OpKind::DtoH, span.len() as u64 * row_bytes, vec![], vec![])
+                        (OpKind::DtoH, span.len() as u64 * row_bytes, *codec, vec![], vec![])
                     }
                     ChunkOp::RsWrite(r) => {
                         rs_writers.insert((e, r.span.lo, r.span.hi, r.time_step), id);
-                        (OpKind::D2D, r.span.len() as u64 * row_bytes, vec![], vec![])
+                        (
+                            OpKind::D2D,
+                            r.span.len() as u64 * row_bytes,
+                            CodecKind::Identity,
+                            vec![],
+                            vec![],
+                        )
                     }
-                    ChunkOp::D2D { span, time_step, .. } => {
+                    ChunkOp::D2D { span, time_step, codec, .. } => {
                         // The link transfer becomes the region's provider:
                         // the consumer on the other device must wait for
                         // it, not for the source-side write.
                         rs_writers.insert((e, span.lo, span.hi, *time_step), id);
-                        (OpKind::P2p, span.len() as u64 * row_bytes, vec![], vec![])
+                        (OpKind::P2p, span.len() as u64 * row_bytes, *codec, vec![], vec![])
                     }
                     ChunkOp::RsRead(r) | ChunkOp::Fetch(r) => {
                         let deps = rs_writers
                             .get(&(e, r.span.lo, r.span.hi, r.time_step))
                             .map(|&w| vec![w])
                             .unwrap_or_default();
-                        (OpKind::D2D, r.span.len() as u64 * row_bytes, vec![], deps)
+                        (
+                            OpKind::D2D,
+                            r.span.len() as u64 * row_bytes,
+                            CodecKind::Identity,
+                            vec![],
+                            deps,
+                        )
                     }
                     ChunkOp::Kernel(inv) => {
                         let areas: Vec<u64> = inv
@@ -240,9 +261,13 @@ pub fn flatten_run(
                             .iter()
                             .map(|w| (w.len() * (cols - 2 * dc.radius())) as u64)
                             .collect();
-                        (OpKind::Kernel, 0, areas, vec![])
+                        (OpKind::Kernel, 0, CodecKind::Identity, areas, vec![])
                     }
                 };
+                // Channel occupancy is the codec's modeled wire size;
+                // memory deltas below stay raw-based (regions land
+                // decompressed on the device).
+                let bytes = codec.model_wire_bytes(raw_bytes);
                 // Stream FIFO: depend on the previous op of this chunk
                 // (cross-chunk same-stream ordering is enforced by the
                 // DES stream queues; the explicit edge keeps intra-chunk
@@ -281,6 +306,8 @@ pub fn flatten_run(
                     resource,
                     mem_device,
                     bytes,
+                    raw_bytes,
+                    codec,
                     areas,
                     stencil: kind,
                     deps,
@@ -451,6 +478,72 @@ mod device_tests {
         links.dedup();
         // Three device boundaries, all flowing low -> high device.
         assert_eq!(links.len(), 3);
+    }
+}
+
+#[cfg(test)]
+mod codec_tests {
+    use super::*;
+    use crate::chunking::plan::{apply_codec_policy, plan_run_devices};
+    use crate::chunking::DeviceAssignment;
+    use crate::coordinator::{HostBackend, PlanExecutor};
+    use crate::stencil::NaiveEngine;
+    use crate::transfer::CompressMode;
+
+    fn setup(mode: CompressMode) -> Vec<SimOp> {
+        let dc = Decomposition::new(240, 64, 4, 1);
+        let devs = DeviceAssignment::contiguous(4, 2);
+        let mut plans = plan_run_devices(Scheme::So2dr, &dc, &devs, 12, 6, 2);
+        apply_codec_policy(&mut plans, &dc, mode);
+        let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+        flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows)
+    }
+
+    #[test]
+    fn identity_plans_have_wire_equal_raw() {
+        for op in setup(CompressMode::Off) {
+            assert_eq!(op.codec, CodecKind::Identity);
+            assert_eq!(op.bytes, op.raw_bytes);
+        }
+    }
+
+    #[test]
+    fn bf16_halves_host_wire_but_not_memory_deltas() {
+        let off = setup(CompressMode::Off);
+        let bf16 = setup(CompressMode::Bf16);
+        assert_eq!(off.len(), bf16.len());
+        for (a, b) in off.iter().zip(&bf16) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.raw_bytes, b.raw_bytes, "raw volume is codec-independent");
+            match b.kind {
+                OpKind::HtoD | OpKind::DtoH => {
+                    assert_eq!(b.codec, CodecKind::Bf16);
+                    assert_eq!(b.bytes * 2, b.raw_bytes);
+                }
+                OpKind::P2p => {
+                    assert_eq!(b.codec, CodecKind::Identity, "link never quantizes");
+                    assert_eq!(b.bytes, b.raw_bytes);
+                }
+                _ => assert_eq!(b.bytes, a.bytes),
+            }
+            // Device memory holds decompressed regions either way.
+            assert_eq!(a.alloc_delta, b.alloc_delta);
+            assert_eq!(a.free_delta, b.free_delta);
+        }
+    }
+
+    #[test]
+    fn lossless_wire_never_exceeds_raw() {
+        let ops = setup(CompressMode::Lossless);
+        let mut compressed = 0;
+        for op in &ops {
+            assert!(op.bytes <= op.raw_bytes, "op {}: {} > {}", op.id, op.bytes, op.raw_bytes);
+            if op.codec == CodecKind::Lossless {
+                compressed += 1;
+                assert!(op.bytes < op.raw_bytes);
+            }
+        }
+        assert!(compressed > 0, "policy must tag transfers");
     }
 }
 

@@ -48,6 +48,35 @@
 //!        (`ResidencySummary::fits`), the DES never trips
 //!        `capacity_exceeded` (conservative demand model in
 //!        [`chunking::DeviceAssignment::resident_memory_demand`]).
+//!   - **Transfer compression** (`--compress {off,bf16,lossless,auto}`):
+//!     every plan-IR transfer op (`HtoD`/`DtoH`/`Evict`/`D2D`) carries a
+//!     [`transfer::CodecKind`] chosen by the policy post-pass
+//!     ([`chunking::plan::apply_codec_policy`]); the real-numerics
+//!     executor round-trips payloads through the tagged codec and the
+//!     DES prices the (codec-compute, reduced-wire-bytes) trade.
+//!     Codec invariants the suites enforce:
+//!     1. *lossless = bit-exact*: a codec with
+//!        [`transfer::CodecKind::is_lossless`] reproduces every payload
+//!        bit-for-bit (NaN payloads, signed zeros included), so the
+//!        `lossless`/`auto` policies preserve the bit-exactness
+//!        invariant above end to end — enforced by the randomized
+//!        differential suite across schemes × devices × residency;
+//!     2. *lossy = bounded*: the `bf16` policy's drift on the linear box
+//!        stencils is bounded by the measured per-transfer round-trip
+//!        error ([`transfer::max_roundtrip_error`]) times the host round
+//!        trips (2 per staged epoch) — convex stencil weights cannot
+//!        amplify injected error; lossy codecs are never applied to
+//!        inter-device halo hops (re-published every epoch, error would
+//!        compound);
+//!     3. *wire ≤ raw*: modeled and executed wire bytes never exceed the
+//!        raw payload on any channel, and raw byte totals are
+//!        codec-independent (device memory always holds decompressed
+//!        regions — codecs shrink channels, not arenas);
+//!     4. *the trade is priced, not assumed*: the DES charges each
+//!        compressed transfer its wire-sized channel time plus the raw
+//!        payload over the machine's codec-engine throughput
+//!        (`MachineSpec::bw_codec_*`), so `figures --fig compress` shows
+//!        where compression wins and where a fast link flips the trade.
 //! - **L2 (`python/compile/model.py`):** the fixed-shape chunk program,
 //!   AOT-lowered to HLO text.
 //! - **L1 (`python/compile/kernels/`):** the Pallas multi-step stencil

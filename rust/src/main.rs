@@ -14,12 +14,13 @@ use anyhow::{bail, Context, Result};
 use so2dr::chunking::{ResidencyConfig, ResidentMode, Scheme};
 use so2dr::config::RunConfig;
 use so2dr::coordinator::{
-    reference_run, run_scheme, run_scheme_resident, HostBackend, KernelBackend,
+    reference_run, run_scheme, run_scheme_full, HostBackend, KernelBackend,
 };
 use so2dr::gpu::MachineSpec;
 use so2dr::metrics::emit;
 use so2dr::runtime::PjrtBackend;
 use so2dr::stencil::{NaiveEngine, OptimizedEngine, StencilKind};
+use so2dr::transfer::CompressMode;
 use so2dr::util::{fmt_bytes, fmt_secs, Table};
 use so2dr::Array2;
 use std::collections::HashMap;
@@ -121,6 +122,10 @@ fn config_of(args: &Args) -> Result<RunConfig> {
         cfg.resident = ResidentMode::parse(v)
             .with_context(|| format!("bad --resident {v:?} (off|auto|force)"))?;
     }
+    if let Some(v) = args.get("compress") {
+        cfg.compress = CompressMode::parse(v)
+            .with_context(|| format!("bad --compress {v:?} (off|bf16|lossless|auto)"))?;
+    }
     if cfg.scheme == Scheme::ResReu {
         cfg.k_on = 1;
     }
@@ -169,6 +174,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             "so2dr run [--config f.toml] [--scheme so2dr|resreu|incore] [--kind box2d1r|...|gradient2d]\n\
              \x20         [--sz N | --rows N --cols N] [--d N] [--s-tb N] [--k-on N] [--n N]\n\
              \x20         [--devices N] [--d2d-gbps X] [--resident off|auto|force]\n\
+             \x20         [--compress off|bf16|lossless|auto]\n\
              \x20         [--backend host-naive|host-opt|pjrt] [--no-verify x]"
         );
         return Ok(());
@@ -179,8 +185,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     // (machine_of already applies the --d2d-gbps flag; a config-file
     // override is applied on top without clobbering --machine defaults.)
     // Resident mode always needs the machine: its capacity model caps
-    // the per-device pinned arenas.
-    let pricing_machine = if cfg.devices > 1 || cfg.resident != ResidentMode::Off {
+    // the per-device pinned arenas. Compression prices its codec trade
+    // on the same machine.
+    let pricing_machine = if cfg.devices > 1
+        || cfg.resident != ResidentMode::Off
+        || cfg.compress != CompressMode::Off
+    {
         let mut machine = machine_of(args)?;
         if let Some(gbps) = cfg.d2d_gbps {
             machine = machine.with_d2d_gbps(gbps);
@@ -201,7 +211,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let initial = Array2::synthetic(cfg.rows, cfg.cols, cfg.seed);
     let mut backend = make_backend(&cfg)?;
     let t0 = std::time::Instant::now();
-    let out = run_scheme_resident(
+    let out = run_scheme_full(
         cfg.scheme,
         &initial,
         cfg.kind,
@@ -212,6 +222,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.k_on,
         backend.as_mut(),
         &resident_cfg,
+        cfg.compress,
     )?;
     let wall = t0.elapsed().as_secs_f64();
     let s = &out.stats;
@@ -231,33 +242,30 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(summary) = &out.residency {
         println!("{}", so2dr::metrics::residency_line(summary, s));
     }
+    if cfg.compress != CompressMode::Off {
+        println!("{}", so2dr::metrics::compression_line(s));
+    }
     if let Some(machine) = pricing_machine {
         // Price the executed schedule on the machine model so --devices /
-        // --d2d-gbps / --resident show their performance effect next to
-        // the real run.
+        // --d2d-gbps / --resident / --compress show their performance
+        // effect next to the real run.
         let link_gbps = machine.bw_link / 1e9;
-        let rep = if cfg.resident == ResidentMode::Off {
-            so2dr::figures::simulate_grid_devices(
-                &machine, cfg.scheme, cfg.kind, cfg.rows, cfg.cols, cfg.d, cfg.devices,
-                cfg.s_tb, cfg.k_on, cfg.n, cfg.n_strm,
-            )
-        } else {
-            so2dr::figures::simulate_resident_grid_devices(
-                &machine,
-                cfg.scheme,
-                cfg.kind,
-                cfg.rows,
-                cfg.cols,
-                cfg.d,
-                cfg.devices,
-                cfg.s_tb,
-                cfg.k_on,
-                cfg.n,
-                cfg.n_strm,
-                &resident_cfg,
-            )
-            .0
-        };
+        let rep = so2dr::figures::simulate_compressed_grid_devices(
+            &machine,
+            cfg.scheme,
+            cfg.kind,
+            cfg.rows,
+            cfg.cols,
+            cfg.d,
+            cfg.devices,
+            cfg.s_tb,
+            cfg.k_on,
+            cfg.n,
+            cfg.n_strm,
+            &resident_cfg,
+            cfg.compress,
+        )
+        .0;
         println!(
             "modeled makespan on {} simulated GPUs (link {link_gbps:.1} GB/s): {}  (P2P busy {})",
             cfg.devices,
@@ -272,13 +280,40 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.get("no-verify").is_none() {
         let reference = reference_run(&initial, cfg.kind, cfg.n, &NaiveEngine);
         let diff = out.grid.max_abs_diff(&reference);
-        let ok = if cfg.backend == "host-naive" { diff == 0.0 } else { diff < 1e-4 };
-        println!(
-            "verify vs reference: max|diff| = {diff:.2e} -> {}",
-            if ok { "OK" } else { "FAIL" }
-        );
-        if !ok {
-            bail!("verification failed");
+        if cfg.compress == CompressMode::Bf16 {
+            // Lossy codec: bit-exactness is off the table by design. For
+            // the linear box stencils (convex weights, non-amplifying)
+            // the drift is bounded by the per-transfer round-trip error
+            // times the host round trips (2 per epoch), with margin; the
+            // nonlinear gradient2d benchmark has no such closed bound.
+            if matches!(cfg.kind, StencilKind::Box { .. }) {
+                let epochs = cfg.n.div_ceil(cfg.s_tb) as f32;
+                let bound =
+                    4.0 * 2.0 * epochs * so2dr::transfer::max_roundtrip_error(&initial);
+                let ok = diff <= bound;
+                println!(
+                    "verify vs reference (bf16 bound {bound:.2e}): max|diff| = {diff:.2e} -> {}",
+                    if ok { "OK" } else { "FAIL" }
+                );
+                if !ok {
+                    bail!("verification failed");
+                }
+            } else {
+                println!(
+                    "verify vs reference: max|diff| = {diff:.2e} -> SKIPPED \
+                     (lossy codec on a nonlinear stencil has no closed error bound; \
+                     use --compress lossless for bit-exact verification)"
+                );
+            }
+        } else {
+            let ok = if cfg.backend == "host-naive" { diff == 0.0 } else { diff < 1e-4 };
+            println!(
+                "verify vs reference: max|diff| = {diff:.2e} -> {}",
+                if ok { "OK" } else { "FAIL" }
+            );
+            if !ok {
+                bail!("verification failed");
+            }
         }
     }
     Ok(())
@@ -359,7 +394,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     if args.help() {
         println!(
             "so2dr simulate [--scheme S] [--kind K] [--sz N] [--d N] [--devices N] [--d2d-gbps X]\n\
-             \x20              [--s-tb N] [--k-on N] [--n N] [--machine M] [--resident off|auto|force]"
+             \x20              [--s-tb N] [--k-on N] [--n N] [--machine M] [--resident off|auto|force]\n\
+             \x20              [--compress off|bf16|lossless|auto]"
         );
         return Ok(());
     }
@@ -375,6 +411,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let n = args.usize_or("n", so2dr::figures::N_STEPS)?;
     let resident = ResidentMode::parse(args.get("resident").unwrap_or("off"))
         .context("bad --resident (off|auto|force)")?;
+    let compress = CompressMode::parse(args.get("compress").unwrap_or("off"))
+        .context("bad --compress (off|bf16|lossless|auto)")?;
     if scheme != Scheme::InCore {
         // Pre-flight the §IV-C constraints per shard (the DES reports the
         // observed peak below; this is the check the autotuner applies).
@@ -390,52 +428,65 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             other => println!("note: §IV-C heuristic flags this configuration: {other:?}"),
         }
     }
-    let rep = match resident {
-        ResidentMode::Off => so2dr::figures::simulate_config_devices(
-            &machine, scheme, kind, sz, d, devices, s_tb, k_on, n,
-        ),
-        mode => {
-            let resident_cfg = match mode {
-                ResidentMode::Force => ResidencyConfig::force(so2dr::figures::N_STRM),
-                _ => ResidencyConfig::auto(machine.c_dmem, so2dr::figures::N_STRM),
-            };
-            let staged = so2dr::figures::simulate_config_devices(
-                &machine, scheme, kind, sz, d, devices, s_tb, k_on, n,
-            );
-            let (rep, summary) = so2dr::figures::simulate_resident_grid_devices(
-                &machine,
-                scheme,
-                kind,
-                sz,
-                sz,
-                d,
-                devices,
-                s_tb,
-                k_on,
-                n,
-                so2dr::figures::N_STRM,
-                &resident_cfg,
-            );
-            let kept = summary.kept.iter().filter(|&&k| k).count();
-            println!(
-                "residency: kept {kept}/{} chunks  HtoD {} (staged {})  spills {}  fits: {}",
-                summary.kept.len(),
-                fmt_bytes(rep.bytes_of(so2dr::gpu::OpKind::HtoD)),
-                fmt_bytes(staged.bytes_of(so2dr::gpu::OpKind::HtoD)),
-                summary.planned_spills,
-                summary.fits,
-            );
-            rep
-        }
+    let resident_cfg = match resident {
+        ResidentMode::Off => ResidencyConfig::off(),
+        ResidentMode::Force => ResidencyConfig::force(so2dr::figures::N_STRM),
+        ResidentMode::Auto => ResidencyConfig::auto(machine.c_dmem, so2dr::figures::N_STRM),
     };
+    let (rep, summary) = so2dr::figures::simulate_compressed_grid_devices(
+        &machine,
+        scheme,
+        kind,
+        sz,
+        sz,
+        d,
+        devices,
+        s_tb,
+        k_on,
+        n,
+        so2dr::figures::N_STRM,
+        &resident_cfg,
+        compress,
+    );
+    if resident != ResidentMode::Off {
+        let staged = so2dr::figures::simulate_config_devices(
+            &machine, scheme, kind, sz, d, devices, s_tb, k_on, n,
+        );
+        let kept = summary.kept.iter().filter(|&&k| k).count();
+        // Raw (pre-codec) bytes on both sides: the residency line reports
+        // what *residency* saved; codec savings get their own line below.
+        println!(
+            "residency: kept {kept}/{} chunks  HtoD {} (staged {})  spills {}  fits: {}",
+            summary.kept.len(),
+            fmt_bytes(rep.raw_bytes_of(so2dr::gpu::OpKind::HtoD)),
+            fmt_bytes(staged.raw_bytes_of(so2dr::gpu::OpKind::HtoD)),
+            summary.planned_spills,
+            summary.fits,
+        );
+    }
+    if compress != CompressMode::Off {
+        let raw = rep.raw_bytes_of(so2dr::gpu::OpKind::HtoD)
+            + rep.raw_bytes_of(so2dr::gpu::OpKind::DtoH)
+            + rep.raw_bytes_of(so2dr::gpu::OpKind::P2p);
+        let wire = rep.bytes_of(so2dr::gpu::OpKind::HtoD)
+            + rep.bytes_of(so2dr::gpu::OpKind::DtoH)
+            + rep.bytes_of(so2dr::gpu::OpKind::P2p);
+        println!(
+            "compression: transfers {} raw -> {} on the wire (modeled ratio {:.2}x)",
+            fmt_bytes(raw),
+            fmt_bytes(wire),
+            raw as f64 / wire.max(1) as f64,
+        );
+    }
     print!(
         "{}",
         so2dr::metrics::breakdown_table(&[(
             format!(
-                "{} {} d={d} devs={devices} S_TB={s_tb} resident={}",
+                "{} {} d={d} devs={devices} S_TB={s_tb} resident={} compress={}",
                 scheme.name(),
                 kind.name(),
-                resident.name()
+                resident.name(),
+                compress.name()
             ),
             &rep
         )])
@@ -454,7 +505,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 fn cmd_figures(args: &Args) -> Result<()> {
     if args.help() {
         println!(
-            "so2dr figures [--fig tables|3b|5|6|7|8|9|10|ablation_kon|scaling|resident|bench_pr2]\n\
+            "so2dr figures [--fig tables|3b|5|6|7|8|9|10|ablation_kon|scaling|resident|compress|bench_pr2]\n\
              \x20             [--machine M]"
         );
         return Ok(());
@@ -510,4 +561,8 @@ peer-to-peer halo exchange; `--d2d-gbps X` sets the link bandwidth.\n\
 Residency: `--resident auto|force` keeps chunks device-resident across\n\
 epochs (HtoD once on first touch, inter-epoch halos refreshed device-to-\n\
 device, capacity victims spilled) instead of staging every epoch through\n\
-the host.\n";
+the host.\n\
+Compression: `--compress bf16|lossless|auto` round-trips host transfers\n\
+through a transfer codec (bf16: 2x lossy-but-bounded; lossless:\n\
+byte-plane, bit-exact; auto: lossless on payloads big enough to pay),\n\
+shrinking wire bytes at the cost of codec compute.\n";

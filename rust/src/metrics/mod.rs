@@ -83,6 +83,39 @@ pub fn residency_line(summary: &ResidencySummary, stats: &ExecStats) -> String {
     )
 }
 
+/// One-line transfer-compression report for `so2dr run`, printed next to
+/// the residency line: per-direction raw vs wire bytes, the achieved
+/// ratio over all compressed channels, and the measured host-side codec
+/// throughput of the run's round trips.
+pub fn compression_line(stats: &ExecStats) -> String {
+    if stats.codec_ops == 0 {
+        return "compression: off (identity codec on every transfer)".into();
+    }
+    let raw = stats.transfer_raw_bytes();
+    let wire = stats.transfer_wire_bytes();
+    let ratio = raw as f64 / wire.max(1) as f64;
+    let gbps = |bytes: u64, secs: f64| {
+        if secs > 0.0 {
+            bytes as f64 / secs / 1e9
+        } else {
+            f64::INFINITY
+        }
+    };
+    format!(
+        "compression: HtoD {} -> {}  DtoH {} -> {}  P2P {} -> {}  (ratio {ratio:.2}x)  \
+         codec: {} round trips, compress {:.2} GB/s, decompress {:.2} GB/s",
+        fmt_bytes(stats.htod_bytes),
+        fmt_bytes(stats.htod_wire_bytes),
+        fmt_bytes(stats.dtoh_bytes),
+        fmt_bytes(stats.dtoh_wire_bytes),
+        fmt_bytes(stats.p2p_bytes),
+        fmt_bytes(stats.p2p_wire_bytes),
+        stats.codec_ops,
+        gbps(stats.codec_raw_bytes, stats.codec_compress_s),
+        gbps(stats.codec_raw_bytes, stats.codec_decompress_s),
+    )
+}
+
 /// Geometric mean of a slice (used for paper-style average speedups the
 /// paper itself reports as arithmetic means; we print both).
 pub fn geomean(xs: &[f64]) -> f64 {
@@ -159,6 +192,27 @@ mod tests {
             planned_htod_bytes: 0,
         };
         assert!(residency_line(&off, &ExecStats::default()).contains("off"));
+    }
+
+    #[test]
+    fn compression_line_reports_ratio_and_throughput() {
+        let stats = ExecStats {
+            htod_bytes: 4096,
+            htod_wire_bytes: 2048,
+            dtoh_bytes: 4096,
+            dtoh_wire_bytes: 2048,
+            p2p_bytes: 1024,
+            p2p_wire_bytes: 1024,
+            codec_ops: 4,
+            codec_raw_bytes: 8192,
+            codec_compress_s: 0.5,
+            codec_decompress_s: 0.25,
+            ..Default::default()
+        };
+        let line = compression_line(&stats);
+        assert!(line.contains("1.80x"), "{line}");
+        assert!(line.contains("4 round trips"), "{line}");
+        assert!(compression_line(&ExecStats::default()).contains("off"));
     }
 
     #[test]

@@ -4,14 +4,24 @@
 use crate::core::Array2;
 
 /// Round-to-nearest-even fp32 → bf16 (upper 16 bits).
+///
+/// Non-finite handling: NaNs keep their sign and as much payload as the
+/// 7-bit bf16 mantissa can carry, with the quiet bit forced so a
+/// payload-only-in-the-low-bits NaN cannot truncate to an infinity;
+/// infinities pass through exactly (the rounding bias below cannot carry
+/// an `0x_FF80_0000` pattern out of the exponent). Finite values that
+/// round past `f32::MAX` overflow to the like-signed infinity — the RNE
+/// carry out of the mantissa lands in the exponent by construction.
 #[inline]
 pub fn f32_to_bf16(x: f32) -> u16 {
     let bits = x.to_bits();
     if x.is_nan() {
-        // Quiet NaN, preserved sign.
+        // Quiet NaN: sign + truncated payload, quiet bit forced.
         return ((bits >> 16) as u16) | 0x0040;
     }
     // RNE: add half ULP of the truncated mantissa plus the sticky lsb.
+    // `bits` is finite or infinite here, so `bits + 0x8000` cannot wrap
+    // (the largest non-NaN pattern is -inf = 0xFF80_0000).
     let rounding_bias = 0x7FFF + ((bits >> 16) & 1);
     ((bits + rounding_bias) >> 16) as u16
 }
@@ -97,6 +107,65 @@ mod tests {
         assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
         assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
         assert_eq!(bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn rne_carry_boundary() {
+        // Mantissa rounding that carries into the exponent: 0x3FFF_FFFF
+        // (just under 2.0) must round UP across the exponent boundary to
+        // exactly 2.0, not truncate to 1.9921875.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3FFF_FFFF)), 0x4000);
+        assert_eq!(bf16_to_f32(0x4000), 2.0);
+        // Tie at the carry boundary with an odd low bit rounds to the
+        // even neighbor in the next binade.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3FFF_8000)), 0x4000);
+        // f32::MAX rounds past the largest finite bf16 to +inf; the
+        // negative twin to -inf (RNE overflow semantics).
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::MAX)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(f32_to_bf16(-f32::MAX)), f32::NEG_INFINITY);
+        // The largest value that still rounds to a finite bf16.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x7F7F_7FFF)), 0x7F7F);
+    }
+
+    #[test]
+    fn nan_payload_and_sign_preservation() {
+        // Payload in the high mantissa bits survives truncation; the
+        // quiet bit is forced either way.
+        let q = f32_to_bf16(f32::from_bits(0x7FC1_2345));
+        assert_eq!(q, 0x7FC1);
+        // A signaling NaN whose payload lives only in the low 16 bits
+        // must stay a NaN (quiet bit forced), not become an infinity.
+        let s = f32_to_bf16(f32::from_bits(0x7F80_0001));
+        assert_eq!(s, 0x7FC0);
+        assert!(bf16_to_f32(s).is_nan());
+        // Sign of a NaN survives.
+        let neg = f32_to_bf16(f32::from_bits(0xFFC0_0001));
+        assert!(bf16_to_f32(neg).is_nan());
+        assert_eq!(neg & 0x8000, 0x8000);
+    }
+
+    #[test]
+    fn zeros_and_subnormals_keep_their_sign() {
+        assert_eq!(f32_to_bf16(0.0), 0x0000);
+        assert_eq!(f32_to_bf16(-0.0), 0x8000);
+        // f32 subnormals flush toward a signed zero / smallest bf16
+        // subnormal without disturbing the sign bit.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x0000_0001)), 0x0000);
+        assert_eq!(f32_to_bf16(f32::from_bits(0x8000_0001)), 0x8000);
+    }
+
+    #[test]
+    fn slab_roundtrip_preserves_nonfinite_payloads() {
+        // compress_rows/decompress_rows must carry non-finite values
+        // through the packed representation, element-aligned.
+        let data = [1.0f32, f32::NAN, f32::INFINITY, -2.5, f32::NEG_INFINITY, -0.0];
+        let back = decompress_rows(&compress_rows(&data));
+        assert_eq!(back.len(), data.len());
+        assert!(back[1].is_nan());
+        assert_eq!(back[2], f32::INFINITY);
+        assert_eq!(back[4], f32::NEG_INFINITY);
+        assert_eq!(back[5].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(back[0], 1.0);
     }
 
     #[test]

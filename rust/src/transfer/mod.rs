@@ -2,11 +2,17 @@
 //! al. — the paper notes compression "can be leveraged in combination
 //! with ours" to further cut interconnect traffic).
 //!
-//! Implements a real bf16 truncation codec (fp32 → upper 16 bits, round
-//! to nearest even) halving every HtoD/DtoH payload, plus a machine-model
-//! hook so the DES can price compressed transfers — a what-if study the
-//! combined system would enable.
+//! [`codec`] is the pluggable subsystem both interpreters share: a
+//! [`Codec`] trait with identity, bf16-truncation and lossless
+//! byte-plane implementations, plus the [`CompressMode`] planner policy
+//! that tags plan-IR transfer ops with a [`CodecKind`]. The
+//! real-numerics executor round-trips payloads through the selected
+//! codec (lossless stays bit-exact, bf16 stays within the round-trip
+//! bound); the DES prices compressed transfers as a
+//! (codec-throughput, reduced-bytes) trade.
 
 pub mod bf16;
+pub mod codec;
 
 pub use bf16::{compress_rows, decompress_rows, max_roundtrip_error, Bf16Codec};
+pub use codec::{Codec, CodecKind, CompressMode};

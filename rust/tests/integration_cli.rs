@@ -73,6 +73,72 @@ fn run_rejects_bad_resident_mode() {
 }
 
 #[test]
+fn run_lossless_compression_verifies_bit_exact_and_reports_ratio() {
+    let (ok, text) = run(&[
+        "run", "--scheme", "so2dr", "--kind", "box2d1r", "--sz", "128", "--d", "4", "--s-tb",
+        "4", "--k-on", "2", "--n", "12", "--compress", "lossless", "--backend", "host-naive",
+    ]);
+    assert!(ok, "{text}");
+    // Lossless keeps the strict bit-exact verification path.
+    assert!(text.contains("max|diff| = 0.00e0") || text.contains("OK"), "{text}");
+    assert!(text.contains("compression:"), "{text}");
+    assert!(text.contains("round trips"), "{text}");
+    assert!(text.contains("compress=lossless"), "{text}");
+}
+
+#[test]
+fn run_bf16_compression_verifies_within_bound() {
+    let (ok, text) = run(&[
+        "run", "--scheme", "so2dr", "--kind", "box2d1r", "--sz", "128", "--d", "4", "--s-tb",
+        "4", "--k-on", "2", "--n", "8", "--compress", "bf16", "--backend", "host-naive",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("bf16 bound"), "{text}");
+    assert!(text.contains("OK"), "{text}");
+}
+
+#[test]
+fn run_rejects_bad_compress_mode() {
+    let (ok, text) = run(&["run", "--compress", "zstd"]);
+    assert!(!ok);
+    assert!(text.contains("compress"), "{text}");
+}
+
+#[test]
+fn run_compression_stacks_with_residency_and_devices() {
+    let (ok, text) = run(&[
+        "run", "--scheme", "so2dr", "--kind", "box2d1r", "--sz", "256", "--d", "8",
+        "--devices", "4", "--s-tb", "4", "--k-on", "2", "--n", "12", "--resident", "force",
+        "--compress", "lossless", "--backend", "host-naive",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("residency: kept 8/8"), "{text}");
+    assert!(text.contains("compression:"), "{text}");
+    assert!(text.contains("OK"), "{text}");
+}
+
+#[test]
+fn simulate_compressed_reports_wire_savings() {
+    let (ok, text) = run(&[
+        "simulate", "--scheme", "so2dr", "--kind", "box2d1r", "--d", "4", "--s-tb", "160",
+        "--n", "640", "--compress", "bf16",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("compression: transfers"), "{text}");
+    assert!(text.contains("2.00x"), "{text}");
+    assert!(text.contains("compress=bf16"), "{text}");
+}
+
+#[test]
+fn figures_compress_emits_crossover_table() {
+    let (ok, text) = run(&["figures", "--fig", "compress"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Transfer compression"), "{text}");
+    assert!(text.contains("crossover:"), "{text}");
+    assert!(text.contains("stacking"), "{text}");
+}
+
+#[test]
 fn simulate_resident_reports_pinning() {
     let (ok, text) = run(&[
         "simulate", "--scheme", "so2dr", "--kind", "box2d1r", "--d", "4", "--devices", "4",

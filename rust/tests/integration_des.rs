@@ -5,13 +5,14 @@
 //! more simulated GPUs never slows it down, and hits the strong-scaling
 //! target at paper scale).
 
-use so2dr::chunking::plan::{plan_run_devices, plan_run_resident, Scheme};
+use so2dr::chunking::plan::{apply_codec_policy, plan_run_devices, plan_run_resident, Scheme};
 use so2dr::chunking::{Decomposition, DeviceAssignment, ResidencyConfig, ResidencySummary};
 use so2dr::coordinator::{HostBackend, PlanExecutor};
 use so2dr::gpu::cost::{CostModel, MachineSpec};
 use so2dr::gpu::des::{simulate, SimReport};
 use so2dr::gpu::flatten::{flatten_run, OpKind, SimOp};
 use so2dr::stencil::{NaiveEngine, StencilKind};
+use so2dr::transfer::CompressMode;
 use so2dr::util::XorShift64;
 use std::collections::HashMap;
 
@@ -327,6 +328,133 @@ fn four_device_resident_cuts_htod_by_the_epoch_count() {
     assert!(!rep.capacity_exceeded);
     // And it pays off end to end (tolerance for scheduling noise).
     assert!(rep.makespan <= staged.makespan * 1.005);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn flatten_compressed_paper(
+    scheme: Scheme,
+    d: usize,
+    devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    n: usize,
+    resident: &ResidencyConfig,
+    compress: CompressMode,
+) -> Vec<SimOp> {
+    let dc = Decomposition::new(38400, 38400, d, 1);
+    let devs = DeviceAssignment::contiguous(d, devices);
+    let (mut plans, _) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, resident);
+    apply_codec_policy(&mut plans, &dc, compress);
+    let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+    flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, N_STRM, buf_rows)
+}
+
+/// Codec invariants on the DES: compressed HtoD wire bytes never exceed
+/// the raw volume (which itself is codec-independent), and with ample
+/// codec throughput the makespan cannot regress — compression only
+/// sheds channel bytes. Checked under every policy × staged/resident ×
+/// device counts.
+#[test]
+fn compressed_htod_bytes_never_exceed_raw() {
+    let machine = MachineSpec::rtx3080();
+    for compress in [CompressMode::Bf16, CompressMode::Lossless, CompressMode::Auto] {
+        for (scheme, k_on) in [(Scheme::So2dr, 4), (Scheme::ResReu, 1)] {
+            for devices in [1usize, 4] {
+                for resident in [ResidencyConfig::off(), ResidencyConfig::force(N_STRM)] {
+                    let raw_rep = sim(
+                        &flatten_compressed_paper(
+                            scheme, 8, devices, 40, k_on, 80, &resident, CompressMode::Off,
+                        ),
+                        machine.clone(),
+                    );
+                    let rep = sim(
+                        &flatten_compressed_paper(
+                            scheme, 8, devices, 40, k_on, 80, &resident, compress,
+                        ),
+                        machine.clone(),
+                    );
+                    for kind in [OpKind::HtoD, OpKind::DtoH, OpKind::P2p] {
+                        assert_eq!(
+                            rep.raw_bytes_of(kind),
+                            raw_rep.raw_bytes_of(kind),
+                            "{:?} {kind:?}: raw volume must be codec-independent",
+                            compress
+                        );
+                        assert!(
+                            rep.bytes_of(kind) <= rep.raw_bytes_of(kind),
+                            "{:?} {:?} {devices}dev {kind:?}: wire {} > raw {}",
+                            compress,
+                            scheme.name(),
+                            rep.bytes_of(kind),
+                            rep.raw_bytes_of(kind)
+                        );
+                    }
+                    // Paper-scale payloads are far over the auto
+                    // threshold: host wire volume strictly shrinks.
+                    assert!(
+                        rep.bytes_of(OpKind::HtoD) < rep.raw_bytes_of(OpKind::HtoD),
+                        "{compress:?} must compress host transfers"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn compression_does_not_regress_makespan_when_codec_throughput_is_ample() {
+    // An effectively free codec engine isolates the wire-byte win.
+    let mut ample = MachineSpec::rtx3080();
+    ample.bw_codec_bf16 = 1e15;
+    ample.bw_codec_lossless = 1e15;
+    for compress in [CompressMode::Bf16, CompressMode::Lossless] {
+        for devices in [1usize, 4] {
+            for resident in [ResidencyConfig::off(), ResidencyConfig::force(N_STRM)] {
+                let off = sim(
+                    &flatten_compressed_paper(
+                        Scheme::So2dr, 8, devices, 40, 4, 120, &resident, CompressMode::Off,
+                    ),
+                    ample.clone(),
+                )
+                .makespan;
+                let on = sim(
+                    &flatten_compressed_paper(
+                        Scheme::So2dr, 8, devices, 40, 4, 120, &resident, compress,
+                    ),
+                    ample.clone(),
+                )
+                .makespan;
+                assert!(
+                    on <= off * 1.001,
+                    "{compress:?} on {devices} devices (resident {:?}): {on} vs {off}",
+                    resident.mode
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn slow_codec_engine_makes_compression_lose() {
+    // The trade is real: a pathologically slow codec engine must cost
+    // more than it saves, and the DES must show it.
+    let mut slow = MachineSpec::rtx3080();
+    slow.bw_codec_lossless = 1.0e9; // 1 GB/s: slower than the link itself
+    let off = sim(
+        &flatten_compressed_paper(
+            Scheme::So2dr, 8, 1, 40, 4, 80, &ResidencyConfig::off(), CompressMode::Off,
+        ),
+        slow.clone(),
+    )
+    .makespan;
+    let on = sim(
+        &flatten_compressed_paper(
+            Scheme::So2dr, 8, 1, 40, 4, 80, &ResidencyConfig::off(), CompressMode::Lossless,
+        ),
+        slow,
+    )
+    .makespan;
+    assert!(on > off, "a 1 GB/s codec cannot win: {on} vs {off}");
 }
 
 #[test]

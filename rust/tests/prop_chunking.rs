@@ -62,8 +62,8 @@ fn prop_transfers_partition_grid() {
                 let mut covered = vec![0u8; c.rows];
                 for (_, _, op) in plan.iter_ops() {
                     let span = match (dir, op) {
-                        ("htod", ChunkOp::HtoD { span }) => *span,
-                        ("dtoh", ChunkOp::DtoH { span }) => *span,
+                        ("htod", ChunkOp::HtoD { span, .. }) => *span,
+                        ("dtoh", ChunkOp::DtoH { span, .. }) => *span,
                         _ => continue,
                     };
                     for r in span.lo..span.hi {

@@ -10,8 +10,11 @@
 //! replays exactly.
 
 use so2dr::chunking::{ResidencyConfig, Scheme};
-use so2dr::coordinator::{reference_run, run_scheme_on, run_scheme_resident, HostBackend};
+use so2dr::coordinator::{
+    reference_run, run_scheme_full, run_scheme_on, run_scheme_resident, HostBackend,
+};
 use so2dr::stencil::{NaiveEngine, StencilKind};
+use so2dr::transfer::CompressMode;
 use so2dr::util::testkit::{forall, shrink_usize_toward};
 use so2dr::util::XorShift64;
 use so2dr::Array2;
@@ -253,6 +256,112 @@ fn prop_resident_ample_cap_bit_exact_and_pins() {
 fn prop_resident_tight_cap_bit_exact_and_spills() {
     forall(0x4E51D + 1, 120, gen_case, shrink_case, |c| {
         check_resident_case(c, &ResidencyConfig::auto(1, 3), true)
+    });
+}
+
+/// Transfer-compression differential property: `--compress lossless`
+/// round-trips every host transfer (and link hop) through the byte-plane
+/// codec, and must stay bit-exact vs the reference across schemes ×
+/// device counts × resident on/off — the codec contract, proven on the
+/// same randomized configurations as the uncompressed suite. The check
+/// also rejects vacuity: out-of-core runs must actually execute codec
+/// round trips, and their wire volume must differ from raw.
+fn check_lossless_case(c: &Case) -> Result<(), String> {
+    if !c.feasible() {
+        return Ok(());
+    }
+    let kind = c.kind();
+    let seed = (c.rows * 37 + c.cols * 11 + c.n) as u64;
+    let initial = Array2::synthetic(c.rows, c.cols, seed);
+    let reference = reference_run(&initial, kind, c.n, &NaiveEngine);
+    for resident in [ResidencyConfig::off(), ResidencyConfig::force(3)] {
+        for (scheme, k_on, devices) in [
+            (Scheme::So2dr, c.k_on, c.devices),
+            (Scheme::ResReu, 1, c.devices),
+            (Scheme::InCore, c.k_on, 1),
+        ] {
+            let mut backend = HostBackend::new(NaiveEngine);
+            let out = run_scheme_full(
+                scheme,
+                &initial,
+                kind,
+                c.n,
+                c.d,
+                devices,
+                c.s_tb,
+                k_on,
+                &mut backend,
+                &resident,
+                CompressMode::Lossless,
+            )
+            .map_err(|e| format!("{} lossless failed: {e:#}", scheme.name()))?;
+            if !out.grid.bit_eq(&reference) {
+                return Err(format!(
+                    "{} lossless ({:?}) on {devices} device(s) diverged: max |diff| = {}",
+                    scheme.name(),
+                    resident.mode,
+                    out.grid.max_abs_diff(&reference)
+                ));
+            }
+            if scheme != Scheme::InCore {
+                if out.stats.codec_ops == 0 {
+                    return Err(format!("{} lossless ran no codec round trips", scheme.name()));
+                }
+                if out.stats.htod_wire_bytes == out.stats.htod_bytes {
+                    return Err(format!(
+                        "{} lossless left the wire volume untouched",
+                        scheme.name()
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_lossless_compression_bit_exact_across_devices_and_residency() {
+    forall(0xC0DEC, 80, gen_case, shrink_case, |c| check_lossless_case(c));
+}
+
+/// The lossy policy instead honors a quantitative contract on the linear
+/// box stencils: drift bounded by the measured per-transfer round-trip
+/// error times the number of host round trips (2 per staged epoch),
+/// with margin — convex box weights cannot amplify injected error.
+#[test]
+fn prop_bf16_compression_error_bounded_on_box() {
+    forall(0xBF16, 40, gen_case, shrink_case, |c| {
+        if !c.feasible() || c.kind_code == 0 {
+            return Ok(()); // box stencils only: gradient2d is nonlinear
+        }
+        let kind = c.kind();
+        let initial = Array2::synthetic(c.rows, c.cols, (c.rows * 7 + c.n) as u64);
+        let reference = reference_run(&initial, kind, c.n, &NaiveEngine);
+        let mut backend = HostBackend::new(NaiveEngine);
+        let out = run_scheme_full(
+            Scheme::So2dr,
+            &initial,
+            kind,
+            c.n,
+            c.d,
+            c.devices,
+            c.s_tb,
+            c.k_on,
+            &mut backend,
+            &ResidencyConfig::off(),
+            CompressMode::Bf16,
+        )
+        .map_err(|e| format!("{e:#}"))?;
+        let diff = out.grid.max_abs_diff(&reference);
+        let epochs = c.n.div_ceil(c.s_tb) as f32;
+        let bound = 4.0 * 2.0 * epochs * so2dr::transfer::max_roundtrip_error(&initial);
+        if diff > bound {
+            return Err(format!("bf16 drift {diff} exceeds bound {bound} ({epochs} epochs)"));
+        }
+        if out.stats.htod_wire_bytes * 2 != out.stats.htod_bytes {
+            return Err("bf16 wire volume is not exactly half".to_string());
+        }
+        Ok(())
     });
 }
 
