@@ -56,9 +56,10 @@ fn bench_rs_copies() {
     let src = Array2::synthetic(256, 4096, 2);
     let mut rs = RegionShareBuffer::new();
     let span = RowSpan::new(64, 128);
+    let rect = Rect::from_spans(span, 0, 4096);
     let (iters, per) = measure(0.2, 10, || {
-        rs.write(span, 0, src.extract_rows(span));
-        let _ = rs.read(span, 0).unwrap();
+        rs.write(rect, 0, src.extract_rows(span));
+        let _ = rs.read(rect, 0).unwrap();
     });
     let bytes = (64 * 4096 * 4) as f64;
     println!(

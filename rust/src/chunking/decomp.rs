@@ -1,8 +1,44 @@
-//! The decomposition and raw span algebra.
+//! The decomposition and raw span algebra: the 1-D row-band
+//! [`Decomposition`] and its 2-D row x column generalization
+//! [`Decomposition2d`], built from the same per-axis split/validation.
 
-use crate::core::geom::RowSpan;
+use crate::core::geom::{Rect, RowSpan};
 use crate::stencil::StencilKind;
 use crate::util::threads::split_range;
+use anyhow::{bail, Result};
+
+/// Validate and build one axis of a decomposition: `parts` near-equal
+/// pieces of an `extent`-cell axis for a stencil of `radius`. Returns the
+/// `parts + 1` bounds. This is the single constructor error path shared
+/// by the 1-D and 2-D variants, so both reject malformed shapes with the
+/// same messages (naming the violated `radius`/extent constraint instead
+/// of a bare assert).
+fn split_axis(extent: usize, parts: usize, radius: usize, axis: &str) -> Result<Vec<usize>> {
+    if radius == 0 {
+        bail!("radius must be positive (got 0)");
+    }
+    if parts == 0 {
+        bail!("chunk count along {axis} must be positive (got 0)");
+    }
+    if parts > extent {
+        bail!(
+            "chunk count {parts} along {axis} exceeds the {extent}-cell extent: \
+             every chunk needs at least one owned cell"
+        );
+    }
+    if extent <= 2 * radius {
+        bail!(
+            "{axis} extent {extent} must exceed the 2*radius = {} Dirichlet boundary ring \
+             (no interior cell would remain)",
+            2 * radius
+        );
+    }
+    let pieces = split_range(0, extent, parts);
+    debug_assert_eq!(pieces.len(), parts);
+    let mut bounds: Vec<usize> = pieces.iter().map(|&(a, _)| a).collect();
+    bounds.push(extent);
+    Ok(bounds)
+}
 
 /// A 1-D (row-band) decomposition of a `rows x cols` grid into `d` chunks
 /// for a stencil of radius `radius`.
@@ -17,15 +53,22 @@ pub struct Decomposition {
 }
 
 impl Decomposition {
-    /// Near-equal split. Panics if `d == 0` or `d > rows`.
+    /// Near-equal split with a validated error path: rejects `d == 0`,
+    /// `d > rows`, `radius == 0`, and grids whose rows or cols do not
+    /// exceed the `2*radius` Dirichlet ring.
+    pub fn try_new(rows: usize, cols: usize, d: usize, radius: usize) -> Result<Self> {
+        let bounds = split_axis(rows, d, radius, "rows")?;
+        // The column axis is not split, but the kernel interior still
+        // needs at least one column between the Dirichlet rings.
+        split_axis(cols, 1, radius, "cols")?;
+        Ok(Self { rows, cols, d, radius, bounds })
+    }
+
+    /// Panicking [`Self::try_new`] (the original constructor contract,
+    /// kept for infallible call sites — planners and tests).
     pub fn new(rows: usize, cols: usize, d: usize, radius: usize) -> Self {
-        assert!(d > 0 && d <= rows, "invalid chunk count d={d} for {rows} rows");
-        assert!(radius > 0, "radius must be positive");
-        let parts = split_range(0, rows, d);
-        assert_eq!(parts.len(), d, "rows too few for d={d}");
-        let mut bounds: Vec<usize> = parts.iter().map(|&(a, _)| a).collect();
-        bounds.push(rows);
-        Self { rows, cols, d, radius, bounds }
+        Self::try_new(rows, cols, d, radius)
+            .unwrap_or_else(|e| panic!("invalid decomposition: {e}"))
     }
 
     pub fn rows(&self) -> usize {
@@ -356,6 +399,329 @@ impl Decomposition {
     pub fn resident_bytes(&self, i: usize, steps: usize, kind: StencilKind) -> u64 {
         let _ = kind; // radius already captured in self.radius
         self.chunk_bytes(i) + self.halo_bytes_per_step() * steps as u64
+    }
+}
+
+// -------------------------------------------------------------------
+// 2-D tile decomposition.
+// -------------------------------------------------------------------
+
+/// A 2-D (row x column tile) decomposition of a `rows x cols` grid into
+/// `tiles_y x tiles_x` tiles for a stencil of radius `radius` — the
+/// product of two per-axis near-equal splits, sharing the 1-D
+/// decomposition's span algebra along each axis.
+///
+/// The SO2DR sharing scheme generalizes as a product of the 1-D scheme:
+/// data flows toward higher tile indices along *each* axis, exactly as
+/// the row-band scheme flows downward. Per epoch of `S` steps (skirt
+/// `h = S*r`), tile `(i, j)`:
+///
+/// * transfers host-to-device the product of the per-axis *shifted*
+///   spans (`[lo+h, hi+h)` per axis, edge tiles clamped) — the HtoD
+///   rects partition the grid, zero redundant host transfer;
+/// * reads its **north band** `[rlo-h, rlo+h) x [clo-h, chi+h)` from
+///   tile `(i-1, j)` and its **west band** `[rlo+h, rhi+h) x
+///   [clo-h, clo+h)` from tile `(i, j-1)` through the region-sharing
+///   buffer (the west band is a strided column slice of the producer's
+///   arena);
+/// * publishes the matching south/east bands for `(i+1, j)` and
+///   `(i, j+1)` *after* its reads and *before* its kernels — the bands
+///   are epoch-start data, extracted before any kernel overwrites them.
+///
+/// **Corner ownership**: corner blocks are owned by the row bands — the
+/// north band spans the tile's full skirted width `[clo-h, chi+h)`, so a
+/// diagonal neighbor's `h x h` corner cascades through two band hops
+/// (`(i-1,j-1) -> (i-1,j) -> (i,j)`) instead of eight dedicated corner
+/// ops. Every tile therefore possesses its full resident rect
+/// (`owned` grown by `h`, clamped) after exactly two reads, by induction
+/// over the row-major tile order: `HtoD ∪ north ∪ west = resident`,
+/// disjointly, and each band lies inside its producer's resident rect.
+///
+/// Degenerate tilings reproduce the 1-D plans op-for-op: `tiles_x = 1`
+/// makes every column span full-width and the west/east bands empty,
+/// which is literally the row-band scheme; `tiles_y = 1` is its
+/// transpose.
+#[derive(Debug, Clone)]
+pub struct Decomposition2d {
+    rows: usize,
+    cols: usize,
+    tiles_y: usize,
+    tiles_x: usize,
+    radius: usize,
+    /// `tiles_y + 1` bounds: tile row `i` owns rows `[rb[i], rb[i+1])`.
+    row_bounds: Vec<usize>,
+    /// `tiles_x + 1` bounds: tile col `j` owns cols `[cb[j], cb[j+1])`.
+    col_bounds: Vec<usize>,
+}
+
+/// Per-axis span algebra shared by both axes (private: the public
+/// surface speaks rects). `h` is the epoch skirt in cells.
+fn axis_owned(bounds: &[usize], i: usize) -> RowSpan {
+    RowSpan::new(bounds[i], bounds[i + 1])
+}
+
+/// Shifted HtoD span: `[lo+h, hi+h)`, the first chunk extended to the
+/// axis origin and the last clamped at the extent — identical to the 1-D
+/// [`Decomposition::so2dr_htod`] formula.
+fn axis_htod(bounds: &[usize], extent: usize, i: usize, h: i64) -> RowSpan {
+    let o = axis_owned(bounds, i);
+    if i == 0 {
+        RowSpan::clamped(0, o.hi as i64 + h, extent)
+    } else {
+        RowSpan::clamped(o.lo as i64 + h, o.hi as i64 + h, extent)
+    }
+}
+
+/// Shared band below a chunk's lower bound: `[lo-h, lo+h)`, empty for the
+/// first chunk — identical to the 1-D [`Decomposition::so2dr_rs_read`].
+fn axis_band(bounds: &[usize], extent: usize, i: usize, h: i64) -> RowSpan {
+    if i == 0 {
+        return RowSpan::empty();
+    }
+    let lo = bounds[i] as i64;
+    RowSpan::clamped(lo - h, lo + h, extent)
+}
+
+/// Resident span: owned grown by `h` on both sides, clamped.
+fn axis_resident(bounds: &[usize], extent: usize, i: usize, h: i64) -> RowSpan {
+    let o = axis_owned(bounds, i);
+    RowSpan::clamped(o.lo as i64 - h, o.hi as i64 + h, extent)
+}
+
+impl Decomposition2d {
+    /// Validated constructor — the same shared per-axis error path as
+    /// [`Decomposition::try_new`], applied to both axes.
+    pub fn try_new(
+        rows: usize,
+        cols: usize,
+        tiles_y: usize,
+        tiles_x: usize,
+        radius: usize,
+    ) -> Result<Self> {
+        let row_bounds = split_axis(rows, tiles_y, radius, "rows")?;
+        let col_bounds = split_axis(cols, tiles_x, radius, "cols")?;
+        Ok(Self { rows, cols, tiles_y, tiles_x, radius, row_bounds, col_bounds })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn radius(&self) -> usize {
+        self.radius
+    }
+
+    pub fn tiles_y(&self) -> usize {
+        self.tiles_y
+    }
+
+    pub fn tiles_x(&self) -> usize {
+        self.tiles_x
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.tiles_y * self.tiles_x
+    }
+
+    /// Row-major flattened tile index.
+    pub fn index(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < self.tiles_y && j < self.tiles_x);
+        i * self.tiles_x + j
+    }
+
+    /// Inverse of [`Self::index`].
+    pub fn tile_rc(&self, t: usize) -> (usize, usize) {
+        debug_assert!(t < self.n_tiles());
+        (t / self.tiles_x, t % self.tiles_x)
+    }
+
+    /// Rect owned by tile `t`.
+    pub fn owned(&self, t: usize) -> Rect {
+        let (i, j) = self.tile_rc(t);
+        Rect::of_spans(
+            axis_owned(&self.row_bounds, i),
+            axis_owned(&self.col_bounds, j),
+        )
+    }
+
+    /// Skirt depth `h = steps * radius` for an epoch of `steps`.
+    pub fn skirt(&self, steps: usize) -> usize {
+        steps * self.radius
+    }
+
+    pub fn min_tile_rows(&self) -> usize {
+        (0..self.tiles_y).map(|i| axis_owned(&self.row_bounds, i).len()).min().unwrap()
+    }
+
+    pub fn min_tile_cols(&self) -> usize {
+        (0..self.tiles_x).map(|j| axis_owned(&self.col_bounds, j).len()).min().unwrap()
+    }
+
+    /// Per-axis feasibility: the skirt plus one radius must fit inside
+    /// every tile along *both* axes (the 1-D constraint, per axis).
+    pub fn feasible(&self, steps: usize) -> bool {
+        let need = self.skirt(steps) + self.radius;
+        need <= self.min_tile_rows() && need <= self.min_tile_cols()
+    }
+
+    /// Assert feasibility with a readable message.
+    pub fn check(&self, steps: usize) {
+        assert!(
+            self.feasible(steps),
+            "infeasible tiling: skirt {} + r {} > min tile {}x{} \
+             ({}x{} tiles, steps={})",
+            self.skirt(steps),
+            self.radius,
+            self.min_tile_rows(),
+            self.min_tile_cols(),
+            self.tiles_y,
+            self.tiles_x,
+            steps
+        );
+    }
+
+    /// Rect resident on the device for tile `t` during an epoch of
+    /// `steps`: owned grown by the skirt on all four sides (clamped).
+    pub fn so2dr_resident(&self, t: usize, steps: usize) -> Rect {
+        let h = self.skirt(steps) as i64;
+        let (i, j) = self.tile_rc(t);
+        Rect::of_spans(
+            axis_resident(&self.row_bounds, self.rows, i, h),
+            axis_resident(&self.col_bounds, self.cols, j, h),
+        )
+    }
+
+    /// HtoD rect: the product of the per-axis shifted spans. Per epoch
+    /// these rects partition the grid — zero redundant host transfer,
+    /// exactly as in 1-D.
+    pub fn so2dr_htod(&self, t: usize, steps: usize) -> Rect {
+        let h = self.skirt(steps) as i64;
+        let (i, j) = self.tile_rc(t);
+        Rect::of_spans(
+            axis_htod(&self.row_bounds, self.rows, i, h),
+            axis_htod(&self.col_bounds, self.cols, j, h),
+        )
+    }
+
+    /// North band tile `t` reads from tile `(i-1, j)`: its upper `2h`
+    /// row band across the full skirted width (corner blocks included —
+    /// see the corner-ownership rule in the type docs). Empty for the
+    /// first tile row.
+    pub fn so2dr_read_north(&self, t: usize, steps: usize) -> Rect {
+        let h = self.skirt(steps) as i64;
+        let (i, j) = self.tile_rc(t);
+        Rect::of_spans(
+            axis_band(&self.row_bounds, self.rows, i, h),
+            axis_resident(&self.col_bounds, self.cols, j, h),
+        )
+    }
+
+    /// West band tile `t` reads from tile `(i, j-1)`: the `2h` column
+    /// band beside its shifted row span — a strided column slice of the
+    /// producer's arena. Empty for the first tile column.
+    pub fn so2dr_read_west(&self, t: usize, steps: usize) -> Rect {
+        let h = self.skirt(steps) as i64;
+        let (i, j) = self.tile_rc(t);
+        Rect::of_spans(
+            axis_htod(&self.row_bounds, self.rows, i, h),
+            axis_band(&self.col_bounds, self.cols, j, h),
+        )
+    }
+
+    /// South band tile `t` publishes for tile `(i+1, j)` — by
+    /// construction `write_south(i, j) == read_north(i+1, j)`. Empty for
+    /// the last tile row.
+    pub fn so2dr_write_south(&self, t: usize, steps: usize) -> Rect {
+        let (i, j) = self.tile_rc(t);
+        if i + 1 == self.tiles_y {
+            return Rect::new(0, 0, 0, 0);
+        }
+        self.so2dr_read_north(self.index(i + 1, j), steps)
+    }
+
+    /// East band tile `t` publishes for tile `(i, j+1)` — by
+    /// construction `write_east(i, j) == read_west(i, j+1)`. Empty for
+    /// the last tile column.
+    pub fn so2dr_write_east(&self, t: usize, steps: usize) -> Rect {
+        let (i, j) = self.tile_rc(t);
+        if j + 1 == self.tiles_x {
+            return Rect::new(0, 0, 0, 0);
+        }
+        self.so2dr_read_west(self.index(i, j + 1), steps)
+    }
+
+    /// Compute window for tile `t` at TB step `s` (1-based): the 2-D
+    /// trapezoid — owned grown by `(steps-s)*r` on all sides, clamped to
+    /// the Dirichlet interior `[r, rows-r) x [r, cols-r)`.
+    pub fn so2dr_window(&self, t: usize, steps: usize, s: usize) -> Rect {
+        assert!((1..=steps).contains(&s));
+        let g = ((steps - s) * self.radius) as i64;
+        let o = self.owned(t);
+        let r = self.radius as i64;
+        Rect::clamped(
+            (o.r0 as i64 - g).max(r),
+            (o.r1 as i64 + g).min(self.rows as i64 - r),
+            (o.c0 as i64 - g).max(r),
+            (o.c1 as i64 + g).min(self.cols as i64 - r),
+            self.rows,
+            self.cols,
+        )
+    }
+
+    /// DtoH rect after the epoch: exactly the owned rect (the final
+    /// trapezoid step computes exactly the owned cells) — per epoch the
+    /// DtoH rects partition the grid.
+    pub fn so2dr_dtoh(&self, t: usize) -> Rect {
+        self.owned(t)
+    }
+
+    /// Signed global (row, col) of tile `t`'s arena origin for an epoch
+    /// of `steps`: the resident rect's corner before clamping, so data
+    /// keeps a stable in-arena offset whether or not the grid edge
+    /// clamps the skirt.
+    pub fn tile_base(&self, t: usize, steps: usize) -> (i64, i64) {
+        let h = self.skirt(steps) as i64;
+        let o = self.owned(t);
+        (o.r0 as i64 - h, o.c0 as i64 - h)
+    }
+
+    /// Uniform tile-arena shape for a whole run with at most `s_max` TB
+    /// steps per epoch: tall/wide enough for the largest tile of the
+    /// largest epoch, so fixed-shape (AOT-compiled) kernels serve every
+    /// tile and epoch.
+    pub fn uniform_buffer_dims(&self, s_max: usize) -> (usize, usize) {
+        let pad = 2 * self.skirt(s_max);
+        let max_rows =
+            (0..self.tiles_y).map(|i| axis_owned(&self.row_bounds, i).len()).max().unwrap();
+        let max_cols =
+            (0..self.tiles_x).map(|j| axis_owned(&self.col_bounds, j).len()).max().unwrap();
+        (max_rows + pad, max_cols + pad)
+    }
+
+    /// Bytes of one tile arena (input + output double buffer) at the
+    /// uniform shape for `s_max`.
+    pub fn arena_bytes(&self, s_max: usize) -> u64 {
+        let (br, bc) = self.uniform_buffer_dims(s_max);
+        2 * (br * bc * 4) as u64
+    }
+
+    /// Total region-share payload bytes one epoch of `steps` moves
+    /// through the sharing buffer (each band counted once — the read
+    /// side; the write side copies the same bytes). The closed form per
+    /// interior tile is `(2h*(w + l) + 4h^2) * 4` bytes — O(perimeter)
+    /// instead of the row-band scheme's O(cols) per boundary, which is
+    /// the whole point of tiling.
+    pub fn halo_bytes_per_epoch(&self, steps: usize) -> u64 {
+        (0..self.n_tiles())
+            .map(|t| {
+                self.so2dr_read_north(t, steps).bytes_f32()
+                    + self.so2dr_read_west(t, steps).bytes_f32()
+            })
+            .sum()
     }
 }
 
@@ -852,6 +1218,389 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+}
+
+#[cfg(test)]
+mod ctor_tests {
+    use super::*;
+
+    /// Accept/reject table over both validated constructors (the shared
+    /// per-axis error path), mirroring the PR 3 config tables: every
+    /// rejection must name the violated constraint.
+    #[test]
+    fn constructor_acceptance_table_1d() {
+        let accept: &[(usize, usize, usize, usize)] = &[
+            (100, 64, 4, 1),
+            (100, 64, 100, 1), // d == rows: every chunk owns one row
+            (7, 3, 7, 1),
+            (1000, 9, 4, 4),
+        ];
+        for &(rows, cols, d, r) in accept {
+            assert!(
+                Decomposition::try_new(rows, cols, d, r).is_ok(),
+                "({rows},{cols},{d},{r}) rejected"
+            );
+        }
+        let reject: &[(usize, usize, usize, usize, &str)] = &[
+            (100, 64, 0, 1, "chunk count"),
+            (100, 64, 101, 1, "exceeds"),
+            (100, 64, 4, 0, "radius"),
+            (2, 64, 1, 1, "rows extent"),  // rows <= 2r
+            (100, 2, 4, 1, "cols extent"), // cols <= 2r
+            (100, 8, 4, 4, "cols extent"),
+            (0, 64, 1, 1, "chunk count"),  // 1 > 0 rows
+        ];
+        for &(rows, cols, d, r, needle) in reject {
+            let err = Decomposition::try_new(rows, cols, d, r)
+                .expect_err(&format!("({rows},{cols},{d},{r}) accepted"));
+            assert!(
+                err.to_string().contains(needle),
+                "({rows},{cols},{d},{r}): {err} missing {needle:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn constructor_acceptance_table_2d() {
+        let accept: &[(usize, usize, usize, usize, usize)] = &[
+            (100, 100, 2, 2, 1),
+            (100, 60, 1, 4, 2),
+            (60, 100, 4, 1, 2),
+            (10, 10, 10, 10, 1), // one cell per tile
+        ];
+        for &(rows, cols, ty, tx, r) in accept {
+            assert!(
+                Decomposition2d::try_new(rows, cols, ty, tx, r).is_ok(),
+                "({rows},{cols},{ty}x{tx},{r}) rejected"
+            );
+        }
+        let reject: &[(usize, usize, usize, usize, usize, &str)] = &[
+            (100, 100, 0, 2, 1, "chunk count"),
+            (100, 100, 2, 0, 1, "chunk count"),
+            (100, 100, 101, 2, 1, "exceeds"),
+            (100, 100, 2, 101, 1, "exceeds"),
+            (100, 100, 2, 2, 0, "radius"),
+            (4, 100, 2, 2, 2, "rows extent"),
+            (100, 4, 2, 2, 2, "cols extent"),
+        ];
+        for &(rows, cols, ty, tx, r, needle) in reject {
+            let err = Decomposition2d::try_new(rows, cols, ty, tx, r)
+                .expect_err(&format!("({rows},{cols},{ty}x{tx},{r}) accepted"));
+            assert!(
+                err.to_string().contains(needle),
+                "({rows},{cols},{ty}x{tx},{r}): {err} missing {needle:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn new_panics_with_the_validated_message() {
+        let got = std::panic::catch_unwind(|| Decomposition::new(100, 64, 0, 1));
+        let msg = *got.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("invalid decomposition"), "{msg}");
+        assert!(msg.contains("chunk count"), "{msg}");
+    }
+
+    /// Degenerate case `d == rows`: constructible (one row per chunk),
+    /// but no epoch is feasible — the skirt constraint needs
+    /// `steps*r + r <= 1`, impossible for positive radius and steps.
+    #[test]
+    fn one_row_chunks_are_constructible_but_never_feasible() {
+        let dc = Decomposition::new(8, 16, 8, 1);
+        assert_eq!(dc.min_chunk_rows(), 1);
+        for i in 0..8 {
+            assert_eq!(dc.owned(i).len(), 1);
+        }
+        for steps in 1..4 {
+            assert!(!dc.feasible(steps), "steps={steps}");
+        }
+    }
+
+    /// Degenerate boundary: a chunk exactly as tall as the skirt is
+    /// infeasible (the Dirichlet tightening needs one extra radius);
+    /// skirt + radius tall is the exact feasibility edge.
+    #[test]
+    fn chunk_height_equal_to_skirt_is_the_infeasible_edge() {
+        let (radius, steps) = (2usize, 3usize);
+        let h = steps * radius; // 6
+        let at_skirt = Decomposition::new(4 * h, 32, 4, radius);
+        assert_eq!(at_skirt.min_chunk_rows(), h);
+        assert!(!at_skirt.feasible(steps), "chunk == skirt must be infeasible");
+        let at_edge = Decomposition::new(4 * (h + radius), 32, 4, radius);
+        assert!(at_edge.feasible(steps), "chunk == skirt + r is exactly feasible");
+        assert!(!at_edge.feasible(steps + 1));
+    }
+
+    /// The same two degenerate shapes along the 2-D axes.
+    #[test]
+    fn tile_degenerate_feasibility_edges() {
+        let (radius, steps) = (1usize, 4usize);
+        let h = steps * radius;
+        // One-cell tiles: constructible, never feasible.
+        let unit = Decomposition2d::try_new(6, 6, 6, 6, 1).unwrap();
+        assert_eq!((unit.min_tile_rows(), unit.min_tile_cols()), (1, 1));
+        assert!(!unit.feasible(1));
+        // Tile side equal to the skirt: infeasible; skirt + r: feasible.
+        let at_skirt = Decomposition2d::try_new(2 * h, 2 * h, 2, 2, radius).unwrap();
+        assert!(!at_skirt.feasible(steps));
+        let edge = Decomposition2d::try_new(2 * (h + radius), 2 * (h + radius), 2, 2, radius)
+            .unwrap();
+        assert!(edge.feasible(steps));
+        // Feasibility is per-axis: a wide-enough grid with a too-narrow
+        // tile column still fails.
+        let narrow = Decomposition2d::try_new(2 * (h + radius), 2 * h, 2, 2, radius).unwrap();
+        assert!(!narrow.feasible(steps));
+    }
+}
+
+#[cfg(test)]
+mod tile_tests {
+    use super::*;
+
+    fn dc2(rows: usize, cols: usize, ty: usize, tx: usize, r: usize) -> Decomposition2d {
+        Decomposition2d::try_new(rows, cols, ty, tx, r).unwrap()
+    }
+
+    fn cover_count(dc: &Decomposition2d, rects: &[Rect]) -> Vec<u8> {
+        let mut cover = vec![0u8; dc.rows() * dc.cols()];
+        for rect in rects {
+            for r in rect.r0..rect.r1 {
+                for c in rect.c0..rect.c1 {
+                    cover[r * dc.cols() + c] += 1;
+                }
+            }
+        }
+        cover
+    }
+
+    #[test]
+    fn owned_and_htod_and_dtoh_partition_grid() {
+        for (rows, cols, ty, tx, r, steps) in
+            [(120, 96, 3, 2, 1, 8), (90, 110, 2, 3, 2, 4), (64, 64, 1, 1, 1, 4)]
+        {
+            let dc = dc2(rows, cols, ty, tx, r);
+            dc.check(steps);
+            for (name, rects) in [
+                ("owned", (0..dc.n_tiles()).map(|t| dc.owned(t)).collect::<Vec<_>>()),
+                ("htod", (0..dc.n_tiles()).map(|t| dc.so2dr_htod(t, steps)).collect()),
+                ("dtoh", (0..dc.n_tiles()).map(|t| dc.so2dr_dtoh(t)).collect()),
+            ] {
+                let cover = cover_count(&dc, &rects);
+                assert!(
+                    cover.iter().all(|&x| x == 1),
+                    "{name} must partition the {rows}x{cols} grid ({ty}x{tx} tiles)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bands_tile_the_resident_rect_exactly() {
+        // HtoD ∪ north ∪ west = resident, disjointly — the invariant
+        // that lets a single row-major sweep satisfy every tile.
+        let dc = dc2(120, 96, 3, 3, 2);
+        let steps = 4;
+        for t in 0..dc.n_tiles() {
+            let res = dc.so2dr_resident(t, steps);
+            let parts = [
+                dc.so2dr_htod(t, steps),
+                dc.so2dr_read_north(t, steps),
+                dc.so2dr_read_west(t, steps),
+            ];
+            let mut area = 0usize;
+            for p in &parts {
+                assert!(res.contains_rect(p), "tile {t}: {p} outside resident {res}");
+                area += p.area();
+                for q in &parts {
+                    if p != q {
+                        assert!(!p.overlaps(q), "tile {t}: {p} overlaps {q}");
+                    }
+                }
+            }
+            assert_eq!(area, res.area(), "tile {t}: parts must cover resident exactly");
+        }
+    }
+
+    #[test]
+    fn write_bands_pair_with_neighbor_reads_and_fit_the_producer() {
+        let dc = dc2(100, 100, 3, 3, 1);
+        let steps = 5;
+        for t in 0..dc.n_tiles() {
+            let (i, j) = dc.tile_rc(t);
+            let res = dc.so2dr_resident(t, steps);
+            let south = dc.so2dr_write_south(t, steps);
+            if i + 1 < dc.tiles_y() {
+                assert_eq!(south, dc.so2dr_read_north(dc.index(i + 1, j), steps));
+                assert!(!south.is_empty());
+                assert!(res.contains_rect(&south), "tile {t} south {south} vs {res}");
+            } else {
+                assert!(south.is_empty());
+            }
+            let east = dc.so2dr_write_east(t, steps);
+            if j + 1 < dc.tiles_x() {
+                assert_eq!(east, dc.so2dr_read_west(dc.index(i, j + 1), steps));
+                assert!(!east.is_empty());
+                assert!(res.contains_rect(&east), "tile {t} east {east} vs {res}");
+            } else {
+                assert!(east.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn windows_shrink_to_owned_and_stay_one_radius_inside_resident() {
+        let dc = dc2(120, 90, 2, 3, 2);
+        let steps = 4;
+        let (rows, cols, r) = (120i64, 90i64, 2i64);
+        for t in 0..dc.n_tiles() {
+            let o = dc.owned(t);
+            let last = dc.so2dr_window(t, steps, steps);
+            let interior_owned = Rect::clamped(
+                (o.r0 as i64).max(r),
+                (o.r1 as i64).min(rows - r),
+                (o.c0 as i64).max(r),
+                (o.c1 as i64).min(cols - r),
+                120,
+                90,
+            );
+            assert_eq!(last, interior_owned, "tile {t}");
+            let res = dc.so2dr_resident(t, steps);
+            for s in 1..=steps {
+                let w = dc.so2dr_window(t, steps, s);
+                // Every stencil read (window grown by r) stays resident.
+                let reads = w.grow_clamped(2, 120, 90);
+                assert!(res.contains_rect(&reads), "tile {t} step {s}: {reads} vs {res}");
+                if s < steps {
+                    assert!(w.area() >= dc.so2dr_window(t, steps, s + 1).area());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn windows_cover_interior_with_redundant_overlap() {
+        let dc = dc2(80, 80, 2, 2, 1);
+        let steps = 6;
+        for s in 1..=steps {
+            let rects: Vec<Rect> =
+                (0..dc.n_tiles()).map(|t| dc.so2dr_window(t, steps, s)).collect();
+            let cover = cover_count(&dc, &rects);
+            for r in 1..79 {
+                for c in 1..79 {
+                    assert!(cover[r * 80 + c] >= 1, "step {s}: interior cell ({r},{c})");
+                }
+            }
+        }
+    }
+
+    /// 1xN degenerate tiling: every span formula matches the 1-D
+    /// decomposition exactly (full-width rects).
+    #[test]
+    fn one_by_n_matches_row_band_spans() {
+        let (rows, cols, d, r, steps) = (200, 64, 4, 2, 6);
+        let one = Decomposition::new(rows, cols, d, r);
+        let two = dc2(rows, cols, d, 1, r);
+        assert_eq!(two.feasible(steps), one.feasible(steps));
+        for i in 0..d {
+            let full = |s: RowSpan| Rect::from_spans(s, 0, cols);
+            assert_eq!(two.owned(i), full(one.owned(i)), "owned {i}");
+            assert_eq!(two.so2dr_htod(i, steps), full(one.so2dr_htod(i, steps)), "htod {i}");
+            assert_eq!(two.so2dr_dtoh(i), full(one.so2dr_dtoh(i)), "dtoh {i}");
+            let north = two.so2dr_read_north(i, steps);
+            if i == 0 {
+                assert!(north.is_empty());
+            } else {
+                assert_eq!(north, full(one.so2dr_rs_read(i, steps)), "north {i}");
+            }
+            assert!(two.so2dr_read_west(i, steps).is_empty());
+            assert!(two.so2dr_write_east(i, steps).is_empty());
+            let south = two.so2dr_write_south(i, steps);
+            if i + 1 == d {
+                assert!(south.is_empty());
+            } else {
+                assert_eq!(south, full(one.so2dr_rs_write(i, steps)), "south {i}");
+            }
+            for s in 1..=steps {
+                let w1 = one.so2dr_window(i, steps, s);
+                let w2 = two.so2dr_window(i, steps, s);
+                assert_eq!(w2.rows(), w1, "window rows {i}@{s}");
+                assert_eq!((w2.c0, w2.c1), (r, cols - r), "window cols {i}@{s}");
+            }
+        }
+    }
+
+    /// Nx1 is the transpose of 1xN: the column algebra mirrors the row
+    /// algebra exactly.
+    #[test]
+    fn n_by_one_is_the_transpose_of_one_by_n() {
+        let (rows, cols, d, r, steps) = (64, 200, 4, 2, 6);
+        let wide = dc2(rows, cols, 1, d, r); // N tiles along columns
+        let tall = dc2(cols, rows, d, 1, r); // the transposed grid
+        let tr = |x: Rect| Rect::new(x.c0, x.c1, x.r0, x.r1);
+        for t in 0..d {
+            assert_eq!(wide.owned(t), tr(tall.owned(t)), "owned {t}");
+            assert_eq!(wide.so2dr_htod(t, steps), tr(tall.so2dr_htod(t, steps)), "htod {t}");
+            assert_eq!(
+                wide.so2dr_read_west(t, steps),
+                tr(tall.so2dr_read_north(t, steps)),
+                "west {t}"
+            );
+            assert_eq!(
+                wide.so2dr_write_east(t, steps),
+                tr(tall.so2dr_write_south(t, steps)),
+                "east {t}"
+            );
+            assert!(wide.so2dr_read_north(t, steps).is_empty());
+            assert!(wide.so2dr_write_south(t, steps).is_empty());
+        }
+    }
+
+    /// The tiling's reason to exist: at equal chunk count on a large
+    /// square grid, the 2-D halo volume is strictly below the 1-D
+    /// row-band volume (O(perimeter) vs O(cols) per chunk).
+    #[test]
+    fn square_tiling_halo_volume_beats_row_bands() {
+        let (sz, r, steps) = (1024usize, 1, 8);
+        for g in [2usize, 4] {
+            let tiles = dc2(sz, sz, g, g, r);
+            let halo_2d = tiles.halo_bytes_per_epoch(steps);
+            // 1-D at the same chunk count: d-1 boundaries, 2h rows each.
+            let d = g * g;
+            let one = Decomposition::new(sz, sz, d, r);
+            let halo_1d: u64 =
+                (1..d).map(|i| one.so2dr_rs_read(i, steps).len() as u64 * sz as u64 * 4).sum();
+            assert!(
+                halo_2d < halo_1d,
+                "{g}x{g} tiles: 2-D halo {halo_2d} !< 1-D halo {halo_1d}"
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_dims_cover_every_tile_epoch() {
+        let dc = dc2(130, 110, 3, 2, 2);
+        let s_max = 5;
+        let (br, bc) = dc.uniform_buffer_dims(s_max);
+        for t in 0..dc.n_tiles() {
+            for steps in 1..=s_max {
+                let res = dc.so2dr_resident(t, steps);
+                let (base_r, base_c) = dc.tile_base(t, steps);
+                assert!(res.r0 as i64 >= base_r && res.c0 as i64 >= base_c, "tile {t}");
+                assert!(res.r1 as i64 <= base_r + br as i64, "tile {t} steps {steps}");
+                assert!(res.c1 as i64 <= base_c + bc as i64, "tile {t} steps {steps}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_indexing_roundtrip() {
+        let dc = dc2(60, 60, 3, 4, 1);
+        assert_eq!(dc.n_tiles(), 12);
+        for t in 0..12 {
+            let (i, j) = dc.tile_rc(t);
+            assert_eq!(dc.index(i, j), t);
         }
     }
 }

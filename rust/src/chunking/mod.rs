@@ -1,9 +1,13 @@
-//! Row-band chunk decomposition and region-sharing geometry.
+//! Chunk decomposition and region-sharing geometry.
 //!
 //! The grid (`rows x cols`) is split along rows into `d` chunks — the
-//! paper's 1-D decomposition (`D_chk = sz(sz+2r)^{dim-1}/d`). This module
-//! is pure integer geometry: all spans are in *global grid coordinates*;
-//! the coordinator translates to chunk-buffer-local coordinates.
+//! paper's 1-D decomposition (`D_chk = sz(sz+2r)^{dim-1}/d`) — or, with
+//! `--decomp tiles`, into a `chunks_y x chunks_x` grid of rectangular
+//! tiles ([`Decomposition2d`]) whose per-tile halo volume scales with
+//! the tile *perimeter* instead of the full grid width. This module is
+//! pure integer geometry: all spans/rects are in *global grid
+//! coordinates*; the coordinator translates to chunk-buffer-local
+//! coordinates.
 //!
 //! Two sharing schemes are supported (see DESIGN.md §4):
 //!
@@ -31,8 +35,8 @@
 pub mod decomp;
 pub mod plan;
 
-pub use decomp::{Decomposition, DeviceAssignment};
+pub use decomp::{Decomposition, Decomposition2d, DeviceAssignment};
 pub use plan::{
-    apply_codec_policy, ChunkEpochPlan, EpochPlan, KernelInvocation, RegionOp, ResidencyConfig,
-    ResidencySummary, ResidentMode, Scheme,
+    apply_codec_policy, ChunkEpochPlan, DecompMode, EpochPlan, KernelInvocation, RegionOp,
+    ResidencyConfig, ResidencySummary, ResidentMode, Scheme,
 };

@@ -6,10 +6,18 @@
 //! loop over chunks, and per chunk the op sequence
 //! `HtoD -> RS read -> RS write -> kernels -> DtoH` (SO2DR) or
 //! `HtoD -> (RS read/write + 1-step kernel) * steps -> DtoH` (ResReu).
+//!
+//! Every payload-carrying op addresses a [`Rect`] in global grid
+//! coordinates. The 1-D row-band builders emit full-width rects (the
+//! seed's spans, widened); the 2-D tile builder ([`so2dr_tiles_epoch`])
+//! emits genuine sub-rects — strided column slices included — through
+//! the *same* op vocabulary, so the executor, the flattener and the
+//! codec policy need no tile-specific op kinds.
 
-use super::decomp::{Decomposition, DeviceAssignment};
-use crate::core::geom::RowSpan;
+use super::decomp::{Decomposition, Decomposition2d, DeviceAssignment};
+use crate::core::geom::{Rect, RowSpan};
 use crate::transfer::codec::{CodecKind, CompressMode};
+use anyhow::{bail, Result};
 
 /// Out-of-core sharing scheme.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -43,23 +51,52 @@ impl Scheme {
     }
 }
 
-/// A region-sharing copy (device-to-device) in global row coordinates.
+/// Decomposition axis selection (`--decomp {rows,tiles}`): the classic
+/// 1-D row-band split, or the 2-D row x column tiling whose halo volume
+/// scales with tile perimeter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DecompMode {
+    /// 1-D row bands ([`Decomposition`]) — the paper's decomposition.
+    #[default]
+    Rows,
+    /// 2-D tiles ([`Decomposition2d`]), `--chunks-x` x `--chunks-y`.
+    Tiles,
+}
+
+impl DecompMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecompMode::Rows => "rows",
+            DecompMode::Tiles => "tiles",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DecompMode> {
+        match s {
+            "rows" => Some(DecompMode::Rows),
+            "tiles" => Some(DecompMode::Tiles),
+            _ => None,
+        }
+    }
+}
+
+/// A region-sharing copy (device-to-device) in global grid coordinates.
 /// `time_step` is the epoch-local time index of the data being moved
 /// (0 = epoch-start raw data) — used by tests to validate causality.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RegionOp {
-    pub span: RowSpan,
+    pub rect: Rect,
     pub time_step: usize,
 }
 
-/// One fused kernel launch: `windows[t]` is the compute-row window of
-/// fused step `t` (global coordinates, already clamped to the Dirichlet
-/// interior). `first_step` is the 1-based epoch-local index of the first
-/// fused step.
+/// One fused kernel launch: `windows[t]` is the compute rect of fused
+/// step `t` (global coordinates, already clamped to the Dirichlet
+/// interior on both axes). `first_step` is the 1-based epoch-local index
+/// of the first fused step.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct KernelInvocation {
     pub first_step: usize,
-    pub windows: Vec<RowSpan>,
+    pub windows: Vec<Rect>,
 }
 
 impl KernelInvocation {
@@ -67,9 +104,9 @@ impl KernelInvocation {
         self.windows.len()
     }
 
-    /// Total compute area in rows (summed over fused steps).
-    pub fn window_rows(&self) -> usize {
-        self.windows.iter().map(|w| w.len()).sum()
+    /// Total compute area in cells (summed over fused steps).
+    pub fn window_area(&self) -> usize {
+        self.windows.iter().map(|w| w.area()).sum()
     }
 }
 
@@ -82,26 +119,26 @@ impl KernelInvocation {
 /// interpreters execute/price exactly the same codec decisions.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ChunkOp {
-    HtoD { span: RowSpan, codec: CodecKind },
+    HtoD { rect: Rect, codec: CodecKind },
     RsRead(RegionOp),
     RsWrite(RegionOp),
-    /// Resident-model marker: the chunk's settled `span` is already on
+    /// Resident-model marker: the chunk's settled `rect` is already on
     /// device from a previous epoch — no transfer. The executor checks the
     /// arena is live; the flattener emits no op (zero traffic), only the
     /// cross-epoch lifetime it implies.
-    Resident { span: RowSpan },
+    Resident { rect: Rect },
     /// Resident-model epoch-start halo refresh: read a neighbor's settled
     /// region (published via [`ChunkOp::RsWrite`], bridged by
     /// [`ChunkOp::D2D`] when the publisher is remote) from this device's
     /// sharing buffer instead of transferring it from the host. Same
     /// mechanics as `RsRead`, counted separately as cross-epoch traffic.
     Fetch(RegionOp),
-    /// Resident-model capacity spill: write the settled `span` back to the
+    /// Resident-model capacity spill: write the settled `rect` back to the
     /// host and release the chunk's arena. The next epoch re-fetches it
-    /// with an `HtoD` of the same span (the host copy is fresh by
-    /// construction — settled spans partition the grid).
-    Evict { span: RowSpan, codec: CodecKind },
-    /// Peer-to-peer halo exchange: move the `(span, time_step)` region
+    /// with an `HtoD` of the same rect (the host copy is fresh by
+    /// construction — settled rects partition the grid).
+    Evict { rect: Rect, codec: CodecKind },
+    /// Peer-to-peer halo exchange: move the `(rect, time_step)` region
     /// just published by this chunk's `RsWrite` from `src_dev`'s sharing
     /// buffer to `dst_dev`'s, across the inter-device link. Emitted only
     /// when the producing and consuming chunks live on different devices;
@@ -111,9 +148,9 @@ pub enum ChunkOp {
     /// maps it to `OpKind::P2p`, priced by the link channel. It is
     /// unrelated to `OpKind::D2D`, which is the *on-device* sharing copy
     /// produced by `RsWrite`/`RsRead` (the paper's "O/D" category).
-    D2D { src_dev: usize, dst_dev: usize, span: RowSpan, time_step: usize, codec: CodecKind },
+    D2D { src_dev: usize, dst_dev: usize, rect: Rect, time_step: usize, codec: CodecKind },
     Kernel(KernelInvocation),
-    DtoH { span: RowSpan, codec: CodecKind },
+    DtoH { rect: Rect, codec: CodecKind },
 }
 
 /// All ops of one chunk within one epoch, in execution order.
@@ -197,22 +234,26 @@ pub fn so2dr_epoch(
     assert!(steps >= 1 && k_on >= 1);
     assert_eq!(devs.n_chunks(), dc.n_chunks(), "device assignment shape mismatch");
     dc.check(steps);
+    let cols = dc.cols();
+    let radius = dc.radius();
+    let full = |s: RowSpan| Rect::from_spans(s, 0, cols);
+    let win = |s: RowSpan| Rect::from_spans(s, radius, cols - radius);
     let mut chunks = Vec::with_capacity(dc.n_chunks());
     for i in 0..dc.n_chunks() {
         let mut ops = Vec::new();
-        ops.push(ChunkOp::HtoD { span: dc.so2dr_htod(i, steps), codec: CodecKind::Identity });
+        ops.push(ChunkOp::HtoD { rect: full(dc.so2dr_htod(i, steps)), codec: CodecKind::Identity });
         let rs_read = dc.so2dr_rs_read(i, steps);
         if !rs_read.is_empty() {
-            ops.push(ChunkOp::RsRead(RegionOp { span: rs_read, time_step: 0 }));
+            ops.push(ChunkOp::RsRead(RegionOp { rect: full(rs_read), time_step: 0 }));
         }
         let rs_write = dc.so2dr_rs_write(i, steps);
         if !rs_write.is_empty() {
-            ops.push(ChunkOp::RsWrite(RegionOp { span: rs_write, time_step: 0 }));
+            ops.push(ChunkOp::RsWrite(RegionOp { rect: full(rs_write), time_step: 0 }));
             if devs.crosses_boundary(i) {
                 ops.push(ChunkOp::D2D {
                     src_dev: devs.device_of(i),
                     dst_dev: devs.device_of(i + 1),
-                    span: rs_write,
+                    rect: full(rs_write),
                     time_step: 0,
                     codec: CodecKind::Identity,
                 });
@@ -222,12 +263,12 @@ pub fn so2dr_epoch(
         let mut s = 1usize;
         while s <= steps {
             let fused = k_on.min(steps - s + 1);
-            let windows: Vec<RowSpan> =
-                (0..fused).map(|t| dc.so2dr_window(i, steps, s + t)).collect();
+            let windows: Vec<Rect> =
+                (0..fused).map(|t| win(dc.so2dr_window(i, steps, s + t))).collect();
             ops.push(ChunkOp::Kernel(KernelInvocation { first_step: s, windows }));
             s += fused;
         }
-        ops.push(ChunkOp::DtoH { span: dc.so2dr_dtoh(i), codec: CodecKind::Identity });
+        ops.push(ChunkOp::DtoH { rect: full(dc.so2dr_dtoh(i)), codec: CodecKind::Identity });
         chunks.push(ChunkEpochPlan { chunk: i, device: devs.device_of(i), ops });
     }
     EpochPlan {
@@ -238,6 +279,130 @@ pub fn so2dr_epoch(
         resident: false,
         chunks,
     }
+}
+
+/// Build one SO2DR epoch over a 2-D tile decomposition: the 4-neighbor
+/// generalization of [`so2dr_epoch`]. Tiles are walked in row-major
+/// order; each tile transfers its shifted HtoD rect, reads its north row
+/// band and west column band (a strided slice of the producer's arena)
+/// from the region-sharing buffer, publishes the matching south/east
+/// bands for its higher-index neighbors — reads before writes, writes
+/// before kernels, so only epoch-start data is ever shared — and runs
+/// the 2-D trapezoid kernels. Corner data rides the row bands (see
+/// [`Decomposition2d`]'s corner-ownership rule). Shares whose consumer
+/// lives on another device of the tile→device assignment are bridged by
+/// [`ChunkOp::D2D`] link hops, exactly as in 1-D.
+///
+/// Degenerate tilings reproduce the 1-D plans op-for-op: with
+/// `tiles_x == 1` every emitted op equals the row-band epoch's
+/// (`tile_plans_degenerate_to_row_plans` locks this in).
+pub fn so2dr_tiles_epoch(
+    dc: &Decomposition2d,
+    devs: &DeviceAssignment,
+    steps: usize,
+    k_on: usize,
+    start_step: usize,
+) -> EpochPlan {
+    assert!(steps >= 1 && k_on >= 1);
+    assert_eq!(devs.n_chunks(), dc.n_tiles(), "device assignment shape mismatch");
+    dc.check(steps);
+    let tx = dc.tiles_x();
+    let mut chunks = Vec::with_capacity(dc.n_tiles());
+    for t in 0..dc.n_tiles() {
+        let (i, j) = dc.tile_rc(t);
+        let mut ops = Vec::new();
+        ops.push(ChunkOp::HtoD { rect: dc.so2dr_htod(t, steps), codec: CodecKind::Identity });
+        // Reads from the lower-index neighbors (already swept).
+        for rect in [dc.so2dr_read_north(t, steps), dc.so2dr_read_west(t, steps)] {
+            if !rect.is_empty() {
+                ops.push(ChunkOp::RsRead(RegionOp { rect, time_step: 0 }));
+            }
+        }
+        // Publishes for the higher-index neighbors — epoch-start data,
+        // extracted before any kernel of this tile overwrites it.
+        let south = (i + 1 < dc.tiles_y()).then(|| (dc.so2dr_write_south(t, steps), t + tx));
+        let east = (j + 1 < tx).then(|| (dc.so2dr_write_east(t, steps), t + 1));
+        for (rect, consumer) in [south, east].into_iter().flatten() {
+            if rect.is_empty() {
+                continue;
+            }
+            ops.push(ChunkOp::RsWrite(RegionOp { rect, time_step: 0 }));
+            if devs.device_of(t) != devs.device_of(consumer) {
+                ops.push(ChunkOp::D2D {
+                    src_dev: devs.device_of(t),
+                    dst_dev: devs.device_of(consumer),
+                    rect,
+                    time_step: 0,
+                    codec: CodecKind::Identity,
+                });
+            }
+        }
+        let mut s = 1usize;
+        while s <= steps {
+            let fused = k_on.min(steps - s + 1);
+            let windows: Vec<Rect> =
+                (0..fused).map(|u| dc.so2dr_window(t, steps, s + u)).collect();
+            ops.push(ChunkOp::Kernel(KernelInvocation { first_step: s, windows }));
+            s += fused;
+        }
+        ops.push(ChunkOp::DtoH { rect: dc.so2dr_dtoh(t), codec: CodecKind::Identity });
+        chunks.push(ChunkEpochPlan { chunk: t, device: devs.device_of(t), ops });
+    }
+    EpochPlan {
+        scheme: Scheme::So2dr,
+        steps,
+        start_step,
+        n_devices: devs.n_devices(),
+        resident: false,
+        chunks,
+    }
+}
+
+/// Split `n` steps into epochs of at most `s_tb` and build tile epoch
+/// plans over `dc`. Only the SO2DR scheme generalizes to tiles today:
+/// ResReu's skewed windows are one-dimensional by construction and the
+/// in-core scheme has no decomposition at all — both are rejected here,
+/// at plan time, rather than silently mis-planned.
+pub fn plan_run_tiles(
+    scheme: Scheme,
+    dc: &Decomposition2d,
+    devs: &DeviceAssignment,
+    n: usize,
+    s_tb: usize,
+    k_on: usize,
+) -> Result<Vec<EpochPlan>> {
+    match scheme {
+        Scheme::So2dr => {}
+        Scheme::ResReu => bail!(
+            "the tiles decomposition supports so2dr only: resreu's skewed windows \
+             are one-dimensional by construction (use --decomp rows)"
+        ),
+        Scheme::InCore => bail!(
+            "the tiles decomposition is meaningless for incore (the whole grid is \
+             resident; use --decomp rows)"
+        ),
+    }
+    if n < 1 || s_tb < 1 || k_on < 1 {
+        bail!("n, s_tb and k_on must be positive");
+    }
+    if !dc.feasible(s_tb.min(n)) {
+        bail!(
+            "infeasible tiling: skirt {} + r {} exceeds the minimum tile side {}x{} \
+             (per-axis W_halo * S_TB <= D_chk, paper §IV-C)",
+            dc.skirt(s_tb.min(n)),
+            dc.radius(),
+            dc.min_tile_rows(),
+            dc.min_tile_cols()
+        );
+    }
+    let mut plans = Vec::new();
+    let mut done = 0usize;
+    while done < n {
+        let steps = s_tb.min(n - done);
+        plans.push(so2dr_tiles_epoch(dc, devs, steps, k_on, done));
+        done += steps;
+    }
+    Ok(plans)
 }
 
 /// Build one ResReu epoch: single-step kernels interleaved with RS
@@ -252,21 +417,25 @@ pub fn resreu_epoch(
     assert!(steps >= 1);
     assert_eq!(devs.n_chunks(), dc.n_chunks(), "device assignment shape mismatch");
     dc.check(steps);
+    let cols = dc.cols();
+    let radius = dc.radius();
+    let full = |s: RowSpan| Rect::from_spans(s, 0, cols);
+    let win = |s: RowSpan| Rect::from_spans(s, radius, cols - radius);
     let mut chunks = Vec::with_capacity(dc.n_chunks());
     for i in 0..dc.n_chunks() {
         let mut ops = Vec::new();
-        ops.push(ChunkOp::HtoD { span: dc.resreu_htod(i), codec: CodecKind::Identity });
+        ops.push(ChunkOp::HtoD { rect: full(dc.resreu_htod(i)), codec: CodecKind::Identity });
         for s in 1..=steps {
             // Write our trailing rows (time s-1) for the upper neighbor,
             // then read our lower halo (time s-1) from the lower neighbor.
             let w = dc.resreu_rs_write(i, s);
             if !w.is_empty() {
-                ops.push(ChunkOp::RsWrite(RegionOp { span: w, time_step: s - 1 }));
+                ops.push(ChunkOp::RsWrite(RegionOp { rect: full(w), time_step: s - 1 }));
                 if devs.crosses_boundary(i) {
                     ops.push(ChunkOp::D2D {
                         src_dev: devs.device_of(i),
                         dst_dev: devs.device_of(i + 1),
-                        span: w,
+                        rect: full(w),
                         time_step: s - 1,
                         codec: CodecKind::Identity,
                     });
@@ -274,14 +443,17 @@ pub fn resreu_epoch(
             }
             let r = dc.resreu_rs_read(i, s);
             if !r.is_empty() {
-                ops.push(ChunkOp::RsRead(RegionOp { span: r, time_step: s - 1 }));
+                ops.push(ChunkOp::RsRead(RegionOp { rect: full(r), time_step: s - 1 }));
             }
             ops.push(ChunkOp::Kernel(KernelInvocation {
                 first_step: s,
-                windows: vec![dc.resreu_window(i, steps, s)],
+                windows: vec![win(dc.resreu_window(i, steps, s))],
             }));
         }
-        ops.push(ChunkOp::DtoH { span: dc.resreu_dtoh(i, steps), codec: CodecKind::Identity });
+        ops.push(ChunkOp::DtoH {
+            rect: full(dc.resreu_dtoh(i, steps)),
+            codec: CodecKind::Identity,
+        });
         chunks.push(ChunkEpochPlan { chunk: i, device: devs.device_of(i), ops });
     }
     EpochPlan {
@@ -300,13 +472,16 @@ pub fn resreu_epoch(
 /// transfers from the in-core measurements, §V-D).
 pub fn incore_epoch(
     rows: usize,
+    cols: usize,
     radius: usize,
     steps: usize,
     k_on: usize,
     start_step: usize,
 ) -> EpochPlan {
     assert!(steps >= 1 && k_on >= 1);
-    let interior = RowSpan::new(radius.min(rows), rows.saturating_sub(radius).max(radius.min(rows)));
+    let rspan = RowSpan::new(radius.min(rows), rows.saturating_sub(radius).max(radius.min(rows)));
+    let cspan = RowSpan::new(radius.min(cols), cols.saturating_sub(radius).max(radius.min(cols)));
+    let interior = Rect::of_spans(rspan, cspan);
     let mut ops = Vec::new();
     let mut s = 1usize;
     while s <= steps {
@@ -346,7 +521,9 @@ pub fn plan_run_devices(
         let plan = match scheme {
             Scheme::So2dr => so2dr_epoch(dc, devs, steps, k_on, done),
             Scheme::ResReu => resreu_epoch(dc, devs, steps, done),
-            Scheme::InCore => incore_epoch(dc.rows(), dc.radius(), steps, k_on, done),
+            Scheme::InCore => {
+                incore_epoch(dc.rows(), dc.cols(), dc.radius(), steps, k_on, done)
+            }
         };
         plans.push(plan);
         done += steps;
@@ -481,12 +658,12 @@ impl ResidencySummary {
     }
 }
 
-fn htod_bytes_of(plans: &[EpochPlan], dc: &Decomposition) -> u64 {
+fn htod_bytes_of(plans: &[EpochPlan]) -> u64 {
     plans
         .iter()
         .flat_map(|p| p.iter_ops())
         .map(|(_, _, op)| match op {
-            ChunkOp::HtoD { span, .. } => dc.span_bytes(*span),
+            ChunkOp::HtoD { rect, .. } => rect.bytes_f32(),
             _ => 0,
         })
         .sum()
@@ -500,8 +677,10 @@ fn htod_bytes_of(plans: &[EpochPlan], dc: &Decomposition) -> u64 {
 /// halo regions are re-published every epoch, so quantization error
 /// would compound instead of staying one-round-trip-bounded. Applied as
 /// a post-pass so the real-numerics executor and the DES interpret the
-/// same codec decisions.
-pub fn apply_codec_policy(plans: &mut [EpochPlan], dc: &Decomposition, mode: CompressMode) {
+/// same codec decisions, and so the 2-D tile plans' strided hops are
+/// tagged exactly like any other transfer (payload size is the rect
+/// area — the policy needs no decomposition handle).
+pub fn apply_codec_policy(plans: &mut [EpochPlan], mode: CompressMode) {
     if mode == CompressMode::Off {
         return; // builders already emitted identity everywhere
     }
@@ -509,13 +688,13 @@ pub fn apply_codec_policy(plans: &mut [EpochPlan], dc: &Decomposition, mode: Com
         for cp in plan.chunks.iter_mut() {
             for op in cp.ops.iter_mut() {
                 match op {
-                    ChunkOp::HtoD { span, codec }
-                    | ChunkOp::DtoH { span, codec }
-                    | ChunkOp::Evict { span, codec } => {
-                        *codec = mode.host_codec(dc.span_bytes(*span));
+                    ChunkOp::HtoD { rect, codec }
+                    | ChunkOp::DtoH { rect, codec }
+                    | ChunkOp::Evict { rect, codec } => {
+                        *codec = mode.host_codec(rect.bytes_f32());
                     }
-                    ChunkOp::D2D { span, codec, .. } => {
-                        *codec = mode.link_codec(dc.span_bytes(*span));
+                    ChunkOp::D2D { rect, codec, .. } => {
+                        *codec = mode.link_codec(rect.bytes_f32());
                     }
                     _ => {}
                 }
@@ -546,6 +725,10 @@ fn resident_epoch(
     assert_eq!(devs.n_chunks(), dc.n_chunks(), "device assignment shape mismatch");
     dc.check(steps);
     let d = dc.n_chunks();
+    let cols = dc.cols();
+    let radius = dc.radius();
+    let full = |s: RowSpan| Rect::from_spans(s, 0, cols);
+    let win = |s: RowSpan| Rect::from_spans(s, radius, cols - radius);
     // Fetch span a chunk needs at epoch start, beyond its settled rows.
     let fetch_low = |i: usize| -> RowSpan {
         match scheme {
@@ -568,21 +751,21 @@ fn resident_epoch(
         // regions the neighbors will fetch — epoch-start data, extracted
         // before any kernel of this epoch overwrites it.
         if kept[i] {
-            ops.push(ChunkOp::Resident { span: settled_prev });
+            ops.push(ChunkOp::Resident { rect: full(settled_prev) });
         } else {
-            ops.push(ChunkOp::HtoD { span: settled_prev, codec: CodecKind::Identity });
+            ops.push(ChunkOp::HtoD { rect: full(settled_prev), codec: CodecKind::Identity });
         }
         // This chunk settles the lower neighbor's upper fetch span and
         // the upper neighbor's lower fetch span.
         if i > 0 {
             let span = fetch_high(i - 1);
             if !span.is_empty() {
-                ops.push(ChunkOp::RsWrite(RegionOp { span, time_step: 0 }));
+                ops.push(ChunkOp::RsWrite(RegionOp { rect: full(span), time_step: 0 }));
                 if devs.device_of(i) != devs.device_of(i - 1) {
                     ops.push(ChunkOp::D2D {
                         src_dev: devs.device_of(i),
                         dst_dev: devs.device_of(i - 1),
-                        span,
+                        rect: full(span),
                         time_step: 0,
                         codec: CodecKind::Identity,
                     });
@@ -592,12 +775,12 @@ fn resident_epoch(
         if i + 1 < d {
             let span = fetch_low(i + 1);
             if !span.is_empty() {
-                ops.push(ChunkOp::RsWrite(RegionOp { span, time_step: 0 }));
+                ops.push(ChunkOp::RsWrite(RegionOp { rect: full(span), time_step: 0 }));
                 if devs.device_of(i) != devs.device_of(i + 1) {
                     ops.push(ChunkOp::D2D {
                         src_dev: devs.device_of(i),
                         dst_dev: devs.device_of(i + 1),
-                        span,
+                        rect: full(span),
                         time_step: 0,
                         codec: CodecKind::Identity,
                     });
@@ -608,7 +791,7 @@ fn resident_epoch(
         // retire.
         for span in [fetch_low(i), fetch_high(i)] {
             if !span.is_empty() {
-                ops.push(ChunkOp::Fetch(RegionOp { span, time_step: 0 }));
+                ops.push(ChunkOp::Fetch(RegionOp { rect: full(span), time_step: 0 }));
             }
         }
         match scheme {
@@ -616,8 +799,8 @@ fn resident_epoch(
                 let mut s = 1usize;
                 while s <= steps {
                     let fused = k_on.min(steps - s + 1);
-                    let windows: Vec<RowSpan> =
-                        (0..fused).map(|t| dc.so2dr_window(i, steps, s + t)).collect();
+                    let windows: Vec<Rect> =
+                        (0..fused).map(|t| win(dc.so2dr_window(i, steps, s + t))).collect();
                     ops.push(ChunkOp::Kernel(KernelInvocation { first_step: s, windows }));
                     s += fused;
                 }
@@ -626,12 +809,15 @@ fn resident_epoch(
                 for s in 1..=steps {
                     let w = dc.resreu_rs_write(i, s);
                     if !w.is_empty() {
-                        ops.push(ChunkOp::RsWrite(RegionOp { span: w, time_step: s - 1 }));
+                        ops.push(ChunkOp::RsWrite(RegionOp {
+                            rect: full(w),
+                            time_step: s - 1,
+                        }));
                         if devs.crosses_boundary(i) {
                             ops.push(ChunkOp::D2D {
                                 src_dev: devs.device_of(i),
                                 dst_dev: devs.device_of(i + 1),
-                                span: w,
+                                rect: full(w),
                                 time_step: s - 1,
                                 codec: CodecKind::Identity,
                             });
@@ -639,11 +825,11 @@ fn resident_epoch(
                     }
                     let r = dc.resreu_rs_read(i, s);
                     if !r.is_empty() {
-                        ops.push(ChunkOp::RsRead(RegionOp { span: r, time_step: s - 1 }));
+                        ops.push(ChunkOp::RsRead(RegionOp { rect: full(r), time_step: s - 1 }));
                     }
                     ops.push(ChunkOp::Kernel(KernelInvocation {
                         first_step: s,
-                        windows: vec![dc.resreu_window(i, steps, s)],
+                        windows: vec![win(dc.resreu_window(i, steps, s))],
                     }));
                 }
             }
@@ -651,9 +837,9 @@ fn resident_epoch(
         }
         let settled_now = dc.settled(scheme, i, steps);
         if final_epoch {
-            ops.push(ChunkOp::DtoH { span: settled_now, codec: CodecKind::Identity });
+            ops.push(ChunkOp::DtoH { rect: full(settled_now), codec: CodecKind::Identity });
         } else if !kept[i] {
-            ops.push(ChunkOp::Evict { span: settled_now, codec: CodecKind::Identity });
+            ops.push(ChunkOp::Evict { rect: full(settled_now), codec: CodecKind::Identity });
         }
         chunks.push(ChunkEpochPlan { chunk: i, device: devs.device_of(i), ops });
     }
@@ -683,7 +869,7 @@ pub fn plan_run_resident(
 ) -> (Vec<EpochPlan>, ResidencySummary) {
     assert!(n >= 1 && s_tb >= 1);
     let staged = plan_run_devices(scheme, dc, devs, n, s_tb, k_on);
-    let staged_htod = htod_bytes_of(&staged, dc);
+    let staged_htod = htod_bytes_of(&staged);
     if cfg.mode == ResidentMode::Off || scheme == Scheme::InCore || staged.len() < 2 {
         let summary = ResidencySummary::disabled(dc.n_chunks(), staged_htod);
         return (staged, summary);
@@ -721,13 +907,13 @@ pub fn plan_run_resident(
             let mut plan = p.clone();
             plan.resident = true;
             for cp in plan.chunks.iter_mut() {
-                let Some(ChunkOp::DtoH { span, codec }) = cp.ops.last().cloned() else {
+                let Some(ChunkOp::DtoH { rect, codec }) = cp.ops.last().cloned() else {
                     unreachable!("staged epochs end with DtoH");
                 };
                 if !final_epoch {
                     cp.ops.pop();
                     if !kept[cp.chunk] {
-                        cp.ops.push(ChunkOp::Evict { span, codec });
+                        cp.ops.push(ChunkOp::Evict { rect, codec });
                     }
                 }
             }
@@ -753,7 +939,7 @@ pub fn plan_run_resident(
         .flat_map(|p| p.iter_ops())
         .filter(|(_, _, op)| matches!(op, ChunkOp::Evict { .. }))
         .count();
-    let planned_htod = htod_bytes_of(&plans, dc);
+    let planned_htod = htod_bytes_of(&plans);
     let summary = ResidencySummary {
         enabled: true,
         kept,
@@ -796,6 +982,28 @@ mod tests {
     }
 
     #[test]
+    fn row_band_ops_are_full_width_rects() {
+        let plan = so2dr_epoch(&dc(), &one_dev(), 8, 4, 0);
+        for (_, _, op) in plan.iter_ops() {
+            match op {
+                ChunkOp::HtoD { rect, .. } | ChunkOp::DtoH { rect, .. } => {
+                    assert_eq!((rect.c0, rect.c1), (0, 64), "{op:?}");
+                }
+                ChunkOp::RsRead(r) | ChunkOp::RsWrite(r) => {
+                    assert_eq!((r.rect.c0, r.rect.c1), (0, 64));
+                }
+                ChunkOp::Kernel(k) => {
+                    for w in &k.windows {
+                        // Windows carry the Dirichlet column interior.
+                        assert_eq!((w.c0, w.c1), (2, 62));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
     fn so2dr_residual_kernel() {
         let plan = so2dr_epoch(&dc(), &one_dev(), 7, 4, 0);
         let kernels: Vec<&KernelInvocation> = plan.chunks[0]
@@ -810,6 +1018,7 @@ mod tests {
         assert_eq!(kernels[0].fused_steps(), 4);
         assert_eq!(kernels[1].fused_steps(), 3); // k'_off % k_on
         assert_eq!(kernels[1].first_step, 5);
+        assert!(kernels[0].window_area() > 0);
     }
 
     #[test]
@@ -848,7 +1057,7 @@ mod tests {
 
     #[test]
     fn resreu_causality_pairs() {
-        // RsWrite(i, s) span+time must equal RsRead(i+1, s).
+        // RsWrite(i, s) rect+time must equal RsRead(i+1, s).
         let plan = resreu_epoch(&dc(), &one_dev(), 5, 0);
         for i in 0..3 {
             let writes: Vec<&RegionOp> = plan.chunks[i]
@@ -910,7 +1119,7 @@ mod codec_tests {
         let (host, lossy, lossless) = count_codecs(&plans);
         assert!(host > 0);
         assert_eq!((lossy, lossless), (0, 0));
-        apply_codec_policy(&mut plans, &dc, CompressMode::Off);
+        apply_codec_policy(&mut plans, CompressMode::Off);
         assert_eq!(count_codecs(&plans), (host, 0, 0));
     }
 
@@ -919,7 +1128,7 @@ mod codec_tests {
         let dc = Decomposition::new(240, 64, 4, 2);
         let devs = DeviceAssignment::contiguous(4, 4);
         let mut plans = plan_run_devices(Scheme::ResReu, &dc, &devs, 10, 5, 1);
-        apply_codec_policy(&mut plans, &dc, CompressMode::Bf16);
+        apply_codec_policy(&mut plans, CompressMode::Bf16);
         for (_, _, op) in plans.iter().flat_map(|p| p.iter_ops()) {
             match op {
                 ChunkOp::HtoD { codec, .. }
@@ -946,7 +1155,7 @@ mod codec_tests {
             4,
             &ResidencyConfig::auto(1, 3), // tight cap: every epoch evicts
         );
-        apply_codec_policy(&mut plans, &dc, CompressMode::Lossless);
+        apply_codec_policy(&mut plans, CompressMode::Lossless);
         let mut evicts = 0;
         for (_, _, op) in plans.iter().flat_map(|p| p.iter_ops()) {
             match op {
@@ -973,20 +1182,20 @@ mod codec_tests {
         let dc = Decomposition::new(rows, cols, 4, 1);
         let devs = DeviceAssignment::contiguous(4, 4);
         let mut plans = plan_run_devices(Scheme::ResReu, &dc, &devs, 4, 4, 1);
-        apply_codec_policy(&mut plans, &dc, CompressMode::Auto);
+        apply_codec_policy(&mut plans, CompressMode::Auto);
         let (mut big_lossless, mut small_identity) = (false, false);
         for (_, _, op) in plans.iter().flat_map(|p| p.iter_ops()) {
             match op {
-                ChunkOp::HtoD { span, codec } | ChunkOp::DtoH { span, codec } => {
-                    if dc.span_bytes(*span) >= AUTO_MIN_BYTES {
+                ChunkOp::HtoD { rect, codec } | ChunkOp::DtoH { rect, codec } => {
+                    if rect.bytes_f32() >= AUTO_MIN_BYTES {
                         assert_eq!(*codec, CodecKind::Lossless);
                         big_lossless = true;
                     } else {
                         assert_eq!(*codec, CodecKind::Identity);
                     }
                 }
-                ChunkOp::D2D { span, codec, .. } => {
-                    assert!(dc.span_bytes(*span) < AUTO_MIN_BYTES);
+                ChunkOp::D2D { rect, codec, .. } => {
+                    assert!(rect.bytes_f32() < AUTO_MIN_BYTES);
                     assert_eq!(*codec, CodecKind::Identity);
                     small_identity = true;
                 }
@@ -994,6 +1203,25 @@ mod codec_tests {
             }
         }
         assert!(big_lossless && small_identity, "both policy branches exercised");
+    }
+
+    #[test]
+    fn tile_plan_hops_are_tagged_like_any_other() {
+        // The codec post-pass needs no decomposition handle: the tile
+        // plan's strided column hops are tagged by rect size alone.
+        let dc = Decomposition2d::try_new(96, 96, 2, 2, 1).unwrap();
+        let devs = DeviceAssignment::contiguous(4, 4);
+        let mut plans = plan_run_tiles(Scheme::So2dr, &dc, &devs, 8, 4, 2).unwrap();
+        apply_codec_policy(&mut plans, CompressMode::Lossless);
+        let (host, _, lossless) = count_codecs(&plans);
+        assert!(host > 0);
+        let d2d = plans
+            .iter()
+            .flat_map(|p| p.iter_ops())
+            .filter(|(_, _, op)| matches!(op, ChunkOp::D2D { .. }))
+            .count();
+        assert!(d2d > 0, "fully sharded tiling must exchange over the link");
+        assert_eq!(lossless, host + d2d, "every transfer hop tagged");
     }
 }
 
@@ -1015,8 +1243,8 @@ mod device_tests {
     /// - every region a kernel step depends on arrived before the kernel
     ///   (reads precede the kernel of their `first_step` in op order).
     fn check_causality(plan: &EpochPlan) {
-        // (span.lo, span.hi, time_step) -> devices holding the region.
-        let mut available: HashMap<(usize, usize, usize), HashSet<usize>> = HashMap::new();
+        // (rect, time_step) -> devices holding the region.
+        let mut available: HashMap<(Rect, usize), HashSet<usize>> = HashMap::new();
         if plan.resident {
             // Resident epochs run two-phase: every chunk's arrival +
             // publish prefix executes before any chunk's fetches/kernels,
@@ -1025,16 +1253,10 @@ mod device_tests {
                 for op in &cp.ops[..phase_a_len(&cp.ops)] {
                     match op {
                         ChunkOp::RsWrite(r) => {
-                            available
-                                .entry((r.span.lo, r.span.hi, r.time_step))
-                                .or_default()
-                                .insert(cp.device);
+                            available.entry((r.rect, r.time_step)).or_default().insert(cp.device);
                         }
-                        ChunkOp::D2D { dst_dev, span, time_step, .. } => {
-                            available
-                                .entry((span.lo, span.hi, *time_step))
-                                .or_default()
-                                .insert(*dst_dev);
+                        ChunkOp::D2D { dst_dev, rect, time_step, .. } => {
+                            available.entry((*rect, *time_step)).or_default().insert(*dst_dev);
                         }
                         _ => {}
                     }
@@ -1053,33 +1275,26 @@ mod device_tests {
                             r.time_step,
                             steps_done
                         );
-                        available
-                            .entry((r.span.lo, r.span.hi, r.time_step))
-                            .or_default()
-                            .insert(cp.device);
+                        available.entry((r.rect, r.time_step)).or_default().insert(cp.device);
                     }
-                    ChunkOp::D2D { src_dev, dst_dev, span, time_step, .. } => {
+                    ChunkOp::D2D { src_dev, dst_dev, rect, time_step, .. } => {
                         assert_eq!(*src_dev, cp.device, "D2D source must be the producer");
                         assert_ne!(src_dev, dst_dev, "D2D must cross devices");
                         let holders = available
-                            .get(&(span.lo, span.hi, *time_step))
-                            .unwrap_or_else(|| panic!("D2D of unpublished region {span}"));
+                            .get(&(*rect, *time_step))
+                            .unwrap_or_else(|| panic!("D2D of unpublished region {rect}"));
                         assert!(
                             holders.contains(src_dev),
-                            "D2D from dev {src_dev} which does not hold {span} @t{time_step}"
+                            "D2D from dev {src_dev} which does not hold {rect} @t{time_step}"
                         );
-                        available
-                            .entry((span.lo, span.hi, *time_step))
-                            .or_default()
-                            .insert(*dst_dev);
+                        available.entry((*rect, *time_step)).or_default().insert(*dst_dev);
                     }
                     ChunkOp::RsRead(r) => {
-                        let holders = available
-                            .get(&(r.span.lo, r.span.hi, r.time_step))
-                            .unwrap_or_else(|| {
+                        let holders =
+                            available.get(&(r.rect, r.time_step)).unwrap_or_else(|| {
                                 panic!(
                                     "chunk {} reads unpublished region {} @t{}",
-                                    cp.chunk, r.span, r.time_step
+                                    cp.chunk, r.rect, r.time_step
                                 )
                             });
                         assert!(
@@ -1087,7 +1302,7 @@ mod device_tests {
                             "chunk {} (dev {}) reads {} @t{} not on its device",
                             cp.chunk,
                             cp.device,
-                            r.span,
+                            r.rect,
                             r.time_step
                         );
                         // Halo data must predate the steps it feeds.
@@ -1107,17 +1322,16 @@ mod device_tests {
                         // region must sit on the reader's device.
                         assert_eq!(r.time_step, 0, "fetches move epoch-start data");
                         assert_eq!(steps_done, 0, "fetches precede kernels");
-                        let holders = available
-                            .get(&(r.span.lo, r.span.hi, r.time_step))
-                            .unwrap_or_else(|| {
-                                panic!("chunk {} fetches unpublished region {}", cp.chunk, r.span)
+                        let holders =
+                            available.get(&(r.rect, r.time_step)).unwrap_or_else(|| {
+                                panic!("chunk {} fetches unpublished region {}", cp.chunk, r.rect)
                             });
                         assert!(
                             holders.contains(&cp.device),
                             "chunk {} (dev {}) fetches {} not on its device",
                             cp.chunk,
                             cp.device,
-                            r.span
+                            r.rect
                         );
                     }
                     ChunkOp::Resident { .. } | ChunkOp::Evict { .. } => {
@@ -1147,6 +1361,15 @@ mod device_tests {
     }
 
     #[test]
+    fn tile_causality_across_device_counts() {
+        let dc = Decomposition2d::try_new(120, 96, 2, 3, 2).unwrap();
+        for n_dev in [1, 2, 3, 6] {
+            let devs = DeviceAssignment::contiguous(6, n_dev);
+            check_causality(&so2dr_tiles_epoch(&dc, &devs, 4, 2, 0));
+        }
+    }
+
+    #[test]
     fn d2d_emitted_exactly_at_device_boundaries() {
         let devs = DeviceAssignment::contiguous(4, 2); // boundary between chunks 1|2
         let plan = so2dr_epoch(&dc(), &devs, 8, 4, 0);
@@ -1158,14 +1381,41 @@ mod device_tests {
                 .collect();
             if cp.chunk == 1 {
                 assert_eq!(d2d.len(), 1, "one raw-halo exchange per epoch at the boundary");
-                if let ChunkOp::D2D { src_dev, dst_dev, span, time_step, .. } = d2d[0] {
+                if let ChunkOp::D2D { src_dev, dst_dev, rect, time_step, .. } = d2d[0] {
                     assert_eq!((*src_dev, *dst_dev, *time_step), (0, 1, 0));
-                    assert_eq!(*span, dc().so2dr_rs_write(1, 8));
+                    assert_eq!(rect.rows(), dc().so2dr_rs_write(1, 8));
                 }
             } else {
                 assert!(d2d.is_empty(), "chunk {} must not exchange", cp.chunk);
             }
         }
+    }
+
+    #[test]
+    fn tile_d2d_follows_the_tile_to_device_assignment() {
+        // 2x2 tiles over 2 devices: tiles {0,1} on dev 0, {2,3} on dev 1.
+        // Only the south shares (consumer t+tx) cross the boundary.
+        let dc = Decomposition2d::try_new(96, 96, 2, 2, 1).unwrap();
+        let devs = DeviceAssignment::contiguous(4, 2);
+        let plan = so2dr_tiles_epoch(&dc, &devs, 4, 2, 0);
+        let mut crossings = Vec::new();
+        for cp in &plan.chunks {
+            for op in &cp.ops {
+                if let ChunkOp::D2D { src_dev, dst_dev, rect, .. } = op {
+                    crossings.push((cp.chunk, *src_dev, *dst_dev, *rect));
+                }
+            }
+        }
+        // Tiles 0 and 1 publish south bands to tiles 2 and 3.
+        assert_eq!(crossings.len(), 2, "{crossings:?}");
+        for (t, src, dst, rect) in &crossings {
+            assert!(*t < 2);
+            assert_eq!((*src, *dst), (0, 1));
+            assert_eq!(*rect, dc.so2dr_write_south(*t, 4));
+        }
+        // East shares stay on-device (0->1 and 2->3 are same-device).
+        let plan1 = so2dr_tiles_epoch(&dc, &DeviceAssignment::single(4), 4, 2, 0);
+        assert!(plan1.iter_ops().all(|(_, _, op)| !matches!(op, ChunkOp::D2D { .. })));
     }
 
     #[test]
@@ -1186,16 +1436,18 @@ mod device_tests {
     #[test]
     fn d2d_follows_its_write_immediately() {
         let devs = DeviceAssignment::contiguous(4, 4);
+        let dc2 = Decomposition2d::try_new(96, 96, 2, 2, 1).unwrap();
         for plan in [
             so2dr_epoch(&dc(), &devs, 6, 2, 0),
             resreu_epoch(&dc(), &devs, 5, 0),
+            so2dr_tiles_epoch(&dc2, &devs, 4, 2, 0),
         ] {
             for cp in &plan.chunks {
                 for (oi, op) in cp.ops.iter().enumerate() {
-                    if let ChunkOp::D2D { span, time_step, .. } = op {
+                    if let ChunkOp::D2D { rect, time_step, .. } = op {
                         match &cp.ops[oi - 1] {
                             ChunkOp::RsWrite(r) => {
-                                assert_eq!((r.span, r.time_step), (*span, *time_step));
+                                assert_eq!((r.rect, r.time_step), (*rect, *time_step));
                             }
                             other => panic!("D2D not preceded by its RsWrite: {other:?}"),
                         }
@@ -1319,7 +1571,7 @@ mod device_tests {
 
     #[test]
     fn resident_epoch_fetches_match_publishes_exactly() {
-        // RS keys are exact (span, time): every fetch must find a
+        // RS keys are exact (rect, time): every fetch must find a
         // same-key publish, on the right device.
         let dc = dc();
         for (scheme, k_on) in [(Scheme::So2dr, 2), (Scheme::ResReu, 1)] {
@@ -1327,15 +1579,15 @@ mod device_tests {
             let (plans, _) =
                 plan_run_resident(scheme, &dc, &devs, 20, 5, k_on, &ResidencyConfig::force(3));
             for plan in plans.iter().skip(1) {
-                let mut published: HashSet<(usize, usize, usize, usize)> = HashSet::new();
+                let mut published: HashSet<(Rect, usize, usize)> = HashSet::new();
                 for cp in &plan.chunks {
                     for op in &cp.ops[..phase_a_len(&cp.ops)] {
                         match op {
                             ChunkOp::RsWrite(r) => {
-                                published.insert((r.span.lo, r.span.hi, r.time_step, cp.device));
+                                published.insert((r.rect, r.time_step, cp.device));
                             }
-                            ChunkOp::D2D { dst_dev, span, time_step, .. } => {
-                                published.insert((span.lo, span.hi, *time_step, *dst_dev));
+                            ChunkOp::D2D { dst_dev, rect, time_step, .. } => {
+                                published.insert((*rect, *time_step, *dst_dev));
                             }
                             _ => {}
                         }
@@ -1345,13 +1597,11 @@ mod device_tests {
                     for op in &cp.ops {
                         if let ChunkOp::Fetch(r) = op {
                             assert!(
-                                published.contains(&(
-                                    r.span.lo, r.span.hi, r.time_step, cp.device
-                                )),
+                                published.contains(&(r.rect, r.time_step, cp.device)),
                                 "{}: chunk {} fetch {} has no same-device publish",
                                 scheme.name(),
                                 cp.chunk,
-                                r.span
+                                r.rect
                             );
                         }
                     }
@@ -1387,6 +1637,141 @@ mod device_tests {
                     cp.ops.iter().filter(|o| matches!(o, ChunkOp::Fetch(_))).count();
                 assert_eq!(fetches, 2, "chunk {}", cp.chunk);
             }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tile_tests {
+    use super::*;
+
+    /// The load-bearing degenerate-equivalence check: a 1xN tiling (one
+    /// tile column) must reproduce the 1-D row-band plan op-for-op —
+    /// same rects, same codecs, same order, same device placement.
+    #[test]
+    fn tile_plans_degenerate_to_row_plans() {
+        let (rows, cols, d, r) = (240usize, 64usize, 4usize, 2usize);
+        let dc1 = Decomposition::new(rows, cols, d, r);
+        let dc2 = Decomposition2d::try_new(rows, cols, d, 1, r).unwrap();
+        for n_dev in [1usize, 2, 4] {
+            let devs = DeviceAssignment::contiguous(d, n_dev);
+            let rows_plans = plan_run_devices(Scheme::So2dr, &dc1, &devs, 20, 8, 4);
+            let tile_plans = plan_run_tiles(Scheme::So2dr, &dc2, &devs, 20, 8, 4).unwrap();
+            assert_eq!(rows_plans.len(), tile_plans.len());
+            for (a, b) in rows_plans.iter().zip(&tile_plans) {
+                assert_eq!(a.steps, b.steps);
+                assert_eq!(a.start_step, b.start_step);
+                assert_eq!(a.n_devices, b.n_devices);
+                assert_eq!(a.chunks.len(), b.chunks.len());
+                for (ca, cb) in a.chunks.iter().zip(&b.chunks) {
+                    assert_eq!(ca.chunk, cb.chunk);
+                    assert_eq!(ca.device, cb.device);
+                    assert_eq!(ca.ops, cb.ops, "chunk {} on {n_dev} devices", ca.chunk);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_epoch_structure_interior_tile() {
+        // 3x3 tiles: the center tile reads north + west, writes south +
+        // east, and runs ceil(steps/k_on) kernels.
+        let dc = Decomposition2d::try_new(120, 120, 3, 3, 1).unwrap();
+        let plan = so2dr_tiles_epoch(&dc, &DeviceAssignment::single(9), 6, 4, 0);
+        let center = &plan.chunks[4]; // tile (1,1)
+        assert!(matches!(center.ops[0], ChunkOp::HtoD { .. }));
+        let reads = center.ops.iter().filter(|o| matches!(o, ChunkOp::RsRead(_))).count();
+        let writes = center.ops.iter().filter(|o| matches!(o, ChunkOp::RsWrite(_))).count();
+        let kernels = center.ops.iter().filter(|o| matches!(o, ChunkOp::Kernel(_))).count();
+        assert_eq!((reads, writes, kernels), (2, 2, 2));
+        assert!(matches!(center.ops.last(), Some(ChunkOp::DtoH { .. })));
+        // Corner tiles: (0,0) reads nothing, writes south + east;
+        // (2,2) reads north + west, writes nothing.
+        let nw = &plan.chunks[0];
+        assert_eq!(nw.ops.iter().filter(|o| matches!(o, ChunkOp::RsRead(_))).count(), 0);
+        assert_eq!(nw.ops.iter().filter(|o| matches!(o, ChunkOp::RsWrite(_))).count(), 2);
+        let se = &plan.chunks[8];
+        assert_eq!(se.ops.iter().filter(|o| matches!(o, ChunkOp::RsRead(_))).count(), 2);
+        assert_eq!(se.ops.iter().filter(|o| matches!(o, ChunkOp::RsWrite(_))).count(), 0);
+    }
+
+    #[test]
+    fn tile_reads_precede_writes_precede_kernels() {
+        // Publishes must extract epoch-start data: every RsWrite sits
+        // after the tile's reads (its band may include read data) and
+        // before its first kernel (which would overwrite it).
+        let dc = Decomposition2d::try_new(90, 110, 3, 2, 1).unwrap();
+        let plan = so2dr_tiles_epoch(&dc, &DeviceAssignment::contiguous(6, 3), 5, 2, 0);
+        for cp in &plan.chunks {
+            let first_kernel =
+                cp.ops.iter().position(|o| matches!(o, ChunkOp::Kernel(_))).unwrap();
+            let last_read = cp
+                .ops
+                .iter()
+                .rposition(|o| matches!(o, ChunkOp::RsRead(_)))
+                .unwrap_or(0);
+            for (oi, op) in cp.ops.iter().enumerate() {
+                if matches!(op, ChunkOp::RsWrite(_)) {
+                    assert!(oi < first_kernel, "tile {}: write after kernel", cp.chunk);
+                    assert!(oi > last_read, "tile {}: write before a read", cp.chunk);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_run_tiles_rejects_unsupported_schemes() {
+        let dc = Decomposition2d::try_new(96, 96, 2, 2, 1).unwrap();
+        let devs = DeviceAssignment::single(4);
+        let err = plan_run_tiles(Scheme::ResReu, &dc, &devs, 8, 4, 1).unwrap_err();
+        assert!(err.to_string().contains("resreu"), "{err}");
+        assert!(err.to_string().contains("--decomp rows"), "{err}");
+        let err = plan_run_tiles(Scheme::InCore, &dc, &devs, 8, 4, 1).unwrap_err();
+        assert!(err.to_string().contains("incore"), "{err}");
+    }
+
+    #[test]
+    fn plan_run_tiles_rejects_infeasible_tilings() {
+        // 4x4 tiles of 8x8 cells cannot host an s_tb=8 skirt at r=1.
+        let dc = Decomposition2d::try_new(32, 32, 4, 4, 1).unwrap();
+        let devs = DeviceAssignment::single(16);
+        let err = plan_run_tiles(Scheme::So2dr, &dc, &devs, 16, 8, 4).unwrap_err();
+        assert!(err.to_string().contains("infeasible"), "{err}");
+        // But a single-step epoch fits (skirt 1 + r 1 <= 8).
+        assert!(plan_run_tiles(Scheme::So2dr, &dc, &devs, 4, 1, 1).is_ok());
+    }
+
+    #[test]
+    fn tile_epoch_split_matches_row_split() {
+        let dc = Decomposition2d::try_new(96, 96, 2, 2, 1).unwrap();
+        let devs = DeviceAssignment::single(4);
+        let plans = plan_run_tiles(Scheme::So2dr, &dc, &devs, 20, 8, 4).unwrap();
+        assert_eq!(plans.len(), 3);
+        assert_eq!(plans[0].steps, 8);
+        assert_eq!(plans[2].steps, 4);
+        assert_eq!(plans[2].start_step, 16);
+        assert!(plans.iter().all(|p| !p.resident));
+    }
+
+    #[test]
+    fn tile_transfers_partition_the_grid() {
+        let dc = Decomposition2d::try_new(100, 120, 2, 3, 2).unwrap();
+        let plan = so2dr_tiles_epoch(&dc, &DeviceAssignment::single(6), 4, 2, 0);
+        for pick in [0usize, 1] {
+            let mut cover = vec![0u8; 100 * 120];
+            for (_, _, op) in plan.iter_ops() {
+                let rect = match (pick, op) {
+                    (0, ChunkOp::HtoD { rect, .. }) => rect,
+                    (1, ChunkOp::DtoH { rect, .. }) => rect,
+                    _ => continue,
+                };
+                for r in rect.r0..rect.r1 {
+                    for c in rect.c0..rect.c1 {
+                        cover[r * 120 + c] += 1;
+                    }
+                }
+            }
+            assert!(cover.iter().all(|&x| x == 1), "direction {pick} must partition");
         }
     }
 }

@@ -1,7 +1,7 @@
 //! Run configuration (paper Table I) with TOML loading and validation.
 
 use super::toml_mini::{parse, Section};
-use crate::chunking::{ResidentMode, Scheme};
+use crate::chunking::{DecompMode, ResidentMode, Scheme};
 use crate::stencil::StencilKind;
 use crate::transfer::CompressMode;
 use anyhow::{bail, Context, Result};
@@ -15,8 +15,14 @@ pub struct RunConfig {
     /// Grid size along each dimension (`sz`).
     pub rows: usize,
     pub cols: usize,
-    /// Number of chunks (`d`).
+    /// Number of chunks (`d`) under the row-band decomposition.
     pub d: usize,
+    /// Decomposition axis: 1-D row bands (default) or 2-D tiles.
+    pub decomp: DecompMode,
+    /// Tiles along the column axis (`--chunks-x`; tiles mode only).
+    pub chunks_x: usize,
+    /// Tiles along the row axis (`--chunks-y`; tiles mode only).
+    pub chunks_y: usize,
     /// TB steps per epoch (`S_TB`).
     pub s_tb: usize,
     /// Fused steps per kernel (`k_on`; structurally 1 for ResReu).
@@ -68,6 +74,9 @@ impl Default for RunConfig {
             rows: 512,
             cols: 512,
             d: 4,
+            decomp: DecompMode::Rows,
+            chunks_x: 1,
+            chunks_y: 1,
             s_tb: 8,
             k_on: 4,
             n: 64,
@@ -112,6 +121,13 @@ impl RunConfig {
                         cfg.cols = cfg.rows;
                     }
                     "d" => cfg.d = s.usize_req("d")?,
+                    "decomp" => {
+                        let v = s.str_req("decomp")?;
+                        cfg.decomp = DecompMode::parse(&v)
+                            .with_context(|| format!("bad decomp {v:?} (rows|tiles)"))?;
+                    }
+                    "chunks_x" => cfg.chunks_x = s.usize_req("chunks_x")?,
+                    "chunks_y" => cfg.chunks_y = s.usize_req("chunks_y")?,
                     "s_tb" => cfg.s_tb = s.usize_req("s_tb")?,
                     "k_on" => cfg.k_on = s.usize_req("k_on")?,
                     "n" => cfg.n = s.usize_req("n")?,
@@ -154,7 +170,54 @@ impl RunConfig {
         if self.d == 0 || self.s_tb == 0 || self.k_on == 0 || self.n_strm == 0 {
             bail!("d/s_tb/k_on/n_strm must be positive");
         }
-        validate_devices(self.scheme, self.d, self.devices)?;
+        if self.chunks_x == 0 || self.chunks_y == 0 {
+            bail!("chunks_x/chunks_y must be positive");
+        }
+        let skirt = self.s_tb * self.kind.radius();
+        match self.decomp {
+            DecompMode::Rows => {
+                if self.chunks_x != 1 || self.chunks_y != 1 {
+                    bail!(
+                        "chunks_x/chunks_y require decomp = \"tiles\" \
+                         (the row-band decomposition is shaped by d)"
+                    );
+                }
+                validate_devices(self.scheme, self.d, self.devices)?;
+                let min_chunk = self.rows / self.d;
+                if self.scheme != Scheme::InCore && skirt + self.kind.radius() > min_chunk {
+                    bail!(
+                        "infeasible: halo working space {} + r exceeds chunk height {} \
+                         (W_halo * S_TB <= D_chk, paper §IV-C)",
+                        skirt,
+                        min_chunk
+                    );
+                }
+            }
+            DecompMode::Tiles => {
+                // The tile planner re-validates with typed errors; this
+                // pre-flight keeps config files failing at load time.
+                if self.scheme != Scheme::So2dr {
+                    bail!(
+                        "decomp = \"tiles\" supports scheme = \"so2dr\" only \
+                         (resreu's skew and incore's residency are 1-D)"
+                    );
+                }
+                if self.resident != ResidentMode::Off {
+                    bail!("decomp = \"tiles\" does not compose with resident yet");
+                }
+                validate_devices(self.scheme, self.chunks_x * self.chunks_y, self.devices)?;
+                let min_side =
+                    (self.rows / self.chunks_y).min(self.cols / self.chunks_x);
+                if skirt + self.kind.radius() > min_side {
+                    bail!(
+                        "infeasible tiling: halo working space {} + r exceeds the minimum \
+                         tile side {} (per-axis W_halo * S_TB <= D_chk)",
+                        skirt,
+                        min_side
+                    );
+                }
+            }
+        }
         if let Some(gbps) = self.d2d_gbps {
             if !(gbps > 0.0) {
                 bail!("d2d_gbps must be positive");
@@ -162,16 +225,6 @@ impl RunConfig {
         }
         if self.scheme == Scheme::ResReu && self.k_on != 1 {
             bail!("ResReu structurally requires k_on = 1 (single-step kernels)");
-        }
-        let min_chunk = self.rows / self.d;
-        let skirt = self.s_tb * self.kind.radius();
-        if self.scheme != Scheme::InCore && skirt + self.kind.radius() > min_chunk {
-            bail!(
-                "infeasible: halo working space {} + r exceeds chunk height {} \
-                 (W_halo * S_TB <= D_chk, paper §IV-C)",
-                skirt,
-                min_chunk
-            );
         }
         match self.backend.as_str() {
             "host-naive" | "host-opt" | "pjrt" => Ok(()),
@@ -181,14 +234,20 @@ impl RunConfig {
 
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
+        let shape = match self.decomp {
+            DecompMode::Rows => format!("d={}", self.d),
+            DecompMode::Tiles => {
+                format!("decomp=tiles chunks={}x{}", self.chunks_y, self.chunks_x)
+            }
+        };
         format!(
-            "{} {} {}x{} d={} S_TB={} k_on={} n={} N_strm={} devices={} resident={} \
+            "{} {} {}x{} {} S_TB={} k_on={} n={} N_strm={} devices={} resident={} \
              compress={} backend={}",
             self.scheme.name(),
             self.kind.name(),
             self.rows,
             self.cols,
-            self.d,
+            shape,
             self.s_tb,
             self.k_on,
             self.n,
@@ -260,7 +319,28 @@ mod tests {
     fn summary_mentions_key_params() {
         let s = RunConfig::default().summary();
         assert!(s.contains("so2dr") && s.contains("S_TB=8") && s.contains("devices=1"));
-        assert!(s.contains("compress=off"));
+        assert!(s.contains("compress=off") && s.contains("d=4"));
+        let tiled = RunConfig {
+            decomp: DecompMode::Tiles,
+            chunks_x: 4,
+            chunks_y: 2,
+            ..RunConfig::default()
+        };
+        tiled.validate().unwrap();
+        let s = tiled.summary();
+        assert!(s.contains("decomp=tiles") && s.contains("chunks=2x4"), "{s}");
+    }
+
+    #[test]
+    fn parses_decomp_keys() {
+        let cfg = RunConfig::from_toml(
+            "decomp = \"tiles\"\nchunks_x = 3\nchunks_y = 2\nsz = 256\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.decomp, DecompMode::Tiles);
+        assert_eq!((cfg.chunks_x, cfg.chunks_y), (3, 2));
+        assert_eq!(RunConfig::default().decomp, DecompMode::Rows);
+        assert!(RunConfig::from_toml("decomp = \"diagonal\"\n").is_err());
     }
 
     #[test]
@@ -294,6 +374,10 @@ mod tests {
             ("seed = 7\n", true),
             ("n_strm = 2\n", true),
             ("compress = \"auto\"\nresident = \"force\"\n", true),
+            ("decomp = \"rows\"\n", true),
+            ("decomp = \"tiles\"\nchunks_x = 2\nchunks_y = 2\n", true),
+            ("decomp = \"tiles\"\nchunks_x = 4\nchunks_y = 1\ndevices = 2\n", true),
+            ("decomp = \"tiles\"\nchunks_x = 2\nchunks_y = 2\ncompress = \"lossless\"\n", true),
             // Unknown keys and sections.
             ("zzz = 1\n", false),
             ("compres = \"off\"\n", false),
@@ -319,6 +403,18 @@ mod tests {
             ("d = 2\ndevices = 4\n", false),
             ("d2d_gbps = -1.0\n", false),
             ("sz = 64\nd = 4\ns_tb = 16\n", false),
+            // Tiles-mode structural violations.
+            ("decomp = \"grid\"\n", false),
+            ("decomp = 2\n", false),
+            ("chunks_x = 2\n", false), // tiling shape without tiles mode
+            ("decomp = \"tiles\"\nchunks_x = 0\n", false),
+            ("decomp = \"tiles\"\nscheme = \"resreu\"\nk_on = 1\n", false),
+            ("decomp = \"tiles\"\nscheme = \"incore\"\n", false),
+            ("decomp = \"tiles\"\nresident = \"force\"\n", false),
+            ("decomp = \"tiles\"\nchunks_x = 2\nchunks_y = 2\ndevices = 5\n", false),
+            // Per-axis feasibility: 8-cell-wide tile columns cannot host
+            // the S_TB=8 skirt at r=1 (9 > 8).
+            ("decomp = \"tiles\"\nsz = 64\nchunks_x = 8\nchunks_y = 1\ns_tb = 8\n", false),
         ];
         for (text, ok) in cases {
             assert_eq!(

@@ -2,16 +2,16 @@
 //! reference sweep.
 
 use crate::chunking::plan::{
-    apply_codec_policy, plan_run_devices, plan_run_resident, ResidencyConfig, ResidencySummary,
-    Scheme,
+    apply_codec_policy, plan_run_devices, plan_run_resident, plan_run_tiles, ResidencyConfig,
+    ResidencySummary, ResidentMode, Scheme,
 };
-use crate::chunking::{Decomposition, DeviceAssignment};
+use crate::chunking::{Decomposition, Decomposition2d, DeviceAssignment};
 use crate::coordinator::backend::KernelBackend;
 use crate::coordinator::exec::{ExecStats, PlanExecutor};
 use crate::core::{Array2, Rect};
 use crate::stencil::{apply_step, StencilEngine, StencilKind};
 use crate::transfer::CompressMode;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Result of a full out-of-core (or in-core) run.
 #[derive(Debug)]
@@ -62,7 +62,7 @@ pub fn run_scheme_on(
     backend: &mut dyn KernelBackend,
 ) -> Result<RunOutcome> {
     crate::config::validate_devices(scheme, d, n_devices)?;
-    let dc = Decomposition::new(initial.rows(), initial.cols(), d, kind.radius());
+    let dc = Decomposition::try_new(initial.rows(), initial.cols(), d, kind.radius())?;
     let devs = if scheme == Scheme::InCore {
         DeviceAssignment::single(dc.n_chunks())
     } else {
@@ -103,19 +103,68 @@ pub fn run_scheme_full(
     compress: CompressMode,
 ) -> Result<RunOutcome> {
     crate::config::validate_devices(scheme, d, n_devices)?;
-    let dc = Decomposition::new(initial.rows(), initial.cols(), d, kind.radius());
+    let dc = Decomposition::try_new(initial.rows(), initial.cols(), d, kind.radius())?;
     let devs = if scheme == Scheme::InCore {
         DeviceAssignment::single(dc.n_chunks())
     } else {
         DeviceAssignment::contiguous(dc.n_chunks(), n_devices)
     };
     let (mut plans, summary) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, resident);
-    apply_codec_policy(&mut plans, &dc, compress);
+    apply_codec_policy(&mut plans, compress);
     let mut grid = initial.clone();
     let mut exec = PlanExecutor::new(backend, kind);
     exec.run(&mut grid, &dc, &plans)?;
     let stats = exec.stats.clone();
     Ok(RunOutcome { grid, stats, residency: Some(summary) })
+}
+
+/// Run `n` time steps under the 2-D tile decomposition (`--decomp
+/// tiles`): `chunks_y x chunks_x` tiles sharded over `n_devices`
+/// simulated GPUs in row-major contiguous blocks, with 4-neighbor region
+/// sharing (north/west bands in, south/east bands out, corner data
+/// riding the row bands) and [`ChunkOp::D2D`]-bridged shares at device
+/// boundaries. Composition rules are enforced at plan time with typed
+/// errors rather than silent mis-planning: only the SO2DR scheme tiles
+/// (ResReu's skew is 1-D; in-core has no decomposition), and the
+/// resident execution model is not yet generalized to tile arenas —
+/// `resident` must be `Off`. Transfer compression composes: the codec
+/// post-pass tags the tile plan's strided hops like any other transfer,
+/// and lossless policies preserve bit-exactness vs [`reference_run`]
+/// (randomized differential suite, schemes x tilings x device counts).
+///
+/// [`ChunkOp::D2D`]: crate::chunking::plan::ChunkOp::D2D
+#[allow(clippy::too_many_arguments)]
+pub fn run_scheme_tiles(
+    scheme: Scheme,
+    initial: &Array2,
+    kind: StencilKind,
+    n: usize,
+    chunks_y: usize,
+    chunks_x: usize,
+    n_devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    backend: &mut dyn KernelBackend,
+    resident: &ResidencyConfig,
+    compress: CompressMode,
+) -> Result<RunOutcome> {
+    if resident.mode != ResidentMode::Off {
+        bail!(
+            "--decomp tiles does not compose with --resident yet: tile arenas have no \
+             cross-epoch fetch algebra (use --decomp rows, or --resident off)"
+        );
+    }
+    let dc =
+        Decomposition2d::try_new(initial.rows(), initial.cols(), chunks_y, chunks_x, kind.radius())?;
+    crate::config::validate_devices(scheme, dc.n_tiles(), n_devices)?;
+    let devs = DeviceAssignment::contiguous(dc.n_tiles(), n_devices);
+    let mut plans = plan_run_tiles(scheme, &dc, &devs, n, s_tb, k_on)?;
+    apply_codec_policy(&mut plans, compress);
+    let mut grid = initial.clone();
+    let mut exec = PlanExecutor::new(backend, kind);
+    exec.run_tiles(&mut grid, &dc, &plans)?;
+    let stats = exec.stats.clone();
+    Ok(RunOutcome { grid, stats, residency: None })
 }
 
 /// [`run_scheme_full`] without compression (the PR 2 entry point).
@@ -487,6 +536,170 @@ mod tests {
         assert_eq!(out.stats.htod_wire_bytes * 2, out.stats.htod_bytes);
         // Wire volume is exactly half on both host channels.
         assert_eq!(out.stats.dtoh_wire_bytes * 2, out.stats.dtoh_bytes);
+    }
+
+    #[test]
+    fn interior_free_grids_error_cleanly_instead_of_panicking() {
+        // The validated-constructor path must surface as a driver error,
+        // not an abort: 4 columns cannot host a radius-2 Dirichlet ring.
+        let kind = StencilKind::Box { radius: 2 };
+        let initial = Array2::synthetic(240, 4, 1);
+        let mut backend = HostBackend::new(NaiveEngine);
+        let err = run_scheme(Scheme::So2dr, &initial, kind, 1, 4, 1, 1, &mut backend)
+            .expect_err("interior-free cols must be rejected");
+        assert!(err.to_string().contains("cols extent"), "{err}");
+    }
+
+    #[test]
+    fn tiles_match_reference_bit_exactly_across_layouts_and_devices() {
+        let kind = StencilKind::Box { radius: 1 };
+        let initial = Array2::synthetic(120, 96, 19);
+        let reference = reference_run(&initial, kind, 12, &NaiveEngine);
+        for (gy, gx) in [(1usize, 1usize), (4, 1), (1, 4), (2, 2), (2, 3), (3, 2)] {
+            for n_devices in [1usize, 2, 4] {
+                if n_devices > gy * gx {
+                    continue;
+                }
+                let mut backend = HostBackend::new(NaiveEngine);
+                let out = run_scheme_tiles(
+                    Scheme::So2dr,
+                    &initial,
+                    kind,
+                    12,
+                    gy,
+                    gx,
+                    n_devices,
+                    4,
+                    2,
+                    &mut backend,
+                    &crate::chunking::plan::ResidencyConfig::off(),
+                    CompressMode::Off,
+                )
+                .unwrap();
+                assert!(
+                    out.grid.bit_eq(&reference),
+                    "{gy}x{gx} tiles on {n_devices} devices diverged: {}",
+                    out.grid.max_abs_diff(&reference)
+                );
+                // HtoD/DtoH move the grid exactly once per epoch.
+                let grid_bytes = (120 * 96 * 4) as u64;
+                assert_eq!(out.stats.epochs, 3);
+                assert_eq!(out.stats.htod_bytes, 3 * grid_bytes, "{gy}x{gx}");
+                assert_eq!(out.stats.dtoh_bytes, 3 * grid_bytes, "{gy}x{gx}");
+                if gy * gx > 1 {
+                    assert!(out.stats.rs_reads > 0, "{gy}x{gx} must share bands");
+                }
+                if n_devices > 1 {
+                    assert!(out.stats.p2p_copies > 0, "{gy}x{gx} x{n_devices}");
+                } else {
+                    assert_eq!(out.stats.p2p_bytes, 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiles_compose_with_lossless_compression_bit_exactly() {
+        let kind = StencilKind::Box { radius: 2 };
+        let initial = Array2::synthetic(120, 120, 31);
+        let reference = reference_run(&initial, kind, 8, &NaiveEngine);
+        let mut backend = HostBackend::new(NaiveEngine);
+        let out = run_scheme_tiles(
+            Scheme::So2dr,
+            &initial,
+            kind,
+            8,
+            2,
+            2,
+            2,
+            4,
+            2,
+            &mut backend,
+            &crate::chunking::plan::ResidencyConfig::off(),
+            CompressMode::Lossless,
+        )
+        .unwrap();
+        assert!(out.grid.bit_eq(&reference), "diff {}", out.grid.max_abs_diff(&reference));
+        assert!(out.stats.codec_ops > 0, "codec must engage");
+        assert!(out.stats.htod_wire_bytes < out.stats.htod_bytes);
+    }
+
+    #[test]
+    fn tiles_cut_sharing_traffic_vs_row_bands_at_equal_chunk_count() {
+        // The decomposition's whole point, measured on real numerics:
+        // same grid, same chunk count, 2-D od_bytes strictly below 1-D.
+        let kind = StencilKind::Box { radius: 1 };
+        let initial = Array2::synthetic(128, 128, 3);
+        let mut b1 = HostBackend::new(NaiveEngine);
+        let rows = run_scheme(Scheme::So2dr, &initial, kind, 8, 4, 4, 2, &mut b1).unwrap();
+        let mut b2 = HostBackend::new(NaiveEngine);
+        let tiles = run_scheme_tiles(
+            Scheme::So2dr,
+            &initial,
+            kind,
+            8,
+            2,
+            2,
+            1,
+            4,
+            2,
+            &mut b2,
+            &crate::chunking::plan::ResidencyConfig::off(),
+            CompressMode::Off,
+        )
+        .unwrap();
+        assert!(tiles.grid.bit_eq(&rows.grid));
+        assert!(
+            tiles.stats.od_bytes < rows.stats.od_bytes,
+            "2x2 tiles {} !< 1x4 bands {}",
+            tiles.stats.od_bytes,
+            rows.stats.od_bytes
+        );
+    }
+
+    #[test]
+    fn tiles_reject_unsupported_compositions_at_plan_time() {
+        let kind = StencilKind::Box { radius: 1 };
+        let initial = Array2::synthetic(64, 64, 1);
+        let run = |scheme, resident: &crate::chunking::plan::ResidencyConfig| {
+            let mut backend = HostBackend::new(NaiveEngine);
+            run_scheme_tiles(
+                scheme,
+                &initial,
+                kind,
+                8,
+                2,
+                2,
+                1,
+                4,
+                2,
+                &mut backend,
+                resident,
+                CompressMode::Off,
+            )
+        };
+        let off = crate::chunking::plan::ResidencyConfig::off();
+        let err = run(Scheme::ResReu, &off).unwrap_err();
+        assert!(err.to_string().contains("resreu"), "{err}");
+        let err = run(Scheme::InCore, &off).unwrap_err();
+        assert!(err.to_string().contains("incore"), "{err}");
+        let err =
+            run(Scheme::So2dr, &crate::chunking::plan::ResidencyConfig::force(3)).unwrap_err();
+        assert!(err.to_string().contains("resident"), "{err}");
+        // Structural rejections flow through the shared validators too.
+        let mut backend = HostBackend::new(NaiveEngine);
+        let err = run_scheme_tiles(
+            Scheme::So2dr, &initial, kind, 8, 0, 2, 1, 4, 2, &mut backend, &off,
+            CompressMode::Off,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("chunk count"), "{err}");
+        let err = run_scheme_tiles(
+            Scheme::So2dr, &initial, kind, 8, 2, 2, 5, 4, 2, &mut backend, &off,
+            CompressMode::Off,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("devices"), "{err}");
     }
 
     #[test]

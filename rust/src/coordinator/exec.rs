@@ -8,12 +8,15 @@
 //! match the in-core reference bit-exactly (same backend) — this is the
 //! correctness core of the reproduction: it exercises region sharing,
 //! trapezoid clamping, skewed windows, epoch residuals, multi-device
-//! sharding and the resident execution model.
+//! sharding, the resident execution model and the 2-D tile decomposition.
 //!
-//! One op interpreter ([`PlanExecutor::exec_ops`]) serves both execution
-//! models; only the arena lookup differs ([`ArenaStore`]): staged epochs
-//! run on one double buffer per device, resident runs on one persistent
-//! arena per chunk (allocated on first touch, dropped on eviction).
+//! One op interpreter (the private `exec_ops`) serves every execution
+//! model; only the arena lookup and addressing differ: staged row-band
+//! epochs run on one full-width double buffer per device, resident runs
+//! on one persistent arena per chunk, and tile runs
+//! ([`PlanExecutor::run_tiles`]) on per-device tile-shaped buffers with
+//! a 2-D base — every transfer op addresses a [`Rect`], so a strided
+//! column band copies the same way a contiguous row band does.
 //!
 //! Transfer ops carry a [`CodecKind`]: host transfers and link hops are
 //! round-tripped through the selected codec, so a lossless tag is
@@ -22,7 +25,7 @@
 //! bound per transfer).
 
 use crate::chunking::plan::{phase_a_len, ChunkEpochPlan, ChunkOp, EpochPlan, Scheme};
-use crate::chunking::Decomposition;
+use crate::chunking::{Decomposition, Decomposition2d};
 use crate::coordinator::backend::KernelBackend;
 use crate::coordinator::rs_buffer::RegionShareBuffer;
 use crate::core::{Array2, Rect, RowSpan};
@@ -108,11 +111,12 @@ impl ExecStats {
 }
 
 /// Arena storage behind the unified op interpreter — the only thing the
-/// two execution models disagree on is where a chunk's `(cur, scratch)`
+/// execution models disagree on is where a chunk's `(cur, scratch)`
 /// pair lives and how long it stays alive.
 enum ArenaStore {
     /// Staged epochs: one double buffer per *device*, reused across
-    /// chunks and epochs. Safe because every live row is written
+    /// chunks and epochs (full-width for row bands, tile-shaped for the
+    /// 2-D decomposition). Safe because every live cell is written
     /// (HtoD/RS read) before any kernel reads it — the bit-exact
     /// equivalence suite guards this invariant.
     Staged(Vec<(Array2, Array2)>),
@@ -139,12 +143,12 @@ impl ArenaStore {
         &mut self,
         cp: &ChunkEpochPlan,
         buf_rows: usize,
-        cols: usize,
+        buf_cols: usize,
     ) -> &mut (Array2, Array2) {
         match self {
             ArenaStore::Staged(bufs) => &mut bufs[cp.device],
             ArenaStore::Resident(arenas) => arenas[cp.chunk].get_or_insert_with(|| {
-                (Array2::zeros(buf_rows, cols), Array2::zeros(buf_rows, cols))
+                (Array2::zeros(buf_rows, buf_cols), Array2::zeros(buf_rows, buf_cols))
             }),
         }
     }
@@ -198,29 +202,38 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
             .unwrap_or(dc.rows())
     }
 
-    /// Signed global row of the chunk buffer's first row for this epoch:
-    /// the staged path re-bases per epoch (`plan.steps`), while the
-    /// resident path pins the base at the run maximum. Both delegate to
-    /// [`Decomposition::resident_base`] so the two executions can never
-    /// disagree on arena row addressing.
-    fn buffer_base(dc: &Decomposition, plan: &EpochPlan, chunk: usize) -> i64 {
-        dc.resident_base(plan.scheme, plan.steps, chunk)
+    /// Signed global (row, col) of the chunk buffer's origin for this
+    /// epoch: the staged path re-bases per epoch (`plan.steps`), while
+    /// the resident path pins the base at the run maximum. Both delegate
+    /// to [`Decomposition::resident_base`] so the two executions can
+    /// never disagree on arena addressing; row bands are full-width, so
+    /// the column base is always 0.
+    fn buffer_base(dc: &Decomposition, plan: &EpochPlan, chunk: usize) -> (i64, i64) {
+        (dc.resident_base(plan.scheme, plan.steps, chunk), 0)
     }
 
-    fn to_local(span: RowSpan, base: i64, buf_rows: usize) -> Result<RowSpan> {
-        let lo = span.lo as i64 - base;
-        let hi = span.hi as i64 - base;
-        if lo < 0 || hi > buf_rows as i64 {
-            bail!("span {span} maps outside buffer (base {base}, rows {buf_rows})");
+    /// Translate a global rect into buffer-local coordinates under a 2-D
+    /// base, verifying it fits the `(buf_rows, buf_cols)` arena.
+    fn to_local(rect: Rect, base: (i64, i64), dims: (usize, usize)) -> Result<Rect> {
+        let r0 = rect.r0 as i64 - base.0;
+        let r1 = rect.r1 as i64 - base.0;
+        let c0 = rect.c0 as i64 - base.1;
+        let c1 = rect.c1 as i64 - base.1;
+        if r0 < 0 || r1 > dims.0 as i64 || c0 < 0 || c1 > dims.1 as i64 {
+            bail!(
+                "rect {rect} maps outside buffer (base {:?}, dims {:?})",
+                base,
+                dims
+            );
         }
-        Ok(RowSpan::new(lo as usize, hi as usize))
+        Ok(Rect::new(r0 as usize, r1 as usize, c0 as usize, c1 as usize))
     }
 
-    /// Move `src` into `dst` through `codec`, returning the wire-payload
-    /// size. Identity short-circuits to a straight copy (no codec pass,
-    /// wire == raw); everything else performs the real compress →
-    /// decompress round trip, so codec semantics (bit-exact or bounded)
-    /// flow into the numerics the suites verify.
+    /// Move a contiguous payload through `codec`, returning the
+    /// wire-payload size. Identity short-circuits to a straight copy (no
+    /// codec pass, wire == raw); everything else performs the real
+    /// compress → decompress round trip, so codec semantics (bit-exact
+    /// or bounded) flow into the numerics the suites verify.
     fn codec_copy(&mut self, codec: CodecKind, src: &[f32], dst: &mut [f32]) -> Result<u64> {
         let raw = (src.len() * 4) as u64;
         if codec == CodecKind::Identity {
@@ -240,6 +253,30 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         self.stats.codec_raw_bytes += raw;
         dst.copy_from_slice(&decoded);
         Ok(wire.len() as u64)
+    }
+
+    /// Rect-addressed [`Self::codec_copy`]: move `src_rect` of `src`
+    /// into the congruent `dst_rect` of `dst`. Identity copies in place
+    /// (row-wise, strided-capable); non-identity codecs gather the rect
+    /// into a contiguous staging buffer — exactly what a GPU codec
+    /// engine would DMA — round-trip it, and scatter the decoded cells.
+    fn codec_copy_rect(
+        &mut self,
+        codec: CodecKind,
+        src: &Array2,
+        src_rect: Rect,
+        dst: &mut Array2,
+        dst_rect: Rect,
+    ) -> Result<u64> {
+        if codec == CodecKind::Identity {
+            dst.copy_rect_from(dst_rect, src, src_rect);
+            return Ok(src_rect.bytes_f32());
+        }
+        let staged = src.extract_rect(src_rect);
+        let mut landed = Array2::zeros(staged.rows(), staged.cols());
+        let wire = self.codec_copy(codec, staged.as_slice(), landed.as_mut_slice())?;
+        dst.insert_rect(dst_rect, &landed);
+        Ok(wire)
     }
 
     /// Execute all epochs in sequence, updating `grid` in place.
@@ -273,11 +310,67 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                 self.stats.epochs += 1;
             }
         }
+        self.collect_rs_stats(&rs);
+        Ok(())
+    }
+
+    /// Execute a 2-D tile run (staged epochs over a [`Decomposition2d`]).
+    /// Tiles stream through per-device tile-shaped double buffers exactly
+    /// as 1-D chunks stream through full-width ones; every op addresses a
+    /// rect relative to the tile's 2-D base, so the interpreter below is
+    /// byte-for-byte the one the row-band path uses.
+    pub fn run_tiles(
+        &mut self,
+        grid: &mut Array2,
+        dc: &Decomposition2d,
+        plans: &[EpochPlan],
+    ) -> Result<()> {
+        let s_max = plans.iter().map(|p| p.steps).max().unwrap_or(1);
+        let (buf_rows, buf_cols) = dc.uniform_buffer_dims(s_max);
+        let n_devices = plans.iter().map(|p| p.n_devices).max().unwrap_or(1);
+        let mut rs: Vec<RegionShareBuffer> =
+            (0..n_devices).map(|_| RegionShareBuffer::new()).collect();
+        let mut store = ArenaStore::Staged(
+            (0..n_devices)
+                .map(|_| (Array2::zeros(buf_rows, buf_cols), Array2::zeros(buf_rows, buf_cols)))
+                .collect(),
+        );
+        let arena_bytes = n_devices as u64 * 2 * (buf_rows * buf_cols * 4) as u64;
+        self.stats.arena_peak_bytes = self.stats.arena_peak_bytes.max(arena_bytes);
+        for plan in plans {
+            if plan.resident {
+                bail!("tile plans are staged (resident tiling is not planned yet)");
+            }
+            for cp in &plan.chunks {
+                let base = dc.tile_base(cp.chunk, plan.steps);
+                self.exec_ops(
+                    grid,
+                    cp,
+                    &cp.ops,
+                    base,
+                    (buf_rows, buf_cols),
+                    false,
+                    &mut rs,
+                    &mut store,
+                )
+                .with_context(|| {
+                    format!("epoch at step {} tile {}", plan.start_step, cp.chunk)
+                })?;
+            }
+            for r in rs.iter_mut() {
+                r.clear();
+            }
+            self.stats.epochs += 1;
+        }
+        self.collect_rs_stats(&rs);
+        Ok(())
+    }
+
+    fn collect_rs_stats(&mut self, rs: &[RegionShareBuffer]) {
         self.stats.rs_peak_bytes = rs.iter().map(|r| r.peak_bytes()).sum();
         self.stats.od_bytes = rs.iter().map(|r| r.bytes_read() + r.bytes_written()).sum();
         self.stats.rs_reads = rs.iter().map(|r| r.n_reads()).sum();
         self.stats.rs_writes = rs.iter().map(|r| r.n_writes()).sum();
-        Ok(())
     }
 
     /// One staged epoch, chunk-major. The in-core scheme's one-time
@@ -302,7 +395,7 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
             if plan.scheme == Scheme::InCore {
                 store.pair(cp)?.0.copy_rows_from(all, grid, all);
             }
-            self.exec_ops(grid, dc, cp, &cp.ops, base, buf_rows, cols, false, rs, store)?;
+            self.exec_ops(grid, cp, &cp.ops, base, (buf_rows, cols), false, rs, store)?;
             if plan.scheme == Scheme::InCore {
                 grid.copy_rows_from(all, &store.pair(cp)?.0, all);
             }
@@ -334,13 +427,11 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                 for cp in &plan.chunks {
                     let split = phase_a_len(&cp.ops);
                     let ops = if pass == 0 { &cp.ops[..split] } else { &cp.ops[split..] };
-                    let base = dc.resident_base(scheme, s_max, cp.chunk);
-                    self.exec_ops(
-                        grid, dc, cp, ops, base, buf_rows, cols, true, rs, &mut store,
-                    )
-                    .with_context(|| {
-                        format!("epoch at step {} chunk {}", plan.start_step, cp.chunk)
-                    })?;
+                    let base = (dc.resident_base(scheme, s_max, cp.chunk), 0);
+                    self.exec_ops(grid, cp, ops, base, (buf_rows, cols), true, rs, &mut store)
+                        .with_context(|| {
+                            format!("epoch at step {} chunk {}", plan.start_step, cp.chunk)
+                        })?;
                 }
                 if pass == 0 {
                     // Peak arena occupancy: right after arrivals, before
@@ -360,25 +451,23 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         Ok(())
     }
 
-    /// The single op interpreter both execution models share: execute a
-    /// slice of one chunk's ops against its arena in `store`. `resident`
-    /// gates the resident-model ops (a staged plan containing them is a
-    /// plan bug, surfaced loudly).
+    /// The single op interpreter every execution model shares: execute a
+    /// slice of one chunk's ops against its arena in `store`, addressed
+    /// by the chunk's 2-D `base` and the uniform arena `dims`.
+    /// `resident` gates the resident-model ops (a staged plan containing
+    /// them is a plan bug, surfaced loudly).
     #[allow(clippy::too_many_arguments)]
     fn exec_ops(
         &mut self,
         grid: &mut Array2,
-        dc: &Decomposition,
         cp: &ChunkEpochPlan,
         ops: &[ChunkOp],
-        base: i64,
-        buf_rows: usize,
-        cols: usize,
+        base: (i64, i64),
+        dims: (usize, usize),
         resident: bool,
         rs: &mut [RegionShareBuffer],
         store: &mut ArenaStore,
     ) -> Result<()> {
-        let radius = dc.radius();
         for op in ops {
             match op {
                 ChunkOp::Resident { .. } => {
@@ -390,40 +479,28 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                     }
                     self.stats.resident_hits += 1;
                 }
-                ChunkOp::HtoD { span, codec } => {
-                    let local = Self::to_local(*span, base, buf_rows)?;
-                    let pair = store.arrive(cp, buf_rows, cols);
-                    let wire = self.codec_copy(
-                        *codec,
-                        grid.rows_slice(*span),
-                        pair.0.rows_slice_mut(local),
-                    )?;
-                    self.stats.htod_bytes += (span.len() * cols * 4) as u64;
+                ChunkOp::HtoD { rect, codec } => {
+                    let local = Self::to_local(*rect, base, dims)?;
+                    let pair = store.arrive(cp, dims.0, dims.1);
+                    let wire = self.codec_copy_rect(*codec, grid, *rect, &mut pair.0, local)?;
+                    self.stats.htod_bytes += rect.bytes_f32();
                     self.stats.htod_wire_bytes += wire;
                 }
-                ChunkOp::DtoH { span, codec } => {
-                    let local = Self::to_local(*span, base, buf_rows)?;
+                ChunkOp::DtoH { rect, codec } => {
+                    let local = Self::to_local(*rect, base, dims)?;
                     let pair = store.pair(cp)?;
-                    let wire = self.codec_copy(
-                        *codec,
-                        pair.0.rows_slice(local),
-                        grid.rows_slice_mut(*span),
-                    )?;
-                    self.stats.dtoh_bytes += (span.len() * cols * 4) as u64;
+                    let wire = self.codec_copy_rect(*codec, &pair.0, local, grid, *rect)?;
+                    self.stats.dtoh_bytes += rect.bytes_f32();
                     self.stats.dtoh_wire_bytes += wire;
                 }
-                ChunkOp::Evict { span, codec } => {
+                ChunkOp::Evict { rect, codec } => {
                     if !resident {
                         bail!("resident-model op in a staged epoch (plan bug)");
                     }
-                    let local = Self::to_local(*span, base, buf_rows)?;
+                    let local = Self::to_local(*rect, base, dims)?;
                     let pair = store.pair(cp)?;
-                    let wire = self.codec_copy(
-                        *codec,
-                        pair.0.rows_slice(local),
-                        grid.rows_slice_mut(*span),
-                    )?;
-                    let bytes = (span.len() * cols * 4) as u64;
+                    let wire = self.codec_copy_rect(*codec, &pair.0, local, grid, *rect)?;
+                    let bytes = rect.bytes_f32();
                     self.stats.dtoh_bytes += bytes;
                     self.stats.dtoh_wire_bytes += wire;
                     self.stats.spill_bytes += bytes;
@@ -431,48 +508,48 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                     store.release(cp.chunk);
                 }
                 ChunkOp::RsRead(region) => {
-                    let local = Self::to_local(region.span, base, buf_rows)?;
+                    let local = Self::to_local(region.rect, base, dims)?;
                     let data = rs[cp.device]
-                        .read(region.span, region.time_step)
+                        .read(region.rect, region.time_step)
                         .with_context(|| {
                             format!(
                                 "RS region {} @t{} missing on device {} (chunk {})",
-                                region.span, region.time_step, cp.device, cp.chunk
+                                region.rect, region.time_step, cp.device, cp.chunk
                             )
                         })?
                         .clone();
-                    store.pair(cp)?.0.insert_rows(local, &data);
+                    store.pair(cp)?.0.insert_rect(local, &data);
                 }
                 ChunkOp::Fetch(region) => {
                     if !resident {
                         bail!("resident-model op in a staged epoch (plan bug)");
                     }
-                    let local = Self::to_local(region.span, base, buf_rows)?;
+                    let local = Self::to_local(region.rect, base, dims)?;
                     let data = rs[cp.device]
-                        .read(region.span, region.time_step)
+                        .read(region.rect, region.time_step)
                         .with_context(|| {
                             format!(
                                 "fetch region {} missing on device {} (chunk {})",
-                                region.span, cp.device, cp.chunk
+                                region.rect, cp.device, cp.chunk
                             )
                         })?
                         .clone();
                     self.stats.fetch_bytes += data.size_bytes();
                     self.stats.fetch_reads += 1;
-                    store.pair(cp)?.0.insert_rows(local, &data);
+                    store.pair(cp)?.0.insert_rect(local, &data);
                 }
                 ChunkOp::RsWrite(region) => {
-                    let local = Self::to_local(region.span, base, buf_rows)?;
-                    let data = store.pair(cp)?.0.extract_rows(local);
-                    rs[cp.device].write(region.span, region.time_step, data);
+                    let local = Self::to_local(region.rect, base, dims)?;
+                    let data = store.pair(cp)?.0.extract_rect(local);
+                    rs[cp.device].write(region.rect, region.time_step, data);
                 }
-                ChunkOp::D2D { src_dev, dst_dev, span, time_step, codec } => {
+                ChunkOp::D2D { src_dev, dst_dev, rect, time_step, codec } => {
                     let data = rs[*src_dev]
-                        .peek(*span, *time_step)
+                        .peek(*rect, *time_step)
                         .with_context(|| {
                             format!(
                                 "D2D region {} @t{} missing on source device {}",
-                                span, time_step, src_dev
+                                rect, time_step, src_dev
                             )
                         })?
                         .clone();
@@ -485,7 +562,7 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                         let all = RowSpan::new(0, data.rows());
                         let wire = self.codec_copy(
                             *codec,
-                            data.as_slice(),
+                            data.rows_slice(all),
                             landed.rows_slice_mut(all),
                         )?;
                         self.stats.p2p_wire_bytes += wire;
@@ -493,14 +570,14 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                     };
                     self.stats.p2p_bytes += raw;
                     self.stats.p2p_copies += 1;
-                    rs[*dst_dev].receive(*span, *time_step, landed);
+                    rs[*dst_dev].receive(*rect, *time_step, landed);
                 }
                 ChunkOp::Kernel(inv) => {
                     let mut local_windows = Vec::with_capacity(inv.windows.len());
                     for w in &inv.windows {
-                        let lw = Self::to_local(*w, base, buf_rows)?;
-                        local_windows.push(Rect::new(lw.lo, lw.hi, radius, cols - radius));
-                        self.stats.computed_elems += (lw.len() * (cols - 2 * radius)) as u64;
+                        let lw = Self::to_local(*w, base, dims)?;
+                        self.stats.computed_elems += lw.area() as u64;
+                        local_windows.push(lw);
                     }
                     let pair = store.pair(cp)?;
                     self.backend

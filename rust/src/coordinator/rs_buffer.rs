@@ -1,30 +1,26 @@
 //! The region-sharing buffer: device-resident storage through which
 //! adjacent chunks exchange overlap regions (paper Fig. 2b / Fig. 4).
 //!
-//! Regions are keyed by `(row span, time_step)`; SO2DR exchanges one raw
-//! (`time_step = 0`) region pair per boundary per epoch, ResReu exchanges
-//! one intermediate-result pair per boundary per time step. Under the
-//! resident execution model the same buffer carries the inter-epoch
-//! halo refresh: chunks publish (`RsWrite`) the boundary rows their
-//! neighbors need *before* any kernel of the new epoch runs, and the
-//! neighbors `Fetch` them — replacing the staged model's host round
-//! trip. The buffer tracks byte high-water marks so capacity accounting
-//! and the paper's memory constraint can be checked by tests.
+//! Regions are keyed by `(rect, time_step)` in global grid coordinates;
+//! SO2DR exchanges one raw (`time_step = 0`) region pair per boundary per
+//! epoch, ResReu exchanges one intermediate-result pair per boundary per
+//! time step, and the 2-D tile decomposition exchanges one band per tile
+//! side (row bands to the south neighbor, column bands — strided slices
+//! of the producer's arena — to the east neighbor). Under the resident
+//! execution model the same buffer carries the inter-epoch halo refresh:
+//! chunks publish (`RsWrite`) the boundary rows their neighbors need
+//! *before* any kernel of the new epoch runs, and the neighbors `Fetch`
+//! them — replacing the staged model's host round trip. The buffer
+//! tracks byte high-water marks so capacity accounting and the paper's
+//! memory constraint can be checked by tests.
 
-use crate::core::{Array2, RowSpan};
+use crate::core::{Array2, Rect};
 use std::collections::HashMap;
-
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
-struct Key {
-    lo: usize,
-    hi: usize,
-    time_step: usize,
-}
 
 /// Device-resident region store with byte accounting.
 #[derive(Debug, Default)]
 pub struct RegionShareBuffer {
-    regions: HashMap<Key, Array2>,
+    regions: HashMap<(Rect, usize), Array2>,
     cur_bytes: u64,
     peak_bytes: u64,
     writes: u64,
@@ -38,21 +34,21 @@ impl RegionShareBuffer {
         Self::default()
     }
 
-    /// Store a region (copy of `rows` of `src`, in global coordinates
-    /// `span`). Overwrites any previous region with the same key.
-    pub fn write(&mut self, span: RowSpan, time_step: usize, data: Array2) {
+    /// Store a region (dense copy of `rect` of the producer's arena, in
+    /// global coordinates). Overwrites any previous region with the same
+    /// key.
+    pub fn write(&mut self, rect: Rect, time_step: usize, data: Array2) {
         let bytes = data.size_bytes();
-        self.receive(span, time_step, data);
+        self.receive(rect, time_step, data);
         self.writes += 1;
         self.bytes_written += bytes;
     }
 
-    /// Fetch a region previously written with exactly this `(span,
+    /// Fetch a region previously written with exactly this `(rect,
     /// time_step)`. Returns `None` when the producer never wrote it — a
     /// scheduling bug the executor turns into an error.
-    pub fn read(&mut self, span: RowSpan, time_step: usize) -> Option<&Array2> {
-        let key = Key { lo: span.lo, hi: span.hi, time_step };
-        match self.regions.get(&key) {
+    pub fn read(&mut self, rect: Rect, time_step: usize) -> Option<&Array2> {
+        match self.regions.get(&(rect, time_step)) {
             Some(a) => {
                 self.reads += 1;
                 self.bytes_read += a.size_bytes();
@@ -66,19 +62,22 @@ impl RegionShareBuffer {
     /// the link transfer is priced and counted separately from the
     /// region-share read/write traffic, so peeking the source region must
     /// not inflate the on-device copy counters.
-    pub fn peek(&self, span: RowSpan, time_step: usize) -> Option<&Array2> {
-        self.regions.get(&Key { lo: span.lo, hi: span.hi, time_step })
+    pub fn peek(&self, rect: Rect, time_step: usize) -> Option<&Array2> {
+        self.regions.get(&(rect, time_step))
     }
 
     /// Land a region that arrived over the inter-device link. Tracks the
     /// memory footprint (current/peak bytes) but not the copy counters:
     /// the transfer is priced and counted as P2P traffic by the caller,
     /// keeping `od_bytes`/`rs_writes` comparable across device counts.
-    pub fn receive(&mut self, span: RowSpan, time_step: usize, data: Array2) {
-        assert_eq!(data.rows(), span.len(), "region shape mismatch");
-        let key = Key { lo: span.lo, hi: span.hi, time_step };
+    pub fn receive(&mut self, rect: Rect, time_step: usize, data: Array2) {
+        assert_eq!(
+            (data.rows(), data.cols()),
+            (rect.n_rows(), rect.n_cols()),
+            "region shape mismatch"
+        );
         let bytes = data.size_bytes();
-        if let Some(old) = self.regions.insert(key, data) {
+        if let Some(old) = self.regions.insert((rect, time_step), data) {
             self.cur_bytes -= old.size_bytes();
         }
         self.cur_bytes += bytes;
@@ -125,40 +124,56 @@ impl RegionShareBuffer {
 mod tests {
     use super::*;
 
+    fn band(r0: usize, r1: usize, cols: usize) -> Rect {
+        Rect::new(r0, r1, 0, cols)
+    }
+
     #[test]
     fn write_read_roundtrip() {
         let mut rs = RegionShareBuffer::new();
         let data = Array2::random(4, 8, 1, 0.0, 1.0);
-        rs.write(RowSpan::new(10, 14), 0, data.clone());
-        let got = rs.read(RowSpan::new(10, 14), 0).unwrap();
+        rs.write(band(10, 14, 8), 0, data.clone());
+        let got = rs.read(band(10, 14, 8), 0).unwrap();
         assert!(got.bit_eq(&data));
-        assert!(rs.read(RowSpan::new(10, 14), 1).is_none());
-        assert!(rs.read(RowSpan::new(10, 13), 0).is_none());
+        assert!(rs.read(band(10, 14, 8), 1).is_none());
+        assert!(rs.read(band(10, 13, 8), 0).is_none());
+    }
+
+    #[test]
+    fn column_band_keys_are_distinct_from_row_bands() {
+        // Two regions with the same row span but different column spans
+        // (a west/east strided band vs a full-width band) must coexist.
+        let mut rs = RegionShareBuffer::new();
+        rs.write(Rect::new(0, 4, 0, 8), 0, Array2::zeros(4, 8));
+        rs.write(Rect::new(0, 4, 8, 12), 0, Array2::full(4, 4, 1.0));
+        assert_eq!(rs.n_regions(), 2);
+        assert_eq!(rs.read(Rect::new(0, 4, 8, 12), 0).unwrap()[(0, 0)], 1.0);
+        assert_eq!(rs.read(Rect::new(0, 4, 0, 8), 0).unwrap()[(0, 0)], 0.0);
     }
 
     #[test]
     fn receive_tracks_footprint_but_not_copy_counters() {
         let mut rs = RegionShareBuffer::new();
         let data = Array2::random(4, 8, 2, 0.0, 1.0);
-        rs.receive(RowSpan::new(3, 7), 1, data.clone());
+        rs.receive(band(3, 7, 8), 1, data.clone());
         assert_eq!(rs.current_bytes(), 4 * 8 * 4);
         assert_eq!(rs.peak_bytes(), 4 * 8 * 4);
         assert_eq!(rs.n_writes(), 0, "link landings are not on-device copies");
         assert_eq!(rs.bytes_written(), 0);
         // The landed region is readable like any other.
-        assert!(rs.read(RowSpan::new(3, 7), 1).unwrap().bit_eq(&data));
+        assert!(rs.read(band(3, 7, 8), 1).unwrap().bit_eq(&data));
         assert_eq!(rs.n_reads(), 1);
     }
 
     #[test]
     fn byte_accounting_and_overwrite() {
         let mut rs = RegionShareBuffer::new();
-        rs.write(RowSpan::new(0, 4), 0, Array2::zeros(4, 8));
+        rs.write(band(0, 4, 8), 0, Array2::zeros(4, 8));
         assert_eq!(rs.current_bytes(), 4 * 8 * 4);
-        rs.write(RowSpan::new(4, 8), 1, Array2::zeros(4, 8));
+        rs.write(band(4, 8, 8), 1, Array2::zeros(4, 8));
         assert_eq!(rs.current_bytes(), 2 * 4 * 8 * 4);
         // Overwrite same key: no growth.
-        rs.write(RowSpan::new(0, 4), 0, Array2::zeros(4, 8));
+        rs.write(band(0, 4, 8), 0, Array2::zeros(4, 8));
         assert_eq!(rs.current_bytes(), 2 * 4 * 8 * 4);
         assert_eq!(rs.peak_bytes(), 2 * 4 * 8 * 4);
         assert_eq!(rs.n_regions(), 2, "overwrite must not duplicate the key");

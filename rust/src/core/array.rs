@@ -126,6 +126,38 @@ impl Array2 {
         self.rows_slice_mut(dst_span).copy_from_slice(src.rows_slice(src_span));
     }
 
+    /// Copy a rectangle from `src` onto a congruent rectangle of self —
+    /// the strided (column-sliced) transfer of the 2-D tile
+    /// decomposition. Row-major layout makes each copied row one
+    /// contiguous `copy_from_slice`; a full-width rect degenerates to
+    /// the 1-D path's straight row-range memcpy.
+    pub fn copy_rect_from(&mut self, dst: Rect, src: &Array2, src_rect: Rect) {
+        assert_eq!(
+            (dst.n_rows(), dst.n_cols()),
+            (src_rect.n_rows(), src_rect.n_cols()),
+            "rect shape mismatch"
+        );
+        debug_assert!(dst.r1 <= self.rows && dst.c1 <= self.cols);
+        debug_assert!(src_rect.r1 <= src.rows && src_rect.c1 <= src.cols);
+        for (dr, sr) in (dst.r0..dst.r1).zip(src_rect.r0..src_rect.r1) {
+            self.row_mut(dr)[dst.c0..dst.c1]
+                .copy_from_slice(&src.row(sr)[src_rect.c0..src_rect.c1]);
+        }
+    }
+
+    /// Copy a rectangle out into a new dense `(n_rows x n_cols)` array
+    /// (region-sharing extraction; contiguous so codecs can run on it).
+    pub fn extract_rect(&self, rect: Rect) -> Array2 {
+        let mut out = Array2::zeros(rect.n_rows(), rect.n_cols());
+        out.copy_rect_from(Rect::new(0, rect.n_rows(), 0, rect.n_cols()), self, rect);
+        out
+    }
+
+    /// Copy a whole dense array into `rect` of self (equal shapes).
+    pub fn insert_rect(&mut self, rect: Rect, src: &Array2) {
+        self.copy_rect_from(rect, src, Rect::new(0, src.rows, 0, src.cols));
+    }
+
     /// Maximum absolute difference over all elements (arrays must be
     /// congruent).
     pub fn max_abs_diff(&self, other: &Array2) -> f32 {
@@ -217,6 +249,34 @@ mod tests {
         b.insert_rows(span, &piece);
         assert_eq!(b.rows_slice(span), a.rows_slice(span));
         assert_eq!(b.row(0), vec![0f32; 5].as_slice());
+    }
+
+    #[test]
+    fn rect_extract_insert_roundtrip() {
+        let a = Array2::random(6, 7, 9, -1.0, 1.0);
+        let rect = Rect::new(1, 4, 2, 6);
+        let piece = a.extract_rect(rect);
+        assert_eq!((piece.rows(), piece.cols()), (3, 4));
+        let mut b = Array2::zeros(6, 7);
+        b.insert_rect(rect, &piece);
+        for r in 0..6 {
+            for c in 0..7 {
+                let expect = if rect.contains_cell(r, c) { a[(r, c)] } else { 0.0 };
+                assert_eq!(b[(r, c)], expect, "cell ({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn rect_copy_between_offsets() {
+        let src = Array2::from_vec(3, 3, (0..9).map(|v| v as f32).collect());
+        let mut dst = Array2::zeros(4, 4);
+        dst.copy_rect_from(Rect::new(1, 3, 2, 4), &src, Rect::new(0, 2, 1, 3));
+        assert_eq!(dst[(1, 2)], 1.0);
+        assert_eq!(dst[(1, 3)], 2.0);
+        assert_eq!(dst[(2, 2)], 4.0);
+        assert_eq!(dst[(2, 3)], 5.0);
+        assert_eq!(dst[(0, 0)], 0.0);
     }
 
     #[test]

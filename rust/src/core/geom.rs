@@ -1,4 +1,8 @@
-//! Integer geometry for row-band decomposition and compute windows.
+//! Integer geometry for chunk decomposition and compute windows: the
+//! half-open interval algebra ([`RowSpan`] / [`ColSpan`]) and its 2-D
+//! product ([`Rect`]). The 1-D (row-band) decomposition works in spans;
+//! the 2-D tile decomposition uses one span per axis and rectangles for
+//! every transfer, share and compute window.
 
 /// A half-open row interval `[lo, hi)`. The workhorse of the 1-D (row-band)
 /// chunk decomposition: transfer spans, region-sharing spans, and compute
@@ -80,8 +84,13 @@ impl std::fmt::Display for RowSpan {
     }
 }
 
+/// A half-open column interval — the same interval algebra as
+/// [`RowSpan`], along the column axis. The 2-D tile decomposition keeps
+/// one span per axis; [`Rect`] is their product.
+pub type ColSpan = RowSpan;
+
 /// A half-open 2-D rectangle `[r0, r1) x [c0, c1)` in grid coordinates.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Rect {
     pub r0: usize,
     pub r1: usize,
@@ -99,8 +108,24 @@ impl Rect {
         Self::new(rows.lo, rows.hi, c0, c1)
     }
 
+    /// Product of a row span and a column span.
+    pub fn of_spans(rows: RowSpan, cols: ColSpan) -> Self {
+        Self::new(rows.lo, rows.hi, cols.lo, cols.hi)
+    }
+
+    /// Construct from possibly-negative signed bounds, clamped per axis
+    /// to `[0, rows] x [0, cols]` (the rect analog of
+    /// [`RowSpan::clamped`]).
+    pub fn clamped(r0: i64, r1: i64, c0: i64, c1: i64, rows: usize, cols: usize) -> Self {
+        Self::of_spans(RowSpan::clamped(r0, r1, rows), RowSpan::clamped(c0, c1, cols))
+    }
+
     pub fn rows(&self) -> RowSpan {
         RowSpan::new(self.r0, self.r1)
+    }
+
+    pub fn cols(&self) -> ColSpan {
+        RowSpan::new(self.c0, self.c1)
     }
 
     pub fn n_rows(&self) -> usize {
@@ -129,6 +154,35 @@ impl Rect {
 
     pub fn contains_cell(&self, r: usize, c: usize) -> bool {
         (self.r0..self.r1).contains(&r) && (self.c0..self.c1).contains(&c)
+    }
+
+    pub fn overlaps(&self, o: &Rect) -> bool {
+        !self.intersect(o).is_empty()
+    }
+
+    /// True when `o` lies inside self (every empty rect is contained).
+    pub fn contains_rect(&self, o: &Rect) -> bool {
+        o.is_empty()
+            || (o.r0 >= self.r0 && o.r1 <= self.r1 && o.c0 >= self.c0 && o.c1 <= self.c1)
+    }
+
+    /// Grow by `d` cells on every side, clamped to `[0, rows] x [0, cols]`.
+    pub fn grow_clamped(&self, d: i64, rows: usize, cols: usize) -> Rect {
+        Rect::clamped(
+            self.r0 as i64 - d,
+            self.r1 as i64 + d,
+            self.c0 as i64 - d,
+            self.c1 as i64 + d,
+            rows,
+            cols,
+        )
+    }
+
+    /// Payload bytes of an f32 field covering this rect — the one byte
+    /// formula every layer (codec policy, executor counters, flattener,
+    /// figures) shares, so sizes cannot drift between interpreters.
+    pub fn bytes_f32(&self) -> u64 {
+        (self.area() * 4) as u64
     }
 }
 
@@ -196,5 +250,33 @@ mod tests {
     fn rect_empty_intersection() {
         let r = Rect::new(0, 2, 0, 2).intersect(&Rect::new(5, 8, 5, 8));
         assert!(r.is_empty());
+    }
+
+    #[test]
+    fn rect_clamped_and_grow() {
+        let r = Rect::clamped(-3, 5, 8, 20, 10, 12);
+        assert_eq!(r, Rect::new(0, 5, 8, 12));
+        let g = Rect::new(2, 4, 2, 4).grow_clamped(3, 6, 5);
+        assert_eq!(g, Rect::new(0, 6, 0, 5));
+        let s = Rect::new(2, 4, 2, 4).grow_clamped(1, 100, 100);
+        assert_eq!(s, Rect::new(1, 5, 1, 5));
+    }
+
+    #[test]
+    fn rect_containment_and_overlap() {
+        let a = Rect::new(0, 10, 0, 10);
+        assert!(a.contains_rect(&Rect::new(2, 5, 3, 7)));
+        assert!(a.contains_rect(&Rect::new(0, 0, 5, 5)), "empty rects are contained");
+        assert!(!a.contains_rect(&Rect::new(2, 11, 3, 7)));
+        assert!(a.overlaps(&Rect::new(9, 12, 9, 12)));
+        assert!(!a.overlaps(&Rect::new(10, 12, 0, 5)), "touching edges do not overlap");
+    }
+
+    #[test]
+    fn rect_bytes_and_spans() {
+        let r = Rect::of_spans(RowSpan::new(2, 6), RowSpan::new(1, 4));
+        assert_eq!(r.bytes_f32(), 4 * 3 * 4);
+        assert_eq!(r.rows(), RowSpan::new(2, 6));
+        assert_eq!(r.cols(), RowSpan::new(1, 4));
     }
 }

@@ -4,4 +4,4 @@ pub mod array;
 pub mod geom;
 
 pub use array::Array2;
-pub use geom::{Rect, RowSpan};
+pub use geom::{ColSpan, Rect, RowSpan};

@@ -6,13 +6,14 @@
 //! shapes: who wins, by what factor, and where the crossovers fall.
 
 use crate::chunking::plan::{
-    apply_codec_policy, plan_run_resident, ResidencyConfig, ResidencySummary, Scheme,
+    apply_codec_policy, plan_run_resident, plan_run_tiles, ResidencyConfig, ResidencySummary,
+    Scheme,
 };
-use crate::chunking::{Decomposition, DeviceAssignment};
+use crate::chunking::{Decomposition, Decomposition2d, DeviceAssignment};
 use crate::coordinator::{HostBackend, PlanExecutor};
 use crate::gpu::cost::{CostModel, MachineSpec};
 use crate::gpu::des::{simulate, SimReport};
-use crate::gpu::flatten::{flatten_run, OpKind};
+use crate::gpu::flatten::{flatten_run, flatten_run_sized, OpKind};
 use crate::metrics::{breakdown_table, mean};
 use crate::params::{check_feasible, Feasibility};
 use crate::stencil::{NaiveEngine, StencilKind};
@@ -67,10 +68,40 @@ pub fn simulate_compressed_grid_devices(
         DeviceAssignment::contiguous(dc.n_chunks(), devices)
     };
     let (mut plans, summary) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, resident);
-    apply_codec_policy(&mut plans, &dc, compress);
+    apply_codec_policy(&mut plans, compress);
     let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
     let ops = flatten_run(&plans, &dc, kind, n_strm, buf_rows);
     (simulate(&ops, &CostModel::new(machine.clone()), n_strm), summary)
+}
+
+/// Price a 2-D tile run on the machine model: plan over a
+/// [`Decomposition2d`], tag the transfer ops under the codec policy,
+/// flatten (tile-shaped arenas), replay. Returns an error for the
+/// combinations the tile planner rejects (non-SO2DR schemes, infeasible
+/// tilings) so the CLI surfaces them instead of panicking.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_tiles_grid_devices(
+    machine: &MachineSpec,
+    kind: StencilKind,
+    rows: usize,
+    cols: usize,
+    chunks_y: usize,
+    chunks_x: usize,
+    devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    n: usize,
+    n_strm: usize,
+    compress: CompressMode,
+) -> anyhow::Result<SimReport> {
+    let dc = Decomposition2d::try_new(rows, cols, chunks_y, chunks_x, kind.radius())?;
+    crate::config::validate_devices(Scheme::So2dr, dc.n_tiles(), devices)?;
+    let devs = DeviceAssignment::contiguous(dc.n_tiles(), devices);
+    let mut plans = plan_run_tiles(Scheme::So2dr, &dc, &devs, n, s_tb, k_on)?;
+    apply_codec_policy(&mut plans, compress);
+    let s_max = plans.iter().map(|p| p.steps).max().unwrap_or(1);
+    let ops = flatten_run_sized(&plans, kind, n_strm, dc.arena_bytes(s_max));
+    Ok(simulate(&ops, &CostModel::new(machine.clone()), n_strm))
 }
 
 /// Staged, uncompressed [`simulate_compressed_grid_devices`].
@@ -615,6 +646,72 @@ pub fn compress_fig(machine: &MachineSpec) -> String {
     out
 }
 
+/// 1-D vs 2-D decomposition study (beyond the paper: the ROADMAP's 2-D
+/// chunk-decomposition direction). At equal chunk counts on the
+/// paper-scale square grid, row bands pay O(cols) halo per boundary
+/// while square tiles pay O(perimeter) per tile: the table reports the
+/// sharing traffic (on-device O/D copies + P2P link hops, raw bytes) and
+/// the DES makespan for both layouts at 1 and 4 simulated devices, plus
+/// the halo-reduction factor. The 2-D halo volume must be strictly
+/// below 1-D at every equal-chunk-count row — asserted by the figure
+/// tests and the acceptance suite.
+pub fn decomp_fig(machine: &MachineSpec) -> String {
+    let kind = StencilKind::Box { radius: 1 };
+    let (_, s_tb) = chosen_config(kind);
+    let mut out = String::from(
+        "== Decomposition: 1-D row bands vs 2-D tiles at equal chunk counts ==\n\
+         (box2d1r, paper-scale square grid; sharing = O/D + P2P raw bytes)\n",
+    );
+    let mut t = Table::new(vec![
+        "chunks", "layout", "devices", "sharing bytes", "halo vs 1-D", "time (s)",
+    ]);
+    for (g, gy, gx) in [(4usize, 2usize, 2usize), (16, 4, 4)] {
+        for devices in [1usize, 4] {
+            let rows_rep = simulate_grid_devices(
+                machine, Scheme::So2dr, kind, SZ_OOC, SZ_OOC, g, devices, s_tb, K_ON, N_STEPS,
+                N_STRM,
+            );
+            let tiles_rep = simulate_tiles_grid_devices(
+                machine,
+                kind,
+                SZ_OOC,
+                SZ_OOC,
+                gy,
+                gx,
+                devices,
+                s_tb,
+                K_ON,
+                N_STEPS,
+                N_STRM,
+                CompressMode::Off,
+            )
+            .expect("paper-scale tiling is feasible");
+            let share = |rep: &SimReport| {
+                rep.raw_bytes_of(OpKind::D2D) + rep.raw_bytes_of(OpKind::P2p)
+            };
+            let (h1, h2) = (share(&rows_rep), share(&tiles_rep));
+            t.row(vec![
+                g.to_string(),
+                format!("1x{g} rows"),
+                devices.to_string(),
+                crate::util::fmt_bytes(h1),
+                "1.00x".into(),
+                format!("{:.3}", rows_rep.makespan),
+            ]);
+            t.row(vec![
+                g.to_string(),
+                format!("{gy}x{gx} tiles"),
+                devices.to_string(),
+                crate::util::fmt_bytes(h2),
+                format!("{:.2}x", h2 as f64 / h1.max(1) as f64),
+                format!("{:.3}", tiles_rep.makespan),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    out
+}
+
 /// The figure registry, in report order: names paired with their
 /// builders. Kept lazy so the CLI's `--fig` filter selects *before*
 /// computing — figures run paper-scale DES sweeps (and `bench_pr2`
@@ -633,6 +730,7 @@ pub fn registry() -> Vec<(&'static str, fn(&MachineSpec) -> String)> {
         ("scaling", scaling),
         ("resident", resident),
         ("compress", compress_fig),
+        ("decomp", decomp_fig),
         ("bench_pr2", bench_pr2),
     ]
 }
@@ -696,6 +794,42 @@ mod tests {
         // The stacking table reports wire vs raw HtoD.
         assert!(txt.contains("HtoD wire"), "{txt}");
         assert!(txt.contains("stacking"), "{txt}");
+    }
+
+    #[test]
+    fn decomp_figure_shows_strict_halo_reduction() {
+        // The acceptance criterion, measured where the figure measures
+        // it: at equal chunk counts on the paper-scale square grid, the
+        // 2-D layout's sharing traffic is strictly below 1-D.
+        let m = MachineSpec::rtx3080();
+        let kind = StencilKind::Box { radius: 1 };
+        let (_, s_tb) = chosen_config(kind);
+        for (g, gy, gx) in [(4usize, 2usize, 2usize), (16, 4, 4)] {
+            for devices in [1usize, 4] {
+                let rows = simulate_grid_devices(
+                    &m, Scheme::So2dr, kind, SZ_OOC, SZ_OOC, g, devices, s_tb, K_ON, N_STEPS,
+                    N_STRM,
+                );
+                let tiles = simulate_tiles_grid_devices(
+                    &m, kind, SZ_OOC, SZ_OOC, gy, gx, devices, s_tb, K_ON, N_STEPS, N_STRM,
+                    CompressMode::Off,
+                )
+                .unwrap();
+                let share = |rep: &SimReport| {
+                    rep.raw_bytes_of(OpKind::D2D) + rep.raw_bytes_of(OpKind::P2p)
+                };
+                assert!(
+                    share(&tiles) < share(&rows),
+                    "{gy}x{gx}@{devices}dev: {} !< {}",
+                    share(&tiles),
+                    share(&rows)
+                );
+            }
+        }
+        let txt = decomp_fig(&m);
+        assert!(txt.contains("row bands vs 2-D tiles"), "{txt}");
+        assert!(txt.contains("2x2 tiles") && txt.contains("4x4 tiles"), "{txt}");
+        assert!(txt.contains("1x4 rows") && txt.contains("1x16 rows"), "{txt}");
     }
 
     #[test]

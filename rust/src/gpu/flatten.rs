@@ -6,19 +6,26 @@
 //!   over `n_strm` streams *per device*, as in the paper; stream ids are
 //!   `device * n_strm + chunk % n_strm`);
 //! - `RsRead` waits for the latest provider of the matching region (same
-//!   epoch, span and time step): the neighbor's `RsWrite`, or — when the
+//!   epoch, rect and time step): the neighbor's `RsWrite`, or — when the
 //!   producer lives on another device — the `P2p` link transfer that
 //!   lands the region on the reader's device. For ResReu this creates
 //!   the one-step-skewed wavefront pipeline across chunks and devices;
-//! - an epoch's `HtoD` waits for every previous-epoch `DtoH` whose rows
-//!   overlap it (host data must be final).
+//!   for the 2-D tile decomposition it chains each tile to its north and
+//!   west providers;
+//! - an epoch's `HtoD` waits for every previous-epoch `DtoH` whose rect
+//!   overlaps it (host data must be final).
 //!
 //! Resources are per device (each simulated GPU has its own PCIe pair,
 //! copy engine and kernel slots); `P2p` transfers occupy one directed
-//! link per adjacent device pair. Memory deltas are tracked per device
+//! link per device pair. Memory deltas are tracked per device
 //! (`mem_device`): a link transfer allocates the region copy on the
 //! destination device, and the producing chunk's retirement releases the
 //! source copy.
+//!
+//! Every payload size is the op's rect area — the flattener needs no
+//! decomposition handle, so 1-D row-band plans and 2-D tile plans (whose
+//! column bands are strided sub-rects) price identically through one
+//! code path.
 //!
 //! Resident plans (`EpochPlan::resident`) replace the per-epoch
 //! alloc/free cycle with cross-epoch lifetimes: a chunk's arena is
@@ -32,8 +39,7 @@
 //! HtoD` edges.
 
 use crate::chunking::plan::{phase_a_len, ChunkOp, EpochPlan, Scheme};
-use crate::chunking::Decomposition;
-use crate::core::RowSpan;
+use crate::core::Rect;
 use crate::stencil::StencilKind;
 use crate::transfer::CodecKind;
 use std::collections::HashMap;
@@ -106,33 +112,31 @@ fn link_resource(src_dev: usize, dst_dev: usize) -> usize {
     src_dev * 4096 + dst_dev
 }
 
-/// Flatten a multi-epoch run. `n_strm` streams; chunk buffers are double
-/// buffered on device (`2 * buf_bytes`); the in-core scheme allocates the
-/// whole grid once and is exempt from per-epoch transfers.
+/// Flatten a multi-epoch run. `n_strm` streams per device; `buf_bytes`
+/// is the byte size of one (input + output double-buffered) chunk arena
+/// at the run's uniform shape — `Decomposition::arena_bytes` for row
+/// bands, `Decomposition2d::arena_bytes` for tiles. The in-core scheme
+/// allocates the whole grid once and is exempt from per-epoch transfers.
 ///
 /// Staged epochs are emitted chunk-major. Resident epochs are emitted in
 /// their two execution phases — every chunk's arrival + publishes, then
 /// every chunk's fetches/kernels/retirement — so a `Fetch` always finds
 /// its provider already registered even when the publisher is a *later*
 /// chunk (inter-epoch halo data flows both up and down the chunk order).
-pub fn flatten_run(
+pub fn flatten_run_sized(
     plans: &[EpochPlan],
-    dc: &Decomposition,
     kind: StencilKind,
     n_strm: usize,
-    buf_rows: usize,
+    buf_bytes: u64,
 ) -> Vec<SimOp> {
-    let cols = dc.cols();
-    let row_bytes = (cols * 4) as u64;
-    let buf_bytes = 2 * (buf_rows as u64) * row_bytes; // in/out double buffer
     let mut ops: Vec<SimOp> = Vec::new();
-    // (epoch, span.lo, span.hi, time) -> writer op id
-    let mut rs_writers: HashMap<(usize, usize, usize, usize), usize> = HashMap::new();
-    // DtoH ops of the previous epoch: (span, id)
-    let mut prev_dtoh: Vec<(RowSpan, usize)> = Vec::new();
+    // (epoch, rect, time) -> writer op id
+    let mut rs_writers: HashMap<(usize, Rect, usize), usize> = HashMap::new();
+    // DtoH ops of the previous epoch: (rect, id)
+    let mut prev_dtoh: Vec<(Rect, usize)> = Vec::new();
 
     for (e, plan) in plans.iter().enumerate() {
-        let mut this_dtoh: Vec<(RowSpan, usize)> = Vec::new();
+        let mut this_dtoh: Vec<(Rect, usize)> = Vec::new();
         // Emission order: (chunk index in plan, op range).
         let mut sequences: Vec<(usize, std::ops::Range<usize>)> = Vec::new();
         if plan.resident {
@@ -179,7 +183,7 @@ pub fn flatten_run(
                 .ops
                 .iter()
                 .map(|op| match op {
-                    ChunkOp::RsRead(r) | ChunkOp::Fetch(r) => r.span.len() as u64 * row_bytes,
+                    ChunkOp::RsRead(r) | ChunkOp::Fetch(r) => r.rect.bytes_f32(),
                     _ => 0,
                 })
                 .sum();
@@ -190,7 +194,7 @@ pub fn flatten_run(
                 .ops
                 .iter()
                 .map(|op| match op {
-                    ChunkOp::D2D { span, .. } => span.len() as u64 * row_bytes,
+                    ChunkOp::D2D { rect, .. } => rect.bytes_f32(),
                     _ => 0,
                 })
                 .sum();
@@ -204,63 +208,48 @@ pub fn flatten_run(
                     // Its stream simply continues from the previous
                     // epoch's last kernel.
                     ChunkOp::Resident { .. } => continue,
-                    ChunkOp::HtoD { span, codec } => {
+                    ChunkOp::HtoD { rect, codec } => {
                         // Wait for overlapping previous-epoch DtoH (for a
                         // resident re-fetch that is the chunk's own Evict,
-                        // whose span matches exactly).
+                        // whose rect matches exactly).
                         let deps: Vec<usize> = prev_dtoh
                             .iter()
-                            .filter(|(s, _)| s.overlaps(span))
+                            .filter(|(r, _)| r.overlaps(rect))
                             .map(|&(_, id)| id)
                             .collect();
-                        (OpKind::HtoD, span.len() as u64 * row_bytes, *codec, vec![], deps)
+                        (OpKind::HtoD, rect.bytes_f32(), *codec, vec![], deps)
                     }
-                    ChunkOp::DtoH { span, codec } => {
-                        this_dtoh.push((*span, id));
-                        (OpKind::DtoH, span.len() as u64 * row_bytes, *codec, vec![], vec![])
+                    ChunkOp::DtoH { rect, codec } => {
+                        this_dtoh.push((*rect, id));
+                        (OpKind::DtoH, rect.bytes_f32(), *codec, vec![], vec![])
                     }
-                    ChunkOp::Evict { span, codec } => {
+                    ChunkOp::Evict { rect, codec } => {
                         // A capacity spill is a real DtoH on the PCIe
                         // channel; it also releases the arena (below).
-                        this_dtoh.push((*span, id));
-                        (OpKind::DtoH, span.len() as u64 * row_bytes, *codec, vec![], vec![])
+                        this_dtoh.push((*rect, id));
+                        (OpKind::DtoH, rect.bytes_f32(), *codec, vec![], vec![])
                     }
                     ChunkOp::RsWrite(r) => {
-                        rs_writers.insert((e, r.span.lo, r.span.hi, r.time_step), id);
-                        (
-                            OpKind::D2D,
-                            r.span.len() as u64 * row_bytes,
-                            CodecKind::Identity,
-                            vec![],
-                            vec![],
-                        )
+                        rs_writers.insert((e, r.rect, r.time_step), id);
+                        (OpKind::D2D, r.rect.bytes_f32(), CodecKind::Identity, vec![], vec![])
                     }
-                    ChunkOp::D2D { span, time_step, codec, .. } => {
+                    ChunkOp::D2D { rect, time_step, codec, .. } => {
                         // The link transfer becomes the region's provider:
                         // the consumer on the other device must wait for
                         // it, not for the source-side write.
-                        rs_writers.insert((e, span.lo, span.hi, *time_step), id);
-                        (OpKind::P2p, span.len() as u64 * row_bytes, *codec, vec![], vec![])
+                        rs_writers.insert((e, *rect, *time_step), id);
+                        (OpKind::P2p, rect.bytes_f32(), *codec, vec![], vec![])
                     }
                     ChunkOp::RsRead(r) | ChunkOp::Fetch(r) => {
                         let deps = rs_writers
-                            .get(&(e, r.span.lo, r.span.hi, r.time_step))
+                            .get(&(e, r.rect, r.time_step))
                             .map(|&w| vec![w])
                             .unwrap_or_default();
-                        (
-                            OpKind::D2D,
-                            r.span.len() as u64 * row_bytes,
-                            CodecKind::Identity,
-                            vec![],
-                            deps,
-                        )
+                        (OpKind::D2D, r.rect.bytes_f32(), CodecKind::Identity, vec![], deps)
                     }
                     ChunkOp::Kernel(inv) => {
-                        let areas: Vec<u64> = inv
-                            .windows
-                            .iter()
-                            .map(|w| (w.len() * (cols - 2 * dc.radius())) as u64)
-                            .collect();
+                        let areas: Vec<u64> =
+                            inv.windows.iter().map(|w| w.area() as u64).collect();
                         (OpKind::Kernel, 0, CodecKind::Identity, areas, vec![])
                     }
                 };
@@ -282,8 +271,8 @@ pub fn flatten_run(
                     _ => (cp.device, cp.device),
                 };
                 let mut alloc_delta = match op {
-                    ChunkOp::RsWrite(r) => (r.span.len() as u64 * row_bytes) as i64,
-                    ChunkOp::D2D { span, .. } => (span.len() as u64 * row_bytes) as i64,
+                    ChunkOp::RsWrite(r) => r.rect.bytes_f32() as i64,
+                    ChunkOp::D2D { rect, .. } => rect.bytes_f32() as i64,
                     _ => 0,
                 };
                 if first_of_chunk && arena_alloc_here {
@@ -322,10 +311,24 @@ pub fn flatten_run(
     ops
 }
 
+/// [`flatten_run_sized`] with the arena size taken from a 1-D row-band
+/// decomposition (`buf_rows` uniform buffer height, full grid width) —
+/// the historical signature every row-band call site uses.
+pub fn flatten_run(
+    plans: &[EpochPlan],
+    dc: &crate::chunking::Decomposition,
+    kind: StencilKind,
+    n_strm: usize,
+    buf_rows: usize,
+) -> Vec<SimOp> {
+    flatten_run_sized(plans, kind, n_strm, dc.arena_bytes(buf_rows))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::chunking::plan::plan_run;
+    use crate::chunking::Decomposition;
 
     fn setup(scheme: Scheme) -> (Decomposition, Vec<SimOp>) {
         let dc = Decomposition::new(240, 64, 4, 1);
@@ -414,7 +417,7 @@ mod tests {
 mod device_tests {
     use super::*;
     use crate::chunking::plan::plan_run_devices;
-    use crate::chunking::DeviceAssignment;
+    use crate::chunking::{Decomposition, DeviceAssignment};
 
     fn setup(scheme: Scheme, n_dev: usize) -> Vec<SimOp> {
         let dc = Decomposition::new(240, 64, 4, 1);
@@ -485,7 +488,7 @@ mod device_tests {
 mod codec_tests {
     use super::*;
     use crate::chunking::plan::{apply_codec_policy, plan_run_devices};
-    use crate::chunking::DeviceAssignment;
+    use crate::chunking::{Decomposition, DeviceAssignment};
     use crate::coordinator::{HostBackend, PlanExecutor};
     use crate::stencil::NaiveEngine;
     use crate::transfer::CompressMode;
@@ -494,7 +497,7 @@ mod codec_tests {
         let dc = Decomposition::new(240, 64, 4, 1);
         let devs = DeviceAssignment::contiguous(4, 2);
         let mut plans = plan_run_devices(Scheme::So2dr, &dc, &devs, 12, 6, 2);
-        apply_codec_policy(&mut plans, &dc, mode);
+        apply_codec_policy(&mut plans, mode);
         let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
         flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows)
     }
@@ -551,7 +554,7 @@ mod codec_tests {
 mod resident_tests {
     use super::*;
     use crate::chunking::plan::{plan_run_resident, ResidencyConfig};
-    use crate::chunking::DeviceAssignment;
+    use crate::chunking::{Decomposition, DeviceAssignment};
     use crate::coordinator::{HostBackend, PlanExecutor};
     use crate::stencil::NaiveEngine;
 
@@ -672,5 +675,73 @@ mod resident_tests {
             ops.iter().filter(|o| o.kind == OpKind::P2p && o.epoch == 1).count();
         // One boundary, publishes flow both directions across it.
         assert_eq!(mid_p2p, 2);
+    }
+}
+
+#[cfg(test)]
+mod tile_tests {
+    use super::*;
+    use crate::chunking::plan::plan_run_tiles;
+    use crate::chunking::{Decomposition2d, DeviceAssignment};
+
+    fn setup(n_dev: usize) -> (Decomposition2d, Vec<SimOp>) {
+        let dc = Decomposition2d::try_new(120, 96, 2, 2, 1).unwrap();
+        let devs = DeviceAssignment::contiguous(4, n_dev);
+        let plans = plan_run_tiles(Scheme::So2dr, &dc, &devs, 12, 6, 2).unwrap();
+        let s_max = plans.iter().map(|p| p.steps).max().unwrap();
+        let ops =
+            flatten_run_sized(&plans, StencilKind::Box { radius: 1 }, 3, dc.arena_bytes(s_max));
+        (dc, ops)
+    }
+
+    #[test]
+    fn tile_reads_chain_to_their_band_providers() {
+        // Every band read must carry a dependency edge to a *strictly
+        // lower-index* tile's sharing write (north or west provider).
+        // On a single device a 2x2 tiling shares exactly 4 bands per
+        // epoch (2 south + 2 east pairs), over 2 epochs.
+        let (_, ops) = setup(1);
+        let chained = ops
+            .iter()
+            .filter(|o| {
+                o.kind == OpKind::D2D
+                    && o.deps
+                        .iter()
+                        .any(|&d| ops[d].kind == OpKind::D2D && ops[d].chunk < o.chunk)
+            })
+            .count();
+        assert_eq!(chained, 4 * 2, "one provider-chained read per shared band");
+    }
+
+    #[test]
+    fn tile_alloc_balances_free_and_deps_acyclic() {
+        for n_dev in [1usize, 2, 4] {
+            let (_, ops) = setup(n_dev);
+            let alloc: i64 = ops.iter().map(|o| o.alloc_delta).sum();
+            let free: i64 = ops.iter().map(|o| o.free_delta).sum();
+            assert_eq!(alloc + free, 0, "{n_dev} devices");
+            for op in &ops {
+                for &d in &op.deps {
+                    assert!(d < op.id);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_tiles_exchange_over_the_link() {
+        let (dc, ops) = setup(4);
+        let p2p: Vec<&SimOp> = ops.iter().filter(|o| o.kind == OpKind::P2p).collect();
+        // Fully sharded 2x2: every south/east share crosses the link —
+        // 4 shares per epoch, 2 epochs.
+        assert_eq!(p2p.len(), 8);
+        for op in &p2p {
+            assert!(op.bytes > 0);
+            assert_ne!(op.device, op.mem_device);
+        }
+        // Band volume is the perimeter share volume, not full rows.
+        let epoch0: u64 =
+            p2p.iter().filter(|o| o.epoch == 0).map(|o| o.raw_bytes).sum();
+        assert_eq!(epoch0, dc.halo_bytes_per_epoch(6));
     }
 }

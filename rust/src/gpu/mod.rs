@@ -14,4 +14,4 @@ pub mod flatten;
 
 pub use cost::{CostModel, MachineSpec};
 pub use des::{simulate, SimReport};
-pub use flatten::{flatten_run, OpKind, SimOp};
+pub use flatten::{flatten_run, flatten_run_sized, OpKind, SimOp};

@@ -77,6 +77,44 @@
 //!        payload over the machine's codec-engine throughput
 //!        (`MachineSpec::bw_codec_*`), so `figures --fig compress` shows
 //!        where compression wins and where a fast link flips the trade.
+//!   - **2-D tile decomposition** (`--decomp tiles --chunks-x N
+//!     --chunks-y M`): the grid splits into an `M x N` tile grid
+//!     ([`chunking::Decomposition2d`]) instead of row bands, and every
+//!     plan-IR op addresses a `Rect` — the 1-D builders emit full-width
+//!     rects, the tile builder emits genuine sub-rects (strided column
+//!     bands included) through the *same* op vocabulary, so both
+//!     interpreters and the codec post-pass are decomposition-agnostic.
+//!     The SO2DR scheme generalizes as a product of per-axis span
+//!     algebras with 4-neighbor region sharing; invariants the suites
+//!     enforce:
+//!     1. *halo volume is O(perimeter)*: per interior tile of side
+//!        `l x w` and skirt `h`, the shared bands total
+//!        `2h*(l + w) + 4h^2` cells per epoch, vs the row-band scheme's
+//!        `2h * cols` per boundary — strictly smaller at equal chunk
+//!        count on large square grids (`figures --fig decomp` tables
+//!        the crossover at 1 and 4 devices);
+//!     2. *corner ownership*: corner blocks ride the row bands — the
+//!        north/south bands span the tile's full skirted width, so a
+//!        diagonal neighbor's `h x h` corner cascades through two band
+//!        hops (`(i-1,j-1) -> (i-1,j) -> (i,j)`) and every tile needs
+//!        exactly two reads (north, west) and two writes (south, east),
+//!        disjointly covering its resident rect together with its
+//!        shifted HtoD rect;
+//!     3. *publish/fetch ordering*: data flows toward higher row-major
+//!        tile indices along both axes (the product generalization of
+//!        the 1-D downward flow), so a single chunk-major sweep is
+//!        causally valid — each tile reads its bands *before* writing
+//!        (its publishes may include just-read corner data) and writes
+//!        *before* its kernels (bands are epoch-start data); `D2D` link
+//!        hops bridge the tile→device assignment's shard boundaries;
+//!     4. *degenerate tilings are the 1-D plans*: `chunks_x == 1`
+//!        reproduces the row-band epoch op-for-op (locked by
+//!        `tile_plans_degenerate_to_row_plans`), `chunks_y == 1` is its
+//!        transpose, and bit-exactness vs `reference_run` holds across
+//!        tilings x device counts x lossless codecs (randomized
+//!        differential suite); unsupported compositions (ResReu or
+//!        in-core tiling, `--resident` with tiles) are rejected at plan
+//!        time with typed errors rather than silently mis-planned.
 //! - **L2 (`python/compile/model.py`):** the fixed-shape chunk program,
 //!   AOT-lowered to HLO text.
 //! - **L1 (`python/compile/kernels/`):** the Pallas multi-step stencil

@@ -1,17 +1,17 @@
 //! `so2dr` — launcher for the SO2DR out-of-core stencil framework.
 //!
 //! Subcommands:
-//!   info                     platform, artifact inventory
-//!   run [opts]               real-numerics run + verification + counters
-//!   validate                 cross-scheme equivalence suite
-//!   autotune [opts]          §IV-C heuristic + DES ranking
-//!   simulate [opts]          price one configuration on the machine model
-//!   figures [--fig NAME]     regenerate the paper's tables and figures
+//!   `info`                     platform, artifact inventory
+//!   `run [opts]`               real-numerics run + verification + counters
+//!   `validate`                 cross-scheme equivalence suite
+//!   `autotune [opts]`          §IV-C heuristic + DES ranking
+//!   `simulate [opts]`          price one configuration on the machine model
+//!   `figures [--fig NAME]`     regenerate the paper's tables and figures
 //!
 //! Run `so2dr <cmd> --help` for the options of each command.
 
 use anyhow::{bail, Context, Result};
-use so2dr::chunking::{ResidencyConfig, ResidentMode, Scheme};
+use so2dr::chunking::{DecompMode, ResidencyConfig, ResidentMode, Scheme};
 use so2dr::config::RunConfig;
 use so2dr::coordinator::{
     reference_run, run_scheme, run_scheme_full, HostBackend, KernelBackend,
@@ -110,6 +110,12 @@ fn config_of(args: &Args) -> Result<RunConfig> {
         cfg.cols = cfg.rows;
     }
     cfg.d = args.usize_or("d", cfg.d)?;
+    if let Some(v) = args.get("decomp") {
+        cfg.decomp =
+            DecompMode::parse(v).with_context(|| format!("bad --decomp {v:?} (rows|tiles)"))?;
+    }
+    cfg.chunks_x = args.usize_or("chunks-x", cfg.chunks_x)?;
+    cfg.chunks_y = args.usize_or("chunks-y", cfg.chunks_y)?;
     cfg.s_tb = args.usize_or("s-tb", cfg.s_tb)?;
     cfg.k_on = args.usize_or("k-on", cfg.k_on)?;
     cfg.n = args.usize_or("n", cfg.n)?;
@@ -173,6 +179,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!(
             "so2dr run [--config f.toml] [--scheme so2dr|resreu|incore] [--kind box2d1r|...|gradient2d]\n\
              \x20         [--sz N | --rows N --cols N] [--d N] [--s-tb N] [--k-on N] [--n N]\n\
+             \x20         [--decomp rows|tiles] [--chunks-x N] [--chunks-y N]\n\
              \x20         [--devices N] [--d2d-gbps X] [--resident off|auto|force]\n\
              \x20         [--compress off|bf16|lossless|auto]\n\
              \x20         [--backend host-naive|host-opt|pjrt] [--no-verify x]"
@@ -211,19 +218,35 @@ fn cmd_run(args: &Args) -> Result<()> {
     let initial = Array2::synthetic(cfg.rows, cfg.cols, cfg.seed);
     let mut backend = make_backend(&cfg)?;
     let t0 = std::time::Instant::now();
-    let out = run_scheme_full(
-        cfg.scheme,
-        &initial,
-        cfg.kind,
-        cfg.n,
-        cfg.d,
-        cfg.devices,
-        cfg.s_tb,
-        cfg.k_on,
-        backend.as_mut(),
-        &resident_cfg,
-        cfg.compress,
-    )?;
+    let out = match cfg.decomp {
+        DecompMode::Rows => run_scheme_full(
+            cfg.scheme,
+            &initial,
+            cfg.kind,
+            cfg.n,
+            cfg.d,
+            cfg.devices,
+            cfg.s_tb,
+            cfg.k_on,
+            backend.as_mut(),
+            &resident_cfg,
+            cfg.compress,
+        )?,
+        DecompMode::Tiles => so2dr::coordinator::run_scheme_tiles(
+            cfg.scheme,
+            &initial,
+            cfg.kind,
+            cfg.n,
+            cfg.chunks_y,
+            cfg.chunks_x,
+            cfg.devices,
+            cfg.s_tb,
+            cfg.k_on,
+            backend.as_mut(),
+            &resident_cfg,
+            cfg.compress,
+        )?,
+    };
     let wall = t0.elapsed().as_secs_f64();
     let s = &out.stats;
     println!("backend: {}", backend.name());
@@ -250,22 +273,40 @@ fn cmd_run(args: &Args) -> Result<()> {
         // --d2d-gbps / --resident / --compress show their performance
         // effect next to the real run.
         let link_gbps = machine.bw_link / 1e9;
-        let rep = so2dr::figures::simulate_compressed_grid_devices(
-            &machine,
-            cfg.scheme,
-            cfg.kind,
-            cfg.rows,
-            cfg.cols,
-            cfg.d,
-            cfg.devices,
-            cfg.s_tb,
-            cfg.k_on,
-            cfg.n,
-            cfg.n_strm,
-            &resident_cfg,
-            cfg.compress,
-        )
-        .0;
+        let rep = match cfg.decomp {
+            DecompMode::Rows => {
+                so2dr::figures::simulate_compressed_grid_devices(
+                    &machine,
+                    cfg.scheme,
+                    cfg.kind,
+                    cfg.rows,
+                    cfg.cols,
+                    cfg.d,
+                    cfg.devices,
+                    cfg.s_tb,
+                    cfg.k_on,
+                    cfg.n,
+                    cfg.n_strm,
+                    &resident_cfg,
+                    cfg.compress,
+                )
+                .0
+            }
+            DecompMode::Tiles => so2dr::figures::simulate_tiles_grid_devices(
+                &machine,
+                cfg.kind,
+                cfg.rows,
+                cfg.cols,
+                cfg.chunks_y,
+                cfg.chunks_x,
+                cfg.devices,
+                cfg.s_tb,
+                cfg.k_on,
+                cfg.n,
+                cfg.n_strm,
+                cfg.compress,
+            )?,
+        };
         println!(
             "modeled makespan on {} simulated GPUs (link {link_gbps:.1} GB/s): {}  (P2P busy {})",
             cfg.devices,
@@ -394,6 +435,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     if args.help() {
         println!(
             "so2dr simulate [--scheme S] [--kind K] [--sz N] [--d N] [--devices N] [--d2d-gbps X]\n\
+             \x20              [--decomp rows|tiles] [--chunks-x N] [--chunks-y N]\n\
              \x20              [--s-tb N] [--k-on N] [--n N] [--machine M] [--resident off|auto|force]\n\
              \x20              [--compress off|bf16|lossless|auto]"
         );
@@ -405,7 +447,6 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let sz = args.usize_or("sz", so2dr::figures::SZ_OOC)?;
     let d = args.usize_or("d", 4)?;
     let devices = args.usize_or("devices", 1)?;
-    so2dr::config::validate_devices(scheme, d, devices)?;
     let s_tb = args.usize_or("s-tb", 160)?;
     let k_on = if scheme == Scheme::ResReu { 1 } else { args.usize_or("k-on", 4)? };
     let n = args.usize_or("n", so2dr::figures::N_STEPS)?;
@@ -413,6 +454,56 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         .context("bad --resident (off|auto|force)")?;
     let compress = CompressMode::parse(args.get("compress").unwrap_or("off"))
         .context("bad --compress (off|bf16|lossless|auto)")?;
+    let decomp = DecompMode::parse(args.get("decomp").unwrap_or("rows"))
+        .context("bad --decomp (rows|tiles)")?;
+    if decomp == DecompMode::Tiles {
+        // Tile pricing path: plan-time validation (feasibility, devices)
+        // lives in the planner; compositions are rejected here.
+        if scheme != Scheme::So2dr {
+            bail!("--decomp tiles supports --scheme so2dr only (use --decomp rows)");
+        }
+        if resident != ResidentMode::Off {
+            bail!("--decomp tiles does not compose with --resident yet (use --resident off)");
+        }
+        let chunks_x = args.usize_or("chunks-x", 2)?;
+        let chunks_y = args.usize_or("chunks-y", 2)?;
+        let rep = so2dr::figures::simulate_tiles_grid_devices(
+            &machine,
+            kind,
+            sz,
+            sz,
+            chunks_y,
+            chunks_x,
+            devices,
+            s_tb,
+            k_on,
+            n,
+            so2dr::figures::N_STRM,
+            compress,
+        )?;
+        print!(
+            "{}",
+            so2dr::metrics::breakdown_table(&[(
+                format!(
+                    "{} {} tiles={chunks_y}x{chunks_x} devs={devices} S_TB={s_tb} compress={}",
+                    scheme.name(),
+                    kind.name(),
+                    compress.name()
+                ),
+                &rep
+            )])
+        );
+        if devices > 1 {
+            print!("{}", so2dr::metrics::device_breakdown_table(&rep));
+        }
+        println!(
+            "peak device memory: {}{}",
+            fmt_bytes(rep.peak_dmem),
+            if rep.capacity_exceeded { "  (EXCEEDS CAPACITY)" } else { "" }
+        );
+        return Ok(());
+    }
+    so2dr::config::validate_devices(scheme, d, devices)?;
     if scheme != Scheme::InCore {
         // Pre-flight the §IV-C constraints per shard (the DES reports the
         // observed peak below; this is the check the autotuner applies).
@@ -505,7 +596,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 fn cmd_figures(args: &Args) -> Result<()> {
     if args.help() {
         println!(
-            "so2dr figures [--fig tables|3b|5|6|7|8|9|10|ablation_kon|scaling|resident|compress|bench_pr2]\n\
+            "so2dr figures [--fig tables|3b|5|6|7|8|9|10|ablation_kon|scaling|resident|compress|decomp|bench_pr2]\n\
              \x20             [--machine M]"
         );
         return Ok(());
@@ -565,4 +656,8 @@ the host.\n\
 Compression: `--compress bf16|lossless|auto` round-trips host transfers\n\
 through a transfer codec (bf16: 2x lossy-but-bounded; lossless:\n\
 byte-plane, bit-exact; auto: lossless on payloads big enough to pay),\n\
-shrinking wire bytes at the cost of codec compute.\n";
+shrinking wire bytes at the cost of codec compute.\n\
+Decomposition: `--decomp tiles --chunks-x N --chunks-y M` splits the\n\
+grid into an MxN tile grid with 4-neighbor region sharing (halo volume\n\
+scales with tile perimeter instead of grid width); so2dr only, and\n\
+`figures --fig decomp` tables the 1-D vs 2-D halo/makespan trade.\n";

@@ -13,12 +13,46 @@ pub enum PropResult {
     Failed { case: String, shrunk: String, seed: u64 },
 }
 
+/// Resolve an environment override for [`forall`]'s case count or seed:
+/// `None`/empty keeps the per-property default; a value must parse as an
+/// integer or the suite fails loudly (a typo'd CI variable silently
+/// running 0 enlarged cases would defeat the nightly sweep).
+fn env_override(name: &str, raw: Option<&str>, default: u64) -> u64 {
+    match raw {
+        None => default,
+        Some(v) if v.trim().is_empty() => default,
+        Some(v) => v
+            .trim()
+            .parse()
+            .unwrap_or_else(|_| panic!("{name} must be an integer, got {v:?}")),
+    }
+}
+
+/// Case count for a property whose in-code default is `default`:
+/// the `PROP_CASES` environment variable overrides it (the CI cron sweep
+/// runs the same suites with an enlarged count).
+pub fn prop_cases(default: usize) -> usize {
+    env_override("PROP_CASES", std::env::var("PROP_CASES").ok().as_deref(), default as u64)
+        as usize
+}
+
+/// Seed for a property whose in-code default is `default`: the
+/// `PROP_SEED` environment variable overrides it, so the nightly sweep
+/// explores a different region of the case space on every run while
+/// staying exactly reproducible from the logged value.
+pub fn prop_seed(default: u64) -> u64 {
+    env_override("PROP_SEED", std::env::var("PROP_SEED").ok().as_deref(), default)
+}
+
 /// Run `prop` over `cases` inputs drawn from `gen`. If a case fails, shrink
 /// it with `shrink` (which proposes smaller candidates) until no proposed
 /// candidate still fails, then panic with a readable report.
 ///
 /// `T: Debug` is used for the report; generation is deterministic from
-/// `seed` so failures are reproducible.
+/// `seed` so failures are reproducible. Both knobs honor environment
+/// overrides (`PROP_CASES`, `PROP_SEED` — see [`prop_cases`] /
+/// [`prop_seed`]), which the CI cron job uses to run enlarged randomized
+/// sweeps without a code change.
 pub fn forall<T, G, S, P>(seed: u64, cases: usize, mut gen: G, shrink: S, prop: P)
 where
     T: std::fmt::Debug + Clone,
@@ -26,6 +60,8 @@ where
     S: Fn(&T) -> Vec<T>,
     P: Fn(&T) -> Result<(), String>,
 {
+    let seed = prop_seed(seed);
+    let cases = prop_cases(cases);
     let mut rng = XorShift64::new(seed);
     for i in 0..cases {
         let input = gen(&mut rng);
@@ -111,5 +147,24 @@ mod tests {
             assert!(c < 100 && c >= 3);
         }
         assert!(shrink_usize_toward(3, 3).is_empty());
+    }
+
+    #[test]
+    fn env_override_parses_or_defaults() {
+        // Exercised through the pure helper (not the process env, which
+        // is shared across parallel tests).
+        assert_eq!(env_override("PROP_CASES", None, 200), 200);
+        assert_eq!(env_override("PROP_CASES", Some(""), 200), 200);
+        assert_eq!(env_override("PROP_CASES", Some("  "), 200), 200);
+        assert_eq!(env_override("PROP_CASES", Some("1000"), 200), 1000);
+        assert_eq!(env_override("PROP_SEED", Some(" 42 "), 7), 42);
+    }
+
+    #[test]
+    fn env_override_rejects_garbage_loudly() {
+        let got =
+            std::panic::catch_unwind(|| env_override("PROP_CASES", Some("many"), 200));
+        let msg = *got.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("PROP_CASES"), "{msg}");
     }
 }

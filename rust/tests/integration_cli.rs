@@ -161,6 +161,68 @@ fn simulate_reports_breakdown() {
 }
 
 #[test]
+fn run_tiles_decomposition_verifies_bit_exact() {
+    let (ok, text) = run(&[
+        "run", "--decomp", "tiles", "--chunks-x", "2", "--chunks-y", "2", "--kind", "box2d1r",
+        "--sz", "128", "--s-tb", "4", "--k-on", "2", "--n", "8", "--backend", "host-naive",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("decomp=tiles"), "{text}");
+    assert!(text.contains("chunks=2x2"), "{text}");
+    assert!(text.contains("OK"), "{text}");
+}
+
+#[test]
+fn run_tiles_compose_with_lossless_and_devices() {
+    let (ok, text) = run(&[
+        "run", "--decomp", "tiles", "--chunks-x", "2", "--chunks-y", "2", "--devices", "2",
+        "--kind", "box2d1r", "--sz", "128", "--s-tb", "4", "--k-on", "2", "--n", "8",
+        "--compress", "lossless", "--backend", "host-naive",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("compression:"), "{text}");
+    assert!(text.contains("OK"), "{text}");
+}
+
+#[test]
+fn run_tiles_reject_resreu_and_resident() {
+    let (ok, text) = run(&[
+        "run", "--decomp", "tiles", "--scheme", "resreu", "--sz", "128", "--n", "8",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("so2dr"), "{text}");
+    let (ok, text) = run(&[
+        "run", "--decomp", "tiles", "--resident", "force", "--sz", "128", "--n", "8",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("resident"), "{text}");
+    let (ok, text) = run(&["run", "--decomp", "diagonal"]);
+    assert!(!ok);
+    assert!(text.contains("decomp"), "{text}");
+}
+
+#[test]
+fn simulate_tiles_reports_breakdown() {
+    let (ok, text) = run(&[
+        "simulate", "--decomp", "tiles", "--chunks-x", "2", "--chunks-y", "2", "--devices",
+        "4", "--s-tb", "160", "--n", "640",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("tiles=2x2"), "{text}");
+    assert!(text.contains("peak device memory"), "{text}");
+    assert!(text.contains("gpu3"), "per-device table at 4 devices: {text}");
+}
+
+#[test]
+fn figures_decomp_emits_crossover_table() {
+    let (ok, text) = run(&["figures", "--fig", "decomp"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("row bands vs 2-D tiles"), "{text}");
+    assert!(text.contains("4x4 tiles"), "{text}");
+    assert!(text.contains("halo vs 1-D"), "{text}");
+}
+
+#[test]
 fn figures_single_figure() {
     let (ok, text) = run(&["figures", "--fig", "8"]);
     assert!(ok, "{text}");

@@ -344,7 +344,7 @@ fn flatten_compressed_paper(
     let dc = Decomposition::new(38400, 38400, d, 1);
     let devs = DeviceAssignment::contiguous(d, devices);
     let (mut plans, _) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, resident);
-    apply_codec_policy(&mut plans, &dc, compress);
+    apply_codec_policy(&mut plans, compress);
     let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
     flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, N_STRM, buf_rows)
 }

@@ -61,12 +61,14 @@ fn prop_transfers_partition_grid() {
             for dir in ["htod", "dtoh"] {
                 let mut covered = vec![0u8; c.rows];
                 for (_, _, op) in plan.iter_ops() {
-                    let span = match (dir, op) {
-                        ("htod", ChunkOp::HtoD { span, .. }) => *span,
-                        ("dtoh", ChunkOp::DtoH { span, .. }) => *span,
+                    let rect = match (dir, op) {
+                        ("htod", ChunkOp::HtoD { rect, .. }) => *rect,
+                        ("dtoh", ChunkOp::DtoH { rect, .. }) => *rect,
                         _ => continue,
                     };
-                    for r in span.lo..span.hi {
+                    // Row-band transfers are full-width rects.
+                    assert_eq!((rect.c0, rect.c1), (0, 32));
+                    for r in rect.r0..rect.r1 {
                         covered[r] += 1;
                     }
                 }
@@ -99,14 +101,14 @@ fn prop_rs_causality() {
             for (_, _, op) in plans[0].iter_ops() {
                 match op {
                     ChunkOp::RsWrite(r) => {
-                        written.insert((r.span.lo, r.span.hi, r.time_step));
+                        written.insert((r.rect, r.time_step));
                     }
                     ChunkOp::RsRead(r) => {
-                        if !written.contains(&(r.span.lo, r.span.hi, r.time_step)) {
+                        if !written.contains(&(r.rect, r.time_step)) {
                             return Err(format!(
                                 "{}: read {} @t{} before write",
                                 scheme.name(),
-                                r.span,
+                                r.rect,
                                 r.time_step
                             ));
                         }

@@ -11,7 +11,8 @@
 
 use so2dr::chunking::{ResidencyConfig, Scheme};
 use so2dr::coordinator::{
-    reference_run, run_scheme_full, run_scheme_on, run_scheme_resident, HostBackend,
+    reference_run, run_scheme_full, run_scheme_on, run_scheme_resident, run_scheme_tiles,
+    HostBackend,
 };
 use so2dr::stencil::{NaiveEngine, StencilKind};
 use so2dr::transfer::CompressMode;
@@ -49,7 +50,10 @@ impl Case {
 
     fn feasible(&self) -> bool {
         let r = self.radius();
-        self.s_tb * r + r <= self.rows / self.d
+        // The validated constructor also rejects interior-free grids
+        // (rows <= 2r), which the generator can produce at d = 1 with
+        // zero slack — those runs would be no-ops anyway.
+        self.s_tb * r + r <= self.rows / self.d && self.rows > 2 * r
     }
 }
 
@@ -363,6 +367,163 @@ fn prop_bf16_compression_error_bounded_on_box() {
         }
         Ok(())
     });
+}
+
+/// A randomized 2-D tiling (feasible by construction up to generator
+/// slack the property re-checks).
+#[derive(Debug, Clone)]
+struct TileCase {
+    rows: usize,
+    cols: usize,
+    chunks_y: usize,
+    chunks_x: usize,
+    devices: usize,
+    /// 0 encodes gradient2d; 1..=3 encode box2d{r}r.
+    kind_code: usize,
+    s_tb: usize,
+    k_on: usize,
+    n: usize,
+}
+
+impl TileCase {
+    fn kind(&self) -> StencilKind {
+        if self.kind_code == 0 {
+            StencilKind::Gradient2d
+        } else {
+            StencilKind::Box { radius: self.kind_code }
+        }
+    }
+
+    fn feasible(&self) -> bool {
+        let r = self.kind().radius();
+        let need = self.s_tb * r + r;
+        need <= self.rows / self.chunks_y
+            && need <= self.cols / self.chunks_x
+            // Interior-free grids are rejected by the validated ctor.
+            && self.rows > 2 * r
+            && self.cols > 2 * r
+    }
+}
+
+fn gen_tile_case(rng: &mut XorShift64) -> TileCase {
+    let kind_code = rng.range_usize(0, 4);
+    let r = if kind_code == 0 { 1 } else { kind_code };
+    let chunks_y = rng.range_usize(1, 4);
+    let chunks_x = rng.range_usize(1, 4);
+    let s_tb = rng.range_usize(1, 5);
+    let min_side = s_tb * r + r;
+    let rows = chunks_y * (min_side + rng.range_usize(0, 10));
+    let cols = chunks_x * (min_side + rng.range_usize(0, 10));
+    let devices = rng.range_usize(1, (chunks_y * chunks_x).min(4) + 1);
+    let k_on = rng.range_usize(1, 4);
+    let n = s_tb + rng.range_usize(0, s_tb + 2);
+    TileCase { rows, cols, chunks_y, chunks_x, devices, kind_code, s_tb, k_on, n }
+}
+
+fn shrink_tile_case(c: &TileCase) -> Vec<TileCase> {
+    let mut out = Vec::new();
+    for n in shrink_usize_toward(c.n, 1) {
+        out.push(TileCase { n, ..c.clone() });
+    }
+    for s_tb in shrink_usize_toward(c.s_tb, 1) {
+        out.push(TileCase { s_tb, ..c.clone() });
+    }
+    for devices in shrink_usize_toward(c.devices, 1) {
+        out.push(TileCase { devices, ..c.clone() });
+    }
+    for chunks_y in shrink_usize_toward(c.chunks_y, 1) {
+        if chunks_y * c.chunks_x >= c.devices {
+            out.push(TileCase { chunks_y, ..c.clone() });
+        }
+    }
+    for chunks_x in shrink_usize_toward(c.chunks_x, 1) {
+        if c.chunks_y * chunks_x >= c.devices {
+            out.push(TileCase { chunks_x, ..c.clone() });
+        }
+    }
+    out
+}
+
+/// The tiles acceptance property: random 2-D tilings, every device
+/// count, staged epochs, with and without the lossless codec — all
+/// bit-exact vs the in-core reference, and never vacuously (multi-tile
+/// layouts must actually share bands; sharded layouts must actually
+/// cross the link).
+#[test]
+fn prop_tiles_bit_exact_across_devices_and_codecs() {
+    forall(0x71E5, 120, gen_tile_case, shrink_tile_case, |c| {
+        if !c.feasible() || c.devices > c.chunks_y * c.chunks_x {
+            return Ok(()); // generator slack can under-shoot; skip
+        }
+        let kind = c.kind();
+        let seed = (c.rows * 23 + c.cols * 19 + c.n) as u64;
+        let initial = Array2::synthetic(c.rows, c.cols, seed);
+        let reference = reference_run(&initial, kind, c.n, &NaiveEngine);
+        for compress in [CompressMode::Off, CompressMode::Lossless] {
+            let mut backend = HostBackend::new(NaiveEngine);
+            let out = run_scheme_tiles(
+                Scheme::So2dr,
+                &initial,
+                kind,
+                c.n,
+                c.chunks_y,
+                c.chunks_x,
+                c.devices,
+                c.s_tb,
+                c.k_on,
+                &mut backend,
+                &ResidencyConfig::off(),
+                compress,
+            )
+            .map_err(|e| format!("tiles {compress:?} failed: {e:#}"))?;
+            if !out.grid.bit_eq(&reference) {
+                return Err(format!(
+                    "{}x{} tiles ({compress:?}) on {} device(s) diverged: max |diff| = {}",
+                    c.chunks_y,
+                    c.chunks_x,
+                    c.devices,
+                    out.grid.max_abs_diff(&reference)
+                ));
+            }
+            if c.chunks_y * c.chunks_x > 1 && out.stats.rs_reads == 0 {
+                return Err("multi-tile layout shared no bands".to_string());
+            }
+            if c.devices > 1 && out.stats.p2p_copies == 0 {
+                return Err(format!("{} devices exchanged no halos", c.devices));
+            }
+            if c.devices == 1 && out.stats.p2p_bytes != 0 {
+                return Err("single-device run crossed the link".to_string());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Tiles reject what they cannot plan — at plan time, with typed errors,
+/// never by silently mis-planning (the composition half of the tiles
+/// acceptance criterion).
+#[test]
+fn tiles_reject_resreu_incore_and_resident_compositions() {
+    let kind = StencilKind::Box { radius: 1 };
+    let initial = Array2::synthetic(64, 64, 5);
+    for (scheme, resident, needle) in [
+        (Scheme::ResReu, ResidencyConfig::off(), "resreu"),
+        (Scheme::InCore, ResidencyConfig::off(), "incore"),
+        (Scheme::So2dr, ResidencyConfig::force(3), "resident"),
+        (Scheme::So2dr, ResidencyConfig::auto(1 << 30, 3), "resident"),
+    ] {
+        let mut backend = HostBackend::new(NaiveEngine);
+        let err = run_scheme_tiles(
+            scheme, &initial, kind, 8, 2, 2, 1, 4, 2, &mut backend, &resident,
+            CompressMode::Off,
+        )
+        .expect_err(&format!("{} must be rejected", scheme.name()));
+        assert!(
+            err.to_string().contains(needle),
+            "{}: {err:#} missing {needle:?}",
+            scheme.name()
+        );
+    }
 }
 
 /// The acceptance-criterion configuration, pinned: `--devices 4` at d=8
