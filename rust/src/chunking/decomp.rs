@@ -679,6 +679,98 @@ impl Decomposition2d {
         self.owned(t)
     }
 
+    // ---------------------------------------------------------------
+    // Resident-model rects (cross-epoch tile residency; see
+    // chunking::plan::plan_run_resident_tiles).
+    //
+    // During an epoch a tile's *settled* region — the cells already at
+    // the current time step — shrinks by `radius` per step from all
+    // four sides (the 2-D trapezoid), and the final step computes
+    // exactly the owned rect. After an epoch each arena therefore
+    // holds its owned rect at the epoch-end time, and the settled
+    // rects partition the grid — which is what makes spill/re-fetch
+    // round trips and the final writeback exact. The next epoch
+    // refreshes the `h`-deep ring around the settled rect from the
+    // neighbors' arenas in two rounds: west/east *column bands* first
+    // (settled data of the row neighbors), then north/south *row
+    // bands* at full skirted width — the `h x h` corner blocks ride
+    // the row bands, cascading through the column refresh exactly as
+    // the staged scheme's corners cascade through its row bands.
+    // ---------------------------------------------------------------
+
+    /// Rect of tile `t` that is valid at the current time step in its
+    /// arena after an SO2DR epoch: the owned rect (the last trapezoid
+    /// step computes exactly the owned cells). Settled rects partition
+    /// the grid.
+    pub fn settled(&self, t: usize) -> Rect {
+        self.owned(t)
+    }
+
+    /// West column band tile `t` fetches at the start of a resident
+    /// epoch of `steps`: `[r0, r1) x [c0-h, c0)`, settled by tile
+    /// `(i, j-1)`. Empty for the first tile column (clamped at the
+    /// grid edge).
+    pub fn resident_fetch_west(&self, t: usize, steps: usize) -> Rect {
+        let h = self.skirt(steps) as i64;
+        let o = self.owned(t);
+        Rect::clamped(
+            o.r0 as i64,
+            o.r1 as i64,
+            o.c0 as i64 - h,
+            o.c0 as i64,
+            self.rows,
+            self.cols,
+        )
+    }
+
+    /// East column band tile `t` fetches: `[r0, r1) x [c1, c1+h)`,
+    /// settled by tile `(i, j+1)`. Empty for the last tile column.
+    pub fn resident_fetch_east(&self, t: usize, steps: usize) -> Rect {
+        let h = self.skirt(steps) as i64;
+        let o = self.owned(t);
+        Rect::clamped(
+            o.r0 as i64,
+            o.r1 as i64,
+            o.c1 as i64,
+            o.c1 as i64 + h,
+            self.rows,
+            self.cols,
+        )
+    }
+
+    /// North row band tile `t` fetches: `[r0-h, r0) x [c0-h, c1+h)` —
+    /// the full skirted width, corners included. Published by tile
+    /// `(i-1, j)` *after* its own column fetches (the corner blocks
+    /// arrive there through the column refresh). Empty for the first
+    /// tile row.
+    pub fn resident_fetch_north(&self, t: usize, steps: usize) -> Rect {
+        let h = self.skirt(steps) as i64;
+        let o = self.owned(t);
+        Rect::clamped(
+            o.r0 as i64 - h,
+            o.r0 as i64,
+            o.c0 as i64 - h,
+            o.c1 as i64 + h,
+            self.rows,
+            self.cols,
+        )
+    }
+
+    /// South row band tile `t` fetches: `[r1, r1+h) x [c0-h, c1+h)`,
+    /// published by tile `(i+1, j)`. Empty for the last tile row.
+    pub fn resident_fetch_south(&self, t: usize, steps: usize) -> Rect {
+        let h = self.skirt(steps) as i64;
+        let o = self.owned(t);
+        Rect::clamped(
+            o.r1 as i64,
+            o.r1 as i64 + h,
+            o.c0 as i64 - h,
+            o.c1 as i64 + h,
+            self.rows,
+            self.cols,
+        )
+    }
+
     /// Signed global (row, col) of tile `t`'s arena origin for an epoch
     /// of `steps`: the resident rect's corner before clamping, so data
     /// keeps a stable in-arena offset whether or not the grid edge
@@ -845,6 +937,62 @@ impl DeviceAssignment {
         let nc = self.chunks_on(dev).len() as u64;
         let rs_slack = nc * 12 * (h_max * dc.cols() * 4) as u64;
         nc * dc.arena_bytes(buf_rows) + rs_slack
+    }
+
+    /// Device-memory demand (bytes) of a resident-tile run on device
+    /// `dev`: one tile arena per tile assigned to the device at the
+    /// uniform `s_max` shape, plus a region-sharing slack of 16 bands
+    /// of `h_max x max-skirted-side` cells per tile.
+    ///
+    /// The arena term charges *every* tile — the pass-structured epoch
+    /// (all arrivals and publishes before any tile's retirement) holds
+    /// every tile arena live at the epoch boundary, exactly as in the
+    /// 1-D model above. The slack dominates the worst case: a
+    /// tile-epoch allocates at most 4 published bands plus 4 incoming
+    /// link copies, each at most `h x (max side + 2h)` cells, live
+    /// until their consumer retires, and at most two adjacent epochs'
+    /// bands can overlap on a device — 16 bands per tile with margin.
+    /// The DES's observed peak never exceeds this bound, which is what
+    /// lets the tile planner promise `capacity_exceeded` won't fire on
+    /// accepted plans.
+    pub fn resident_tile_memory_demand(
+        &self,
+        dc: &Decomposition2d,
+        dev: usize,
+        s_max: usize,
+    ) -> u64 {
+        let nc = self.chunks_on(dev).len() as u64;
+        let (br, bc) = dc.uniform_buffer_dims(s_max);
+        let band = (dc.skirt(s_max) * br.max(bc) * 4) as u64;
+        nc * dc.arena_bytes(s_max) + nc * 16 * band
+    }
+
+    /// Per-device pinned-tile counts under `cap` bytes and
+    /// [`Self::resident_tile_memory_demand`]: the same all-or-nothing
+    /// rule as [`Self::resident_keep_counts`] (spilling cannot lower
+    /// the modeled epoch-boundary peak, only pinning-vs-not changes
+    /// host traffic). `None` caps nothing (keep all).
+    pub fn resident_tile_keep_counts(
+        &self,
+        dc: &Decomposition2d,
+        s_max: usize,
+        cap: Option<u64>,
+    ) -> Vec<usize> {
+        (0..self.n_devices)
+            .map(|dev| {
+                let nc = self.chunks_on(dev).len();
+                match cap {
+                    None => nc,
+                    Some(cap) => {
+                        if self.resident_tile_memory_demand(dc, dev, s_max) <= cap {
+                            nc
+                        } else {
+                            0
+                        }
+                    }
+                }
+            })
+            .collect()
     }
 
     /// Per-device pinned-chunk counts under `cap` bytes and
@@ -1602,5 +1750,126 @@ mod tile_tests {
             let (i, j) = dc.tile_rc(t);
             assert_eq!(dc.index(i, j), t);
         }
+    }
+
+    #[test]
+    fn settled_rects_partition_grid() {
+        let dc = dc2(120, 96, 3, 2, 1);
+        let rects: Vec<Rect> = (0..dc.n_tiles()).map(|t| dc.settled(t)).collect();
+        let cover = cover_count(&dc, &rects);
+        assert!(cover.iter().all(|&x| x == 1), "settled rects must partition the grid");
+    }
+
+    #[test]
+    fn resident_fetch_bands_tile_the_resident_ring_exactly() {
+        // settled ∪ west ∪ east ∪ north ∪ south = the epoch's resident
+        // rect, disjointly — the invariant that makes the four-band
+        // refresh (plus the settled arena) reconstruct exactly what the
+        // staged HtoD + north/west reads would have delivered.
+        let dc = dc2(120, 96, 3, 3, 2);
+        let steps = 4;
+        for t in 0..dc.n_tiles() {
+            let res = dc.so2dr_resident(t, steps);
+            let parts = [
+                dc.settled(t),
+                dc.resident_fetch_west(t, steps),
+                dc.resident_fetch_east(t, steps),
+                dc.resident_fetch_north(t, steps),
+                dc.resident_fetch_south(t, steps),
+            ];
+            let mut area = 0usize;
+            for p in &parts {
+                assert!(res.contains_rect(p), "tile {t}: {p} outside resident {res}");
+                area += p.area();
+                for q in &parts {
+                    if p != q && !p.is_empty() {
+                        assert!(!p.overlaps(q), "tile {t}: {p} overlaps {q}");
+                    }
+                }
+            }
+            assert_eq!(area, res.area(), "tile {t}: parts must cover resident exactly");
+        }
+    }
+
+    #[test]
+    fn resident_fetch_bands_come_from_neighbor_coverage() {
+        // Column bands lie inside the row neighbor's settled rect; row
+        // bands lie inside the row neighbor's settled rect grown by its
+        // own column fetches (the corner cascade). Edge tiles' missing
+        // neighbors clamp the bands empty.
+        let dc = dc2(120, 96, 3, 3, 2);
+        let steps = 4;
+        for t in 0..dc.n_tiles() {
+            let (i, j) = dc.tile_rc(t);
+            let west = dc.resident_fetch_west(t, steps);
+            if j == 0 {
+                assert!(west.is_empty(), "tile {t} has no west neighbor");
+            } else {
+                assert!(dc.settled(dc.index(i, j - 1)).contains_rect(&west), "tile {t}");
+            }
+            let east = dc.resident_fetch_east(t, steps);
+            if j + 1 == dc.tiles_x() {
+                assert!(east.is_empty());
+            } else {
+                assert!(dc.settled(dc.index(i, j + 1)).contains_rect(&east), "tile {t}");
+            }
+            let north = dc.resident_fetch_north(t, steps);
+            if i == 0 {
+                assert!(north.is_empty());
+            } else {
+                let p = dc.index(i - 1, j);
+                // Publisher coverage after its column fetches: its
+                // settled rows at the full skirted column width.
+                let cov = Rect::of_spans(
+                    dc.settled(p).rows(),
+                    dc.resident_fetch_north(t, steps).cols(),
+                );
+                assert!(cov.contains_rect(&north), "tile {t}: {north} vs {cov}");
+            }
+            let south = dc.resident_fetch_south(t, steps);
+            if i + 1 == dc.tiles_y() {
+                assert!(south.is_empty());
+            } else {
+                let p = dc.index(i + 1, j);
+                let cov = Rect::of_spans(
+                    dc.settled(p).rows(),
+                    dc.resident_fetch_south(t, steps).cols(),
+                );
+                assert!(cov.contains_rect(&south), "tile {t}: {south} vs {cov}");
+            }
+        }
+    }
+
+    #[test]
+    fn resident_tile_keep_counts_scale_with_capacity() {
+        let dc = dc2(120, 96, 2, 2, 1);
+        let devs = DeviceAssignment::contiguous(4, 2);
+        let s_max = 6;
+        let none = devs.resident_tile_keep_counts(&dc, s_max, Some(1));
+        let all = devs.resident_tile_keep_counts(&dc, s_max, None);
+        let huge = devs.resident_tile_keep_counts(&dc, s_max, Some(u64::MAX));
+        assert_eq!(none, vec![0, 0], "1-byte cap pins nothing");
+        assert_eq!(all, vec![2, 2], "uncapped pins every tile");
+        assert_eq!(huge, all);
+    }
+
+    #[test]
+    fn resident_tile_demand_charges_every_arena() {
+        // Same all-or-nothing boundary behavior as the 1-D model: a
+        // capacity exactly at the demand pins everything, one byte less
+        // pins nothing.
+        let dc = dc2(120, 96, 2, 2, 1);
+        let devs = DeviceAssignment::contiguous(4, 2);
+        let s_max = 6;
+        let nc = 2u64;
+        let (br, bc) = dc.uniform_buffer_dims(s_max);
+        let band = (dc.skirt(s_max) * br.max(bc) * 4) as u64;
+        let demand = devs.resident_tile_memory_demand(&dc, 0, s_max);
+        assert_eq!(demand, nc * dc.arena_bytes(s_max) + nc * 16 * band);
+        assert_eq!(devs.resident_tile_keep_counts(&dc, s_max, Some(demand)), vec![2, 2]);
+        assert_eq!(
+            devs.resident_tile_keep_counts(&dc, s_max, Some(demand - 1)),
+            vec![0, 0]
+        );
     }
 }

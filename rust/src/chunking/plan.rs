@@ -205,6 +205,62 @@ pub fn phase_a_len(ops: &[ChunkOp]) -> usize {
         .count()
 }
 
+/// Pass boundaries for executing/emitting a resident chunk-epoch: the
+/// op-index boundaries (first 0, last `ops.len()`) of the epoch-wide
+/// passes both interpreters run — every chunk's pass `p` completes
+/// before any chunk's pass `p + 1`, because inter-epoch halo data flows
+/// both up and down the chunk order.
+///
+/// 1-D resident epochs have two passes (phase A / phase B, split at
+/// [`phase_a_len`]). Resident *tile* epochs have three: their op
+/// grammar interleaves a second publish round between two fetch runs —
+/// arrival + column publishes, then column fetches + row publishes,
+/// then row fetches + kernels + retirement — which this function
+/// detects structurally (a publish run between two fetch runs). The
+/// detection is conservative: every 1-D epoch shape (including ResReu's
+/// per-step publish/read body, whose first body op after the fetch is
+/// an `RsWrite` followed by an `RsRead`, not a `Fetch`) keeps its
+/// two-pass split, so the flattener's emission order for existing plans
+/// is unchanged.
+pub fn resident_pass_bounds(ops: &[ChunkOp]) -> Vec<usize> {
+    let a = phase_a_len(ops);
+    let mut k = a;
+    while k < ops.len() && matches!(ops[k], ChunkOp::Fetch(_)) {
+        k += 1;
+    }
+    let mut m = k;
+    while m < ops.len() && matches!(ops[m], ChunkOp::RsWrite(_) | ChunkOp::D2D { .. }) {
+        m += 1;
+    }
+    if k > a && m > k && m < ops.len() && matches!(ops[m], ChunkOp::Fetch(_)) {
+        vec![0, a, m, ops.len()]
+    } else {
+        vec![0, a, ops.len()]
+    }
+}
+
+/// Pass-major execution order of one resident epoch: for each pass, the
+/// `(chunk_index_in_plan, op_range)` segments to run, derived from
+/// [`resident_pass_bounds`] (chunks whose op lists have fewer passes
+/// simply contribute nothing to the trailing ones). The real-numerics
+/// executor, the flattener and the causality tests all iterate this one
+/// structure, so the pass order cannot drift between the interpreters.
+pub fn resident_pass_sequences(plan: &EpochPlan) -> Vec<Vec<(usize, std::ops::Range<usize>)>> {
+    let bounds: Vec<Vec<usize>> =
+        plan.chunks.iter().map(|cp| resident_pass_bounds(&cp.ops)).collect();
+    let n_passes = bounds.iter().map(|b| b.len() - 1).max().unwrap_or(1);
+    (0..n_passes)
+        .map(|pass| {
+            bounds
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| pass + 1 < b.len())
+                .map(|(ci, b)| (ci, b[pass]..b[pass + 1]))
+                .collect()
+        })
+        .collect()
+}
+
 impl EpochPlan {
     /// Iterate `(chunk_index_in_plan, op_index, op)` in the canonical
     /// sequential execution order (chunk-major).
@@ -470,18 +526,40 @@ pub fn resreu_epoch(
 /// `steps` are applied as `k_on`-fused kernels over the full interior.
 /// No HtoD/DtoH ops are emitted (the paper excludes the two one-time
 /// transfers from the in-core measurements, §V-D).
-pub fn incore_epoch(
+///
+/// Degenerate geometries are rejected with typed errors through the
+/// same validated error path (and messages) as
+/// [`Decomposition::try_new`]: a grid whose rows or cols do not exceed
+/// the `2*radius` Dirichlet ring has no interior cell, and used to be
+/// silently clamped to an empty compute window here instead of
+/// refusing to plan.
+pub fn try_incore_epoch(
     rows: usize,
     cols: usize,
     radius: usize,
     steps: usize,
     k_on: usize,
     start_step: usize,
-) -> EpochPlan {
-    assert!(steps >= 1 && k_on >= 1);
-    let rspan = RowSpan::new(radius.min(rows), rows.saturating_sub(radius).max(radius.min(rows)));
-    let cspan = RowSpan::new(radius.min(cols), cols.saturating_sub(radius).max(radius.min(cols)));
-    let interior = Rect::of_spans(rspan, cspan);
+) -> Result<EpochPlan> {
+    if steps == 0 {
+        bail!("steps must be positive (got 0)");
+    }
+    if k_on == 0 {
+        bail!("k_on must be positive (got 0)");
+    }
+    if radius == 0 {
+        bail!("radius must be positive (got 0)");
+    }
+    for (extent, axis) in [(rows, "rows"), (cols, "cols")] {
+        if extent <= 2 * radius {
+            bail!(
+                "{axis} extent {extent} must exceed the 2*radius = {} Dirichlet boundary ring \
+                 (no interior cell would remain)",
+                2 * radius
+            );
+        }
+    }
+    let interior = Rect::new(radius, rows - radius, radius, cols - radius);
     let mut ops = Vec::new();
     let mut s = 1usize;
     while s <= steps {
@@ -492,14 +570,30 @@ pub fn incore_epoch(
         }));
         s += fused;
     }
-    EpochPlan {
+    Ok(EpochPlan {
         scheme: Scheme::InCore,
         steps,
         start_step,
         n_devices: 1,
         resident: false,
         chunks: vec![ChunkEpochPlan { chunk: 0, device: 0, ops }],
-    }
+    })
+}
+
+/// Panicking [`try_incore_epoch`] (the original constructor contract,
+/// kept for infallible call sites — planners whose inputs were already
+/// validated by [`Decomposition::try_new`] or the config layer). The
+/// panic message is the validated error, not a bare assert.
+pub fn incore_epoch(
+    rows: usize,
+    cols: usize,
+    radius: usize,
+    steps: usize,
+    k_on: usize,
+    start_step: usize,
+) -> EpochPlan {
+    try_incore_epoch(rows, cols, radius, steps, k_on, start_step)
+        .unwrap_or_else(|e| panic!("invalid in-core epoch: {e}"))
 }
 
 /// Split a total of `n` steps into epochs of at most `s_tb` (Algorithm 1
@@ -853,6 +947,28 @@ fn resident_epoch(
     }
 }
 
+/// Convert a cloned staged epoch 0 into a resident plan's first epoch
+/// (shared by the 1-D and tile residency planners): mark it resident
+/// and replace each chunk's trailing `DtoH` by the planner's keep/spill
+/// decision — dropped when the chunk's arena pins, an [`ChunkOp::Evict`]
+/// of the same rect when it spills, kept as-is on a final epoch.
+fn staged_epoch0_to_resident(staged: &EpochPlan, kept: &[bool], final_epoch: bool) -> EpochPlan {
+    let mut plan = staged.clone();
+    plan.resident = true;
+    for cp in plan.chunks.iter_mut() {
+        let Some(ChunkOp::DtoH { rect, codec }) = cp.ops.last().cloned() else {
+            unreachable!("staged epochs end with DtoH");
+        };
+        if !final_epoch {
+            cp.ops.pop();
+            if !kept[cp.chunk] {
+                cp.ops.push(ChunkOp::Evict { rect, codec });
+            }
+        }
+    }
+    plan
+}
+
 /// Plan a full run under the resident execution model. Returns the epoch
 /// plans plus the planner's decisions. Falls back to the staged plan
 /// (summary `enabled: false`) for `ResidentMode::Off`, the in-core
@@ -904,20 +1020,7 @@ pub fn plan_run_resident(
     for (e, p) in staged.iter().enumerate() {
         let final_epoch = e + 1 == n_epochs;
         let plan = if e == 0 {
-            let mut plan = p.clone();
-            plan.resident = true;
-            for cp in plan.chunks.iter_mut() {
-                let Some(ChunkOp::DtoH { rect, codec }) = cp.ops.last().cloned() else {
-                    unreachable!("staged epochs end with DtoH");
-                };
-                if !final_epoch {
-                    cp.ops.pop();
-                    if !kept[cp.chunk] {
-                        cp.ops.push(ChunkOp::Evict { rect, codec });
-                    }
-                }
-            }
-            plan
+            staged_epoch0_to_resident(p, &kept, final_epoch)
         } else {
             resident_epoch(
                 scheme,
@@ -950,6 +1053,206 @@ pub fn plan_run_resident(
         planned_htod_bytes: planned_htod,
     };
     (plans, summary)
+}
+
+/// Append the publish — and, when the consumer lives on another device
+/// of the tile→device assignment, the [`ChunkOp::D2D`] link hop — for
+/// each `(rect, consumer)` band of a resident tile epoch.
+fn push_publishes(
+    ops: &mut Vec<ChunkOp>,
+    devs: &DeviceAssignment,
+    producer: usize,
+    bands: [Option<(Rect, usize)>; 2],
+) {
+    for (rect, consumer) in bands.into_iter().flatten() {
+        if rect.is_empty() {
+            continue;
+        }
+        ops.push(ChunkOp::RsWrite(RegionOp { rect, time_step: 0 }));
+        if devs.device_of(producer) != devs.device_of(consumer) {
+            ops.push(ChunkOp::D2D {
+                src_dev: devs.device_of(producer),
+                dst_dev: devs.device_of(consumer),
+                rect,
+                time_step: 0,
+                codec: CodecKind::Identity,
+            });
+        }
+    }
+}
+
+/// Build one resident-model SO2DR epoch over a 2-D tile decomposition:
+/// the 4-neighbor generalization of [`resident_epoch`]. Each tile
+/// arrives with its settled rect already on device
+/// ([`ChunkOp::Resident`]) or re-fetches it from the host (spilled),
+/// then refreshes the `h`-deep ring around it from its neighbors'
+/// arenas in two publish/fetch rounds — column bands first, row bands
+/// second:
+///
+/// 1. publish the west/east neighbors' column bands (settled data,
+///    inside this tile's owned rect);
+/// 2. fetch its own west/east column bands, then publish the
+///    north/south neighbors' row bands at full skirted width — the
+///    `h x h` corner blocks arrived through the column fetches, so
+///    corners cascade through the row bands exactly as in
+///    [`so2dr_tiles_epoch`] instead of needing eight dedicated corner
+///    ops;
+/// 3. fetch its own north/south row bands, compute the 2-D trapezoid
+///    kernels, and retire (keep / [`ChunkOp::Evict`] / final-epoch
+///    `DtoH` of the settled rect).
+///
+/// Both interpreters execute the rounds as epoch-wide passes
+/// ([`resident_pass_bounds`]): every tile's round-`k` ops before any
+/// tile's round `k + 1`, because bands flow both up and down the
+/// row-major tile order along both axes. Degenerate `tiles_x == 1`
+/// tilings have no column round and reproduce the 1-D
+/// [`resident_epoch`] op-for-op (locked by
+/// `resident_tile_plans_degenerate_to_resident_row_plans`).
+fn resident_tiles_epoch(
+    dc: &Decomposition2d,
+    devs: &DeviceAssignment,
+    steps: usize,
+    k_on: usize,
+    start_step: usize,
+    kept: &[bool],
+    final_epoch: bool,
+) -> EpochPlan {
+    assert!(steps >= 1 && k_on >= 1);
+    assert_eq!(devs.n_chunks(), dc.n_tiles(), "device assignment shape mismatch");
+    dc.check(steps);
+    let (ty, tx) = (dc.tiles_y(), dc.tiles_x());
+    let mut chunks = Vec::with_capacity(dc.n_tiles());
+    for t in 0..dc.n_tiles() {
+        let (i, j) = dc.tile_rc(t);
+        let settled = dc.settled(t);
+        let mut ops = Vec::new();
+        if kept[t] {
+            ops.push(ChunkOp::Resident { rect: settled });
+        } else {
+            ops.push(ChunkOp::HtoD { rect: settled, codec: CodecKind::Identity });
+        }
+        // Round 1: publish the column bands the row neighbors fetch.
+        let col_pubs = [
+            (j > 0).then(|| (dc.resident_fetch_east(dc.index(i, j - 1), steps), t - 1)),
+            (j + 1 < tx).then(|| (dc.resident_fetch_west(dc.index(i, j + 1), steps), t + 1)),
+        ];
+        push_publishes(&mut ops, devs, t, col_pubs);
+        // Round 2: fetch own column bands, then publish the row bands
+        // (their corner blocks just arrived through the fetches).
+        for rect in [dc.resident_fetch_west(t, steps), dc.resident_fetch_east(t, steps)] {
+            if !rect.is_empty() {
+                ops.push(ChunkOp::Fetch(RegionOp { rect, time_step: 0 }));
+            }
+        }
+        let row_pubs = [
+            (i > 0).then(|| (dc.resident_fetch_south(dc.index(i - 1, j), steps), t - tx)),
+            (i + 1 < ty).then(|| (dc.resident_fetch_north(dc.index(i + 1, j), steps), t + tx)),
+        ];
+        push_publishes(&mut ops, devs, t, row_pubs);
+        // Round 3: fetch own row bands, compute, retire.
+        for rect in [dc.resident_fetch_north(t, steps), dc.resident_fetch_south(t, steps)] {
+            if !rect.is_empty() {
+                ops.push(ChunkOp::Fetch(RegionOp { rect, time_step: 0 }));
+            }
+        }
+        let mut s = 1usize;
+        while s <= steps {
+            let fused = k_on.min(steps - s + 1);
+            let windows: Vec<Rect> =
+                (0..fused).map(|u| dc.so2dr_window(t, steps, s + u)).collect();
+            ops.push(ChunkOp::Kernel(KernelInvocation { first_step: s, windows }));
+            s += fused;
+        }
+        if final_epoch {
+            ops.push(ChunkOp::DtoH { rect: settled, codec: CodecKind::Identity });
+        } else if !kept[t] {
+            ops.push(ChunkOp::Evict { rect: settled, codec: CodecKind::Identity });
+        }
+        chunks.push(ChunkEpochPlan { chunk: t, device: devs.device_of(t), ops });
+    }
+    EpochPlan {
+        scheme: Scheme::So2dr,
+        steps,
+        start_step,
+        n_devices: devs.n_devices(),
+        resident: true,
+        chunks,
+    }
+}
+
+/// Plan a full 2-D tile run under the resident execution model: the
+/// tile analog of [`plan_run_resident`], lifting the PR 4 "resident ×
+/// tiles" composition rejection. Epoch 0 is the staged tile epoch
+/// (every tile starts cold) with its trailing `DtoH` replaced by the
+/// planner's keep/spill decision; later epochs are
+/// [`resident_tiles_epoch`]s. Per-device capacity follows
+/// [`DeviceAssignment::resident_tile_keep_counts`] (all-or-nothing per
+/// device; spill victims re-fetch their settled rect). Falls back to
+/// the staged tile plan (summary `enabled: false`) for
+/// [`ResidentMode::Off`] or single-epoch runs; non-SO2DR schemes and
+/// infeasible tilings return the typed [`plan_run_tiles`] errors.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_run_resident_tiles(
+    scheme: Scheme,
+    dc: &Decomposition2d,
+    devs: &DeviceAssignment,
+    n: usize,
+    s_tb: usize,
+    k_on: usize,
+    cfg: &ResidencyConfig,
+) -> Result<(Vec<EpochPlan>, ResidencySummary)> {
+    let staged = plan_run_tiles(scheme, dc, devs, n, s_tb, k_on)?;
+    let staged_htod = htod_bytes_of(&staged);
+    if cfg.mode == ResidentMode::Off || staged.len() < 2 {
+        let summary = ResidencySummary::disabled(dc.n_tiles(), staged_htod);
+        return Ok((staged, summary));
+    }
+    let s_max = staged.iter().map(|p| p.steps).max().unwrap();
+    let cap = match cfg.mode {
+        ResidentMode::Force => None,
+        _ => cfg.cap_per_device,
+    };
+    let keep_counts = devs.resident_tile_keep_counts(dc, s_max, cap);
+    let mut kept = vec![false; dc.n_tiles()];
+    for dev in 0..devs.n_devices() {
+        for (taken, t) in devs.chunks_on(dev).enumerate() {
+            kept[t] = taken < keep_counts[dev];
+        }
+    }
+    let demand_per_device: Vec<u64> = (0..devs.n_devices())
+        .map(|dev| devs.resident_tile_memory_demand(dc, dev, s_max))
+        .collect();
+    let fits = match cap {
+        None => true,
+        Some(cap) => demand_per_device.iter().all(|&d| d <= cap),
+    };
+    let n_epochs = staged.len();
+    let mut plans = Vec::with_capacity(n_epochs);
+    for (e, p) in staged.iter().enumerate() {
+        let final_epoch = e + 1 == n_epochs;
+        let plan = if e == 0 {
+            staged_epoch0_to_resident(p, &kept, final_epoch)
+        } else {
+            resident_tiles_epoch(dc, devs, p.steps, k_on, p.start_step, &kept, final_epoch)
+        };
+        plans.push(plan);
+    }
+    let planned_spills = plans
+        .iter()
+        .flat_map(|p| p.iter_ops())
+        .filter(|(_, _, op)| matches!(op, ChunkOp::Evict { .. }))
+        .count();
+    let planned_htod = htod_bytes_of(&plans);
+    let summary = ResidencySummary {
+        enabled: true,
+        kept,
+        fits,
+        demand_per_device,
+        planned_spills,
+        staged_htod_bytes: staged_htod,
+        planned_htod_bytes: planned_htod,
+    };
+    Ok((plans, summary))
 }
 
 #[cfg(test)]
@@ -1245,102 +1548,108 @@ mod device_tests {
     fn check_causality(plan: &EpochPlan) {
         // (rect, time_step) -> devices holding the region.
         let mut available: HashMap<(Rect, usize), HashSet<usize>> = HashMap::new();
+        // Walk ops in the true execution order: staged epochs run
+        // chunk-major; resident epochs run pass-major (every chunk's
+        // pass p before any chunk's pass p + 1 — two passes for 1-D
+        // plans, three for resident tile plans), so a fetch is checked
+        // against exactly the publishes that executed before it.
+        let mut order: Vec<(usize, usize)> = Vec::new();
         if plan.resident {
-            // Resident epochs run two-phase: every chunk's arrival +
-            // publish prefix executes before any chunk's fetches/kernels,
-            // so pre-register all phase-A publications.
-            for cp in &plan.chunks {
-                for op in &cp.ops[..phase_a_len(&cp.ops)] {
-                    match op {
-                        ChunkOp::RsWrite(r) => {
-                            available.entry((r.rect, r.time_step)).or_default().insert(cp.device);
-                        }
-                        ChunkOp::D2D { dst_dev, rect, time_step, .. } => {
-                            available.entry((*rect, *time_step)).or_default().insert(*dst_dev);
-                        }
-                        _ => {}
+            for segments in resident_pass_sequences(plan) {
+                for (ci, range) in segments {
+                    for oi in range {
+                        order.push((ci, oi));
                     }
+                }
+            }
+        } else {
+            for (ci, cp) in plan.chunks.iter().enumerate() {
+                for oi in 0..cp.ops.len() {
+                    order.push((ci, oi));
                 }
             }
         }
-        for cp in &plan.chunks {
-            let mut steps_done = 0usize;
-            for op in &cp.ops {
-                match op {
-                    ChunkOp::RsWrite(r) => {
-                        assert!(
-                            r.time_step <= steps_done,
-                            "chunk {} publishes t{} after only {} steps",
-                            cp.chunk,
-                            r.time_step,
-                            steps_done
-                        );
-                        available.entry((r.rect, r.time_step)).or_default().insert(cp.device);
-                    }
-                    ChunkOp::D2D { src_dev, dst_dev, rect, time_step, .. } => {
-                        assert_eq!(*src_dev, cp.device, "D2D source must be the producer");
-                        assert_ne!(src_dev, dst_dev, "D2D must cross devices");
-                        let holders = available
-                            .get(&(*rect, *time_step))
-                            .unwrap_or_else(|| panic!("D2D of unpublished region {rect}"));
-                        assert!(
-                            holders.contains(src_dev),
-                            "D2D from dev {src_dev} which does not hold {rect} @t{time_step}"
-                        );
-                        available.entry((*rect, *time_step)).or_default().insert(*dst_dev);
-                    }
-                    ChunkOp::RsRead(r) => {
-                        let holders =
-                            available.get(&(r.rect, r.time_step)).unwrap_or_else(|| {
-                                panic!(
-                                    "chunk {} reads unpublished region {} @t{}",
-                                    cp.chunk, r.rect, r.time_step
-                                )
-                            });
-                        assert!(
-                            holders.contains(&cp.device),
-                            "chunk {} (dev {}) reads {} @t{} not on its device",
-                            cp.chunk,
-                            cp.device,
-                            r.rect,
-                            r.time_step
-                        );
-                        // Halo data must predate the steps it feeds.
-                        assert!(
-                            r.time_step <= steps_done,
-                            "read of future time step t{}",
-                            r.time_step
-                        );
-                    }
-                    ChunkOp::Kernel(k) => {
-                        assert_eq!(k.first_step, steps_done + 1, "kernel steps out of order");
-                        steps_done += k.fused_steps();
-                    }
-                    ChunkOp::Fetch(r) => {
-                        // A fetch is an RsRead of epoch-start data: its
-                        // publisher must have run (in phase A) and the
-                        // region must sit on the reader's device.
-                        assert_eq!(r.time_step, 0, "fetches move epoch-start data");
-                        assert_eq!(steps_done, 0, "fetches precede kernels");
-                        let holders =
-                            available.get(&(r.rect, r.time_step)).unwrap_or_else(|| {
-                                panic!("chunk {} fetches unpublished region {}", cp.chunk, r.rect)
-                            });
-                        assert!(
-                            holders.contains(&cp.device),
-                            "chunk {} (dev {}) fetches {} not on its device",
-                            cp.chunk,
-                            cp.device,
-                            r.rect
-                        );
-                    }
-                    ChunkOp::Resident { .. } | ChunkOp::Evict { .. } => {
-                        assert!(plan.resident, "resident ops only in resident plans");
-                    }
-                    ChunkOp::HtoD { .. } | ChunkOp::DtoH { .. } => {}
+        let mut steps_done_of = vec![0usize; plan.chunks.len()];
+        for (ci, oi) in order {
+            let cp = &plan.chunks[ci];
+            let steps_done = steps_done_of[ci];
+            let op = &cp.ops[oi];
+            match op {
+                ChunkOp::RsWrite(r) => {
+                    assert!(
+                        r.time_step <= steps_done,
+                        "chunk {} publishes t{} after only {} steps",
+                        cp.chunk,
+                        r.time_step,
+                        steps_done
+                    );
+                    available.entry((r.rect, r.time_step)).or_default().insert(cp.device);
                 }
+                ChunkOp::D2D { src_dev, dst_dev, rect, time_step, .. } => {
+                    assert_eq!(*src_dev, cp.device, "D2D source must be the producer");
+                    assert_ne!(src_dev, dst_dev, "D2D must cross devices");
+                    let holders = available
+                        .get(&(*rect, *time_step))
+                        .unwrap_or_else(|| panic!("D2D of unpublished region {rect}"));
+                    assert!(
+                        holders.contains(src_dev),
+                        "D2D from dev {src_dev} which does not hold {rect} @t{time_step}"
+                    );
+                    available.entry((*rect, *time_step)).or_default().insert(*dst_dev);
+                }
+                ChunkOp::RsRead(r) => {
+                    let holders =
+                        available.get(&(r.rect, r.time_step)).unwrap_or_else(|| {
+                            panic!(
+                                "chunk {} reads unpublished region {} @t{}",
+                                cp.chunk, r.rect, r.time_step
+                            )
+                        });
+                    assert!(
+                        holders.contains(&cp.device),
+                        "chunk {} (dev {}) reads {} @t{} not on its device",
+                        cp.chunk,
+                        cp.device,
+                        r.rect,
+                        r.time_step
+                    );
+                    // Halo data must predate the steps it feeds.
+                    assert!(
+                        r.time_step <= steps_done,
+                        "read of future time step t{}",
+                        r.time_step
+                    );
+                }
+                ChunkOp::Kernel(k) => {
+                    assert_eq!(k.first_step, steps_done + 1, "kernel steps out of order");
+                    steps_done_of[ci] += k.fused_steps();
+                }
+                ChunkOp::Fetch(r) => {
+                    // A fetch is an RsRead of epoch-start data: its
+                    // publisher must have run (in phase A) and the
+                    // region must sit on the reader's device.
+                    assert_eq!(r.time_step, 0, "fetches move epoch-start data");
+                    assert_eq!(steps_done, 0, "fetches precede kernels");
+                    let holders =
+                        available.get(&(r.rect, r.time_step)).unwrap_or_else(|| {
+                            panic!("chunk {} fetches unpublished region {}", cp.chunk, r.rect)
+                        });
+                    assert!(
+                        holders.contains(&cp.device),
+                        "chunk {} (dev {}) fetches {} not on its device",
+                        cp.chunk,
+                        cp.device,
+                        r.rect
+                    );
+                }
+                ChunkOp::Resident { .. } | ChunkOp::Evict { .. } => {
+                    assert!(plan.resident, "resident ops only in resident plans");
+                }
+                ChunkOp::HtoD { .. } | ChunkOp::DtoH { .. } => {}
             }
-            assert_eq!(steps_done, plan.steps, "chunk {} step count", cp.chunk);
+        }
+        for (ci, cp) in plan.chunks.iter().enumerate() {
+            assert_eq!(steps_done_of[ci], plan.steps, "chunk {} step count", cp.chunk);
         }
     }
 
@@ -1366,6 +1675,26 @@ mod device_tests {
         for n_dev in [1, 2, 3, 6] {
             let devs = DeviceAssignment::contiguous(6, n_dev);
             check_causality(&so2dr_tiles_epoch(&dc, &devs, 4, 2, 0));
+        }
+    }
+
+    #[test]
+    fn resident_tile_causality_across_device_counts_and_caps() {
+        // The load-bearing check of the 2-D settled/fetch algebra: every
+        // fetch — corners cascading through the row bands included —
+        // finds its publish on the right device under the pass-major
+        // execution order, for pinned and spilling plans alike.
+        let dc = Decomposition2d::try_new(120, 96, 2, 3, 2).unwrap();
+        for n_dev in [1usize, 2, 3, 6] {
+            let devs = DeviceAssignment::contiguous(6, n_dev);
+            for cfg in [ResidencyConfig::force(3), ResidencyConfig::auto(1, 3)] {
+                let (plans, _) =
+                    plan_run_resident_tiles(Scheme::So2dr, &dc, &devs, 12, 4, 2, &cfg).unwrap();
+                assert_eq!(plans.len(), 3);
+                for plan in &plans {
+                    check_causality(plan);
+                }
+            }
         }
     }
 
@@ -1773,5 +2102,342 @@ mod tile_tests {
             }
             assert!(cover.iter().all(|&x| x == 1), "direction {pick} must partition");
         }
+    }
+}
+
+#[cfg(test)]
+mod resident_tile_tests {
+    use super::*;
+
+    fn dc2() -> Decomposition2d {
+        Decomposition2d::try_new(120, 96, 2, 3, 2).unwrap()
+    }
+
+    fn count_ops(plans: &[EpochPlan], f: impl Fn(&ChunkOp) -> bool) -> usize {
+        plans.iter().flat_map(|p| p.iter_ops()).filter(|&(_, _, op)| f(op)).count()
+    }
+
+    #[test]
+    fn resident_tiles_force_transfers_each_tile_once() {
+        let dc = dc2();
+        for n_dev in [1usize, 2, 6] {
+            let devs = DeviceAssignment::contiguous(6, n_dev);
+            let (plans, summary) = plan_run_resident_tiles(
+                Scheme::So2dr,
+                &dc,
+                &devs,
+                12,
+                4,
+                2,
+                &ResidencyConfig::force(3),
+            )
+            .unwrap();
+            assert_eq!(plans.len(), 3);
+            assert!(summary.enabled && summary.fits);
+            assert!(summary.kept.iter().all(|&k| k));
+            assert_eq!(summary.planned_spills, 0);
+            // One HtoD per tile (first touch), one DtoH per tile (final
+            // writeback), markers everywhere in between.
+            assert_eq!(count_ops(&plans, |op| matches!(op, ChunkOp::HtoD { .. })), 6);
+            assert_eq!(count_ops(&plans, |op| matches!(op, ChunkOp::DtoH { .. })), 6);
+            assert_eq!(count_ops(&plans, |op| matches!(op, ChunkOp::Evict { .. })), 0);
+            assert_eq!(
+                count_ops(&plans, |op| matches!(op, ChunkOp::Resident { .. })),
+                (plans.len() - 1) * 6,
+                "{n_dev} devices"
+            );
+            // HtoD drops by the epoch count vs the staged tile plan.
+            assert_eq!(
+                summary.staged_htod_bytes,
+                summary.planned_htod_bytes * plans.len() as u64,
+                "{n_dev} devices"
+            );
+        }
+    }
+
+    #[test]
+    fn resident_tiles_tight_cap_spills_every_epoch() {
+        let dc = dc2();
+        let devs = DeviceAssignment::contiguous(6, 2);
+        let (plans, summary) = plan_run_resident_tiles(
+            Scheme::So2dr,
+            &dc,
+            &devs,
+            12,
+            4,
+            2,
+            &ResidencyConfig::auto(1, 3),
+        )
+        .unwrap();
+        assert!(summary.enabled);
+        assert!(!summary.fits, "a 1-byte capacity cannot fit the model");
+        assert!(summary.kept.iter().all(|&k| !k));
+        assert_eq!(summary.planned_spills, (plans.len() - 1) * 6);
+        assert_eq!(summary.planned_htod_bytes, summary.staged_htod_bytes);
+        assert_eq!(summary.saved_htod_bytes(), 0);
+    }
+
+    #[test]
+    fn resident_tiles_off_and_single_epoch_degenerate_to_staged() {
+        let dc = dc2();
+        let devs = DeviceAssignment::single(6);
+        for (cfg, n) in [
+            (ResidencyConfig::off(), 12),
+            (ResidencyConfig::force(3), 4), // single epoch
+        ] {
+            let (plans, summary) =
+                plan_run_resident_tiles(Scheme::So2dr, &dc, &devs, n, 4, 2, &cfg).unwrap();
+            assert!(!summary.enabled);
+            assert_eq!(summary.saved_htod_bytes(), 0);
+            for p in &plans {
+                assert!(!p.resident);
+                for (_, _, op) in p.iter_ops() {
+                    assert!(!matches!(
+                        op,
+                        ChunkOp::Resident { .. } | ChunkOp::Fetch(_) | ChunkOp::Evict { .. }
+                    ));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resident_tiles_reject_unsupported_schemes() {
+        let dc = Decomposition2d::try_new(96, 96, 2, 2, 1).unwrap();
+        let devs = DeviceAssignment::single(4);
+        let err = plan_run_resident_tiles(
+            Scheme::ResReu,
+            &dc,
+            &devs,
+            8,
+            4,
+            1,
+            &ResidencyConfig::force(3),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("resreu"), "{err}");
+        let err = plan_run_resident_tiles(
+            Scheme::InCore,
+            &dc,
+            &devs,
+            8,
+            4,
+            1,
+            &ResidencyConfig::force(3),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("incore"), "{err}");
+    }
+
+    /// Middle resident tile epochs carry the three-round grammar, and
+    /// [`resident_pass_bounds`] splits exactly at the two fetch runs;
+    /// 1-D-shaped chunk-epochs keep their two-pass split.
+    #[test]
+    fn resident_pass_bounds_detect_the_tile_grammar() {
+        let dc = dc2();
+        let devs = DeviceAssignment::single(6);
+        let kept = vec![true; 6];
+        let mid = resident_tiles_epoch(&dc, &devs, 4, 2, 4, &kept, false);
+        for cp in &mid.chunks {
+            let b = resident_pass_bounds(&cp.ops);
+            assert_eq!(b.len(), 4, "tile {}: {b:?}", cp.chunk);
+            assert_eq!((b[0], *b.last().unwrap()), (0, cp.ops.len()));
+            // Pass 0: arrival + column publishes only.
+            for op in &cp.ops[b[0]..b[1]] {
+                assert!(matches!(
+                    op,
+                    ChunkOp::Resident { .. }
+                        | ChunkOp::HtoD { .. }
+                        | ChunkOp::RsWrite(_)
+                        | ChunkOp::D2D { .. }
+                ));
+            }
+            // Pass 1 starts with a fetch and contains no kernels.
+            assert!(matches!(cp.ops[b[1]], ChunkOp::Fetch(_)));
+            for op in &cp.ops[b[1]..b[2]] {
+                assert!(!matches!(op, ChunkOp::Kernel(_)));
+            }
+            // Pass 2 starts with a fetch and holds all kernels.
+            assert!(matches!(cp.ops[b[2]], ChunkOp::Fetch(_)));
+            assert!(cp.ops[b[2]..].iter().any(|op| matches!(op, ChunkOp::Kernel(_))));
+        }
+        // 1-D resident chunk-epochs stay two-pass.
+        let dc1 = Decomposition::new(240, 64, 4, 2);
+        let devs1 = DeviceAssignment::contiguous(4, 2);
+        let (plans, _) = plan_run_resident(
+            Scheme::So2dr,
+            &dc1,
+            &devs1,
+            20,
+            8,
+            4,
+            &ResidencyConfig::force(3),
+        );
+        for cp in &plans[1].chunks {
+            let b = resident_pass_bounds(&cp.ops);
+            assert_eq!(b.len(), 3, "chunk {}: {b:?}", cp.chunk);
+            assert_eq!(b[1], phase_a_len(&cp.ops));
+        }
+    }
+
+    /// The load-bearing degenerate-equivalence check: a one-tile-column
+    /// resident tiling must reproduce the 1-D resident plan op-for-op —
+    /// same rects, same order, same keep decisions, same devices.
+    #[test]
+    fn resident_tile_plans_degenerate_to_resident_row_plans() {
+        let (rows, cols, d, r) = (240usize, 64usize, 4usize, 2usize);
+        let dc1 = Decomposition::new(rows, cols, d, r);
+        let dc2 = Decomposition2d::try_new(rows, cols, d, 1, r).unwrap();
+        for n_dev in [1usize, 2, 4] {
+            let devs = DeviceAssignment::contiguous(d, n_dev);
+            let (rows_plans, rows_summary) = plan_run_resident(
+                Scheme::So2dr,
+                &dc1,
+                &devs,
+                20,
+                8,
+                4,
+                &ResidencyConfig::force(3),
+            );
+            let tile = plan_run_resident_tiles(
+                Scheme::So2dr,
+                &dc2,
+                &devs,
+                20,
+                8,
+                4,
+                &ResidencyConfig::force(3),
+            )
+            .unwrap();
+            let (tile_plans, tile_summary) = tile;
+            assert_eq!(rows_summary.kept, tile_summary.kept);
+            assert_eq!(rows_summary.planned_spills, tile_summary.planned_spills);
+            assert_eq!(rows_summary.planned_htod_bytes, tile_summary.planned_htod_bytes);
+            assert_eq!(rows_plans.len(), tile_plans.len());
+            for (a, b) in rows_plans.iter().zip(&tile_plans) {
+                assert_eq!(a.steps, b.steps);
+                assert_eq!(a.start_step, b.start_step);
+                assert_eq!(a.resident, b.resident);
+                assert_eq!(a.chunks.len(), b.chunks.len());
+                for (ca, cb) in a.chunks.iter().zip(&b.chunks) {
+                    assert_eq!(ca.chunk, cb.chunk);
+                    assert_eq!(ca.device, cb.device);
+                    assert_eq!(ca.ops, cb.ops, "chunk {} on {n_dev} devices", ca.chunk);
+                }
+            }
+        }
+    }
+
+    /// RS keys are exact (rect, time): every fetch of a resident tile
+    /// epoch must find a same-key publish on its own device in an
+    /// earlier pass.
+    #[test]
+    fn resident_tile_fetches_match_publishes_per_pass() {
+        use std::collections::HashSet;
+        let dc = dc2();
+        let devs = DeviceAssignment::contiguous(6, 3);
+        let (plans, _) = plan_run_resident_tiles(
+            Scheme::So2dr,
+            &dc,
+            &devs,
+            12,
+            4,
+            2,
+            &ResidencyConfig::force(3),
+        )
+        .unwrap();
+        for plan in plans.iter().skip(1) {
+            let mut published: HashSet<(Rect, usize)> = HashSet::new();
+            for segments in resident_pass_sequences(plan) {
+                // Fetches of this pass see only earlier passes' publishes.
+                for (ci, range) in &segments {
+                    let cp = &plan.chunks[*ci];
+                    for op in &cp.ops[range.clone()] {
+                        if let ChunkOp::Fetch(r) = op {
+                            assert!(
+                                published.contains(&(r.rect, cp.device)),
+                                "tile {} (dev {}) fetch {} has no earlier-pass \
+                                 same-device publish",
+                                cp.chunk,
+                                cp.device,
+                                r.rect
+                            );
+                        }
+                    }
+                }
+                // Then register this pass's publishes (and link landings).
+                for (ci, range) in segments {
+                    let cp = &plan.chunks[ci];
+                    for op in &cp.ops[range] {
+                        match op {
+                            ChunkOp::RsWrite(r) => {
+                                published.insert((r.rect, cp.device));
+                            }
+                            ChunkOp::D2D { dst_dev, rect, .. } => {
+                                published.insert((*rect, *dst_dev));
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod incore_tests {
+    use super::*;
+
+    /// Accept/reject table for the validated in-core epoch constructor,
+    /// mirroring the decomposition constructor tables: every rejection
+    /// names the violated constraint instead of silently planning an
+    /// empty interior (the old `radius.min(rows)` clamping) or tripping
+    /// a bare assert.
+    #[test]
+    fn incore_epoch_acceptance_table() {
+        let accept: &[(usize, usize, usize, usize, usize)] = &[
+            (100, 64, 1, 10, 4),
+            (3, 3, 1, 1, 1), // smallest grid with an interior cell
+            (100, 100, 4, 7, 3),
+        ];
+        for &(rows, cols, r, steps, k_on) in accept {
+            let plan = try_incore_epoch(rows, cols, r, steps, k_on, 0)
+                .unwrap_or_else(|e| panic!("({rows},{cols},r{r},{steps},{k_on}): {e}"));
+            assert_eq!(plan.steps, steps);
+            for (_, _, op) in plan.iter_ops() {
+                let ChunkOp::Kernel(k) = op else {
+                    panic!("in-core plans hold kernels only, got {op:?}");
+                };
+                for w in &k.windows {
+                    assert!(!w.is_empty(), "accepted plans never hold empty windows");
+                }
+            }
+        }
+        let reject: &[(usize, usize, usize, usize, usize, &str)] = &[
+            (100, 64, 1, 0, 4, "steps"),
+            (100, 64, 1, 10, 0, "k_on"),
+            (100, 64, 0, 10, 4, "radius"),
+            (2, 64, 1, 10, 4, "rows extent"),  // rows == 2r
+            (1, 64, 1, 10, 4, "rows extent"),  // radius >= rows
+            (100, 2, 1, 10, 4, "cols extent"), // cols == 2r
+            (100, 8, 4, 10, 4, "cols extent"), // cols == 2r at r=4
+        ];
+        for &(rows, cols, r, steps, k_on, needle) in reject {
+            let err = try_incore_epoch(rows, cols, r, steps, k_on, 0)
+                .expect_err(&format!("({rows},{cols},r{r},{steps},{k_on}) accepted"));
+            assert!(
+                err.to_string().contains(needle),
+                "({rows},{cols},r{r}): {err} missing {needle:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn incore_epoch_panics_with_the_validated_message() {
+        let got = std::panic::catch_unwind(|| incore_epoch(2, 64, 1, 10, 4, 0));
+        let msg = *got.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("invalid in-core epoch"), "{msg}");
+        assert!(msg.contains("rows extent"), "{msg}");
     }
 }

@@ -196,14 +196,14 @@ impl RunConfig {
             DecompMode::Tiles => {
                 // The tile planner re-validates with typed errors; this
                 // pre-flight keeps config files failing at load time.
+                // `resident` composes with tiles since the 2-D
+                // settled/fetch algebra landed (per-tile cross-epoch
+                // arenas) — no structural restriction here.
                 if self.scheme != Scheme::So2dr {
                     bail!(
                         "decomp = \"tiles\" supports scheme = \"so2dr\" only \
                          (resreu's skew and incore's residency are 1-D)"
                     );
-                }
-                if self.resident != ResidentMode::Off {
-                    bail!("decomp = \"tiles\" does not compose with resident yet");
                 }
                 validate_devices(self.scheme, self.chunks_x * self.chunks_y, self.devices)?;
                 let min_side =
@@ -410,7 +410,10 @@ mod tests {
             ("decomp = \"tiles\"\nchunks_x = 0\n", false),
             ("decomp = \"tiles\"\nscheme = \"resreu\"\nk_on = 1\n", false),
             ("decomp = \"tiles\"\nscheme = \"incore\"\n", false),
-            ("decomp = \"tiles\"\nresident = \"force\"\n", false),
+            // resident x tiles is accepted since the 2-D settled/fetch
+            // algebra landed (rejected through PR 4).
+            ("decomp = \"tiles\"\nresident = \"force\"\n", true),
+            ("decomp = \"tiles\"\nchunks_x = 2\nchunks_y = 2\nresident = \"auto\"\n", true),
             ("decomp = \"tiles\"\nchunks_x = 2\nchunks_y = 2\ndevices = 5\n", false),
             // Per-axis feasibility: 8-cell-wide tile columns cannot host
             // the S_TB=8 skirt at r=1 (9 > 8).

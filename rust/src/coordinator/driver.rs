@@ -2,8 +2,8 @@
 //! reference sweep.
 
 use crate::chunking::plan::{
-    apply_codec_policy, plan_run_devices, plan_run_resident, plan_run_tiles, ResidencyConfig,
-    ResidencySummary, ResidentMode, Scheme,
+    apply_codec_policy, plan_run_devices, plan_run_resident, plan_run_resident_tiles,
+    ResidencyConfig, ResidencySummary, Scheme,
 };
 use crate::chunking::{Decomposition, Decomposition2d, DeviceAssignment};
 use crate::coordinator::backend::KernelBackend;
@@ -11,7 +11,7 @@ use crate::coordinator::exec::{ExecStats, PlanExecutor};
 use crate::core::{Array2, Rect};
 use crate::stencil::{apply_step, StencilEngine, StencilKind};
 use crate::transfer::CompressMode;
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 /// Result of a full out-of-core (or in-core) run.
 #[derive(Debug)]
@@ -125,14 +125,21 @@ pub fn run_scheme_full(
 /// riding the row bands) and [`ChunkOp::D2D`]-bridged shares at device
 /// boundaries. Composition rules are enforced at plan time with typed
 /// errors rather than silent mis-planning: only the SO2DR scheme tiles
-/// (ResReu's skew is 1-D; in-core has no decomposition), and the
-/// resident execution model is not yet generalized to tile arenas —
-/// `resident` must be `Off`. Transfer compression composes: the codec
-/// post-pass tags the tile plan's strided hops like any other transfer,
-/// and lossless policies preserve bit-exactness vs [`reference_run`]
-/// (randomized differential suite, schemes x tilings x device counts).
+/// (ResReu's skew is 1-D; in-core has no decomposition). The resident
+/// execution model composes since the 2-D settled/fetch algebra landed:
+/// `resident` routes through
+/// [`chunking::plan::plan_run_resident_tiles`], which transfers each
+/// tile HtoD once on first touch, pins per-tile arenas under the
+/// per-device capacity model, refreshes inter-epoch halos by
+/// neighbor-arena publishes/fetches (column bands, then row bands with
+/// the corner cascade), and spills/re-fetches capacity victims'
+/// settled rects. Transfer compression composes: the codec post-pass
+/// tags the tile plan's strided hops like any other transfer, and
+/// lossless policies preserve bit-exactness vs [`reference_run`]
+/// (randomized differential suite, tilings x device counts x caps).
 ///
 /// [`ChunkOp::D2D`]: crate::chunking::plan::ChunkOp::D2D
+/// [`chunking::plan::plan_run_resident_tiles`]: crate::chunking::plan::plan_run_resident_tiles
 #[allow(clippy::too_many_arguments)]
 pub fn run_scheme_tiles(
     scheme: Scheme,
@@ -148,23 +155,18 @@ pub fn run_scheme_tiles(
     resident: &ResidencyConfig,
     compress: CompressMode,
 ) -> Result<RunOutcome> {
-    if resident.mode != ResidentMode::Off {
-        bail!(
-            "--decomp tiles does not compose with --resident yet: tile arenas have no \
-             cross-epoch fetch algebra (use --decomp rows, or --resident off)"
-        );
-    }
     let dc =
         Decomposition2d::try_new(initial.rows(), initial.cols(), chunks_y, chunks_x, kind.radius())?;
     crate::config::validate_devices(scheme, dc.n_tiles(), n_devices)?;
     let devs = DeviceAssignment::contiguous(dc.n_tiles(), n_devices);
-    let mut plans = plan_run_tiles(scheme, &dc, &devs, n, s_tb, k_on)?;
+    let (mut plans, summary) =
+        plan_run_resident_tiles(scheme, &dc, &devs, n, s_tb, k_on, resident)?;
     apply_codec_policy(&mut plans, compress);
     let mut grid = initial.clone();
     let mut exec = PlanExecutor::new(backend, kind);
     exec.run_tiles(&mut grid, &dc, &plans)?;
     let stats = exec.stats.clone();
-    Ok(RunOutcome { grid, stats, residency: None })
+    Ok(RunOutcome { grid, stats, residency: Some(summary) })
 }
 
 /// [`run_scheme_full`] without compression (the PR 2 entry point).
@@ -683,9 +685,12 @@ mod tests {
         assert!(err.to_string().contains("resreu"), "{err}");
         let err = run(Scheme::InCore, &off).unwrap_err();
         assert!(err.to_string().contains("incore"), "{err}");
-        let err =
-            run(Scheme::So2dr, &crate::chunking::plan::ResidencyConfig::force(3)).unwrap_err();
-        assert!(err.to_string().contains("resident"), "{err}");
+        // resident x tiles is ACCEPTED since the 2-D settled/fetch
+        // algebra landed (it was plan-time-rejected through PR 4); the
+        // scheme rejections still apply under residency.
+        let err = run(Scheme::ResReu, &crate::chunking::plan::ResidencyConfig::force(3))
+            .unwrap_err();
+        assert!(err.to_string().contains("resreu"), "{err}");
         // Structural rejections flow through the shared validators too.
         let mut backend = HostBackend::new(NaiveEngine);
         let err = run_scheme_tiles(
@@ -700,6 +705,116 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("devices"), "{err}");
+    }
+
+    #[test]
+    fn resident_tiles_match_reference_and_drop_host_traffic() {
+        let kind = StencilKind::Box { radius: 1 };
+        let initial = Array2::synthetic(120, 96, 19);
+        let reference = reference_run(&initial, kind, 12, &NaiveEngine);
+        let grid_bytes = (120 * 96 * 4) as u64;
+        for (gy, gx) in [(2usize, 2usize), (4, 1), (1, 4), (3, 2)] {
+            for n_devices in [1usize, 2, 4] {
+                if n_devices > gy * gx {
+                    continue;
+                }
+                let mut backend = HostBackend::new(NaiveEngine);
+                let out = run_scheme_tiles(
+                    Scheme::So2dr,
+                    &initial,
+                    kind,
+                    12,
+                    gy,
+                    gx,
+                    n_devices,
+                    4,
+                    2,
+                    &mut backend,
+                    &crate::chunking::plan::ResidencyConfig::force(3),
+                    CompressMode::Off,
+                )
+                .unwrap();
+                assert!(
+                    out.grid.bit_eq(&reference),
+                    "{gy}x{gx} resident tiles on {n_devices} devices diverged: {}",
+                    out.grid.max_abs_diff(&reference)
+                );
+                // Three epochs staged would move the grid 3x each way;
+                // resident moves it once each way and refreshes halos
+                // from neighbor tile arenas.
+                assert_eq!(out.stats.epochs, 3, "{gy}x{gx}");
+                assert_eq!(out.stats.htod_bytes, grid_bytes, "{gy}x{gx}");
+                assert_eq!(out.stats.dtoh_bytes, grid_bytes, "{gy}x{gx}");
+                assert_eq!(out.stats.spills, 0);
+                assert!(out.stats.resident_hits > 0, "{gy}x{gx}");
+                if gy * gx > 1 {
+                    assert!(out.stats.fetch_reads > 0, "{gy}x{gx}");
+                }
+                let summary = out.residency.unwrap();
+                assert!(summary.enabled && summary.fits);
+                assert_eq!(summary.saved_htod_bytes(), 2 * grid_bytes, "{gy}x{gx}");
+            }
+        }
+    }
+
+    #[test]
+    fn resident_tiles_tight_cap_spills_and_stays_bit_exact() {
+        let kind = StencilKind::Box { radius: 1 };
+        let initial = Array2::synthetic(120, 96, 5);
+        let reference = reference_run(&initial, kind, 12, &NaiveEngine);
+        let mut backend = HostBackend::new(NaiveEngine);
+        let out = run_scheme_tiles(
+            Scheme::So2dr,
+            &initial,
+            kind,
+            12,
+            2,
+            2,
+            2,
+            4,
+            2,
+            &mut backend,
+            &crate::chunking::plan::ResidencyConfig::auto(1, 3),
+            CompressMode::Off,
+        )
+        .unwrap();
+        assert!(out.grid.bit_eq(&reference), "diff {}", out.grid.max_abs_diff(&reference));
+        // Nothing fits a 1-byte device: every tile spills at the end of
+        // each of the two non-final epochs, and the host traffic matches
+        // the staged model.
+        assert_eq!(out.stats.spills, 2 * 4);
+        assert_eq!(out.stats.htod_bytes, 3 * (120 * 96 * 4) as u64);
+        assert_eq!(out.stats.resident_hits, 0);
+        let summary = out.residency.unwrap();
+        assert!(summary.enabled && !summary.fits);
+        assert_eq!(summary.planned_spills, 8);
+    }
+
+    #[test]
+    fn resident_tiles_compose_with_lossless_compression_bit_exactly() {
+        let kind = StencilKind::Box { radius: 2 };
+        let initial = Array2::synthetic(120, 120, 31);
+        let reference = reference_run(&initial, kind, 12, &NaiveEngine);
+        let mut backend = HostBackend::new(NaiveEngine);
+        let out = run_scheme_tiles(
+            Scheme::So2dr,
+            &initial,
+            kind,
+            12,
+            2,
+            2,
+            2,
+            4,
+            2,
+            &mut backend,
+            &crate::chunking::plan::ResidencyConfig::force(3),
+            CompressMode::Lossless,
+        )
+        .unwrap();
+        assert!(out.grid.bit_eq(&reference), "diff {}", out.grid.max_abs_diff(&reference));
+        assert!(out.stats.codec_ops > 0, "codec must engage");
+        assert_eq!(out.stats.htod_bytes, (120 * 120 * 4) as u64, "first touch only");
+        assert!(out.stats.htod_wire_bytes < out.stats.htod_bytes);
     }
 
     #[test]

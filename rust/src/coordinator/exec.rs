@@ -24,7 +24,9 @@
 //! actually flows through the numerics (bounded by the bf16 round-trip
 //! bound per transfer).
 
-use crate::chunking::plan::{phase_a_len, ChunkEpochPlan, ChunkOp, EpochPlan, Scheme};
+use crate::chunking::plan::{
+    resident_pass_sequences, ChunkEpochPlan, ChunkOp, EpochPlan, Scheme,
+};
 use crate::chunking::{Decomposition, Decomposition2d};
 use crate::coordinator::backend::KernelBackend;
 use crate::coordinator::rs_buffer::RegionShareBuffer;
@@ -314,11 +316,16 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         Ok(())
     }
 
-    /// Execute a 2-D tile run (staged epochs over a [`Decomposition2d`]).
-    /// Tiles stream through per-device tile-shaped double buffers exactly
-    /// as 1-D chunks stream through full-width ones; every op addresses a
-    /// rect relative to the tile's 2-D base, so the interpreter below is
-    /// byte-for-byte the one the row-band path uses.
+    /// Execute a 2-D tile run over a [`Decomposition2d`]. Staged epochs
+    /// stream tiles through per-device tile-shaped double buffers exactly
+    /// as 1-D chunks stream through full-width ones; resident plans
+    /// ([`chunking::plan::plan_run_resident_tiles`]) route to
+    /// [`Self::run_resident_tiles`], which keeps one persistent arena per
+    /// tile across epochs. Every op addresses a rect relative to the
+    /// tile's 2-D base, so the interpreter below is byte-for-byte the one
+    /// the row-band path uses.
+    ///
+    /// [`chunking::plan::plan_run_resident_tiles`]: crate::chunking::plan::plan_run_resident_tiles
     pub fn run_tiles(
         &mut self,
         grid: &mut Array2,
@@ -330,6 +337,11 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         let n_devices = plans.iter().map(|p| p.n_devices).max().unwrap_or(1);
         let mut rs: Vec<RegionShareBuffer> =
             (0..n_devices).map(|_| RegionShareBuffer::new()).collect();
+        if plans.iter().any(|p| p.resident) {
+            self.run_resident_tiles(grid, dc, plans, (buf_rows, buf_cols), s_max, &mut rs)?;
+            self.collect_rs_stats(&rs);
+            return Ok(());
+        }
         let mut store = ArenaStore::Staged(
             (0..n_devices)
                 .map(|_| (Array2::zeros(buf_rows, buf_cols), Array2::zeros(buf_rows, buf_cols)))
@@ -338,9 +350,6 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         let arena_bytes = n_devices as u64 * 2 * (buf_rows * buf_cols * 4) as u64;
         self.stats.arena_peak_bytes = self.stats.arena_peak_bytes.max(arena_bytes);
         for plan in plans {
-            if plan.resident {
-                bail!("tile plans are staged (resident tiling is not planned yet)");
-            }
             for cp in &plan.chunks {
                 let base = dc.tile_base(cp.chunk, plan.steps);
                 self.exec_ops(
@@ -363,6 +372,52 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
             self.stats.epochs += 1;
         }
         self.collect_rs_stats(&rs);
+        Ok(())
+    }
+
+    /// Resident tile execution: one persistent tile-shaped arena per
+    /// tile, kept alive across epoch boundaries and pinned at the
+    /// run-maximum base ([`Decomposition2d::tile_base`] at `s_max`), so
+    /// settled data keeps its arena offset from one epoch to the next.
+    /// Each epoch executes in the passes [`resident_pass_sequences`]
+    /// derives from its op lists — arrival + column publishes, column
+    /// fetches + row publishes, row fetches + kernels + retirement —
+    /// because inter-epoch bands flow both up and down the row-major
+    /// tile order along both axes, which no single tile-major sweep can
+    /// serialize.
+    fn run_resident_tiles(
+        &mut self,
+        grid: &mut Array2,
+        dc: &Decomposition2d,
+        plans: &[EpochPlan],
+        dims: (usize, usize),
+        s_max: usize,
+        rs: &mut [RegionShareBuffer],
+    ) -> Result<()> {
+        let mut store = ArenaStore::Resident((0..dc.n_tiles()).map(|_| None).collect());
+        for plan in plans {
+            for (pass, segments) in resident_pass_sequences(plan).into_iter().enumerate() {
+                for (ci, range) in segments {
+                    let cp = &plan.chunks[ci];
+                    let base = dc.tile_base(cp.chunk, s_max);
+                    self.exec_ops(grid, cp, &cp.ops[range], base, dims, true, rs, &mut store)
+                        .with_context(|| {
+                            format!("epoch at step {} tile {}", plan.start_step, cp.chunk)
+                        })?;
+                }
+                if pass == 0 {
+                    // Peak arena occupancy: right after arrivals, before
+                    // this epoch's evictions.
+                    let live = store.live_arenas() as u64;
+                    self.stats.arena_peak_bytes =
+                        self.stats.arena_peak_bytes.max(live * dc.arena_bytes(s_max));
+                }
+            }
+            for r in rs.iter_mut() {
+                r.clear();
+            }
+            self.stats.epochs += 1;
+        }
         Ok(())
     }
 
@@ -404,8 +459,9 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
     }
 
     /// Resident execution model: one persistent arena per chunk, kept
-    /// alive across epoch boundaries. Each epoch runs in two phases —
-    /// every chunk's arrival + epoch-start publishes (phase A), then all
+    /// alive across epoch boundaries. Each epoch runs in the passes
+    /// [`resident_pass_sequences`] derives from its op lists — every
+    /// chunk's arrival + epoch-start publishes (phase A), then all
     /// fetches, kernels and retirements (phase B) — because inter-epoch
     /// halo data flows both up and down the chunk order, which a single
     /// chunk-major sweep cannot serialize (a chunk's kernels would
@@ -423,15 +479,23 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         let s_max = plans.iter().map(|p| p.steps).max().unwrap_or(1);
         let mut store = ArenaStore::Resident((0..dc.n_chunks()).map(|_| None).collect());
         for plan in plans {
-            for pass in 0..2 {
-                for cp in &plan.chunks {
-                    let split = phase_a_len(&cp.ops);
-                    let ops = if pass == 0 { &cp.ops[..split] } else { &cp.ops[split..] };
+            for (pass, segments) in resident_pass_sequences(plan).into_iter().enumerate() {
+                for (ci, range) in segments {
+                    let cp = &plan.chunks[ci];
                     let base = (dc.resident_base(scheme, s_max, cp.chunk), 0);
-                    self.exec_ops(grid, cp, ops, base, (buf_rows, cols), true, rs, &mut store)
-                        .with_context(|| {
-                            format!("epoch at step {} chunk {}", plan.start_step, cp.chunk)
-                        })?;
+                    self.exec_ops(
+                        grid,
+                        cp,
+                        &cp.ops[range],
+                        base,
+                        (buf_rows, cols),
+                        true,
+                        rs,
+                        &mut store,
+                    )
+                    .with_context(|| {
+                        format!("epoch at step {} chunk {}", plan.start_step, cp.chunk)
+                    })?;
                 }
                 if pass == 0 {
                     // Peak arena occupancy: right after arrivals, before

@@ -6,8 +6,8 @@
 //! shapes: who wins, by what factor, and where the crossovers fall.
 
 use crate::chunking::plan::{
-    apply_codec_policy, plan_run_resident, plan_run_tiles, ResidencyConfig, ResidencySummary,
-    Scheme,
+    apply_codec_policy, plan_run_resident, plan_run_resident_tiles, ResidencyConfig,
+    ResidencySummary, Scheme,
 };
 use crate::chunking::{Decomposition, Decomposition2d, DeviceAssignment};
 use crate::coordinator::{HostBackend, PlanExecutor};
@@ -74,11 +74,43 @@ pub fn simulate_compressed_grid_devices(
     (simulate(&ops, &CostModel::new(machine.clone()), n_strm), summary)
 }
 
-/// Price a 2-D tile run on the machine model: plan over a
-/// [`Decomposition2d`], tag the transfer ops under the codec policy,
-/// flatten (tile-shaped arenas), replay. Returns an error for the
-/// combinations the tile planner rejects (non-SO2DR schemes, infeasible
-/// tilings) so the CLI surfaces them instead of panicking.
+/// Price a 2-D tile run on the machine model, staged or resident: plan
+/// over a [`Decomposition2d`] (through the tile residency planner —
+/// `ResidencyConfig::off()` degenerates to the staged tile plan), tag
+/// the transfer ops under the codec policy, flatten (tile-shaped
+/// arenas, cross-epoch lifetimes for resident plans), replay. Returns
+/// an error for the combinations the tile planner rejects (non-SO2DR
+/// schemes, infeasible tilings) so the CLI surfaces them instead of
+/// panicking.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_resident_tiles_grid_devices(
+    machine: &MachineSpec,
+    kind: StencilKind,
+    rows: usize,
+    cols: usize,
+    chunks_y: usize,
+    chunks_x: usize,
+    devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    n: usize,
+    n_strm: usize,
+    resident: &ResidencyConfig,
+    compress: CompressMode,
+) -> anyhow::Result<(SimReport, ResidencySummary)> {
+    let dc = Decomposition2d::try_new(rows, cols, chunks_y, chunks_x, kind.radius())?;
+    crate::config::validate_devices(Scheme::So2dr, dc.n_tiles(), devices)?;
+    let devs = DeviceAssignment::contiguous(dc.n_tiles(), devices);
+    let (mut plans, summary) =
+        plan_run_resident_tiles(Scheme::So2dr, &dc, &devs, n, s_tb, k_on, resident)?;
+    apply_codec_policy(&mut plans, compress);
+    let s_max = plans.iter().map(|p| p.steps).max().unwrap_or(1);
+    let ops = flatten_run_sized(&plans, kind, n_strm, dc.arena_bytes(s_max));
+    Ok((simulate(&ops, &CostModel::new(machine.clone()), n_strm), summary))
+}
+
+/// Staged [`simulate_resident_tiles_grid_devices`] (the historical tile
+/// pricing signature every staged call site uses).
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_tiles_grid_devices(
     machine: &MachineSpec,
@@ -94,14 +126,22 @@ pub fn simulate_tiles_grid_devices(
     n_strm: usize,
     compress: CompressMode,
 ) -> anyhow::Result<SimReport> {
-    let dc = Decomposition2d::try_new(rows, cols, chunks_y, chunks_x, kind.radius())?;
-    crate::config::validate_devices(Scheme::So2dr, dc.n_tiles(), devices)?;
-    let devs = DeviceAssignment::contiguous(dc.n_tiles(), devices);
-    let mut plans = plan_run_tiles(Scheme::So2dr, &dc, &devs, n, s_tb, k_on)?;
-    apply_codec_policy(&mut plans, compress);
-    let s_max = plans.iter().map(|p| p.steps).max().unwrap_or(1);
-    let ops = flatten_run_sized(&plans, kind, n_strm, dc.arena_bytes(s_max));
-    Ok(simulate(&ops, &CostModel::new(machine.clone()), n_strm))
+    simulate_resident_tiles_grid_devices(
+        machine,
+        kind,
+        rows,
+        cols,
+        chunks_y,
+        chunks_x,
+        devices,
+        s_tb,
+        k_on,
+        n,
+        n_strm,
+        &ResidencyConfig::off(),
+        compress,
+    )
+    .map(|(rep, _)| rep)
 }
 
 /// Staged, uncompressed [`simulate_compressed_grid_devices`].
@@ -462,12 +502,67 @@ fn staged_vs_resident_sweep(machine: &MachineSpec) -> Vec<ResidentComparison> {
     out
 }
 
+/// One staged-vs-resident comparison point of the 2-D tile
+/// decomposition (2x2 tiling at the §V-B configuration), shared by the
+/// `resident` figure's tiles table and `bench_pr5`.
+struct ResidentTileComparison {
+    kind: StencilKind,
+    devices: usize,
+    staged: SimReport,
+    resident: SimReport,
+    summary: ResidencySummary,
+}
+
+fn staged_vs_resident_tiles_sweep(machine: &MachineSpec) -> Vec<ResidentTileComparison> {
+    let mut out = Vec::new();
+    for kind in StencilKind::paper_set() {
+        let (_, s_tb) = chosen_config(kind);
+        for devices in [1usize, 4] {
+            let staged = simulate_tiles_grid_devices(
+                machine,
+                kind,
+                SZ_OOC,
+                SZ_OOC,
+                2,
+                2,
+                devices,
+                s_tb,
+                K_ON,
+                N_STEPS,
+                N_STRM,
+                CompressMode::Off,
+            )
+            .expect("paper-scale 2x2 tiling is feasible");
+            let (res, summary) = simulate_resident_tiles_grid_devices(
+                machine,
+                kind,
+                SZ_OOC,
+                SZ_OOC,
+                2,
+                2,
+                devices,
+                s_tb,
+                K_ON,
+                N_STEPS,
+                N_STRM,
+                &ResidencyConfig::auto(machine.c_dmem, N_STRM),
+                CompressMode::Off,
+            )
+            .expect("paper-scale 2x2 tiling is feasible");
+            out.push(ResidentTileComparison { kind, devices, staged, resident: res, summary });
+        }
+    }
+    out
+}
+
 /// Staged vs resident execution at paper scale (beyond the paper: the
 /// ROADMAP's device-resident multi-epoch pipelining). At one device the
 /// 11 GB grid cannot stay resident (the out-of-core premise), so the
 /// planner spills and host traffic matches the staged model; across four
 /// devices the grid fits, chunks pin, and per-run HtoD drops by the
-/// epoch count.
+/// epoch count. The second table composes residency with the 2-D tile
+/// decomposition (PR 5): per-tile cross-epoch arenas with the four-band
+/// halo refresh, same capacity model, same HtoD drop when the tiles fit.
 pub fn resident(machine: &MachineSpec) -> String {
     let mut out = String::from(
         "== Resident vs staged epochs: host traffic and makespan ==\n\
@@ -493,7 +588,67 @@ pub fn resident(machine: &MachineSpec) -> String {
         ]);
     }
     out.push_str(&t.render());
+    out.push_str(
+        "\n-- resident x tiles (2x2 tiling, per-tile cross-epoch arenas) --\n",
+    );
+    let mut t = Table::new(vec![
+        "benchmark", "devices", "staged HtoD", "resident HtoD", "saved", "staged (s)",
+        "resident (s)", "spills",
+    ]);
+    for c in staged_vs_resident_tiles_sweep(machine) {
+        let staged_htod = c.staged.bytes_of(OpKind::HtoD);
+        let res_htod = c.resident.bytes_of(OpKind::HtoD);
+        let saved = 1.0 - res_htod as f64 / staged_htod.max(1) as f64;
+        t.row(vec![
+            c.kind.name(),
+            c.devices.to_string(),
+            crate::util::fmt_bytes(staged_htod),
+            crate::util::fmt_bytes(res_htod),
+            format!("{:.0}%", 100.0 * saved),
+            format!("{:.3}", c.staged.makespan),
+            format!("{:.3}", c.resident.makespan),
+            c.summary.planned_spills.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
     out
+}
+
+/// Machine-readable perf snapshot for this PR's composition point: the
+/// five paper benchmarks under staged vs resident execution of the 2-D
+/// tile decomposition (2x2 tiling) at 1 and 4 simulated devices.
+/// Written to `BENCH_pr5.json` (and returned for the figures report).
+pub fn bench_pr5(machine: &MachineSpec) -> String {
+    let mut entries: Vec<String> = Vec::new();
+    for c in staged_vs_resident_tiles_sweep(machine) {
+        for (mode, rep, spills) in
+            [("staged", &c.staged, 0usize), ("resident", &c.resident, c.summary.planned_spills)]
+        {
+            entries.push(format!(
+                "    {{\"benchmark\": \"{}\", \"mode\": \"{}\", \"devices\": {}, \
+                 \"makespan_s\": {:.6}, \"htod_bytes\": {}, \"dtoh_bytes\": {}, \
+                 \"p2p_bytes\": {}, \"peak_dmem_bytes\": {}, \"spills\": {}}}",
+                c.kind.name(),
+                mode,
+                c.devices,
+                rep.makespan,
+                rep.bytes_of(OpKind::HtoD),
+                rep.bytes_of(OpKind::DtoH),
+                rep.bytes_of(OpKind::P2p),
+                rep.peak_dmem,
+                spills,
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"pr\": 5,\n  \"what\": \"staged vs resident 2x2 tile epochs, simulated\",\n  \
+         \"config\": {{\"sz\": {SZ_OOC}, \"n\": {N_STEPS}, \"k_on\": {K_ON}, \
+         \"n_strm\": {N_STRM}, \"scheme\": \"so2dr\", \"decomp\": \"tiles\", \
+         \"chunks\": \"2x2\"}},\n  \"results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    let _ = std::fs::write("BENCH_pr5.json", &json);
+    json
 }
 
 /// Machine-readable perf snapshot for the repo's trajectory: the five
@@ -732,6 +887,7 @@ pub fn registry() -> Vec<(&'static str, fn(&MachineSpec) -> String)> {
         ("compress", compress_fig),
         ("decomp", decomp_fig),
         ("bench_pr2", bench_pr2),
+        ("bench_pr5", bench_pr5),
     ]
 }
 
@@ -771,6 +927,47 @@ mod tests {
         // At 4 devices the grid fits, every chunk pins, and the 4-epoch
         // benchmarks save exactly 3 of 4 HtoD sweeps.
         assert!(txt.contains("75%"), "{txt}");
+        // The PR 5 composition point: the same sweep over 2x2 tiles.
+        assert!(txt.contains("resident x tiles"), "{txt}");
+    }
+
+    #[test]
+    fn resident_tiles_sweep_cuts_htod_by_the_epoch_count_at_four_devices() {
+        // The acceptance criterion, measured where the figure measures
+        // it: with one 2x2 tile per device the tiles pin and the DES
+        // HtoD byte total drops to staged/epochs; at one device the
+        // 11 GB grid cannot stay resident and host traffic matches the
+        // staged model.
+        let m = MachineSpec::rtx3080();
+        for c in staged_vs_resident_tiles_sweep(&m) {
+            let staged = c.staged.bytes_of(OpKind::HtoD);
+            let res = c.resident.bytes_of(OpKind::HtoD);
+            assert!(res <= staged, "{} x{}: {res} > {staged}", c.kind.name(), c.devices);
+            let (_, s_tb) = chosen_config(c.kind);
+            let epochs = (N_STEPS / s_tb) as u64;
+            if c.devices == 4 {
+                assert!(c.summary.fits, "{} x4 must fit", c.kind.name());
+                assert!(c.summary.kept.iter().all(|&k| k));
+                assert_eq!(staged, epochs * res, "{} x4", c.kind.name());
+                assert!(!c.resident.capacity_exceeded, "{} x4", c.kind.name());
+            } else {
+                assert!(!c.summary.fits, "{} x1 cannot fit 11 GB", c.kind.name());
+                assert_eq!(staged, res, "{} x1 spills every epoch", c.kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn bench_pr5_json_emitted_and_well_formed() {
+        let m = MachineSpec::rtx3080();
+        let json = bench_pr5(&m);
+        assert!(json.contains("\"pr\": 5"), "{json}");
+        assert!(json.contains("\"decomp\": \"tiles\""), "{json}");
+        assert!(json.contains("\"mode\": \"staged\"") && json.contains("\"mode\": \"resident\""));
+        assert!(json.contains("box2d1r") && json.contains("gradient2d"));
+        assert!(json.contains("htod_bytes") && json.contains("makespan_s"));
+        let written = std::fs::read_to_string("BENCH_pr5.json").unwrap();
+        assert_eq!(written, json);
     }
 
     #[test]

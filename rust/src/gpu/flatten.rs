@@ -38,7 +38,7 @@
 //! chain FIFO across epoch boundaries instead of through host `DtoH →
 //! HtoD` edges.
 
-use crate::chunking::plan::{phase_a_len, ChunkOp, EpochPlan, Scheme};
+use crate::chunking::plan::{resident_pass_sequences, ChunkOp, EpochPlan, Scheme};
 use crate::core::Rect;
 use crate::stencil::StencilKind;
 use crate::transfer::CodecKind;
@@ -119,10 +119,13 @@ fn link_resource(src_dev: usize, dst_dev: usize) -> usize {
 /// allocates the whole grid once and is exempt from per-epoch transfers.
 ///
 /// Staged epochs are emitted chunk-major. Resident epochs are emitted in
-/// their two execution phases — every chunk's arrival + publishes, then
-/// every chunk's fetches/kernels/retirement — so a `Fetch` always finds
-/// its provider already registered even when the publisher is a *later*
-/// chunk (inter-epoch halo data flows both up and down the chunk order).
+/// their execution passes ([`resident_pass_sequences`]) — every chunk's
+/// arrival + publishes, then every chunk's fetches/kernels/retirement
+/// (1-D plans), with resident tile plans adding a middle pass of column
+/// fetches + row publishes — so a `Fetch` always finds its provider
+/// already registered even when the publisher is a *later* chunk
+/// (inter-epoch halo data flows both up and down the chunk order, and
+/// along both axes for tiles).
 pub fn flatten_run_sized(
     plans: &[EpochPlan],
     kind: StencilKind,
@@ -137,15 +140,16 @@ pub fn flatten_run_sized(
 
     for (e, plan) in plans.iter().enumerate() {
         let mut this_dtoh: Vec<(Rect, usize)> = Vec::new();
-        // Emission order: (chunk index in plan, op range).
+        // Emission order: (chunk index in plan, op range). Resident
+        // epochs emit pass-major (every chunk's pass p before any
+        // chunk's pass p + 1): two passes for 1-D plans (phase A /
+        // phase B, as before), three for resident tile plans (column
+        // publishes, column fetches + row publishes, row fetches +
+        // kernels + retirement), so every fetch finds its provider
+        // already registered even when the publisher is a later chunk.
         let mut sequences: Vec<(usize, std::ops::Range<usize>)> = Vec::new();
         if plan.resident {
-            for (ci, cp) in plan.chunks.iter().enumerate() {
-                sequences.push((ci, 0..phase_a_len(&cp.ops)));
-            }
-            for (ci, cp) in plan.chunks.iter().enumerate() {
-                sequences.push((ci, phase_a_len(&cp.ops)..cp.ops.len()));
-            }
+            sequences.extend(resident_pass_sequences(plan).into_iter().flatten());
         } else {
             for (ci, cp) in plan.chunks.iter().enumerate() {
                 sequences.push((ci, 0..cp.ops.len()));
@@ -743,5 +747,110 @@ mod tile_tests {
         let epoch0: u64 =
             p2p.iter().filter(|o| o.epoch == 0).map(|o| o.raw_bytes).sum();
         assert_eq!(epoch0, dc.halo_bytes_per_epoch(6));
+    }
+}
+
+#[cfg(test)]
+mod resident_tile_tests {
+    use super::*;
+    use crate::chunking::plan::{plan_run_resident_tiles, ResidencyConfig};
+    use crate::chunking::{Decomposition2d, DeviceAssignment};
+
+    fn setup(
+        n_dev: usize,
+        cfg: &ResidencyConfig,
+    ) -> (Vec<crate::chunking::EpochPlan>, Vec<SimOp>) {
+        let dc = Decomposition2d::try_new(120, 96, 2, 2, 1).unwrap();
+        let devs = DeviceAssignment::contiguous(4, n_dev);
+        let (plans, _) =
+            plan_run_resident_tiles(Scheme::So2dr, &dc, &devs, 18, 6, 2, cfg).unwrap();
+        let s_max = plans.iter().map(|p| p.steps).max().unwrap();
+        let ops =
+            flatten_run_sized(&plans, StencilKind::Box { radius: 1 }, 3, dc.arena_bytes(s_max));
+        (plans, ops)
+    }
+
+    #[test]
+    fn resident_tiles_first_touch_htod_and_final_dtoh_only() {
+        for n_dev in [1usize, 2, 4] {
+            let (plans, ops) = setup(n_dev, &ResidencyConfig::force(3));
+            assert_eq!(plans.len(), 3);
+            let htod: Vec<&SimOp> = ops.iter().filter(|o| o.kind == OpKind::HtoD).collect();
+            let dtoh: Vec<&SimOp> = ops.iter().filter(|o| o.kind == OpKind::DtoH).collect();
+            assert_eq!(htod.len(), 4, "{n_dev} devices: one first touch per tile");
+            assert!(htod.iter().all(|o| o.epoch == 0));
+            assert_eq!(dtoh.len(), 4, "{n_dev} devices: one final writeback per tile");
+            assert!(dtoh.iter().all(|o| o.epoch == 2));
+            // HtoD byte total is the grid exactly once.
+            let htod_bytes: u64 = htod.iter().map(|o| o.bytes).sum();
+            assert_eq!(htod_bytes, (120 * 96 * 4) as u64, "{n_dev} devices");
+        }
+    }
+
+    #[test]
+    fn resident_tiles_alloc_balances_free() {
+        for cfg in [ResidencyConfig::force(3), ResidencyConfig::auto(1, 3)] {
+            for n_dev in [1usize, 2, 4] {
+                let (_, ops) = setup(n_dev, &cfg);
+                let alloc: i64 = ops.iter().map(|o| o.alloc_delta).sum();
+                let free: i64 = ops.iter().map(|o| o.free_delta).sum();
+                assert_eq!(alloc + free, 0, "{:?} on {n_dev} devices", cfg.mode);
+            }
+        }
+    }
+
+    #[test]
+    fn resident_tile_fetches_have_providers_and_deps_are_acyclic() {
+        for n_dev in [1usize, 2, 4] {
+            let (_, ops) = setup(n_dev, &ResidencyConfig::force(3));
+            for op in &ops {
+                for &d in &op.deps {
+                    assert!(d < op.id, "dep {d} not before {}", op.id);
+                }
+            }
+            // In middle epochs every sharing read (D2D op with deps)
+            // chains to a same-epoch provider write or link transfer —
+            // the corner cascade rides these edges.
+            let reads: Vec<&SimOp> = ops
+                .iter()
+                .filter(|o| o.kind == OpKind::D2D && o.epoch == 1 && !o.deps.is_empty())
+                .collect();
+            assert!(!reads.is_empty(), "{n_dev} devices");
+            for r in reads {
+                assert!(
+                    r.deps.iter().any(|&d| {
+                        ops[d].epoch == 1
+                            && (ops[d].kind == OpKind::D2D || ops[d].kind == OpKind::P2p)
+                    }),
+                    "{n_dev} devices: read {} has no provider",
+                    r.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resident_tiles_tight_cap_spills_and_refetches_every_epoch() {
+        let (plans, ops) = setup(2, &ResidencyConfig::auto(1, 3));
+        let n_epochs = plans.len();
+        for e in 0..n_epochs {
+            let dtoh = ops.iter().filter(|o| o.kind == OpKind::DtoH && o.epoch == e).count();
+            assert_eq!(dtoh, 4, "epoch {e}: every tile spills or writes back");
+            if e > 0 {
+                let htod =
+                    ops.iter().filter(|o| o.kind == OpKind::HtoD && o.epoch == e).count();
+                assert_eq!(htod, 4, "epoch {e}: every tile re-fetches");
+            }
+        }
+        // Re-fetches wait for the spill that freshened the host copy.
+        for h in ops.iter().filter(|o| o.kind == OpKind::HtoD && o.epoch > 0) {
+            assert!(
+                h.deps
+                    .iter()
+                    .any(|&d| ops[d].kind == OpKind::DtoH && ops[d].epoch + 1 == h.epoch),
+                "re-fetch {} without spill dep",
+                h.id
+            );
+        }
     }
 }

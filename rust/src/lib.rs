@@ -113,8 +113,46 @@
 //!        transpose, and bit-exactness vs `reference_run` holds across
 //!        tilings x device counts x lossless codecs (randomized
 //!        differential suite); unsupported compositions (ResReu or
-//!        in-core tiling, `--resident` with tiles) are rejected at plan
-//!        time with typed errors rather than silently mis-planned.
+//!        in-core tiling) are rejected at plan time with typed errors
+//!        rather than silently mis-planned.
+//!   - **Resident tile arenas** (`--resident` × `--decomp tiles`): the
+//!     residency model composes with the 2-D decomposition through a
+//!     rect-based settled/fetch algebra
+//!     ([`chunking::plan::plan_run_resident_tiles`]). Invariants the
+//!     suites enforce:
+//!     1. *settled-rect shrink rule*: during an epoch a tile's settled
+//!        region shrinks by `radius` per step from all four sides (the
+//!        2-D trapezoid); the final step computes exactly the owned
+//!        rect, so settled rects partition the grid at every epoch
+//!        boundary — spill (`Evict`) / re-fetch round trips move
+//!        exactly a tile's settled rect and the final writeback
+//!        reconstructs the host grid;
+//!     2. *four-band refresh with corner cascade*: the next epoch
+//!        refreshes the `h`-deep ring around each settled rect in two
+//!        publish/fetch rounds — west/east column bands first (settled
+//!        data of the row neighbors), then north/south row bands at
+//!        full skirted width, whose `h x h` corner blocks arrived
+//!        through the column fetches (two band hops, exactly as the
+//!        staged tile scheme's corners cascade through its row bands;
+//!        no dedicated corner ops). Both interpreters execute the
+//!        rounds as epoch-wide passes
+//!        ([`chunking::plan::resident_pass_bounds`]: arrival + column
+//!        publishes / column fetches + row publishes / row fetches +
+//!        kernels + retirement), because bands flow both up and down
+//!        the row-major tile order along both axes;
+//!     3. *spill/re-fetch semantics and capacity honesty*: the
+//!        per-device capacity model charges every tile arena at the
+//!        uniform `s_max` shape plus a sharing-band slack
+//!        ([`chunking::DeviceAssignment::resident_tile_memory_demand`],
+//!        all-or-nothing per device), and when the planner accepts
+//!        (`fits`) the DES never trips `capacity_exceeded`;
+//!     4. *host traffic only shrinks*: resident-tiles HtoD bytes ≤ the
+//!        staged tile plan's on every configuration, equal to one grid
+//!        sweep when every tile pins (HtoD drops by the epoch count),
+//!        and bit-exactness vs `reference_run` holds across tilings ×
+//!        device counts × tight/ample caps × lossless codecs; a
+//!        one-tile-column tiling reproduces the 1-D resident plan
+//!        op-for-op.
 //! - **L2 (`python/compile/model.py`):** the fixed-shape chunk program,
 //!   AOT-lowered to HLO text.
 //! - **L1 (`python/compile/kernels/`):** the Pallas multi-step stencil

@@ -292,20 +292,24 @@ fn cmd_run(args: &Args) -> Result<()> {
                 )
                 .0
             }
-            DecompMode::Tiles => so2dr::figures::simulate_tiles_grid_devices(
-                &machine,
-                cfg.kind,
-                cfg.rows,
-                cfg.cols,
-                cfg.chunks_y,
-                cfg.chunks_x,
-                cfg.devices,
-                cfg.s_tb,
-                cfg.k_on,
-                cfg.n,
-                cfg.n_strm,
-                cfg.compress,
-            )?,
+            DecompMode::Tiles => {
+                so2dr::figures::simulate_resident_tiles_grid_devices(
+                    &machine,
+                    cfg.kind,
+                    cfg.rows,
+                    cfg.cols,
+                    cfg.chunks_y,
+                    cfg.chunks_x,
+                    cfg.devices,
+                    cfg.s_tb,
+                    cfg.k_on,
+                    cfg.n,
+                    cfg.n_strm,
+                    &resident_cfg,
+                    cfg.compress,
+                )?
+                .0
+            }
         };
         println!(
             "modeled makespan on {} simulated GPUs (link {link_gbps:.1} GB/s): {}  (P2P busy {})",
@@ -391,8 +395,25 @@ fn cmd_validate() -> Result<()> {
 
 fn cmd_autotune(args: &Args) -> Result<()> {
     if args.help() {
-        println!("so2dr autotune [--kind K] [--sz N] [--n N] [--machine M]");
+        println!("so2dr autotune [--kind K] [--sz N] [--n N] [--machine M] [--decomp rows]");
         return Ok(());
+    }
+    // The §IV-C heuristic and its DES ranking model 1-D row bands
+    // (W_halo = 2r * row bytes, chunk height sz/d); silently accepting
+    // --decomp tiles here would rank configurations with the wrong halo
+    // model, so the composition is rejected with a typed error instead.
+    if let Some(v) = args.get("decomp") {
+        let mode =
+            DecompMode::parse(v).with_context(|| format!("bad --decomp {v:?} (rows|tiles)"))?;
+        if mode == DecompMode::Tiles {
+            bail!(
+                "autotune ranks 1-D row-band configurations only: the §IV-C heuristic \
+                 models row bands (W_halo = 2r per grid row), not tile perimeters. \
+                 Drop --decomp tiles here and size tilings with \
+                 `so2dr simulate --decomp tiles --chunks-x N --chunks-y M`; tile-aware \
+                 autotuning is a ROADMAP follow-on"
+            );
+        }
     }
     let machine = machine_of(args)?;
     let kind = StencilKind::parse(args.get("kind").unwrap_or("box2d1r")).context("bad kind")?;
@@ -458,16 +479,18 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         .context("bad --decomp (rows|tiles)")?;
     if decomp == DecompMode::Tiles {
         // Tile pricing path: plan-time validation (feasibility, devices)
-        // lives in the planner; compositions are rejected here.
+        // lives in the planner; unsupported schemes are rejected here.
         if scheme != Scheme::So2dr {
             bail!("--decomp tiles supports --scheme so2dr only (use --decomp rows)");
         }
-        if resident != ResidentMode::Off {
-            bail!("--decomp tiles does not compose with --resident yet (use --resident off)");
-        }
+        let resident_cfg = match resident {
+            ResidentMode::Off => ResidencyConfig::off(),
+            ResidentMode::Force => ResidencyConfig::force(so2dr::figures::N_STRM),
+            ResidentMode::Auto => ResidencyConfig::auto(machine.c_dmem, so2dr::figures::N_STRM),
+        };
         let chunks_x = args.usize_or("chunks-x", 2)?;
         let chunks_y = args.usize_or("chunks-y", 2)?;
-        let rep = so2dr::figures::simulate_tiles_grid_devices(
+        let (rep, summary) = so2dr::figures::simulate_resident_tiles_grid_devices(
             &machine,
             kind,
             sz,
@@ -479,15 +502,31 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             k_on,
             n,
             so2dr::figures::N_STRM,
+            &resident_cfg,
             compress,
         )?;
+        if resident != ResidentMode::Off {
+            // The planner already computed the staged HtoD volume
+            // (identity-codec raw bytes) — no second staged simulation.
+            let kept = summary.kept.iter().filter(|&&k| k).count();
+            println!(
+                "residency: kept {kept}/{} tiles  HtoD {} (staged {})  spills {}  fits: {}",
+                summary.kept.len(),
+                fmt_bytes(rep.raw_bytes_of(so2dr::gpu::OpKind::HtoD)),
+                fmt_bytes(summary.staged_htod_bytes),
+                summary.planned_spills,
+                summary.fits,
+            );
+        }
         print!(
             "{}",
             so2dr::metrics::breakdown_table(&[(
                 format!(
-                    "{} {} tiles={chunks_y}x{chunks_x} devs={devices} S_TB={s_tb} compress={}",
+                    "{} {} tiles={chunks_y}x{chunks_x} devs={devices} S_TB={s_tb} \
+                     resident={} compress={}",
                     scheme.name(),
                     kind.name(),
+                    resident.name(),
                     compress.name()
                 ),
                 &rep
@@ -540,17 +579,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         compress,
     );
     if resident != ResidentMode::Off {
-        let staged = so2dr::figures::simulate_config_devices(
-            &machine, scheme, kind, sz, d, devices, s_tb, k_on, n,
-        );
         let kept = summary.kept.iter().filter(|&&k| k).count();
         // Raw (pre-codec) bytes on both sides: the residency line reports
         // what *residency* saved; codec savings get their own line below.
+        // The staged side is the planner's own accounting — identical to
+        // re-simulating the staged plan, without paying for it.
         println!(
             "residency: kept {kept}/{} chunks  HtoD {} (staged {})  spills {}  fits: {}",
             summary.kept.len(),
             fmt_bytes(rep.raw_bytes_of(so2dr::gpu::OpKind::HtoD)),
-            fmt_bytes(staged.raw_bytes_of(so2dr::gpu::OpKind::HtoD)),
+            fmt_bytes(summary.staged_htod_bytes),
             summary.planned_spills,
             summary.fits,
         );
@@ -659,5 +697,7 @@ byte-plane, bit-exact; auto: lossless on payloads big enough to pay),\n\
 shrinking wire bytes at the cost of codec compute.\n\
 Decomposition: `--decomp tiles --chunks-x N --chunks-y M` splits the\n\
 grid into an MxN tile grid with 4-neighbor region sharing (halo volume\n\
-scales with tile perimeter instead of grid width); so2dr only, and\n\
-`figures --fig decomp` tables the 1-D vs 2-D halo/makespan trade.\n";
+scales with tile perimeter instead of grid width); so2dr only, composes\n\
+with `--resident` (per-tile cross-epoch arenas, four-band halo refresh)\n\
+and `--compress`; `figures --fig decomp` tables the 1-D vs 2-D\n\
+halo/makespan trade and `--fig resident` the resident x tiles stack.\n";

@@ -176,6 +176,19 @@ pub fn predict(
     simulate(&ops, &cost, n_strm).makespan
 }
 
+/// Sort candidates best-first by predicted makespan. Candidates without
+/// a prediction (infeasible) rank as `+inf`; `f64::total_cmp` gives
+/// non-finite makespans a defined order (NaN after `+inf`) instead of
+/// the `partial_cmp().unwrap()` panic a degenerate machine spec (e.g. a
+/// zero bandwidth turning `predict` non-finite) used to cause.
+fn rank_candidates(cands: &mut [Candidate]) {
+    cands.sort_by(|a, b| {
+        let ka = a.makespan.unwrap_or(f64::INFINITY);
+        let kb = b.makespan.unwrap_or(f64::INFINITY);
+        ka.total_cmp(&kb)
+    });
+}
+
 /// Rank feasible candidates by simulated makespan (best first); returns
 /// all candidates with `makespan` filled for the feasible ones.
 pub fn autotune(
@@ -195,11 +208,7 @@ pub fn autotune(
                 Some(predict(machine, kind, Scheme::So2dr, sz, c.d, c.s_tb, k_on, n, n_strm));
         }
     }
-    cands.sort_by(|a, b| {
-        let ka = a.makespan.unwrap_or(f64::INFINITY);
-        let kb = b.makespan.unwrap_or(f64::INFINITY);
-        ka.partial_cmp(&kb).unwrap()
-    });
+    rank_candidates(&mut cands);
     cands
 }
 
@@ -276,6 +285,53 @@ mod tests {
         let r40 = kernel_transfer_ratio(&m, k, SZ, 4, 40);
         let r160 = kernel_transfer_ratio(&m, k, SZ, 4, 160);
         assert!(r160 > 2.0 * r40);
+    }
+
+    #[test]
+    fn ranking_survives_nan_and_infinite_makespans() {
+        // The regression that motivated f64::total_cmp: a NaN makespan
+        // used to panic the `partial_cmp().unwrap()` comparator. Finite
+        // ranks first, then +inf (ties with "no prediction"), NaN last.
+        let cand = |makespan: Option<f64>| Candidate {
+            d: 4,
+            s_tb: 40,
+            feasibility: Feasibility::Ok,
+            ratio: 1.0,
+            makespan,
+        };
+        let mut cands = vec![
+            cand(Some(f64::NAN)),
+            cand(Some(f64::INFINITY)),
+            cand(Some(1.0)),
+            cand(None),
+            cand(Some(0.5)),
+        ];
+        rank_candidates(&mut cands);
+        assert_eq!(cands[0].makespan, Some(0.5));
+        assert_eq!(cands[1].makespan, Some(1.0));
+        assert!(cands[4].makespan.unwrap().is_nan(), "NaN must sort last, not panic");
+    }
+
+    #[test]
+    fn autotune_survives_a_degenerate_machine_spec() {
+        // A machine with zero bandwidths and FLOPS prices every feasible
+        // candidate at a non-finite makespan; the autotuner must rank
+        // them without panicking and lose no candidates.
+        let mut m = MachineSpec::rtx3080();
+        m.bw_htod = 0.0;
+        m.bw_dtoh = 0.0;
+        m.bw_dmem = 0.0;
+        m.flops = 0.0;
+        m.bw_link = 0.0;
+        let ds = [2usize, 4];
+        let s_tbs = [1usize, 2];
+        let cands = autotune(&m, StencilKind::Box { radius: 1 }, 512, 4, 2, 1, &ds, &s_tbs);
+        assert_eq!(cands.len(), ds.len() * s_tbs.len());
+        for c in &cands {
+            if let Some(mk) = c.makespan {
+                assert!(!mk.is_finite(), "zero-bandwidth pricing cannot be finite: {mk}");
+            }
+        }
     }
 
     #[test]

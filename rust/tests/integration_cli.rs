@@ -185,20 +185,62 @@ fn run_tiles_compose_with_lossless_and_devices() {
 }
 
 #[test]
-fn run_tiles_reject_resreu_and_resident() {
+fn run_tiles_reject_resreu_but_accept_resident() {
     let (ok, text) = run(&[
         "run", "--decomp", "tiles", "--scheme", "resreu", "--sz", "128", "--n", "8",
     ]);
     assert!(!ok);
     assert!(text.contains("so2dr"), "{text}");
-    let (ok, text) = run(&[
-        "run", "--decomp", "tiles", "--resident", "force", "--sz", "128", "--n", "8",
-    ]);
-    assert!(!ok);
-    assert!(text.contains("resident"), "{text}");
     let (ok, text) = run(&["run", "--decomp", "diagonal"]);
     assert!(!ok);
     assert!(text.contains("decomp"), "{text}");
+    // resident x tiles is accepted since the 2-D settled/fetch algebra
+    // landed: the run verifies bit-exactly and reports its residency.
+    let (ok, text) = run(&[
+        "run", "--decomp", "tiles", "--chunks-x", "2", "--chunks-y", "2", "--kind", "box2d1r",
+        "--sz", "128", "--s-tb", "4", "--k-on", "2", "--n", "12", "--resident", "force",
+        "--backend", "host-naive",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("residency: kept 4/4"), "{text}");
+    assert!(text.contains("saved"), "{text}");
+    assert!(text.contains("OK"), "{text}");
+}
+
+#[test]
+fn run_tiles_resident_stacks_with_lossless_and_devices() {
+    let (ok, text) = run(&[
+        "run", "--decomp", "tiles", "--chunks-x", "2", "--chunks-y", "2", "--devices", "2",
+        "--kind", "box2d1r", "--sz", "128", "--s-tb", "4", "--k-on", "2", "--n", "12",
+        "--resident", "force", "--compress", "lossless", "--backend", "host-naive",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("residency: kept 4/4"), "{text}");
+    assert!(text.contains("compression:"), "{text}");
+    assert!(text.contains("OK"), "{text}");
+}
+
+#[test]
+fn simulate_tiles_resident_reports_pinning() {
+    let (ok, text) = run(&[
+        "simulate", "--decomp", "tiles", "--chunks-x", "2", "--chunks-y", "2", "--devices",
+        "4", "--s-tb", "160", "--n", "640", "--resident", "auto",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("residency: kept 4/4 tiles"), "{text}");
+    assert!(text.contains("resident=auto"), "{text}");
+    assert!(text.contains("tiles=2x2"), "{text}");
+}
+
+#[test]
+fn autotune_rejects_tiles_decomp_with_typed_error() {
+    let (ok, text) = run(&["autotune", "--decomp", "tiles", "--sz", "512", "--n", "8"]);
+    assert!(!ok);
+    assert!(text.contains("row-band"), "{text}");
+    assert!(text.contains("simulate --decomp tiles"), "{text}");
+    // --decomp rows is the modeled decomposition and stays accepted.
+    let (ok, text) = run(&["autotune", "--decomp", "rows", "--sz", "512", "--n", "8"]);
+    assert!(ok, "{text}");
 }
 
 #[test]

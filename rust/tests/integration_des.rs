@@ -5,12 +5,16 @@
 //! more simulated GPUs never slows it down, and hits the strong-scaling
 //! target at paper scale).
 
-use so2dr::chunking::plan::{apply_codec_policy, plan_run_devices, plan_run_resident, Scheme};
-use so2dr::chunking::{Decomposition, DeviceAssignment, ResidencyConfig, ResidencySummary};
+use so2dr::chunking::plan::{
+    apply_codec_policy, plan_run_devices, plan_run_resident, plan_run_resident_tiles, Scheme,
+};
+use so2dr::chunking::{
+    Decomposition, Decomposition2d, DeviceAssignment, ResidencyConfig, ResidencySummary,
+};
 use so2dr::coordinator::{HostBackend, PlanExecutor};
 use so2dr::gpu::cost::{CostModel, MachineSpec};
 use so2dr::gpu::des::{simulate, SimReport};
-use so2dr::gpu::flatten::{flatten_run, OpKind, SimOp};
+use so2dr::gpu::flatten::{flatten_run, flatten_run_sized, OpKind, SimOp};
 use so2dr::stencil::{NaiveEngine, StencilKind};
 use so2dr::transfer::CompressMode;
 use so2dr::util::XorShift64;
@@ -328,6 +332,118 @@ fn four_device_resident_cuts_htod_by_the_epoch_count() {
     assert!(!rep.capacity_exceeded);
     // And it pays off end to end (tolerance for scheduling noise).
     assert!(rep.makespan <= staged.makespan * 1.005);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn flatten_resident_tiles_paper(
+    chunks_y: usize,
+    chunks_x: usize,
+    devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    n: usize,
+    cfg: &ResidencyConfig,
+) -> (Vec<SimOp>, ResidencySummary) {
+    let dc = Decomposition2d::try_new(38400, 38400, chunks_y, chunks_x, 1).unwrap();
+    let devs = DeviceAssignment::contiguous(chunks_y * chunks_x, devices);
+    let (plans, summary) =
+        plan_run_resident_tiles(Scheme::So2dr, &dc, &devs, n, s_tb, k_on, cfg).unwrap();
+    let s_max = plans.iter().map(|p| p.steps).max().unwrap();
+    (
+        flatten_run_sized(&plans, StencilKind::Box { radius: 1 }, N_STRM, dc.arena_bytes(s_max)),
+        summary,
+    )
+}
+
+/// Resident-tiles DES invariant: simulated HtoD bytes never exceed the
+/// staged tile plan's, under ample and tight capacities alike — a
+/// pinned tile transfers once, a spilled one transfers exactly what
+/// staging would (its settled rect).
+#[test]
+fn resident_tiles_htod_bytes_never_exceed_staged() {
+    let machine = MachineSpec::rtx3080();
+    for (cy, cx) in [(2usize, 2usize), (2, 3)] {
+        for devices in [1usize, 2, 4] {
+            if devices > cy * cx {
+                continue;
+            }
+            let staged = sim(
+                &flatten_resident_tiles_paper(cy, cx, devices, 40, 4, 160, &ResidencyConfig::off())
+                    .0,
+                machine.clone(),
+            );
+            for cfg in [
+                ResidencyConfig::force(N_STRM),
+                ResidencyConfig::auto(machine.c_dmem, N_STRM),
+                ResidencyConfig::auto(1, N_STRM),
+            ] {
+                let (ops, _) = flatten_resident_tiles_paper(cy, cx, devices, 40, 4, 160, &cfg);
+                let rep = sim(&ops, machine.clone());
+                assert!(
+                    rep.bytes_of(OpKind::HtoD) <= staged.bytes_of(OpKind::HtoD),
+                    "{cy}x{cx} tiles devs={devices} {:?}: resident {} > staged {}",
+                    cfg.mode,
+                    rep.bytes_of(OpKind::HtoD),
+                    staged.bytes_of(OpKind::HtoD)
+                );
+            }
+        }
+    }
+}
+
+/// Acceptance criterion: at paper scale with one 2x2 tile per device,
+/// the tile residency planner pins every tile and the simulated HtoD
+/// byte total drops to staged/epochs, with the capacity promise intact.
+#[test]
+fn four_device_resident_tiles_cut_htod_by_the_epoch_count() {
+    let machine = MachineSpec::rtx3080();
+    let (staged_ops, _) =
+        flatten_resident_tiles_paper(2, 2, 4, 160, 4, 640, &ResidencyConfig::off());
+    let staged = sim(&staged_ops, machine.clone());
+    let (ops, summary) = flatten_resident_tiles_paper(
+        2,
+        2,
+        4,
+        160,
+        4,
+        640,
+        &ResidencyConfig::auto(machine.c_dmem, N_STRM),
+    );
+    assert!(summary.fits, "one ~3 GB tile arena per 10 GiB device must fit");
+    assert!(summary.kept.iter().all(|&k| k), "all four tiles pinned");
+    let rep = sim(&ops, machine.clone());
+    // 640 steps at S_TB=160 -> 4 epochs: staged moves the grid 4x HtoD.
+    assert_eq!(staged.bytes_of(OpKind::HtoD), 4 * rep.bytes_of(OpKind::HtoD));
+    assert!(!rep.capacity_exceeded);
+    // And it pays off end to end (tolerance for scheduling noise).
+    assert!(rep.makespan <= staged.makespan * 1.01);
+}
+
+/// The tile planner's capacity promise: when `summary.fits`, the DES
+/// never observes a peak above the modeled demand
+/// (`capacity_exceeded` stays false on planner-accepted tile plans).
+#[test]
+fn capacity_never_exceeded_when_tile_planner_accepts() {
+    let machine = MachineSpec::rtx3080();
+    for (cy, cx, devices, s_tb, n) in
+        [(2usize, 2usize, 4usize, 160usize, 640usize), (2, 2, 2, 80, 320), (2, 3, 3, 40, 120)]
+    {
+        let cfg = ResidencyConfig::auto(machine.c_dmem, N_STRM);
+        let (ops, summary) = flatten_resident_tiles_paper(cy, cx, devices, s_tb, 4, n, &cfg);
+        let rep = sim(&ops, machine.clone());
+        if summary.fits {
+            assert!(
+                !rep.capacity_exceeded,
+                "planner accepted {cy}x{cx} devs={devices} S_TB={s_tb} but DES peak {} > {}",
+                rep.peak_dmem,
+                machine.c_dmem
+            );
+            assert!(rep.peak_dmem <= *summary.demand_per_device.iter().max().unwrap());
+        } else {
+            assert!(summary.kept.iter().all(|&k| !k), "{cy}x{cx} devs={devices}");
+            assert!(rep.makespan > 0.0);
+        }
+    }
 }
 
 #[allow(clippy::too_many_arguments)]

@@ -501,16 +501,19 @@ fn prop_tiles_bit_exact_across_devices_and_codecs() {
 
 /// Tiles reject what they cannot plan — at plan time, with typed errors,
 /// never by silently mis-planning (the composition half of the tiles
-/// acceptance criterion).
+/// acceptance criterion). The resident execution model is no longer in
+/// this list: `resident x tiles` is accepted since the 2-D settled/fetch
+/// algebra landed, and the resident-tiles properties above prove it
+/// bit-exact instead.
 #[test]
-fn tiles_reject_resreu_incore_and_resident_compositions() {
+fn tiles_reject_resreu_and_incore_compositions() {
     let kind = StencilKind::Box { radius: 1 };
     let initial = Array2::synthetic(64, 64, 5);
     for (scheme, resident, needle) in [
         (Scheme::ResReu, ResidencyConfig::off(), "resreu"),
         (Scheme::InCore, ResidencyConfig::off(), "incore"),
-        (Scheme::So2dr, ResidencyConfig::force(3), "resident"),
-        (Scheme::So2dr, ResidencyConfig::auto(1 << 30, 3), "resident"),
+        (Scheme::ResReu, ResidencyConfig::force(3), "resreu"),
+        (Scheme::InCore, ResidencyConfig::auto(1 << 30, 3), "incore"),
     ] {
         let mut backend = HostBackend::new(NaiveEngine);
         let err = run_scheme_tiles(
@@ -524,6 +527,162 @@ fn tiles_reject_resreu_incore_and_resident_compositions() {
             scheme.name()
         );
     }
+    // The formerly-rejected composition now plans and runs.
+    let mut backend = HostBackend::new(NaiveEngine);
+    let reference = reference_run(&initial, kind, 8, &NaiveEngine);
+    let out = run_scheme_tiles(
+        Scheme::So2dr,
+        &initial,
+        kind,
+        8,
+        2,
+        2,
+        1,
+        4,
+        2,
+        &mut backend,
+        &ResidencyConfig::force(3),
+        CompressMode::Off,
+    )
+    .expect("resident x tiles is accepted now");
+    assert!(out.grid.bit_eq(&reference));
+}
+
+/// Check one tile case under the resident execution model with the
+/// given capacity config; `tight` selects the assertions (spills
+/// observed vs everything pinned) — the tile analog of
+/// [`check_resident_case`].
+fn check_resident_tile_case(
+    c: &TileCase,
+    cfg: &ResidencyConfig,
+    tight: bool,
+) -> Result<(), String> {
+    if !c.feasible() || c.devices > c.chunks_y * c.chunks_x {
+        return Ok(());
+    }
+    let kind = c.kind();
+    let seed = (c.rows * 41 + c.cols * 13 + c.n) as u64;
+    let initial = Array2::synthetic(c.rows, c.cols, seed);
+    let reference = reference_run(&initial, kind, c.n, &NaiveEngine);
+    let grid_bytes = (c.rows * c.cols * 4) as u64;
+    let multi_epoch = c.n > c.s_tb;
+    let mut backend = HostBackend::new(NaiveEngine);
+    let out = run_scheme_tiles(
+        Scheme::So2dr,
+        &initial,
+        kind,
+        c.n,
+        c.chunks_y,
+        c.chunks_x,
+        c.devices,
+        c.s_tb,
+        c.k_on,
+        &mut backend,
+        cfg,
+        CompressMode::Off,
+    )
+    .map_err(|e| format!("resident tiles failed: {e:#}"))?;
+    if !out.grid.bit_eq(&reference) {
+        return Err(format!(
+            "{}x{} resident tiles ({}) on {} device(s) diverged: max |diff| = {}",
+            c.chunks_y,
+            c.chunks_x,
+            if tight { "tight cap" } else { "ample" },
+            c.devices,
+            out.grid.max_abs_diff(&reference)
+        ));
+    }
+    if tight {
+        if multi_epoch && out.stats.spills == 0 {
+            return Err(format!(
+                "{}x{} under a tight cap must evict (epochs {})",
+                c.chunks_y, c.chunks_x, out.stats.epochs
+            ));
+        }
+    } else {
+        if out.stats.spills != 0 {
+            return Err("tiles spilled under an ample cap".to_string());
+        }
+        // Everything pinned: the host sees each tile exactly once each
+        // way, regardless of the epoch count.
+        if out.stats.htod_bytes != grid_bytes || out.stats.dtoh_bytes != grid_bytes {
+            return Err(format!(
+                "pinned tile run moved HtoD {} / DtoH {} (grid is {})",
+                out.stats.htod_bytes, out.stats.dtoh_bytes, grid_bytes
+            ));
+        }
+        if multi_epoch && out.stats.resident_hits == 0 {
+            return Err("pinned tile run observed no resident arrivals".to_string());
+        }
+        if multi_epoch && c.chunks_y * c.chunks_x > 1 && out.stats.fetch_reads == 0 {
+            return Err("multi-tile resident run refreshed no halo bands".to_string());
+        }
+    }
+    Ok(())
+}
+
+/// Resident-tiles differential property (the PR 5 acceptance core):
+/// random tilings x 1..4 devices, ample capacity — everything pins,
+/// host traffic is one grid sweep each way, and the result is
+/// bit-exact vs the in-core reference.
+#[test]
+fn prop_resident_tiles_ample_cap_bit_exact_and_pins() {
+    forall(0x7E51D, 100, gen_tile_case, shrink_tile_case, |c| {
+        check_resident_tile_case(c, &ResidencyConfig::force(3), false)
+    });
+}
+
+/// Tight-capacity counterpart: every tile spills each epoch (evictions
+/// observed on multi-epoch runs) and bit-exactness still holds — the
+/// spill/re-fetch round trip over settled rects is exact.
+#[test]
+fn prop_resident_tiles_tight_cap_bit_exact_and_spills() {
+    forall(0x7E51D + 1, 100, gen_tile_case, shrink_tile_case, |c| {
+        check_resident_tile_case(c, &ResidencyConfig::auto(1, 3), true)
+    });
+}
+
+/// Resident tiles compose with the lossless codec: every transfer
+/// (first-touch HtoD, spills, re-fetches, link hops) round-trips
+/// through the byte-plane codec and stays bit-exact.
+#[test]
+fn prop_resident_tiles_lossless_bit_exact() {
+    forall(0x7E51D + 2, 60, gen_tile_case, shrink_tile_case, |c| {
+        if !c.feasible() || c.devices > c.chunks_y * c.chunks_x {
+            return Ok(());
+        }
+        let kind = c.kind();
+        let initial = Array2::synthetic(c.rows, c.cols, (c.rows * 3 + c.n) as u64);
+        let reference = reference_run(&initial, kind, c.n, &NaiveEngine);
+        let mut backend = HostBackend::new(NaiveEngine);
+        let out = run_scheme_tiles(
+            Scheme::So2dr,
+            &initial,
+            kind,
+            c.n,
+            c.chunks_y,
+            c.chunks_x,
+            c.devices,
+            c.s_tb,
+            c.k_on,
+            &mut backend,
+            &ResidencyConfig::force(3),
+            CompressMode::Lossless,
+        )
+        .map_err(|e| format!("resident tiles lossless failed: {e:#}"))?;
+        if !out.grid.bit_eq(&reference) {
+            return Err(format!(
+                "{}x{} resident tiles lossless diverged: max |diff| = {}",
+                c.chunks_y,
+                c.chunks_x,
+                out.grid.max_abs_diff(&reference)
+            ));
+        }
+        if out.stats.codec_ops == 0 {
+            return Err("lossless resident tiles ran no codec round trips".to_string());
+        }
+        Ok(())
+    });
 }
 
 /// The acceptance-criterion configuration, pinned: `--devices 4` at d=8
