@@ -45,6 +45,12 @@ pub struct RunConfig {
     /// byte-plane-compresses them bit-exactly, `auto` picks lossless for
     /// payloads large enough to amortize the codec pass.
     pub compress: CompressMode,
+    /// Pipeline-honest scheduling (`on`, the default): codec passes run
+    /// on each device's codec engine and hide under the wire, halo hops
+    /// and writebacks ride their own lanes behind dependency edges. `off`
+    /// restores the legacy additive model (codec time priced on the
+    /// channel, everything on the chunk's compute lane) for A/B pricing.
+    pub overlap: bool,
     /// Synthetic-field seed.
     pub seed: u64,
     /// Kernel backend: "host-naive", "host-opt" or "pjrt".
@@ -85,6 +91,7 @@ impl Default for RunConfig {
             d2d_gbps: None,
             resident: ResidentMode::Off,
             compress: CompressMode::Off,
+            overlap: true,
             seed: 42,
             backend: "host-opt".into(),
         }
@@ -144,6 +151,14 @@ impl RunConfig {
                         cfg.compress = CompressMode::parse(&v).with_context(|| {
                             format!("bad compress mode {v:?} (off|bf16|lossless|auto)")
                         })?;
+                    }
+                    "overlap" => {
+                        let v = s.str_req("overlap")?;
+                        cfg.overlap = match v.as_str() {
+                            "on" => true,
+                            "off" => false,
+                            other => bail!("bad overlap mode {other:?} (on|off)"),
+                        };
                     }
                     "seed" => cfg.seed = s.int_or("seed", 42) as u64,
                     "backend" => cfg.backend = s.str_or("backend", "host-opt"),
@@ -242,7 +257,7 @@ impl RunConfig {
         };
         format!(
             "{} {} {}x{} {} S_TB={} k_on={} n={} N_strm={} devices={} resident={} \
-             compress={} backend={}",
+             compress={} overlap={} backend={}",
             self.scheme.name(),
             self.kind.name(),
             self.rows,
@@ -255,6 +270,7 @@ impl RunConfig {
             self.devices,
             self.resident.name(),
             self.compress.name(),
+            if self.overlap { "on" } else { "off" },
             self.backend
         )
     }
@@ -356,6 +372,16 @@ mod tests {
         assert_eq!(RunConfig::default().compress, CompressMode::Off);
     }
 
+    #[test]
+    fn parses_overlap_mode() {
+        assert!(RunConfig::default().overlap, "pipeline-honest schedule is the default");
+        assert!(RunConfig::from_toml("overlap = \"on\"\n").unwrap().overlap);
+        assert!(!RunConfig::from_toml("overlap = \"off\"\n").unwrap().overlap);
+        assert!(RunConfig::from_toml("overlap = \"maybe\"\n").is_err());
+        assert!(RunConfig::from_toml("overlap = 1\n").is_err());
+        assert!(RunConfig::default().summary().contains("overlap=on"));
+    }
+
     /// Table-driven accept/reject coverage of the TOML surface: every
     /// key with a representative good value, plus the malformed spellings
     /// that must fail loudly (unknown keys, wrong types, bad enum
@@ -374,6 +400,10 @@ mod tests {
             ("seed = 7\n", true),
             ("n_strm = 2\n", true),
             ("compress = \"auto\"\nresident = \"force\"\n", true),
+            ("overlap = \"off\"\n", true),
+            ("overlap = \"on\"\n", true),
+            ("overlap = 1\n", false),
+            ("overlap = \"maybe\"\n", false),
             ("decomp = \"rows\"\n", true),
             ("decomp = \"tiles\"\nchunks_x = 2\nchunks_y = 2\n", true),
             ("decomp = \"tiles\"\nchunks_x = 4\nchunks_y = 1\ndevices = 2\n", true),

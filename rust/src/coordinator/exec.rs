@@ -23,6 +23,19 @@
 //! *proven* bit-exact by the differential suites and a lossy tag's error
 //! actually flows through the numerics (bounded by the bf16 round-trip
 //! bound per transfer).
+//!
+//! Overlap contract: the pipeline-honest DES
+//! ([`crate::gpu::flatten::flatten_run_opts`]) reorders *time*, not
+//! *data flow* — every dependency edge it emits points from a later op
+//! to an earlier one in the flattener's emission order, and this
+//! executor walks the plans in that same order (chunk-major staged
+//! epochs, pass-major resident epochs via
+//! [`resident_pass_sequences`]). The executed order is therefore a
+//! valid topological order of the dependency-edged graph under both
+//! `--overlap` modes, so enabling overlap changes modeled makespans
+//! only and can never perturb numerics — the randomized differential
+//! suite (`prop_schemes.rs`) pins this bit-exactly against
+//! `reference_run`.
 
 use crate::chunking::plan::{
     resident_pass_sequences, ChunkEpochPlan, ChunkOp, EpochPlan, Scheme,

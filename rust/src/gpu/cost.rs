@@ -24,6 +24,27 @@
 use crate::stencil::StencilKind;
 use crate::transfer::CodecKind;
 
+/// A machine spec that cannot be simulated: a zero/negative/non-finite
+/// rate or effectivity turns op durations into `inf`/NaN and poisons
+/// every downstream makespan comparison. [`MachineSpec::validate`]
+/// rejects such specs up front so the DES stays panic-free on arbitrary
+/// what-if inputs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegenerateMachineError {
+    /// Name of the offending spec field.
+    pub field: &'static str,
+    /// The value it held (`0.0` stands in for a zero slot count).
+    pub value: f64,
+}
+
+impl std::fmt::Display for DegenerateMachineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "degenerate machine spec: {} = {}", self.field, self.value)
+    }
+}
+
+impl std::error::Error for DegenerateMachineError {}
+
 /// Hardware parameters of the modeled machine.
 #[derive(Debug, Clone)]
 pub struct MachineSpec {
@@ -119,6 +140,48 @@ impl MachineSpec {
         self.bw_htod = gbps * 1e9;
         self.bw_dtoh = gbps * 1e9;
         self
+    }
+
+    /// Reject spec values that would produce non-finite op durations:
+    /// every rate and effectivity must be positive and finite, every
+    /// latency finite and non-negative, and the kernel engine must have
+    /// at least one slot. The DES calls this before simulating so a
+    /// degenerate what-if spec yields a typed error instead of a NaN
+    /// panic deep inside the event loop (the simulator-side twin of the
+    /// autotuner's `rank_candidates` NaN ordering fix).
+    pub fn validate(&self) -> Result<(), DegenerateMachineError> {
+        let positive: [(&'static str, f64); 11] = [
+            ("bw_htod", self.bw_htod),
+            ("bw_dtoh", self.bw_dtoh),
+            ("bw_dmem", self.bw_dmem),
+            ("flops", self.flops),
+            ("eff_singlestep", self.eff_singlestep),
+            ("eff_multistep", self.eff_multistep),
+            ("eff_compute", self.eff_compute),
+            ("overlap_speedup", self.overlap_speedup),
+            ("bw_link", self.bw_link),
+            ("bw_codec_bf16", self.bw_codec_bf16),
+            ("bw_codec_lossless", self.bw_codec_lossless),
+        ];
+        for (field, value) in positive {
+            if !(value.is_finite() && value > 0.0) {
+                return Err(DegenerateMachineError { field, value });
+            }
+        }
+        let nonnegative = [
+            ("kernel_launch_s", self.kernel_launch_s),
+            ("copy_launch_s", self.copy_launch_s),
+            ("link_latency_s", self.link_latency_s),
+        ];
+        for (field, value) in nonnegative {
+            if !(value.is_finite() && value >= 0.0) {
+                return Err(DegenerateMachineError { field, value });
+            }
+        }
+        if self.kernel_concurrency == 0 {
+            return Err(DegenerateMachineError { field: "kernel_concurrency", value: 0.0 });
+        }
+        Ok(())
     }
 }
 
@@ -301,6 +364,38 @@ mod tests {
         assert!(r1 > r2 && r2 > r3 && r3 > r4, "{r1} {r2} {r3} {r4}");
         assert!(r4 > 1.0 && r4 < 2.0, "box4r gain should be small, got {r4}");
         assert!(r1 > 3.0, "box1r gain should be large, got {r1}");
+    }
+
+    #[test]
+    fn validate_accepts_the_paper_machines() {
+        MachineSpec::rtx3080().validate().unwrap();
+        MachineSpec::rtx3080_pcie4().validate().unwrap();
+        MachineSpec::rtx3080().with_d2d_gbps(50.0).validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_specs_with_the_field_name() {
+        let mut m = MachineSpec::rtx3080();
+        m.bw_htod = 0.0;
+        let err = m.validate().unwrap_err();
+        assert_eq!(err.field, "bw_htod");
+        assert!(err.to_string().contains("bw_htod"), "{err}");
+
+        let mut m = MachineSpec::rtx3080();
+        m.bw_codec_lossless = f64::NAN;
+        assert_eq!(m.validate().unwrap_err().field, "bw_codec_lossless");
+
+        let mut m = MachineSpec::rtx3080();
+        m.overlap_speedup = -1.0;
+        assert_eq!(m.validate().unwrap_err().field, "overlap_speedup");
+
+        let mut m = MachineSpec::rtx3080();
+        m.kernel_launch_s = f64::INFINITY;
+        assert_eq!(m.validate().unwrap_err().field, "kernel_launch_s");
+
+        let mut m = MachineSpec::rtx3080();
+        m.kernel_concurrency = 0;
+        assert_eq!(m.validate().unwrap_err().field, "kernel_concurrency");
     }
 
     #[test]

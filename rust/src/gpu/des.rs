@@ -4,11 +4,21 @@
 //! Resources (as on the modeled GPUs — homogeneous, one set per device):
 //! - one HtoD PCIe channel and one DtoH channel per device (full duplex);
 //! - one on-device copy engine per device (region-sharing copies);
-//! - per device, a kernel engine with `kernel_concurrency` slots; when
-//!   more than one kernel is in flight on a device, each runs
-//!   `overlap_speedup` faster (cross-stream memory/compute phase overlap
-//!   — the effect that lets multi-stream SO2DR beat the single-stream
-//!   in-core code, paper §V-D);
+//! - one transfer-codec engine per device (`Codec` ops): the flattener
+//!   emits a tagged transfer as a (codec-op → channel-op) dependency
+//!   pair, so the channel is occupied for the wire-sized payload only
+//!   and compressing chunk *k+1* overlaps the wire time of chunk *k*.
+//!   Legacy graphs without explicit codec ops still price the additive
+//!   (channel + codec) sum on the channel — see `SimOp::codec_offloaded`;
+//! - per device, a kernel engine with `kernel_concurrency` slots; while
+//!   more than one kernel is in flight on a device, every resident
+//!   kernel progresses `overlap_speedup` faster (cross-stream
+//!   memory/compute phase overlap — the effect that lets multi-stream
+//!   SO2DR beat the single-stream in-core code, paper §V-D). The
+//!   speedup is symmetric: overlap is a property of the *interval*, not
+//!   of which kernel happened to start second, so kernels are modeled
+//!   as remaining-work quantities re-rated at every event boundary and
+//!   their busy time is accrued wall-clock;
 //! - one directed peer-to-peer link per adjacent device pair (`P2p`
 //!   halo-exchange transfers, priced by `CostModel::link_time`).
 //!
@@ -22,8 +32,14 @@
 //! (pinned chunks allocate once and free at their final writeback), so
 //! `peak_dmem` naturally reflects pinned arenas plus transient spill
 //! traffic, and `capacity_exceeded` stays a faithful go/no-go signal.
+//!
+//! A degenerate machine spec (zero/negative bandwidth, NaN latency)
+//! would turn op durations into `inf`/NaN and poison every completion
+//! comparison; [`simulate`] rejects it up front with a typed
+//! [`DegenerateMachineError`] instead of panicking mid-loop, and the
+//! event loop orders completion times with `f64::total_cmp`.
 
-use super::cost::CostModel;
+use super::cost::{CostModel, DegenerateMachineError};
 use super::flatten::{OpKind, SimOp};
 use std::collections::HashMap;
 
@@ -32,8 +48,8 @@ use std::collections::HashMap;
 pub struct SimReport {
     /// End-to-end wall time (s).
     pub makespan: f64,
-    /// Total busy seconds per category (sum over ops; concurrency can
-    /// make a category's busy time exceed the makespan).
+    /// Total busy seconds per category (wall-clock occupancy per op;
+    /// concurrency can make a category's busy time exceed the makespan).
     pub busy: HashMap<OpKind, f64>,
     /// Busy seconds per `(device, category)` — for `P2p` the source
     /// device of the link.
@@ -90,15 +106,42 @@ impl SimReport {
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum OpState {
     Waiting,
+    /// For kernels `end` is `f64::INFINITY`: their completion time is a
+    /// projection from remaining work at the current overlap rate, not
+    /// a fixed timestamp.
     Running { end: f64 },
     Done,
+}
+
+/// Progress rate of a kernel on `dev` for the *current* inter-event
+/// interval: overlapped kernels run `overlap_speedup` faster, and the
+/// rate holds until the next event because starts/completions are the
+/// only things that change the in-flight census.
+fn kernel_rate(
+    busy_slots: &HashMap<(OpKind, usize), usize>,
+    speedup: f64,
+    dev: usize,
+) -> f64 {
+    if busy_slots.get(&(OpKind::Kernel, dev)).copied().unwrap_or(0) >= 2 {
+        speedup
+    } else {
+        1.0
+    }
 }
 
 /// Run the simulation. `ops` must be topologically ordered by id (the
 /// flattener guarantees this). `n_strm` is the per-device stream count;
 /// the queue array grows automatically to cover every stream id the
-/// flattener assigned (multi-device plans use `n_devices * n_strm`).
-pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
+/// flattener assigned (multi-device plans use per-device lane blocks).
+///
+/// Returns a typed [`DegenerateMachineError`] — never panics — when the
+/// machine spec would produce non-finite op durations.
+pub fn simulate(
+    ops: &[SimOp],
+    cost: &CostModel,
+    n_strm: usize,
+) -> Result<SimReport, DegenerateMachineError> {
+    cost.machine.validate()?;
     let n = ops.len();
     let mut state = vec![OpState::Waiting; n];
     let mut deps_left: Vec<usize> = ops.iter().map(|o| o.deps.len()).collect();
@@ -119,8 +162,8 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
     let mut stream_head = vec![0usize; n_strm];
 
     // Resource occupancy, per (category, resource instance): each device
-    // has its own PCIe channels, copy engine and kernel slots; each P2p
-    // link is its own instance.
+    // has its own PCIe channels, copy engine, codec engine and kernel
+    // slots; each P2p link is its own instance.
     let mut busy_slots: HashMap<(OpKind, usize), usize> = HashMap::new();
     let slots_of = |k: OpKind| -> usize {
         match k {
@@ -139,6 +182,8 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
         SimReport { peak_dmem_per_device: vec![0u64; n_devices], ..Default::default() };
     let mut dmem: Vec<i64> = vec![0; n_devices];
     let mut running: Vec<usize> = Vec::new();
+    // Remaining solo-rate work of each running kernel (s).
+    let mut kern_rem: Vec<f64> = vec![0.0; n];
     let mut done_count = 0usize;
 
     // Try to start every startable op; returns true if any started.
@@ -154,6 +199,7 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
         busy_slots: &mut HashMap<(OpKind, usize), usize>,
         slots_of: &dyn Fn(OpKind) -> usize,
         running: &mut Vec<usize>,
+        kern_rem: &mut [f64],
         report: &mut SimReport,
         dmem: &mut [i64],
     ) -> bool {
@@ -171,34 +217,41 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
                     break;
                 }
                 // Start it. Transfers occupy their channel for the
-                // codec-reduced wire size plus the codec engine's pass
-                // over the raw payload (zero under identity).
-                let mut dur = match op.kind {
-                    OpKind::HtoD => {
-                        cost.htod_time(op.bytes) + cost.codec_time(op.codec, op.raw_bytes)
-                    }
-                    OpKind::DtoH => {
-                        cost.dtoh_time(op.bytes) + cost.codec_time(op.codec, op.raw_bytes)
-                    }
+                // codec-reduced wire size; the codec engine's pass over
+                // the raw payload is a separate `Codec` op when the
+                // flattener offloaded it, and stays additive on the
+                // channel otherwise (legacy graphs).
+                let inline_codec = if op.codec_offloaded {
+                    0.0
+                } else {
+                    cost.codec_time(op.codec, op.raw_bytes)
+                };
+                let dur = match op.kind {
+                    OpKind::HtoD => cost.htod_time(op.bytes) + inline_codec,
+                    OpKind::DtoH => cost.dtoh_time(op.bytes) + inline_codec,
                     OpKind::D2D => cost.d2d_time(op.bytes),
-                    OpKind::P2p => {
-                        cost.link_time(op.bytes) + cost.codec_time(op.codec, op.raw_bytes)
-                    }
+                    OpKind::P2p => cost.link_time(op.bytes) + inline_codec,
+                    OpKind::Codec => cost.codec_time(op.codec, op.raw_bytes),
                     OpKind::Kernel => cost.kernel_time(op.stencil, &op.areas),
                 };
-                if op.kind == OpKind::Kernel && used >= 1 {
-                    dur /= cost.machine.overlap_speedup;
-                }
                 *busy_slots.entry(res).or_insert(0) += 1;
                 dmem[op.mem_device] += op.alloc_delta;
                 let dev_peak = &mut report.peak_dmem_per_device[op.mem_device];
                 *dev_peak = (*dev_peak).max(dmem[op.mem_device].max(0) as u64);
-                *report.busy.entry(op.kind).or_insert(0.0) += dur;
-                *report.busy_dev.entry((op.device, op.kind)).or_insert(0.0) += dur;
                 *report.op_counts.entry(op.kind).or_insert(0) += 1;
                 *report.bytes.entry(op.kind).or_insert(0) += op.bytes;
                 *report.raw_bytes.entry(op.kind).or_insert(0) += op.raw_bytes;
-                state[cand] = OpState::Running { end: now + dur };
+                if op.kind == OpKind::Kernel {
+                    // Kernels are integrated as remaining work: their
+                    // wall-clock busy accrues interval by interval at
+                    // the symmetric overlap rate.
+                    kern_rem[cand] = dur;
+                    state[cand] = OpState::Running { end: f64::INFINITY };
+                } else {
+                    *report.busy.entry(op.kind).or_insert(0.0) += dur;
+                    *report.busy_dev.entry((op.device, op.kind)).or_insert(0.0) += dur;
+                    state[cand] = OpState::Running { end: now + dur };
+                }
                 running.push(cand);
                 any = true;
                 // CUDA-stream semantics: the next op of this stream may
@@ -227,6 +280,7 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
                 &mut busy_slots,
                 &|k| slots_of(k),
                 &mut running,
+                &mut kern_rem,
                 &mut report,
                 &mut dmem,
             );
@@ -237,33 +291,58 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
         if done_count == n {
             break;
         }
-        // Advance to the earliest completion.
-        let (idx, end) = running
+        // Project a completion time for every running op: the stored end
+        // for channel ops, remaining work over the current overlap rate
+        // for kernels (the rate holds until the next event).
+        let speedup = cost.machine.overlap_speedup;
+        let proj: Vec<(usize, f64)> = running
             .iter()
-            .enumerate()
-            .filter_map(|(ri, &oid)| match state[oid] {
-                OpState::Running { end } => Some((ri, end)),
+            .filter_map(|&oid| match state[oid] {
+                OpState::Running { end } => {
+                    let t = if ops[oid].kind == OpKind::Kernel {
+                        now + kern_rem[oid] / kernel_rate(&busy_slots, speedup, ops[oid].device)
+                    } else {
+                        end
+                    };
+                    Some((oid, t))
+                }
                 _ => None,
             })
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .collect();
+        let t_next = proj
+            .iter()
+            .map(|&(_, t)| t)
+            .min_by(|a, b| a.total_cmp(b))
             .expect("deadlock: nothing running but ops remain");
-        now = end;
-        // Complete every op finishing at `now` (within epsilon).
+        let elapsed = (t_next - now).max(0.0);
+        // Kernels accrue wall-clock busy over the interval and burn
+        // remaining work at the interval's (symmetric) rate.
+        for &(oid, _) in &proj {
+            let op = &ops[oid];
+            if op.kind == OpKind::Kernel {
+                *report.busy.entry(OpKind::Kernel).or_insert(0.0) += elapsed;
+                *report.busy_dev.entry((op.device, OpKind::Kernel)).or_insert(0.0) += elapsed;
+                let rate = kernel_rate(&busy_slots, speedup, op.device);
+                kern_rem[oid] = (kern_rem[oid] - elapsed * rate).max(0.0);
+            }
+        }
+        now = t_next;
+        // Complete every op projected to finish at `now` (within epsilon).
         let mut finished: Vec<usize> = Vec::new();
         running.retain(|&oid| {
-            if let OpState::Running { end } = state[oid] {
-                if end <= now + 1e-15 {
-                    finished.push(oid);
-                    return false;
-                }
+            let done = proj
+                .iter()
+                .any(|&(p, t)| p == oid && t <= now + 1e-15);
+            if done {
+                finished.push(oid);
             }
-            true
+            !done
         });
-        let _ = idx;
         for oid in finished {
             state[oid] = OpState::Done;
             done_count += 1;
             let op = &ops[oid];
+            kern_rem[oid] = 0.0;
             *busy_slots.get_mut(&(op.kind, op.resource)).unwrap() -= 1;
             dmem[op.mem_device] += op.free_delta;
             let s = op.stream % n_strm;
@@ -273,15 +352,13 @@ pub fn simulate(ops: &[SimOp], cost: &CostModel, n_strm: usize) -> SimReport {
                 deps_left[dep] -= 1;
             }
         }
-        // `deps_left` is mutated above; rebind for the closure borrow.
-        // (No action needed — next loop iteration re-reads it.)
     }
     report.makespan = now;
     report.peak_dmem = report.peak_dmem_per_device.iter().copied().max().unwrap_or(0);
     if report.peak_dmem > cost.machine.c_dmem {
         report.capacity_exceeded = true;
     }
-    report
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -293,6 +370,7 @@ mod tests {
     use crate::gpu::cost::MachineSpec;
     use crate::gpu::flatten::flatten_run;
     use crate::stencil::{NaiveEngine, StencilKind};
+    use crate::transfer::CodecKind;
 
     fn sim(scheme: Scheme, d: usize, s_tb: usize, k_on: usize, n: usize) -> SimReport {
         let kind = StencilKind::Box { radius: 1 };
@@ -302,7 +380,7 @@ mod tests {
             PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
         let ops = flatten_run(&plans, &dc, kind, 3, buf_rows);
         let cost = CostModel::new(MachineSpec::rtx3080());
-        simulate(&ops, &cost, 3)
+        simulate(&ops, &cost, 3).expect("valid machine")
     }
 
     #[test]
@@ -351,6 +429,134 @@ mod tests {
         assert_eq!(rep.count_of(OpKind::DtoH), 0);
         assert!(rep.count_of(OpKind::Kernel) > 0);
     }
+
+    fn kernel_op(id: usize, stream: usize) -> SimOp {
+        SimOp {
+            id,
+            kind: OpKind::Kernel,
+            stream,
+            chunk: id,
+            epoch: 0,
+            device: 0,
+            resource: 0,
+            mem_device: 0,
+            bytes: 0,
+            raw_bytes: 0,
+            codec: CodecKind::Identity,
+            codec_offloaded: false,
+            areas: vec![1 << 28],
+            stencil: StencilKind::Box { radius: 1 },
+            deps: vec![],
+            alloc_delta: 0,
+            free_delta: 0,
+        }
+    }
+
+    /// Satellite-3 semantics lock: the overlap speedup is symmetric.
+    /// Two identical, dependency-free kernels that run together must
+    /// BOTH progress at the overlapped rate for their whole joint
+    /// lifetime — the makespan is solo/overlap_speedup, not the solo
+    /// duration the old model charged the first starter.
+    #[test]
+    fn kernel_overlap_speedup_is_symmetric() {
+        let cost = CostModel::new(MachineSpec::rtx3080());
+        let solo = simulate(&[kernel_op(0, 0)], &cost, 1).expect("valid").makespan;
+        let both = simulate(&[kernel_op(0, 0), kernel_op(1, 1)], &cost, 2)
+            .expect("valid")
+            .makespan;
+        let expect = solo / cost.machine.overlap_speedup;
+        assert!(
+            (both - expect).abs() <= expect * 1e-9,
+            "symmetric overlap: expected {expect}, got {both} (solo {solo})"
+        );
+        // And the wall-clock kernel busy reflects actual occupancy: two
+        // kernels resident for the whole run accrue 2x the makespan.
+        let rep = simulate(&[kernel_op(0, 0), kernel_op(1, 1)], &cost, 2).expect("valid");
+        assert!((rep.busy_of(OpKind::Kernel) - 2.0 * rep.makespan).abs() <= 1e-12);
+    }
+
+    /// Tentpole invariant in miniature: (codec → channel) pairs on
+    /// round-robin lanes pipeline — chunk k+1 compresses while chunk k
+    /// is on the wire, so the makespan beats the additive model while
+    /// still dominating the pure channel lower bound.
+    #[test]
+    fn offloaded_codec_hides_under_the_wire() {
+        let raw: u64 = 1 << 30;
+        let wire = CodecKind::Lossless.model_wire_bytes(raw);
+        let cost = CostModel::new(MachineSpec::rtx3080());
+        let mut ops: Vec<SimOp> = Vec::new();
+        for k in 0..4usize {
+            let codec_id = ops.len();
+            ops.push(SimOp {
+                id: codec_id,
+                kind: OpKind::Codec,
+                stream: k % 2,
+                chunk: k,
+                epoch: 0,
+                device: 0,
+                resource: 0,
+                mem_device: 0,
+                bytes: 0,
+                raw_bytes: raw,
+                codec: CodecKind::Lossless,
+                codec_offloaded: false,
+                areas: vec![],
+                stencil: StencilKind::Box { radius: 1 },
+                deps: vec![],
+                alloc_delta: 0,
+                free_delta: 0,
+            });
+            ops.push(SimOp {
+                id: codec_id + 1,
+                kind: OpKind::HtoD,
+                stream: k % 2,
+                chunk: k,
+                epoch: 0,
+                device: 0,
+                resource: 0,
+                mem_device: 0,
+                bytes: wire,
+                raw_bytes: raw,
+                codec: CodecKind::Lossless,
+                codec_offloaded: true,
+                areas: vec![],
+                stencil: StencilKind::Box { radius: 1 },
+                deps: vec![codec_id],
+                alloc_delta: 0,
+                free_delta: 0,
+            });
+        }
+        let rep = simulate(&ops, &cost, 2).expect("valid machine");
+        let codec_t = cost.codec_time(CodecKind::Lossless, raw);
+        let additive = 4.0 * (cost.htod_time(wire) + codec_t);
+        assert!(
+            rep.makespan < additive - 1.5 * codec_t,
+            "pipelined {} vs additive {additive}",
+            rep.makespan
+        );
+        // ... yet never below the channel's own busy time.
+        assert!(rep.makespan >= 4.0 * cost.htod_time(wire) - 1e-9);
+        assert_eq!(rep.count_of(OpKind::Codec), 4);
+        assert!(rep.busy_of(OpKind::Codec) > 0.0);
+    }
+
+    /// Satellite-1 regression: a degenerate machine spec yields a typed
+    /// error from `simulate` — never a NaN panic in the event loop.
+    #[test]
+    fn degenerate_machine_yields_typed_error_not_panic() {
+        let ops = vec![kernel_op(0, 0)];
+        for (patch, field) in [
+            ((|m: &mut MachineSpec| m.bw_htod = 0.0) as fn(&mut MachineSpec), "bw_htod"),
+            (|m: &mut MachineSpec| m.flops = f64::NAN, "flops"),
+            (|m: &mut MachineSpec| m.bw_codec_lossless = -1.0, "bw_codec_lossless"),
+            (|m: &mut MachineSpec| m.overlap_speedup = 0.0, "overlap_speedup"),
+        ] {
+            let mut m = MachineSpec::rtx3080();
+            patch(&mut m);
+            let err = simulate(&ops, &CostModel::new(m), 1).unwrap_err();
+            assert_eq!(err.field, field);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -373,8 +579,8 @@ mod determinism_tests {
             PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
         let ops = flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows);
         let cost = CostModel::new(MachineSpec::rtx3080());
-        let a = simulate(&ops, &cost, 3);
-        let b = simulate(&ops, &cost, 3);
+        let a = simulate(&ops, &cost, 3).expect("valid machine");
+        let b = simulate(&ops, &cost, 3).expect("valid machine");
         assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
         assert_eq!(a.peak_dmem, b.peak_dmem);
         for (k, v) in &a.busy {
@@ -394,7 +600,7 @@ mod determinism_tests {
         let mk = |n_strm: usize| {
             let ops =
                 flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, n_strm, buf_rows);
-            simulate(&ops, &cost, n_strm).makespan
+            simulate(&ops, &cost, n_strm).expect("valid machine").makespan
         };
         let m1 = mk(1);
         let m3 = mk(3);

@@ -2,9 +2,17 @@
 //! for the discrete-event simulator.
 //!
 //! Dependency structure (mirrors what CUDA events would enforce):
-//! - ops of one chunk-epoch are FIFO on their stream (chunks round-robin
-//!   over `n_strm` streams *per device*, as in the paper; stream ids are
-//!   `device * n_strm + chunk % n_strm`);
+//! - ops of one chunk are chained in program order by explicit
+//!   dependency edges, and lanes (streams) are FIFO. In the default
+//!   overlap mode ([`FlattenOpts`]) each device owns `n_strm + 2`
+//!   lanes: chunks round-robin their arrivals and kernels over the
+//!   first `n_strm` compute lanes (as in the paper), sharing
+//!   publish/fetch copies and link hops ride a dedicated halo lane,
+//!   spills and writebacks a dedicated DtoH lane, and tagged transfers
+//!   split into (codec-op → channel-op) pairs on the device's codec
+//!   engine. With overlap off, everything sits on the chunk's compute
+//!   lane (`device * n_strm + chunk % n_strm`) and codec time is
+//!   additive on the channel — the legacy layout;
 //! - `RsRead` waits for the latest provider of the matching region (same
 //!   epoch, rect and time step): the neighbor's `RsWrite`, or — when the
 //!   producer lives on another device — the `P2p` link transfer that
@@ -54,6 +62,12 @@ pub enum OpKind {
     /// Inter-device (peer-to-peer) halo exchange over the link.
     P2p,
     Kernel,
+    /// Transfer-codec pass (compress + decompress) over a tagged
+    /// transfer's raw payload, on the device's codec engine. Emitted as
+    /// the first half of a (codec → channel) dependency pair when the
+    /// flattener pipelines codecs ([`FlattenOpts::overlap`]), so codec
+    /// compute of one chunk hides under another chunk's wire time.
+    Codec,
 }
 
 impl OpKind {
@@ -64,6 +78,7 @@ impl OpKind {
             OpKind::D2D => "O/D",
             OpKind::P2p => "P2P",
             OpKind::Kernel => "kernel",
+            OpKind::Codec => "codec",
         }
     }
 }
@@ -95,6 +110,13 @@ pub struct SimOp {
     /// Transfer codec the payload crosses the channel under (identity
     /// for kernels and on-device sharing copies).
     pub codec: CodecKind,
+    /// True when this channel op's codec pass was emitted as a separate
+    /// [`OpKind::Codec`] op (a dependency of this op): the DES then
+    /// prices this op's channel occupancy at wire size only. False on
+    /// legacy graphs, where the codec term stays additive on the
+    /// channel — the pre-pipelining model, still exposed through
+    /// `--overlap off`.
+    pub codec_offloaded: bool,
     /// Kernel fused-step areas (elements); empty for copies.
     pub areas: Vec<u64>,
     pub stencil: StencilKind,
@@ -112,6 +134,35 @@ fn link_resource(src_dev: usize, dst_dev: usize) -> usize {
     src_dev * 4096 + dst_dev
 }
 
+/// Scheduling options for the flattener.
+#[derive(Debug, Clone, Copy)]
+pub struct FlattenOpts {
+    /// Pipeline-honest asynchronous overlap (the default):
+    /// - tagged transfers become (codec-op → channel-op) dependency
+    ///   pairs, so codec compute hides under other chunks' wire time
+    ///   and the channel is occupied for the wire bytes alone;
+    /// - each device's lane block gains a halo lane (sharing
+    ///   publish/fetch copies and link hops) and a DtoH lane (spills
+    ///   and writebacks), so halo traffic hides under neighboring
+    ///   chunks' kernels and an eviction no longer gates the next
+    ///   epoch's arrivals through stream FIFO order. Intra-chunk
+    ///   program order is preserved by explicit chain dependency edges
+    ///   (per chunk, across lanes and epochs), which subsume the
+    ///   pass-major barrier of resident plans — correctness never rides
+    ///   on lane FIFO order.
+    ///
+    /// With `overlap: false` the flattener reproduces the legacy
+    /// additive layout exactly: one lane per (device, chunk % n_strm),
+    /// no codec ops, codec time priced additively on the channel.
+    pub overlap: bool,
+}
+
+impl Default for FlattenOpts {
+    fn default() -> Self {
+        Self { overlap: true }
+    }
+}
+
 /// Flatten a multi-epoch run. `n_strm` streams per device; `buf_bytes`
 /// is the byte size of one (input + output double-buffered) chunk arena
 /// at the run's uniform shape — `Decomposition::arena_bytes` for row
@@ -126,17 +177,33 @@ fn link_resource(src_dev: usize, dst_dev: usize) -> usize {
 /// already registered even when the publisher is a *later* chunk
 /// (inter-epoch halo data flows both up and down the chunk order, and
 /// along both axes for tiles).
-pub fn flatten_run_sized(
+///
+/// Emission order is identical under both [`FlattenOpts`] modes — the
+/// real-numerics executor walks the plans in this same order, which is
+/// a valid topological order of the dependency-edged graph (every edge
+/// points at an earlier op), so overlap changes modeled time only,
+/// never results.
+pub fn flatten_run_opts(
     plans: &[EpochPlan],
     kind: StencilKind,
     n_strm: usize,
     buf_bytes: u64,
+    opts: FlattenOpts,
 ) -> Vec<SimOp> {
     let mut ops: Vec<SimOp> = Vec::new();
     // (epoch, rect, time) -> writer op id
     let mut rs_writers: HashMap<(usize, Rect, usize), usize> = HashMap::new();
     // DtoH ops of the previous epoch: (rect, id)
     let mut prev_dtoh: Vec<(Rect, usize)> = Vec::new();
+    // Lane layout per device: `base` compute lanes (chunks round-robin,
+    // as in the paper), plus — in overlap mode — one halo lane and one
+    // DtoH lane.
+    let base = n_strm.max(1);
+    let lanes = if opts.overlap { base + 2 } else { base };
+    // Last emitted op of each chunk across epochs: in overlap mode the
+    // lane split would otherwise lose the cross-epoch same-chunk FIFO
+    // ordering that legacy streams provided implicitly.
+    let mut chain_last: HashMap<usize, usize> = HashMap::new();
 
     for (e, plan) in plans.iter().enumerate() {
         let mut this_dtoh: Vec<(Rect, usize)> = Vec::new();
@@ -160,7 +227,9 @@ pub fn flatten_run_sized(
         let mut prev_op_of_chunk: HashMap<usize, usize> = HashMap::new();
         for (ci, range) in sequences {
             let cp = &plan.chunks[ci];
-            let stream = cp.device * n_strm.max(1) + cp.chunk % n_strm.max(1);
+            let compute_lane = cp.device * lanes + cp.chunk % base;
+            let halo_lane = cp.device * lanes + base;
+            let dtoh_lane = cp.device * lanes + base + 1;
             let n_ops = cp.ops.len();
             // Arena lifetime: staged plans allocate at the chunk-epoch's
             // first op and free at its last; resident plans allocate only
@@ -204,7 +273,19 @@ pub fn flatten_run_sized(
                 .sum();
             for oi in range {
                 let op = &cp.ops[oi];
-                let id = ops.len();
+                // Pipelined codec: a tagged transfer is emitted as a
+                // (codec → channel) pair; `id` addresses the channel op,
+                // so providers, consumers and the chunk chain register
+                // against the op that actually lands the data.
+                let wants_codec = opts.overlap
+                    && match op {
+                        ChunkOp::HtoD { codec, .. }
+                        | ChunkOp::DtoH { codec, .. }
+                        | ChunkOp::Evict { codec, .. }
+                        | ChunkOp::D2D { codec, .. } => *codec != CodecKind::Identity,
+                        _ => false,
+                    };
+                let id = ops.len() + usize::from(wants_codec);
                 let last_of_chunk = oi + 1 == n_ops;
                 let first_of_chunk = !prev_op_of_chunk.contains_key(&cp.chunk);
                 let (kind_s, raw_bytes, codec, areas, mut deps) = match op {
@@ -261,13 +342,33 @@ pub fn flatten_run_sized(
                 // memory deltas below stay raw-based (regions land
                 // decompressed on the device).
                 let bytes = codec.model_wire_bytes(raw_bytes);
-                // Stream FIFO: depend on the previous op of this chunk
-                // (cross-chunk same-stream ordering is enforced by the
-                // DES stream queues; the explicit edge keeps intra-chunk
-                // order under any scheduler, across the phase split).
+                // Lane assignment: arrivals and kernels on the chunk's
+                // compute lane; sharing copies and link hops on the halo
+                // lane; spills and writebacks on the DtoH lane (legacy
+                // mode: everything on the compute lane).
+                let stream = if opts.overlap {
+                    match kind_s {
+                        OpKind::D2D | OpKind::P2p => halo_lane,
+                        OpKind::DtoH => dtoh_lane,
+                        _ => compute_lane,
+                    }
+                } else {
+                    compute_lane
+                };
+                // Chunk program order: depend on the previous op of this
+                // chunk (the explicit edge keeps intra-chunk order under
+                // any scheduler, across the phase split and — in overlap
+                // mode — across the lane split and epoch boundaries,
+                // where the legacy layout relied on same-stream FIFO).
                 if let Some(&p) = prev_op_of_chunk.get(&cp.chunk) {
                     deps.push(p);
+                } else if opts.overlap {
+                    if let Some(&p) = chain_last.get(&cp.chunk) {
+                        deps.push(p);
+                    }
                 }
+                deps.sort_unstable();
+                deps.dedup();
                 let (resource, mem_device) = match op {
                     ChunkOp::D2D { src_dev, dst_dev, .. } => {
                         (link_resource(*src_dev, *dst_dev), *dst_dev)
@@ -289,6 +390,35 @@ pub fn flatten_run_sized(
                         free_delta -= buf_bytes as i64;
                     }
                 }
+                if wants_codec {
+                    // The codec pass inherits the channel op's data and
+                    // chain dependencies and runs on the device's codec
+                    // engine; the channel op then waits only for its
+                    // codec pass (transitively ordered behind the rest)
+                    // and occupies the channel for the wire bytes alone.
+                    let codec_id = ops.len();
+                    debug_assert_eq!(codec_id + 1, id);
+                    ops.push(SimOp {
+                        id: codec_id,
+                        kind: OpKind::Codec,
+                        stream,
+                        chunk: cp.chunk,
+                        epoch: e,
+                        device: cp.device,
+                        resource: cp.device,
+                        mem_device: cp.device,
+                        bytes: 0,
+                        raw_bytes,
+                        codec,
+                        codec_offloaded: false,
+                        areas: vec![],
+                        stencil: kind,
+                        deps: std::mem::take(&mut deps),
+                        alloc_delta: 0,
+                        free_delta: 0,
+                    });
+                    deps = vec![codec_id];
+                }
                 ops.push(SimOp {
                     id,
                     kind: kind_s,
@@ -301,6 +431,7 @@ pub fn flatten_run_sized(
                     bytes,
                     raw_bytes,
                     codec,
+                    codec_offloaded: wants_codec,
                     areas,
                     stencil: kind,
                     deps,
@@ -308,11 +439,22 @@ pub fn flatten_run_sized(
                     free_delta,
                 });
                 prev_op_of_chunk.insert(cp.chunk, id);
+                chain_last.insert(cp.chunk, id);
             }
         }
         prev_dtoh = this_dtoh;
     }
     ops
+}
+
+/// [`flatten_run_opts`] with the default (pipeline-overlap) options.
+pub fn flatten_run_sized(
+    plans: &[EpochPlan],
+    kind: StencilKind,
+    n_strm: usize,
+    buf_bytes: u64,
+) -> Vec<SimOp> {
+    flatten_run_opts(plans, kind, n_strm, buf_bytes, FlattenOpts::default())
 }
 
 /// [`flatten_run_sized`] with the arena size taken from a 1-D row-band
@@ -347,8 +489,38 @@ mod tests {
     #[test]
     fn streams_round_robin() {
         let (_, ops) = setup(Scheme::So2dr);
+        // Default overlap layout on one device: 3 compute lanes the
+        // chunks round-robin, then the halo lane (3) and DtoH lane (4).
         for op in &ops {
-            assert_eq!(op.stream, op.chunk % 3);
+            match op.kind {
+                OpKind::HtoD | OpKind::Kernel => assert_eq!(op.stream, op.chunk % 3),
+                OpKind::D2D | OpKind::P2p => assert_eq!(op.stream, 3),
+                OpKind::DtoH => assert_eq!(op.stream, 4),
+                OpKind::Codec => unreachable!("identity plans emit no codec ops"),
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_chain_orders_each_chunk_across_epochs() {
+        // Lanes no longer serialize a chunk's DtoH against its next
+        // arrival, so the cross-epoch program order must ride explicit
+        // chain edges.
+        let (_, ops) = setup(Scheme::So2dr);
+        for chunk in 0..4usize {
+            let last_e0 = ops
+                .iter()
+                .filter(|o| o.chunk == chunk && o.epoch == 0)
+                .map(|o| o.id)
+                .max()
+                .unwrap();
+            let first_e1 = ops.iter().find(|o| o.chunk == chunk && o.epoch == 1).unwrap();
+            assert!(
+                first_e1.deps.contains(&last_e0),
+                "chunk {chunk}: epoch-1 op {} missing chain dep on {last_e0} ({:?})",
+                first_e1.id,
+                first_e1.deps
+            );
         }
     }
 
@@ -436,12 +608,19 @@ mod device_tests {
     #[test]
     fn streams_are_per_device() {
         let ops = setup(Scheme::So2dr, 2);
+        // Each device owns 5 lanes (3 compute + halo + DtoH).
         for op in &ops {
-            assert_eq!(op.stream, op.device * 3 + op.chunk % 3);
+            let lane = op.stream - op.device * 5;
+            match op.kind {
+                OpKind::HtoD | OpKind::Kernel => assert_eq!(lane, op.chunk % 3),
+                OpKind::D2D | OpKind::P2p => assert_eq!(lane, 3),
+                OpKind::DtoH => assert_eq!(lane, 4),
+                OpKind::Codec => unreachable!("identity plans emit no codec ops"),
+            }
         }
         // Both devices contribute streams.
-        assert!(ops.iter().any(|o| o.stream < 3));
-        assert!(ops.iter().any(|o| o.stream >= 3));
+        assert!(ops.iter().any(|o| o.stream < 5));
+        assert!(ops.iter().any(|o| o.stream >= 5));
     }
 
     #[test]
@@ -518,24 +697,59 @@ mod codec_tests {
     fn bf16_halves_host_wire_but_not_memory_deltas() {
         let off = setup(CompressMode::Off);
         let bf16 = setup(CompressMode::Bf16);
-        assert_eq!(off.len(), bf16.len());
-        for (a, b) in off.iter().zip(&bf16) {
+        // Tagged transfers gain a codec-op partner; the channel ops
+        // still correspond 1:1 with the identity plan's.
+        let channels: Vec<&SimOp> = bf16.iter().filter(|o| o.kind != OpKind::Codec).collect();
+        assert_eq!(off.len(), channels.len());
+        assert!(bf16.iter().any(|o| o.kind == OpKind::Codec));
+        for (a, b) in off.iter().zip(&channels) {
             assert_eq!(a.kind, b.kind);
             assert_eq!(a.raw_bytes, b.raw_bytes, "raw volume is codec-independent");
             match b.kind {
                 OpKind::HtoD | OpKind::DtoH => {
                     assert_eq!(b.codec, CodecKind::Bf16);
                     assert_eq!(b.bytes * 2, b.raw_bytes);
+                    // The codec pass was split onto the codec engine.
+                    assert!(b.codec_offloaded);
+                    assert_eq!(b.deps.len(), 1, "channel hangs off its codec op only");
+                    let c = &bf16[b.deps[0]];
+                    assert_eq!(c.kind, OpKind::Codec);
+                    assert_eq!(c.codec, CodecKind::Bf16);
+                    assert_eq!(c.raw_bytes, b.raw_bytes);
+                    assert_eq!(c.bytes, 0, "codec ops move no channel bytes");
+                    assert_eq!(c.stream, b.stream, "pair shares the channel's lane");
                 }
                 OpKind::P2p => {
                     assert_eq!(b.codec, CodecKind::Identity, "link never quantizes");
                     assert_eq!(b.bytes, b.raw_bytes);
+                    assert!(!b.codec_offloaded);
                 }
                 _ => assert_eq!(b.bytes, a.bytes),
             }
             // Device memory holds decompressed regions either way.
             assert_eq!(a.alloc_delta, b.alloc_delta);
             assert_eq!(a.free_delta, b.free_delta);
+        }
+    }
+
+    #[test]
+    fn overlap_off_reproduces_the_legacy_additive_layout() {
+        let dc = Decomposition::new(240, 64, 4, 1);
+        let devs = DeviceAssignment::contiguous(4, 2);
+        let mut plans = plan_run_devices(Scheme::So2dr, &dc, &devs, 12, 6, 2);
+        apply_codec_policy(&mut plans, CompressMode::Bf16);
+        let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+        let ops = flatten_run_opts(
+            &plans,
+            StencilKind::Box { radius: 1 },
+            3,
+            dc.arena_bytes(buf_rows),
+            FlattenOpts { overlap: false },
+        );
+        assert!(ops.iter().all(|o| o.kind != OpKind::Codec), "no codec engine ops");
+        assert!(ops.iter().all(|o| !o.codec_offloaded), "additive pricing throughout");
+        for op in &ops {
+            assert_eq!(op.stream, op.device * 3 + op.chunk % 3, "legacy lane layout");
         }
     }
 

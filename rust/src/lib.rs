@@ -153,6 +153,41 @@
 //!        device counts × tight/ample caps × lossless codecs; a
 //!        one-tile-column tiling reproduces the 1-D resident plan
 //!        op-for-op.
+//!   - **Pipeline-honest async overlap** (`--overlap {on,off}`, default
+//!     on): the flattener ([`gpu::flatten::flatten_run_opts`]) models
+//!     the asynchronous engines of a real device instead of pricing
+//!     them additively. Tagged transfers become (codec-op →
+//!     channel-op) dependency pairs on a per-device codec-engine
+//!     resource, lane blocks gain dedicated halo and DtoH lanes, and
+//!     intra-chunk program order rides explicit dependency edges.
+//!     Overlap-contract invariants the suites enforce:
+//!     1. *codec hides under the wire*: with overlap on, a channel op
+//!        occupies its channel for the wire bytes alone — chunk
+//!        `k + 1`'s compression overlaps chunk `k`'s transfer — so on a
+//!        transfer-bound machine the overlapped makespan is *strictly*
+//!        below the additive model's, while wire and raw byte totals
+//!        are identical in both modes (the schedule moves, the traffic
+//!        does not);
+//!     2. *no invented capacity*: the overlapped makespan still
+//!        dominates every (device, category) busy time divided by its
+//!        slot count — overlap hides work under other resources' time,
+//!        it never makes a single resource exceed wall-clock;
+//!     3. *dependency edges subsume pass barriers*: resident plans'
+//!        pass-major phases and cross-epoch same-chunk ordering are
+//!        carried by explicit edges, so correctness never rides on lane
+//!        FIFO order; the real-numerics executor walks the same
+//!        emission order — a valid topological order of the edge
+//!        graph — so overlap changes modeled time only, never results
+//!        (randomized differential suite stays bit-exact);
+//!     4. *the model degrades gracefully, never panics*: degenerate
+//!        machine specs (zero/NaN bandwidths, zero concurrency) are
+//!        rejected up front with a typed
+//!        [`gpu::cost::DegenerateMachineError`], and every makespan
+//!        comparison in the tooling orders by `f64::total_cmp`;
+//!     5. *overlap off is the legacy additive model*: `--overlap off`
+//!        reproduces the pre-overlap lane layout and codec pricing
+//!        exactly, keeping an A/B baseline (`figures --fig overlap`
+//!        tables both at paper scale).
 //! - **L2 (`python/compile/model.py`):** the fixed-shape chunk program,
 //!   AOT-lowered to HLO text.
 //! - **L1 (`python/compile/kernels/`):** the Pallas multi-step stencil

@@ -132,11 +132,22 @@ fn config_of(args: &Args) -> Result<RunConfig> {
         cfg.compress = CompressMode::parse(v)
             .with_context(|| format!("bad --compress {v:?} (off|bf16|lossless|auto)"))?;
     }
+    if let Some(v) = args.get("overlap") {
+        cfg.overlap = parse_overlap(v)?;
+    }
     if cfg.scheme == Scheme::ResReu {
         cfg.k_on = 1;
     }
     cfg.validate()?;
     Ok(cfg)
+}
+
+fn parse_overlap(v: &str) -> Result<bool> {
+    match v {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => bail!("bad --overlap {other:?} (on|off)"),
+    }
 }
 
 fn make_backend(cfg: &RunConfig) -> Result<Box<dyn KernelBackend>> {
@@ -181,7 +192,7 @@ fn cmd_run(args: &Args) -> Result<()> {
              \x20         [--sz N | --rows N --cols N] [--d N] [--s-tb N] [--k-on N] [--n N]\n\
              \x20         [--decomp rows|tiles] [--chunks-x N] [--chunks-y N]\n\
              \x20         [--devices N] [--d2d-gbps X] [--resident off|auto|force]\n\
-             \x20         [--compress off|bf16|lossless|auto]\n\
+             \x20         [--compress off|bf16|lossless|auto] [--overlap on|off]\n\
              \x20         [--backend host-naive|host-opt|pjrt] [--no-verify x]"
         );
         return Ok(());
@@ -275,7 +286,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         let link_gbps = machine.bw_link / 1e9;
         let rep = match cfg.decomp {
             DecompMode::Rows => {
-                so2dr::figures::simulate_compressed_grid_devices(
+                so2dr::figures::simulate_compressed_grid_devices_overlap(
                     &machine,
                     cfg.scheme,
                     cfg.kind,
@@ -289,11 +300,12 @@ fn cmd_run(args: &Args) -> Result<()> {
                     cfg.n_strm,
                     &resident_cfg,
                     cfg.compress,
+                    cfg.overlap,
                 )
                 .0
             }
             DecompMode::Tiles => {
-                so2dr::figures::simulate_resident_tiles_grid_devices(
+                so2dr::figures::simulate_resident_tiles_grid_devices_overlap(
                     &machine,
                     cfg.kind,
                     cfg.rows,
@@ -307,6 +319,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                     cfg.n_strm,
                     &resident_cfg,
                     cfg.compress,
+                    cfg.overlap,
                 )?
                 .0
             }
@@ -317,6 +330,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             fmt_secs(rep.makespan),
             fmt_secs(rep.busy_of(so2dr::gpu::OpKind::P2p)),
         );
+        println!("{}", so2dr::metrics::overlap_line(&rep));
     }
     let interior =
         ((cfg.rows - 2 * cfg.kind.radius()) * (cfg.cols - 2 * cfg.kind.radius())) as u64;
@@ -458,7 +472,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             "so2dr simulate [--scheme S] [--kind K] [--sz N] [--d N] [--devices N] [--d2d-gbps X]\n\
              \x20              [--decomp rows|tiles] [--chunks-x N] [--chunks-y N]\n\
              \x20              [--s-tb N] [--k-on N] [--n N] [--machine M] [--resident off|auto|force]\n\
-             \x20              [--compress off|bf16|lossless|auto]"
+             \x20              [--compress off|bf16|lossless|auto] [--overlap on|off]"
         );
         return Ok(());
     }
@@ -477,6 +491,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         .context("bad --compress (off|bf16|lossless|auto)")?;
     let decomp = DecompMode::parse(args.get("decomp").unwrap_or("rows"))
         .context("bad --decomp (rows|tiles)")?;
+    let overlap = parse_overlap(args.get("overlap").unwrap_or("on"))?;
     if decomp == DecompMode::Tiles {
         // Tile pricing path: plan-time validation (feasibility, devices)
         // lives in the planner; unsupported schemes are rejected here.
@@ -490,7 +505,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         };
         let chunks_x = args.usize_or("chunks-x", 2)?;
         let chunks_y = args.usize_or("chunks-y", 2)?;
-        let (rep, summary) = so2dr::figures::simulate_resident_tiles_grid_devices(
+        let (rep, summary) = so2dr::figures::simulate_resident_tiles_grid_devices_overlap(
             &machine,
             kind,
             sz,
@@ -504,6 +519,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             so2dr::figures::N_STRM,
             &resident_cfg,
             compress,
+            overlap,
         )?;
         if resident != ResidentMode::Off {
             // The planner already computed the staged HtoD volume
@@ -535,6 +551,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         if devices > 1 {
             print!("{}", so2dr::metrics::device_breakdown_table(&rep));
         }
+        println!("{}", so2dr::metrics::overlap_line(&rep));
         println!(
             "peak device memory: {}{}",
             fmt_bytes(rep.peak_dmem),
@@ -563,7 +580,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         ResidentMode::Force => ResidencyConfig::force(so2dr::figures::N_STRM),
         ResidentMode::Auto => ResidencyConfig::auto(machine.c_dmem, so2dr::figures::N_STRM),
     };
-    let (rep, summary) = so2dr::figures::simulate_compressed_grid_devices(
+    let (rep, summary) = so2dr::figures::simulate_compressed_grid_devices_overlap(
         &machine,
         scheme,
         kind,
@@ -577,6 +594,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         so2dr::figures::N_STRM,
         &resident_cfg,
         compress,
+        overlap,
     );
     if resident != ResidentMode::Off {
         let kept = summary.kept.iter().filter(|&&k| k).count();
@@ -623,6 +641,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     if devices > 1 {
         print!("{}", so2dr::metrics::device_breakdown_table(&rep));
     }
+    println!("{}", so2dr::metrics::overlap_line(&rep));
     println!(
         "peak device memory: {}{}",
         fmt_bytes(rep.peak_dmem),
@@ -634,7 +653,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 fn cmd_figures(args: &Args) -> Result<()> {
     if args.help() {
         println!(
-            "so2dr figures [--fig tables|3b|5|6|7|8|9|10|ablation_kon|scaling|resident|compress|decomp|bench_pr2]\n\
+            "so2dr figures [--fig tables|3b|5|6|7|8|9|10|ablation_kon|scaling|resident|compress|decomp|overlap|bench_pr2|bench_pr5|bench_pr6]\n\
              \x20             [--machine M]"
         );
         return Ok(());
@@ -700,4 +719,9 @@ grid into an MxN tile grid with 4-neighbor region sharing (halo volume\n\
 scales with tile perimeter instead of grid width); so2dr only, composes\n\
 with `--resident` (per-tile cross-epoch arenas, four-band halo refresh)\n\
 and `--compress`; `figures --fig decomp` tables the 1-D vs 2-D\n\
-halo/makespan trade and `--fig resident` the resident x tiles stack.\n";
+halo/makespan trade and `--fig resident` the resident x tiles stack.\n\
+Overlap: the DES prices a pipeline-honest schedule by default (codec\n\
+engine per device, halo/DtoH lanes, dependency-edged chunk chains);\n\
+`--overlap off` restores the legacy additive model for A/B pricing, and\n\
+`figures --fig overlap` (or `--fig bench_pr6`) tables the two side by\n\
+side at paper scale.\n";

@@ -132,13 +132,57 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// One-line pipeline-overlap report for a DES replay: how much resource
+/// busy time the schedule hid under the makespan, and which category the
+/// critical resource belongs to. `sum(busy) / makespan` is 1.0 for a fully
+/// serial schedule and grows with cross-resource overlap; `hidden` is the
+/// wall-clock the dependency-edged schedule saved vs running every busy
+/// interval back to back.
+pub fn overlap_line(rep: &SimReport) -> String {
+    let cats = [
+        OpKind::HtoD,
+        OpKind::D2D,
+        OpKind::P2p,
+        OpKind::Kernel,
+        OpKind::DtoH,
+        OpKind::Codec,
+    ];
+    let total_busy: f64 = cats.iter().map(|&k| rep.busy_of(k)).sum();
+    let (bottleneck, bn_busy) = cats
+        .iter()
+        .map(|&k| (k, rep.busy_of(k)))
+        .max_by(|a, b| a.1.total_cmp(&b.1))
+        .unwrap();
+    if rep.makespan <= 0.0 || total_busy <= 0.0 {
+        return "overlap: n/a (empty schedule)".into();
+    }
+    let factor = total_busy / rep.makespan;
+    let hidden = (total_busy - rep.makespan).max(0.0);
+    format!(
+        "overlap: {factor:.2}x busy/makespan (hid {} of {} busy under {} wall)  \
+         bottleneck {} ({} busy, {:.0}% of makespan)",
+        crate::util::fmt_secs(hidden),
+        crate::util::fmt_secs(total_busy),
+        crate::util::fmt_secs(rep.makespan),
+        bottleneck.label(),
+        crate::util::fmt_secs(bn_busy),
+        100.0 * bn_busy / rep.makespan,
+    )
+}
+
+/// Write a report section to `<dir>/<name>.txt` (best-effort) and return
+/// the text. Tests pass a [`crate::util::testkit::TempDir`] path so
+/// parallel runs never collide on a shared file.
+pub fn emit_to(dir: &std::path::Path, name: &str, body: &str) -> String {
+    let _ = std::fs::create_dir_all(dir);
+    let _ = std::fs::write(dir.join(format!("{name}.txt")), body);
+    body.to_string()
+}
+
 /// Write a report section to `results/<name>.txt` (best-effort) and
 /// return the text.
 pub fn emit(name: &str, body: &str) -> String {
-    let _ = std::fs::create_dir_all("results");
-    let path = format!("results/{name}.txt");
-    let _ = std::fs::write(&path, body);
-    body.to_string()
+    emit_to(std::path::Path::new("results"), name, body)
 }
 
 #[cfg(test)]
@@ -230,17 +274,32 @@ mod tests {
 #[cfg(test)]
 mod emit_tests {
     use super::*;
+    use crate::util::testkit::TempDir;
 
     #[test]
-    fn emit_writes_results_file() {
-        // emit() writes relative to the process CWD; don't change CWD
-        // here (tests run in parallel threads) — just verify the file
-        // appears under ./results and the body round-trips.
+    fn emit_to_writes_the_file_in_the_given_dir() {
+        // Routed through a TempDir so parallel test runs never collide on
+        // a shared repo-CWD path (and the working tree stays clean).
+        let dir = TempDir::new("emit");
         let body = "hello-figure\n";
-        let out = emit("unit_test_fig", body);
+        let out = emit_to(dir.path(), "unit_test_fig", body);
         assert_eq!(out, body);
-        let written = std::fs::read_to_string("results/unit_test_fig.txt").unwrap();
+        let written =
+            std::fs::read_to_string(dir.path().join("unit_test_fig.txt")).unwrap();
         assert_eq!(written, body);
-        let _ = std::fs::remove_file("results/unit_test_fig.txt");
+    }
+
+    #[test]
+    fn overlap_line_reports_hiding_and_bottleneck() {
+        let mut rep = SimReport { makespan: 2.0, ..Default::default() };
+        rep.busy.insert(OpKind::HtoD, 1.5);
+        rep.busy.insert(OpKind::Kernel, 1.9);
+        rep.busy.insert(OpKind::Codec, 0.6);
+        let line = overlap_line(&rep);
+        assert!(line.contains("2.00x"), "{line}");
+        assert!(line.contains("bottleneck kernel"), "{line}");
+        assert!(line.contains("95%"), "{line}");
+        let empty = overlap_line(&SimReport::default());
+        assert!(empty.contains("n/a"), "{empty}");
     }
 }

@@ -173,7 +173,10 @@ pub fn predict(
     let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
     let ops = flatten_run(&plans, &dc, kind, n_strm, buf_rows);
     let cost = CostModel::new(machine.clone());
-    simulate(&ops, &cost, n_strm).makespan
+    // A degenerate machine spec yields a typed error from the simulator;
+    // rank it unusable (+inf) instead of propagating — rank_candidates
+    // orders non-finite makespans last either way.
+    simulate(&ops, &cost, n_strm).map(|rep| rep.makespan).unwrap_or(f64::INFINITY)
 }
 
 /// Sort candidates best-first by predicted makespan. Candidates without

@@ -92,6 +92,44 @@ where
     }
 }
 
+/// A unique scratch directory under the system temp dir, removed on drop.
+///
+/// Tests that write files (figure tables, bench JSON, metrics reports) must
+/// route their outputs through one of these instead of fixed repo-CWD paths:
+/// fixed paths collide under parallel `cargo test` and dirty the working
+/// tree. The directory name mixes the caller's tag, the process id and a
+/// process-global counter, so concurrent tests (and concurrent test
+/// processes) never share a path.
+pub struct TempDir {
+    path: std::path::PathBuf,
+}
+
+impl TempDir {
+    /// Create `$TMPDIR/so2dr-<tag>-<pid>-<seq>` (and any missing parents).
+    pub fn new(tag: &str) -> Self {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("so2dr-{tag}-{}-{seq}", std::process::id()));
+        std::fs::create_dir_all(&path)
+            .unwrap_or_else(|e| panic!("TempDir {}: {e}", path.display()));
+        TempDir { path }
+    }
+
+    /// The directory's path, for joining output file names onto.
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        // Best-effort: a leak on teardown failure is still outside the repo.
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
 /// Convenience: shrinker for `usize`-like scalar tuples — halve each field
 /// toward a floor. Returns candidates with one field shrunk at a time.
 pub fn shrink_usize_toward(v: usize, floor: usize) -> Vec<usize> {
@@ -147,6 +185,20 @@ mod tests {
             assert!(c < 100 && c >= 3);
         }
         assert!(shrink_usize_toward(3, 3).is_empty());
+    }
+
+    #[test]
+    fn temp_dirs_are_unique_and_cleaned_up() {
+        let a = TempDir::new("unit");
+        let b = TempDir::new("unit");
+        assert_ne!(a.path(), b.path());
+        assert!(a.path().is_dir() && b.path().is_dir());
+        std::fs::write(a.path().join("x.txt"), "payload").unwrap();
+        let (pa, pb) = (a.path().to_path_buf(), b.path().to_path_buf());
+        drop(a);
+        drop(b);
+        assert!(!pa.exists(), "drop removes the dir and its contents");
+        assert!(!pb.exists());
     }
 
     #[test]

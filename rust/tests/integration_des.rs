@@ -38,7 +38,7 @@ fn flatten_paper(
 }
 
 fn sim(ops: &[SimOp], machine: MachineSpec) -> SimReport {
-    simulate(ops, &CostModel::new(machine), N_STRM)
+    simulate(ops, &CostModel::new(machine), N_STRM).expect("valid machine spec")
 }
 
 #[test]
@@ -571,6 +571,75 @@ fn slow_codec_engine_makes_compression_lose() {
     )
     .makespan;
     assert!(on > off, "a 1 GB/s codec cannot win: {on} vs {off}");
+}
+
+/// Acceptance criterion for the overlap engine: at paper scale with
+/// tagged transfers on a slow (wire-bound) link, the dependency-edged
+/// pipeline (codec engine + halo/DtoH lanes + chain edges) is strictly
+/// faster than the legacy additive model — chunk k+1's codec pass hides
+/// under chunk k's wire time — while the makespan still dominates every
+/// single resource's busy time (the schedule hides work, it cannot
+/// invent capacity).
+#[test]
+fn overlap_engine_beats_additive_model_on_tagged_transfers() {
+    use so2dr::gpu::flatten::{flatten_run_opts, FlattenOpts};
+    let machine = MachineSpec::rtx3080().with_pcie_gbps(4.0);
+    let dc = Decomposition::new(38400, 38400, 4, 1);
+    let devs = DeviceAssignment::contiguous(4, 1);
+    let (mut plans, _) =
+        plan_run_resident(Scheme::So2dr, &dc, &devs, 640, 160, 4, &ResidencyConfig::off());
+    apply_codec_policy(&mut plans, CompressMode::Lossless);
+    let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+    let flat = |overlap: bool| {
+        flatten_run_opts(
+            &plans,
+            StencilKind::Box { radius: 1 },
+            N_STRM,
+            dc.arena_bytes(buf_rows),
+            FlattenOpts { overlap },
+        )
+    };
+    let on_ops = flat(true);
+    let off_ops = flat(false);
+    assert!(on_ops.iter().any(|o| o.kind == OpKind::Codec), "tagged transfers split");
+    assert!(off_ops.iter().all(|o| o.kind != OpKind::Codec), "legacy graph is additive");
+    let on = sim(&on_ops, machine.clone());
+    let off = sim(&off_ops, machine.clone());
+    assert!(
+        on.makespan < off.makespan,
+        "pipelined {} !< additive {}",
+        on.makespan,
+        off.makespan
+    );
+    // Per-(device, category) lower bounds hold on the overlapped run.
+    for (&(dev, kind), &busy) in &on.busy_dev {
+        let slots = match kind {
+            OpKind::Kernel => machine.kernel_concurrency.max(1) as f64,
+            _ => 1.0,
+        };
+        assert!(
+            on.makespan >= busy / slots - 1e-9,
+            "({dev}, {kind:?}) busy {busy} vs makespan {}",
+            on.makespan
+        );
+    }
+    // Wire volume is identical either way — only the schedule moved.
+    for kind in [OpKind::HtoD, OpKind::DtoH] {
+        assert_eq!(on.bytes_of(kind), off.bytes_of(kind), "{kind:?}");
+    }
+}
+
+/// The simulator rejects a degenerate machine with a typed error (never
+/// a panic), end to end through the public API.
+#[test]
+fn degenerate_machine_spec_yields_typed_error_end_to_end() {
+    let ops = flatten_paper(Scheme::So2dr, 8, 1, 40, 4, 80);
+    let mut broken = MachineSpec::rtx3080();
+    broken.bw_htod = 0.0;
+    let err = simulate(&ops, &CostModel::new(broken), N_STRM)
+        .expect_err("zero bandwidth must be rejected");
+    assert_eq!(err.field, "bw_htod");
+    assert!(err.to_string().contains("bw_htod"), "{err}");
 }
 
 #[test]

@@ -175,7 +175,8 @@ fn prop_des_makespan_bounds() {
             let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
             let ops = flatten_run(&plans, &dc, kind, 3, buf_rows);
             let n_ops = ops.len();
-            let rep = simulate(&ops, &CostModel::new(MachineSpec::rtx3080()), 3);
+            let rep = simulate(&ops, &CostModel::new(MachineSpec::rtx3080()), 3)
+                .map_err(|e| e.to_string())?;
             let total_ops: usize = rep.op_counts.values().sum();
             if total_ops != n_ops {
                 return Err(format!("{}: {total_ops}/{n_ops} ops completed", scheme.name()));
