@@ -6,16 +6,26 @@
 //!  - stencil engines: naive vs optimized (separable + threads), per kind;
 //!  - region-sharing copies (extract/insert rows);
 //!  - end-to-end real-numerics runs per scheme (host backend);
+//!  - parallel executor: threads 1/2/4 over 4 simulated devices;
+//!  - transfer codec hot loops (byte-plane compress/decompress);
 //!  - DES throughput (ops/s priced and scheduled);
 //!  - PJRT chunk-program execution (when artifacts are present).
+//!
+//! Set `SO2DR_BENCH_QUICK=1` for the CI smoke mode: bounded measurement
+//! budgets and the benchmark set trimmed to box2d1r, so the harness
+//! proves it still builds and runs without burning runner minutes. Quick
+//! numbers are smoke output, not the perf record.
 
-use so2dr::chunking::Scheme;
-use so2dr::coordinator::{run_scheme, HostBackend, KernelBackend, RegionShareBuffer};
+use so2dr::chunking::{ResidencyConfig, Scheme};
+use so2dr::coordinator::{
+    run_scheme, run_scheme_full_threads, HostBackend, KernelBackend, RegionShareBuffer,
+};
 use so2dr::gpu::cost::{CostModel, MachineSpec};
 use so2dr::gpu::des::simulate;
 use so2dr::gpu::flatten::flatten_run;
 use so2dr::runtime::PjrtBackend;
 use so2dr::stencil::{apply_step, NaiveEngine, OptimizedEngine, StencilEngine, StencilKind};
+use so2dr::transfer::{Codec, CodecKind, CompressMode};
 use so2dr::util::timer::measure;
 use so2dr::{Array2, Rect, RowSpan};
 
@@ -23,12 +33,36 @@ fn gflops(kind: StencilKind, elems: f64, secs: f64) -> f64 {
     elems * kind.flops_per_elem() / secs / 1e9
 }
 
+/// CI smoke mode: `SO2DR_BENCH_QUICK=1` caps every measurement budget.
+fn quick() -> bool {
+    std::env::var("SO2DR_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Measurement budget in seconds: the full budget normally, a bounded
+/// slice of it in quick mode.
+fn budget(full: f64) -> f64 {
+    if quick() {
+        full.min(0.05)
+    } else {
+        full
+    }
+}
+
+/// Benchmark kinds for the per-kind sweeps (trimmed in quick mode).
+fn bench_kinds() -> Vec<StencilKind> {
+    if quick() {
+        vec![StencilKind::Box { radius: 1 }]
+    } else {
+        StencilKind::paper_set()
+    }
+}
+
 fn bench_engines() {
     println!("\n=== engines: one full-interior step at 2048x2048 ===");
     let input = Array2::synthetic(2048, 2048, 1);
     let mut out = Array2::zeros(2048, 2048);
     let window = Rect::new(0, 2048, 0, 2048);
-    for kind in StencilKind::paper_set() {
+    for kind in bench_kinds() {
         let opt1 = OptimizedEngine::new(1);
         let optn = OptimizedEngine::default();
         for (name, engine) in [
@@ -36,7 +70,7 @@ fn bench_engines() {
             ("opt-1t", &opt1 as &dyn StencilEngine),
             ("opt-Nt", &optn as &dyn StencilEngine),
         ] {
-            let (iters, per) = measure(0.25, 2, || {
+            let (iters, per) = measure(budget(0.25), 2, || {
                 apply_step(engine, kind, &input, &mut out, window);
             });
             println!(
@@ -57,7 +91,7 @@ fn bench_rs_copies() {
     let mut rs = RegionShareBuffer::new();
     let span = RowSpan::new(64, 128);
     let rect = Rect::from_spans(span, 0, 4096);
-    let (iters, per) = measure(0.2, 10, || {
+    let (iters, per) = measure(budget(0.2), 10, || {
         rs.write(rect, 0, src.extract_rows(span));
         let _ = rs.read(rect, 0).unwrap();
     });
@@ -73,7 +107,7 @@ fn bench_schemes() {
     println!("\n=== end-to-end real numerics: 768x768, n=24, host-opt backend ===");
     let initial = Array2::synthetic(768, 768, 3);
     for (scheme, k_on) in [(Scheme::So2dr, 4), (Scheme::ResReu, 1), (Scheme::InCore, 4)] {
-        let (iters, per) = measure(0.3, 1, || {
+        let (iters, per) = measure(budget(0.3), 1, || {
             let mut backend = HostBackend::new(OptimizedEngine::default());
             let _ = run_scheme(
                 scheme,
@@ -97,6 +131,75 @@ fn bench_schemes() {
     }
 }
 
+fn bench_parallel_executor() {
+    // The PR 7 headline: the same end-to-end real-numerics run at 1/2/4
+    // worker threads over 4 simulated devices. NaiveEngine keeps the run
+    // kernel-dominated (the scaling ceiling), and single-threaded engine
+    // instances keep the device-level workers the only parallelism.
+    // `figures --fig bench_pr7` records the committed trajectory point;
+    // this group is the interactive view of the same curve.
+    let sz = if quick() { 512 } else { 1536 };
+    let n = if quick() { 8 } else { 24 };
+    println!("\n=== parallel executor: {sz}x{sz}, n={n}, d=4, 4 devices, host-naive ===");
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    println!("(host has {cores} cores; speedups need cores >= threads)");
+    let initial = Array2::synthetic(sz, sz, 3);
+    let mut per_1t = 0.0f64;
+    for threads in [1usize, 2, 4] {
+        let (iters, per) = measure(budget(0.3), 1, || {
+            let mut backend = HostBackend::new(NaiveEngine);
+            let _ = run_scheme_full_threads(
+                Scheme::So2dr,
+                &initial,
+                StencilKind::Box { radius: 1 },
+                n,
+                4,
+                4,
+                8,
+                2,
+                &mut backend,
+                &ResidencyConfig::off(),
+                CompressMode::Off,
+                threads,
+            )
+            .unwrap();
+        });
+        if threads == 1 {
+            per_1t = per;
+        }
+        println!(
+            "[threads={threads}] {iters:2} iters  {:8.1} ms  speedup {:5.2}x vs 1t",
+            per * 1e3,
+            per_1t / per.max(1e-12),
+        );
+    }
+}
+
+fn bench_codec() {
+    println!("\n=== transfer codec: 256x4096 smooth payload round trips ===");
+    let field = Array2::synthetic(256, 4096, 7);
+    let src = field.as_slice();
+    let raw = (src.len() * 4) as f64;
+    for kind in [CodecKind::Lossless, CodecKind::Bf16] {
+        let codec = kind.codec();
+        let wire = codec.compress(src);
+        let (c_iters, c_per) = measure(budget(0.2), 3, || {
+            let _ = codec.compress(src);
+        });
+        let (d_iters, d_per) = measure(budget(0.2), 3, || {
+            let _ = codec.decompress(&wire, src.len()).unwrap();
+        });
+        println!(
+            "[{:8}] ratio {:4.2}x  compress {c_iters:3} iters {:6.2} GB/s  \
+             decompress {d_iters:3} iters {:6.2} GB/s",
+            kind.name(),
+            raw / wire.len().max(1) as f64,
+            raw / c_per / 1e9,
+            raw / d_per / 1e9,
+        );
+    }
+}
+
 fn bench_des() {
     println!("\n=== DES throughput (paper-scale ResReu op graph) ===");
     let dc = so2dr::Decomposition::new(38400, 38400, 8, 1);
@@ -105,7 +208,7 @@ fn bench_des() {
         so2dr::coordinator::PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
     let ops = flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows);
     let cost = CostModel::new(MachineSpec::rtx3080());
-    let (iters, per) = measure(0.3, 2, || {
+    let (iters, per) = measure(budget(0.3), 2, || {
         let _ = simulate(&ops, &cost, 3);
     });
     println!(
@@ -126,7 +229,7 @@ fn bench_pjrt() {
     let mut cur = Array2::synthetic(144, 512, 4);
     let mut scratch = Array2::zeros(144, 512);
     let windows: Vec<Rect> = (0..4usize).map(|s| Rect::new(8 + s, 136 - s, 1, 511)).collect();
-    let (iters, per) = measure(0.5, 5, || {
+    let (iters, per) = measure(budget(0.5), 5, || {
         backend
             .run_kernel(StencilKind::Box { radius: 1 }, &mut cur, &mut scratch, &windows)
             .unwrap();
@@ -139,10 +242,15 @@ fn bench_pjrt() {
 }
 
 fn main() {
-    println!("hotpath_benches (real wall time on this CPU)");
+    println!(
+        "hotpath_benches (real wall time on this CPU{})",
+        if quick() { ", SO2DR_BENCH_QUICK smoke mode" } else { "" }
+    );
     bench_engines();
     bench_rs_copies();
     bench_schemes();
+    bench_parallel_executor();
+    bench_codec();
     bench_des();
     bench_pjrt();
     println!("\nhotpath_benches done.");

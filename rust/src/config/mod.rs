@@ -4,4 +4,4 @@
 pub mod run;
 pub mod toml_mini;
 
-pub use run::{validate_devices, RunConfig};
+pub use run::{clamp_threads, validate_devices, RunConfig, MAX_THREADS};

@@ -51,10 +51,33 @@ pub struct RunConfig {
     /// restores the legacy additive model (codec time priced on the
     /// channel, everything on the chunk's compute lane) for A/B pricing.
     pub overlap: bool,
+    /// Executor worker threads (`--threads`): parallelism *between*
+    /// simulated devices in the real-numerics executor, never inside a
+    /// kernel. `1` is the sequential reference; the default is
+    /// [`crate::util::threads::default_threads`]. Bit-exactness across
+    /// thread counts is a hard contract (determinism property suite).
+    pub threads: usize,
     /// Synthetic-field seed.
     pub seed: u64,
     /// Kernel backend: "host-naive", "host-opt" or "pjrt".
     pub backend: String,
+}
+
+/// Ceiling on the executor thread budget. Worker count is additionally
+/// capped by the simulated device count at run time, so anything above
+/// this is certainly a typo (e.g. `threads = 10000`); such values clamp
+/// here rather than spawning absurd worker pools.
+pub const MAX_THREADS: usize = 256;
+
+/// Normalize a requested executor thread count, shared by the TOML
+/// loader and the CLI flag so the two surfaces cannot drift: `0` is a
+/// typed error (there is no zero-thread executor; use 1 for
+/// sequential), values above [`MAX_THREADS`] clamp.
+pub fn clamp_threads(requested: usize) -> Result<usize> {
+    if requested == 0 {
+        bail!("threads must be positive (1 = sequential executor)");
+    }
+    Ok(requested.min(MAX_THREADS))
 }
 
 /// Structural device-count rules, shared by [`RunConfig::validate`] and
@@ -92,6 +115,7 @@ impl Default for RunConfig {
             resident: ResidentMode::Off,
             compress: CompressMode::Off,
             overlap: true,
+            threads: crate::util::threads::default_threads(),
             seed: 42,
             backend: "host-opt".into(),
         }
@@ -160,6 +184,7 @@ impl RunConfig {
                             other => bail!("bad overlap mode {other:?} (on|off)"),
                         };
                     }
+                    "threads" => cfg.threads = clamp_threads(s.usize_req("threads")?)?,
                     "seed" => cfg.seed = s.int_or("seed", 42) as u64,
                     "backend" => cfg.backend = s.str_or("backend", "host-opt"),
                     other => bail!("unknown key {other:?}"),
@@ -238,6 +263,9 @@ impl RunConfig {
                 bail!("d2d_gbps must be positive");
             }
         }
+        if self.threads == 0 {
+            bail!("threads must be positive (1 = sequential executor)");
+        }
         if self.scheme == Scheme::ResReu && self.k_on != 1 {
             bail!("ResReu structurally requires k_on = 1 (single-step kernels)");
         }
@@ -257,7 +285,7 @@ impl RunConfig {
         };
         format!(
             "{} {} {}x{} {} S_TB={} k_on={} n={} N_strm={} devices={} resident={} \
-             compress={} overlap={} backend={}",
+             compress={} overlap={} threads={} backend={}",
             self.scheme.name(),
             self.kind.name(),
             self.rows,
@@ -271,6 +299,7 @@ impl RunConfig {
             self.resident.name(),
             self.compress.name(),
             if self.overlap { "on" } else { "off" },
+            self.threads,
             self.backend
         )
     }
@@ -382,6 +411,50 @@ mod tests {
         assert!(RunConfig::default().summary().contains("overlap=on"));
     }
 
+    /// Accept/reject table for the `threads` key, plus the
+    /// TOML-vs-CLI agreement contract: both surfaces normalize through
+    /// [`clamp_threads`], so 0 fails with the same typed error and
+    /// absurd values clamp to the same ceiling.
+    #[test]
+    fn threads_key_accept_reject_table() {
+        assert_eq!(
+            RunConfig::default().threads,
+            crate::util::threads::default_threads(),
+            "default must track the host parallelism probe"
+        );
+        // Accepted values parse to the clamped count.
+        for (text, want) in [
+            ("threads = 1\n", 1usize),
+            ("threads = 2\n", 2),
+            ("threads = 4\n", 4),
+            ("threads = 256\n", 256),
+            // Absurd values clamp instead of spawning absurd pools.
+            ("threads = 257\n", MAX_THREADS),
+            ("threads = 100000\n", MAX_THREADS),
+        ] {
+            assert_eq!(RunConfig::from_toml(text).unwrap().threads, want, "{text:?}");
+        }
+        // Rejected spellings fail loudly with a typed error.
+        for text in ["threads = 0\n", "threads = -2\n", "threads = \"all\"\n"] {
+            let err = RunConfig::from_toml(text).expect_err(text);
+            assert!(err.to_string().contains("threads"), "{text:?}: {err}");
+        }
+        // The CLI normalizes through the same function, so the two
+        // surfaces agree by construction.
+        assert_eq!(clamp_threads(100000).unwrap(), MAX_THREADS);
+        assert_eq!(
+            clamp_threads(100000).unwrap(),
+            RunConfig::from_toml("threads = 100000\n").unwrap().threads
+        );
+        let cli_err = clamp_threads(0).unwrap_err().to_string();
+        let toml_err = RunConfig::from_toml("threads = 0\n").unwrap_err().to_string();
+        assert!(toml_err.contains(&cli_err), "TOML {toml_err:?} vs CLI {cli_err:?}");
+        // Programmatic construction hits the same validate() check.
+        let cfg = RunConfig { threads: 0, ..RunConfig::default() };
+        assert!(cfg.validate().is_err());
+        assert!(RunConfig::default().summary().contains("threads="));
+    }
+
     /// Table-driven accept/reject coverage of the TOML surface: every
     /// key with a representative good value, plus the malformed spellings
     /// that must fail loudly (unknown keys, wrong types, bad enum
@@ -404,6 +477,11 @@ mod tests {
             ("overlap = \"on\"\n", true),
             ("overlap = 1\n", false),
             ("overlap = \"maybe\"\n", false),
+            ("threads = 1\n", true),
+            ("threads = 4\n", true),
+            ("threads = 100000\n", true), // clamped, not rejected
+            ("threads = 0\n", false),
+            ("threads = \"all\"\n", false),
             ("decomp = \"rows\"\n", true),
             ("decomp = \"tiles\"\nchunks_x = 2\nchunks_y = 2\n", true),
             ("decomp = \"tiles\"\nchunks_x = 4\nchunks_y = 1\ndevices = 2\n", true),

@@ -24,6 +24,17 @@ pub trait KernelBackend {
 
     /// Human-readable backend name for reports.
     fn name(&self) -> String;
+
+    /// Clone this backend for a parallel executor worker, if the
+    /// backend supports concurrent instances. A fork must compute
+    /// kernels bit-identically to `self` — the parallel executor's
+    /// correctness contract leans on it. The default (`None`) opts out:
+    /// the executor then falls back to sequential execution, which is
+    /// the right call for backends holding unshareable state (e.g. a
+    /// live PJRT client).
+    fn try_fork(&self) -> Option<Box<dyn KernelBackend + Send>> {
+        None
+    }
 }
 
 /// Host backend: runs kernels with a host [`StencilEngine`]. With the
@@ -43,7 +54,7 @@ impl<E: StencilEngine> HostBackend<E> {
     }
 }
 
-impl<E: StencilEngine> KernelBackend for HostBackend<E> {
+impl<E: StencilEngine + Clone + Send + 'static> KernelBackend for HostBackend<E> {
     fn run_kernel(
         &mut self,
         kind: StencilKind,
@@ -57,6 +68,13 @@ impl<E: StencilEngine> KernelBackend for HostBackend<E> {
 
     fn name(&self) -> String {
         format!("host/{}", self.engine.name())
+    }
+
+    /// Host engines are pure functions over their inputs (the naive
+    /// engine is stateless; the optimized engine carries only its
+    /// thread budget), so a clone computes bit-identical kernels.
+    fn try_fork(&self) -> Option<Box<dyn KernelBackend + Send>> {
+        Some(Box::new(HostBackend::new(self.engine.clone())))
     }
 }
 
@@ -81,5 +99,20 @@ mod tests {
         be.run_kernel(kind, &mut cur, &mut scratch, &vec![Rect::new(1, 15, 1, 15); 3]).unwrap();
         assert!(cur.bit_eq(&expect));
         assert_eq!(be.name(), "host/naive");
+    }
+
+    #[test]
+    fn host_backend_fork_is_bit_exact() {
+        let kind = StencilKind::Box { radius: 1 };
+        let be = HostBackend::new(NaiveEngine);
+        let mut fork = be.try_fork().expect("host backends fork");
+        assert_eq!(fork.name(), "host/naive");
+        let mut a = Array2::synthetic(16, 16, 3);
+        let mut b = a.clone();
+        let (mut s1, mut s2) = (Array2::zeros(16, 16), Array2::zeros(16, 16));
+        let w = vec![Rect::new(1, 15, 1, 15); 2];
+        HostBackend::new(NaiveEngine).run_kernel(kind, &mut a, &mut s1, &w).unwrap();
+        fork.run_kernel(kind, &mut b, &mut s2, &w).unwrap();
+        assert!(a.bit_eq(&b));
     }
 }

@@ -102,6 +102,30 @@ pub fn run_scheme_full(
     resident: &ResidencyConfig,
     compress: CompressMode,
 ) -> Result<RunOutcome> {
+    run_scheme_full_threads(
+        scheme, initial, kind, n, d, n_devices, s_tb, k_on, backend, resident, compress, 1,
+    )
+}
+
+/// [`run_scheme_full`] with an executor thread budget. `threads > 1`
+/// spawns one worker per simulated-device range (see
+/// [`PlanExecutor::set_threads`]); results are bit-identical to
+/// `threads == 1` — the determinism property suite enforces it.
+#[allow(clippy::too_many_arguments)]
+pub fn run_scheme_full_threads(
+    scheme: Scheme,
+    initial: &Array2,
+    kind: StencilKind,
+    n: usize,
+    d: usize,
+    n_devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    backend: &mut dyn KernelBackend,
+    resident: &ResidencyConfig,
+    compress: CompressMode,
+    threads: usize,
+) -> Result<RunOutcome> {
     crate::config::validate_devices(scheme, d, n_devices)?;
     let dc = Decomposition::try_new(initial.rows(), initial.cols(), d, kind.radius())?;
     let devs = if scheme == Scheme::InCore {
@@ -113,6 +137,7 @@ pub fn run_scheme_full(
     apply_codec_policy(&mut plans, compress);
     let mut grid = initial.clone();
     let mut exec = PlanExecutor::new(backend, kind);
+    exec.set_threads(threads);
     exec.run(&mut grid, &dc, &plans)?;
     let stats = exec.stats.clone();
     Ok(RunOutcome { grid, stats, residency: Some(summary) })
@@ -155,6 +180,30 @@ pub fn run_scheme_tiles(
     resident: &ResidencyConfig,
     compress: CompressMode,
 ) -> Result<RunOutcome> {
+    run_scheme_tiles_threads(
+        scheme, initial, kind, n, chunks_y, chunks_x, n_devices, s_tb, k_on, backend, resident,
+        compress, 1,
+    )
+}
+
+/// [`run_scheme_tiles`] with an executor thread budget; same
+/// bit-exactness contract as [`run_scheme_full_threads`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_scheme_tiles_threads(
+    scheme: Scheme,
+    initial: &Array2,
+    kind: StencilKind,
+    n: usize,
+    chunks_y: usize,
+    chunks_x: usize,
+    n_devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    backend: &mut dyn KernelBackend,
+    resident: &ResidencyConfig,
+    compress: CompressMode,
+    threads: usize,
+) -> Result<RunOutcome> {
     let dc =
         Decomposition2d::try_new(initial.rows(), initial.cols(), chunks_y, chunks_x, kind.radius())?;
     crate::config::validate_devices(scheme, dc.n_tiles(), n_devices)?;
@@ -164,6 +213,7 @@ pub fn run_scheme_tiles(
     apply_codec_policy(&mut plans, compress);
     let mut grid = initial.clone();
     let mut exec = PlanExecutor::new(backend, kind);
+    exec.set_threads(threads);
     exec.run_tiles(&mut grid, &dc, &plans)?;
     let stats = exec.stats.clone();
     Ok(RunOutcome { grid, stats, residency: Some(summary) })
@@ -815,6 +865,70 @@ mod tests {
         assert!(out.stats.codec_ops > 0, "codec must engage");
         assert_eq!(out.stats.htod_bytes, (120 * 120 * 4) as u64, "first touch only");
         assert!(out.stats.htod_wire_bytes < out.stats.htod_bytes);
+    }
+
+    #[test]
+    fn threaded_executor_matches_sequential_bit_exactly() {
+        // Deterministic smoke for the parallel executor; the randomized
+        // sweep lives in tests/prop_schemes.rs. Covers staged + resident
+        // row bands and resident tiles, identity + lossless codecs.
+        use crate::transfer::CompressMode;
+        let kind = StencilKind::Box { radius: 1 };
+        let initial = Array2::synthetic(160, 96, 23);
+        for compress in [CompressMode::Off, CompressMode::Lossless] {
+            for resident in [ResidencyConfig::off(), ResidencyConfig::force(3)] {
+                let mut seq_backend = HostBackend::new(NaiveEngine);
+                let seq = run_scheme_full_threads(
+                    Scheme::So2dr, &initial, kind, 12, 4, 4, 6, 3, &mut seq_backend,
+                    &resident, compress, 1,
+                )
+                .unwrap();
+                for threads in [2usize, 4] {
+                    let mut backend = HostBackend::new(NaiveEngine);
+                    let par = run_scheme_full_threads(
+                        Scheme::So2dr, &initial, kind, 12, 4, 4, 6, 3, &mut backend,
+                        &resident, compress, threads,
+                    )
+                    .unwrap();
+                    assert!(
+                        par.grid.bit_eq(&seq.grid),
+                        "threads={threads} {:?} {:?} diverged: {}",
+                        resident.mode,
+                        compress,
+                        par.grid.max_abs_diff(&seq.grid)
+                    );
+                    assert!(par.stats.workers > 1, "parallel path must engage");
+                    assert_eq!(par.stats.htod_bytes, seq.stats.htod_bytes);
+                    assert_eq!(par.stats.dtoh_bytes, seq.stats.dtoh_bytes);
+                    assert_eq!(par.stats.htod_wire_bytes, seq.stats.htod_wire_bytes);
+                    assert_eq!(par.stats.dtoh_wire_bytes, seq.stats.dtoh_wire_bytes);
+                    assert_eq!(par.stats.rs_reads, seq.stats.rs_reads);
+                    assert_eq!(par.stats.rs_writes, seq.stats.rs_writes);
+                    assert_eq!(par.stats.p2p_bytes, seq.stats.p2p_bytes);
+                    assert_eq!(par.stats.computed_elems, seq.stats.computed_elems);
+                    assert_eq!(par.stats.resident_hits, seq.stats.resident_hits);
+                    assert_eq!(par.stats.spills, seq.stats.spills);
+                    assert_eq!(par.stats.arena_peak_bytes, seq.stats.arena_peak_bytes);
+                }
+            }
+        }
+        // Tiles: 2x2 over 4 devices, resident with fetch-heavy halos.
+        let mut seq_backend = HostBackend::new(NaiveEngine);
+        let seq = run_scheme_tiles_threads(
+            Scheme::So2dr, &initial, kind, 12, 2, 2, 4, 4, 2, &mut seq_backend,
+            &ResidencyConfig::force(3), CompressMode::Off, 1,
+        )
+        .unwrap();
+        let mut backend = HostBackend::new(NaiveEngine);
+        let par = run_scheme_tiles_threads(
+            Scheme::So2dr, &initial, kind, 12, 2, 2, 4, 4, 2, &mut backend,
+            &ResidencyConfig::force(3), CompressMode::Off, 4,
+        )
+        .unwrap();
+        assert!(par.grid.bit_eq(&seq.grid), "tiles diverged");
+        assert!(par.stats.workers > 1, "tile workers must engage");
+        assert_eq!(par.stats.fetch_bytes, seq.stats.fetch_bytes);
+        assert_eq!(par.stats.p2p_bytes, seq.stats.p2p_bytes);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! trapezoid clamping, skewed windows, epoch residuals, multi-device
 //! sharding, the resident execution model and the 2-D tile decomposition.
 //!
-//! One op interpreter (the private `exec_ops`) serves every execution
+//! One op interpreter (the private [`OpInterp`]) serves every execution
 //! model; only the arena lookup and addressing differ: staged row-band
 //! epochs run on one full-width double buffer per device, resident runs
 //! on one persistent arena per chunk, and tile runs
@@ -36,6 +36,46 @@
 //! only and can never perturb numerics — the randomized differential
 //! suite (`prop_schemes.rs`) pins this bit-exactly against
 //! `reference_run`.
+//!
+//! # Parallel execution contract
+//!
+//! [`PlanExecutor::set_threads`] with `threads > 1` runs one worker per
+//! contiguous device range (resident plans: per contiguous chunk range)
+//! on scoped threads, each driving the *same* op interpreter over its
+//! own slice of the arenas with its own forked kernel backend
+//! ([`KernelBackend::try_fork`]). Parallelism is between independent
+//! chunks, never inside a kernel, and every synchronization point is one
+//! the plan already makes explicit:
+//!
+//! - **Host grid.** Each epoch takes a snapshot of the host grid; all
+//!   `HtoD` reads are served from it. This is bit-identical to the
+//!   sequential order because within one epoch a `HtoD` only ever reads
+//!   epoch-start data (staged skirts come from region sharing, not from
+//!   another chunk's same-epoch `DtoH`; resident arrivals all precede
+//!   the first eviction in pass order). `DtoH`/`Evict` writes land in a
+//!   mutex-held live grid; distinct chunks write disjoint rects, so the
+//!   final grid is order-independent. Codec round trips always run
+//!   *outside* the grid lock.
+//! - **Region sharing.** All per-device sharing buffers live behind one
+//!   blocking hub ([`RsHub`]): a consumer (`RsRead`/`Fetch`/`D2D`
+//!   source) that arrives before its producer parks on a condvar until
+//!   the region is published. Because every dependency points backward
+//!   in the executor's emission order and each worker walks its chunks
+//!   in that order, waits always terminate for well-formed plans; a
+//!   plan bug where *all* live workers end up waiting is detected and
+//!   reported as an error instead of hanging.
+//! - **Pass boundaries.** Resident workers walk
+//!   [`resident_pass_sequences`] pass-major over their own chunks with
+//!   no global barrier — cross-worker pass ordering is enforced by the
+//!   blocking region-share reads alone, which is exactly the dependency
+//!   structure the PR 6 edge graph records.
+//!
+//! The NaiveEngine-oracle invariant is untouched: a fork of the backend
+//! computes bit-identical kernels, arenas are worker-exclusive, and all
+//! logical [`ExecStats`] counters are order-independent sums, so
+//! `threads = N` is bit-exact against `threads = 1` — pinned by the
+//! determinism property in `prop_schemes.rs`. Backends that cannot fork
+//! (e.g. a live PJRT client) simply fall back to sequential execution.
 
 use crate::chunking::plan::{
     resident_pass_sequences, ChunkEpochPlan, ChunkOp, EpochPlan, Scheme,
@@ -45,13 +85,21 @@ use crate::coordinator::backend::KernelBackend;
 use crate::coordinator::rs_buffer::RegionShareBuffer;
 use crate::core::{Array2, Rect, RowSpan};
 use crate::transfer::codec::CodecKind;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Instant;
 
 /// Byte/operation counters accumulated over a run. These are *logical*
 /// quantities (what a GPU would transfer/compute); the DES prices them.
 /// The `*_wire_bytes` counters are what actually crosses the channel
 /// after the transfer codec (equal to the raw counters when every op
 /// carries the identity codec).
+///
+/// The `*_s` fields are *measured wall seconds* (per-phase busy time,
+/// summed over workers when the executor runs threaded) — the only
+/// fields that are not bit-reproducible across runs. Every logical
+/// counter is an order-independent sum, so a threaded run reports the
+/// same counters as a sequential one.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ExecStats {
     pub epochs: usize,
@@ -101,6 +149,18 @@ pub struct ExecStats {
     /// Measured wall seconds spent compressing / decompressing.
     pub codec_compress_s: f64,
     pub codec_decompress_s: f64,
+    /// Measured wall seconds inside kernel launches (summed over workers).
+    pub kernel_s: f64,
+    /// Measured wall seconds in host transfers (HtoD/DtoH/Evict),
+    /// including their codec round trips.
+    pub transfer_s: f64,
+    /// Measured wall seconds in halo traffic (RS reads/writes, fetches,
+    /// D2D hops), including blocking waits on a not-yet-published region.
+    pub halo_s: f64,
+    /// Executor workers actually used (1 for a sequential run). A
+    /// threaded run that fell back to sequential reports 1 — the
+    /// determinism property uses this as its non-vacuity witness.
+    pub workers: u64,
 }
 
 impl ExecStats {
@@ -123,11 +183,67 @@ impl ExecStats {
     pub fn transfer_wire_bytes(&self) -> u64 {
         self.htod_wire_bytes + self.dtoh_wire_bytes + self.p2p_wire_bytes
     }
+
+    /// Fold a worker's counters into this (coordinator-side) record:
+    /// sums for all additive counters and timings, max for the peaks
+    /// and the worker count. Worker records never own `epochs` or the
+    /// region-share aggregates (the coordinator accounts those), so
+    /// summing them is a no-op there.
+    pub fn absorb(&mut self, o: &ExecStats) {
+        self.epochs += o.epochs;
+        self.htod_bytes += o.htod_bytes;
+        self.dtoh_bytes += o.dtoh_bytes;
+        self.od_bytes += o.od_bytes;
+        self.rs_reads += o.rs_reads;
+        self.rs_writes += o.rs_writes;
+        self.kernel_invocations += o.kernel_invocations;
+        self.fused_steps += o.fused_steps;
+        self.p2p_bytes += o.p2p_bytes;
+        self.p2p_copies += o.p2p_copies;
+        self.computed_elems += o.computed_elems;
+        self.rs_peak_bytes = self.rs_peak_bytes.max(o.rs_peak_bytes);
+        self.arena_peak_bytes = self.arena_peak_bytes.max(o.arena_peak_bytes);
+        self.fetch_bytes += o.fetch_bytes;
+        self.fetch_reads += o.fetch_reads;
+        self.spills += o.spills;
+        self.spill_bytes += o.spill_bytes;
+        self.resident_hits += o.resident_hits;
+        self.htod_wire_bytes += o.htod_wire_bytes;
+        self.dtoh_wire_bytes += o.dtoh_wire_bytes;
+        self.p2p_wire_bytes += o.p2p_wire_bytes;
+        self.codec_ops += o.codec_ops;
+        self.codec_raw_bytes += o.codec_raw_bytes;
+        self.codec_compress_s += o.codec_compress_s;
+        self.codec_decompress_s += o.codec_decompress_s;
+        self.kernel_s += o.kernel_s;
+        self.transfer_s += o.transfer_s;
+        self.halo_s += o.halo_s;
+        self.workers = self.workers.max(o.workers);
+    }
+}
+
+/// Translate a global rect into buffer-local coordinates under a 2-D
+/// base, verifying it fits the `(buf_rows, buf_cols)` arena.
+fn to_local(rect: Rect, base: (i64, i64), dims: (usize, usize)) -> Result<Rect> {
+    let r0 = rect.r0 as i64 - base.0;
+    let r1 = rect.r1 as i64 - base.0;
+    let c0 = rect.c0 as i64 - base.1;
+    let c1 = rect.c1 as i64 - base.1;
+    if r0 < 0 || r1 > dims.0 as i64 || c0 < 0 || c1 > dims.1 as i64 {
+        bail!(
+            "rect {rect} maps outside buffer (base {:?}, dims {:?})",
+            base,
+            dims
+        );
+    }
+    Ok(Rect::new(r0 as usize, r1 as usize, c0 as usize, c1 as usize))
 }
 
 /// Arena storage behind the unified op interpreter — the only thing the
 /// execution models disagree on is where a chunk's `(cur, scratch)`
-/// pair lives and how long it stays alive.
+/// pair lives and how long it stays alive. This is the *owning* store
+/// the sequential paths use; workers borrow disjoint sub-slices of the
+/// same layouts through [`ArenaView`].
 enum ArenaStore {
     /// Staged epochs: one double buffer per *device*, reused across
     /// chunks and epochs (full-width for row bands, tile-shaped for the
@@ -141,12 +257,59 @@ enum ArenaStore {
 }
 
 impl ArenaStore {
+    /// Borrow the whole store as a view (the sequential executor is a
+    /// one-worker partition covering every device/chunk).
+    fn view(&mut self) -> ArenaView<'_> {
+        match self {
+            ArenaStore::Staged(bufs) => ArenaView::Staged { bufs, dev_lo: 0 },
+            ArenaStore::Resident(arenas) => ArenaView::Resident { arenas, chunk_lo: 0 },
+        }
+    }
+
     /// The live `(cur, scratch)` pair of `cp` — an error when a resident
-    /// chunk's arena is dead (plan bug).
+    /// chunk's arena is dead (plan bug). Kept on the owning store for
+    /// the in-core whole-grid wrap, which runs outside any view borrow.
     fn pair(&mut self, cp: &ChunkEpochPlan) -> Result<&mut (Array2, Array2)> {
         match self {
             ArenaStore::Staged(bufs) => Ok(&mut bufs[cp.device]),
             ArenaStore::Resident(arenas) => arenas[cp.chunk]
+                .as_mut()
+                .with_context(|| format!("chunk {} arena is not live", cp.chunk)),
+        }
+    }
+
+    /// Live arena count (resident accounting).
+    fn live_arenas(&self) -> usize {
+        match self {
+            ArenaStore::Staged(bufs) => bufs.len(),
+            ArenaStore::Resident(arenas) => arenas.iter().filter(|a| a.is_some()).count(),
+        }
+    }
+}
+
+/// A worker's window onto the arena storage: a disjoint sub-slice of
+/// the per-device buffers (staged) or per-chunk arenas (resident),
+/// index-shifted by the slice origin. Workers touch only their own
+/// slice, which is what makes the parallel executor safe without any
+/// locking on arena data.
+enum ArenaView<'v> {
+    Staged {
+        bufs: &'v mut [(Array2, Array2)],
+        dev_lo: usize,
+    },
+    Resident {
+        arenas: &'v mut [Option<(Array2, Array2)>],
+        chunk_lo: usize,
+    },
+}
+
+impl ArenaView<'_> {
+    /// The live `(cur, scratch)` pair of `cp` — an error when a resident
+    /// chunk's arena is dead (plan bug).
+    fn pair(&mut self, cp: &ChunkEpochPlan) -> Result<&mut (Array2, Array2)> {
+        match self {
+            ArenaView::Staged { bufs, dev_lo } => Ok(&mut bufs[cp.device - *dev_lo]),
+            ArenaView::Resident { arenas, chunk_lo } => arenas[cp.chunk - *chunk_lo]
                 .as_mut()
                 .with_context(|| format!("chunk {} arena is not live", cp.chunk)),
         }
@@ -161,47 +324,551 @@ impl ArenaStore {
         buf_cols: usize,
     ) -> &mut (Array2, Array2) {
         match self {
-            ArenaStore::Staged(bufs) => &mut bufs[cp.device],
-            ArenaStore::Resident(arenas) => arenas[cp.chunk].get_or_insert_with(|| {
-                (Array2::zeros(buf_rows, buf_cols), Array2::zeros(buf_rows, buf_cols))
-            }),
+            ArenaView::Staged { bufs, dev_lo } => &mut bufs[cp.device - *dev_lo],
+            ArenaView::Resident { arenas, chunk_lo } => {
+                arenas[cp.chunk - *chunk_lo].get_or_insert_with(|| {
+                    (Array2::zeros(buf_rows, buf_cols), Array2::zeros(buf_rows, buf_cols))
+                })
+            }
         }
     }
 
     fn is_live(&self, chunk: usize) -> bool {
         match self {
-            ArenaStore::Staged(_) => true,
-            ArenaStore::Resident(arenas) => arenas[chunk].is_some(),
+            ArenaView::Staged { .. } => true,
+            ArenaView::Resident { arenas, chunk_lo } => arenas[chunk - *chunk_lo].is_some(),
         }
     }
 
     /// Drop a chunk's arena (resident eviction; no-op for staged buffers,
     /// which outlive every chunk by design).
     fn release(&mut self, chunk: usize) {
-        if let ArenaStore::Resident(arenas) = self {
-            arenas[chunk] = None;
+        if let ArenaView::Resident { arenas, chunk_lo } = self {
+            arenas[chunk - *chunk_lo] = None;
         }
     }
 
-    /// Live arena count (resident accounting).
+    /// Live arena count within this view (resident accounting; workers
+    /// report their own slice, the coordinator sums).
     fn live_arenas(&self) -> usize {
         match self {
-            ArenaStore::Staged(bufs) => bufs.len(),
-            ArenaStore::Resident(arenas) => arenas.iter().filter(|a| a.is_some()).count(),
+            ArenaView::Staged { bufs, .. } => bufs.len(),
+            ArenaView::Resident { arenas, .. } => {
+                arenas.iter().filter(|a| a.is_some()).count()
+            }
         }
     }
+}
+
+/// Shared state of the blocking region-share hub: the per-device
+/// sharing buffers plus the worker bookkeeping the deadlock detector
+/// needs (`alive` workers this epoch, how many are `waiting`, and the
+/// poisoned-epoch flag once a deadlock or worker loss is detected).
+struct HubState {
+    bufs: Vec<RegionShareBuffer>,
+    alive: usize,
+    waiting: usize,
+    dead: bool,
+}
+
+/// The parallel executor's region-sharing fabric: every per-device
+/// [`RegionShareBuffer`] behind one mutex, with a condvar so a consumer
+/// can park until its producer publishes. All cross-worker ordering in
+/// a parallel run flows through here — there are no other barriers.
+///
+/// Liveness: if every live worker ends up parked at once, no publish
+/// can ever come, so the hub marks the epoch dead and every waiter
+/// bails with an error instead of hanging (this only happens for
+/// malformed plans — see the module docs). A worker that exits early
+/// (error or panic) departs via [`AliveGuard`], which re-runs the same
+/// check so its peers cannot wait on publishes that will never happen.
+struct RsHub {
+    state: Mutex<HubState>,
+    cv: Condvar,
+}
+
+impl RsHub {
+    fn new(n_devices: usize) -> Self {
+        RsHub {
+            state: Mutex::new(HubState {
+                bufs: (0..n_devices).map(|_| RegionShareBuffer::new()).collect(),
+                alive: 0,
+                waiting: 0,
+                dead: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Lock the hub, recovering from a poisoned mutex (a worker panic
+    /// mid-publish): the buffers only ever hold fully-inserted regions,
+    /// and the run is already failing, so the state stays usable for
+    /// the shutdown path.
+    fn lock(&self) -> MutexGuard<'_, HubState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn begin_epoch(&self, workers: usize) {
+        let mut st = self.lock();
+        st.alive = workers;
+        st.waiting = 0;
+        st.dead = false;
+    }
+
+    /// Epoch boundary: drop published regions, keep cumulative counters
+    /// (mirrors the sequential `RegionShareBuffer::clear` loop).
+    fn end_epoch(&self) {
+        let mut st = self.lock();
+        for b in st.bufs.iter_mut() {
+            b.clear();
+        }
+    }
+
+    fn write(&self, dev: usize, rect: Rect, t: usize, data: Array2) {
+        let mut st = self.lock();
+        st.bufs[dev].write(rect, t, data);
+        self.cv.notify_all();
+    }
+
+    fn receive(&self, dev: usize, rect: Rect, t: usize, data: Array2) {
+        let mut st = self.lock();
+        st.bufs[dev].receive(rect, t, data);
+        self.cv.notify_all();
+    }
+
+    /// Block until `(rect, t)` is published on `dev`, then return a
+    /// copy. `count_read` selects consumer semantics (the counted
+    /// `read`, used by `RsRead`/`Fetch`) vs source semantics (the
+    /// uncounted `peek`, used by the `D2D` source side) so the hub's
+    /// counters match a sequential run exactly.
+    fn blocking_get(&self, dev: usize, rect: Rect, t: usize, count_read: bool) -> Result<Array2> {
+        let mut st = self.lock();
+        loop {
+            if st.dead {
+                bail!("region-share wait aborted (a peer worker failed)");
+            }
+            if st.bufs[dev].peek(rect, t).is_some() {
+                let data = if count_read {
+                    st.bufs[dev].read(rect, t)
+                } else {
+                    st.bufs[dev].peek(rect, t)
+                };
+                return Ok(data.expect("published region vanished under the hub lock").clone());
+            }
+            st.waiting += 1;
+            if st.waiting >= st.alive {
+                // Every live worker is parked: nobody is left to
+                // publish, so this wait can never be satisfied.
+                st.dead = true;
+                st.waiting -= 1;
+                self.cv.notify_all();
+                bail!(
+                    "region-share deadlock: region {rect} @t{t} never published on device {dev}"
+                );
+            }
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+            st.waiting -= 1;
+        }
+    }
+
+    /// A worker is gone for this epoch (finished, errored, or
+    /// panicked). If everyone still alive is parked, they are waiting
+    /// on publishes that can no longer happen — poison the epoch.
+    fn depart(&self) {
+        let mut st = self.lock();
+        st.alive = st.alive.saturating_sub(1);
+        if st.alive > 0 && st.waiting >= st.alive {
+            st.dead = true;
+        }
+        self.cv.notify_all();
+    }
+
+    fn into_bufs(self) -> Vec<RegionShareBuffer> {
+        self.state.into_inner().unwrap_or_else(|p| p.into_inner()).bufs
+    }
+}
+
+/// Departs the hub on drop, so a worker that unwinds (panic or `?`)
+/// can never strand its parked peers.
+struct AliveGuard<'h>(&'h RsHub);
+
+impl Drop for AliveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.depart();
+    }
+}
+
+/// Lock a poison-tolerant grid guard: by the time a panic poisons the
+/// mutex the run is already failing, and rect writes are atomic under
+/// the lock, so the grid content stays well-defined for the restore.
+fn lock_grid(grid: &Mutex<Array2>) -> MutexGuard<'_, Array2> {
+    grid.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// The host-side world an op interpreter runs against. Sequential
+/// execution owns the grid and the sharing buffers directly; parallel
+/// workers read HtoD data from the per-epoch snapshot, funnel
+/// DtoH/Evict writes through the mutex-held live grid, and do all
+/// region sharing through the blocking hub.
+enum HostSide<'e> {
+    Seq {
+        grid: &'e mut Array2,
+        rs: &'e mut [RegionShareBuffer],
+    },
+    Par {
+        snap: &'e Array2,
+        grid: &'e Mutex<Array2>,
+        hub: &'e RsHub,
+    },
+}
+
+impl HostSide<'_> {
+    /// Identity HtoD: copy `src_rect` of the host grid straight into
+    /// the arena (no staging copy). Parallel workers read the
+    /// epoch-start snapshot — bit-identical to the sequential read, see
+    /// the module docs. `nthreads > 1` fans large copies out over row
+    /// bands (same bytes, same result).
+    fn copy_in(&self, src_rect: Rect, dst: &mut Array2, dst_local: Rect, nthreads: usize) {
+        match self {
+            HostSide::Seq { grid, .. } => {
+                dst.copy_rect_from_par(dst_local, grid, src_rect, nthreads)
+            }
+            HostSide::Par { snap, .. } => {
+                dst.copy_rect_from_par(dst_local, snap, src_rect, nthreads)
+            }
+        }
+    }
+
+    /// Gather `rect` of the host grid into a contiguous staging buffer
+    /// (the codec HtoD path).
+    fn read_rect(&self, rect: Rect, nthreads: usize) -> Array2 {
+        match self {
+            HostSide::Seq { grid, .. } => grid.extract_rect_par(rect, nthreads),
+            HostSide::Par { snap, .. } => snap.extract_rect_par(rect, nthreads),
+        }
+    }
+
+    /// Identity DtoH/Evict: copy the arena rect straight into the grid.
+    fn copy_out(&mut self, src: &Array2, src_local: Rect, dst_rect: Rect, nthreads: usize) {
+        match self {
+            HostSide::Seq { grid, .. } => {
+                grid.copy_rect_from_par(dst_rect, src, src_local, nthreads)
+            }
+            HostSide::Par { grid, .. } => {
+                lock_grid(grid).copy_rect_from_par(dst_rect, src, src_local, nthreads)
+            }
+        }
+    }
+
+    /// Scatter decoded cells into the grid (the codec DtoH/Evict path;
+    /// the round trip itself already happened outside the lock).
+    fn write_rect(&mut self, rect: Rect, data: &Array2, nthreads: usize) {
+        match self {
+            HostSide::Seq { grid, .. } => grid.insert_rect_par(rect, data, nthreads),
+            HostSide::Par { grid, .. } => lock_grid(grid).insert_rect_par(rect, data, nthreads),
+        }
+    }
+
+    /// A counted region-share read (`RsRead`/`Fetch` consumer
+    /// semantics). Parallel workers block until the producer publishes.
+    fn rs_read(&mut self, dev: usize, rect: Rect, t: usize) -> Result<Array2> {
+        match self {
+            HostSide::Seq { rs, .. } => rs[dev]
+                .read(rect, t)
+                .cloned()
+                .with_context(|| format!("region {rect} @t{t} not in the sharing buffer")),
+            HostSide::Par { hub, .. } => hub.blocking_get(dev, rect, t, true),
+        }
+    }
+
+    /// An uncounted source-side lookup (`D2D` peek semantics).
+    fn rs_peek(&mut self, dev: usize, rect: Rect, t: usize) -> Result<Array2> {
+        match self {
+            HostSide::Seq { rs, .. } => rs[dev]
+                .peek(rect, t)
+                .cloned()
+                .with_context(|| format!("region {rect} @t{t} not in the sharing buffer")),
+            HostSide::Par { hub, .. } => hub.blocking_get(dev, rect, t, false),
+        }
+    }
+
+    fn rs_write(&mut self, dev: usize, rect: Rect, t: usize, data: Array2) {
+        match self {
+            HostSide::Seq { rs, .. } => rs[dev].write(rect, t, data),
+            HostSide::Par { hub, .. } => hub.write(dev, rect, t, data),
+        }
+    }
+
+    fn rs_receive(&mut self, dev: usize, rect: Rect, t: usize, data: Array2) {
+        match self {
+            HostSide::Seq { rs, .. } => rs[dev].receive(rect, t, data),
+            HostSide::Par { hub, .. } => hub.receive(dev, rect, t, data),
+        }
+    }
+}
+
+/// The single op interpreter every execution model *and* every worker
+/// shares: one kernel backend, one stencil kind, one stats record. The
+/// sequential paths borrow the executor's own backend/stats; each
+/// parallel worker brings a forked backend and a private stats record
+/// the coordinator later [`ExecStats::absorb`]s.
+struct OpInterp<'a, B: KernelBackend + ?Sized> {
+    backend: &'a mut B,
+    kind: crate::stencil::StencilKind,
+    stats: &'a mut ExecStats,
+    /// Row-band fan-out for large host-side gather/scatter copies. The
+    /// sequential paths get the executor's full thread budget; parallel
+    /// workers get `1` — device-level parallelism already owns the
+    /// cores, and nesting would only fight it.
+    copy_threads: usize,
+}
+
+impl<B: KernelBackend + ?Sized> OpInterp<'_, B> {
+    /// Move a contiguous payload through `codec`, returning the
+    /// wire-payload size. Identity short-circuits to a straight copy (no
+    /// codec pass, wire == raw); everything else performs the real
+    /// compress → decompress round trip, so codec semantics (bit-exact
+    /// or bounded) flow into the numerics the suites verify.
+    fn codec_copy(&mut self, codec: CodecKind, src: &[f32], dst: &mut [f32]) -> Result<u64> {
+        let raw = (src.len() * 4) as u64;
+        if codec == CodecKind::Identity {
+            dst.copy_from_slice(src);
+            return Ok(raw);
+        }
+        let c = codec.codec();
+        let t0 = Instant::now();
+        let wire = c.compress(src);
+        let t1 = Instant::now();
+        let decoded = c
+            .decompress(&wire, src.len())
+            .with_context(|| format!("{} codec round trip", codec.name()))?;
+        self.stats.codec_compress_s += (t1 - t0).as_secs_f64();
+        self.stats.codec_decompress_s += t1.elapsed().as_secs_f64();
+        self.stats.codec_ops += 1;
+        self.stats.codec_raw_bytes += raw;
+        dst.copy_from_slice(&decoded);
+        Ok(wire.len() as u64)
+    }
+
+    /// Execute a slice of one chunk's ops against its arena in `view`,
+    /// addressed by the chunk's 2-D `base` and the uniform arena `dims`.
+    /// `resident` gates the resident-model ops (a staged plan containing
+    /// them is a plan bug, surfaced loudly).
+    #[allow(clippy::too_many_arguments)]
+    fn exec_ops(
+        &mut self,
+        side: &mut HostSide<'_>,
+        cp: &ChunkEpochPlan,
+        ops: &[ChunkOp],
+        base: (i64, i64),
+        dims: (usize, usize),
+        resident: bool,
+        view: &mut ArenaView<'_>,
+    ) -> Result<()> {
+        for op in ops {
+            match op {
+                ChunkOp::Resident { .. } => {
+                    if !resident {
+                        bail!("resident-model op in a staged epoch (plan bug)");
+                    }
+                    if !view.is_live(cp.chunk) {
+                        bail!("chunk {} marked resident but its arena is dead", cp.chunk);
+                    }
+                    self.stats.resident_hits += 1;
+                }
+                ChunkOp::HtoD { rect, codec } => {
+                    let t0 = Instant::now();
+                    let local = to_local(*rect, base, dims)?;
+                    let pair = view.arrive(cp, dims.0, dims.1);
+                    let wire = if *codec == CodecKind::Identity {
+                        side.copy_in(*rect, &mut pair.0, local, self.copy_threads);
+                        rect.bytes_f32()
+                    } else {
+                        let staged = side.read_rect(*rect, self.copy_threads);
+                        let mut landed = Array2::zeros(staged.rows(), staged.cols());
+                        let wire =
+                            self.codec_copy(*codec, staged.as_slice(), landed.as_mut_slice())?;
+                        pair.0.insert_rect(local, &landed);
+                        wire
+                    };
+                    self.stats.htod_bytes += rect.bytes_f32();
+                    self.stats.htod_wire_bytes += wire;
+                    self.stats.transfer_s += t0.elapsed().as_secs_f64();
+                }
+                ChunkOp::DtoH { rect, codec } => {
+                    let t0 = Instant::now();
+                    let local = to_local(*rect, base, dims)?;
+                    let pair = view.pair(cp)?;
+                    let wire = if *codec == CodecKind::Identity {
+                        side.copy_out(&pair.0, local, *rect, self.copy_threads);
+                        rect.bytes_f32()
+                    } else {
+                        let staged = pair.0.extract_rect(local);
+                        let mut landed = Array2::zeros(staged.rows(), staged.cols());
+                        let wire =
+                            self.codec_copy(*codec, staged.as_slice(), landed.as_mut_slice())?;
+                        side.write_rect(*rect, &landed, self.copy_threads);
+                        wire
+                    };
+                    self.stats.dtoh_bytes += rect.bytes_f32();
+                    self.stats.dtoh_wire_bytes += wire;
+                    self.stats.transfer_s += t0.elapsed().as_secs_f64();
+                }
+                ChunkOp::Evict { rect, codec } => {
+                    if !resident {
+                        bail!("resident-model op in a staged epoch (plan bug)");
+                    }
+                    let t0 = Instant::now();
+                    let local = to_local(*rect, base, dims)?;
+                    let pair = view.pair(cp)?;
+                    let wire = if *codec == CodecKind::Identity {
+                        side.copy_out(&pair.0, local, *rect, self.copy_threads);
+                        rect.bytes_f32()
+                    } else {
+                        let staged = pair.0.extract_rect(local);
+                        let mut landed = Array2::zeros(staged.rows(), staged.cols());
+                        let wire =
+                            self.codec_copy(*codec, staged.as_slice(), landed.as_mut_slice())?;
+                        side.write_rect(*rect, &landed, self.copy_threads);
+                        wire
+                    };
+                    let bytes = rect.bytes_f32();
+                    self.stats.dtoh_bytes += bytes;
+                    self.stats.dtoh_wire_bytes += wire;
+                    self.stats.spill_bytes += bytes;
+                    self.stats.spills += 1;
+                    self.stats.transfer_s += t0.elapsed().as_secs_f64();
+                    view.release(cp.chunk);
+                }
+                ChunkOp::RsRead(region) => {
+                    let t0 = Instant::now();
+                    let local = to_local(region.rect, base, dims)?;
+                    let data = side
+                        .rs_read(cp.device, region.rect, region.time_step)
+                        .with_context(|| {
+                            format!(
+                                "RS region {} @t{} missing on device {} (chunk {})",
+                                region.rect, region.time_step, cp.device, cp.chunk
+                            )
+                        })?;
+                    view.pair(cp)?.0.insert_rect(local, &data);
+                    self.stats.halo_s += t0.elapsed().as_secs_f64();
+                }
+                ChunkOp::Fetch(region) => {
+                    if !resident {
+                        bail!("resident-model op in a staged epoch (plan bug)");
+                    }
+                    let t0 = Instant::now();
+                    let local = to_local(region.rect, base, dims)?;
+                    let data = side
+                        .rs_read(cp.device, region.rect, region.time_step)
+                        .with_context(|| {
+                            format!(
+                                "fetch region {} missing on device {} (chunk {})",
+                                region.rect, cp.device, cp.chunk
+                            )
+                        })?;
+                    self.stats.fetch_bytes += data.size_bytes();
+                    self.stats.fetch_reads += 1;
+                    view.pair(cp)?.0.insert_rect(local, &data);
+                    self.stats.halo_s += t0.elapsed().as_secs_f64();
+                }
+                ChunkOp::RsWrite(region) => {
+                    let t0 = Instant::now();
+                    let local = to_local(region.rect, base, dims)?;
+                    let data = view.pair(cp)?.0.extract_rect(local);
+                    side.rs_write(cp.device, region.rect, region.time_step, data);
+                    self.stats.halo_s += t0.elapsed().as_secs_f64();
+                }
+                ChunkOp::D2D { src_dev, dst_dev, rect, time_step, codec } => {
+                    let t0 = Instant::now();
+                    let data = side
+                        .rs_peek(*src_dev, *rect, *time_step)
+                        .with_context(|| {
+                            format!(
+                                "D2D region {} @t{} missing on source device {}",
+                                rect, time_step, src_dev
+                            )
+                        })?;
+                    let raw = data.size_bytes();
+                    let landed = if *codec == CodecKind::Identity {
+                        self.stats.p2p_wire_bytes += raw;
+                        data
+                    } else {
+                        let mut landed = Array2::zeros(data.rows(), data.cols());
+                        let all = RowSpan::new(0, data.rows());
+                        let wire = self.codec_copy(
+                            *codec,
+                            data.rows_slice(all),
+                            landed.rows_slice_mut(all),
+                        )?;
+                        self.stats.p2p_wire_bytes += wire;
+                        landed
+                    };
+                    self.stats.p2p_bytes += raw;
+                    self.stats.p2p_copies += 1;
+                    side.rs_receive(*dst_dev, *rect, *time_step, landed);
+                    self.stats.halo_s += t0.elapsed().as_secs_f64();
+                }
+                ChunkOp::Kernel(inv) => {
+                    let mut local_windows = Vec::with_capacity(inv.windows.len());
+                    for w in &inv.windows {
+                        let lw = to_local(*w, base, dims)?;
+                        self.stats.computed_elems += lw.area() as u64;
+                        local_windows.push(lw);
+                    }
+                    let pair = view.pair(cp)?;
+                    let t0 = Instant::now();
+                    self.backend
+                        .run_kernel(self.kind, &mut pair.0, &mut pair.1, &local_windows)
+                        .with_context(|| {
+                            format!("kernel chunk {} step {}", cp.chunk, inv.first_step)
+                        })?;
+                    self.stats.kernel_s += t0.elapsed().as_secs_f64();
+                    self.stats.kernel_invocations += 1;
+                    self.stats.fused_steps += inv.windows.len() as u64;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-epoch chunk base lookup, shared by the sequential and parallel
+/// staged paths (the staged base depends on the epoch's step count).
+type BaseOf<'f> = &'f (dyn Fn(&EpochPlan, &ChunkEpochPlan) -> (i64, i64) + Sync);
+
+/// A validated parallel setup: one forked backend per worker plus the
+/// contiguous device ranges the workers own.
+struct ParSetup {
+    forks: Vec<Box<dyn KernelBackend + Send>>,
+    dev_ranges: Vec<(usize, usize)>,
 }
 
 /// Executes epoch plans with real numerics.
 pub struct PlanExecutor<'a, B: KernelBackend + ?Sized> {
     backend: &'a mut B,
     kind: crate::stencil::StencilKind,
+    /// Worker-thread budget for [`Self::run`] / [`Self::run_tiles`]
+    /// (1 = strictly sequential, the default; see
+    /// [`Self::set_threads`]).
+    threads: usize,
     pub stats: ExecStats,
 }
 
 impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
     pub fn new(backend: &'a mut B, kind: crate::stencil::StencilKind) -> Self {
-        Self { backend, kind, stats: ExecStats::default() }
+        Self { backend, kind, threads: 1, stats: ExecStats::default() }
+    }
+
+    /// Set the worker-thread budget. Effective workers are capped at
+    /// the device count; runs that cannot parallelize safely (a single
+    /// device, an in-core plan, a backend that cannot fork, or a
+    /// resident chunk→worker map that is not a contiguous partition)
+    /// silently fall back to the sequential path — `stats.workers`
+    /// records what actually ran.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     /// Uniform chunk-buffer height for a whole run (so AOT-compiled
@@ -227,71 +894,78 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         (dc.resident_base(plan.scheme, plan.steps, chunk), 0)
     }
 
-    /// Translate a global rect into buffer-local coordinates under a 2-D
-    /// base, verifying it fits the `(buf_rows, buf_cols)` arena.
-    fn to_local(rect: Rect, base: (i64, i64), dims: (usize, usize)) -> Result<Rect> {
-        let r0 = rect.r0 as i64 - base.0;
-        let r1 = rect.r1 as i64 - base.0;
-        let c0 = rect.c0 as i64 - base.1;
-        let c1 = rect.c1 as i64 - base.1;
-        if r0 < 0 || r1 > dims.0 as i64 || c0 < 0 || c1 > dims.1 as i64 {
-            bail!(
-                "rect {rect} maps outside buffer (base {:?}, dims {:?})",
-                base,
-                dims
-            );
+    /// A fresh interpreter borrowing this executor's backend and stats
+    /// (the sequential execution paths).
+    fn interp(&mut self) -> OpInterp<'_, B> {
+        OpInterp {
+            backend: &mut *self.backend,
+            kind: self.kind,
+            stats: &mut self.stats,
+            copy_threads: self.threads,
         }
-        Ok(Rect::new(r0 as usize, r1 as usize, c0 as usize, c1 as usize))
     }
 
-    /// Move a contiguous payload through `codec`, returning the
-    /// wire-payload size. Identity short-circuits to a straight copy (no
-    /// codec pass, wire == raw); everything else performs the real
-    /// compress → decompress round trip, so codec semantics (bit-exact
-    /// or bounded) flow into the numerics the suites verify.
-    fn codec_copy(&mut self, codec: CodecKind, src: &[f32], dst: &mut [f32]) -> Result<u64> {
-        let raw = (src.len() * 4) as u64;
-        if codec == CodecKind::Identity {
-            dst.copy_from_slice(src);
-            return Ok(raw);
+    /// Decide whether this run may go parallel, and fork the backends
+    /// if so. `None` means: run sequentially (not an error — a single
+    /// device, a thread budget of 1, an in-core plan whose whole-grid
+    /// wrap is inherently serial, or a backend that cannot fork).
+    fn forks_for(&self, plans: &[EpochPlan], n_devices: usize) -> Option<ParSetup> {
+        if self.threads <= 1 || n_devices <= 1 {
+            return None;
         }
-        let c = codec.codec();
-        let t0 = std::time::Instant::now();
-        let wire = c.compress(src);
-        let t1 = std::time::Instant::now();
-        let decoded = c
-            .decompress(&wire, src.len())
-            .with_context(|| format!("{} codec round trip", codec.name()))?;
-        self.stats.codec_compress_s += (t1 - t0).as_secs_f64();
-        self.stats.codec_decompress_s += t1.elapsed().as_secs_f64();
-        self.stats.codec_ops += 1;
-        self.stats.codec_raw_bytes += raw;
-        dst.copy_from_slice(&decoded);
-        Ok(wire.len() as u64)
+        if plans.iter().any(|p| p.scheme == Scheme::InCore) {
+            return None;
+        }
+        let workers = self.threads.min(n_devices);
+        let mut forks = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            forks.push(self.backend.try_fork()?);
+        }
+        let dev_ranges = crate::util::threads::split_range(0, n_devices, workers);
+        Some(ParSetup { forks, dev_ranges })
     }
 
-    /// Rect-addressed [`Self::codec_copy`]: move `src_rect` of `src`
-    /// into the congruent `dst_rect` of `dst`. Identity copies in place
-    /// (row-wise, strided-capable); non-identity codecs gather the rect
-    /// into a contiguous staging buffer — exactly what a GPU codec
-    /// engine would DMA — round-trip it, and scatter the decoded cells.
-    fn codec_copy_rect(
-        &mut self,
-        codec: CodecKind,
-        src: &Array2,
-        src_rect: Rect,
-        dst: &mut Array2,
-        dst_rect: Rect,
-    ) -> Result<u64> {
-        if codec == CodecKind::Identity {
-            dst.copy_rect_from(dst_rect, src, src_rect);
-            return Ok(src_rect.bytes_f32());
+    /// Map each chunk to the worker owning its device and validate that
+    /// the map is a contiguous, non-decreasing partition of the chunk
+    /// index space — the property that lets resident workers own
+    /// disjoint arena slices. Chunks no plan ever touches inherit the
+    /// previous owner. `None` ⇒ fall back to sequential execution.
+    fn resident_chunk_ranges(
+        plans: &[EpochPlan],
+        n_chunks: usize,
+        dev_ranges: &[(usize, usize)],
+    ) -> Option<Vec<(usize, usize)>> {
+        let worker_of_dev =
+            |dev: usize| dev_ranges.iter().position(|&(lo, hi)| dev >= lo && dev < hi);
+        let mut owner: Vec<Option<usize>> = vec![None; n_chunks];
+        for plan in plans {
+            for cp in &plan.chunks {
+                let w = worker_of_dev(cp.device)?;
+                match owner.get(cp.chunk)? {
+                    None => owner[cp.chunk] = Some(w),
+                    Some(prev) if *prev == w => {}
+                    Some(_) => return None,
+                }
+            }
         }
-        let staged = src.extract_rect(src_rect);
-        let mut landed = Array2::zeros(staged.rows(), staged.cols());
-        let wire = self.codec_copy(codec, staged.as_slice(), landed.as_mut_slice())?;
-        dst.insert_rect(dst_rect, &landed);
-        Ok(wire)
+        let mut filled = Vec::with_capacity(n_chunks);
+        let mut prev = 0usize;
+        for o in owner {
+            let w = o.unwrap_or(prev);
+            if w < prev {
+                return None;
+            }
+            prev = w;
+            filled.push(w);
+        }
+        let mut ranges = Vec::with_capacity(dev_ranges.len());
+        let mut lo = 0usize;
+        for w in 0..dev_ranges.len() {
+            let hi = filled.iter().position(|&o| o > w).unwrap_or(n_chunks);
+            ranges.push((lo, hi));
+            lo = hi;
+        }
+        Some(ranges)
     }
 
     /// Execute all epochs in sequence, updating `grid` in place.
@@ -304,11 +978,50 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         let buf_rows = Self::buffer_rows(dc, plans);
         let cols = dc.cols();
         let n_devices = plans.iter().map(|p| p.n_devices).max().unwrap_or(1);
+        let resident = plans.iter().any(|p| p.resident);
+        if let Some(ParSetup { mut forks, dev_ranges }) = self.forks_for(plans, n_devices) {
+            if resident {
+                if let Some(chunk_ranges) =
+                    Self::resident_chunk_ranges(plans, dc.n_chunks(), &dev_ranges)
+                {
+                    let scheme = plans.first().map(|p| p.scheme).unwrap_or(Scheme::So2dr);
+                    let s_max = plans.iter().map(|p| p.steps).max().unwrap_or(1);
+                    let bases: Vec<(i64, i64)> = (0..dc.n_chunks())
+                        .map(|c| (dc.resident_base(scheme, s_max, c), 0))
+                        .collect();
+                    return self.run_par_resident(
+                        grid,
+                        plans,
+                        (buf_rows, cols),
+                        &bases,
+                        dc.arena_bytes(buf_rows),
+                        n_devices,
+                        &chunk_ranges,
+                        &mut forks,
+                        "chunk",
+                    );
+                }
+                // Fall through: the chunk→worker map is not a clean
+                // contiguous partition, so arenas can't be sliced.
+            } else {
+                return self.run_par_staged(
+                    grid,
+                    plans,
+                    (buf_rows, cols),
+                    &|plan, cp| Self::buffer_base(dc, plan, cp.chunk),
+                    n_devices,
+                    &dev_ranges,
+                    &mut forks,
+                    "chunk",
+                );
+            }
+        }
+        self.stats.workers = self.stats.workers.max(1);
         // One sharing buffer per device: an RS read only ever sees data
         // resident on its own device (D2D ops bridge the gap).
         let mut rs: Vec<RegionShareBuffer> =
             (0..n_devices).map(|_| RegionShareBuffer::new()).collect();
-        if plans.iter().any(|p| p.resident) {
+        if resident {
             self.run_resident(grid, dc, plans, buf_rows, cols, &mut rs)?;
         } else {
             let mut store = ArenaStore::Staged(
@@ -348,9 +1061,43 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         let s_max = plans.iter().map(|p| p.steps).max().unwrap_or(1);
         let (buf_rows, buf_cols) = dc.uniform_buffer_dims(s_max);
         let n_devices = plans.iter().map(|p| p.n_devices).max().unwrap_or(1);
+        let resident = plans.iter().any(|p| p.resident);
+        if let Some(ParSetup { mut forks, dev_ranges }) = self.forks_for(plans, n_devices) {
+            if resident {
+                if let Some(chunk_ranges) =
+                    Self::resident_chunk_ranges(plans, dc.n_tiles(), &dev_ranges)
+                {
+                    let bases: Vec<(i64, i64)> =
+                        (0..dc.n_tiles()).map(|t| dc.tile_base(t, s_max)).collect();
+                    return self.run_par_resident(
+                        grid,
+                        plans,
+                        (buf_rows, buf_cols),
+                        &bases,
+                        dc.arena_bytes(s_max),
+                        n_devices,
+                        &chunk_ranges,
+                        &mut forks,
+                        "tile",
+                    );
+                }
+            } else {
+                return self.run_par_staged(
+                    grid,
+                    plans,
+                    (buf_rows, buf_cols),
+                    &|plan, cp| dc.tile_base(cp.chunk, plan.steps),
+                    n_devices,
+                    &dev_ranges,
+                    &mut forks,
+                    "tile",
+                );
+            }
+        }
+        self.stats.workers = self.stats.workers.max(1);
         let mut rs: Vec<RegionShareBuffer> =
             (0..n_devices).map(|_| RegionShareBuffer::new()).collect();
-        if plans.iter().any(|p| p.resident) {
+        if resident {
             self.run_resident_tiles(grid, dc, plans, (buf_rows, buf_cols), s_max, &mut rs)?;
             self.collect_rs_stats(&rs);
             return Ok(());
@@ -365,19 +1112,21 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         for plan in plans {
             for cp in &plan.chunks {
                 let base = dc.tile_base(cp.chunk, plan.steps);
-                self.exec_ops(
-                    grid,
-                    cp,
-                    &cp.ops,
-                    base,
-                    (buf_rows, buf_cols),
-                    false,
-                    &mut rs,
-                    &mut store,
-                )
-                .with_context(|| {
-                    format!("epoch at step {} tile {}", plan.start_step, cp.chunk)
-                })?;
+                let mut side = HostSide::Seq { grid: &mut *grid, rs: &mut rs };
+                let mut view = store.view();
+                self.interp()
+                    .exec_ops(
+                        &mut side,
+                        cp,
+                        &cp.ops,
+                        base,
+                        (buf_rows, buf_cols),
+                        false,
+                        &mut view,
+                    )
+                    .with_context(|| {
+                        format!("epoch at step {} tile {}", plan.start_step, cp.chunk)
+                    })?;
             }
             for r in rs.iter_mut() {
                 r.clear();
@@ -413,7 +1162,10 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                 for (ci, range) in segments {
                     let cp = &plan.chunks[ci];
                     let base = dc.tile_base(cp.chunk, s_max);
-                    self.exec_ops(grid, cp, &cp.ops[range], base, dims, true, rs, &mut store)
+                    let mut side = HostSide::Seq { grid: &mut *grid, rs: &mut *rs };
+                    let mut view = store.view();
+                    self.interp()
+                        .exec_ops(&mut side, cp, &cp.ops[range], base, dims, true, &mut view)
                         .with_context(|| {
                             format!("epoch at step {} tile {}", plan.start_step, cp.chunk)
                         })?;
@@ -463,7 +1215,19 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
             if plan.scheme == Scheme::InCore {
                 store.pair(cp)?.0.copy_rows_from(all, grid, all);
             }
-            self.exec_ops(grid, cp, &cp.ops, base, (buf_rows, cols), false, rs, store)?;
+            {
+                let mut side = HostSide::Seq { grid: &mut *grid, rs: &mut *rs };
+                let mut view = store.view();
+                self.interp().exec_ops(
+                    &mut side,
+                    cp,
+                    &cp.ops,
+                    base,
+                    (buf_rows, cols),
+                    false,
+                    &mut view,
+                )?;
+            }
             if plan.scheme == Scheme::InCore {
                 grid.copy_rows_from(all, &store.pair(cp)?.0, all);
             }
@@ -496,19 +1260,21 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                 for (ci, range) in segments {
                     let cp = &plan.chunks[ci];
                     let base = (dc.resident_base(scheme, s_max, cp.chunk), 0);
-                    self.exec_ops(
-                        grid,
-                        cp,
-                        &cp.ops[range],
-                        base,
-                        (buf_rows, cols),
-                        true,
-                        rs,
-                        &mut store,
-                    )
-                    .with_context(|| {
-                        format!("epoch at step {} chunk {}", plan.start_step, cp.chunk)
-                    })?;
+                    let mut side = HostSide::Seq { grid: &mut *grid, rs: &mut *rs };
+                    let mut view = store.view();
+                    self.interp()
+                        .exec_ops(
+                            &mut side,
+                            cp,
+                            &cp.ops[range],
+                            base,
+                            (buf_rows, cols),
+                            true,
+                            &mut view,
+                        )
+                        .with_context(|| {
+                            format!("epoch at step {} chunk {}", plan.start_step, cp.chunk)
+                        })?;
                 }
                 if pass == 0 {
                     // Peak arena occupancy: right after arrivals, before
@@ -528,145 +1294,222 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         Ok(())
     }
 
-    /// The single op interpreter every execution model shares: execute a
-    /// slice of one chunk's ops against its arena in `store`, addressed
-    /// by the chunk's 2-D `base` and the uniform arena `dims`.
-    /// `resident` gates the resident-model ops (a staged plan containing
-    /// them is a plan bug, surfaced loudly).
+    /// Parallel staged execution: one worker per contiguous device
+    /// range, each streaming its own devices' chunks (chunk-major, the
+    /// sequential order restricted to its devices) through its own
+    /// slice of the per-device double buffers. Per epoch: snapshot the
+    /// host grid, spawn the workers, join, clear the sharing hub.
     #[allow(clippy::too_many_arguments)]
-    fn exec_ops(
+    fn run_par_staged(
         &mut self,
         grid: &mut Array2,
-        cp: &ChunkEpochPlan,
-        ops: &[ChunkOp],
-        base: (i64, i64),
+        plans: &[EpochPlan],
         dims: (usize, usize),
-        resident: bool,
-        rs: &mut [RegionShareBuffer],
-        store: &mut ArenaStore,
+        base_of: BaseOf<'_>,
+        n_devices: usize,
+        dev_ranges: &[(usize, usize)],
+        forks: &mut [Box<dyn KernelBackend + Send>],
+        unit: &'static str,
     ) -> Result<()> {
-        for op in ops {
-            match op {
-                ChunkOp::Resident { .. } => {
-                    if !resident {
-                        bail!("resident-model op in a staged epoch (plan bug)");
-                    }
-                    if !store.is_live(cp.chunk) {
-                        bail!("chunk {} marked resident but its arena is dead", cp.chunk);
-                    }
-                    self.stats.resident_hits += 1;
+        let workers = dev_ranges.len();
+        let kind = self.kind;
+        let hub = RsHub::new(n_devices);
+        let host = Mutex::new(std::mem::replace(grid, Array2::zeros(0, 0)));
+        let mut bufs: Vec<(Array2, Array2)> = (0..n_devices)
+            .map(|_| (Array2::zeros(dims.0, dims.1), Array2::zeros(dims.0, dims.1)))
+            .collect();
+        let mut wstats: Vec<ExecStats> = vec![ExecStats::default(); workers];
+        let mut result: Result<()> = Ok(());
+        for plan in plans {
+            let arena_bytes = plan.n_devices as u64 * 2 * (dims.0 * dims.1 * 4) as u64;
+            self.stats.arena_peak_bytes = self.stats.arena_peak_bytes.max(arena_bytes);
+            let snap = lock_grid(&host).clone();
+            hub.begin_epoch(workers);
+            let errs: Vec<Result<()>> = std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(workers);
+                let mut rest: &mut [(Array2, Array2)] = &mut bufs;
+                for ((lo, hi), (fork, wstat)) in dev_ranges
+                    .iter()
+                    .copied()
+                    .zip(forks.iter_mut().zip(wstats.iter_mut()))
+                {
+                    let (mine, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+                    rest = tail;
+                    let (snap, hub, host) = (&snap, &hub, &host);
+                    handles.push(scope.spawn(move || -> Result<()> {
+                        let _guard = AliveGuard(hub);
+                        let mut side = HostSide::Par { snap, grid: host, hub };
+                        let mut interp =
+                            OpInterp { backend: &mut **fork, kind, stats: wstat, copy_threads: 1 };
+                        let mut view = ArenaView::Staged { bufs: mine, dev_lo: lo };
+                        for cp in
+                            plan.chunks.iter().filter(|cp| cp.device >= lo && cp.device < hi)
+                        {
+                            interp
+                                .exec_ops(
+                                    &mut side,
+                                    cp,
+                                    &cp.ops,
+                                    base_of(plan, cp),
+                                    dims,
+                                    false,
+                                    &mut view,
+                                )
+                                .with_context(|| {
+                                    format!(
+                                        "epoch at step {} {unit} {}",
+                                        plan.start_step, cp.chunk
+                                    )
+                                })?;
+                        }
+                        Ok(())
+                    }));
                 }
-                ChunkOp::HtoD { rect, codec } => {
-                    let local = Self::to_local(*rect, base, dims)?;
-                    let pair = store.arrive(cp, dims.0, dims.1);
-                    let wire = self.codec_copy_rect(*codec, grid, *rect, &mut pair.0, local)?;
-                    self.stats.htod_bytes += rect.bytes_f32();
-                    self.stats.htod_wire_bytes += wire;
-                }
-                ChunkOp::DtoH { rect, codec } => {
-                    let local = Self::to_local(*rect, base, dims)?;
-                    let pair = store.pair(cp)?;
-                    let wire = self.codec_copy_rect(*codec, &pair.0, local, grid, *rect)?;
-                    self.stats.dtoh_bytes += rect.bytes_f32();
-                    self.stats.dtoh_wire_bytes += wire;
-                }
-                ChunkOp::Evict { rect, codec } => {
-                    if !resident {
-                        bail!("resident-model op in a staged epoch (plan bug)");
-                    }
-                    let local = Self::to_local(*rect, base, dims)?;
-                    let pair = store.pair(cp)?;
-                    let wire = self.codec_copy_rect(*codec, &pair.0, local, grid, *rect)?;
-                    let bytes = rect.bytes_f32();
-                    self.stats.dtoh_bytes += bytes;
-                    self.stats.dtoh_wire_bytes += wire;
-                    self.stats.spill_bytes += bytes;
-                    self.stats.spills += 1;
-                    store.release(cp.chunk);
-                }
-                ChunkOp::RsRead(region) => {
-                    let local = Self::to_local(region.rect, base, dims)?;
-                    let data = rs[cp.device]
-                        .read(region.rect, region.time_step)
-                        .with_context(|| {
-                            format!(
-                                "RS region {} @t{} missing on device {} (chunk {})",
-                                region.rect, region.time_step, cp.device, cp.chunk
-                            )
-                        })?
-                        .clone();
-                    store.pair(cp)?.0.insert_rect(local, &data);
-                }
-                ChunkOp::Fetch(region) => {
-                    if !resident {
-                        bail!("resident-model op in a staged epoch (plan bug)");
-                    }
-                    let local = Self::to_local(region.rect, base, dims)?;
-                    let data = rs[cp.device]
-                        .read(region.rect, region.time_step)
-                        .with_context(|| {
-                            format!(
-                                "fetch region {} missing on device {} (chunk {})",
-                                region.rect, cp.device, cp.chunk
-                            )
-                        })?
-                        .clone();
-                    self.stats.fetch_bytes += data.size_bytes();
-                    self.stats.fetch_reads += 1;
-                    store.pair(cp)?.0.insert_rect(local, &data);
-                }
-                ChunkOp::RsWrite(region) => {
-                    let local = Self::to_local(region.rect, base, dims)?;
-                    let data = store.pair(cp)?.0.extract_rect(local);
-                    rs[cp.device].write(region.rect, region.time_step, data);
-                }
-                ChunkOp::D2D { src_dev, dst_dev, rect, time_step, codec } => {
-                    let data = rs[*src_dev]
-                        .peek(*rect, *time_step)
-                        .with_context(|| {
-                            format!(
-                                "D2D region {} @t{} missing on source device {}",
-                                rect, time_step, src_dev
-                            )
-                        })?
-                        .clone();
-                    let raw = data.size_bytes();
-                    let landed = if *codec == CodecKind::Identity {
-                        self.stats.p2p_wire_bytes += raw;
-                        data
-                    } else {
-                        let mut landed = Array2::zeros(data.rows(), data.cols());
-                        let all = RowSpan::new(0, data.rows());
-                        let wire = self.codec_copy(
-                            *codec,
-                            data.rows_slice(all),
-                            landed.rows_slice_mut(all),
-                        )?;
-                        self.stats.p2p_wire_bytes += wire;
-                        landed
-                    };
-                    self.stats.p2p_bytes += raw;
-                    self.stats.p2p_copies += 1;
-                    rs[*dst_dev].receive(*rect, *time_step, landed);
-                }
-                ChunkOp::Kernel(inv) => {
-                    let mut local_windows = Vec::with_capacity(inv.windows.len());
-                    for w in &inv.windows {
-                        let lw = Self::to_local(*w, base, dims)?;
-                        self.stats.computed_elems += lw.area() as u64;
-                        local_windows.push(lw);
-                    }
-                    let pair = store.pair(cp)?;
-                    self.backend
-                        .run_kernel(self.kind, &mut pair.0, &mut pair.1, &local_windows)
-                        .with_context(|| {
-                            format!("kernel chunk {} step {}", cp.chunk, inv.first_step)
-                        })?;
-                    self.stats.kernel_invocations += 1;
-                    self.stats.fused_steps += inv.windows.len() as u64;
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join().unwrap_or_else(|_| Err(anyhow!("executor worker panicked")))
+                    })
+                    .collect()
+            });
+            hub.end_epoch();
+            self.stats.epochs += 1;
+            for e in errs {
+                if let Err(e) = e {
+                    result = Err(e);
+                    break;
                 }
             }
+            if result.is_err() {
+                break;
+            }
         }
-        Ok(())
+        *grid = host.into_inner().unwrap_or_else(|p| p.into_inner());
+        for ws in &wstats {
+            self.stats.absorb(ws);
+        }
+        self.stats.workers = self.stats.workers.max(workers as u64);
+        self.collect_rs_stats(&hub.into_bufs());
+        result
+    }
+
+    /// Parallel resident execution: one worker per contiguous *chunk*
+    /// range (validated by [`Self::resident_chunk_ranges`]), each
+    /// walking [`resident_pass_sequences`] pass-major over its own
+    /// chunks with its own arena slice. No global pass barrier: the
+    /// blocking region-share hub alone enforces cross-worker ordering.
+    #[allow(clippy::too_many_arguments)]
+    fn run_par_resident(
+        &mut self,
+        grid: &mut Array2,
+        plans: &[EpochPlan],
+        dims: (usize, usize),
+        bases: &[(i64, i64)],
+        arena_bytes_per: u64,
+        n_devices: usize,
+        chunk_ranges: &[(usize, usize)],
+        forks: &mut [Box<dyn KernelBackend + Send>],
+        unit: &'static str,
+    ) -> Result<()> {
+        let workers = chunk_ranges.len();
+        let kind = self.kind;
+        let hub = RsHub::new(n_devices);
+        let host = Mutex::new(std::mem::replace(grid, Array2::zeros(0, 0)));
+        let n_chunks = bases.len();
+        let mut arenas: Vec<Option<(Array2, Array2)>> = (0..n_chunks).map(|_| None).collect();
+        let mut wstats: Vec<ExecStats> = vec![ExecStats::default(); workers];
+        let mut result: Result<()> = Ok(());
+        for plan in plans {
+            let snap = lock_grid(&host).clone();
+            let passes = resident_pass_sequences(plan);
+            hub.begin_epoch(workers);
+            // Workers report their own live-arena count right after
+            // their pass 0 (arenas are worker-exclusive, so the sum
+            // equals the sequential "all arrivals landed, no evictions
+            // yet" global count).
+            let outs: Vec<Result<u64>> = std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(workers);
+                let mut rest: &mut [Option<(Array2, Array2)>] = &mut arenas;
+                let mut cursor = 0usize;
+                for ((lo, hi), (fork, wstat)) in chunk_ranges
+                    .iter()
+                    .copied()
+                    .zip(forks.iter_mut().zip(wstats.iter_mut()))
+                {
+                    debug_assert_eq!(lo, cursor);
+                    cursor = hi;
+                    let (mine, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+                    rest = tail;
+                    let (snap, hub, host, passes) = (&snap, &hub, &host, &passes);
+                    handles.push(scope.spawn(move || -> Result<u64> {
+                        let _guard = AliveGuard(hub);
+                        let mut side = HostSide::Par { snap, grid: host, hub };
+                        let mut interp =
+                            OpInterp { backend: &mut **fork, kind, stats: wstat, copy_threads: 1 };
+                        let mut view = ArenaView::Resident { arenas: mine, chunk_lo: lo };
+                        let mut live_after_arrivals = 0u64;
+                        for (pass, segments) in passes.iter().enumerate() {
+                            for (ci, range) in segments {
+                                let cp = &plan.chunks[*ci];
+                                if cp.chunk < lo || cp.chunk >= hi {
+                                    continue;
+                                }
+                                interp
+                                    .exec_ops(
+                                        &mut side,
+                                        cp,
+                                        &cp.ops[range.clone()],
+                                        bases[cp.chunk],
+                                        dims,
+                                        true,
+                                        &mut view,
+                                    )
+                                    .with_context(|| {
+                                        format!(
+                                            "epoch at step {} {unit} {}",
+                                            plan.start_step, cp.chunk
+                                        )
+                                    })?;
+                            }
+                            if pass == 0 {
+                                live_after_arrivals = view.live_arenas() as u64;
+                            }
+                        }
+                        Ok(live_after_arrivals)
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join().unwrap_or_else(|_| Err(anyhow!("executor worker panicked")))
+                    })
+                    .collect()
+            });
+            hub.end_epoch();
+            self.stats.epochs += 1;
+            let mut total_live = 0u64;
+            for o in outs {
+                match o {
+                    Ok(live) => total_live += live,
+                    Err(e) => {
+                        if result.is_ok() {
+                            result = Err(e);
+                        }
+                    }
+                }
+            }
+            if result.is_err() {
+                break;
+            }
+            self.stats.arena_peak_bytes =
+                self.stats.arena_peak_bytes.max(total_live * arena_bytes_per);
+        }
+        *grid = host.into_inner().unwrap_or_else(|p| p.into_inner());
+        for ws in &wstats {
+            self.stats.absorb(ws);
+        }
+        self.stats.workers = self.stats.workers.max(workers as u64);
+        self.collect_rs_stats(&hub.into_bufs());
+        result
     }
 }

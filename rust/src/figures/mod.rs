@@ -906,6 +906,134 @@ pub fn bench_pr6(machine: &MachineSpec) -> String {
     bench_pr6_to(machine, std::path::Path::new("."))
 }
 
+/// Grid side for the measured `bench_pr7` trajectory point. Real
+/// numerics at the paper's 38400^2 would take hours per cell on a host
+/// executor, so the committed point runs the same shape at 1/20 scale —
+/// and the DES prediction it is paired with is computed on the *same*
+/// scaled geometry, so the wall-vs-model comparison stays
+/// apples-to-apples.
+pub const BENCH_PR7_SZ: usize = 1920;
+/// Time steps for the `bench_pr7` runs (two epochs at `S_TB = 8`).
+pub const BENCH_PR7_STEPS: usize = 16;
+const BENCH_PR7_D: usize = 4;
+const BENCH_PR7_DEVICES: usize = 4;
+const BENCH_PR7_S_TB: usize = 8;
+const BENCH_PR7_K_ON: usize = 2;
+
+/// The first *measured* (non-simulated) perf trajectory point: the
+/// real-numerics executor timed end-to-end at 1/2/4 worker threads over
+/// 4 simulated devices, paired with the DES-predicted makespans
+/// (overlap on and off) for the same scaled geometry. Every threaded
+/// grid is checked bit-exact against the sequential one and the verdict
+/// is recorded per row — a benchmark that silently diverged would be
+/// worse than no benchmark. `host_cores` records the parallelism the
+/// runner actually had: `speedup_vs_1t` is only meaningful where
+/// `host_cores >= threads`, and consumers (the CI gate) must filter on
+/// it rather than trust a 1-core runner's flat curve.
+fn bench_pr7_impl(machine: &MachineSpec, dir: &std::path::Path, sz: usize, n: usize) -> String {
+    use crate::coordinator::run_scheme_full_threads;
+    let kind = StencilKind::Box { radius: 1 };
+    let (d, devices) = (BENCH_PR7_D, BENCH_PR7_DEVICES);
+    let (s_tb, k_on) = (BENCH_PR7_S_TB, BENCH_PR7_K_ON);
+    let resident = ResidencyConfig::off();
+    let des = |overlap: bool| -> f64 {
+        simulate_compressed_grid_devices_overlap(
+            machine,
+            Scheme::So2dr,
+            kind,
+            sz,
+            sz,
+            d,
+            devices,
+            s_tb,
+            k_on,
+            n,
+            N_STRM,
+            &resident,
+            CompressMode::Off,
+            overlap,
+        )
+        .0
+        .makespan
+    };
+    let host_cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let initial = crate::core::Array2::synthetic(sz, sz, 42);
+    let mut entries: Vec<String> = Vec::new();
+    let mut wall_1t = 0.0f64;
+    let mut grid_1t: Option<crate::core::Array2> = None;
+    for threads in [1usize, 2, 4] {
+        let mut backend = HostBackend::new(NaiveEngine);
+        let t0 = std::time::Instant::now();
+        let out = run_scheme_full_threads(
+            Scheme::So2dr,
+            &initial,
+            kind,
+            n,
+            d,
+            devices,
+            s_tb,
+            k_on,
+            &mut backend,
+            &resident,
+            CompressMode::Off,
+            threads,
+        )
+        .expect("bench_pr7 configuration is feasible");
+        let wall = t0.elapsed().as_secs_f64();
+        if threads == 1 {
+            wall_1t = wall;
+        }
+        let bit_exact = match &grid_1t {
+            None => {
+                grid_1t = Some(out.grid);
+                true
+            }
+            Some(g) => out.grid.bit_eq(g),
+        };
+        let s = &out.stats;
+        entries.push(format!(
+            "    {{\"threads\": {threads}, \"workers\": {}, \"wall_s\": {:.6}, \
+             \"speedup_vs_1t\": {:.4}, \"bit_exact_vs_1t\": {bit_exact}, \
+             \"kernel_s\": {:.6}, \"transfer_s\": {:.6}, \"halo_s\": {:.6}}}",
+            s.workers,
+            wall,
+            wall_1t / wall.max(1e-12),
+            s.kernel_s,
+            s.transfer_s,
+            s.halo_s,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"pr\": 7,\n  \"what\": \"measured parallel-executor wall-clock vs \
+         DES-predicted makespan\",\n  \
+         \"config\": {{\"sz\": {sz}, \"n\": {n}, \"d\": {d}, \"devices\": {devices}, \
+         \"s_tb\": {s_tb}, \"k_on\": {k_on}, \"scheme\": \"so2dr\", \
+         \"benchmark\": \"box2d1r\", \"backend\": \"host-naive\", \"compress\": \"off\"}},\n  \
+         \"host_cores\": {host_cores},\n  \
+         \"des_makespan_overlap_on_s\": {:.6},\n  \
+         \"des_makespan_overlap_off_s\": {:.6},\n  \
+         \"note\": \"wall_s measured on this host; speedup_vs_1t is meaningful only where \
+         host_cores >= threads\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        des(true),
+        des(false),
+        entries.join(",\n")
+    );
+    let _ = std::fs::write(dir.join("BENCH_pr7.json"), &json);
+    json
+}
+
+/// Machine-readable [`bench_pr7_impl`] at the committed trajectory
+/// geometry. Written to `<dir>/BENCH_pr7.json`; the committed copy at
+/// the repo root is CI's perf baseline for the parallel executor.
+pub fn bench_pr7_to(machine: &MachineSpec, dir: &std::path::Path) -> String {
+    bench_pr7_impl(machine, dir, BENCH_PR7_SZ, BENCH_PR7_STEPS)
+}
+
+/// Registry-shaped [`bench_pr7_to`]: writes `BENCH_pr7.json` in the CWD.
+pub fn bench_pr7(machine: &MachineSpec) -> String {
+    bench_pr7_to(machine, std::path::Path::new("."))
+}
+
 /// Index of the smallest makespan in a sweep row, NaN-safe. `total_cmp`
 /// orders (positive) NaN after every finite value and +inf, so a
 /// degenerate cell can never be selected as the winner — and, unlike
@@ -1117,6 +1245,7 @@ pub fn registry() -> Vec<(&'static str, fn(&MachineSpec) -> String)> {
         ("bench_pr2", bench_pr2),
         ("bench_pr5", bench_pr5),
         ("bench_pr6", bench_pr6),
+        ("bench_pr7", bench_pr7),
     ]
 }
 
@@ -1328,6 +1457,27 @@ mod tests {
         assert!(json.contains("box2d1r") && json.contains("gradient2d"));
         assert!(json.contains("htod_bytes") && json.contains("makespan_s"));
         let written = std::fs::read_to_string(dir.path().join("BENCH_pr2.json")).unwrap();
+        assert_eq!(written, json);
+    }
+
+    #[test]
+    fn bench_pr7_json_emitted_with_bit_exact_threaded_rows() {
+        // Tiny geometry: the committed trajectory point runs at
+        // BENCH_PR7_SZ via the release-built CLI; this test locks the
+        // JSON shape and the bit-exactness verdict cheaply in debug.
+        let m = MachineSpec::rtx3080();
+        let dir = crate::util::testkit::TempDir::new("bench-pr7");
+        let json = bench_pr7_impl(&m, dir.path(), 128, 8);
+        assert!(json.contains("\"pr\": 7"), "{json}");
+        for t in ["\"threads\": 1", "\"threads\": 2", "\"threads\": 4"] {
+            assert!(json.contains(t), "missing {t}: {json}");
+        }
+        assert!(json.contains("\"bit_exact_vs_1t\": true"), "{json}");
+        assert!(!json.contains("\"bit_exact_vs_1t\": false"), "threaded run diverged: {json}");
+        assert!(json.contains("\"host_cores\""), "{json}");
+        assert!(json.contains("des_makespan_overlap_on_s"), "{json}");
+        assert!(json.contains("des_makespan_overlap_off_s"), "{json}");
+        let written = std::fs::read_to_string(dir.path().join("BENCH_pr7.json")).unwrap();
         assert_eq!(written, json);
     }
 

@@ -188,6 +188,42 @@
 //!        reproduces the pre-overlap lane layout and codec pricing
 //!        exactly, keeping an A/B baseline (`figures --fig overlap`
 //!        tables both at paper scale).
+//!   - **Parallel host executor** (`--threads N`, TOML `threads`,
+//!     default = host parallelism): the real-numerics interpreter
+//!     ([`coordinator::PlanExecutor`]) runs one worker thread per
+//!     simulated-device range — parallelism lives *between* ops on
+//!     different devices, never inside a kernel (per-worker backends are
+//!     forked via [`coordinator::KernelBackend::try_fork`];
+//!     single-threaded engine instances keep device workers the only
+//!     parallelism). The contract the determinism suite enforces:
+//!     1. *bit-exactness is thread-count-invariant*: grids AND every
+//!        logical counter in [`coordinator::ExecStats`] are identical at
+//!        any `--threads` value, across schemes × decompositions ×
+//!        residency × codecs — only the wall-clock timers (`kernel_s`,
+//!        `transfer_s`, `halo_s`, codec seconds) and the `workers`
+//!        witness may differ;
+//!     2. *synchronization points mirror the plan's data flow*: workers
+//!        rendezvous only where the plan itself has cross-device edges —
+//!        D2D/region-share publishes block their readers (a blocking hub
+//!        with a deadlock detector), resident pass boundaries
+//!        ([`chunking::plan::resident_pass_bounds`]) are epoch-wide
+//!        barriers, and the host grid is a lock (staged epochs read a
+//!        shared immutable snapshot instead);
+//!     3. *the oracle stays sequential*: `reference_run` and the
+//!        `NaiveEngine` are untouched — the parallel executor is
+//!        validated against the same reference as the sequential one,
+//!        never against itself;
+//!     4. *non-vacuity*: the determinism property also asserts
+//!        `ExecStats::workers > 1` actually occurred, so a silently
+//!        sequential fallback cannot pass the suite;
+//!     5. *the trajectory is recorded, honestly*: `figures --fig
+//!        bench_pr7` measures the 1/2/4-thread wall-clock next to the
+//!        DES-predicted makespans and tags each row with its
+//!        bit-exactness verdict and the host's core count (speedups are
+//!        only meaningful where cores ≥ threads); large host-side
+//!        gather/scatter copies and codec hot loops are row-band
+//!        parallel on the sequential paths and single-threaded inside
+//!        workers (no nested threading).
 //! - **L2 (`python/compile/model.py`):** the fixed-shape chunk program,
 //!   AOT-lowered to HLO text.
 //! - **L1 (`python/compile/kernels/`):** the Pallas multi-step stencil

@@ -14,7 +14,7 @@ use anyhow::{bail, Context, Result};
 use so2dr::chunking::{DecompMode, ResidencyConfig, ResidentMode, Scheme};
 use so2dr::config::RunConfig;
 use so2dr::coordinator::{
-    reference_run, run_scheme, run_scheme_full, HostBackend, KernelBackend,
+    reference_run, run_scheme, run_scheme_full_threads, HostBackend, KernelBackend,
 };
 use so2dr::gpu::MachineSpec;
 use so2dr::metrics::emit;
@@ -135,6 +135,10 @@ fn config_of(args: &Args) -> Result<RunConfig> {
     if let Some(v) = args.get("overlap") {
         cfg.overlap = parse_overlap(v)?;
     }
+    if let Some(v) = args.get("threads") {
+        let t: usize = v.parse().context("--threads must be an integer")?;
+        cfg.threads = so2dr::config::clamp_threads(t)?;
+    }
     if cfg.scheme == Scheme::ResReu {
         cfg.k_on = 1;
     }
@@ -192,7 +196,7 @@ fn cmd_run(args: &Args) -> Result<()> {
              \x20         [--sz N | --rows N --cols N] [--d N] [--s-tb N] [--k-on N] [--n N]\n\
              \x20         [--decomp rows|tiles] [--chunks-x N] [--chunks-y N]\n\
              \x20         [--devices N] [--d2d-gbps X] [--resident off|auto|force]\n\
-             \x20         [--compress off|bf16|lossless|auto] [--overlap on|off]\n\
+             \x20         [--compress off|bf16|lossless|auto] [--overlap on|off] [--threads N]\n\
              \x20         [--backend host-naive|host-opt|pjrt] [--no-verify x]"
         );
         return Ok(());
@@ -230,7 +234,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut backend = make_backend(&cfg)?;
     let t0 = std::time::Instant::now();
     let out = match cfg.decomp {
-        DecompMode::Rows => run_scheme_full(
+        DecompMode::Rows => run_scheme_full_threads(
             cfg.scheme,
             &initial,
             cfg.kind,
@@ -242,8 +246,9 @@ fn cmd_run(args: &Args) -> Result<()> {
             backend.as_mut(),
             &resident_cfg,
             cfg.compress,
+            cfg.threads,
         )?,
-        DecompMode::Tiles => so2dr::coordinator::run_scheme_tiles(
+        DecompMode::Tiles => so2dr::coordinator::run_scheme_tiles_threads(
             cfg.scheme,
             &initial,
             cfg.kind,
@@ -256,12 +261,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             backend.as_mut(),
             &resident_cfg,
             cfg.compress,
+            cfg.threads,
         )?,
     };
     let wall = t0.elapsed().as_secs_f64();
     let s = &out.stats;
     println!("backend: {}", backend.name());
     println!("wall time: {}", fmt_secs(wall));
+    println!("{}", so2dr::metrics::phase_wall_line(s, wall));
     println!(
         "epochs {}  kernels {}  fused-steps {}  HtoD {}  DtoH {}  O/D {}  P2P {} ({} copies)",
         s.epochs,
@@ -472,9 +479,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             "so2dr simulate [--scheme S] [--kind K] [--sz N] [--d N] [--devices N] [--d2d-gbps X]\n\
              \x20              [--decomp rows|tiles] [--chunks-x N] [--chunks-y N]\n\
              \x20              [--s-tb N] [--k-on N] [--n N] [--machine M] [--resident off|auto|force]\n\
-             \x20              [--compress off|bf16|lossless|auto] [--overlap on|off]"
+             \x20              [--compress off|bf16|lossless|auto] [--overlap on|off] [--threads N]"
         );
         return Ok(());
+    }
+    // `--threads` is accepted (and validated identically to `run`) for
+    // flag parity, but the DES prices the device schedule, not host
+    // threads — the executor thread budget has no modeled effect here.
+    if let Some(v) = args.get("threads") {
+        let t: usize = v.parse().context("--threads must be an integer")?;
+        so2dr::config::clamp_threads(t)?;
     }
     let machine = machine_of(args)?;
     let scheme = Scheme::parse(args.get("scheme").unwrap_or("so2dr")).context("bad scheme")?;
@@ -653,7 +667,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 fn cmd_figures(args: &Args) -> Result<()> {
     if args.help() {
         println!(
-            "so2dr figures [--fig tables|3b|5|6|7|8|9|10|ablation_kon|scaling|resident|compress|decomp|overlap|bench_pr2|bench_pr5|bench_pr6]\n\
+            "so2dr figures [--fig tables|3b|5|6|7|8|9|10|ablation_kon|scaling|resident|compress|decomp|overlap|bench_pr2|bench_pr5|bench_pr6|bench_pr7]\n\
              \x20             [--machine M]"
         );
         return Ok(());
@@ -724,4 +738,9 @@ Overlap: the DES prices a pipeline-honest schedule by default (codec\n\
 engine per device, halo/DtoH lanes, dependency-edged chunk chains);\n\
 `--overlap off` restores the legacy additive model for A/B pricing, and\n\
 `figures --fig overlap` (or `--fig bench_pr6`) tables the two side by\n\
-side at paper scale.\n";
+side at paper scale.\n\
+Threads: `--threads N` (TOML `threads`, default = host parallelism)\n\
+runs the real-numerics executor with one worker per simulated-device\n\
+range — bit-identical results at any thread count (enforced by the\n\
+determinism property suite); `figures --fig bench_pr7` records the\n\
+measured wall-clock trajectory next to the DES-predicted makespans.\n";

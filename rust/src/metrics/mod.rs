@@ -116,6 +116,26 @@ pub fn compression_line(stats: &ExecStats) -> String {
     )
 }
 
+/// One-line measured phase wall-clock report for `so2dr run`: the
+/// executor's per-phase timers (kernel compute, host staging transfers,
+/// halo traffic, codec round trips) next to the end-to-end wall and the
+/// worker count that produced them. Under `--threads N > 1` the phase
+/// sums are CPU time across workers, so they may legitimately exceed
+/// the wall — that surplus *is* the measured overlap.
+pub fn phase_wall_line(stats: &ExecStats, wall_s: f64) -> String {
+    let codec = stats.codec_compress_s + stats.codec_decompress_s;
+    format!(
+        "phases: kernel {}  transfer {}  halo {}  codec {}  (wall {}, {} worker{})",
+        crate::util::fmt_secs(stats.kernel_s),
+        crate::util::fmt_secs(stats.transfer_s),
+        crate::util::fmt_secs(stats.halo_s),
+        crate::util::fmt_secs(codec),
+        crate::util::fmt_secs(wall_s),
+        stats.workers.max(1),
+        if stats.workers.max(1) == 1 { "" } else { "s" },
+    )
+}
+
 /// Geometric mean of a slice (used for paper-style average speedups the
 /// paper itself reports as arithmetic means; we print both).
 pub fn geomean(xs: &[f64]) -> f64 {
@@ -236,6 +256,25 @@ mod tests {
             planned_htod_bytes: 0,
         };
         assert!(residency_line(&off, &ExecStats::default()).contains("off"));
+    }
+
+    #[test]
+    fn phase_wall_line_reports_timers_and_workers() {
+        let stats = ExecStats {
+            kernel_s: 1.5,
+            transfer_s: 0.5,
+            halo_s: 0.25,
+            codec_compress_s: 0.125,
+            codec_decompress_s: 0.125,
+            workers: 4,
+            ..Default::default()
+        };
+        let line = phase_wall_line(&stats, 0.75);
+        assert!(line.contains("kernel"), "{line}");
+        assert!(line.contains("4 workers"), "{line}");
+        let seq = phase_wall_line(&ExecStats::default(), 0.1);
+        assert!(seq.contains("1 worker"), "{seq}");
+        assert!(!seq.contains("1 workers"), "{seq}");
     }
 
     #[test]

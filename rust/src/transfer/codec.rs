@@ -196,9 +196,12 @@ impl Codec for IdentityCodec {
     }
 
     fn compress(&self, data: &[f32]) -> Vec<u8> {
-        let mut out = Vec::with_capacity(data.len() * 4);
-        for x in data {
-            out.extend_from_slice(&x.to_bits().to_le_bytes());
+        // Pre-sized output + fixed-width chunk writes: the loop body is
+        // a branch-free 4-byte store, which the compiler lowers to wide
+        // copies (`extend_from_slice` per element re-checks capacity).
+        let mut out = vec![0u8; data.len() * 4];
+        for (dst, x) in out.chunks_exact_mut(4).zip(data) {
+            dst.copy_from_slice(&x.to_bits().to_le_bytes());
         }
         out
     }
@@ -246,24 +249,60 @@ impl Codec for Bf16Codec {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BytePlaneCodec;
 
+/// Length of the zero run starting at `i`, capped at `cap` bytes. Scans
+/// word-at-a-time: a 0 u64 is eight run bytes at once, and the first
+/// nonzero word pinpoints the run end via its trailing zero *bytes*
+/// (little-endian reads keep byte order = memory order).
+fn zero_run(bytes: &[u8], start: usize, cap: usize) -> usize {
+    let end = bytes.len().min(start + cap);
+    let mut i = start;
+    while i + 8 <= end {
+        let w = u64::from_le_bytes(bytes[i..i + 8].try_into().expect("8-byte window"));
+        if w != 0 {
+            return i - start + (w.trailing_zeros() / 8) as usize;
+        }
+        i += 8;
+    }
+    while i < end && bytes[i] == 0 {
+        i += 1;
+    }
+    i - start
+}
+
+/// Length of the nonzero (literal) run starting at `i`, capped at `cap`
+/// bytes. The SWAR zero-byte test `(w - 0x0101..) & !w & 0x8080..` sets
+/// the high bit of exactly the zero bytes of `w` (no false positives),
+/// so the first zero byte falls out of `trailing_zeros`.
+fn literal_run(bytes: &[u8], start: usize, cap: usize) -> usize {
+    const LOW: u64 = 0x0101_0101_0101_0101;
+    const HIGH: u64 = 0x8080_8080_8080_8080;
+    let end = bytes.len().min(start + cap);
+    let mut i = start;
+    while i + 8 <= end {
+        let w = u64::from_le_bytes(bytes[i..i + 8].try_into().expect("8-byte window"));
+        let zeros = w.wrapping_sub(LOW) & !w & HIGH;
+        if zeros != 0 {
+            return i - start + (zeros.trailing_zeros() / 8) as usize;
+        }
+        i += 8;
+    }
+    while i < end && bytes[i] != 0 {
+        i += 1;
+    }
+    i - start
+}
+
 fn zrle_encode(bytes: &[u8]) -> Vec<u8> {
-    let mut out = Vec::new();
+    let mut out = Vec::with_capacity(bytes.len() / 16 + 8);
     let mut i = 0;
     while i < bytes.len() {
-        let mut z = 0usize;
-        while i < bytes.len() && bytes[i] == 0 && z < 255 {
-            z += 1;
-            i += 1;
-        }
-        let lit_start = i;
-        let mut l = 0usize;
-        while i < bytes.len() && bytes[i] != 0 && l < 255 {
-            l += 1;
-            i += 1;
-        }
+        let z = zero_run(bytes, i, 255);
+        i += z;
+        let l = literal_run(bytes, i, 255);
         out.push(z as u8);
         out.push(l as u8);
-        out.extend_from_slice(&bytes[lit_start..i]);
+        out.extend_from_slice(&bytes[i..i + l]);
+        i += l;
     }
     out
 }
@@ -305,19 +344,27 @@ impl Codec for BytePlaneCodec {
         let n = data.len();
         // XOR-delta concentrates the entropy of a smooth field in the
         // low planes: neighboring words share sign, exponent and the top
-        // mantissa bits, so their XOR has leading zero bytes.
-        let mut delta = Vec::with_capacity(n);
-        let mut prev = 0u32;
-        for &x in data {
-            let b = x.to_bits();
-            delta.push(b ^ prev);
-            prev = b;
+        // mantissa bits, so their XOR has leading zero bytes. The
+        // shifted-slice form makes every delta element independent
+        // (`delta[i] = bits[i] ^ bits[i-1]`), so the loop vectorizes —
+        // unlike the carried `prev` formulation.
+        let bits: Vec<u32> = data.iter().map(|x| x.to_bits()).collect();
+        let mut delta = vec![0u32; n];
+        if n > 0 {
+            delta[0] = bits[0];
+            for ((d, cur), prev) in delta[1..].iter_mut().zip(&bits[1..]).zip(&bits[..n - 1]) {
+                *d = cur ^ prev;
+            }
         }
         let mut out = Vec::new();
-        let mut plane = Vec::with_capacity(n);
+        let mut plane = vec![0u8; n];
         for p in 0..4 {
-            plane.clear();
-            plane.extend(delta.iter().map(|d| (d >> (8 * p)) as u8));
+            let shift = 8 * p;
+            // Branch-free gather of one byte lane; pre-sized + zipped so
+            // the bound checks hoist and the shift/truncate vectorizes.
+            for (b, d) in plane.iter_mut().zip(&delta) {
+                *b = (d >> shift) as u8;
+            }
             let stream = zrle_encode(&plane);
             out.extend_from_slice(&(stream.len() as u32).to_le_bytes());
             out.extend_from_slice(&stream);
@@ -344,18 +391,27 @@ impl Codec for BytePlaneCodec {
         if i != wire.len() {
             bail!("{} trailing bytes after plane 3", wire.len() - i);
         }
-        let mut out = Vec::with_capacity(n);
-        let mut prev = 0u32;
-        for j in 0..n {
-            let d = planes[0][j] as u32
-                | (planes[1][j] as u32) << 8
-                | (planes[2][j] as u32) << 16
-                | (planes[3][j] as u32) << 24;
-            let b = d ^ prev;
-            prev = b;
-            out.push(f32::from_bits(b));
+        // Recombine the four byte lanes into delta words with a zipped,
+        // vectorizable pass; only the prefix-XOR integration that
+        // follows is inherently serial.
+        let mut words = vec![0u32; n];
+        for ((((w, b0), b1), b2), b3) in words
+            .iter_mut()
+            .zip(&planes[0])
+            .zip(&planes[1])
+            .zip(&planes[2])
+            .zip(&planes[3])
+        {
+            *w = *b0 as u32 | (*b1 as u32) << 8 | (*b2 as u32) << 16 | (*b3 as u32) << 24;
         }
-        Ok(out)
+        let mut prev = 0u32;
+        Ok(words
+            .into_iter()
+            .map(|d| {
+                prev ^= d;
+                f32::from_bits(prev)
+            })
+            .collect())
     }
 }
 
@@ -493,5 +549,148 @@ mod tests {
         assert_eq!(CompressMode::Bf16.link_codec(big), CodecKind::Identity);
         assert_eq!(CompressMode::Lossless.link_codec(big), CodecKind::Lossless);
         assert_eq!(CompressMode::Auto.link_codec(small), CodecKind::Identity);
+    }
+
+    /// Byte-at-a-time reference implementations of the vectorized hot
+    /// loops. The wire format is frozen by these: the chunked/SWAR
+    /// paths must be *bit-identical*, not just round-trip-equivalent.
+    mod scalar_ref {
+        pub fn zrle_encode(bytes: &[u8]) -> Vec<u8> {
+            let mut out = Vec::new();
+            let mut i = 0;
+            while i < bytes.len() {
+                let mut z = 0usize;
+                while i < bytes.len() && bytes[i] == 0 && z < 255 {
+                    z += 1;
+                    i += 1;
+                }
+                let lit_start = i;
+                let mut l = 0usize;
+                while i < bytes.len() && bytes[i] != 0 && l < 255 {
+                    l += 1;
+                    i += 1;
+                }
+                out.push(z as u8);
+                out.push(l as u8);
+                out.extend_from_slice(&bytes[lit_start..i]);
+            }
+            out
+        }
+
+        pub fn byteplane_compress(data: &[f32]) -> Vec<u8> {
+            let mut delta = Vec::with_capacity(data.len());
+            let mut prev = 0u32;
+            for &x in data {
+                let b = x.to_bits();
+                delta.push(b ^ prev);
+                prev = b;
+            }
+            let mut out = Vec::new();
+            for p in 0..4 {
+                let plane: Vec<u8> = delta.iter().map(|d| (d >> (8 * p)) as u8).collect();
+                let stream = zrle_encode(&plane);
+                out.extend_from_slice(&(stream.len() as u32).to_le_bytes());
+                out.extend_from_slice(&stream);
+            }
+            out
+        }
+
+        pub fn identity_compress(data: &[f32]) -> Vec<u8> {
+            let mut out = Vec::with_capacity(data.len() * 4);
+            for x in data {
+                out.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+            out
+        }
+    }
+
+    /// Adversarial payloads for the vectorized-vs-scalar lock: run
+    /// boundaries at the u64 scan width, the 255-byte token cap, and
+    /// bit patterns (0x80 bytes, all-ones, NaNs) that would expose a
+    /// false positive in the SWAR zero-byte test.
+    fn adversarial_payloads() -> Vec<Vec<f32>> {
+        let mut out: Vec<Vec<f32>> = Vec::new();
+        // Lengths straddling the 8-element scan width: ≡ 0, 1, 7 mod 8.
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 255, 256, 257, 1023] {
+            out.push(vec![0.0f32; n]);
+            out.push(vec![f32::from_bits(0xFFFF_FFFF); n]);
+            out.push((0..n).map(|i| f32::from_bits(0x8080_8080u32.rotate_left(i as u32))).collect());
+        }
+        // NaN payload bit patterns (quiet/signaling, payload bits set).
+        out.push(vec![
+            f32::NAN,
+            f32::from_bits(0x7FC0_0001),
+            f32::from_bits(0xFF80_0001),
+            f32::from_bits(0x7F80_0001),
+            -0.0,
+            f32::MIN_POSITIVE,
+        ]);
+        // Zero/nonzero alternation at several periods (token churn).
+        for period in [1usize, 2, 3, 8, 9, 255, 256] {
+            out.push(
+                (0..600)
+                    .map(|i| if i % (period + 1) == 0 { 1.5f32 } else { 0.0 })
+                    .collect(),
+            );
+        }
+        // Smooth + rough fields from the existing generators.
+        out.push(Array2::synthetic(24, 41, 5).as_slice().to_vec());
+        out.push(Array2::random(17, 31, 77, -1e9, 1e9).as_slice().to_vec());
+        out
+    }
+
+    #[test]
+    fn vectorized_byteplane_bit_identical_to_scalar() {
+        for data in adversarial_payloads() {
+            let fast = BytePlaneCodec.compress(&data);
+            let slow = scalar_ref::byteplane_compress(&data);
+            assert_eq!(fast, slow, "wire drift on {} elems", data.len());
+            let back = BytePlaneCodec.decompress(&fast, data.len()).unwrap();
+            for (a, b) in data.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn vectorized_identity_bit_identical_to_scalar() {
+        for data in adversarial_payloads() {
+            assert_eq!(
+                IdentityCodec.compress(&data),
+                scalar_ref::identity_compress(&data),
+                "identity wire drift on {} elems",
+                data.len()
+            );
+        }
+    }
+
+    #[test]
+    fn zrle_word_scan_matches_scalar_on_adversarial_streams() {
+        let mut streams: Vec<Vec<u8>> = vec![
+            vec![],
+            vec![0],
+            vec![1],
+            vec![0x80; 9],         // SWAR false-positive guard: high bit set
+            vec![0x01; 9],         // SWAR boundary: subtrahend byte
+            vec![0xFF; 17],
+            vec![0; 254],
+            vec![0; 255],
+            vec![0; 256],          // zero run crossing the 255 token cap
+            vec![7; 256],          // literal run crossing the cap
+        ];
+        // Zero runs / literal runs ending at every offset within a word.
+        for cut in 0..=16usize {
+            let mut s = vec![0u8; cut];
+            s.extend_from_slice(&[9; 16]);
+            s.extend(vec![0u8; 16 - cut.min(16)]);
+            streams.push(s);
+        }
+        // Mixed churn with 0x80/0x00 adjacency.
+        streams.push((0..512).map(|i| if i % 3 == 0 { 0 } else { 0x80 }).collect());
+        for s in streams {
+            assert_eq!(zrle_encode(&s), scalar_ref::zrle_encode(&s), "len {}", s.len());
+            let enc = zrle_encode(&s);
+            assert_eq!(zrle_decode(&enc, s.len()).unwrap(), s);
+        }
     }
 }

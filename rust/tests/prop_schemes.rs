@@ -11,8 +11,8 @@
 
 use so2dr::chunking::{ResidencyConfig, Scheme};
 use so2dr::coordinator::{
-    reference_run, run_scheme_full, run_scheme_on, run_scheme_resident, run_scheme_tiles,
-    HostBackend,
+    reference_run, run_scheme_full, run_scheme_full_threads, run_scheme_on, run_scheme_resident,
+    run_scheme_tiles, run_scheme_tiles_threads, ExecStats, HostBackend,
 };
 use so2dr::stencil::{NaiveEngine, StencilKind};
 use so2dr::transfer::CompressMode;
@@ -683,6 +683,215 @@ fn prop_resident_tiles_lossless_bit_exact() {
         }
         Ok(())
     });
+}
+
+/// The logical (scheduling-determined) counters of a run: everything the
+/// threaded executor must reproduce exactly vs `threads = 1`. Wall-clock
+/// timers (`*_s`) and `workers` are deliberately excluded — those are the
+/// only fields allowed to differ across thread counts.
+fn logical_counters(s: &ExecStats) -> Vec<(&'static str, u64)> {
+    vec![
+        ("epochs", s.epochs as u64),
+        ("htod_bytes", s.htod_bytes),
+        ("dtoh_bytes", s.dtoh_bytes),
+        ("od_bytes", s.od_bytes),
+        ("rs_reads", s.rs_reads),
+        ("rs_writes", s.rs_writes),
+        ("kernel_invocations", s.kernel_invocations),
+        ("fused_steps", s.fused_steps),
+        ("p2p_bytes", s.p2p_bytes),
+        ("p2p_copies", s.p2p_copies),
+        ("computed_elems", s.computed_elems),
+        ("rs_peak_bytes", s.rs_peak_bytes),
+        ("arena_peak_bytes", s.arena_peak_bytes),
+        ("fetch_bytes", s.fetch_bytes),
+        ("fetch_reads", s.fetch_reads),
+        ("spills", s.spills),
+        ("spill_bytes", s.spill_bytes),
+        ("resident_hits", s.resident_hits),
+        ("htod_wire_bytes", s.htod_wire_bytes),
+        ("dtoh_wire_bytes", s.dtoh_wire_bytes),
+        ("p2p_wire_bytes", s.p2p_wire_bytes),
+        ("codec_ops", s.codec_ops),
+        ("codec_raw_bytes", s.codec_raw_bytes),
+    ]
+}
+
+fn compare_runs(
+    what: &str,
+    threads: usize,
+    seq: &so2dr::coordinator::RunOutcome,
+    par: &so2dr::coordinator::RunOutcome,
+) -> Result<(), String> {
+    if !par.grid.bit_eq(&seq.grid) {
+        return Err(format!(
+            "{what} diverged at threads={threads}: max |diff| = {}",
+            par.grid.max_abs_diff(&seq.grid)
+        ));
+    }
+    let sc = logical_counters(&seq.stats);
+    let pc = logical_counters(&par.stats);
+    for ((name, sv), (_, pv)) in sc.iter().zip(pc.iter()) {
+        if sv != pv {
+            return Err(format!(
+                "{what}: counter {name} differs at threads={threads}: seq {sv} vs par {pv}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// PR 7 determinism property (row decomposition): the threaded executor
+/// is bit-exact vs `threads = 1` — same grid bits AND identical logical
+/// counters — across random schemes × device counts × resident on/off ×
+/// compression. Non-vacuity is asserted at sweep level: at least one run
+/// must have actually engaged more than one worker (`stats.workers`),
+/// otherwise a silently-sequential fallback would pass vacuously.
+#[test]
+fn prop_threaded_executor_bit_exact_vs_sequential() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let max_workers = AtomicU64::new(0);
+    forall(
+        0x7D37,
+        50,
+        |rng| {
+            let mut c = gen_case(rng);
+            // Parallelism needs at least 2 devices over at least 2 chunks;
+            // infeasible/1-device tails would make the sweep mostly vacuous.
+            if c.d < 2 {
+                c.d = 2;
+                c.rows = c.d * (c.s_tb * c.radius() + c.radius() + 4);
+            }
+            if c.devices < 2 {
+                c.devices = 2;
+            }
+            c
+        },
+        shrink_case,
+        |c| {
+            if !c.feasible() || c.devices < 2 {
+                return Ok(());
+            }
+            let kind = c.kind();
+            let initial = Array2::synthetic(c.rows, c.cols, (c.rows * 43 + c.n) as u64);
+            for (scheme, k_on) in [(Scheme::So2dr, c.k_on), (Scheme::ResReu, 1)] {
+                for resident in [ResidencyConfig::off(), ResidencyConfig::force(3)] {
+                    for compress in [CompressMode::Off, CompressMode::Lossless] {
+                        let what = format!(
+                            "{} resident={:?} compress={compress:?}",
+                            scheme.name(),
+                            resident.mode
+                        );
+                        let mut backend = HostBackend::new(NaiveEngine);
+                        let seq = run_scheme_full_threads(
+                            scheme, &initial, kind, c.n, c.d, c.devices, c.s_tb, k_on,
+                            &mut backend, &resident, compress, 1,
+                        )
+                        .map_err(|e| format!("{what} seq failed: {e:#}"))?;
+                        for threads in [2usize, 4] {
+                            let mut backend = HostBackend::new(NaiveEngine);
+                            let par = run_scheme_full_threads(
+                                scheme, &initial, kind, c.n, c.d, c.devices, c.s_tb, k_on,
+                                &mut backend, &resident, compress, threads,
+                            )
+                            .map_err(|e| format!("{what} threads={threads} failed: {e:#}"))?;
+                            compare_runs(&what, threads, &seq, &par)?;
+                            max_workers.fetch_max(par.stats.workers, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+    assert!(
+        max_workers.load(Ordering::Relaxed) > 1,
+        "vacuous sweep: no run engaged more than one worker"
+    );
+}
+
+/// Tile-decomposition counterpart of the determinism property: random
+/// 2-D tilings × device counts × resident × codec, threaded vs
+/// sequential, with the same sweep-level non-vacuity witness.
+#[test]
+fn prop_threaded_tiles_bit_exact_vs_sequential() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let max_workers = AtomicU64::new(0);
+    forall(
+        0x7D37 + 1,
+        40,
+        |rng| {
+            let mut c = gen_tile_case(rng);
+            if c.chunks_y * c.chunks_x < 2 {
+                c.chunks_x = 2;
+                let r = c.kind().radius();
+                c.cols = c.chunks_x * (c.s_tb * r + r + 4);
+            }
+            if c.devices < 2 {
+                c.devices = 2;
+            }
+            c
+        },
+        shrink_tile_case,
+        |c| {
+            if !c.feasible() || c.devices < 2 || c.devices > c.chunks_y * c.chunks_x {
+                return Ok(());
+            }
+            let kind = c.kind();
+            let initial = Array2::synthetic(c.rows, c.cols, (c.cols * 47 + c.n) as u64);
+            for resident in [ResidencyConfig::off(), ResidencyConfig::force(3)] {
+                for compress in [CompressMode::Off, CompressMode::Lossless] {
+                    let what = format!(
+                        "{}x{} tiles resident={:?} compress={compress:?}",
+                        c.chunks_y, c.chunks_x, resident.mode
+                    );
+                    let mut backend = HostBackend::new(NaiveEngine);
+                    let seq = run_scheme_tiles_threads(
+                        Scheme::So2dr,
+                        &initial,
+                        kind,
+                        c.n,
+                        c.chunks_y,
+                        c.chunks_x,
+                        c.devices,
+                        c.s_tb,
+                        c.k_on,
+                        &mut backend,
+                        &resident,
+                        compress,
+                        1,
+                    )
+                    .map_err(|e| format!("{what} seq failed: {e:#}"))?;
+                    for threads in [2usize, 4] {
+                        let mut backend = HostBackend::new(NaiveEngine);
+                        let par = run_scheme_tiles_threads(
+                            Scheme::So2dr,
+                            &initial,
+                            kind,
+                            c.n,
+                            c.chunks_y,
+                            c.chunks_x,
+                            c.devices,
+                            c.s_tb,
+                            c.k_on,
+                            &mut backend,
+                            &resident,
+                            compress,
+                            threads,
+                        )
+                        .map_err(|e| format!("{what} threads={threads} failed: {e:#}"))?;
+                        compare_runs(&what, threads, &seq, &par)?;
+                        max_workers.fetch_max(par.stats.workers, Ordering::Relaxed);
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+    assert!(
+        max_workers.load(Ordering::Relaxed) > 1,
+        "vacuous sweep: no tiled run engaged more than one worker"
+    );
 }
 
 /// The acceptance-criterion configuration, pinned: `--devices 4` at d=8
