@@ -9,6 +9,8 @@
 //!  - parallel executor: threads 1/2/4 over 4 simulated devices;
 //!  - transfer codec hot loops (byte-plane compress/decompress);
 //!  - DES throughput (ops/s priced and scheduled);
+//!  - span tracing: DES replay with the recorder off vs on (the
+//!    zero-cost-when-off guard, measured);
 //!  - PJRT chunk-program execution (when artifacts are present).
 //!
 //! Set `SO2DR_BENCH_QUICK=1` for the CI smoke mode: bounded measurement
@@ -21,7 +23,7 @@ use so2dr::coordinator::{
     run_scheme, run_scheme_full_threads, HostBackend, KernelBackend, RegionShareBuffer,
 };
 use so2dr::gpu::cost::{CostModel, MachineSpec};
-use so2dr::gpu::des::simulate;
+use so2dr::gpu::des::{simulate, simulate_traced};
 use so2dr::gpu::flatten::flatten_run;
 use so2dr::runtime::PjrtBackend;
 use so2dr::stencil::{apply_step, NaiveEngine, OptimizedEngine, StencilEngine, StencilKind};
@@ -219,6 +221,39 @@ fn bench_des() {
     );
 }
 
+fn bench_trace() {
+    // The PR 8 zero-cost contract, measured: the same DES replay with
+    // the recorder off (must not allocate) and on (span per op). The
+    // off leg doubles as a hard guard — an allocation on the off path
+    // fails the bench run, not just the unit tests.
+    println!("\n=== span tracing: DES replay, recorder off vs on ===");
+    let dc = so2dr::Decomposition::new(38400, 38400, 8, 1);
+    let plans = so2dr::chunking::plan::plan_run(Scheme::ResReu, &dc, 640, 40, 1);
+    let buf_rows =
+        so2dr::coordinator::PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+    let ops = flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows);
+    let cost = CostModel::new(MachineSpec::rtx3080());
+    let (off_iters, off_per) = measure(budget(0.25), 2, || {
+        let mut rec = so2dr::trace::Recorder::off();
+        let _ = simulate_traced(&ops, &cost, 3, &mut rec);
+        assert_eq!(rec.buffered_capacity(), 0, "off recorder allocated on the hot path");
+    });
+    let mut span_count = 0usize;
+    let (on_iters, on_per) = measure(budget(0.25), 2, || {
+        let mut rec = so2dr::trace::Recorder::on();
+        let _ = simulate_traced(&ops, &cost, 3, &mut rec);
+        span_count = rec.spans().len();
+    });
+    assert!(span_count > 0, "live recorder captured no spans");
+    println!(
+        "[trace off] {off_iters} iters  {:.2} ms/replay\n\
+         [trace on ] {on_iters} iters  {:.2} ms/replay  ({span_count} spans, {:+.1}% overhead)",
+        off_per * 1e3,
+        on_per * 1e3,
+        100.0 * (on_per - off_per) / off_per.max(1e-12),
+    );
+}
+
 fn bench_pjrt() {
     println!("\n=== PJRT chunk program (box2d1r k=4 144x512) ===");
     let Ok(mut backend) = PjrtBackend::from_artifacts(&so2dr::runtime::default_artifact_dir())
@@ -252,6 +287,7 @@ fn main() {
     bench_parallel_executor();
     bench_codec();
     bench_des();
+    bench_trace();
     bench_pjrt();
     println!("\nhotpath_benches done.");
 }

@@ -61,6 +61,11 @@ pub struct RunConfig {
     pub seed: u64,
     /// Kernel backend: "host-naive", "host-opt" or "pjrt".
     pub backend: String,
+    /// Span-trace output path (`--trace` / `trace` key): when set, the
+    /// run records one span per executed op and writes a Chrome
+    /// trace-event JSON timeline here (`None`, the default, keeps the
+    /// zero-allocation hot path).
+    pub trace: Option<std::path::PathBuf>,
 }
 
 /// Ceiling on the executor thread budget. Worker count is additionally
@@ -118,6 +123,7 @@ impl Default for RunConfig {
             threads: crate::util::threads::default_threads(),
             seed: 42,
             backend: "host-opt".into(),
+            trace: None,
         }
     }
 }
@@ -187,6 +193,13 @@ impl RunConfig {
                     "threads" => cfg.threads = clamp_threads(s.usize_req("threads")?)?,
                     "seed" => cfg.seed = s.int_or("seed", 42) as u64,
                     "backend" => cfg.backend = s.str_or("backend", "host-opt"),
+                    "trace" => {
+                        let v = s.str_req("trace")?;
+                        if v.is_empty() {
+                            bail!("trace path must be a non-empty string");
+                        }
+                        cfg.trace = Some(std::path::PathBuf::from(v));
+                    }
                     other => bail!("unknown key {other:?}"),
                 }
             }
@@ -377,6 +390,15 @@ mod tests {
     }
 
     #[test]
+    fn parses_trace_key() {
+        assert_eq!(RunConfig::default().trace, None, "tracing is opt-in");
+        let cfg = RunConfig::from_toml("trace = \"out/trace.json\"\n").unwrap();
+        assert_eq!(cfg.trace, Some(std::path::PathBuf::from("out/trace.json")));
+        assert!(RunConfig::from_toml("trace = \"\"\n").is_err());
+        assert!(RunConfig::from_toml("trace = 1\n").is_err());
+    }
+
+    #[test]
     fn parses_decomp_keys() {
         let cfg = RunConfig::from_toml(
             "decomp = \"tiles\"\nchunks_x = 3\nchunks_y = 2\nsz = 256\n",
@@ -482,6 +504,9 @@ mod tests {
             ("threads = 100000\n", true), // clamped, not rejected
             ("threads = 0\n", false),
             ("threads = \"all\"\n", false),
+            ("trace = \"out/trace.json\"\n", true),
+            ("trace = \"\"\n", false),
+            ("trace = 1\n", false),
             ("decomp = \"rows\"\n", true),
             ("decomp = \"tiles\"\nchunks_x = 2\nchunks_y = 2\n", true),
             ("decomp = \"tiles\"\nchunks_x = 4\nchunks_y = 1\ndevices = 2\n", true),

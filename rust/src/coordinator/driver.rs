@@ -10,6 +10,7 @@ use crate::coordinator::backend::KernelBackend;
 use crate::coordinator::exec::{ExecStats, PlanExecutor};
 use crate::core::{Array2, Rect};
 use crate::stencil::{apply_step, StencilEngine, StencilKind};
+use crate::trace::Recorder;
 use crate::transfer::CompressMode;
 use anyhow::Result;
 
@@ -126,6 +127,35 @@ pub fn run_scheme_full_threads(
     compress: CompressMode,
     threads: usize,
 ) -> Result<RunOutcome> {
+    run_scheme_full_threads_traced(
+        scheme, initial, kind, n, d, n_devices, s_tb, k_on, backend, resident, compress,
+        threads, false,
+    )
+    .map(|(out, _)| out)
+}
+
+/// [`run_scheme_full_threads`] with wall-clock span tracing: when
+/// `trace` is set, every executed op leaves a [`crate::trace::Span`]
+/// (worker-id lane, real timestamps) in the returned [`Recorder`] —
+/// ready for [`Recorder::chrome_json`] or the metrics reports. Tracing
+/// never perturbs results; with `trace == false` the recorder comes
+/// back empty and the run is byte-for-byte the untraced entry point.
+#[allow(clippy::too_many_arguments)]
+pub fn run_scheme_full_threads_traced(
+    scheme: Scheme,
+    initial: &Array2,
+    kind: StencilKind,
+    n: usize,
+    d: usize,
+    n_devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    backend: &mut dyn KernelBackend,
+    resident: &ResidencyConfig,
+    compress: CompressMode,
+    threads: usize,
+    trace: bool,
+) -> Result<(RunOutcome, Recorder)> {
     crate::config::validate_devices(scheme, d, n_devices)?;
     let dc = Decomposition::try_new(initial.rows(), initial.cols(), d, kind.radius())?;
     let devs = if scheme == Scheme::InCore {
@@ -138,9 +168,11 @@ pub fn run_scheme_full_threads(
     let mut grid = initial.clone();
     let mut exec = PlanExecutor::new(backend, kind);
     exec.set_threads(threads);
+    exec.set_trace(trace);
     exec.run(&mut grid, &dc, &plans)?;
     let stats = exec.stats.clone();
-    Ok(RunOutcome { grid, stats, residency: Some(summary) })
+    let rec = exec.take_trace();
+    Ok((RunOutcome { grid, stats, residency: Some(summary) }, rec))
 }
 
 /// Run `n` time steps under the 2-D tile decomposition (`--decomp
@@ -204,6 +236,32 @@ pub fn run_scheme_tiles_threads(
     compress: CompressMode,
     threads: usize,
 ) -> Result<RunOutcome> {
+    run_scheme_tiles_threads_traced(
+        scheme, initial, kind, n, chunks_y, chunks_x, n_devices, s_tb, k_on, backend,
+        resident, compress, threads, false,
+    )
+    .map(|(out, _)| out)
+}
+
+/// [`run_scheme_tiles_threads`] with wall-clock span tracing; same
+/// contract as [`run_scheme_full_threads_traced`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_scheme_tiles_threads_traced(
+    scheme: Scheme,
+    initial: &Array2,
+    kind: StencilKind,
+    n: usize,
+    chunks_y: usize,
+    chunks_x: usize,
+    n_devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    backend: &mut dyn KernelBackend,
+    resident: &ResidencyConfig,
+    compress: CompressMode,
+    threads: usize,
+    trace: bool,
+) -> Result<(RunOutcome, Recorder)> {
     let dc =
         Decomposition2d::try_new(initial.rows(), initial.cols(), chunks_y, chunks_x, kind.radius())?;
     crate::config::validate_devices(scheme, dc.n_tiles(), n_devices)?;
@@ -214,9 +272,11 @@ pub fn run_scheme_tiles_threads(
     let mut grid = initial.clone();
     let mut exec = PlanExecutor::new(backend, kind);
     exec.set_threads(threads);
+    exec.set_trace(trace);
     exec.run_tiles(&mut grid, &dc, &plans)?;
     let stats = exec.stats.clone();
-    Ok(RunOutcome { grid, stats, residency: Some(summary) })
+    let rec = exec.take_trace();
+    Ok((RunOutcome { grid, stats, residency: Some(summary) }, rec))
 }
 
 /// [`run_scheme_full`] without compression (the PR 2 entry point).

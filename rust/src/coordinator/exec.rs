@@ -84,7 +84,10 @@ use crate::chunking::{Decomposition, Decomposition2d};
 use crate::coordinator::backend::KernelBackend;
 use crate::coordinator::rs_buffer::RegionShareBuffer;
 use crate::core::{Array2, Rect, RowSpan};
+use crate::gpu::flatten::OpKind;
+use crate::trace::{Recorder, Span};
 use crate::transfer::codec::CodecKind;
+use crate::util::Lap;
 use anyhow::{anyhow, bail, Context, Result};
 use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::Instant;
@@ -621,6 +624,44 @@ struct OpInterp<'a, B: KernelBackend + ?Sized> {
     /// workers get `1` — device-level parallelism already owns the
     /// cores, and nesting would only fight it.
     copy_threads: usize,
+    /// Wall-clock span recorder (the executor's shard of it — workers
+    /// carry a [`Recorder::fork`]). Off by default: recording is then a
+    /// branch, never an allocation.
+    trace: &'a mut Recorder,
+    /// Trace thread id of the spans this interpreter emits: the worker
+    /// index (0 for the sequential paths).
+    lane: usize,
+    /// Epoch index of the plan currently executing (span context).
+    epoch: usize,
+    /// Resident pass index, when the execution model has passes.
+    pass: Option<usize>,
+}
+
+/// The span a [`ChunkOp`] leaves in the trace: DES op category, raw
+/// payload bytes, codec tag, touched rect. `Resident` markers move no
+/// data and leave no span. The category map mirrors the flattener's:
+/// `Evict` is a real DtoH; `RsRead`/`RsWrite`/`Fetch` are on-device
+/// sharing copies (`D2D`, the paper's "O/D"); `ChunkOp::D2D` is the
+/// inter-device link hop (`P2p`).
+fn span_shape(op: &ChunkOp) -> Option<(OpKind, u64, CodecKind, Option<Rect>)> {
+    match op {
+        ChunkOp::Resident { .. } => None,
+        ChunkOp::HtoD { rect, codec } => {
+            Some((OpKind::HtoD, rect.bytes_f32(), *codec, Some(*rect)))
+        }
+        ChunkOp::DtoH { rect, codec } | ChunkOp::Evict { rect, codec } => {
+            Some((OpKind::DtoH, rect.bytes_f32(), *codec, Some(*rect)))
+        }
+        ChunkOp::RsRead(r) | ChunkOp::RsWrite(r) | ChunkOp::Fetch(r) => {
+            Some((OpKind::D2D, r.rect.bytes_f32(), CodecKind::Identity, Some(r.rect)))
+        }
+        ChunkOp::D2D { rect, codec, .. } => {
+            Some((OpKind::P2p, rect.bytes_f32(), *codec, Some(*rect)))
+        }
+        ChunkOp::Kernel(inv) => {
+            Some((OpKind::Kernel, 0, CodecKind::Identity, inv.windows.first().copied()))
+        }
+    }
 }
 
 impl<B: KernelBackend + ?Sized> OpInterp<'_, B> {
@@ -654,6 +695,14 @@ impl<B: KernelBackend + ?Sized> OpInterp<'_, B> {
     /// addressed by the chunk's 2-D `base` and the uniform arena `dims`.
     /// `resident` gates the resident-model ops (a staged plan containing
     /// them is a plan bug, surfaced loudly).
+    ///
+    /// Each op runs under an RAII [`Lap`] guard into a local
+    /// accumulator, committed to the op's phase timer
+    /// (`transfer_s`/`halo_s`/`kernel_s`) after the op returns — on
+    /// *every* exit path, so a `?` inside an arm can no longer leak the
+    /// lap the old inline `t0.elapsed()` pattern dropped. When the
+    /// recorder is live the same lap becomes the op's wall-clock
+    /// [`Span`].
     #[allow(clippy::too_many_arguments)]
     fn exec_ops(
         &mut self,
@@ -666,171 +715,220 @@ impl<B: KernelBackend + ?Sized> OpInterp<'_, B> {
         view: &mut ArenaView<'_>,
     ) -> Result<()> {
         for op in ops {
+            let start_s = self.trace.now_s();
+            let mut lap_s = 0.0f64;
+            let r = {
+                let _lap = Lap::new(&mut lap_s);
+                self.exec_op(side, cp, op, base, dims, resident, view)
+            };
             match op {
-                ChunkOp::Resident { .. } => {
-                    if !resident {
-                        bail!("resident-model op in a staged epoch (plan bug)");
-                    }
-                    if !view.is_live(cp.chunk) {
-                        bail!("chunk {} marked resident but its arena is dead", cp.chunk);
-                    }
-                    self.stats.resident_hits += 1;
+                ChunkOp::HtoD { .. } | ChunkOp::DtoH { .. } | ChunkOp::Evict { .. } => {
+                    self.stats.transfer_s += lap_s;
                 }
-                ChunkOp::HtoD { rect, codec } => {
-                    let t0 = Instant::now();
-                    let local = to_local(*rect, base, dims)?;
-                    let pair = view.arrive(cp, dims.0, dims.1);
-                    let wire = if *codec == CodecKind::Identity {
-                        side.copy_in(*rect, &mut pair.0, local, self.copy_threads);
-                        rect.bytes_f32()
-                    } else {
-                        let staged = side.read_rect(*rect, self.copy_threads);
-                        let mut landed = Array2::zeros(staged.rows(), staged.cols());
-                        let wire =
-                            self.codec_copy(*codec, staged.as_slice(), landed.as_mut_slice())?;
-                        pair.0.insert_rect(local, &landed);
-                        wire
-                    };
-                    self.stats.htod_bytes += rect.bytes_f32();
-                    self.stats.htod_wire_bytes += wire;
-                    self.stats.transfer_s += t0.elapsed().as_secs_f64();
+                ChunkOp::RsRead(_)
+                | ChunkOp::RsWrite(_)
+                | ChunkOp::Fetch(_)
+                | ChunkOp::D2D { .. } => {
+                    self.stats.halo_s += lap_s;
                 }
-                ChunkOp::DtoH { rect, codec } => {
-                    let t0 = Instant::now();
-                    let local = to_local(*rect, base, dims)?;
-                    let pair = view.pair(cp)?;
-                    let wire = if *codec == CodecKind::Identity {
-                        side.copy_out(&pair.0, local, *rect, self.copy_threads);
-                        rect.bytes_f32()
-                    } else {
-                        let staged = pair.0.extract_rect(local);
-                        let mut landed = Array2::zeros(staged.rows(), staged.cols());
-                        let wire =
-                            self.codec_copy(*codec, staged.as_slice(), landed.as_mut_slice())?;
-                        side.write_rect(*rect, &landed, self.copy_threads);
-                        wire
-                    };
-                    self.stats.dtoh_bytes += rect.bytes_f32();
-                    self.stats.dtoh_wire_bytes += wire;
-                    self.stats.transfer_s += t0.elapsed().as_secs_f64();
-                }
-                ChunkOp::Evict { rect, codec } => {
-                    if !resident {
-                        bail!("resident-model op in a staged epoch (plan bug)");
-                    }
-                    let t0 = Instant::now();
-                    let local = to_local(*rect, base, dims)?;
-                    let pair = view.pair(cp)?;
-                    let wire = if *codec == CodecKind::Identity {
-                        side.copy_out(&pair.0, local, *rect, self.copy_threads);
-                        rect.bytes_f32()
-                    } else {
-                        let staged = pair.0.extract_rect(local);
-                        let mut landed = Array2::zeros(staged.rows(), staged.cols());
-                        let wire =
-                            self.codec_copy(*codec, staged.as_slice(), landed.as_mut_slice())?;
-                        side.write_rect(*rect, &landed, self.copy_threads);
-                        wire
-                    };
-                    let bytes = rect.bytes_f32();
-                    self.stats.dtoh_bytes += bytes;
-                    self.stats.dtoh_wire_bytes += wire;
-                    self.stats.spill_bytes += bytes;
-                    self.stats.spills += 1;
-                    self.stats.transfer_s += t0.elapsed().as_secs_f64();
-                    view.release(cp.chunk);
-                }
-                ChunkOp::RsRead(region) => {
-                    let t0 = Instant::now();
-                    let local = to_local(region.rect, base, dims)?;
-                    let data = side
-                        .rs_read(cp.device, region.rect, region.time_step)
-                        .with_context(|| {
-                            format!(
-                                "RS region {} @t{} missing on device {} (chunk {})",
-                                region.rect, region.time_step, cp.device, cp.chunk
-                            )
-                        })?;
-                    view.pair(cp)?.0.insert_rect(local, &data);
-                    self.stats.halo_s += t0.elapsed().as_secs_f64();
-                }
-                ChunkOp::Fetch(region) => {
-                    if !resident {
-                        bail!("resident-model op in a staged epoch (plan bug)");
-                    }
-                    let t0 = Instant::now();
-                    let local = to_local(region.rect, base, dims)?;
-                    let data = side
-                        .rs_read(cp.device, region.rect, region.time_step)
-                        .with_context(|| {
-                            format!(
-                                "fetch region {} missing on device {} (chunk {})",
-                                region.rect, cp.device, cp.chunk
-                            )
-                        })?;
-                    self.stats.fetch_bytes += data.size_bytes();
-                    self.stats.fetch_reads += 1;
-                    view.pair(cp)?.0.insert_rect(local, &data);
-                    self.stats.halo_s += t0.elapsed().as_secs_f64();
-                }
-                ChunkOp::RsWrite(region) => {
-                    let t0 = Instant::now();
-                    let local = to_local(region.rect, base, dims)?;
-                    let data = view.pair(cp)?.0.extract_rect(local);
-                    side.rs_write(cp.device, region.rect, region.time_step, data);
-                    self.stats.halo_s += t0.elapsed().as_secs_f64();
-                }
-                ChunkOp::D2D { src_dev, dst_dev, rect, time_step, codec } => {
-                    let t0 = Instant::now();
-                    let data = side
-                        .rs_peek(*src_dev, *rect, *time_step)
-                        .with_context(|| {
-                            format!(
-                                "D2D region {} @t{} missing on source device {}",
-                                rect, time_step, src_dev
-                            )
-                        })?;
-                    let raw = data.size_bytes();
-                    let landed = if *codec == CodecKind::Identity {
-                        self.stats.p2p_wire_bytes += raw;
-                        data
-                    } else {
-                        let mut landed = Array2::zeros(data.rows(), data.cols());
-                        let all = RowSpan::new(0, data.rows());
-                        let wire = self.codec_copy(
-                            *codec,
-                            data.rows_slice(all),
-                            landed.rows_slice_mut(all),
-                        )?;
-                        self.stats.p2p_wire_bytes += wire;
-                        landed
-                    };
-                    self.stats.p2p_bytes += raw;
-                    self.stats.p2p_copies += 1;
-                    side.rs_receive(*dst_dev, *rect, *time_step, landed);
-                    self.stats.halo_s += t0.elapsed().as_secs_f64();
-                }
-                ChunkOp::Kernel(inv) => {
-                    let mut local_windows = Vec::with_capacity(inv.windows.len());
-                    for w in &inv.windows {
-                        let lw = to_local(*w, base, dims)?;
-                        self.stats.computed_elems += lw.area() as u64;
-                        local_windows.push(lw);
-                    }
-                    let pair = view.pair(cp)?;
-                    let t0 = Instant::now();
-                    self.backend
-                        .run_kernel(self.kind, &mut pair.0, &mut pair.1, &local_windows)
-                        .with_context(|| {
-                            format!("kernel chunk {} step {}", cp.chunk, inv.first_step)
-                        })?;
-                    self.stats.kernel_s += t0.elapsed().as_secs_f64();
-                    self.stats.kernel_invocations += 1;
-                    self.stats.fused_steps += inv.windows.len() as u64;
+                ChunkOp::Kernel(_) => self.stats.kernel_s += lap_s,
+                ChunkOp::Resident { .. } => {}
+            }
+            let wire = r?;
+            if let Some(start_s) = start_s {
+                if let Some((kind, raw_bytes, codec, rect)) = span_shape(op) {
+                    self.trace.record(Span {
+                        device: cp.device,
+                        lane: self.lane,
+                        kind,
+                        start_s,
+                        end_s: start_s + lap_s,
+                        chunk: cp.chunk,
+                        epoch: self.epoch,
+                        pass: self.pass,
+                        bytes: wire,
+                        raw_bytes,
+                        codec,
+                        rect,
+                    });
                 }
             }
         }
         Ok(())
+    }
+
+    /// One op of an [`Self::exec_ops`] slice. Returns the bytes that
+    /// crossed the op's channel after its transfer codec (raw bytes for
+    /// identity-tagged and on-device copies, 0 for kernels and resident
+    /// markers) — the executor-side analog of
+    /// [`crate::gpu::flatten::SimOp::bytes`], folded into the op's span.
+    #[allow(clippy::too_many_arguments)]
+    fn exec_op(
+        &mut self,
+        side: &mut HostSide<'_>,
+        cp: &ChunkEpochPlan,
+        op: &ChunkOp,
+        base: (i64, i64),
+        dims: (usize, usize),
+        resident: bool,
+        view: &mut ArenaView<'_>,
+    ) -> Result<u64> {
+        match op {
+            ChunkOp::Resident { .. } => {
+                if !resident {
+                    bail!("resident-model op in a staged epoch (plan bug)");
+                }
+                if !view.is_live(cp.chunk) {
+                    bail!("chunk {} marked resident but its arena is dead", cp.chunk);
+                }
+                self.stats.resident_hits += 1;
+                Ok(0)
+            }
+            ChunkOp::HtoD { rect, codec } => {
+                let local = to_local(*rect, base, dims)?;
+                let pair = view.arrive(cp, dims.0, dims.1);
+                let wire = if *codec == CodecKind::Identity {
+                    side.copy_in(*rect, &mut pair.0, local, self.copy_threads);
+                    rect.bytes_f32()
+                } else {
+                    let staged = side.read_rect(*rect, self.copy_threads);
+                    let mut landed = Array2::zeros(staged.rows(), staged.cols());
+                    let wire =
+                        self.codec_copy(*codec, staged.as_slice(), landed.as_mut_slice())?;
+                    pair.0.insert_rect(local, &landed);
+                    wire
+                };
+                self.stats.htod_bytes += rect.bytes_f32();
+                self.stats.htod_wire_bytes += wire;
+                Ok(wire)
+            }
+            ChunkOp::DtoH { rect, codec } => {
+                let local = to_local(*rect, base, dims)?;
+                let pair = view.pair(cp)?;
+                let wire = if *codec == CodecKind::Identity {
+                    side.copy_out(&pair.0, local, *rect, self.copy_threads);
+                    rect.bytes_f32()
+                } else {
+                    let staged = pair.0.extract_rect(local);
+                    let mut landed = Array2::zeros(staged.rows(), staged.cols());
+                    let wire =
+                        self.codec_copy(*codec, staged.as_slice(), landed.as_mut_slice())?;
+                    side.write_rect(*rect, &landed, self.copy_threads);
+                    wire
+                };
+                self.stats.dtoh_bytes += rect.bytes_f32();
+                self.stats.dtoh_wire_bytes += wire;
+                Ok(wire)
+            }
+            ChunkOp::Evict { rect, codec } => {
+                if !resident {
+                    bail!("resident-model op in a staged epoch (plan bug)");
+                }
+                let local = to_local(*rect, base, dims)?;
+                let pair = view.pair(cp)?;
+                let wire = if *codec == CodecKind::Identity {
+                    side.copy_out(&pair.0, local, *rect, self.copy_threads);
+                    rect.bytes_f32()
+                } else {
+                    let staged = pair.0.extract_rect(local);
+                    let mut landed = Array2::zeros(staged.rows(), staged.cols());
+                    let wire =
+                        self.codec_copy(*codec, staged.as_slice(), landed.as_mut_slice())?;
+                    side.write_rect(*rect, &landed, self.copy_threads);
+                    wire
+                };
+                let bytes = rect.bytes_f32();
+                self.stats.dtoh_bytes += bytes;
+                self.stats.dtoh_wire_bytes += wire;
+                self.stats.spill_bytes += bytes;
+                self.stats.spills += 1;
+                view.release(cp.chunk);
+                Ok(wire)
+            }
+            ChunkOp::RsRead(region) => {
+                let local = to_local(region.rect, base, dims)?;
+                let data = side
+                    .rs_read(cp.device, region.rect, region.time_step)
+                    .with_context(|| {
+                        format!(
+                            "RS region {} @t{} missing on device {} (chunk {})",
+                            region.rect, region.time_step, cp.device, cp.chunk
+                        )
+                    })?;
+                view.pair(cp)?.0.insert_rect(local, &data);
+                Ok(data.size_bytes())
+            }
+            ChunkOp::Fetch(region) => {
+                if !resident {
+                    bail!("resident-model op in a staged epoch (plan bug)");
+                }
+                let local = to_local(region.rect, base, dims)?;
+                let data = side
+                    .rs_read(cp.device, region.rect, region.time_step)
+                    .with_context(|| {
+                        format!(
+                            "fetch region {} missing on device {} (chunk {})",
+                            region.rect, cp.device, cp.chunk
+                        )
+                    })?;
+                self.stats.fetch_bytes += data.size_bytes();
+                self.stats.fetch_reads += 1;
+                view.pair(cp)?.0.insert_rect(local, &data);
+                Ok(data.size_bytes())
+            }
+            ChunkOp::RsWrite(region) => {
+                let local = to_local(region.rect, base, dims)?;
+                let data = view.pair(cp)?.0.extract_rect(local);
+                let bytes = data.size_bytes();
+                side.rs_write(cp.device, region.rect, region.time_step, data);
+                Ok(bytes)
+            }
+            ChunkOp::D2D { src_dev, dst_dev, rect, time_step, codec } => {
+                let data = side
+                    .rs_peek(*src_dev, *rect, *time_step)
+                    .with_context(|| {
+                        format!(
+                            "D2D region {} @t{} missing on source device {}",
+                            rect, time_step, src_dev
+                        )
+                    })?;
+                let raw = data.size_bytes();
+                let (landed, wire) = if *codec == CodecKind::Identity {
+                    (data, raw)
+                } else {
+                    let mut landed = Array2::zeros(data.rows(), data.cols());
+                    let all = RowSpan::new(0, data.rows());
+                    let wire = self.codec_copy(
+                        *codec,
+                        data.rows_slice(all),
+                        landed.rows_slice_mut(all),
+                    )?;
+                    (landed, wire)
+                };
+                self.stats.p2p_wire_bytes += wire;
+                self.stats.p2p_bytes += raw;
+                self.stats.p2p_copies += 1;
+                side.rs_receive(*dst_dev, *rect, *time_step, landed);
+                Ok(wire)
+            }
+            ChunkOp::Kernel(inv) => {
+                let mut local_windows = Vec::with_capacity(inv.windows.len());
+                for w in &inv.windows {
+                    let lw = to_local(*w, base, dims)?;
+                    self.stats.computed_elems += lw.area() as u64;
+                    local_windows.push(lw);
+                }
+                let pair = view.pair(cp)?;
+                self.backend
+                    .run_kernel(self.kind, &mut pair.0, &mut pair.1, &local_windows)
+                    .with_context(|| {
+                        format!("kernel chunk {} step {}", cp.chunk, inv.first_step)
+                    })?;
+                self.stats.kernel_invocations += 1;
+                self.stats.fused_steps += inv.windows.len() as u64;
+                Ok(0)
+            }
+        }
     }
 }
 
@@ -854,11 +952,35 @@ pub struct PlanExecutor<'a, B: KernelBackend + ?Sized> {
     /// [`Self::set_threads`]).
     threads: usize,
     pub stats: ExecStats,
+    /// Wall-clock span recorder ([`Recorder::off`] by default — the
+    /// zero-cost path; see [`Self::set_trace`]).
+    trace: Recorder,
 }
 
 impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
     pub fn new(backend: &'a mut B, kind: crate::stencil::StencilKind) -> Self {
-        Self { backend, kind, threads: 1, stats: ExecStats::default() }
+        Self { backend, kind, threads: 1, stats: ExecStats::default(), trace: Recorder::off() }
+    }
+
+    /// Enable (or disable) wall-clock span tracing for subsequent runs.
+    /// Enabling pins the recorder's time origin *now*; workers fork it,
+    /// so their timestamps share one axis. Tracing never changes
+    /// results — the differential suite pins grids and logical counters
+    /// bit-exactly against an untraced run.
+    pub fn set_trace(&mut self, on: bool) {
+        self.trace = if on { Recorder::on() } else { Recorder::off() };
+    }
+
+    /// Take the recorded trace (leaving an off recorder behind), with
+    /// every `(device, worker)` row labeled for the trace viewer.
+    pub fn take_trace(&mut self) -> Recorder {
+        let mut rec = std::mem::take(&mut self.trace);
+        let rows: Vec<(usize, usize)> =
+            rec.spans().iter().map(|s| (s.device, s.lane)).collect();
+        for (d, l) in rows {
+            rec.name_track(d, l, &format!("worker{l}"));
+        }
+        rec
     }
 
     /// Set the worker-thread budget. Effective workers are capped at
@@ -894,14 +1016,19 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         (dc.resident_base(plan.scheme, plan.steps, chunk), 0)
     }
 
-    /// A fresh interpreter borrowing this executor's backend and stats
-    /// (the sequential execution paths).
-    fn interp(&mut self) -> OpInterp<'_, B> {
+    /// A fresh interpreter borrowing this executor's backend, stats and
+    /// recorder (the sequential execution paths — trace lane 0).
+    /// `epoch`/`pass` seed the span context for the ops it executes.
+    fn interp(&mut self, epoch: usize, pass: Option<usize>) -> OpInterp<'_, B> {
         OpInterp {
             backend: &mut *self.backend,
             kind: self.kind,
             stats: &mut self.stats,
             copy_threads: self.threads,
+            trace: &mut self.trace,
+            lane: 0,
+            epoch,
+            pass,
         }
     }
 
@@ -1029,8 +1156,8 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                     .map(|_| (Array2::zeros(buf_rows, cols), Array2::zeros(buf_rows, cols)))
                     .collect(),
             );
-            for plan in plans {
-                self.run_epoch(grid, dc, plan, buf_rows, cols, &mut rs, &mut store)
+            for (epoch, plan) in plans.iter().enumerate() {
+                self.run_epoch(grid, dc, plan, epoch, buf_rows, cols, &mut rs, &mut store)
                     .with_context(|| format!("epoch at step {}", plan.start_step))?;
                 for r in rs.iter_mut() {
                     r.clear();
@@ -1109,12 +1236,12 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         );
         let arena_bytes = n_devices as u64 * 2 * (buf_rows * buf_cols * 4) as u64;
         self.stats.arena_peak_bytes = self.stats.arena_peak_bytes.max(arena_bytes);
-        for plan in plans {
+        for (epoch, plan) in plans.iter().enumerate() {
             for cp in &plan.chunks {
                 let base = dc.tile_base(cp.chunk, plan.steps);
                 let mut side = HostSide::Seq { grid: &mut *grid, rs: &mut rs };
                 let mut view = store.view();
-                self.interp()
+                self.interp(epoch, None)
                     .exec_ops(
                         &mut side,
                         cp,
@@ -1157,14 +1284,14 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         rs: &mut [RegionShareBuffer],
     ) -> Result<()> {
         let mut store = ArenaStore::Resident((0..dc.n_tiles()).map(|_| None).collect());
-        for plan in plans {
+        for (epoch, plan) in plans.iter().enumerate() {
             for (pass, segments) in resident_pass_sequences(plan).into_iter().enumerate() {
                 for (ci, range) in segments {
                     let cp = &plan.chunks[ci];
                     let base = dc.tile_base(cp.chunk, s_max);
                     let mut side = HostSide::Seq { grid: &mut *grid, rs: &mut *rs };
                     let mut view = store.view();
-                    self.interp()
+                    self.interp(epoch, Some(pass))
                         .exec_ops(&mut side, cp, &cp.ops[range], base, dims, true, &mut view)
                         .with_context(|| {
                             format!("epoch at step {} tile {}", plan.start_step, cp.chunk)
@@ -1202,6 +1329,7 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         grid: &mut Array2,
         dc: &Decomposition,
         plan: &EpochPlan,
+        epoch: usize,
         buf_rows: usize,
         cols: usize,
         rs: &mut [RegionShareBuffer],
@@ -1218,7 +1346,7 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
             {
                 let mut side = HostSide::Seq { grid: &mut *grid, rs: &mut *rs };
                 let mut view = store.view();
-                self.interp().exec_ops(
+                self.interp(epoch, None).exec_ops(
                     &mut side,
                     cp,
                     &cp.ops,
@@ -1255,14 +1383,14 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         let scheme = plans.first().map(|p| p.scheme).unwrap_or(Scheme::So2dr);
         let s_max = plans.iter().map(|p| p.steps).max().unwrap_or(1);
         let mut store = ArenaStore::Resident((0..dc.n_chunks()).map(|_| None).collect());
-        for plan in plans {
+        for (epoch, plan) in plans.iter().enumerate() {
             for (pass, segments) in resident_pass_sequences(plan).into_iter().enumerate() {
                 for (ci, range) in segments {
                     let cp = &plan.chunks[ci];
                     let base = (dc.resident_base(scheme, s_max, cp.chunk), 0);
                     let mut side = HostSide::Seq { grid: &mut *grid, rs: &mut *rs };
                     let mut view = store.view();
-                    self.interp()
+                    self.interp(epoch, Some(pass))
                         .exec_ops(
                             &mut side,
                             cp,
@@ -1319,8 +1447,9 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
             .map(|_| (Array2::zeros(dims.0, dims.1), Array2::zeros(dims.0, dims.1)))
             .collect();
         let mut wstats: Vec<ExecStats> = vec![ExecStats::default(); workers];
+        let mut wtraces: Vec<Recorder> = (0..workers).map(|_| self.trace.fork()).collect();
         let mut result: Result<()> = Ok(());
-        for plan in plans {
+        for (epoch, plan) in plans.iter().enumerate() {
             let arena_bytes = plan.n_devices as u64 * 2 * (dims.0 * dims.1 * 4) as u64;
             self.stats.arena_peak_bytes = self.stats.arena_peak_bytes.max(arena_bytes);
             let snap = lock_grid(&host).clone();
@@ -1328,10 +1457,12 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
             let errs: Vec<Result<()>> = std::thread::scope(|scope| {
                 let mut handles = Vec::with_capacity(workers);
                 let mut rest: &mut [(Array2, Array2)] = &mut bufs;
-                for ((lo, hi), (fork, wstat)) in dev_ranges
+                for (w, (((lo, hi), (fork, wstat)), wtrace)) in dev_ranges
                     .iter()
                     .copied()
                     .zip(forks.iter_mut().zip(wstats.iter_mut()))
+                    .zip(wtraces.iter_mut())
+                    .enumerate()
                 {
                     let (mine, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
                     rest = tail;
@@ -1339,8 +1470,16 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                     handles.push(scope.spawn(move || -> Result<()> {
                         let _guard = AliveGuard(hub);
                         let mut side = HostSide::Par { snap, grid: host, hub };
-                        let mut interp =
-                            OpInterp { backend: &mut **fork, kind, stats: wstat, copy_threads: 1 };
+                        let mut interp = OpInterp {
+                            backend: &mut **fork,
+                            kind,
+                            stats: wstat,
+                            copy_threads: 1,
+                            trace: wtrace,
+                            lane: w,
+                            epoch,
+                            pass: None,
+                        };
                         let mut view = ArenaView::Staged { bufs: mine, dev_lo: lo };
                         for cp in
                             plan.chunks.iter().filter(|cp| cp.device >= lo && cp.device < hi)
@@ -1388,6 +1527,9 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         for ws in &wstats {
             self.stats.absorb(ws);
         }
+        for wt in wtraces {
+            self.trace.absorb(wt);
+        }
         self.stats.workers = self.stats.workers.max(workers as u64);
         self.collect_rs_stats(&hub.into_bufs());
         result
@@ -1418,8 +1560,9 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         let n_chunks = bases.len();
         let mut arenas: Vec<Option<(Array2, Array2)>> = (0..n_chunks).map(|_| None).collect();
         let mut wstats: Vec<ExecStats> = vec![ExecStats::default(); workers];
+        let mut wtraces: Vec<Recorder> = (0..workers).map(|_| self.trace.fork()).collect();
         let mut result: Result<()> = Ok(());
-        for plan in plans {
+        for (epoch, plan) in plans.iter().enumerate() {
             let snap = lock_grid(&host).clone();
             let passes = resident_pass_sequences(plan);
             hub.begin_epoch(workers);
@@ -1431,10 +1574,12 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                 let mut handles = Vec::with_capacity(workers);
                 let mut rest: &mut [Option<(Array2, Array2)>] = &mut arenas;
                 let mut cursor = 0usize;
-                for ((lo, hi), (fork, wstat)) in chunk_ranges
+                for (w, (((lo, hi), (fork, wstat)), wtrace)) in chunk_ranges
                     .iter()
                     .copied()
                     .zip(forks.iter_mut().zip(wstats.iter_mut()))
+                    .zip(wtraces.iter_mut())
+                    .enumerate()
                 {
                     debug_assert_eq!(lo, cursor);
                     cursor = hi;
@@ -1444,11 +1589,20 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                     handles.push(scope.spawn(move || -> Result<u64> {
                         let _guard = AliveGuard(hub);
                         let mut side = HostSide::Par { snap, grid: host, hub };
-                        let mut interp =
-                            OpInterp { backend: &mut **fork, kind, stats: wstat, copy_threads: 1 };
+                        let mut interp = OpInterp {
+                            backend: &mut **fork,
+                            kind,
+                            stats: wstat,
+                            copy_threads: 1,
+                            trace: wtrace,
+                            lane: w,
+                            epoch,
+                            pass: None,
+                        };
                         let mut view = ArenaView::Resident { arenas: mine, chunk_lo: lo };
                         let mut live_after_arrivals = 0u64;
                         for (pass, segments) in passes.iter().enumerate() {
+                            interp.pass = Some(pass);
                             for (ci, range) in segments {
                                 let cp = &plan.chunks[*ci];
                                 if cp.chunk < lo || cp.chunk >= hi {
@@ -1507,6 +1661,9 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         *grid = host.into_inner().unwrap_or_else(|p| p.into_inner());
         for ws in &wstats {
             self.stats.absorb(ws);
+        }
+        for wt in wtraces {
+            self.trace.absorb(wt);
         }
         self.stats.workers = self.stats.workers.max(workers as u64);
         self.collect_rs_stats(&hub.into_bufs());

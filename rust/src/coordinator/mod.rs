@@ -19,8 +19,9 @@ pub mod rs_buffer;
 
 pub use backend::{HostBackend, KernelBackend};
 pub use driver::{
-    reference_run, run_scheme, run_scheme_full, run_scheme_full_threads, run_scheme_on,
-    run_scheme_resident, run_scheme_tiles, run_scheme_tiles_threads, RunOutcome,
+    reference_run, run_scheme, run_scheme_full, run_scheme_full_threads,
+    run_scheme_full_threads_traced, run_scheme_on, run_scheme_resident, run_scheme_tiles,
+    run_scheme_tiles_threads, run_scheme_tiles_threads_traced, RunOutcome,
 };
 pub use exec::{ExecStats, PlanExecutor};
 pub use pipeline::{run_pipeline, run_pipeline_on, PipelineStats, Segment};

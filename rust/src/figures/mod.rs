@@ -12,11 +12,12 @@ use crate::chunking::plan::{
 use crate::chunking::{Decomposition, Decomposition2d, DeviceAssignment};
 use crate::coordinator::{HostBackend, PlanExecutor};
 use crate::gpu::cost::{CostModel, MachineSpec};
-use crate::gpu::des::{simulate, SimReport};
-use crate::gpu::flatten::{flatten_run_opts, FlattenOpts, OpKind};
+use crate::gpu::des::{simulate, simulate_traced, SimReport};
+use crate::gpu::flatten::{flatten_run_opts, lane_label, FlattenOpts, OpKind};
 use crate::metrics::{breakdown_table, mean};
 use crate::params::{check_feasible, Feasibility};
 use crate::stencil::{NaiveEngine, StencilKind};
+use crate::trace::Recorder;
 use crate::transfer::CompressMode;
 use crate::util::Table;
 
@@ -76,6 +77,59 @@ pub fn simulate_compressed_grid_devices_overlap(
     let rep = simulate(&ops, &CostModel::new(machine.clone()), n_strm)
         .expect("figure machines are validated, non-degenerate specs");
     (rep, summary)
+}
+
+/// Label every DES lane in `rec` for the trace viewer, inverting the
+/// flattener's lane arithmetic ([`lane_label`]): `computeK` stream
+/// slots plus, under the pipeline-honest schedule, the per-device
+/// `halo` and `dtoh` lanes.
+fn name_des_tracks(rec: &mut Recorder, n_strm: usize, overlap: bool) {
+    let rows: Vec<(usize, usize)> = rec.spans().iter().map(|s| (s.device, s.lane)).collect();
+    for (dev, lane) in rows {
+        let (decoded_dev, label) = lane_label(lane, n_strm, overlap);
+        debug_assert_eq!(decoded_dev, dev, "span device disagrees with its lane id");
+        rec.name_track(dev, lane, &label);
+    }
+}
+
+/// [`simulate_compressed_grid_devices_overlap`] that also returns the
+/// DES span trace: one [`crate::trace::Span`] per scheduled op with
+/// *simulated* start/finish times, lanes labeled via [`lane_label`].
+/// The report is bit-identical to the untraced helper's — recording
+/// happens at the completion points, never in schedule decisions.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_traced_grid_devices_overlap(
+    machine: &MachineSpec,
+    scheme: Scheme,
+    kind: StencilKind,
+    rows: usize,
+    cols: usize,
+    d: usize,
+    devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    n: usize,
+    n_strm: usize,
+    resident: &ResidencyConfig,
+    compress: CompressMode,
+    overlap: bool,
+) -> (SimReport, ResidencySummary, Recorder) {
+    let dc = Decomposition::new(rows, cols, d, kind.radius());
+    let devs = if scheme == Scheme::InCore {
+        DeviceAssignment::single(dc.n_chunks())
+    } else {
+        DeviceAssignment::contiguous(dc.n_chunks(), devices)
+    };
+    let (mut plans, summary) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, resident);
+    apply_codec_policy(&mut plans, compress);
+    let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+    let ops =
+        flatten_run_opts(&plans, kind, n_strm, dc.arena_bytes(buf_rows), FlattenOpts { overlap });
+    let mut rec = Recorder::on();
+    let rep = simulate_traced(&ops, &CostModel::new(machine.clone()), n_strm, &mut rec)
+        .expect("figure machines are validated, non-degenerate specs");
+    name_des_tracks(&mut rec, n_strm, overlap);
+    (rep, summary, rec)
 }
 
 /// [`simulate_compressed_grid_devices_overlap`] with the default
@@ -139,6 +193,41 @@ pub fn simulate_resident_tiles_grid_devices_overlap(
         flatten_run_opts(&plans, kind, n_strm, dc.arena_bytes(s_max), FlattenOpts { overlap });
     let rep = simulate(&ops, &CostModel::new(machine.clone()), n_strm)?;
     Ok((rep, summary))
+}
+
+/// [`simulate_resident_tiles_grid_devices_overlap`] that also returns
+/// the DES span trace; same contract as
+/// [`simulate_traced_grid_devices_overlap`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_traced_tiles_grid_devices_overlap(
+    machine: &MachineSpec,
+    kind: StencilKind,
+    rows: usize,
+    cols: usize,
+    chunks_y: usize,
+    chunks_x: usize,
+    devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    n: usize,
+    n_strm: usize,
+    resident: &ResidencyConfig,
+    compress: CompressMode,
+    overlap: bool,
+) -> anyhow::Result<(SimReport, ResidencySummary, Recorder)> {
+    let dc = Decomposition2d::try_new(rows, cols, chunks_y, chunks_x, kind.radius())?;
+    crate::config::validate_devices(Scheme::So2dr, dc.n_tiles(), devices)?;
+    let devs = DeviceAssignment::contiguous(dc.n_tiles(), devices);
+    let (mut plans, summary) =
+        plan_run_resident_tiles(Scheme::So2dr, &dc, &devs, n, s_tb, k_on, resident)?;
+    apply_codec_policy(&mut plans, compress);
+    let s_max = plans.iter().map(|p| p.steps).max().unwrap_or(1);
+    let ops =
+        flatten_run_opts(&plans, kind, n_strm, dc.arena_bytes(s_max), FlattenOpts { overlap });
+    let mut rec = Recorder::on();
+    let rep = simulate_traced(&ops, &CostModel::new(machine.clone()), n_strm, &mut rec)?;
+    name_des_tracks(&mut rec, n_strm, overlap);
+    Ok((rep, summary, rec))
 }
 
 /// [`simulate_resident_tiles_grid_devices_overlap`] with the default
@@ -1222,6 +1311,49 @@ pub fn decomp_fig(machine: &MachineSpec) -> String {
     out
 }
 
+/// Span-trace occupancy study (the observability layer at paper scale):
+/// replay the §V-B chosen box2d1r configuration on 1 and 4 simulated
+/// GPUs with the span recorder live, and table the per-device
+/// per-category busy shares plus the lane stall structure the Perfetto
+/// timeline would show ([`crate::metrics::utilization_table`]). One
+/// span per scheduled op; the traced replay's makespan is asserted
+/// bit-identical to the untraced one.
+pub fn trace_fig(machine: &MachineSpec) -> String {
+    let kind = StencilKind::Box { radius: 1 };
+    let (d, s_tb) = chosen_config(kind);
+    let mut out = String::from(
+        "== Span-trace occupancy: per-device busy shares and lane stalls ==\n\
+         (box2d1r at paper scale; simulated time; export a timeline with \
+         `so2dr simulate --trace out.json`)\n",
+    );
+    for devices in [1usize, 4] {
+        let d_eff = d.max(devices);
+        let (rep, _, rec) = simulate_traced_grid_devices_overlap(
+            machine,
+            Scheme::So2dr,
+            kind,
+            SZ_OOC,
+            SZ_OOC,
+            d_eff,
+            devices,
+            s_tb,
+            K_ON,
+            N_STEPS,
+            N_STRM,
+            &ResidencyConfig::off(),
+            CompressMode::Off,
+            true,
+        );
+        out.push_str(&format!(
+            "\n-- {devices} device(s): {} spans over {:.3} s makespan --\n",
+            rec.spans().len(),
+            rep.makespan
+        ));
+        out.push_str(&crate::metrics::utilization_table(rec.spans(), rep.makespan).render());
+    }
+    out
+}
+
 /// The figure registry, in report order: names paired with their
 /// builders. Kept lazy so the CLI's `--fig` filter selects *before*
 /// computing — figures run paper-scale DES sweeps (and `bench_pr2`
@@ -1242,6 +1374,7 @@ pub fn registry() -> Vec<(&'static str, fn(&MachineSpec) -> String)> {
         ("compress", compress_fig),
         ("decomp", decomp_fig),
         ("overlap", overlap_fig),
+        ("trace", trace_fig),
         ("bench_pr2", bench_pr2),
         ("bench_pr5", bench_pr5),
         ("bench_pr6", bench_pr6),
@@ -1249,10 +1382,41 @@ pub fn registry() -> Vec<(&'static str, fn(&MachineSpec) -> String)> {
     ]
 }
 
-
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn traced_simulation_matches_untraced_and_labels_lanes() {
+        let m = MachineSpec::rtx3080();
+        let kind = StencilKind::Box { radius: 1 };
+        let (rep, _, rec) = simulate_traced_grid_devices_overlap(
+            &m, Scheme::So2dr, kind, 2048, 2048, 4, 2, 8, 4, 32, N_STRM,
+            &ResidencyConfig::off(), CompressMode::Off, true,
+        );
+        let (plain, _) = simulate_compressed_grid_devices_overlap(
+            &m, Scheme::So2dr, kind, 2048, 2048, 4, 2, 8, 4, 32, N_STRM,
+            &ResidencyConfig::off(), CompressMode::Off, true,
+        );
+        assert_eq!(
+            rep.makespan.to_bits(),
+            plain.makespan.to_bits(),
+            "tracing must not perturb the replay"
+        );
+        assert!(!rec.spans().is_empty(), "every scheduled op leaves a span");
+        let json = rec.chrome_json();
+        assert!(json.contains("\"compute0\""), "compute lanes labeled: {}", &json[..200]);
+        assert!(json.contains("\"halo\""), "halo lane labeled under overlap");
+    }
+
+    #[test]
+    fn trace_figure_reports_occupancy_for_both_device_counts() {
+        let m = MachineSpec::rtx3080();
+        let txt = trace_fig(&m);
+        assert!(txt.contains("Span-trace occupancy"), "{txt}");
+        assert!(txt.contains("gpu0") && txt.contains("gpu3"), "{txt}");
+        assert!(txt.contains("spans over"), "{txt}");
+    }
 
     #[test]
     fn fig6_shape_holds() {

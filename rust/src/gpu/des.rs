@@ -41,6 +41,7 @@
 
 use super::cost::{CostModel, DegenerateMachineError};
 use super::flatten::{OpKind, SimOp};
+use crate::trace::{Recorder, Span};
 use std::collections::HashMap;
 
 /// Simulation outcome.
@@ -141,6 +142,22 @@ pub fn simulate(
     cost: &CostModel,
     n_strm: usize,
 ) -> Result<SimReport, DegenerateMachineError> {
+    simulate_traced(ops, cost, n_strm, &mut Recorder::off())
+}
+
+/// [`simulate`], recording one [`Span`] per scheduled op into `rec`
+/// with *simulated* start/finish seconds (device = trace process,
+/// stream lane = trace thread). Spans are emitted at the existing
+/// completion point of the event loop, so the schedule — start rules,
+/// completion ordering, every `SimReport` number — is identical to the
+/// untraced replay; an off recorder skips the start-time bookkeeping
+/// entirely (the tracing-is-free contract in `lib.rs`).
+pub fn simulate_traced(
+    ops: &[SimOp],
+    cost: &CostModel,
+    n_strm: usize,
+    rec: &mut Recorder,
+) -> Result<SimReport, DegenerateMachineError> {
     cost.machine.validate()?;
     let n = ops.len();
     let mut state = vec![OpState::Waiting; n];
@@ -185,6 +202,9 @@ pub fn simulate(
     // Remaining solo-rate work of each running kernel (s).
     let mut kern_rem: Vec<f64> = vec![0.0; n];
     let mut done_count = 0usize;
+    // Simulated start times, kept only when tracing (empty slice ⇒ the
+    // per-op writes in `try_start` are a bounds-check no-op).
+    let mut start_times: Vec<f64> = if rec.is_on() { vec![0.0; n] } else { Vec::new() };
 
     // Try to start every startable op; returns true if any started.
     #[allow(clippy::too_many_arguments)]
@@ -202,6 +222,7 @@ pub fn simulate(
         kern_rem: &mut [f64],
         report: &mut SimReport,
         dmem: &mut [i64],
+        start_times: &mut [f64],
     ) -> bool {
         let mut any = false;
         for s in 0..stream_q.len() {
@@ -252,6 +273,9 @@ pub fn simulate(
                     *report.busy_dev.entry((op.device, op.kind)).or_insert(0.0) += dur;
                     state[cand] = OpState::Running { end: now + dur };
                 }
+                if let Some(s) = start_times.get_mut(cand) {
+                    *s = now;
+                }
                 running.push(cand);
                 any = true;
                 // CUDA-stream semantics: the next op of this stream may
@@ -283,6 +307,7 @@ pub fn simulate(
                 &mut kern_rem,
                 &mut report,
                 &mut dmem,
+                &mut start_times,
             );
             if !started {
                 break;
@@ -342,6 +367,22 @@ pub fn simulate(
             state[oid] = OpState::Done;
             done_count += 1;
             let op = &ops[oid];
+            if let Some(&start_s) = start_times.get(oid) {
+                rec.record(Span {
+                    device: op.device,
+                    lane: op.stream,
+                    kind: op.kind,
+                    start_s,
+                    end_s: now,
+                    chunk: op.chunk,
+                    epoch: op.epoch,
+                    pass: None,
+                    bytes: op.bytes,
+                    raw_bytes: op.raw_bytes,
+                    codec: op.codec,
+                    rect: None,
+                });
+            }
             kern_rem[oid] = 0.0;
             *busy_slots.get_mut(&(op.kind, op.resource)).unwrap() -= 1;
             dmem[op.mem_device] += op.free_delta;
@@ -605,5 +646,103 @@ mod determinism_tests {
         let m1 = mk(1);
         let m3 = mk(3);
         assert!(m3 <= m1 * 1.001, "3 streams {m3} vs 1 stream {m1}");
+    }
+}
+
+#[cfg(test)]
+mod trace_tests {
+    use super::*;
+    use crate::chunking::plan::{plan_run_devices, Scheme};
+    use crate::chunking::{Decomposition, DeviceAssignment};
+    use crate::coordinator::{HostBackend, PlanExecutor};
+    use crate::gpu::cost::MachineSpec;
+    use crate::gpu::flatten::flatten_run;
+    use crate::stencil::{NaiveEngine, StencilKind};
+    use crate::trace::Recorder;
+
+    fn traced_run() -> (Vec<SimOp>, SimReport, Recorder) {
+        let dc = Decomposition::new(38400, 38400, 4, 1);
+        let devs = DeviceAssignment::contiguous(dc.n_chunks(), 2);
+        let plans = plan_run_devices(Scheme::So2dr, &dc, &devs, 32, 8, 4);
+        let buf_rows =
+            PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+        let ops = flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows);
+        let cost = CostModel::new(MachineSpec::rtx3080());
+        let mut rec = Recorder::on();
+        let rep = simulate_traced(&ops, &cost, 3, &mut rec).expect("valid machine");
+        (ops, rep, rec)
+    }
+
+    /// Tentpole schema invariants: every scheduled op leaves exactly one
+    /// span, durations are non-negative, and the latest span end is the
+    /// makespan (the trace horizon IS the predicted schedule).
+    #[test]
+    fn one_span_per_op_nonnegative_and_horizon_is_makespan() {
+        let (ops, rep, rec) = traced_run();
+        assert_eq!(rec.spans().len(), ops.len());
+        for s in rec.spans() {
+            assert!(s.dur_s() >= 0.0, "negative span {s:?}");
+            assert!(s.end_s <= rep.makespan + 1e-12);
+        }
+        assert!((rec.horizon_s() - rep.makespan).abs() <= rep.makespan * 1e-12);
+        // Per-category span busy time reproduces the report's channel
+        // busy (kernels accrue wall-clock in both views).
+        for k in [OpKind::HtoD, OpKind::DtoH, OpKind::D2D, OpKind::P2p] {
+            let spans: f64 =
+                rec.spans().iter().filter(|s| s.kind == k).map(|s| s.dur_s()).sum();
+            let busy = rep.busy_of(k);
+            assert!((spans - busy).abs() <= busy.max(1e-12) * 1e-9, "{k:?}: {spans} vs {busy}");
+        }
+    }
+
+    /// Lanes are in-order FIFO queues, so spans on one (device, lane)
+    /// row never overlap — exactly what makes the Perfetto timeline a
+    /// faithful occupancy picture.
+    #[test]
+    fn spans_on_one_lane_never_overlap() {
+        let (_, _, rec) = traced_run();
+        let mut by_lane: std::collections::HashMap<(usize, usize), Vec<(f64, f64)>> =
+            std::collections::HashMap::new();
+        for s in rec.spans() {
+            by_lane.entry((s.device, s.lane)).or_default().push((s.start_s, s.end_s));
+        }
+        assert!(by_lane.len() > 1, "expected multiple lanes");
+        for ((d, l), mut iv) in by_lane {
+            iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for w in iv.windows(2) {
+                assert!(
+                    w[1].0 >= w[0].1 - 1e-12,
+                    "overlap on gpu{d} lane {l}: {:?} then {:?}",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+    }
+
+    /// Tracing changes nothing: the traced replay's report is
+    /// bit-identical to the untraced one, and the off recorder never
+    /// allocates a span buffer.
+    #[test]
+    fn tracing_does_not_perturb_the_report() {
+        let dc = Decomposition::new(38400, 38400, 4, 1);
+        let devs = DeviceAssignment::contiguous(dc.n_chunks(), 2);
+        let plans = plan_run_devices(Scheme::So2dr, &dc, &devs, 32, 8, 4);
+        let buf_rows =
+            PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+        let ops = flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows);
+        let cost = CostModel::new(MachineSpec::rtx3080());
+        let plain = simulate(&ops, &cost, 3).expect("valid machine");
+        let mut rec = Recorder::on();
+        let traced = simulate_traced(&ops, &cost, 3, &mut rec).expect("valid machine");
+        assert_eq!(plain.makespan.to_bits(), traced.makespan.to_bits());
+        assert_eq!(plain.peak_dmem, traced.peak_dmem);
+        for (k, v) in &plain.busy {
+            assert_eq!(v.to_bits(), traced.busy[k].to_bits());
+        }
+        let mut off = Recorder::off();
+        let rep_off = simulate_traced(&ops, &cost, 3, &mut off).expect("valid machine");
+        assert_eq!(rep_off.makespan.to_bits(), plain.makespan.to_bits());
+        assert_eq!(off.buffered_capacity(), 0, "off recorder allocated");
     }
 }

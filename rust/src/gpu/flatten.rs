@@ -163,6 +163,26 @@ impl Default for FlattenOpts {
     }
 }
 
+/// Decode a flattened stream id back into `(device, human label)` for
+/// trace-track naming: the inverse of the lane arithmetic the flattener
+/// applies (`base = n_strm.max(1)` compute lanes per device, plus a
+/// halo and a DtoH lane in overlap mode). Codec ops ride the same lane
+/// as their channel op, so this covers every emitted stream id.
+pub fn lane_label(stream: usize, n_strm: usize, overlap: bool) -> (usize, String) {
+    let base = n_strm.max(1);
+    let lanes = if overlap { base + 2 } else { base };
+    let device = stream / lanes;
+    let slot = stream % lanes;
+    let label = if slot < base {
+        format!("compute{slot}")
+    } else if slot == base {
+        "halo".to_string()
+    } else {
+        "dtoh".to_string()
+    };
+    (device, label)
+}
+
 /// Flatten a multi-epoch run. `n_strm` streams per device; `buf_bytes`
 /// is the byte size of one (input + output double-buffered) chunk arena
 /// at the run's uniform shape — `Decomposition::arena_bytes` for row
@@ -1065,6 +1085,67 @@ mod resident_tile_tests {
                 "re-fetch {} without spill dep",
                 h.id
             );
+        }
+    }
+}
+
+#[cfg(test)]
+mod lane_label_tests {
+    use super::*;
+    use crate::chunking::plan::plan_run_devices;
+    use crate::chunking::plan::Scheme;
+    use crate::chunking::{Decomposition, DeviceAssignment};
+    use crate::coordinator::{HostBackend, PlanExecutor};
+    use crate::stencil::{NaiveEngine, StencilKind};
+
+    #[test]
+    fn lane_label_inverts_the_lane_arithmetic() {
+        // Overlap mode: per device, `n_strm` compute lanes then halo,
+        // then dtoh.
+        assert_eq!(lane_label(0, 3, true), (0, "compute0".into()));
+        assert_eq!(lane_label(2, 3, true), (0, "compute2".into()));
+        assert_eq!(lane_label(3, 3, true), (0, "halo".into()));
+        assert_eq!(lane_label(4, 3, true), (0, "dtoh".into()));
+        assert_eq!(lane_label(5, 3, true), (1, "compute0".into()));
+        assert_eq!(lane_label(9, 3, true), (1, "dtoh".into()));
+        // Legacy layout: compute lanes only.
+        assert_eq!(lane_label(0, 3, false), (0, "compute0".into()));
+        assert_eq!(lane_label(3, 3, false), (1, "compute0".into()));
+        // n_strm = 0 clamps to one compute lane, as the flattener does.
+        assert_eq!(lane_label(2, 0, true), (0, "dtoh".into()));
+    }
+
+    /// Every stream id a real multi-device flattened graph emits decodes
+    /// to the op's own device, and halo/dtoh lanes carry only the op
+    /// kinds the layout routes there.
+    #[test]
+    fn labels_agree_with_emitted_streams() {
+        let dc = Decomposition::new(512, 512, 4, 1);
+        let devs = DeviceAssignment::contiguous(dc.n_chunks(), 2);
+        let plans = plan_run_devices(Scheme::So2dr, &dc, &devs, 8, 4, 2);
+        let n_strm = 3;
+        let buf_rows =
+            PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
+        let ops = flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, n_strm, buf_rows);
+        assert!(!ops.is_empty());
+        for op in &ops {
+            let (dev, label) = lane_label(op.stream, n_strm, true);
+            assert_eq!(dev, op.device, "op {} kind {:?}", op.id, op.kind);
+            match label.as_str() {
+                "halo" => assert!(
+                    matches!(op.kind, OpKind::D2D | OpKind::P2p | OpKind::Codec),
+                    "op {} kind {:?} on halo lane",
+                    op.id,
+                    op.kind
+                ),
+                "dtoh" => assert!(
+                    matches!(op.kind, OpKind::DtoH | OpKind::Codec),
+                    "op {} kind {:?} on dtoh lane",
+                    op.id,
+                    op.kind
+                ),
+                _ => assert!(label.starts_with("compute"), "{label}"),
+            }
         }
     }
 }

@@ -224,6 +224,36 @@
 //!        gather/scatter copies and codec hot loops are row-band
 //!        parallel on the sequential paths and single-threaded inside
 //!        workers (no nested threading).
+//!   - **Unified span-trace layer** (`--trace <path>`, TOML `trace`):
+//!     both interpreters feed one span vocabulary ([`trace::Span`],
+//!     recorded into a [`trace::Recorder`]) serialized as Chrome
+//!     trace-event JSON (Perfetto-loadable: one process per device, one
+//!     thread per lane/worker) plus derived reports
+//!     ([`metrics::utilization_table`], [`metrics::residual_line`]).
+//!     The observability contract:
+//!     1. *two time domains, one schema*: a DES span
+//!        (`simulate --trace`) is a scheduled `SimOp` with *simulated*
+//!        start/finish seconds on its stream lane — the prediction; an
+//!        executor span (`run --trace`) is an executed `ChunkOp` with
+//!        *wall-clock* seconds on its worker — the measurement. Spans
+//!        carry device, chunk, epoch, pass, wire vs raw bytes, codec
+//!        tag and (executor) rect, so `metrics::residual_line` can
+//!        compare DES-predicted vs measured per-category busy time for
+//!        the same plan — the input to the ROADMAP calibration loop;
+//!     2. *zero cost when off*: the off recorder records nothing and
+//!        never allocates on the hot path (locked by a unit witness on
+//!        the buffer capacity and a `hotpath_benches` guard), and the
+//!        DES records at the existing completion point of the event
+//!        loop, so schedule semantics are untouched;
+//!     3. *tracing never perturbs results*: grids and every logical
+//!        [`coordinator::ExecStats`] counter are bit-identical with
+//!        `--trace` on and off, at every thread count (randomized
+//!        differential suite);
+//!     4. *the trace is self-consistent*: DES span count equals
+//!        scheduled op count, spans on one (device, lane) row never
+//!        overlap (FIFO lanes; sequential workers), durations are
+//!        non-negative, and the executor's span op-multiset is
+//!        thread-count-invariant.
 //! - **L2 (`python/compile/model.py`):** the fixed-shape chunk program,
 //!   AOT-lowered to HLO text.
 //! - **L1 (`python/compile/kernels/`):** the Pallas multi-step stencil
@@ -239,6 +269,7 @@ pub mod params;
 pub mod core;
 pub mod runtime;
 pub mod stencil;
+pub mod trace;
 pub mod transfer;
 pub mod util;
 

@@ -5,7 +5,8 @@ use crate::chunking::ResidencySummary;
 use crate::coordinator::ExecStats;
 use crate::gpu::des::SimReport;
 use crate::gpu::flatten::OpKind;
-use crate::util::{fmt_bytes, Table};
+use crate::trace::Span;
+use crate::util::{fmt_bytes, fmt_secs, Table};
 
 /// Categories in paper order (Fig. 7/10 legends), plus the multi-device
 /// peer-to-peer link channel.
@@ -190,12 +191,133 @@ pub fn overlap_line(rep: &SimReport) -> String {
     )
 }
 
+/// Per-device occupancy report derived from a span trace: busy share of
+/// the trace horizon per op category, plus the lane idle-gap count and
+/// the longest single stall (the gap a barrier or starved lane leaves
+/// between consecutive spans on one `(device, lane)` track). Works for
+/// both trace sources — simulated time from the DES, wall clock from
+/// the executor — since it only reads span geometry.
+pub fn utilization_table(spans: &[Span], horizon_s: f64) -> Table {
+    let mut t = Table::new(vec![
+        "device", "HtoD %", "O/D %", "P2P %", "kernel %", "DtoH %", "codec %", "idle gaps",
+        "longest gap",
+    ]);
+    let mut devices: Vec<usize> = spans.iter().map(|s| s.device).collect();
+    devices.sort_unstable();
+    devices.dedup();
+    let pct = |busy: f64| {
+        if horizon_s > 0.0 {
+            format!("{:.1}", 100.0 * busy / horizon_s)
+        } else {
+            "-".into()
+        }
+    };
+    for dev in devices {
+        let busy = |kind: OpKind| -> f64 {
+            spans
+                .iter()
+                .filter(|s| s.device == dev && s.kind == kind)
+                .map(Span::dur_s)
+                .sum()
+        };
+        // Idle gaps between consecutive spans on each of the device's
+        // lanes (spans on one lane never overlap — the suites pin it).
+        let mut lanes: Vec<usize> =
+            spans.iter().filter(|s| s.device == dev).map(|s| s.lane).collect();
+        lanes.sort_unstable();
+        lanes.dedup();
+        let mut gaps = 0usize;
+        let mut longest = 0.0f64;
+        for lane in lanes {
+            let mut starts: Vec<(f64, f64)> = spans
+                .iter()
+                .filter(|s| s.device == dev && s.lane == lane)
+                .map(|s| (s.start_s, s.end_s))
+                .collect();
+            starts.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for w in starts.windows(2) {
+                let gap = w[1].0 - w[0].1;
+                if gap > 1e-9 {
+                    gaps += 1;
+                    longest = longest.max(gap);
+                }
+            }
+        }
+        t.row(vec![
+            format!("gpu{dev}"),
+            pct(busy(OpKind::HtoD)),
+            pct(busy(OpKind::D2D)),
+            pct(busy(OpKind::P2p)),
+            pct(busy(OpKind::Kernel)),
+            pct(busy(OpKind::DtoH)),
+            pct(busy(OpKind::Codec)),
+            gaps.to_string(),
+            fmt_secs(longest),
+        ]);
+    }
+    t
+}
+
+/// One-line predicted-vs-measured busy report for `so2dr run --trace`:
+/// the DES's per-category busy prediction next to the executor's
+/// measured phase timers, with the measured/predicted ratio per
+/// category. The category map mirrors the executor's phase commit —
+/// kernel ↔ `kernel_s`, HtoD+DtoH ↔ `transfer_s`, O/D+P2P ↔ `halo_s`,
+/// codec ↔ the codec round-trip timers. Under `--threads N > 1` the
+/// measured side is CPU time summed across workers (flagged in the
+/// line), so ratios compare device-seconds, not wall.
+pub fn residual_line(rep: &SimReport, stats: &ExecStats) -> String {
+    let rows: [(&str, f64, f64); 4] = [
+        ("kernel", rep.busy_of(OpKind::Kernel), stats.kernel_s),
+        (
+            "transfer",
+            rep.busy_of(OpKind::HtoD) + rep.busy_of(OpKind::DtoH),
+            stats.transfer_s,
+        ),
+        ("halo", rep.busy_of(OpKind::D2D) + rep.busy_of(OpKind::P2p), stats.halo_s),
+        (
+            "codec",
+            rep.busy_of(OpKind::Codec),
+            stats.codec_compress_s + stats.codec_decompress_s,
+        ),
+    ];
+    let mut parts = Vec::new();
+    for (name, pred, meas) in rows {
+        if pred <= 0.0 && meas <= 0.0 {
+            continue;
+        }
+        let ratio = if pred > 0.0 {
+            format!("{:.2}x", meas / pred)
+        } else {
+            "n/a".into()
+        };
+        parts.push(format!("{name} {} -> {} ({ratio})", fmt_secs(pred), fmt_secs(meas)));
+    }
+    if parts.is_empty() {
+        return "residual: n/a (empty schedule)".into();
+    }
+    let caveat = if stats.workers.max(1) > 1 {
+        format!("  [measured = CPU time over {} workers]", stats.workers)
+    } else {
+        String::new()
+    };
+    format!("residual (DES busy -> measured): {}{caveat}", parts.join("  "))
+}
+
 /// Write a report section to `<dir>/<name>.txt` (best-effort) and return
 /// the text. Tests pass a [`crate::util::testkit::TempDir`] path so
-/// parallel runs never collide on a shared file.
+/// parallel runs never collide on a shared file. A failed write never
+/// fails the run, but it is *named* on stderr instead of vanishing — a
+/// read-only results directory otherwise looks like a succeeded emit.
 pub fn emit_to(dir: &std::path::Path, name: &str, body: &str) -> String {
-    let _ = std::fs::create_dir_all(dir);
-    let _ = std::fs::write(dir.join(format!("{name}.txt")), body);
+    if let Err(e) = std::fs::create_dir_all(dir) {
+        eprintln!("warning: cannot create report dir {}: {e}", dir.display());
+        return body.to_string();
+    }
+    let path = dir.join(format!("{name}.txt"));
+    if let Err(e) = std::fs::write(&path, body) {
+        eprintln!("warning: cannot write report {}: {e}", path.display());
+    }
     body.to_string()
 }
 
@@ -299,6 +421,57 @@ mod tests {
     }
 
     #[test]
+    fn utilization_table_reports_busy_share_and_gaps() {
+        use crate::transfer::codec::CodecKind;
+        let span = |device, lane, kind, start_s: f64, end_s: f64| Span {
+            device,
+            lane,
+            kind,
+            start_s,
+            end_s,
+            chunk: 0,
+            epoch: 0,
+            pass: None,
+            bytes: 0,
+            raw_bytes: 0,
+            codec: CodecKind::Identity,
+            rect: None,
+        };
+        let spans = vec![
+            // gpu0 lane 0: kernel busy 50% of a 2 s horizon, with a
+            // 0.5 s stall between the two spans.
+            span(0, 0, OpKind::Kernel, 0.0, 0.5),
+            span(0, 0, OpKind::Kernel, 1.0, 1.5),
+            // gpu1 lane 3: one HtoD, no gaps.
+            span(1, 3, OpKind::HtoD, 0.0, 1.0),
+        ];
+        let text = utilization_table(&spans, 2.0).render();
+        assert!(text.contains("gpu0") && text.contains("gpu1"), "{text}");
+        assert!(text.contains("50.0"), "kernel and HtoD busy shares: {text}");
+        assert!(text.contains("500.000 ms"), "longest gap: {text}");
+        // A zero horizon renders placeholders instead of dividing.
+        let degenerate = utilization_table(&spans, 0.0).render();
+        assert!(degenerate.contains('-'), "{degenerate}");
+    }
+
+    #[test]
+    fn residual_line_compares_predicted_to_measured() {
+        let mut rep = SimReport { makespan: 2.0, ..Default::default() };
+        rep.busy.insert(OpKind::Kernel, 1.0);
+        rep.busy.insert(OpKind::HtoD, 0.5);
+        let stats = ExecStats { kernel_s: 2.0, transfer_s: 0.5, ..Default::default() };
+        let line = residual_line(&rep, &stats);
+        assert!(line.contains("kernel"), "{line}");
+        assert!(line.contains("2.00x"), "measured/predicted ratio: {line}");
+        assert!(line.contains("transfer"), "{line}");
+        assert!(!line.contains("halo"), "silent categories are dropped: {line}");
+        assert!(!line.contains("workers"), "sequential runs carry no caveat: {line}");
+        let par = ExecStats { kernel_s: 2.0, workers: 4, ..Default::default() };
+        assert!(residual_line(&rep, &par).contains("4 workers"));
+        assert!(residual_line(&SimReport::default(), &ExecStats::default()).contains("n/a"));
+    }
+
+    #[test]
     fn device_breakdown_renders_one_row_per_device() {
         let mut rep = SimReport { makespan: 1.0, ..Default::default() };
         rep.peak_dmem_per_device = vec![1 << 30, 2 << 30];
@@ -326,6 +499,19 @@ mod emit_tests {
         let written =
             std::fs::read_to_string(dir.path().join("unit_test_fig.txt")).unwrap();
         assert_eq!(written, body);
+    }
+
+    #[test]
+    fn emit_to_survives_an_unwritable_dir_and_returns_the_body() {
+        // The "dir" is an existing file, so create_dir_all fails; the
+        // emit must warn (stderr) and hand the body back untouched
+        // rather than erroring or silently claiming success.
+        let dir = TempDir::new("emit-bad");
+        let clash = dir.path().join("not-a-dir");
+        std::fs::write(&clash, "occupied").unwrap();
+        let out = emit_to(&clash, "fig", "body\n");
+        assert_eq!(out, "body\n");
+        assert!(!clash.join("fig.txt").exists());
     }
 
     #[test]

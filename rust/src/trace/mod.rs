@@ -1,0 +1,341 @@
+//! Span-trace layer: one op = one [`Span`], recorded by both
+//! interpreters into a [`Recorder`] and serialized to Chrome
+//! trace-event JSON (Perfetto-loadable) plus derived text reports
+//! (`metrics::utilization_table`, `metrics::residual_line`).
+//!
+//! The two producers write spans in different time domains:
+//!
+//! - the DES (`gpu::des::simulate_traced`) emits every scheduled
+//!   `SimOp` with its *simulated* start/finish seconds, one process per
+//!   device, one thread per stream lane — the schedule the cost model
+//!   predicts;
+//! - the real-numerics executor (`coordinator::exec`) emits *wall-clock*
+//!   seconds per executed `ChunkOp`, one process per device, one thread
+//!   per worker — what the host actually did.
+//!
+//! Both serialize through the same [`Recorder::chrome_json`], so the two
+//! timelines load side by side in Perfetto and the residual report can
+//! compare per-category busy time directly.
+//!
+//! Zero-cost-when-off contract: a [`Recorder::off`] recorder never
+//! allocates — `record` returns before touching the (zero-capacity)
+//! buffer, `now_s` is `None` so producers skip their `Instant` reads,
+//! and `fork`/`absorb` move nothing. The bench guard in
+//! `hotpath_benches` and the unit tests below hold this.
+
+use crate::core::Rect;
+use crate::gpu::flatten::OpKind;
+use crate::transfer::CodecKind;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// One recorded op: where it ran (`device`/`lane`), what it was
+/// (`kind`, payload, codec), when (`start_s`..`end_s` — simulated
+/// seconds from the DES, wall-clock seconds from the executor) and
+/// which part of the plan it executed (`chunk`, `epoch`, `pass`,
+/// `rect`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    /// Simulated device the op ran on (trace process id).
+    pub device: usize,
+    /// Stream lane (DES) or worker id (executor) — trace thread id.
+    pub lane: usize,
+    pub kind: OpKind,
+    /// Span start in seconds (domain depends on the producer).
+    pub start_s: f64,
+    /// Span end in seconds, `>= start_s`.
+    pub end_s: f64,
+    /// Chunk / tile index the op belongs to.
+    pub chunk: usize,
+    pub epoch: usize,
+    /// Resident pass index within the epoch, when the producer knows it.
+    pub pass: Option<usize>,
+    /// Wire bytes moved (0 for kernels and codec passes).
+    pub bytes: u64,
+    /// Uncompressed payload bytes.
+    pub raw_bytes: u64,
+    pub codec: CodecKind,
+    /// Grid rect the op touched, when the producer knows it.
+    pub rect: Option<Rect>,
+}
+
+impl Span {
+    pub fn dur_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
+/// Lock-cheap span recorder. The threaded executor gives each worker a
+/// [`fork`](Recorder::fork) (same wall-clock origin, private buffer) and
+/// [`absorb`](Recorder::absorb)s them after the join — no shared state,
+/// no locks on the hot path. `Default` is the off recorder, so
+/// `std::mem::take` yields a drained recorder that stays inert.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    enabled: bool,
+    /// Wall-clock origin shared by every fork, so worker timestamps
+    /// align on one axis. `None` on the off recorder (and on recorders
+    /// holding purely simulated-time spans, where it is unused).
+    origin: Option<Instant>,
+    spans: Vec<Span>,
+    /// Display names for (device, lane) rows, e.g. `compute0`/`halo`
+    /// lanes or `worker3`.
+    tracks: BTreeMap<(usize, usize), String>,
+}
+
+impl Recorder {
+    /// The no-op recorder: records nothing, allocates nothing.
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    /// A live recorder with its wall-clock origin pinned at creation.
+    pub fn on() -> Self {
+        Self { enabled: true, origin: Some(Instant::now()), ..Self::default() }
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.enabled
+    }
+
+    /// Seconds since this recorder's origin — `None` when off, so
+    /// producers gate their timing reads on one branch.
+    pub fn now_s(&self) -> Option<f64> {
+        self.origin.map(|t0| t0.elapsed().as_secs_f64())
+    }
+
+    pub fn record(&mut self, span: Span) {
+        if self.enabled {
+            debug_assert!(
+                span.end_s >= span.start_s,
+                "negative span: {} .. {}",
+                span.start_s,
+                span.end_s
+            );
+            self.spans.push(span);
+        }
+    }
+
+    /// Name a (device, lane) row for the trace viewer (first name wins).
+    pub fn name_track(&mut self, device: usize, lane: usize, label: &str) {
+        if self.enabled {
+            self.tracks.entry((device, lane)).or_insert_with(|| label.to_string());
+        }
+    }
+
+    /// A per-worker shard: same on/off state and wall-clock origin,
+    /// empty buffers. Forking the off recorder yields an off recorder.
+    pub fn fork(&self) -> Self {
+        Self { enabled: self.enabled, origin: self.origin, ..Self::default() }
+    }
+
+    /// Merge a shard (or a callee's recorder) back in.
+    pub fn absorb(&mut self, mut other: Recorder) {
+        if self.spans.is_empty() && !other.spans.is_empty() {
+            self.spans = std::mem::take(&mut other.spans);
+        } else {
+            self.spans.append(&mut other.spans);
+        }
+        for ((d, l), name) in other.tracks {
+            self.tracks.entry((d, l)).or_insert(name);
+        }
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Heap capacity of the span buffer — the zero-cost-when-off
+    /// witness (an off recorder must report 0 after any run).
+    pub fn buffered_capacity(&self) -> usize {
+        self.spans.capacity()
+    }
+
+    /// End of the latest span, i.e. the traced makespan (0 when empty).
+    pub fn horizon_s(&self) -> f64 {
+        self.spans.iter().map(|s| s.end_s).fold(0.0, f64::max)
+    }
+
+    /// Serialize to Chrome trace-event JSON (the `traceEvents` array
+    /// format Perfetto and `chrome://tracing` load): one process per
+    /// device, one thread per lane/worker, one complete ("X") event per
+    /// span with timestamps in microseconds, preceded by the
+    /// process/thread name metadata. Output is deterministic: spans are
+    /// ordered by (device, lane, start).
+    pub fn chrome_json(&self) -> String {
+        let mut events: Vec<String> = Vec::new();
+        let mut devices: Vec<usize> = self.spans.iter().map(|s| s.device).collect();
+        devices.extend(self.tracks.keys().map(|&(d, _)| d));
+        devices.sort_unstable();
+        devices.dedup();
+        for d in devices {
+            events.push(format!(
+                "{{\"ph\":\"M\",\"pid\":{d},\"name\":\"process_name\",\
+                 \"args\":{{\"name\":\"gpu{d}\"}}}}"
+            ));
+        }
+        for (&(d, l), name) in &self.tracks {
+            events.push(format!(
+                "{{\"ph\":\"M\",\"pid\":{d},\"tid\":{l},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                esc(name)
+            ));
+        }
+        let mut ordered: Vec<&Span> = self.spans.iter().collect();
+        ordered.sort_by(|a, b| {
+            (a.device, a.lane)
+                .cmp(&(b.device, b.lane))
+                .then(a.start_s.total_cmp(&b.start_s))
+        });
+        for s in ordered {
+            let pass = match s.pass {
+                Some(p) => p.to_string(),
+                None => "null".to_string(),
+            };
+            let rect = match s.rect {
+                Some(r) => format!("\"{}:{}x{}:{}\"", r.r0, r.r1, r.c0, r.c1),
+                None => "null".to_string(),
+            };
+            events.push(format!(
+                "{{\"ph\":\"X\",\"pid\":{},\"tid\":{},\"ts\":{:.3},\"dur\":{:.3},\
+                 \"name\":\"{}\",\"cat\":\"{}\",\"args\":{{\"chunk\":{},\"epoch\":{},\
+                 \"pass\":{pass},\"bytes\":{},\"raw_bytes\":{},\"codec\":\"{}\",\
+                 \"rect\":{rect}}}}}",
+                s.device,
+                s.lane,
+                s.start_s * 1e6,
+                s.dur_s() * 1e6,
+                s.kind.label(),
+                s.kind.label(),
+                s.chunk,
+                s.epoch,
+                s.bytes,
+                s.raw_bytes,
+                s.codec.name(),
+            ));
+        }
+        format!(
+            "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n{}\n]}}\n",
+            events.join(",\n")
+        )
+    }
+}
+
+/// Minimal JSON string escaping for track labels (everything else the
+/// writer emits is numeric or a known-safe enum name).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(device: usize, lane: usize, start_s: f64, end_s: f64) -> Span {
+        Span {
+            device,
+            lane,
+            kind: OpKind::Kernel,
+            start_s,
+            end_s,
+            chunk: 0,
+            epoch: 0,
+            pass: None,
+            bytes: 0,
+            raw_bytes: 0,
+            codec: CodecKind::Identity,
+            rect: None,
+        }
+    }
+
+    #[test]
+    fn off_recorder_records_nothing_and_never_allocates() {
+        let mut rec = Recorder::off();
+        assert!(!rec.is_on());
+        assert_eq!(rec.now_s(), None);
+        for i in 0..100 {
+            rec.record(span(0, 0, i as f64, i as f64 + 0.5));
+            rec.name_track(0, i, "lane");
+        }
+        assert!(rec.spans().is_empty());
+        assert_eq!(rec.buffered_capacity(), 0, "off recorder must not allocate");
+        // Fork/absorb of off recorders stays inert.
+        let fork = rec.fork();
+        assert!(!fork.is_on());
+        rec.absorb(fork);
+        assert_eq!(rec.buffered_capacity(), 0);
+    }
+
+    #[test]
+    fn on_recorder_keeps_spans_and_forks_share_the_origin() {
+        let mut rec = Recorder::on();
+        assert!(rec.is_on());
+        let t0 = rec.now_s().expect("live recorder tells time");
+        let t1 = rec.now_s().unwrap();
+        assert!(t1 >= t0);
+        rec.record(span(0, 1, 0.0, 1.0));
+        let mut w0 = rec.fork();
+        let mut w1 = rec.fork();
+        assert!(w0.is_on() && w0.spans().is_empty());
+        w0.record(span(1, 0, 2.0, 3.0));
+        w1.record(span(0, 2, 1.0, 1.5));
+        w1.name_track(0, 2, "worker1");
+        rec.absorb(w0);
+        rec.absorb(w1);
+        assert_eq!(rec.spans().len(), 3);
+        assert!((rec.horizon_s() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chrome_json_has_metadata_and_ordered_events() {
+        let mut rec = Recorder::on();
+        rec.record(span(1, 5, 2.0, 3.0));
+        rec.record(Span {
+            bytes: 64,
+            raw_bytes: 128,
+            codec: CodecKind::Bf16,
+            kind: OpKind::HtoD,
+            pass: Some(2),
+            rect: Some(Rect::new(0, 8, 0, 16)),
+            ..span(0, 0, 0.5, 1.0)
+        });
+        rec.name_track(1, 5, "halo");
+        let json = rec.chrome_json();
+        // Both processes are named; the named lane carries its label.
+        assert!(json.contains("\"process_name\""), "{json}");
+        assert!(json.contains("\"name\":\"gpu0\"") && json.contains("\"name\":\"gpu1\""));
+        assert!(json.contains("\"thread_name\"") && json.contains("\"name\":\"halo\""));
+        // Events are ordered by (pid, tid): device 0 first despite being
+        // recorded second; timestamps are microseconds.
+        let htod = json.find("\"name\":\"HtoD\"").unwrap();
+        let kern = json.find("\"name\":\"kernel\"").unwrap();
+        assert!(htod < kern, "{json}");
+        assert!(json.contains("\"ts\":500000.000"), "{json}");
+        assert!(json.contains("\"dur\":500000.000"), "{json}");
+        assert!(json.contains("\"codec\":\"bf16\""), "{json}");
+        assert!(json.contains("\"pass\":2") && json.contains("\"pass\":null"));
+        assert!(json.contains("\"rect\":\"0:8x0:16\""), "{json}");
+        // Balanced braces/brackets — the cheap well-formedness check
+        // (CI runs a real JSON parse on the CLI-written file).
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes, "{json}");
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn track_labels_are_escaped() {
+        assert_eq!(esc("plain"), "plain");
+        assert_eq!(esc("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(esc("x\ny"), "x\\u000ay");
+    }
+}

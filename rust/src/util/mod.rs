@@ -12,7 +12,7 @@ pub mod timer;
 
 pub use prng::XorShift64;
 pub use table::Table;
-pub use timer::Stopwatch;
+pub use timer::{Lap, Stopwatch};
 
 /// Format a byte count using binary units (KiB/MiB/GiB).
 pub fn fmt_bytes(bytes: u64) -> String {

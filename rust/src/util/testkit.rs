@@ -44,6 +44,21 @@ pub fn prop_seed(default: u64) -> u64 {
     env_override("PROP_SEED", std::env::var("PROP_SEED").ok().as_deref(), default)
 }
 
+/// Executor thread count for `forall`-heavy differential properties:
+/// the `PROP_THREADS` environment variable overrides the per-property
+/// default, so the nightly sweep drives the parallel executor instead
+/// of pinning `threads = 1`. Same parse-or-panic contract as the other
+/// overrides; `0` is rejected (there is no zero-thread executor).
+pub fn prop_threads(default: usize) -> usize {
+    let v = env_override(
+        "PROP_THREADS",
+        std::env::var("PROP_THREADS").ok().as_deref(),
+        default as u64,
+    ) as usize;
+    assert!(v > 0, "PROP_THREADS must be positive (1 = sequential executor)");
+    v
+}
+
 /// Run `prop` over `cases` inputs drawn from `gen`. If a case fails, shrink
 /// it with `shrink` (which proposes smaller candidates) until no proposed
 /// candidate still fails, then panic with a readable report.
@@ -210,6 +225,17 @@ mod tests {
         assert_eq!(env_override("PROP_CASES", Some("  "), 200), 200);
         assert_eq!(env_override("PROP_CASES", Some("1000"), 200), 1000);
         assert_eq!(env_override("PROP_SEED", Some(" 42 "), 7), 42);
+    }
+
+    #[test]
+    fn prop_threads_defaults_when_env_is_absent() {
+        // The pure helper is exercised above; this locks the public
+        // wrapper's default path (the process env is shared across
+        // parallel tests, so only the unset/default case is safe here).
+        if std::env::var("PROP_THREADS").is_err() {
+            assert_eq!(prop_threads(1), 1);
+            assert_eq!(prop_threads(4), 4);
+        }
     }
 
     #[test]

@@ -38,6 +38,51 @@ impl Stopwatch {
         self.stop();
         v
     }
+
+    /// RAII lap: accumulates into this stopwatch when the guard drops,
+    /// so an early return or `?` cannot leave an unmatched `start()`.
+    pub fn lap(&mut self) -> Lap<'_> {
+        self.started = None; // a guard supersedes any manual lap
+        Lap::new_duration(&mut self.total)
+    }
+}
+
+/// RAII lap guard: measures from construction to drop and adds the
+/// elapsed time to the borrowed accumulator — on *every* exit path,
+/// including early returns, `?` propagation and panics. Borrow a local
+/// `f64` when the target field is behind a `&mut self` the timed body
+/// also needs, then commit the local after the guard drops.
+#[derive(Debug)]
+pub struct Lap<'a> {
+    t0: Instant,
+    acc: LapAcc<'a>,
+}
+
+#[derive(Debug)]
+enum LapAcc<'a> {
+    Secs(&'a mut f64),
+    Duration(&'a mut Duration),
+}
+
+impl<'a> Lap<'a> {
+    /// Accumulate into a seconds counter on drop.
+    pub fn new(acc: &'a mut f64) -> Self {
+        Self { t0: Instant::now(), acc: LapAcc::Secs(acc) }
+    }
+
+    fn new_duration(acc: &'a mut Duration) -> Self {
+        Self { t0: Instant::now(), acc: LapAcc::Duration(acc) }
+    }
+}
+
+impl Drop for Lap<'_> {
+    fn drop(&mut self) {
+        let dt = self.t0.elapsed();
+        match &mut self.acc {
+            LapAcc::Secs(acc) => **acc += dt.as_secs_f64(),
+            LapAcc::Duration(acc) => **acc += dt,
+        }
+    }
 }
 
 /// Measure a closure's wall time in seconds.
@@ -81,6 +126,47 @@ mod tests {
         let mut sw = Stopwatch::new();
         sw.stop();
         assert_eq!(sw.secs(), 0.0);
+    }
+
+    #[test]
+    fn lap_guard_accumulates_on_every_exit_path() {
+        // Plain scope exit.
+        let mut acc = 0.0f64;
+        {
+            let _lap = Lap::new(&mut acc);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(acc >= 0.002, "{acc}");
+        // Early `?`-style return from inside the guarded region.
+        fn guarded(acc: &mut f64, fail: bool) -> Result<(), ()> {
+            let _lap = Lap::new(acc);
+            std::thread::sleep(Duration::from_millis(2));
+            if fail {
+                return Err(());
+            }
+            Ok(())
+        }
+        let mut acc = 0.0f64;
+        assert!(guarded(&mut acc, true).is_err());
+        assert!(acc >= 0.002, "early return leaked the lap: {acc}");
+        // The stopwatch-backed guard composes with manual laps.
+        let mut sw = Stopwatch::new();
+        {
+            let _lap = sw.lap();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(sw.secs() >= 0.002, "{}", sw.secs());
+    }
+
+    #[test]
+    fn lap_guard_supersedes_a_dangling_start() {
+        let mut sw = Stopwatch::new();
+        sw.start(); // a leaked manual start must not double-count
+        {
+            let _lap = sw.lap();
+        }
+        sw.stop(); // the leaked start was cleared by lap()
+        assert!(sw.secs() < 0.5, "{}", sw.secs());
     }
 
     #[test]

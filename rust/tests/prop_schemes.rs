@@ -11,12 +11,14 @@
 
 use so2dr::chunking::{ResidencyConfig, Scheme};
 use so2dr::coordinator::{
-    reference_run, run_scheme_full, run_scheme_full_threads, run_scheme_on, run_scheme_resident,
-    run_scheme_tiles, run_scheme_tiles_threads, ExecStats, HostBackend,
+    reference_run, run_scheme_full, run_scheme_full_threads, run_scheme_full_threads_traced,
+    run_scheme_on, run_scheme_resident, run_scheme_tiles, run_scheme_tiles_threads,
+    run_scheme_tiles_threads_traced, ExecStats, HostBackend,
 };
 use so2dr::stencil::{NaiveEngine, StencilKind};
+use so2dr::trace::Recorder;
 use so2dr::transfer::CompressMode;
-use so2dr::util::testkit::{forall, shrink_usize_toward};
+use so2dr::util::testkit::{forall, prop_threads, shrink_usize_toward};
 use so2dr::util::XorShift64;
 use so2dr::Array2;
 
@@ -751,6 +753,10 @@ fn compare_runs(
 fn prop_threaded_executor_bit_exact_vs_sequential() {
     use std::sync::atomic::{AtomicU64, Ordering};
     let max_workers = AtomicU64::new(0);
+    // `PROP_THREADS=N` raises the sweep's top thread count (default 4)
+    // so CI can push the determinism property harder without a code edit.
+    let hi = prop_threads(4);
+    let counts: Vec<usize> = if hi == 2 { vec![2] } else { vec![2, hi] };
     forall(
         0x7D37,
         50,
@@ -788,7 +794,7 @@ fn prop_threaded_executor_bit_exact_vs_sequential() {
                             &mut backend, &resident, compress, 1,
                         )
                         .map_err(|e| format!("{what} seq failed: {e:#}"))?;
-                        for threads in [2usize, 4] {
+                        for &threads in &counts {
                             let mut backend = HostBackend::new(NaiveEngine);
                             let par = run_scheme_full_threads(
                                 scheme, &initial, kind, c.n, c.d, c.devices, c.s_tb, k_on,
@@ -817,6 +823,8 @@ fn prop_threaded_executor_bit_exact_vs_sequential() {
 fn prop_threaded_tiles_bit_exact_vs_sequential() {
     use std::sync::atomic::{AtomicU64, Ordering};
     let max_workers = AtomicU64::new(0);
+    let hi = prop_threads(4);
+    let counts: Vec<usize> = if hi == 2 { vec![2] } else { vec![2, hi] };
     forall(
         0x7D37 + 1,
         40,
@@ -862,7 +870,7 @@ fn prop_threaded_tiles_bit_exact_vs_sequential() {
                         1,
                     )
                     .map_err(|e| format!("{what} seq failed: {e:#}"))?;
-                    for threads in [2usize, 4] {
+                    for &threads in &counts {
                         let mut backend = HostBackend::new(NaiveEngine);
                         let par = run_scheme_tiles_threads(
                             Scheme::So2dr,
@@ -892,6 +900,136 @@ fn prop_threaded_tiles_bit_exact_vs_sequential() {
         max_workers.load(Ordering::Relaxed) > 1,
         "vacuous sweep: no tiled run engaged more than one worker"
     );
+}
+
+/// A span's scheduling identity: everything that must be invariant
+/// across thread counts and wall-clock jitter. The worker lane and the
+/// timestamps are deliberately excluded — those are the only span
+/// fields allowed to differ.
+fn span_multiset(
+    rec: &Recorder,
+) -> Vec<(String, usize, usize, usize, Option<usize>, u64, u64)> {
+    let mut v: Vec<_> = rec
+        .spans()
+        .iter()
+        .map(|s| {
+            (s.kind.label().to_string(), s.device, s.chunk, s.epoch, s.pass, s.bytes, s.raw_bytes)
+        })
+        .collect();
+    v.sort();
+    v
+}
+
+/// Observability contract (PR 8): turning tracing on must not perturb
+/// the numerics — same grid bits and identical logical counters as the
+/// untraced run — the off recorder must never allocate, and the
+/// recorded span multiset (op identities, not lanes or timestamps) is
+/// invariant across thread counts.
+#[test]
+fn prop_tracing_is_inert_and_span_multiset_is_thread_invariant() {
+    forall(
+        0x7ACE,
+        25,
+        |rng| {
+            let mut c = gen_case(rng);
+            // Multi-device shards so the threads=4 leg really fans out.
+            if c.d < 2 {
+                c.d = 2;
+                c.rows = c.d * (c.s_tb * c.radius() + c.radius() + 4);
+            }
+            if c.devices < 2 {
+                c.devices = 2;
+            }
+            c
+        },
+        shrink_case,
+        |c| {
+            if !c.feasible() || c.devices < 2 {
+                return Ok(());
+            }
+            let kind = c.kind();
+            let initial = Array2::synthetic(c.rows, c.cols, (c.rows * 53 + c.n) as u64);
+            for resident in [ResidencyConfig::off(), ResidencyConfig::force(3)] {
+                for compress in [CompressMode::Off, CompressMode::Lossless] {
+                    let what =
+                        format!("resident={:?} compress={compress:?}", resident.mode);
+                    let mut backend = HostBackend::new(NaiveEngine);
+                    let (plain, off_rec) = run_scheme_full_threads_traced(
+                        Scheme::So2dr, &initial, kind, c.n, c.d, c.devices, c.s_tb,
+                        c.k_on, &mut backend, &resident, compress, 1, false,
+                    )
+                    .map_err(|e| format!("{what} untraced failed: {e:#}"))?;
+                    if !off_rec.spans().is_empty() || off_rec.buffered_capacity() != 0 {
+                        return Err(format!("{what}: untraced run allocated spans"));
+                    }
+                    let mut backend = HostBackend::new(NaiveEngine);
+                    let (seq, seq_rec) = run_scheme_full_threads_traced(
+                        Scheme::So2dr, &initial, kind, c.n, c.d, c.devices, c.s_tb,
+                        c.k_on, &mut backend, &resident, compress, 1, true,
+                    )
+                    .map_err(|e| format!("{what} traced seq failed: {e:#}"))?;
+                    compare_runs(&format!("{what} traced-vs-untraced"), 1, &plain, &seq)?;
+                    if seq_rec.spans().is_empty() {
+                        return Err(format!("{what}: traced run recorded no spans"));
+                    }
+                    let mut backend = HostBackend::new(NaiveEngine);
+                    let (par, par_rec) = run_scheme_full_threads_traced(
+                        Scheme::So2dr, &initial, kind, c.n, c.d, c.devices, c.s_tb,
+                        c.k_on, &mut backend, &resident, compress, 4, true,
+                    )
+                    .map_err(|e| format!("{what} traced par failed: {e:#}"))?;
+                    compare_runs(&format!("{what} traced"), 4, &seq, &par)?;
+                    if span_multiset(&seq_rec) != span_multiset(&par_rec) {
+                        return Err(format!(
+                            "{what}: span multiset differs between threads 1 \
+                             ({} spans) and 4 ({} spans)",
+                            seq_rec.spans().len(),
+                            par_rec.spans().len()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Tiles counterpart, pinned: tracing is inert and the span multiset is
+/// thread-invariant for the 2-D decomposition too (resident + lossless,
+/// the op-richest path: first-touch HtoD, band fetches, codec hops).
+#[test]
+fn traced_tiles_pinned_config_is_inert_and_thread_invariant() {
+    let kind = StencilKind::Box { radius: 1 };
+    let initial = Array2::synthetic(48, 48, 11);
+    let run = |threads: usize, trace: bool| {
+        let mut backend = HostBackend::new(NaiveEngine);
+        run_scheme_tiles_threads_traced(
+            Scheme::So2dr,
+            &initial,
+            kind,
+            10,
+            2,
+            2,
+            2,
+            4,
+            2,
+            &mut backend,
+            &ResidencyConfig::force(3),
+            CompressMode::Lossless,
+            threads,
+            trace,
+        )
+        .unwrap()
+    };
+    let (plain, off_rec) = run(1, false);
+    assert_eq!(off_rec.buffered_capacity(), 0, "untraced run allocated spans");
+    let (seq, seq_rec) = run(1, true);
+    let (par, par_rec) = run(4, true);
+    assert!(seq.grid.bit_eq(&plain.grid), "tracing perturbed the grid");
+    assert!(par.grid.bit_eq(&plain.grid), "threaded tracing perturbed the grid");
+    assert_eq!(logical_counters(&plain.stats), logical_counters(&seq.stats));
+    assert!(!seq_rec.spans().is_empty(), "traced tile run recorded no spans");
+    assert_eq!(span_multiset(&seq_rec), span_multiset(&par_rec));
 }
 
 /// The acceptance-criterion configuration, pinned: `--devices 4` at d=8
