@@ -817,13 +817,77 @@ impl Decomposition2d {
     }
 }
 
+/// Heterogeneous per-device memory capacity caps, in bytes.
+///
+/// The capacity model was all-or-nothing with a single homogeneous cap
+/// through PR 8; a fleet of mixed devices (the `serve` scheduler's
+/// input) needs one limit *per device slot*. `None` in a slot means
+/// that device is uncapped. Constructed either uniformly (the legacy
+/// single-cap surface delegates through [`DeviceCaps::uniform`]) or
+/// per-device ([`DeviceCaps::per_device`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeviceCaps {
+    caps: Vec<Option<u64>>,
+}
+
+impl DeviceCaps {
+    /// The homogeneous model: every one of `n_devices` slots gets the
+    /// same cap (`None` = uncapped everywhere).
+    pub fn uniform(n_devices: usize, cap: Option<u64>) -> Self {
+        Self { caps: vec![cap; n_devices] }
+    }
+
+    /// One explicit cap per device slot. Panics on an empty fleet.
+    pub fn per_device(caps: Vec<Option<u64>>) -> Self {
+        assert!(!caps.is_empty(), "a device-cap table needs at least one device");
+        Self { caps }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.caps.len()
+    }
+
+    /// Cap of device `dev` (`None` = uncapped).
+    pub fn cap(&self, dev: usize) -> Option<u64> {
+        self.caps[dev]
+    }
+
+    /// Accept/reject verdict for one device: does `demand` bytes fit
+    /// under device `dev`'s cap?
+    pub fn admits(&self, dev: usize, demand: u64) -> bool {
+        match self.caps[dev] {
+            None => true,
+            Some(cap) => demand <= cap,
+        }
+    }
+
+    /// Per-device accept/reject table for a demand vector (one entry
+    /// per device slot). Panics when the vector length disagrees with
+    /// the fleet size — a demand computed for a different assignment is
+    /// a caller bug, not a reject.
+    pub fn admit_table(&self, demand: &[u64]) -> Vec<bool> {
+        assert_eq!(
+            demand.len(),
+            self.caps.len(),
+            "demand vector is per-device and must match the cap table"
+        );
+        demand.iter().enumerate().map(|(dev, &need)| self.admits(dev, need)).collect()
+    }
+
+    /// All-devices verdict: every entry of [`Self::admit_table`] accepts.
+    pub fn admits_all(&self, demand: &[u64]) -> bool {
+        self.admit_table(demand).iter().all(|&ok| ok)
+    }
+}
+
 /// Assignment of chunks to devices for a sharded (multi-GPU) run.
 ///
 /// Chunks are mapped to devices in contiguous near-equal blocks, so the
 /// only inter-device halo traffic is at the `n_devices - 1` block
 /// boundaries — every interior region share stays a cheap on-device copy,
 /// and a boundary share becomes a peer-to-peer (`D2D`) link transfer.
-/// Devices are modeled homogeneous (same capacity and bandwidths).
+/// Devices are modeled with homogeneous bandwidths; memory capacity may
+/// differ per device ([`DeviceCaps`]).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct DeviceAssignment {
     n_devices: usize,
@@ -967,41 +1031,45 @@ impl DeviceAssignment {
         nc * dc.arena_bytes(s_max) + nc * 16 * band
     }
 
-    /// Per-device pinned-tile counts under `cap` bytes and
-    /// [`Self::resident_tile_memory_demand`]: the same all-or-nothing
-    /// rule as [`Self::resident_keep_counts`] (spilling cannot lower
-    /// the modeled epoch-boundary peak, only pinning-vs-not changes
-    /// host traffic). `None` caps nothing (keep all).
+    /// Per-device pinned-tile counts under a uniform `cap` — the
+    /// homogeneous surface over [`Self::resident_tile_keep_counts_caps`]
+    /// (`None` caps nothing, keep all).
     pub fn resident_tile_keep_counts(
         &self,
         dc: &Decomposition2d,
         s_max: usize,
         cap: Option<u64>,
     ) -> Vec<usize> {
+        self.resident_tile_keep_counts_caps(dc, s_max, &DeviceCaps::uniform(self.n_devices, cap))
+    }
+
+    /// Per-device pinned-tile counts under heterogeneous caps and
+    /// [`Self::resident_tile_memory_demand`]: the same all-or-nothing
+    /// rule as [`Self::resident_keep_counts_caps`] (spilling cannot
+    /// lower the modeled epoch-boundary peak, only pinning-vs-not
+    /// changes host traffic), decided per device against *its own* cap.
+    pub fn resident_tile_keep_counts_caps(
+        &self,
+        dc: &Decomposition2d,
+        s_max: usize,
+        caps: &DeviceCaps,
+    ) -> Vec<usize> {
+        assert_eq!(caps.n_devices(), self.n_devices, "cap table must match the fleet");
         (0..self.n_devices)
             .map(|dev| {
                 let nc = self.chunks_on(dev).len();
-                match cap {
-                    None => nc,
-                    Some(cap) => {
-                        if self.resident_tile_memory_demand(dc, dev, s_max) <= cap {
-                            nc
-                        } else {
-                            0
-                        }
-                    }
+                if caps.admits(dev, self.resident_tile_memory_demand(dc, dev, s_max)) {
+                    nc
+                } else {
+                    0
                 }
             })
             .collect()
     }
 
-    /// Per-device pinned-chunk counts under `cap` bytes and
-    /// [`Self::resident_memory_demand`]. Because the epoch-boundary
-    /// footprint is the same whether chunks pin or spill (see above),
-    /// the decision is all-or-nothing per device: pin everything when
-    /// the device's demand fits (pinning only removes host traffic),
-    /// else pin nothing and spill every epoch. `None` caps nothing
-    /// (keep all).
+    /// Per-device pinned-chunk counts under a uniform `cap` — the
+    /// homogeneous surface over [`Self::resident_keep_counts_caps`]
+    /// (`None` caps nothing, keep all).
     pub fn resident_keep_counts(
         &self,
         dc: &Decomposition,
@@ -1009,18 +1077,37 @@ impl DeviceAssignment {
         h_max: usize,
         cap: Option<u64>,
     ) -> Vec<usize> {
+        self.resident_keep_counts_caps(
+            dc,
+            buf_rows,
+            h_max,
+            &DeviceCaps::uniform(self.n_devices, cap),
+        )
+    }
+
+    /// Per-device pinned-chunk counts under heterogeneous caps and
+    /// [`Self::resident_memory_demand`]. Because the epoch-boundary
+    /// footprint is the same whether chunks pin or spill (see above),
+    /// the decision is all-or-nothing per device: pin everything when
+    /// the device's demand fits *its own* cap (pinning only removes
+    /// host traffic), else pin nothing and spill every epoch. A mixed
+    /// fleet therefore pins on its big devices and spills on its small
+    /// ones — the accept/reject split the `serve` packer leans on.
+    pub fn resident_keep_counts_caps(
+        &self,
+        dc: &Decomposition,
+        buf_rows: usize,
+        h_max: usize,
+        caps: &DeviceCaps,
+    ) -> Vec<usize> {
+        assert_eq!(caps.n_devices(), self.n_devices, "cap table must match the fleet");
         (0..self.n_devices)
             .map(|dev| {
                 let nc = self.chunks_on(dev).len();
-                match cap {
-                    None => nc,
-                    Some(cap) => {
-                        if self.resident_memory_demand(dc, dev, buf_rows, h_max) <= cap {
-                            nc
-                        } else {
-                            0
-                        }
-                    }
+                if caps.admits(dev, self.resident_memory_demand(dc, dev, buf_rows, h_max)) {
+                    nc
+                } else {
+                    0
                 }
             })
             .collect()
@@ -1343,6 +1430,71 @@ mod tests {
             devs.resident_keep_counts(&dc, buf_rows, 8, Some(demand - 1)),
             vec![0, 0]
         );
+    }
+
+    /// Accept/reject table for heterogeneous per-device caps: every
+    /// (cap table, expected keep counts) row exercises a distinct mix of
+    /// uncapped, exactly-at-demand, and one-byte-short device slots. The
+    /// decision is per device against its own cap — a mixed fleet pins
+    /// on its big devices and spills on its small ones.
+    #[test]
+    fn hetero_caps_accept_reject_table() {
+        let dc = Decomposition::new(960, 256, 8, 1);
+        let devs = DeviceAssignment::contiguous(8, 2);
+        let buf_rows = dc.uniform_buffer_rows(crate::chunking::Scheme::So2dr, 8);
+        let demand: Vec<u64> =
+            (0..2).map(|dev| devs.resident_memory_demand(&dc, dev, buf_rows, 8)).collect();
+        let cases: &[(Vec<Option<u64>>, Vec<usize>)] = &[
+            // Uniform uncapped / tiny, via the hetero surface.
+            (vec![None, None], vec![4, 4]),
+            (vec![Some(1), Some(1)], vec![0, 0]),
+            // Exactly at demand accepts; one byte short rejects.
+            (vec![Some(demand[0]), Some(demand[1])], vec![4, 4]),
+            (vec![Some(demand[0] - 1), Some(demand[1] - 1)], vec![0, 0]),
+            // Mixed fleets: each device decided independently.
+            (vec![Some(demand[0]), Some(demand[1] - 1)], vec![4, 0]),
+            (vec![Some(demand[0] - 1), Some(demand[1])], vec![0, 4]),
+            (vec![None, Some(1)], vec![4, 0]),
+            (vec![Some(1), None], vec![0, 4]),
+        ];
+        for (caps, want) in cases {
+            let table = DeviceCaps::per_device(caps.clone());
+            assert_eq!(
+                devs.resident_keep_counts_caps(&dc, buf_rows, 8, &table),
+                *want,
+                "caps {caps:?}"
+            );
+        }
+        // The homogeneous surface is the uniform special case of the
+        // heterogeneous one — the two cannot drift.
+        for cap in [None, Some(1), Some(demand[0]), Some(u64::MAX)] {
+            assert_eq!(
+                devs.resident_keep_counts(&dc, buf_rows, 8, cap),
+                devs.resident_keep_counts_caps(&dc, buf_rows, 8, &DeviceCaps::uniform(2, cap)),
+                "cap {cap:?}"
+            );
+        }
+    }
+
+    /// [`DeviceCaps`] admission verdicts: the per-device accept/reject
+    /// table and the all-devices verdict the serve packer uses.
+    #[test]
+    fn device_caps_admit_table() {
+        let caps = DeviceCaps::per_device(vec![Some(100), Some(50), None]);
+        assert_eq!(caps.n_devices(), 3);
+        assert_eq!(caps.admit_table(&[100, 50, u64::MAX]), vec![true, true, true]);
+        assert_eq!(caps.admit_table(&[101, 50, 7]), vec![false, true, true]);
+        assert_eq!(caps.admit_table(&[100, 51, 7]), vec![true, false, true]);
+        assert!(caps.admits_all(&[100, 50, 12]));
+        assert!(!caps.admits_all(&[100, 51, 12]));
+        assert!(caps.admits(2, u64::MAX), "an uncapped slot admits anything");
+        assert_eq!(DeviceCaps::uniform(2, Some(9)).admit_table(&[9, 10]), vec![true, false]);
+    }
+
+    #[test]
+    #[should_panic(expected = "must match")]
+    fn device_caps_reject_mismatched_demand_vector() {
+        DeviceCaps::per_device(vec![Some(1), Some(2)]).admit_table(&[1, 2, 3]);
     }
 
     #[test]
@@ -1871,5 +2023,39 @@ mod tile_tests {
             devs.resident_tile_keep_counts(&dc, s_max, Some(demand - 1)),
             vec![0, 0]
         );
+    }
+
+    /// Tile-side accept/reject table for heterogeneous caps — the 2-D
+    /// twin of `hetero_caps_accept_reject_table`, same per-device
+    /// all-or-nothing rule against each slot's own limit.
+    #[test]
+    fn tile_hetero_caps_accept_reject_table() {
+        let dc = dc2(120, 96, 2, 2, 1);
+        let devs = DeviceAssignment::contiguous(4, 2);
+        let s_max = 6;
+        let demand: Vec<u64> =
+            (0..2).map(|dev| devs.resident_tile_memory_demand(&dc, dev, s_max)).collect();
+        let cases: &[(Vec<Option<u64>>, Vec<usize>)] = &[
+            (vec![None, None], vec![2, 2]),
+            (vec![Some(demand[0]), Some(demand[1])], vec![2, 2]),
+            (vec![Some(demand[0] - 1), Some(demand[1])], vec![0, 2]),
+            (vec![Some(demand[0]), Some(demand[1] - 1)], vec![2, 0]),
+            (vec![Some(1), Some(1)], vec![0, 0]),
+        ];
+        for (caps, want) in cases {
+            let table = DeviceCaps::per_device(caps.clone());
+            assert_eq!(
+                devs.resident_tile_keep_counts_caps(&dc, s_max, &table),
+                *want,
+                "caps {caps:?}"
+            );
+        }
+        for cap in [None, Some(1), Some(demand[0]), Some(u64::MAX)] {
+            assert_eq!(
+                devs.resident_tile_keep_counts(&dc, s_max, cap),
+                devs.resident_tile_keep_counts_caps(&dc, s_max, &DeviceCaps::uniform(2, cap)),
+                "cap {cap:?}"
+            );
+        }
     }
 }

@@ -1,7 +1,9 @@
-//! Configuration: run configs (Table I), benchmark set (Table III) and
-//! the mini-TOML loader.
+//! Configuration: run configs (Table I), benchmark set (Table III), the
+//! `[serve]` scheduler block and the mini-TOML loader.
 
 pub mod run;
+pub mod serve;
 pub mod toml_mini;
 
 pub use run::{clamp_threads, validate_devices, RunConfig, MAX_THREADS};
+pub use serve::ServeConfig;

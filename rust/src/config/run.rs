@@ -135,6 +135,12 @@ impl RunConfig {
         let doc = parse(text)?;
         let mut cfg = RunConfig::default();
         for (section, table) in &doc {
+            if section == "serve" {
+                // A [serve] block in the same file belongs to
+                // `config::serve::ServeConfig`; the run loader skips it
+                // so one TOML can configure both subcommands.
+                continue;
+            }
             if !section.is_empty() && section != "run" {
                 bail!("unknown section [{section}]");
             }
@@ -515,6 +521,10 @@ mod tests {
             ("zzz = 1\n", false),
             ("compres = \"off\"\n", false),
             ("[grid]\nrows = 512\n", false),
+            // A [serve] block is skipped (owned by ServeConfig), so one
+            // file can configure both `run` and `serve`.
+            ("[serve]\njobs = 8\n", true),
+            ("sz = 256\n[serve]\njobs = 8\nfleet = 2\n", true),
             // Wrong value types.
             ("rows = \"many\"\n", false),
             ("rows = -3\n", false),

@@ -1,0 +1,168 @@
+//! `serve` configuration: the `[serve]` TOML block and its validation.
+//!
+//! Lives beside [`super::run::RunConfig`] but owns a *sectioned* block:
+//! serve keys must appear under `[serve]` (root-level keys belong to the
+//! run surface), and a `[run]` block or root keys in the same file are
+//! skipped here exactly as `RunConfig::from_toml` skips `[serve]` — one
+//! TOML file can configure both subcommands without either loader
+//! tripping on the other's keys.
+
+use super::toml_mini::{parse, Section};
+use crate::chunking::DeviceCaps;
+use crate::gpu::cost::MachineSpec;
+use crate::serve::Fleet;
+use anyhow::{bail, Context, Result};
+
+/// Everything the `serve` subcommand needs beyond the machine model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Jobs drawn from the catalog stream.
+    pub jobs: usize,
+    /// Fleet size in devices.
+    pub fleet: usize,
+    /// Stream seed (fixed seed ⇒ identical schedule).
+    pub seed: u64,
+    /// Max concurrent jobs sharing one device.
+    pub slots: usize,
+    /// Optional uniform per-device cap override in MiB; `None` keeps
+    /// the serve-class alternating 2 GiB / 1 GiB profile.
+    pub cap_mib: Option<u64>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { jobs: 24, fleet: 2, seed: 42, slots: 2, cap_mib: None }
+    }
+}
+
+impl ServeConfig {
+    /// Parse from mini-TOML text. Only the `[serve]` section is read;
+    /// unknown keys inside it are rejected so typos fail loudly.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = parse(text)?;
+        let mut cfg = ServeConfig::default();
+        for (section, table) in &doc {
+            if section != "serve" {
+                // Root keys and [run] belong to RunConfig::from_toml.
+                continue;
+            }
+            let s = Section(table);
+            for key in table.keys() {
+                match key.as_str() {
+                    "jobs" => cfg.jobs = s.usize_req("jobs")?,
+                    "fleet" => cfg.fleet = s.usize_req("fleet")?,
+                    "seed" => cfg.seed = s.int_or("seed", 42) as u64,
+                    "slots" => cfg.slots = s.usize_req("slots")?,
+                    "cap_mib" => cfg.cap_mib = Some(s.usize_req("cap_mib")? as u64),
+                    other => bail!("unknown key {other:?} in [serve]"),
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.jobs == 0 {
+            bail!("jobs must be positive");
+        }
+        if self.fleet == 0 || self.fleet > 64 {
+            bail!("fleet must be in 1..=64 devices");
+        }
+        if self.slots == 0 || self.slots > 8 {
+            bail!("slots must be in 1..=8 concurrent jobs per device");
+        }
+        if self.cap_mib == Some(0) {
+            bail!("cap_mib must be positive (omit it for the serve-class profile)");
+        }
+        Ok(())
+    }
+
+    /// Build the configured fleet over `machine`: the serve-class
+    /// alternating-caps profile by default, or a uniform `cap_mib`
+    /// override (useful for forcing capacity rejects in tests/CI).
+    pub fn fleet_of(&self, machine: MachineSpec) -> Fleet {
+        let caps = match self.cap_mib {
+            Some(mib) => DeviceCaps::uniform(self.fleet, Some(mib << 20)),
+            None => Fleet::serve_class(machine.clone(), self.fleet).caps().clone(),
+        };
+        Fleet::new(machine, caps, self.slots)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ServeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_a_serve_block_and_ignores_run_keys() {
+        let cfg = ServeConfig::from_toml(
+            "sz = 512\n[run]\nd = 8\n[serve]\njobs = 12\nfleet = 4\nseed = 9\nslots = 1\n",
+        )
+        .unwrap();
+        assert_eq!(cfg, ServeConfig { jobs: 12, fleet: 4, seed: 9, slots: 1, cap_mib: None });
+        // No [serve] block at all: defaults.
+        assert_eq!(ServeConfig::from_toml("sz = 512\n").unwrap(), ServeConfig::default());
+    }
+
+    /// Accept/reject table for the `[serve]` surface.
+    #[test]
+    fn key_acceptance_table() {
+        let cases: &[(&str, bool)] = &[
+            ("", true),
+            ("[serve]\njobs = 1\n", true),
+            ("[serve]\nfleet = 64\n", true),
+            ("[serve]\ncap_mib = 512\n", true),
+            ("[serve]\nslots = 8\n", true),
+            // Unknown keys fail loudly.
+            ("[serve]\njob = 1\n", false),
+            ("[serve]\nzzz = true\n", false),
+            // Wrong types.
+            ("[serve]\njobs = \"many\"\n", false),
+            ("[serve]\njobs = -1\n", false),
+            ("[serve]\ncap_mib = \"big\"\n", false),
+            // Structural violations.
+            ("[serve]\njobs = 0\n", false),
+            ("[serve]\nfleet = 0\n", false),
+            ("[serve]\nfleet = 65\n", false),
+            ("[serve]\nslots = 0\n", false),
+            ("[serve]\nslots = 9\n", false),
+            ("[serve]\ncap_mib = 0\n", false),
+        ];
+        for (text, ok) in cases {
+            assert_eq!(
+                ServeConfig::from_toml(text).is_ok(),
+                *ok,
+                "config {text:?} expected {}",
+                if *ok { "accept" } else { "reject" }
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_of_honors_the_cap_override() {
+        let m = MachineSpec::rtx3080();
+        let default_fleet = ServeConfig::default().fleet_of(m.clone());
+        assert_eq!(default_fleet.n_devices(), 2);
+        assert_eq!(default_fleet.caps().cap(0), Some(crate::serve::SERVE_CAP_FULL));
+        assert_eq!(default_fleet.caps().cap(1), Some(crate::serve::SERVE_CAP_HALF));
+
+        let capped = ServeConfig { cap_mib: Some(16), fleet: 3, ..ServeConfig::default() };
+        let fleet = capped.fleet_of(m);
+        assert_eq!(fleet.n_devices(), 3);
+        for dev in 0..3 {
+            assert_eq!(fleet.caps().cap(dev), Some(16 << 20));
+        }
+    }
+}

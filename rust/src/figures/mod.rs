@@ -958,7 +958,9 @@ pub fn overlap_fig(machine: &MachineSpec) -> String {
 /// Machine-readable perf snapshot for the overlap engine: every
 /// [`overlap_sweep`] cell priced with the pipeline-honest schedule and
 /// the legacy additive layout. Written to `<dir>/BENCH_pr6.json`; the
-/// committed copy at the repo root is CI's regression baseline.
+/// committed schema-v2 copy at the repo root pins the cell structure and
+/// config, and CI hard-gates two regenerations of this table against
+/// each other bit-for-bit (the DES is deterministic).
 pub fn bench_pr6_to(machine: &MachineSpec, dir: &std::path::Path) -> String {
     let mut entries: Vec<String> = Vec::new();
     for c in overlap_sweep(machine) {
@@ -1112,8 +1114,11 @@ fn bench_pr7_impl(machine: &MachineSpec, dir: &std::path::Path, sz: usize, n: us
 }
 
 /// Machine-readable [`bench_pr7_impl`] at the committed trajectory
-/// geometry. Written to `<dir>/BENCH_pr7.json`; the committed copy at
-/// the repo root is CI's perf baseline for the parallel executor.
+/// geometry. Written to `<dir>/BENCH_pr7.json`; the committed schema-v2
+/// copy at the repo root pins the config and thread sweep, and CI
+/// hard-gates bit-exactness at every thread count plus bit-identical
+/// DES anchors across two regenerations (wall-clock itself is
+/// host-measured and never committed).
 pub fn bench_pr7_to(machine: &MachineSpec, dir: &std::path::Path) -> String {
     bench_pr7_impl(machine, dir, BENCH_PR7_SZ, BENCH_PR7_STEPS)
 }
@@ -1354,6 +1359,93 @@ pub fn trace_fig(machine: &MachineSpec) -> String {
     out
 }
 
+/// Jobs in the committed serve scaling curve. Longer than the 18-shape
+/// job catalog, so autotune-memo hits are guaranteed by pigeonhole.
+pub const SERVE_FIG_JOBS: usize = 24;
+/// Seed of the committed serve stream (fixed ⇒ deterministic curve).
+pub const SERVE_FIG_SEED: u64 = 2309;
+
+/// Fleet-scale serving headline curve: the same seeded 24-job stream
+/// packed onto serve-class fleets of 1, 2 and 4 devices. Jobs/sec rises
+/// with fleet size because the stream oversubscribes a single device
+/// (millisecond arrivals vs 10–350 ms DES-priced jobs); p50/p99
+/// *predicted* latency falls as queueing drains. Alongside the table, a
+/// machine-readable `serve.json` lands in `dir` for the CI artifact.
+pub fn serve_fig_to(machine: &MachineSpec, dir: &std::path::Path) -> String {
+    use crate::serve::{job_stream, serve, Fleet};
+    let jobs = job_stream(SERVE_FIG_SEED, SERVE_FIG_JOBS);
+    let mut out = String::from(
+        "== Fleet-scale serve: jobs/sec and predicted latency vs fleet size ==\n\
+         (fixed 24-job stream; serve-class fleet: alternating 2 GiB / 1 GiB device \
+         caps, 2 jobs/device; DES-priced placements)\n",
+    );
+    let mut t = Table::new(vec![
+        "fleet", "admitted", "rejected", "miss", "jobs/s", "p50 latency", "p99 latency",
+        "memo hit rate",
+    ]);
+    let mut entries: Vec<String> = Vec::new();
+    let mut throughput: Vec<(usize, f64)> = Vec::new();
+    for fleet_n in [1usize, 2, 4] {
+        let fleet = Fleet::serve_class(machine.clone(), fleet_n);
+        let rep = serve(&fleet, &jobs)
+            .expect("figure machines are validated, non-degenerate specs");
+        let p50 = rep.latency_quantile(0.50).unwrap_or(0.0);
+        let p99 = rep.latency_quantile(0.99).unwrap_or(0.0);
+        t.row(vec![
+            fleet_n.to_string(),
+            rep.admitted().to_string(),
+            rep.rejected.len().to_string(),
+            rep.deadline_misses().to_string(),
+            format!("{:.2}", rep.jobs_per_s()),
+            crate::util::fmt_secs(p50),
+            crate::util::fmt_secs(p99),
+            format!("{:.0}%", 100.0 * rep.memo_hit_rate()),
+        ]);
+        entries.push(format!(
+            "    {{\"fleet\": {fleet_n}, \"admitted\": {}, \"rejected\": {}, \
+             \"deadline_miss\": {}, \"jobs_per_s\": {:.6}, \"p50_latency_s\": {:.6}, \
+             \"p99_latency_s\": {:.6}, \"memo_hits\": {}, \"memo_misses\": {}}}",
+            rep.admitted(),
+            rep.rejected.len(),
+            rep.deadline_misses(),
+            rep.jobs_per_s(),
+            p50,
+            p99,
+            rep.memo_hits,
+            rep.memo_misses,
+        ));
+        throughput.push((fleet_n, rep.jobs_per_s()));
+    }
+    out.push_str(&t.render());
+    if let (Some(first), Some(last)) = (throughput.first(), throughput.last()) {
+        out.push_str(&format!(
+            "scaling: {:.2} jobs/s at {} device(s) -> {:.2} at {} ({:.2}x)\n",
+            first.1,
+            first.0,
+            last.1,
+            last.0,
+            last.1 / first.1.max(1e-12),
+        ));
+    }
+    let json = format!(
+        "{{\n  \"what\": \"serve scaling: fixed seeded job stream vs fleet size\",\n  \
+         \"config\": {{\"jobs\": {SERVE_FIG_JOBS}, \"seed\": {SERVE_FIG_SEED}, \
+         \"k_on\": {}, \"n_strm\": {}, \"slots\": 2, \"caps\": \"2GiB/1GiB alternating\"}},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        crate::serve::SERVE_K_ON,
+        crate::serve::SERVE_N_STRM,
+        entries.join(",\n"),
+    );
+    let _ = std::fs::create_dir_all(dir);
+    let _ = std::fs::write(dir.join("serve.json"), &json);
+    out
+}
+
+/// Registry-shaped [`serve_fig_to`]: writes `results/serve.json`.
+pub fn serve_fig(machine: &MachineSpec) -> String {
+    serve_fig_to(machine, std::path::Path::new("results"))
+}
+
 /// The figure registry, in report order: names paired with their
 /// builders. Kept lazy so the CLI's `--fig` filter selects *before*
 /// computing — figures run paper-scale DES sweeps (and `bench_pr2`
@@ -1379,6 +1471,7 @@ pub fn registry() -> Vec<(&'static str, fn(&MachineSpec) -> String)> {
         ("bench_pr5", bench_pr5),
         ("bench_pr6", bench_pr6),
         ("bench_pr7", bench_pr7),
+        ("serve", serve_fig),
     ]
 }
 
@@ -1416,6 +1509,39 @@ mod tests {
         assert!(txt.contains("Span-trace occupancy"), "{txt}");
         assert!(txt.contains("gpu0") && txt.contains("gpu3"), "{txt}");
         assert!(txt.contains("spans over"), "{txt}");
+    }
+
+    #[test]
+    fn serve_figure_throughput_scales_and_hits_the_memo() {
+        use crate::serve::{job_stream, serve, verify_capacity, Fleet};
+        let m = MachineSpec::rtx3080();
+        let jobs = job_stream(SERVE_FIG_SEED, SERVE_FIG_JOBS);
+        let mut throughput = Vec::new();
+        for n in [1usize, 4] {
+            let fleet = Fleet::serve_class(m.clone(), n);
+            let rep = serve(&fleet, &jobs).unwrap();
+            // The acceptance criterion's capacity clause: zero
+            // violations, re-checked independently of the packer.
+            verify_capacity(&fleet, &rep.placements).unwrap();
+            assert!(rep.admitted() >= 1, "fleet of {n} admitted nothing");
+            assert!(
+                rep.memo_hits >= 1,
+                "24 jobs over an 18-shape catalog must repeat (fleet {n})"
+            );
+            throughput.push(rep.jobs_per_s());
+        }
+        assert!(
+            throughput[1] > throughput[0],
+            "jobs/sec must increase from 1 to 4 devices: {throughput:?}"
+        );
+        // The rendered figure + its JSON artifact.
+        let dir = crate::util::testkit::TempDir::new("serve-fig");
+        let txt = serve_fig_to(&m, dir.path());
+        assert!(txt.contains("Fleet-scale serve"), "{txt}");
+        assert!(txt.contains("scaling:"), "{txt}");
+        let json = std::fs::read_to_string(dir.path().join("serve.json")).unwrap();
+        assert!(json.contains("\"fleet\": 4"), "{json}");
+        assert!(json.contains("\"jobs_per_s\""), "{json}");
     }
 
     #[test]

@@ -254,6 +254,32 @@
 //!        overlap (FIFO lanes; sequential workers), durations are
 //!        non-negative, and the executor's span op-multiset is
 //!        thread-count-invariant.
+//!   - **Fleet-scale serving** (`serve`, `figures --fig serve`): the
+//!     calibrated DES becomes a multi-tenant scheduler — a seeded
+//!     deterministic job stream ([`serve::job_stream`]) is packed onto a
+//!     heterogeneous fleet ([`serve::Fleet`]: per-device
+//!     [`chunking::DeviceCaps`] plus a space-sharing slot limit) by an
+//!     admission controller that autotunes each job through a
+//!     [`params::AutotuneMemo`] and prices placements with
+//!     DES-predicted makespans. Serve-contract invariants the suites
+//!     enforce (unit + figures + `rust/tests/prop_serve.rs`):
+//!     1. *admission never violates the capacity model*: every admitted
+//!        placement passes the per-device accept/reject table at every
+//!        instant, device sharing included —
+//!        [`serve::verify_capacity`] re-checks each schedule
+//!        independently of the packer;
+//!     2. *memoized autotune ≡ fresh sweep*: repeat `(kind, geometry,
+//!        machine)` traffic returns the same `f64::total_cmp` ranking
+//!        bit-for-bit, and a memoized degenerate spec resurfaces as the
+//!        same typed [`gpu::cost::DegenerateMachineError`], never a
+//!        stale `+inf` ranking;
+//!     3. *fixed seed ⇒ identical schedule*: no clocks and no map
+//!        iteration order anywhere in the scheduler — the same stream
+//!        on the same fleet reproduces every placement bit-for-bit;
+//!     4. *rejection is a verdict, not a panic*: jobs that fit no
+//!        `(d, S_TB)` or no device window come back as typed
+//!        [`serve::RejectReason`]s, and deadline misses are counted
+//!        (`metrics::serve_line`) rather than dropped.
 //! - **L2 (`python/compile/model.py`):** the fixed-shape chunk program,
 //!   AOT-lowered to HLO text.
 //! - **L1 (`python/compile/kernels/`):** the Pallas multi-step stencil
@@ -268,6 +294,7 @@ pub mod metrics;
 pub mod params;
 pub mod core;
 pub mod runtime;
+pub mod serve;
 pub mod stencil;
 pub mod trace;
 pub mod transfer;

@@ -6,6 +6,7 @@
 //!   `validate`                 cross-scheme equivalence suite
 //!   `autotune [opts]`          §IV-C heuristic + DES ranking
 //!   `simulate [opts]`          price one configuration on the machine model
+//!   `serve [opts]`             multi-tenant job scheduler over the DES
 //!   `figures [--fig NAME]`     regenerate the paper's tables and figures
 //!
 //! Run `so2dr <cmd> --help` for the options of each command.
@@ -764,7 +765,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 fn cmd_figures(args: &Args) -> Result<()> {
     if args.help() {
         println!(
-            "so2dr figures [--fig tables|3b|5|6|7|8|9|10|ablation_kon|scaling|resident|compress|decomp|overlap|trace|bench_pr2|bench_pr5|bench_pr6|bench_pr7]\n\
+            "so2dr figures [--fig tables|3b|5|6|7|8|9|10|ablation_kon|scaling|resident|compress|decomp|overlap|trace|bench_pr2|bench_pr5|bench_pr6|bench_pr7|serve]\n\
              \x20             [--machine M]"
         );
         return Ok(());
@@ -785,6 +786,65 @@ fn cmd_figures(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    if args.help() {
+        println!(
+            "so2dr serve [--jobs N] [--fleet N] [--seed S] [--slots K] [--cap-mib MIB]\n\
+             \x20           [--machine M] [--config file.toml]"
+        );
+        return Ok(());
+    }
+    let machine = machine_of(args)?;
+    let mut cfg = match args.get("config") {
+        Some(path) => so2dr::config::ServeConfig::load(std::path::Path::new(path))?,
+        None => so2dr::config::ServeConfig::default(),
+    };
+    cfg.jobs = args.usize_or("jobs", cfg.jobs)?;
+    cfg.fleet = args.usize_or("fleet", cfg.fleet)?;
+    if let Some(v) = args.get("seed") {
+        cfg.seed = v.parse().context("--seed must be a non-negative integer")?;
+    }
+    cfg.slots = args.usize_or("slots", cfg.slots)?;
+    if let Some(v) = args.get("cap-mib") {
+        cfg.cap_mib = Some(v.parse().context("--cap-mib must be an integer (MiB)")?);
+    }
+    cfg.validate()?;
+
+    let fleet = cfg.fleet_of(machine);
+    let jobs = so2dr::serve::job_stream(cfg.seed, cfg.jobs);
+    let report = so2dr::serve::serve(&fleet, &jobs)?;
+
+    let mut table = Table::new(vec![
+        "job", "kind", "sz", "steps", "d", "S_TB", "devices", "start", "finish", "deadline",
+    ]);
+    for p in &report.placements {
+        table.row(vec![
+            format!("{}", p.job.id),
+            p.job.kind.name(),
+            format!("{}", p.job.sz),
+            format!("{}", p.job.steps),
+            format!("{}", p.d),
+            format!("{}", p.s_tb),
+            format!("{}..{}", p.window, p.window + p.width),
+            fmt_secs(p.start_s),
+            fmt_secs(p.finish_s),
+            if p.missed_deadline() { "MISS".into() } else { "ok".into() },
+        ]);
+    }
+    print!("{}", table.render());
+    for (job, reason) in &report.rejected {
+        println!(
+            "rejected: job {} ({} sz={} steps={}): {reason}",
+            job.id,
+            job.kind.name(),
+            job.sz,
+            job.steps
+        );
+    }
+    println!("{}", so2dr::metrics::serve_line(&report));
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
@@ -795,6 +855,7 @@ fn main() -> Result<()> {
         "validate" => cmd_validate(),
         "autotune" => cmd_autotune(&args),
         "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
         "figures" => cmd_figures(&args),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
@@ -808,12 +869,13 @@ fn main() -> Result<()> {
 }
 
 const HELP: &str = "so2dr — SO2DR out-of-core stencil framework (paper reproduction)\n\n\
-USAGE: so2dr <info|run|validate|autotune|simulate|figures> [options]\n\n\
+USAGE: so2dr <info|run|validate|autotune|simulate|serve|figures> [options]\n\n\
   info       platform + AOT artifact inventory\n\
   run        execute a configuration with real numerics and verify it\n\
   validate   bit-exact equivalence of all schemes vs the reference\n\
   autotune   rank run-time configurations (paper §IV-C + simulator)\n\
   simulate   price one configuration on the modeled RTX 3080(s)\n\
+  serve      schedule a multi-tenant job stream onto a simulated fleet\n\
   figures    regenerate the paper's tables and figures (results/)\n\n\
 Multi-device: `--devices N` shards chunks over N simulated GPUs with\n\
 peer-to-peer halo exchange; `--d2d-gbps X` sets the link bandwidth.\n\
@@ -841,6 +903,13 @@ runs the real-numerics executor with one worker per simulated-device\n\
 range — bit-identical results at any thread count (enforced by the\n\
 determinism property suite); `figures --fig bench_pr7` records the\n\
 measured wall-clock trajectory next to the DES-predicted makespans.\n\
+Serving: `serve --jobs N --fleet N --seed S` draws a deterministic\n\
+job stream from the benchmark catalog and packs it onto a heterogeneous\n\
+fleet (alternating 2 GiB / 1 GiB serve-class caps, or `--cap-mib` to\n\
+override uniformly) by DES-predicted earliest finish; the memoized\n\
+autotune prices each distinct (kind, geometry) once. TOML `[serve]`\n\
+carries the same keys; `figures --fig serve` tables jobs/sec and\n\
+predicted latency quantiles against fleet size.\n\
 Tracing: `--trace out.json` (TOML `trace`) on `run` and `simulate`\n\
 writes a Chrome trace-event span timeline — load it in Perfetto or\n\
 chrome://tracing. `run` traces the real executor (wall-clock spans per\n\

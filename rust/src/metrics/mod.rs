@@ -304,6 +304,31 @@ pub fn residual_line(rep: &SimReport, stats: &ExecStats) -> String {
     format!("residual (DES busy -> measured): {}{caveat}", parts.join("  "))
 }
 
+/// One-line scheduler report for `so2dr serve`: admission verdicts,
+/// deadline misses, admitted throughput over the schedule horizon,
+/// predicted-latency quantiles and the autotune memo's hit rate. The
+/// quantiles read "n/a" when nothing was admitted (an all-reject run is
+/// a valid verdict, not an error).
+pub fn serve_line(rep: &crate::serve::ServeReport) -> String {
+    let total = rep.admitted() + rep.rejected.len();
+    let quant = |q: f64| rep.latency_quantile(q).map(fmt_secs).unwrap_or_else(|| "n/a".into());
+    format!(
+        "serve: fleet {}  jobs {total} -> admitted {}, rejected {}, deadline-miss {}  \
+         throughput {:.2} jobs/s  predicted latency p50 {} p99 {}  \
+         autotune memo: {} hits / {} misses ({:.0}% hit rate)",
+        rep.fleet_devices,
+        rep.admitted(),
+        rep.rejected.len(),
+        rep.deadline_misses(),
+        rep.jobs_per_s(),
+        quant(0.50),
+        quant(0.99),
+        rep.memo_hits,
+        rep.memo_misses,
+        100.0 * rep.memo_hit_rate(),
+    )
+}
+
 /// Write a report section to `<dir>/<name>.txt` (best-effort) and return
 /// the text. Tests pass a [`crate::util::testkit::TempDir`] path so
 /// parallel runs never collide on a shared file. A failed write never
@@ -343,6 +368,51 @@ mod tests {
         let rep = SimReport { makespan: 1.5, ..Default::default() };
         let t = breakdown_table(&[("x".into(), &rep)]);
         assert!(t.render().contains("1.500"));
+    }
+
+    #[test]
+    fn serve_line_reports_admission_misses_and_memo() {
+        use crate::serve::{Placement, RejectReason, ServeReport, StencilJob};
+        let job = StencilJob {
+            id: 0,
+            kind: crate::stencil::StencilKind::Box { radius: 1 },
+            sz: 4096,
+            steps: 16,
+            arrival_s: 0.0,
+            deadline_s: 0.1,
+        };
+        let placement = Placement {
+            job: job.clone(),
+            d: 4,
+            s_tb: 8,
+            window: 0,
+            width: 1,
+            start_s: 0.0,
+            finish_s: 0.5, // past the 0.1 s deadline -> one miss
+            demand: vec![1024],
+        };
+        let rep = ServeReport {
+            fleet_devices: 2,
+            placements: vec![placement],
+            rejected: vec![(StencilJob { id: 1, ..job }, RejectReason::Capacity)],
+            memo_hits: 1,
+            memo_misses: 1,
+        };
+        let line = serve_line(&rep);
+        assert!(line.contains("jobs 2 -> admitted 1, rejected 1, deadline-miss 1"), "{line}");
+        assert!(line.contains("1 hits / 1 misses (50% hit rate)"), "{line}");
+        assert!(line.contains("2.00 jobs/s"), "{line}"); // 1 job over the 0.5 s horizon
+
+        let empty = ServeReport {
+            fleet_devices: 1,
+            placements: vec![],
+            rejected: vec![],
+            memo_hits: 0,
+            memo_misses: 0,
+        };
+        let line = serve_line(&empty);
+        assert!(line.contains("p50 n/a"), "all-reject runs degrade gracefully: {line}");
+        assert!(line.contains("0.00 jobs/s"), "{line}");
     }
 
     #[test]

@@ -3,6 +3,6 @@
 pub mod heuristic;
 
 pub use heuristic::{
-    autotune, candidates, check_feasible, check_feasible_devices, predict, select_target,
-    Candidate, Feasibility, OptimizationTarget,
+    autotune, autotune_checked, candidates, check_feasible, check_feasible_devices, predict,
+    predict_checked, select_target, AutotuneMemo, Candidate, Feasibility, OptimizationTarget,
 };

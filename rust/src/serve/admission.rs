@@ -1,0 +1,618 @@
+//! Admission controller + packer: places a stream of [`StencilJob`]s
+//! onto a heterogeneous fleet using DES-predicted makespans.
+//!
+//! For each job in arrival order the scheduler
+//!
+//! 1. autotunes `(d, S_TB)` through a [`AutotuneMemo`] (repeat shapes
+//!    skip the §IV-C sweep entirely — the memo's hit counters feed
+//!    [`crate::metrics::serve_line`]),
+//! 2. enumerates contiguous device windows of every width
+//!    `1..=min(d, fleet)` whose per-device memory demand
+//!    ([`DeviceAssignment::device_memory_demand`]) passes the
+//!    heterogeneous [`DeviceCaps`] accept/reject table on an idle fleet,
+//! 3. prices each bare-feasible width once with the calibrated DES
+//!    (pipeline-honest overlap on), finds the earliest start at which
+//!    the window also fits *alongside the jobs already scheduled* —
+//!    device sharing: concurrent jobs may stack on a device as long as
+//!    their demands sum under its cap and at most `slots` jobs share it
+//!    — and
+//! 4. admits the placement with the least predicted finish time
+//!    (ties broken toward narrower, earlier windows).
+//!
+//! A job is **rejected** only when no `(d, S_TB)` is §IV-C-feasible on
+//! the machine ([`RejectReason::Infeasible`]) or when every window
+//! violates a device cap even on an idle fleet
+//! ([`RejectReason::Capacity`]). Deadline misses are counted, not
+//! rejected: admission is a capacity decision, the deadline is an SLO.
+//!
+//! Everything is deterministic: no clocks, no map iteration, ties broken
+//! by `f64::total_cmp` — a fixed seed yields a bit-identical schedule,
+//! which `rust/tests/prop_serve.rs` asserts. Sharing is space-sharing
+//! (MIG-slice-like): the DES prices each job in isolation; contention
+//! between co-resident jobs is a ROADMAP follow-on.
+
+use std::cmp::Ordering;
+use std::collections::HashMap;
+
+use crate::chunking::{Decomposition, DeviceAssignment, DeviceCaps, ResidencyConfig, Scheme};
+use crate::figures::simulate_compressed_grid_devices_overlap;
+use crate::gpu::cost::{DegenerateMachineError, MachineSpec};
+use crate::params::{AutotuneMemo, Feasibility};
+use crate::transfer::CompressMode;
+
+use super::job::StencilJob;
+
+/// Chunk-count grid the serve autotuner sweeps. Every value exceeds
+/// [`SERVE_N_STRM`] (the §IV-C `TooFewChunks` bound).
+pub const SERVE_DS: [usize; 2] = [4, 8];
+
+/// Temporal-blocking grid. Every value divides every catalog step count
+/// ([`super::job::JOB_STEPS`]) and is a multiple of [`SERVE_K_ON`].
+pub const SERVE_S_TBS: [usize; 2] = [8, 16];
+
+/// Fused steps per kernel invocation.
+pub const SERVE_K_ON: usize = 4;
+
+/// Chunk pipelines in flight per device.
+pub const SERVE_N_STRM: usize = 3;
+
+/// Serve-class device caps: even slots are full 2 GiB slices...
+pub const SERVE_CAP_FULL: u64 = 2 * (1 << 30);
+
+/// ...odd slots are half 1 GiB slices, so the biggest catalog jobs
+/// genuinely need either a full slice or a wide window.
+pub const SERVE_CAP_HALF: u64 = 1 << 30;
+
+/// A heterogeneous pool of simulated devices sharing one machine model:
+/// per-device memory caps ([`DeviceCaps`]) plus a space-sharing limit of
+/// `slots` concurrent jobs per device.
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    machine: MachineSpec,
+    caps: DeviceCaps,
+    slots: usize,
+}
+
+impl Fleet {
+    pub fn new(machine: MachineSpec, caps: DeviceCaps, slots: usize) -> Self {
+        assert!(slots >= 1, "a device runs at least one job at a time");
+        Self { machine, caps, slots }
+    }
+
+    /// The default serving fleet: `n_devices` slices of `machine`,
+    /// alternating [`SERVE_CAP_FULL`] / [`SERVE_CAP_HALF`] caps, two
+    /// jobs sharing each slice at most.
+    pub fn serve_class(machine: MachineSpec, n_devices: usize) -> Self {
+        let caps: Vec<Option<u64>> = (0..n_devices)
+            .map(|i| Some(if i % 2 == 0 { SERVE_CAP_FULL } else { SERVE_CAP_HALF }))
+            .collect();
+        Self::new(machine, DeviceCaps::per_device(caps), 2)
+    }
+
+    pub fn machine(&self) -> &MachineSpec {
+        &self.machine
+    }
+
+    pub fn caps(&self) -> &DeviceCaps {
+        &self.caps
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.caps.n_devices()
+    }
+
+    /// Max concurrent jobs sharing one device.
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+}
+
+/// An admitted job: where it runs, when, and the memory it pins there.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub job: StencilJob,
+    /// Chunk count picked by the (memoized) autotune sweep.
+    pub d: usize,
+    /// Temporal block picked by the sweep.
+    pub s_tb: usize,
+    /// First device of the contiguous window.
+    pub window: usize,
+    /// Window width in devices.
+    pub width: usize,
+    pub start_s: f64,
+    pub finish_s: f64,
+    /// Per-device memory demand over the window (bytes), exactly as the
+    /// capacity model computed it at admission time.
+    pub demand: Vec<u64>,
+}
+
+impl Placement {
+    pub fn covers(&self, dev: usize) -> bool {
+        dev >= self.window && dev < self.window + self.width
+    }
+
+    /// Bytes this placement pins on device `dev` (0 outside its window).
+    pub fn demand_on(&self, dev: usize) -> u64 {
+        if self.covers(dev) {
+            self.demand[dev - self.window]
+        } else {
+            0
+        }
+    }
+
+    /// Active at instant `t` (half-open `[start, finish)`).
+    pub fn active_at(&self, t: f64) -> bool {
+        self.start_s <= t && t < self.finish_s
+    }
+
+    /// Predicted latency: queueing wait plus DES-predicted makespan.
+    pub fn latency_s(&self) -> f64 {
+        self.finish_s - self.job.arrival_s
+    }
+
+    pub fn missed_deadline(&self) -> bool {
+        self.finish_s > self.job.deadline_s
+    }
+}
+
+/// Why a job was turned away.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// No `(d, S_TB)` in the sweep satisfies §IV-C on this machine.
+    Infeasible,
+    /// Every placement window violates a device cap on an idle fleet.
+    Capacity,
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::Infeasible => write!(f, "infeasible (no valid (d, S_TB))"),
+            RejectReason::Capacity => write!(f, "capacity (exceeds every device cap)"),
+        }
+    }
+}
+
+/// Everything one `serve` run decided, plus the memo's hit counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReport {
+    pub fleet_devices: usize,
+    pub placements: Vec<Placement>,
+    pub rejected: Vec<(StencilJob, RejectReason)>,
+    pub memo_hits: u64,
+    pub memo_misses: u64,
+}
+
+impl ServeReport {
+    pub fn admitted(&self) -> usize {
+        self.placements.len()
+    }
+
+    pub fn deadline_misses(&self) -> usize {
+        self.placements.iter().filter(|p| p.missed_deadline()).count()
+    }
+
+    /// Last predicted finish (0 when nothing was admitted).
+    pub fn horizon_s(&self) -> f64 {
+        self.placements.iter().map(|p| p.finish_s).fold(0.0, f64::max)
+    }
+
+    /// Admitted throughput over the schedule horizon.
+    pub fn jobs_per_s(&self) -> f64 {
+        let h = self.horizon_s();
+        if h > 0.0 {
+            self.admitted() as f64 / h
+        } else {
+            0.0
+        }
+    }
+
+    /// Nearest-rank quantile of predicted latency (`None` when nothing
+    /// was admitted). Sorted with `total_cmp`, like every ranking here.
+    pub fn latency_quantile(&self, q: f64) -> Option<f64> {
+        let mut lats: Vec<f64> = self.placements.iter().map(Placement::latency_s).collect();
+        if lats.is_empty() {
+            return None;
+        }
+        lats.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((lats.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        Some(lats[idx.min(lats.len() - 1)])
+    }
+
+    pub fn memo_hit_rate(&self) -> f64 {
+        let total = self.memo_hits + self.memo_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.memo_hits as f64 / total as f64
+        }
+    }
+}
+
+/// DES price of one (shape, width) pair, cached per run — the DES is
+/// cheap (event count scales with chunks x epochs, not cells) but there
+/// is no reason to re-simulate identical placements.
+type PriceKey = (String, usize, usize, usize, usize, usize);
+
+fn priced_makespan(
+    machine: &MachineSpec,
+    prices: &mut HashMap<PriceKey, f64>,
+    job: &StencilJob,
+    d: usize,
+    s_tb: usize,
+    width: usize,
+) -> f64 {
+    let key = (job.kind.name(), job.sz, job.steps, d, s_tb, width);
+    if let Some(&m) = prices.get(&key) {
+        return m;
+    }
+    let (report, _) = simulate_compressed_grid_devices_overlap(
+        machine,
+        Scheme::So2dr,
+        job.kind,
+        job.sz,
+        job.sz,
+        d,
+        width,
+        s_tb,
+        SERVE_K_ON,
+        job.steps,
+        SERVE_N_STRM,
+        &ResidencyConfig::off(),
+        CompressMode::Off,
+        true,
+    );
+    prices.insert(key, report.makespan);
+    report.makespan
+}
+
+/// Does the window fit alongside `placements` for all of `[t0, t1)`?
+/// Per device: at most `slots` concurrent jobs and summed demand under
+/// the cap, checked at every instant the active set can change.
+#[allow(clippy::too_many_arguments)]
+fn window_fits(
+    placements: &[Placement],
+    caps: &DeviceCaps,
+    slots: usize,
+    window: usize,
+    width: usize,
+    demand: &[u64],
+    t0: f64,
+    t1: f64,
+) -> bool {
+    for (i, &need) in demand.iter().enumerate() {
+        let dev = window + i;
+        // The resident set on `dev` only grows at placement starts, so
+        // checking t0 and every start strictly inside (t0, t1) covers
+        // the whole interval.
+        let mut instants = vec![t0];
+        for p in placements {
+            if p.covers(dev) && p.start_s > t0 && p.start_s < t1 {
+                instants.push(p.start_s);
+            }
+        }
+        for &at in &instants {
+            let mut used = need;
+            let mut count = 1usize;
+            for p in placements {
+                if p.covers(dev) && p.active_at(at) {
+                    used = used.saturating_add(p.demand_on(dev));
+                    count += 1;
+                }
+            }
+            if count > slots || !caps.admits(dev, used) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Earliest start `>= arrival` at which the window fits for `dur`
+/// seconds. Candidate instants are the arrival and every existing
+/// finish after it; past the last finish the fleet is idle, so a
+/// bare-feasible window always finds a start.
+#[allow(clippy::too_many_arguments)]
+fn earliest_start(
+    placements: &[Placement],
+    caps: &DeviceCaps,
+    slots: usize,
+    window: usize,
+    width: usize,
+    demand: &[u64],
+    arrival: f64,
+    dur: f64,
+) -> f64 {
+    let mut candidates: Vec<f64> = vec![arrival];
+    for p in placements {
+        if p.finish_s > arrival {
+            candidates.push(p.finish_s);
+        }
+    }
+    candidates.sort_by(|a, b| a.total_cmp(b));
+    candidates.dedup();
+    for &t in &candidates {
+        if window_fits(placements, caps, slots, window, width, demand, t, t + dur) {
+            return t;
+        }
+    }
+    // Unreachable for bare-feasible windows (the last candidate leaves
+    // the fleet idle); kept as a defensive fallback.
+    *candidates.last().expect("candidate list always holds the arrival")
+}
+
+/// Schedule `jobs` (in arrival order) onto `fleet`. Returns a typed
+/// error only for a degenerate machine spec; per-job failures land in
+/// [`ServeReport::rejected`].
+pub fn serve(fleet: &Fleet, jobs: &[StencilJob]) -> Result<ServeReport, DegenerateMachineError> {
+    fleet.machine.validate()?;
+    let mut memo = AutotuneMemo::new();
+    let mut prices: HashMap<PriceKey, f64> = HashMap::new();
+    let mut placements: Vec<Placement> = Vec::new();
+    let mut rejected: Vec<(StencilJob, RejectReason)> = Vec::new();
+
+    for job in jobs {
+        let cands = memo.autotune(
+            &fleet.machine,
+            job.kind,
+            job.sz,
+            job.steps,
+            SERVE_K_ON,
+            SERVE_N_STRM,
+            &SERVE_DS,
+            &SERVE_S_TBS,
+        )?;
+        let Some(best) = cands.iter().find(|c| c.feasibility == Feasibility::Ok) else {
+            rejected.push((job.clone(), RejectReason::Infeasible));
+            continue;
+        };
+        let dc = Decomposition::new(job.sz, job.sz, best.d, job.kind.radius());
+
+        let mut chosen: Option<Placement> = None;
+        for width in 1..=best.d.min(fleet.n_devices()) {
+            let devs = DeviceAssignment::contiguous(best.d, width);
+            let demand = devs.device_memory_demand(&dc, best.s_tb, SERVE_N_STRM, job.kind);
+            // Price lazily: only widths with a bare-feasible window hit
+            // the DES.
+            let mut dur: Option<f64> = None;
+            for window in 0..=(fleet.n_devices() - width) {
+                let bare =
+                    demand.iter().enumerate().all(|(i, &need)| fleet.caps.admits(window + i, need));
+                if !bare {
+                    continue;
+                }
+                let d_s = *dur.get_or_insert_with(|| {
+                    priced_makespan(&fleet.machine, &mut prices, job, best.d, best.s_tb, width)
+                });
+                let start = earliest_start(
+                    &placements,
+                    &fleet.caps,
+                    fleet.slots,
+                    window,
+                    width,
+                    &demand,
+                    job.arrival_s,
+                    d_s,
+                );
+                let finish = start + d_s;
+                let better = match &chosen {
+                    None => true,
+                    Some(c) => match finish.total_cmp(&c.finish_s) {
+                        Ordering::Less => true,
+                        Ordering::Greater => false,
+                        Ordering::Equal => (width, window) < (c.width, c.window),
+                    },
+                };
+                if better {
+                    chosen = Some(Placement {
+                        job: job.clone(),
+                        d: best.d,
+                        s_tb: best.s_tb,
+                        window,
+                        width,
+                        start_s: start,
+                        finish_s: finish,
+                        demand: demand.clone(),
+                    });
+                }
+            }
+        }
+        match chosen {
+            Some(p) => placements.push(p),
+            None => rejected.push((job.clone(), RejectReason::Capacity)),
+        }
+    }
+
+    let report = ServeReport {
+        fleet_devices: fleet.n_devices(),
+        placements,
+        rejected,
+        memo_hits: memo.hits(),
+        memo_misses: memo.misses(),
+    };
+    debug_assert!(
+        verify_capacity(fleet, &report.placements).is_ok(),
+        "scheduler produced a capacity violation: {:?}",
+        verify_capacity(fleet, &report.placements)
+    );
+    Ok(report)
+}
+
+/// Independent re-check of the serve contract: every placement's demand
+/// matches a fresh capacity-model computation, runs after its arrival
+/// inside the fleet, and at every instant each device holds at most
+/// `slots` jobs whose summed demand passes its cap. The test suites run
+/// this against every schedule; `serve` itself debug-asserts it.
+pub fn verify_capacity(fleet: &Fleet, placements: &[Placement]) -> Result<(), String> {
+    for p in placements {
+        if p.window + p.width > fleet.n_devices() {
+            return Err(format!(
+                "job {}: window {}..{} exceeds the {}-device fleet",
+                p.job.id,
+                p.window,
+                p.window + p.width,
+                fleet.n_devices()
+            ));
+        }
+        let dc = Decomposition::new(p.job.sz, p.job.sz, p.d, p.job.kind.radius());
+        let fresh = DeviceAssignment::contiguous(p.d, p.width).device_memory_demand(
+            &dc,
+            p.s_tb,
+            SERVE_N_STRM,
+            p.job.kind,
+        );
+        if fresh != p.demand {
+            return Err(format!(
+                "job {}: recorded demand {:?} disagrees with the capacity model {:?}",
+                p.job.id, p.demand, fresh
+            ));
+        }
+        if !(p.start_s >= p.job.arrival_s && p.finish_s >= p.start_s) {
+            return Err(format!(
+                "job {}: runs [{}, {}) against arrival {}",
+                p.job.id, p.start_s, p.finish_s, p.job.arrival_s
+            ));
+        }
+    }
+    for dev in 0..fleet.n_devices() {
+        // Peak concurrent usage on a device occurs at some placement
+        // start, so sweeping starts covers every instant.
+        for anchor in placements.iter().filter(|p| p.covers(dev)) {
+            let at = anchor.start_s;
+            let covering: Vec<&Placement> =
+                placements.iter().filter(|p| p.covers(dev) && p.active_at(at)).collect();
+            let used: u64 = covering.iter().map(|p| p.demand_on(dev)).sum();
+            if covering.len() > fleet.slots() {
+                return Err(format!(
+                    "device {dev} at t={at}: {} concurrent jobs exceed {} slots",
+                    covering.len(),
+                    fleet.slots()
+                ));
+            }
+            if !fleet.caps().admits(dev, used) {
+                return Err(format!(
+                    "device {dev} at t={at}: demand {used} B exceeds cap {:?}",
+                    fleet.caps().cap(dev)
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::job::job_stream;
+    use super::*;
+
+    #[test]
+    fn fixed_seed_schedule_is_bit_deterministic() {
+        let jobs = job_stream(7, 24);
+        let fleet = Fleet::serve_class(MachineSpec::rtx3080(), 2);
+        let a = serve(&fleet, &jobs).unwrap();
+        let b = serve(&fleet, &jobs).unwrap();
+        assert_eq!(a, b, "same seed + fleet must reproduce the schedule bit-for-bit");
+        assert!(a.admitted() >= 1);
+    }
+
+    #[test]
+    fn admission_never_violates_the_capacity_model() {
+        let jobs = job_stream(42, 24);
+        for n in [1usize, 2, 4] {
+            let fleet = Fleet::serve_class(MachineSpec::rtx3080(), n);
+            let rep = serve(&fleet, &jobs).unwrap();
+            verify_capacity(&fleet, &rep.placements).unwrap();
+            assert_eq!(
+                rep.admitted() + rep.rejected.len(),
+                jobs.len(),
+                "every job is either admitted or rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn repeat_shapes_hit_the_autotune_memo() {
+        // 24 jobs over an 18-shape catalog: >= 6 hits by pigeonhole.
+        let jobs = job_stream(3, 24);
+        let fleet = Fleet::serve_class(MachineSpec::rtx3080(), 2);
+        let rep = serve(&fleet, &jobs).unwrap();
+        assert_eq!(rep.memo_hits + rep.memo_misses, 24, "one sweep per job");
+        assert!(rep.memo_hits >= 6, "got only {} hits", rep.memo_hits);
+        assert!(rep.memo_hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn tiny_caps_reject_every_job_as_capacity() {
+        // The smallest catalog job pins ~52 MB per device; a 16 MiB cap
+        // rejects every window even on an idle fleet.
+        let jobs = job_stream(11, 8);
+        let fleet = Fleet::new(
+            MachineSpec::rtx3080(),
+            DeviceCaps::uniform(2, Some(16 << 20)),
+            2,
+        );
+        let rep = serve(&fleet, &jobs).unwrap();
+        assert_eq!(rep.admitted(), 0);
+        assert_eq!(rep.rejected.len(), jobs.len());
+        assert!(rep.rejected.iter().all(|(_, r)| *r == RejectReason::Capacity));
+        assert_eq!(rep.jobs_per_s(), 0.0);
+        assert_eq!(rep.latency_quantile(0.5), None);
+    }
+
+    #[test]
+    fn infeasible_machine_memory_rejects_as_infeasible() {
+        // A 1 KiB device fails the SS IV-C memory bound for every (d,
+        // S_TB) in the sweep; the typed feasibility verdict survives
+        // the memo.
+        let machine = MachineSpec { c_dmem: 1024, ..MachineSpec::rtx3080() };
+        let jobs = job_stream(5, 20);
+        let fleet = Fleet::new(machine, DeviceCaps::uniform(2, None), 2);
+        let rep = serve(&fleet, &jobs).unwrap();
+        assert_eq!(rep.admitted(), 0);
+        assert!(rep.rejected.iter().all(|(_, r)| *r == RejectReason::Infeasible));
+        assert!(rep.memo_hits >= 2, "rejections are memoized too");
+    }
+
+    #[test]
+    fn degenerate_machine_is_a_typed_error() {
+        let machine = MachineSpec { bw_htod: 0.0, ..MachineSpec::rtx3080() };
+        let fleet = Fleet::new(machine, DeviceCaps::uniform(1, None), 1);
+        let err = serve(&fleet, &job_stream(1, 4)).unwrap_err();
+        assert_eq!(err.field, "bw_htod");
+    }
+
+    #[test]
+    fn device_sharing_stacks_jobs_under_the_cap_and_slot_limit() {
+        // Two identical jobs arriving together on a one-device fleet:
+        // with 2 slots they run concurrently (space sharing), with 1
+        // slot the second queues behind the first.
+        let job = |id: usize| StencilJob {
+            id,
+            kind: crate::stencil::StencilKind::Box { radius: 1 },
+            sz: 8192,
+            steps: 32,
+            arrival_s: 0.0,
+            deadline_s: 1e9,
+        };
+        let jobs = [job(0), job(1)];
+        let m = MachineSpec::rtx3080();
+
+        let shared = Fleet::new(m.clone(), DeviceCaps::uniform(1, None), 2);
+        let rep2 = serve(&shared, &jobs).unwrap();
+        assert_eq!(rep2.admitted(), 2);
+        assert_eq!(
+            rep2.placements[0].start_s, rep2.placements[1].start_s,
+            "2 slots: both jobs start together"
+        );
+
+        let exclusive = Fleet::new(m, DeviceCaps::uniform(1, None), 1);
+        let rep1 = serve(&exclusive, &jobs).unwrap();
+        assert_eq!(rep1.admitted(), 2);
+        let (a, b) = (&rep1.placements[0], &rep1.placements[1]);
+        assert!(
+            b.start_s >= a.finish_s || a.start_s >= b.finish_s,
+            "1 slot: placements must not overlap in time"
+        );
+        assert!(rep1.horizon_s() > rep2.horizon_s(), "sharing must shorten the horizon");
+    }
+}

@@ -1,0 +1,112 @@
+//! Job model for fleet-scale serving: a deterministic, seeded stream of
+//! stencil jobs drawn from a small finite catalog.
+//!
+//! The catalog is deliberately finite (|kinds| x |sizes| x |steps| = 18
+//! distinct shapes) so that any stream longer than 18 jobs repeats a
+//! shape by pigeonhole — which is what makes the scheduler's
+//! [`crate::params::AutotuneMemo`] hits *guaranteed* on the default
+//! 24-job stream rather than merely likely.
+//!
+//! Arrival gaps are a few milliseconds while even the smallest catalog
+//! job costs ~10 ms of PCIe traffic on the Table II machine, so a
+//! single-device fleet is always oversubscribed and throughput gains
+//! from wider fleets are load-driven, not an artifact of one lucky
+//! stream.
+
+use crate::stencil::StencilKind;
+use crate::util::XorShift64;
+
+/// Grid sides in the job catalog (square grids).
+pub const JOB_SIZES: [usize; 3] = [4096, 8192, 16384];
+
+/// Stencil kinds in the job catalog.
+pub const JOB_KINDS: [StencilKind; 3] = [
+    StencilKind::Box { radius: 1 },
+    StencilKind::Box { radius: 2 },
+    StencilKind::Gradient2d,
+];
+
+/// Total time-step counts in the job catalog. Every value is a multiple
+/// of every `S_TB` the serve autotuner sweeps (see
+/// [`crate::serve::SERVE_S_TBS`]), so epochs always tile the run.
+pub const JOB_STEPS: [usize; 2] = [16, 32];
+
+/// One serving request: run `steps` steps of `kind` over an `sz x sz`
+/// grid, arriving at `arrival_s` with an absolute deadline `deadline_s`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StencilJob {
+    /// Position in the stream (0-based).
+    pub id: usize,
+    pub kind: StencilKind,
+    /// Square grid side.
+    pub sz: usize,
+    /// Total time steps requested.
+    pub steps: usize,
+    /// Arrival time (s) relative to the stream start.
+    pub arrival_s: f64,
+    /// Absolute deadline (s); the scheduler admits past-deadline jobs
+    /// but counts them as misses.
+    pub deadline_s: f64,
+}
+
+/// Deterministic job stream: `n_jobs` catalog draws from a seeded
+/// [`XorShift64`]. Arrivals are strictly increasing; a fixed seed yields
+/// a bit-identical stream on every platform (integer PRNG + IEEE f64
+/// arithmetic, no clocks).
+pub fn job_stream(seed: u64, n_jobs: usize) -> Vec<StencilJob> {
+    let mut rng = XorShift64::new(seed);
+    let mut arrival = 0.0f64;
+    (0..n_jobs)
+        .map(|id| {
+            let kind = *rng.choose(&JOB_KINDS);
+            let sz = *rng.choose(&JOB_SIZES);
+            let steps = *rng.choose(&JOB_STEPS);
+            arrival += 0.001 + 0.002 * rng.next_f64();
+            let deadline_s = arrival + 0.05 + 0.25 * rng.next_f64();
+            StencilJob { id, kind, sz, steps, arrival_s: arrival, deadline_s }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_seed_yields_a_bit_identical_stream() {
+        let a = job_stream(42, 32);
+        let b = job_stream(42, 32);
+        assert_eq!(a, b);
+        let c = job_stream(43, 32);
+        assert_ne!(a, c, "different seeds must draw different streams");
+    }
+
+    #[test]
+    fn jobs_stay_inside_the_catalog_and_arrive_in_order() {
+        let jobs = job_stream(7, 64);
+        assert_eq!(jobs.len(), 64);
+        let mut last = 0.0f64;
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id, i);
+            assert!(JOB_KINDS.contains(&j.kind), "{:?}", j.kind);
+            assert!(JOB_SIZES.contains(&j.sz), "{}", j.sz);
+            assert!(JOB_STEPS.contains(&j.steps), "{}", j.steps);
+            assert!(j.arrival_s > last, "arrivals must be strictly increasing");
+            assert!(j.deadline_s > j.arrival_s, "deadline before arrival");
+            last = j.arrival_s;
+        }
+    }
+
+    #[test]
+    fn streams_longer_than_the_catalog_repeat_a_shape() {
+        // 18 distinct (kind, sz, steps) shapes; 24 draws must collide,
+        // which is what guarantees autotune-memo hits downstream.
+        let jobs = job_stream(99, 24);
+        let mut shapes: Vec<(String, usize, usize)> =
+            jobs.iter().map(|j| (j.kind.name(), j.sz, j.steps)).collect();
+        shapes.sort();
+        let before = shapes.len();
+        shapes.dedup();
+        assert!(shapes.len() < before, "24 draws over 18 shapes must repeat");
+    }
+}

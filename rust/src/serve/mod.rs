@@ -1,0 +1,33 @@
+//! Fleet-scale serving: a multi-tenant job scheduler over the
+//! calibrated DES.
+//!
+//! The paper gives us a fast, calibrated makespan predictor; this module
+//! turns it into an admission-controlled scheduler that packs a seeded
+//! stream of stencil jobs ([`job_stream`]) onto a heterogeneous
+//! simulated fleet ([`Fleet`]) — the ROADMAP's "fleet-scale serving"
+//! step toward planning for workloads far beyond one device.
+//!
+//! Contract (enforced by the unit suite here, the figures suite, and
+//! `rust/tests/prop_serve.rs`):
+//!
+//! 1. **Admission never violates the capacity model** — every placement
+//!    passes the heterogeneous [`crate::chunking::DeviceCaps`]
+//!    accept/reject table at every instant, including while sharing a
+//!    device with other jobs ([`verify_capacity`] re-checks schedules
+//!    independently of the packer).
+//! 2. **Memoized autotune is bit-identical to a fresh sweep** — repeat
+//!    `(kind, geometry, machine)` traffic is served from
+//!    [`crate::params::AutotuneMemo`] with the same `total_cmp` ranking
+//!    and the same typed degenerate-spec errors.
+//! 3. **A fixed seed yields an identical schedule** — no clocks, no map
+//!    iteration order, ties broken by `total_cmp`; [`serve`] run twice
+//!    on the same stream and fleet compares equal, field for field.
+
+pub mod admission;
+pub mod job;
+
+pub use admission::{
+    serve, verify_capacity, Fleet, Placement, RejectReason, ServeReport, SERVE_CAP_FULL,
+    SERVE_CAP_HALF, SERVE_DS, SERVE_K_ON, SERVE_N_STRM, SERVE_S_TBS,
+};
+pub use job::{job_stream, StencilJob, JOB_KINDS, JOB_SIZES, JOB_STEPS};

@@ -20,7 +20,7 @@ fn run(args: &[&str]) -> (bool, String) {
 fn help_lists_subcommands() {
     let (ok, text) = run(&["help"]);
     assert!(ok);
-    for cmd in ["run", "validate", "autotune", "simulate", "figures"] {
+    for cmd in ["run", "validate", "autotune", "simulate", "serve", "figures"] {
         assert!(text.contains(cmd), "missing {cmd} in help:\n{text}");
     }
 }
@@ -270,6 +270,48 @@ fn figures_single_figure() {
     assert!(ok, "{text}");
     assert!(text.contains("Fig. 8"), "{text}");
     assert!(!text.contains("Fig. 6"), "filter must exclude others");
+}
+
+#[test]
+fn serve_schedules_a_stream_and_reports_memo_hits() {
+    // 24 jobs over the 18-shape catalog guarantee >= 1 memo hit.
+    let (ok, text) = run(&["serve", "--jobs", "24", "--fleet", "2", "--seed", "7"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("serve: fleet 2  jobs 24 -> admitted"), "{text}");
+    assert!(text.contains("autotune memo:"), "{text}");
+    assert!(!text.contains("autotune memo: 0 hits"), "repeat shapes must hit:\n{text}");
+    assert!(text.contains("predicted latency p50"), "{text}");
+}
+
+#[test]
+fn serve_tiny_cap_rejects_everything_as_capacity() {
+    let (ok, text) = run(&["serve", "--jobs", "4", "--fleet", "2", "--cap-mib", "16"]);
+    assert!(ok, "rejection is a verdict, not a failure: {text}");
+    assert!(text.contains("admitted 0, rejected 4"), "{text}");
+    assert!(text.contains("capacity (exceeds every device cap)"), "{text}");
+}
+
+#[test]
+fn serve_reads_a_toml_serve_block() {
+    let dir = std::env::temp_dir().join("so2dr_cli_serve_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("serve.toml");
+    std::fs::write(&path, "[serve]\njobs = 6\nfleet = 4\nseed = 3\n").unwrap();
+    let (ok, text) = run(&["serve", "--config", path.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("serve: fleet 4  jobs 6 ->"), "{text}");
+    // Flags still override the file.
+    let (ok, text) = run(&["serve", "--config", path.to_str().unwrap(), "--fleet", "1"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("serve: fleet 1  jobs 6 ->"), "{text}");
+}
+
+#[test]
+fn figures_serve_emits_the_scaling_table() {
+    let (ok, text) = run(&["figures", "--fig", "serve"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Fleet-scale serve"), "{text}");
+    assert!(text.contains("scaling:"), "{text}");
 }
 
 #[test]
