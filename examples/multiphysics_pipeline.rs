@@ -5,15 +5,18 @@
 //! (box2d2r), stage 3: light small blur (box2d1r) — the shape of a
 //! multi-physics / image-processing operator chain, run out-of-core with
 //! SO2DR per segment and verified bit-exactly against the segment-wise
-//! in-core reference.
+//! in-core reference. The chain is then re-run with cross-segment
+//! resident arenas (`run_pipeline_resident`), which transfer each chunk
+//! HtoD exactly once for the whole pipeline while the stencil kind —
+//! radius included — changes under the resident data.
 //!
 //!     cargo run --release --example multiphysics_pipeline
 
-use so2dr::chunking::Scheme;
-use so2dr::coordinator::{reference_run, run_pipeline, HostBackend, Segment};
+use so2dr::chunking::{ResidencyConfig, Scheme};
+use so2dr::coordinator::{reference_run, run_pipeline, run_pipeline_resident, HostBackend, Segment};
 use so2dr::gpu::MachineSpec;
 use so2dr::stencil::{NaiveEngine, StencilKind};
-use so2dr::transfer::{compress_rows, decompress_rows, max_roundtrip_error, Bf16Codec};
+use so2dr::transfer::{compress_rows, decompress_rows, max_roundtrip_error, Bf16Codec, CompressMode};
 use so2dr::util::fmt_bytes;
 use so2dr::Array2;
 
@@ -45,6 +48,43 @@ fn main() -> anyhow::Result<()> {
             fmt_bytes(s.htod_bytes)
         );
     }
+
+    // Cross-segment resident arenas: plan the whole chain as one epoch
+    // sequence, so each chunk goes HtoD exactly once for the pipeline and
+    // the stencil kind — radius included — changes under the resident data.
+    let mut backend = HostBackend::new(NaiveEngine);
+    let resident = run_pipeline_resident(
+        &initial,
+        &segments,
+        4,
+        2,
+        8,
+        4,
+        &mut backend,
+        &ResidencyConfig::force(3),
+        CompressMode::Off,
+    )?;
+    assert!(
+        resident.grid.bit_eq(&expect),
+        "chained resident pipeline must match the segment-wise reference"
+    );
+    let grid_bytes = 480u64 * 480 * 4;
+    assert_eq!(
+        resident.stats.htod_bytes, grid_bytes,
+        "cross-segment arenas transfer each chunk HtoD exactly once for the whole chain"
+    );
+    assert!(
+        resident.stats.resident_hits > 0,
+        "later epochs must find their chunks already on-device"
+    );
+    let summary = resident.residency.expect("resident pipeline reports a residency summary");
+    assert!(summary.enabled && summary.fits, "forced arenas must be enabled and fit");
+    println!(
+        "\nchained resident pipeline: HtoD {} (staged pipeline paid {}), {} resident arrivals",
+        fmt_bytes(resident.stats.htod_bytes),
+        fmt_bytes(stats.total_htod_bytes()),
+        resident.stats.resident_hits
+    );
 
     // Transfer-compression what-if: bf16 halves every payload. Real
     // accuracy cost on this data:

@@ -205,7 +205,14 @@ fn bench_codec() {
 fn bench_des() {
     println!("\n=== DES throughput (paper-scale ResReu op graph) ===");
     let dc = so2dr::Decomposition::new(38400, 38400, 8, 1);
-    let plans = so2dr::chunking::plan::plan_run(Scheme::ResReu, &dc, 640, 40, 1);
+    let plans = so2dr::chunking::plan::plan_run(
+        Scheme::ResReu,
+        &dc,
+        StencilKind::Box { radius: 1 },
+        640,
+        40,
+        1,
+    );
     let buf_rows =
         so2dr::coordinator::PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
     let ops = flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows);
@@ -228,7 +235,14 @@ fn bench_trace() {
     // fails the bench run, not just the unit tests.
     println!("\n=== span tracing: DES replay, recorder off vs on ===");
     let dc = so2dr::Decomposition::new(38400, 38400, 8, 1);
-    let plans = so2dr::chunking::plan::plan_run(Scheme::ResReu, &dc, 640, 40, 1);
+    let plans = so2dr::chunking::plan::plan_run(
+        Scheme::ResReu,
+        &dc,
+        StencilKind::Box { radius: 1 },
+        640,
+        40,
+        1,
+    );
     let buf_rows =
         so2dr::coordinator::PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
     let ops = flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows);

@@ -815,6 +815,362 @@ impl Decomposition2d {
             })
             .sum()
     }
+
+    // ---------------------------------------------------------------
+    // ResReu (skewed parallelogram) tile rects.
+    //
+    // The skewed scheme generalizes to tiles as a *product of two 1-D
+    // skews*: every window, band, and writeback span is the product of
+    // the per-axis ResReu formulas, with data flowing toward lower
+    // indices along both axes (windows shift up and left by `r` per
+    // step, so each tile reads the rows/cols its north/west neighbor
+    // just vacated). Per TB step `s`, tile `(i, j)`:
+    //
+    // * reads its **west band** (time `s-1` data) from `(i, j-1)`:
+    //   `2r` columns beside its shifted window, spanning its shifted
+    //   row extent grown to the grid edge on edge rows;
+    // * publishes its **south band** for `(i+1, j)` and **east band**
+    //   for `(i, j+1)` — epoch-start-of-step data, extracted before its
+    //   kernels overwrite it;
+    // * reads its **north band** from `(i-1, j)`: `2r` rows across its
+    //   *incoming* skirted column extent (corner cells included — the
+    //   `2r x 2r` corner from `(i-1, j-1)` cascades west-then-south,
+    //   mirroring the staged SO2DR corner rule).
+    //
+    // Reading west *before* publishing south keeps the cascade causal
+    // in a single chunk-major sweep: by the time `(i, j)` publishes its
+    // south band (which includes west-corner cells), it has already
+    // pulled those cells from `(i, j-1)`.
+    //
+    // Degeneracy: `tiles_x == 1` makes the west/east bands empty and
+    // every column span full-width, reproducing the 1-D ResReu plan
+    // op-for-op; `tiles_y == 1` is its transpose.
+    // ---------------------------------------------------------------
+
+    /// HtoD rect under ResReu tiling: exactly the owned rect
+    /// (intermediate halo data arrives through the region-sharing
+    /// buffer, as in 1-D).
+    pub fn resreu_htod(&self, t: usize) -> Rect {
+        self.owned(t)
+    }
+
+    /// Per-axis skewed span at step `s` (1-based): `[a - s*r, b - s*r)`,
+    /// the first chunk's lower edge pinned at the interior boundary and
+    /// the last chunk's upper edge at `extent - r` — the 1-D
+    /// [`Decomposition::resreu_window`] formula, per axis.
+    fn resreu_axis_window(
+        bounds: &[usize],
+        extent: usize,
+        parts: usize,
+        i: usize,
+        radius: usize,
+        s: usize,
+    ) -> RowSpan {
+        let shift = (s * radius) as i64;
+        let o = axis_owned(bounds, i);
+        let r = radius as i64;
+        let lo = if i == 0 { r } else { o.lo as i64 - shift };
+        let hi = if i + 1 == parts { extent as i64 - r } else { o.hi as i64 - shift };
+        RowSpan::clamped(lo.max(r), hi.min(extent as i64 - r), extent)
+    }
+
+    /// Compute window for tile `t` at TB step `s` (1-based): the product
+    /// of the per-axis skewed windows, clamped to the Dirichlet interior.
+    pub fn resreu_window(&self, t: usize, steps: usize, s: usize) -> Rect {
+        assert!((1..=steps).contains(&s));
+        let (i, j) = self.tile_rc(t);
+        Rect::of_spans(
+            Self::resreu_axis_window(&self.row_bounds, self.rows, self.tiles_y, i, self.radius, s),
+            Self::resreu_axis_window(&self.col_bounds, self.cols, self.tiles_x, j, self.radius, s),
+        )
+    }
+
+    /// Row extent of tile row `i`'s step-`s` working set *after* `u`
+    /// skew shifts, grown to the grid edge on edge rows: the rows whose
+    /// time `s-1` values tile `(i, j)` holds when step `s` runs.
+    fn resreu_row_extent(&self, i: usize, u: usize) -> RowSpan {
+        let shift = (u * self.radius) as i64;
+        let o = axis_owned(&self.row_bounds, i);
+        let lo = if i == 0 { 0 } else { o.lo as i64 - shift };
+        let hi = if i + 1 == self.tiles_y { self.rows as i64 } else { o.hi as i64 - shift };
+        RowSpan::clamped(lo, hi, self.rows)
+    }
+
+    /// Incoming skirted column extent of tile col `j` at step `s`: the
+    /// columns tile `(i, j)`'s step-`s` reads can touch, grown to the
+    /// grid edge on edge columns — `[a - s*r - r, b - (s-1)*r)`.
+    fn resreu_col_extent_in(&self, j: usize, s: usize) -> RowSpan {
+        let o = axis_owned(&self.col_bounds, j);
+        let r = self.radius as i64;
+        let s = s as i64;
+        let lo = if j == 0 { 0 } else { o.lo as i64 - s * r - r };
+        let hi = if j + 1 == self.tiles_x { self.cols as i64 } else { o.hi as i64 - (s - 1) * r };
+        RowSpan::clamped(lo, hi, self.cols)
+    }
+
+    /// West band (time `s-1` data) tile `t` reads from `(i, j-1)`
+    /// before step `s`: `2r` columns below its shifted window across
+    /// its previous-step row extent. Empty for the first tile column.
+    pub fn resreu_read_west(&self, t: usize, s: usize) -> Rect {
+        let (i, j) = self.tile_rc(t);
+        if j == 0 {
+            return Rect::new(0, 0, 0, 0);
+        }
+        let a = self.col_bounds[j] as i64;
+        let r = self.radius as i64;
+        let si = s as i64;
+        Rect::of_spans(
+            self.resreu_row_extent(i, s - 1),
+            RowSpan::clamped(a - si * r - r, a - (si - 1) * r, self.cols),
+        )
+    }
+
+    /// East band tile `t` publishes for `(i, j+1)` before step `s` —
+    /// by construction `write_east(i, j, s) == read_west(i, j+1, s)`.
+    /// Empty for the last tile column.
+    pub fn resreu_write_east(&self, t: usize, s: usize) -> Rect {
+        let (i, j) = self.tile_rc(t);
+        if j + 1 == self.tiles_x {
+            return Rect::new(0, 0, 0, 0);
+        }
+        self.resreu_read_west(self.index(i, j + 1), s)
+    }
+
+    /// North band (time `s-1` data) tile `t` reads from `(i-1, j)`
+    /// before step `s`: `2r` rows below its shifted window across its
+    /// incoming skirted column extent (west corners included — they
+    /// cascaded into `(i-1, j)` one step earlier). Empty for the first
+    /// tile row.
+    pub fn resreu_read_north(&self, t: usize, s: usize) -> Rect {
+        let (i, j) = self.tile_rc(t);
+        if i == 0 {
+            return Rect::new(0, 0, 0, 0);
+        }
+        let a = self.row_bounds[i] as i64;
+        let r = self.radius as i64;
+        let si = s as i64;
+        Rect::of_spans(
+            RowSpan::clamped(a - si * r - r, a - (si - 1) * r, self.rows),
+            self.resreu_col_extent_in(j, s),
+        )
+    }
+
+    /// South band tile `t` publishes for `(i+1, j)` before step `s` —
+    /// by construction `write_south(i, j, s) == read_north(i+1, j, s)`.
+    /// Empty for the last tile row.
+    pub fn resreu_write_south(&self, t: usize, s: usize) -> Rect {
+        let (i, j) = self.tile_rc(t);
+        if i + 1 == self.tiles_y {
+            return Rect::new(0, 0, 0, 0);
+        }
+        self.resreu_read_north(self.index(i + 1, j), s)
+    }
+
+    /// Per-axis skew-shifted writeback span after an epoch of `steps`:
+    /// `[a - h, b - h)`, the first chunk keeping the axis origin and
+    /// the last its tail — the 1-D [`Decomposition::resreu_dtoh`]
+    /// formula, per axis. The DtoH rects partition the grid.
+    fn resreu_axis_dtoh(
+        bounds: &[usize],
+        extent: usize,
+        parts: usize,
+        i: usize,
+        h: i64,
+    ) -> RowSpan {
+        let o = axis_owned(bounds, i);
+        let lo = if i == 0 { 0 } else { o.lo as i64 - h };
+        let hi = if i + 1 == parts { extent as i64 } else { o.hi as i64 - h };
+        RowSpan::clamped(lo, hi, extent)
+    }
+
+    /// DtoH rect after a ResReu epoch of `steps`: the product of the
+    /// per-axis skew-shifted spans — the rects partition the grid.
+    pub fn resreu_dtoh(&self, t: usize, steps: usize) -> Rect {
+        let h = self.skirt(steps) as i64;
+        let (i, j) = self.tile_rc(t);
+        Rect::of_spans(
+            Self::resreu_axis_dtoh(&self.row_bounds, self.rows, self.tiles_y, i, h),
+            Self::resreu_axis_dtoh(&self.col_bounds, self.cols, self.tiles_x, j, h),
+        )
+    }
+
+    /// Rect of tile `t` valid at the current time step in its arena
+    /// after an epoch of `steps` under `scheme`: the writeback rect.
+    /// Settled rects partition the grid for both schemes.
+    pub fn settled_for(&self, scheme: crate::chunking::Scheme, t: usize, steps: usize) -> Rect {
+        match scheme {
+            crate::chunking::Scheme::So2dr => self.owned(t),
+            crate::chunking::Scheme::ResReu => self.resreu_dtoh(t, steps),
+            crate::chunking::Scheme::InCore => Rect::new(0, self.rows, 0, self.cols),
+        }
+    }
+
+    /// East column band tile `t` fetches at the start of a resident
+    /// ResReu epoch: the previous epoch's windows shifted left by
+    /// `h_prev`, so the right `[c1-h', c1)` strip of each settled row
+    /// extent lives in tile `(i, j+1)`'s arena. Empty for the last tile
+    /// column (its window's right edge does not shift).
+    pub fn resreu_fetch_east(&self, t: usize, prev_steps: usize) -> Rect {
+        let (i, j) = self.tile_rc(t);
+        if j + 1 == self.tiles_x {
+            return Rect::new(0, 0, 0, 0);
+        }
+        let h = self.skirt(prev_steps) as i64;
+        let o = axis_owned(&self.col_bounds, j);
+        Rect::of_spans(
+            self.resreu_row_extent(i, prev_steps),
+            RowSpan::clamped(o.hi as i64 - h, o.hi as i64, self.cols),
+        )
+    }
+
+    /// South row band tile `t` fetches at the start of a resident
+    /// ResReu epoch: the bottom `[r1-h', r1)` strip across its settled
+    /// column extent (east corners included — they arrive at the
+    /// publisher `(i+1, j)` through its *own* east fetch, which the
+    /// pass structure orders first). Empty for the last tile row.
+    pub fn resreu_fetch_south(&self, t: usize, prev_steps: usize) -> Rect {
+        let (i, j) = self.tile_rc(t);
+        if i + 1 == self.tiles_y {
+            return Rect::new(0, 0, 0, 0);
+        }
+        let h = self.skirt(prev_steps) as i64;
+        let o = axis_owned(&self.row_bounds, i);
+        let c = axis_owned(&self.col_bounds, j);
+        let clo = if j == 0 { 0 } else { c.lo as i64 - h };
+        Rect::of_spans(
+            RowSpan::clamped(o.hi as i64 - h, o.hi as i64, self.rows),
+            RowSpan::clamped(clo, c.hi as i64, self.cols),
+        )
+    }
+
+    /// Total region-share payload bytes one ResReu tile epoch of
+    /// `steps` moves through the sharing buffer (read side counted
+    /// once): the per-step west + north bands summed over all tiles
+    /// and steps — O(perimeter) per tile per step.
+    pub fn resreu_halo_bytes_per_epoch(&self, steps: usize) -> u64 {
+        (1..=steps)
+            .flat_map(|s| {
+                (0..self.n_tiles()).map(move |t| (t, s))
+            })
+            .map(|(t, s)| {
+                self.resreu_read_west(t, s).bytes_f32() + self.resreu_read_north(t, s).bytes_f32()
+            })
+            .sum()
+    }
+
+    // ---------------------------------------------------------------
+    // Scheme-aware arena geometry. SO2DR tile arenas pad the owned
+    // rect by the skirt on *all four* sides (trapezoids grow both
+    // ways); ResReu arenas pad only below/left by `h + r` (windows
+    // shift down-left and the final window still reads `r` cells
+    // past itself), exactly as the 1-D `uniform_buffer_rows` /
+    // `resident_base` pair distinguishes the schemes.
+    // ---------------------------------------------------------------
+
+    /// `(low, high)` per-axis arena padding for `scheme` at `steps`.
+    fn axis_pads(&self, scheme: crate::chunking::Scheme, steps: usize) -> (usize, usize) {
+        let h = self.skirt(steps);
+        match scheme {
+            crate::chunking::Scheme::So2dr => (h, h),
+            crate::chunking::Scheme::ResReu => (h + self.radius, 0),
+            crate::chunking::Scheme::InCore => (0, 0),
+        }
+    }
+
+    /// Signed global (row, col) of tile `t`'s arena origin for an epoch
+    /// of `steps` under `scheme`: the unclamped resident corner, so
+    /// data keeps a stable in-arena offset whether or not the grid edge
+    /// clamps the skirt. `tile_base` is the SO2DR specialization.
+    pub fn tile_base_for(
+        &self,
+        scheme: crate::chunking::Scheme,
+        t: usize,
+        steps: usize,
+    ) -> (i64, i64) {
+        let (lo, _hi) = self.axis_pads(scheme, steps);
+        let o = self.owned(t);
+        (o.r0 as i64 - lo as i64, o.c0 as i64 - lo as i64)
+    }
+
+    /// Uniform tile-arena shape for a whole run of `scheme` with at
+    /// most `s_max` TB steps per epoch. `uniform_buffer_dims` is the
+    /// SO2DR specialization.
+    pub fn uniform_buffer_dims_for(
+        &self,
+        scheme: crate::chunking::Scheme,
+        s_max: usize,
+    ) -> (usize, usize) {
+        let (lo, hi) = self.axis_pads(scheme, s_max);
+        let pad = lo + hi;
+        let max_rows =
+            (0..self.tiles_y).map(|i| axis_owned(&self.row_bounds, i).len()).max().unwrap();
+        let max_cols =
+            (0..self.tiles_x).map(|j| axis_owned(&self.col_bounds, j).len()).max().unwrap();
+        (max_rows + pad, max_cols + pad)
+    }
+
+    /// Bytes of one tile arena (input + output double buffer) at the
+    /// uniform shape for `scheme` and `s_max`.
+    pub fn arena_bytes_for(&self, scheme: crate::chunking::Scheme, s_max: usize) -> u64 {
+        let (br, bc) = self.uniform_buffer_dims_for(scheme, s_max);
+        2 * (br * bc * 4) as u64
+    }
+}
+
+/// Hierarchical tiling configuration: the one value that unifies the
+/// `--chunks` / `--chunks-x` / `--chunks-y` CLI surface and the
+/// planner's decomposition choice (modeled after kubecl's hierarchical
+/// tiling scheme — one partition count per axis, with the degenerate
+/// axis count 1 collapsing a level instead of switching code paths).
+///
+/// `tiles_x == 1` *is* the row-band decomposition: a `TilingConfig`
+/// in rows mode builds a [`Decomposition`] whose plans are op-for-op
+/// equal to the 1×N [`Decomposition2d`] plans, so every consumer can
+/// carry a `TilingConfig` and lower it late.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TilingConfig {
+    /// Partition count along the row axis (the 1-D `--chunks` count).
+    pub tiles_y: usize,
+    /// Partition count along the column axis (1 = row bands).
+    pub tiles_x: usize,
+}
+
+impl TilingConfig {
+    /// Row-band mode: `d` bands, no column split.
+    pub fn rows(d: usize) -> Self {
+        Self { tiles_y: d, tiles_x: 1 }
+    }
+
+    /// Grid mode: `tiles_y x tiles_x` tiles.
+    pub fn grid(tiles_y: usize, tiles_x: usize) -> Self {
+        Self { tiles_y, tiles_x }
+    }
+
+    /// True when this tiling is the 1-D row-band decomposition.
+    pub fn is_rows(&self) -> bool {
+        self.tiles_x == 1
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.tiles_y * self.tiles_x
+    }
+
+    /// Build the 2-D decomposition this tiling describes.
+    pub fn build_2d(&self, rows: usize, cols: usize, radius: usize) -> Result<Decomposition2d> {
+        Decomposition2d::try_new(rows, cols, self.tiles_y, self.tiles_x, radius)
+    }
+
+    /// Build the 1-D row-band decomposition (rows mode only).
+    pub fn build_rows(&self, rows: usize, cols: usize, radius: usize) -> Result<Decomposition> {
+        if !self.is_rows() {
+            bail!(
+                "a {}x{} tiling is not a row-band decomposition",
+                self.tiles_y,
+                self.tiles_x
+            );
+        }
+        Decomposition::try_new(rows, cols, self.tiles_y, radius)
+    }
 }
 
 /// Heterogeneous per-device memory capacity caps, in bytes.
@@ -917,6 +1273,47 @@ impl DeviceAssignment {
     /// Everything on one device (the seed's original behavior).
     pub fn single(n_chunks: usize) -> Self {
         Self::contiguous(n_chunks, 1)
+    }
+
+    /// Block-grid assignment for a `tiles_y x tiles_x` tile grid: whole
+    /// tile *rows* are dealt to devices in contiguous near-equal blocks,
+    /// so a tile row is never split across devices — every west/east
+    /// band stays an on-device copy and only the `n_devices - 1` row
+    /// seams carry `D2D` link traffic (O(row-perimeter) per seam,
+    /// instead of cutting through the per-step column cascade). Because
+    /// tiles are row-major, the resulting chunk→device map is still
+    /// non-decreasing and contiguous, so every contiguous-range consumer
+    /// ([`Self::chunks_on`], the executor's worker partitions) works
+    /// unchanged. With `tiles_x == 1` this *is* [`Self::contiguous`].
+    /// Panics if `n_devices == 0` or `n_devices > tiles_y`.
+    pub fn block_grid(tiles_y: usize, tiles_x: usize, n_devices: usize) -> Self {
+        assert!(
+            n_devices > 0 && n_devices <= tiles_y,
+            "invalid device count {n_devices} for {tiles_y} tile rows \
+             (block-grid assignment deals whole rows)"
+        );
+        let parts = split_range(0, tiles_y, n_devices);
+        assert_eq!(parts.len(), n_devices);
+        let mut of_chunk = vec![0usize; tiles_y * tiles_x];
+        for (dev, &(a, b)) in parts.iter().enumerate() {
+            for item in of_chunk.iter_mut().take(b * tiles_x).skip(a * tiles_x) {
+                *item = dev;
+            }
+        }
+        Self { n_devices, of_chunk }
+    }
+
+    /// The tile→device map every tile entry point (real-numerics driver
+    /// and DES pricing) shares, so the two executions agree on where
+    /// band traffic crosses devices: [`Self::block_grid`] whenever the
+    /// device count divides into whole tile rows, contiguous row-major
+    /// otherwise.
+    pub fn for_tiles(dc: &Decomposition2d, n_devices: usize) -> Self {
+        if n_devices > 0 && n_devices <= dc.tiles_y() {
+            Self::block_grid(dc.tiles_y(), dc.tiles_x(), n_devices)
+        } else {
+            Self::contiguous(dc.n_tiles(), n_devices)
+        }
     }
 
     pub fn n_devices(&self) -> usize {

@@ -35,7 +35,7 @@
 pub mod decomp;
 pub mod plan;
 
-pub use decomp::{Decomposition, Decomposition2d, DeviceAssignment, DeviceCaps};
+pub use decomp::{Decomposition, Decomposition2d, DeviceAssignment, DeviceCaps, TilingConfig};
 pub use plan::{
     apply_codec_policy, ChunkEpochPlan, DecompMode, EpochPlan, KernelInvocation, RegionOp,
     ResidencyConfig, ResidencySummary, ResidentMode, Scheme,

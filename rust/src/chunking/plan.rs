@@ -16,6 +16,7 @@
 
 use super::decomp::{Decomposition, Decomposition2d, DeviceAssignment};
 use crate::core::geom::{Rect, RowSpan};
+use crate::stencil::StencilKind;
 use crate::transfer::codec::{CodecKind, CompressMode};
 use anyhow::{bail, Result};
 
@@ -92,11 +93,16 @@ pub struct RegionOp {
 /// One fused kernel launch: `windows[t]` is the compute rect of fused
 /// step `t` (global coordinates, already clamped to the Dirichlet
 /// interior on both axes). `first_step` is the 1-based epoch-local index
-/// of the first fused step.
+/// of the first fused step. `kind` is the stencil the launch applies —
+/// recorded by the builder so interpreters dispatch per op instead of
+/// carrying a run-wide kind out of band (which is what lets epochs of
+/// *different* kinds chain in one resident run — the multi-stencil
+/// pipeline).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct KernelInvocation {
     pub first_step: usize,
     pub windows: Vec<Rect>,
+    pub kind: StencilKind,
 }
 
 impl KernelInvocation {
@@ -160,12 +166,30 @@ pub struct ChunkEpochPlan {
     /// Device the chunk is sharded onto (0 for single-device runs).
     pub device: usize,
     pub ops: Vec<ChunkOp>,
+    /// Builder-recorded pass boundaries into `ops` (first 0, last
+    /// `ops.len()`): under the resident execution model, every chunk's
+    /// pass `p` ops (`pass_bounds[p]..pass_bounds[p + 1]`) complete
+    /// before any chunk's pass `p + 1` ops run, because inter-epoch halo
+    /// data flows both up and down the chunk order. Staged epochs record
+    /// the trivial `[0, ops.len()]` (one chunk-major pass). These
+    /// boundaries are *authoritative*: the builder records what it
+    /// knows, and both interpreters read them through
+    /// [`EpochPlan::pass_sequences`] instead of re-deriving the round
+    /// structure from op patterns ([`resident_pass_bounds`] survives
+    /// only as a debug-assert cross-check on the shapes it provably
+    /// detects).
+    pub pass_bounds: Vec<usize>,
 }
 
 /// One epoch: `steps` TB steps (`k'_off` in Algorithm 1) across all chunks.
 #[derive(Debug, Clone)]
 pub struct EpochPlan {
     pub scheme: Scheme,
+    /// Stencil kind every kernel of this epoch applies — recorded at
+    /// build time so a run may chain epochs of different kinds (the
+    /// multi-stencil pipeline) without out-of-band plumbing. Kernel ops
+    /// carry the same kind per invocation.
+    pub kind: StencilKind,
     /// Epoch-local number of TB steps (`k'_off`).
     pub steps: usize,
     /// First global time-step index covered by this epoch (0-based).
@@ -175,8 +199,9 @@ pub struct EpochPlan {
     /// True when this epoch belongs to a resident-model run: chunk arenas
     /// persist across epoch boundaries (per-chunk, fixed base), ops may
     /// include [`ChunkOp::Resident`]/[`ChunkOp::Fetch`]/[`ChunkOp::Evict`],
-    /// and both interpreters execute the epoch in two phases (all
-    /// epoch-start publishes before any fetch/kernel).
+    /// and both interpreters execute the epoch in the builder-recorded
+    /// passes ([`ChunkEpochPlan::pass_bounds`]) — all epoch-start
+    /// publishes before any fetch/kernel.
     pub resident: bool,
     pub chunks: Vec<ChunkEpochPlan>,
 }
@@ -205,23 +230,21 @@ pub fn phase_a_len(ops: &[ChunkOp]) -> usize {
         .count()
 }
 
-/// Pass boundaries for executing/emitting a resident chunk-epoch: the
-/// op-index boundaries (first 0, last `ops.len()`) of the epoch-wide
-/// passes both interpreters run — every chunk's pass `p` completes
-/// before any chunk's pass `p + 1`, because inter-epoch halo data flows
-/// both up and down the chunk order.
+/// Structural *cross-check* for [`ChunkEpochPlan::pass_bounds`]: derive
+/// the pass boundaries of a resident chunk-epoch from its op patterns.
 ///
-/// 1-D resident epochs have two passes (phase A / phase B, split at
-/// [`phase_a_len`]). Resident *tile* epochs have three: their op
-/// grammar interleaves a second publish round between two fetch runs —
-/// arrival + column publishes, then column fetches + row publishes,
-/// then row fetches + kernels + retirement — which this function
-/// detects structurally (a publish run between two fetch runs). The
-/// detection is conservative: every 1-D epoch shape (including ResReu's
-/// per-step publish/read body, whose first body op after the fetch is
-/// an `RsWrite` followed by an `RsRead`, not a `Fetch`) keeps its
-/// two-pass split, so the flattener's emission order for existing plans
-/// is unchanged.
+/// Interpreters no longer consult this — the builder records the
+/// boundaries it knows into the IR, and execution reads
+/// [`EpochPlan::pass_sequences`]. The detector survives only as a
+/// debug-assert in the builders, on the shapes it provably detects:
+/// 1-D resident epochs (two passes, split at [`phase_a_len`]), staged
+/// epochs converted to resident epoch 0 (two passes), and SO2DR
+/// resident *tile* epochs (three passes — a publish run between two
+/// fetch runs). It provably **mis-detects** ResReu resident tile
+/// epochs: a first-row tile has an empty row-publish round, so its
+/// south fetch merges into the column-fetch run and the shape collapses
+/// to two passes — a causality hazard had execution trusted it, and the
+/// concrete reason pass structure is builder-recorded now.
 pub fn resident_pass_bounds(ops: &[ChunkOp]) -> Vec<usize> {
     let a = phase_a_len(ops);
     let mut k = a;
@@ -239,12 +262,10 @@ pub fn resident_pass_bounds(ops: &[ChunkOp]) -> Vec<usize> {
     }
 }
 
-/// Pass-major execution order of one resident epoch: for each pass, the
-/// `(chunk_index_in_plan, op_range)` segments to run, derived from
-/// [`resident_pass_bounds`] (chunks whose op lists have fewer passes
-/// simply contribute nothing to the trailing ones). The real-numerics
-/// executor, the flattener and the causality tests all iterate this one
-/// structure, so the pass order cannot drift between the interpreters.
+/// *Detector-derived* pass-major order of one resident epoch — the
+/// structural counterpart of [`EpochPlan::pass_sequences`], kept for
+/// tests that cross-check the recorded boundaries against the op
+/// grammar. Execution reads the recorded boundaries, never this.
 pub fn resident_pass_sequences(plan: &EpochPlan) -> Vec<Vec<(usize, std::ops::Range<usize>)>> {
     let bounds: Vec<Vec<usize>> =
         plan.chunks.iter().map(|cp| resident_pass_bounds(&cp.ops)).collect();
@@ -274,6 +295,30 @@ impl EpochPlan {
     pub fn n_ops(&self) -> usize {
         self.chunks.iter().map(|c| c.ops.len()).sum()
     }
+
+    /// Pass-major execution order of this epoch, read from the
+    /// builder-recorded [`ChunkEpochPlan::pass_bounds`]: for each pass,
+    /// the `(chunk_index_in_plan, op_range)` segments to run. Chunks
+    /// whose op lists have fewer passes simply contribute nothing to
+    /// the trailing ones. The real-numerics executor, the flattener and
+    /// the causality tests all iterate this one structure, so the pass
+    /// order cannot drift between the interpreters — and because the
+    /// builder recorded it, no interpreter re-derives round structure
+    /// from op patterns.
+    pub fn pass_sequences(&self) -> Vec<Vec<(usize, std::ops::Range<usize>)>> {
+        let n_passes =
+            self.chunks.iter().map(|c| c.pass_bounds.len() - 1).max().unwrap_or(1);
+        (0..n_passes)
+            .map(|pass| {
+                self.chunks
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, c)| pass + 1 < c.pass_bounds.len())
+                    .map(|(ci, c)| (ci, c.pass_bounds[pass]..c.pass_bounds[pass + 1]))
+                    .collect()
+            })
+            .collect()
+    }
 }
 
 /// Build one SO2DR epoch (Algorithm 1 lines 4–16) of `steps` TB steps with
@@ -283,12 +328,14 @@ impl EpochPlan {
 pub fn so2dr_epoch(
     dc: &Decomposition,
     devs: &DeviceAssignment,
+    kind: StencilKind,
     steps: usize,
     k_on: usize,
     start_step: usize,
 ) -> EpochPlan {
     assert!(steps >= 1 && k_on >= 1);
     assert_eq!(devs.n_chunks(), dc.n_chunks(), "device assignment shape mismatch");
+    debug_assert_eq!(kind.radius(), dc.radius(), "stencil kind disagrees with decomposition");
     dc.check(steps);
     let cols = dc.cols();
     let radius = dc.radius();
@@ -321,14 +368,16 @@ pub fn so2dr_epoch(
             let fused = k_on.min(steps - s + 1);
             let windows: Vec<Rect> =
                 (0..fused).map(|t| win(dc.so2dr_window(i, steps, s + t))).collect();
-            ops.push(ChunkOp::Kernel(KernelInvocation { first_step: s, windows }));
+            ops.push(ChunkOp::Kernel(KernelInvocation { first_step: s, windows, kind }));
             s += fused;
         }
         ops.push(ChunkOp::DtoH { rect: full(dc.so2dr_dtoh(i)), codec: CodecKind::Identity });
-        chunks.push(ChunkEpochPlan { chunk: i, device: devs.device_of(i), ops });
+        let pass_bounds = vec![0, ops.len()];
+        chunks.push(ChunkEpochPlan { chunk: i, device: devs.device_of(i), ops, pass_bounds });
     }
     EpochPlan {
         scheme: Scheme::So2dr,
+        kind,
         steps,
         start_step,
         n_devices: devs.n_devices(),
@@ -355,12 +404,14 @@ pub fn so2dr_epoch(
 pub fn so2dr_tiles_epoch(
     dc: &Decomposition2d,
     devs: &DeviceAssignment,
+    kind: StencilKind,
     steps: usize,
     k_on: usize,
     start_step: usize,
 ) -> EpochPlan {
     assert!(steps >= 1 && k_on >= 1);
     assert_eq!(devs.n_chunks(), dc.n_tiles(), "device assignment shape mismatch");
+    debug_assert_eq!(kind.radius(), dc.radius(), "stencil kind disagrees with decomposition");
     dc.check(steps);
     let tx = dc.tiles_x();
     let mut chunks = Vec::with_capacity(dc.n_tiles());
@@ -398,14 +449,100 @@ pub fn so2dr_tiles_epoch(
             let fused = k_on.min(steps - s + 1);
             let windows: Vec<Rect> =
                 (0..fused).map(|u| dc.so2dr_window(t, steps, s + u)).collect();
-            ops.push(ChunkOp::Kernel(KernelInvocation { first_step: s, windows }));
+            ops.push(ChunkOp::Kernel(KernelInvocation { first_step: s, windows, kind }));
             s += fused;
         }
         ops.push(ChunkOp::DtoH { rect: dc.so2dr_dtoh(t), codec: CodecKind::Identity });
-        chunks.push(ChunkEpochPlan { chunk: t, device: devs.device_of(t), ops });
+        let pass_bounds = vec![0, ops.len()];
+        chunks.push(ChunkEpochPlan { chunk: t, device: devs.device_of(t), ops, pass_bounds });
     }
     EpochPlan {
         scheme: Scheme::So2dr,
+        kind,
+        steps,
+        start_step,
+        n_devices: devs.n_devices(),
+        resident: false,
+        chunks,
+    }
+}
+
+/// Build one ResReu epoch over a 2-D tile decomposition: the product of
+/// two 1-D skews (see the [`Decomposition2d`] ResReu rect algebra).
+/// Tiles are walked in row-major order; each tile transfers exactly its
+/// owned rect HtoD, and per TB step reads its west band, publishes its
+/// south and east bands (time `s-1` data, extracted before its step-`s`
+/// kernel), reads its north band, and runs one single-step skewed
+/// kernel. Reading west *before* publishing south keeps the `2r x 2r`
+/// corner cascade causal in a single chunk-major sweep. Shares whose
+/// consumer lives on another device are bridged by [`ChunkOp::D2D`]
+/// link hops immediately after their `RsWrite`, exactly as in 1-D.
+///
+/// Degenerate tilings reproduce the 1-D [`resreu_epoch`] op-for-op:
+/// with `tiles_x == 1` the west/east bands are empty and each step's op
+/// run is literally `RsWrite -> RsRead -> Kernel`
+/// (`resreu_tile_plans_degenerate_to_row_plans` locks this in).
+pub fn resreu_tiles_epoch(
+    dc: &Decomposition2d,
+    devs: &DeviceAssignment,
+    kind: StencilKind,
+    steps: usize,
+    start_step: usize,
+) -> EpochPlan {
+    assert!(steps >= 1);
+    assert_eq!(devs.n_chunks(), dc.n_tiles(), "device assignment shape mismatch");
+    debug_assert_eq!(kind.radius(), dc.radius(), "stencil kind disagrees with decomposition");
+    dc.check(steps);
+    let (ty, tx) = (dc.tiles_y(), dc.tiles_x());
+    let mut chunks = Vec::with_capacity(dc.n_tiles());
+    for t in 0..dc.n_tiles() {
+        let (i, j) = dc.tile_rc(t);
+        let mut ops = Vec::new();
+        ops.push(ChunkOp::HtoD { rect: dc.resreu_htod(t), codec: CodecKind::Identity });
+        for s in 1..=steps {
+            // Read the west band (time s-1) from (i, j-1) *first*: the
+            // south band published next includes west-corner cells that
+            // just arrived through it.
+            let west = dc.resreu_read_west(t, s);
+            if !west.is_empty() {
+                ops.push(ChunkOp::RsRead(RegionOp { rect: west, time_step: s - 1 }));
+            }
+            // Publish the south/east bands for the higher-index
+            // neighbors before this step's kernel overwrites them.
+            let south = (i + 1 < ty).then(|| (dc.resreu_write_south(t, s), t + tx));
+            let east = (j + 1 < tx).then(|| (dc.resreu_write_east(t, s), t + 1));
+            for (rect, consumer) in [south, east].into_iter().flatten() {
+                if rect.is_empty() {
+                    continue;
+                }
+                ops.push(ChunkOp::RsWrite(RegionOp { rect, time_step: s - 1 }));
+                if devs.device_of(t) != devs.device_of(consumer) {
+                    ops.push(ChunkOp::D2D {
+                        src_dev: devs.device_of(t),
+                        dst_dev: devs.device_of(consumer),
+                        rect,
+                        time_step: s - 1,
+                        codec: CodecKind::Identity,
+                    });
+                }
+            }
+            let north = dc.resreu_read_north(t, s);
+            if !north.is_empty() {
+                ops.push(ChunkOp::RsRead(RegionOp { rect: north, time_step: s - 1 }));
+            }
+            ops.push(ChunkOp::Kernel(KernelInvocation {
+                first_step: s,
+                windows: vec![dc.resreu_window(t, steps, s)],
+                kind,
+            }));
+        }
+        ops.push(ChunkOp::DtoH { rect: dc.resreu_dtoh(t, steps), codec: CodecKind::Identity });
+        let pass_bounds = vec![0, ops.len()];
+        chunks.push(ChunkEpochPlan { chunk: t, device: devs.device_of(t), ops, pass_bounds });
+    }
+    EpochPlan {
+        scheme: Scheme::ResReu,
+        kind,
         steps,
         start_step,
         n_devices: devs.n_devices(),
@@ -415,24 +552,21 @@ pub fn so2dr_tiles_epoch(
 }
 
 /// Split `n` steps into epochs of at most `s_tb` and build tile epoch
-/// plans over `dc`. Only the SO2DR scheme generalizes to tiles today:
-/// ResReu's skewed windows are one-dimensional by construction and the
-/// in-core scheme has no decomposition at all — both are rejected here,
-/// at plan time, rather than silently mis-planned.
+/// plans over `dc`. Both out-of-core sharing schemes generalize to
+/// tiles (SO2DR as a product of trapezoids, ResReu as a product of
+/// skews); only the in-core scheme — which has no decomposition at all
+/// — is rejected here, at plan time, rather than silently mis-planned.
 pub fn plan_run_tiles(
     scheme: Scheme,
     dc: &Decomposition2d,
     devs: &DeviceAssignment,
+    kind: StencilKind,
     n: usize,
     s_tb: usize,
     k_on: usize,
 ) -> Result<Vec<EpochPlan>> {
     match scheme {
-        Scheme::So2dr => {}
-        Scheme::ResReu => bail!(
-            "the tiles decomposition supports so2dr only: resreu's skewed windows \
-             are one-dimensional by construction (use --decomp rows)"
-        ),
+        Scheme::So2dr | Scheme::ResReu => {}
         Scheme::InCore => bail!(
             "the tiles decomposition is meaningless for incore (the whole grid is \
              resident; use --decomp rows)"
@@ -455,7 +589,11 @@ pub fn plan_run_tiles(
     let mut done = 0usize;
     while done < n {
         let steps = s_tb.min(n - done);
-        plans.push(so2dr_tiles_epoch(dc, devs, steps, k_on, done));
+        plans.push(match scheme {
+            Scheme::So2dr => so2dr_tiles_epoch(dc, devs, kind, steps, k_on, done),
+            Scheme::ResReu => resreu_tiles_epoch(dc, devs, kind, steps, done),
+            Scheme::InCore => unreachable!("rejected above"),
+        });
         done += steps;
     }
     Ok(plans)
@@ -467,11 +605,13 @@ pub fn plan_run_tiles(
 pub fn resreu_epoch(
     dc: &Decomposition,
     devs: &DeviceAssignment,
+    kind: StencilKind,
     steps: usize,
     start_step: usize,
 ) -> EpochPlan {
     assert!(steps >= 1);
     assert_eq!(devs.n_chunks(), dc.n_chunks(), "device assignment shape mismatch");
+    debug_assert_eq!(kind.radius(), dc.radius(), "stencil kind disagrees with decomposition");
     dc.check(steps);
     let cols = dc.cols();
     let radius = dc.radius();
@@ -504,16 +644,19 @@ pub fn resreu_epoch(
             ops.push(ChunkOp::Kernel(KernelInvocation {
                 first_step: s,
                 windows: vec![win(dc.resreu_window(i, steps, s))],
+                kind,
             }));
         }
         ops.push(ChunkOp::DtoH {
             rect: full(dc.resreu_dtoh(i, steps)),
             codec: CodecKind::Identity,
         });
-        chunks.push(ChunkEpochPlan { chunk: i, device: devs.device_of(i), ops });
+        let pass_bounds = vec![0, ops.len()];
+        chunks.push(ChunkEpochPlan { chunk: i, device: devs.device_of(i), ops, pass_bounds });
     }
     EpochPlan {
         scheme: Scheme::ResReu,
+        kind,
         steps,
         start_step,
         n_devices: devs.n_devices(),
@@ -536,11 +679,12 @@ pub fn resreu_epoch(
 pub fn try_incore_epoch(
     rows: usize,
     cols: usize,
-    radius: usize,
+    kind: StencilKind,
     steps: usize,
     k_on: usize,
     start_step: usize,
 ) -> Result<EpochPlan> {
+    let radius = kind.radius();
     if steps == 0 {
         bail!("steps must be positive (got 0)");
     }
@@ -567,16 +711,19 @@ pub fn try_incore_epoch(
         ops.push(ChunkOp::Kernel(KernelInvocation {
             first_step: s,
             windows: vec![interior; fused],
+            kind,
         }));
         s += fused;
     }
+    let pass_bounds = vec![0, ops.len()];
     Ok(EpochPlan {
         scheme: Scheme::InCore,
+        kind,
         steps,
         start_step,
         n_devices: 1,
         resident: false,
-        chunks: vec![ChunkEpochPlan { chunk: 0, device: 0, ops }],
+        chunks: vec![ChunkEpochPlan { chunk: 0, device: 0, ops, pass_bounds }],
     })
 }
 
@@ -587,12 +734,12 @@ pub fn try_incore_epoch(
 pub fn incore_epoch(
     rows: usize,
     cols: usize,
-    radius: usize,
+    kind: StencilKind,
     steps: usize,
     k_on: usize,
     start_step: usize,
 ) -> EpochPlan {
-    try_incore_epoch(rows, cols, radius, steps, k_on, start_step)
+    try_incore_epoch(rows, cols, kind, steps, k_on, start_step)
         .unwrap_or_else(|e| panic!("invalid in-core epoch: {e}"))
 }
 
@@ -603,6 +750,7 @@ pub fn plan_run_devices(
     scheme: Scheme,
     dc: &Decomposition,
     devs: &DeviceAssignment,
+    kind: StencilKind,
     n: usize,
     s_tb: usize,
     k_on: usize,
@@ -613,11 +761,9 @@ pub fn plan_run_devices(
     while done < n {
         let steps = s_tb.min(n - done);
         let plan = match scheme {
-            Scheme::So2dr => so2dr_epoch(dc, devs, steps, k_on, done),
-            Scheme::ResReu => resreu_epoch(dc, devs, steps, done),
-            Scheme::InCore => {
-                incore_epoch(dc.rows(), dc.cols(), dc.radius(), steps, k_on, done)
-            }
+            Scheme::So2dr => so2dr_epoch(dc, devs, kind, steps, k_on, done),
+            Scheme::ResReu => resreu_epoch(dc, devs, kind, steps, done),
+            Scheme::InCore => incore_epoch(dc.rows(), dc.cols(), kind, steps, k_on, done),
         };
         plans.push(plan);
         done += steps;
@@ -629,11 +775,12 @@ pub fn plan_run_devices(
 pub fn plan_run(
     scheme: Scheme,
     dc: &Decomposition,
+    kind: StencilKind,
     n: usize,
     s_tb: usize,
     k_on: usize,
 ) -> Vec<EpochPlan> {
-    plan_run_devices(scheme, dc, &DeviceAssignment::single(dc.n_chunks()), n, s_tb, k_on)
+    plan_run_devices(scheme, dc, &DeviceAssignment::single(dc.n_chunks()), kind, n, s_tb, k_on)
 }
 
 // -------------------------------------------------------------------
@@ -808,6 +955,7 @@ fn resident_epoch(
     scheme: Scheme,
     dc: &Decomposition,
     devs: &DeviceAssignment,
+    kind: StencilKind,
     steps: usize,
     k_on: usize,
     start_step: usize,
@@ -817,6 +965,7 @@ fn resident_epoch(
 ) -> EpochPlan {
     assert!(steps >= 1 && k_on >= 1 && prev_steps >= 1);
     assert_eq!(devs.n_chunks(), dc.n_chunks(), "device assignment shape mismatch");
+    debug_assert_eq!(kind.radius(), dc.radius(), "stencil kind disagrees with decomposition");
     dc.check(steps);
     let d = dc.n_chunks();
     let cols = dc.cols();
@@ -882,7 +1031,9 @@ fn resident_epoch(
             }
         }
         // Phase B: fetch this chunk's own epoch-start skirt, compute,
-        // retire.
+        // retire. The phase boundary is recorded here — the builder
+        // knows it; no interpreter re-detects it.
+        let phase_a = ops.len();
         for span in [fetch_low(i), fetch_high(i)] {
             if !span.is_empty() {
                 ops.push(ChunkOp::Fetch(RegionOp { rect: full(span), time_step: 0 }));
@@ -895,7 +1046,7 @@ fn resident_epoch(
                     let fused = k_on.min(steps - s + 1);
                     let windows: Vec<Rect> =
                         (0..fused).map(|t| win(dc.so2dr_window(i, steps, s + t))).collect();
-                    ops.push(ChunkOp::Kernel(KernelInvocation { first_step: s, windows }));
+                    ops.push(ChunkOp::Kernel(KernelInvocation { first_step: s, windows, kind }));
                     s += fused;
                 }
             }
@@ -924,6 +1075,7 @@ fn resident_epoch(
                     ops.push(ChunkOp::Kernel(KernelInvocation {
                         first_step: s,
                         windows: vec![win(dc.resreu_window(i, steps, s))],
+                        kind,
                     }));
                 }
             }
@@ -935,10 +1087,17 @@ fn resident_epoch(
         } else if !kept[i] {
             ops.push(ChunkOp::Evict { rect: full(settled_now), codec: CodecKind::Identity });
         }
-        chunks.push(ChunkEpochPlan { chunk: i, device: devs.device_of(i), ops });
+        let pass_bounds = vec![0, phase_a, ops.len()];
+        debug_assert_eq!(
+            resident_pass_bounds(&ops),
+            pass_bounds,
+            "structural pass detector disagrees with the recorded 1-D resident bounds"
+        );
+        chunks.push(ChunkEpochPlan { chunk: i, device: devs.device_of(i), ops, pass_bounds });
     }
     EpochPlan {
         scheme,
+        kind,
         steps,
         start_step,
         n_devices: devs.n_devices(),
@@ -965,6 +1124,28 @@ fn staged_epoch0_to_resident(staged: &EpochPlan, kept: &[bool], final_epoch: boo
                 cp.ops.push(ChunkOp::Evict { rect, codec });
             }
         }
+        // Re-record the pass boundaries for resident execution: the
+        // arrival transfer plus any publishes that precede this chunk's
+        // first read/kernel form phase A (epoch-start data only — any
+        // admitted `RsWrite` precedes the chunk's first kernel in its
+        // own staged order). Staged epochs carry no `Fetch` ops, so the
+        // structural detector provably agrees — cross-checked below.
+        let phase_a = cp
+            .ops
+            .iter()
+            .take_while(|op| {
+                matches!(
+                    op,
+                    ChunkOp::HtoD { .. } | ChunkOp::RsWrite(_) | ChunkOp::D2D { .. }
+                )
+            })
+            .count();
+        cp.pass_bounds = vec![0, phase_a, cp.ops.len()];
+        debug_assert_eq!(
+            resident_pass_bounds(&cp.ops),
+            cp.pass_bounds,
+            "structural pass detector disagrees with the recorded epoch-0 bounds"
+        );
     }
     plan
 }
@@ -978,13 +1159,14 @@ pub fn plan_run_resident(
     scheme: Scheme,
     dc: &Decomposition,
     devs: &DeviceAssignment,
+    kind: StencilKind,
     n: usize,
     s_tb: usize,
     k_on: usize,
     cfg: &ResidencyConfig,
 ) -> (Vec<EpochPlan>, ResidencySummary) {
     assert!(n >= 1 && s_tb >= 1);
-    let staged = plan_run_devices(scheme, dc, devs, n, s_tb, k_on);
+    let staged = plan_run_devices(scheme, dc, devs, kind, n, s_tb, k_on);
     let staged_htod = htod_bytes_of(&staged);
     if cfg.mode == ResidentMode::Off || scheme == Scheme::InCore || staged.len() < 2 {
         let summary = ResidencySummary::disabled(dc.n_chunks(), staged_htod);
@@ -1026,6 +1208,7 @@ pub fn plan_run_resident(
                 scheme,
                 dc,
                 devs,
+                kind,
                 p.steps,
                 k_on,
                 p.start_step,
@@ -1055,6 +1238,161 @@ pub fn plan_run_resident(
     (plans, summary)
 }
 
+/// Plan a multi-stencil pipeline under the resident execution model,
+/// chaining per-chunk arenas *across segment boundaries*: the grid is
+/// transferred HtoD once on first touch and stays device-resident while
+/// the stencil kind changes under it, because SO2DR's settled span is
+/// the owned span — radius-independent — so segment `k+1`'s epoch-start
+/// skirt is a neighbor-arena fetch, not a host round trip.
+///
+/// `segments` is `(kind, steps, seg_tb)` per stage; each segment is
+/// split into epochs of at most `seg_tb` (already clamped to the
+/// segment's feasibility by the caller). The scheme is SO2DR by
+/// construction — ResReu's settled span depends on the epoch's step
+/// count *and* radius, so its arenas cannot survive a radius change.
+///
+/// Capacity is all-or-nothing worst-case: a chunk pins only if every
+/// segment's working set admits it (per-device demand is the max over
+/// segments, since the arena must hold the largest skirt that will ever
+/// address it). With `ResidentMode::Off` the plan degenerates to the
+/// concatenated staged segments (summary `enabled: false`) — the same
+/// host-round-trip-per-epoch behavior as running the segments back to
+/// back.
+///
+/// Execution note: the returned plans mix radii, so they must run under
+/// a *covering* [`Decomposition`] built with the pipeline's maximum
+/// radius — its resident base sits at or below every segment's lowest
+/// skirt row, and its uniform buffer height covers every segment's
+/// arena (chunk bounds are radius-independent, so all segments agree on
+/// owned spans).
+pub fn plan_pipeline_resident(
+    rows: usize,
+    cols: usize,
+    d: usize,
+    devs: &DeviceAssignment,
+    segments: &[(StencilKind, usize, usize)],
+    k_on: usize,
+    cfg: &ResidencyConfig,
+) -> Result<(Vec<EpochPlan>, ResidencySummary)> {
+    if segments.is_empty() {
+        bail!("empty pipeline");
+    }
+    if k_on == 0 {
+        bail!("k_on must be positive (got 0)");
+    }
+    // Per-segment decompositions and staged epoch splits. Chunk bounds
+    // depend only on rows/d, so every segment agrees on owned spans;
+    // only the skirt geometry differs.
+    let mut dcs = Vec::with_capacity(segments.len());
+    let mut staged_segs: Vec<Vec<EpochPlan>> = Vec::with_capacity(segments.len());
+    let mut offset = 0usize;
+    for &(kind, steps, seg_tb) in segments {
+        if steps == 0 || seg_tb == 0 {
+            bail!("segment steps and S_TB must be positive (got {steps}, {seg_tb})");
+        }
+        let dc = Decomposition::try_new(rows, cols, d, kind.radius())?;
+        if !dc.feasible(seg_tb.min(steps)) {
+            bail!(
+                "segment {} infeasible: skirt of S_TB = {} exceeds the chunk height",
+                kind.name(),
+                seg_tb.min(steps)
+            );
+        }
+        assert_eq!(devs.n_chunks(), dc.n_chunks(), "device assignment shape mismatch");
+        let mut staged = plan_run_devices(Scheme::So2dr, &dc, devs, kind, steps, seg_tb, k_on);
+        // Re-base epoch starts to pipeline-global step indices so traces
+        // and error contexts stay monotone across segment boundaries.
+        for p in staged.iter_mut() {
+            p.start_step += offset;
+        }
+        offset += steps;
+        dcs.push(dc);
+        staged_segs.push(staged);
+    }
+    let staged_htod: u64 = staged_segs.iter().map(|s| htod_bytes_of(s)).sum();
+    let n_epochs: usize = staged_segs.iter().map(|s| s.len()).sum();
+    if cfg.mode == ResidentMode::Off || n_epochs < 2 {
+        let plans: Vec<EpochPlan> = staged_segs.into_iter().flatten().collect();
+        return Ok((plans, ResidencySummary::disabled(d, staged_htod)));
+    }
+    let cap = match cfg.mode {
+        ResidentMode::Force => None,
+        _ => cfg.cap_per_device,
+    };
+    // A chunk pins only if it pins under *every* segment's working set;
+    // demand per device is the max over segments.
+    let mut kept = vec![true; d];
+    let mut demand_per_device = vec![0u64; devs.n_devices()];
+    for (k, dc) in dcs.iter().enumerate() {
+        let s_max = staged_segs[k].iter().map(|p| p.steps).max().unwrap();
+        let buf_rows = dc.uniform_buffer_rows(Scheme::So2dr, s_max);
+        let h_max = dc.skirt(s_max);
+        let keep_counts = devs.resident_keep_counts(dc, buf_rows, h_max, cap);
+        for dev in 0..devs.n_devices() {
+            for (taken, i) in devs.chunks_on(dev).enumerate() {
+                if taken >= keep_counts[dev] {
+                    kept[i] = false;
+                }
+            }
+            let demand = devs.resident_memory_demand(dc, dev, buf_rows, h_max);
+            demand_per_device[dev] = demand_per_device[dev].max(demand);
+        }
+    }
+    let fits = match cap {
+        None => true,
+        Some(cap) => demand_per_device.iter().all(|&d| d <= cap),
+    };
+    // One global epoch sequence: only the pipeline's very first epoch
+    // stages every chunk cold; every later epoch — including each
+    // subsequent segment's first — arrives resident, with `prev_steps`
+    // threaded across the segment boundary so fetch spans line up with
+    // what the previous epoch actually settled.
+    let mut plans = Vec::with_capacity(n_epochs);
+    let mut prev_steps = 0usize;
+    let mut global_e = 0usize;
+    for (k, staged) in staged_segs.iter().enumerate() {
+        let (kind, _, _) = segments[k];
+        for p in staged {
+            let final_epoch = global_e + 1 == n_epochs;
+            let plan = if global_e == 0 {
+                staged_epoch0_to_resident(p, &kept, final_epoch)
+            } else {
+                resident_epoch(
+                    Scheme::So2dr,
+                    &dcs[k],
+                    devs,
+                    kind,
+                    p.steps,
+                    k_on,
+                    p.start_step,
+                    prev_steps,
+                    &kept,
+                    final_epoch,
+                )
+            };
+            prev_steps = p.steps;
+            plans.push(plan);
+            global_e += 1;
+        }
+    }
+    let planned_spills = plans
+        .iter()
+        .flat_map(|p| p.iter_ops())
+        .filter(|(_, _, op)| matches!(op, ChunkOp::Evict { .. }))
+        .count();
+    let planned_htod = htod_bytes_of(&plans);
+    let summary = ResidencySummary {
+        enabled: true,
+        kept,
+        fits,
+        demand_per_device,
+        planned_spills,
+        staged_htod_bytes: staged_htod,
+        planned_htod_bytes: planned_htod,
+    };
+    Ok((plans, summary))
+}
+
 /// Append the publish — and, when the consumer lives on another device
 /// of the tile→device assignment, the [`ChunkOp::D2D`] link hop — for
 /// each `(rect, consumer)` band of a resident tile epoch.
@@ -1081,97 +1419,199 @@ fn push_publishes(
     }
 }
 
-/// Build one resident-model SO2DR epoch over a 2-D tile decomposition:
-/// the 4-neighbor generalization of [`resident_epoch`]. Each tile
-/// arrives with its settled rect already on device
+/// Build one resident-model epoch over a 2-D tile decomposition: the
+/// 4-neighbor generalization of [`resident_epoch`], for both sharing
+/// schemes. Each tile arrives with its settled rect already on device
 /// ([`ChunkOp::Resident`]) or re-fetches it from the host (spilled),
-/// then refreshes the `h`-deep ring around it from its neighbors'
-/// arenas in two publish/fetch rounds — column bands first, row bands
-/// second:
+/// then refreshes the stale ring around it from its neighbors' arenas
+/// in two publish/fetch rounds — column bands first, row bands second:
 ///
-/// 1. publish the west/east neighbors' column bands (settled data,
-///    inside this tile's owned rect);
-/// 2. fetch its own west/east column bands, then publish the
-///    north/south neighbors' row bands at full skirted width — the
-///    `h x h` corner blocks arrived through the column fetches, so
-///    corners cascade through the row bands exactly as in
-///    [`so2dr_tiles_epoch`] instead of needing eight dedicated corner
-///    ops;
-/// 3. fetch its own north/south row bands, compute the 2-D trapezoid
-///    kernels, and retire (keep / [`ChunkOp::Evict`] / final-epoch
-///    `DtoH` of the settled rect).
+/// 1. publish the column bands the row neighbors fetch (settled data,
+///    inside this tile's arena);
+/// 2. fetch its own column bands, then publish the row bands — their
+///    corner blocks arrived through the column fetches, so corners
+///    cascade through the row bands exactly as in the staged tile
+///    epochs instead of needing eight dedicated corner ops;
+/// 3. fetch its own row bands, compute, and retire (keep /
+///    [`ChunkOp::Evict`] / final-epoch `DtoH` of the settled rect).
 ///
-/// Both interpreters execute the rounds as epoch-wide passes
-/// ([`resident_pass_bounds`]): every tile's round-`k` ops before any
-/// tile's round `k + 1`, because bands flow both up and down the
-/// row-major tile order along both axes. Degenerate `tiles_x == 1`
-/// tilings have no column round and reproduce the 1-D
+/// SO2DR refreshes on all four sides (`h = steps * r` deep, the new
+/// epoch's skirt); ResReu refreshes east and south only (`h' =
+/// prev_steps * r` deep — the rows/cols the *previous* epoch's skew
+/// shifted into the higher-index neighbors' arenas), with its per-step
+/// bands flowing through the region-share buffer as in
+/// [`resreu_tiles_epoch`].
+///
+/// Both interpreters execute the rounds as epoch-wide passes, read
+/// from the **builder-recorded** [`ChunkEpochPlan::pass_bounds`]:
+/// every tile's round-`k` ops before any tile's round `k + 1`, because
+/// bands flow both up and down the row-major tile order along both
+/// axes. A structurally empty round (no column round when
+/// `tiles_x == 1`, no row round when `tiles_y == 1`) is merged away so
+/// degenerate tilings record the 1-D two-pass shape and reproduce
 /// [`resident_epoch`] op-for-op (locked by
-/// `resident_tile_plans_degenerate_to_resident_row_plans`).
+/// `resident_tile_plans_degenerate_to_resident_row_plans`). The
+/// recording is what makes ResReu tiles plannable at all: the
+/// structural detector provably collapses a first-row tile's rounds
+/// (empty row-publish run) into the wrong two-pass shape, so only
+/// SO2DR shapes keep the debug-assert cross-check.
+#[allow(clippy::too_many_arguments)]
 fn resident_tiles_epoch(
+    scheme: Scheme,
     dc: &Decomposition2d,
     devs: &DeviceAssignment,
+    kind: StencilKind,
     steps: usize,
     k_on: usize,
     start_step: usize,
+    prev_steps: usize,
     kept: &[bool],
     final_epoch: bool,
 ) -> EpochPlan {
-    assert!(steps >= 1 && k_on >= 1);
+    assert!(steps >= 1 && k_on >= 1 && prev_steps >= 1);
     assert_eq!(devs.n_chunks(), dc.n_tiles(), "device assignment shape mismatch");
+    debug_assert_eq!(kind.radius(), dc.radius(), "stencil kind disagrees with decomposition");
     dc.check(steps);
     let (ty, tx) = (dc.tiles_y(), dc.tiles_x());
+    let empty = Rect::new(0, 0, 0, 0);
     let mut chunks = Vec::with_capacity(dc.n_tiles());
     for t in 0..dc.n_tiles() {
         let (i, j) = dc.tile_rc(t);
-        let settled = dc.settled(t);
+        let settled_prev = dc.settled_for(scheme, t, prev_steps);
         let mut ops = Vec::new();
         if kept[t] {
-            ops.push(ChunkOp::Resident { rect: settled });
+            ops.push(ChunkOp::Resident { rect: settled_prev });
         } else {
-            ops.push(ChunkOp::HtoD { rect: settled, codec: CodecKind::Identity });
+            ops.push(ChunkOp::HtoD { rect: settled_prev, codec: CodecKind::Identity });
         }
         // Round 1: publish the column bands the row neighbors fetch.
-        let col_pubs = [
-            (j > 0).then(|| (dc.resident_fetch_east(dc.index(i, j - 1), steps), t - 1)),
-            (j + 1 < tx).then(|| (dc.resident_fetch_west(dc.index(i, j + 1), steps), t + 1)),
-        ];
+        let col_pubs = match scheme {
+            Scheme::So2dr => [
+                (j > 0).then(|| (dc.resident_fetch_east(dc.index(i, j - 1), steps), t - 1)),
+                (j + 1 < tx).then(|| (dc.resident_fetch_west(dc.index(i, j + 1), steps), t + 1)),
+            ],
+            Scheme::ResReu => [
+                (j > 0).then(|| (dc.resreu_fetch_east(dc.index(i, j - 1), prev_steps), t - 1)),
+                None,
+            ],
+            Scheme::InCore => unreachable!("in-core runs are never resident-planned"),
+        };
         push_publishes(&mut ops, devs, t, col_pubs);
+        let round1 = ops.len();
         // Round 2: fetch own column bands, then publish the row bands
         // (their corner blocks just arrived through the fetches).
-        for rect in [dc.resident_fetch_west(t, steps), dc.resident_fetch_east(t, steps)] {
+        let col_fetches = match scheme {
+            Scheme::So2dr => {
+                [dc.resident_fetch_west(t, steps), dc.resident_fetch_east(t, steps)]
+            }
+            Scheme::ResReu => [empty, dc.resreu_fetch_east(t, prev_steps)],
+            Scheme::InCore => unreachable!(),
+        };
+        for rect in col_fetches {
             if !rect.is_empty() {
                 ops.push(ChunkOp::Fetch(RegionOp { rect, time_step: 0 }));
             }
         }
-        let row_pubs = [
-            (i > 0).then(|| (dc.resident_fetch_south(dc.index(i - 1, j), steps), t - tx)),
-            (i + 1 < ty).then(|| (dc.resident_fetch_north(dc.index(i + 1, j), steps), t + tx)),
-        ];
+        let row_pubs = match scheme {
+            Scheme::So2dr => [
+                (i > 0).then(|| (dc.resident_fetch_south(dc.index(i - 1, j), steps), t - tx)),
+                (i + 1 < ty).then(|| (dc.resident_fetch_north(dc.index(i + 1, j), steps), t + tx)),
+            ],
+            Scheme::ResReu => [
+                (i > 0).then(|| (dc.resreu_fetch_south(dc.index(i - 1, j), prev_steps), t - tx)),
+                None,
+            ],
+            Scheme::InCore => unreachable!(),
+        };
         push_publishes(&mut ops, devs, t, row_pubs);
+        let round2 = ops.len();
         // Round 3: fetch own row bands, compute, retire.
-        for rect in [dc.resident_fetch_north(t, steps), dc.resident_fetch_south(t, steps)] {
+        let row_fetches = match scheme {
+            Scheme::So2dr => {
+                [dc.resident_fetch_north(t, steps), dc.resident_fetch_south(t, steps)]
+            }
+            Scheme::ResReu => [empty, dc.resreu_fetch_south(t, prev_steps)],
+            Scheme::InCore => unreachable!(),
+        };
+        for rect in row_fetches {
             if !rect.is_empty() {
                 ops.push(ChunkOp::Fetch(RegionOp { rect, time_step: 0 }));
             }
         }
-        let mut s = 1usize;
-        while s <= steps {
-            let fused = k_on.min(steps - s + 1);
-            let windows: Vec<Rect> =
-                (0..fused).map(|u| dc.so2dr_window(t, steps, s + u)).collect();
-            ops.push(ChunkOp::Kernel(KernelInvocation { first_step: s, windows }));
-            s += fused;
+        match scheme {
+            Scheme::So2dr => {
+                let mut s = 1usize;
+                while s <= steps {
+                    let fused = k_on.min(steps - s + 1);
+                    let windows: Vec<Rect> =
+                        (0..fused).map(|u| dc.so2dr_window(t, steps, s + u)).collect();
+                    ops.push(ChunkOp::Kernel(KernelInvocation { first_step: s, windows, kind }));
+                    s += fused;
+                }
+            }
+            Scheme::ResReu => {
+                for s in 1..=steps {
+                    let west = dc.resreu_read_west(t, s);
+                    if !west.is_empty() {
+                        ops.push(ChunkOp::RsRead(RegionOp { rect: west, time_step: s - 1 }));
+                    }
+                    let south = (i + 1 < ty).then(|| (dc.resreu_write_south(t, s), t + tx));
+                    let east = (j + 1 < tx).then(|| (dc.resreu_write_east(t, s), t + 1));
+                    for (rect, consumer) in [south, east].into_iter().flatten() {
+                        if rect.is_empty() {
+                            continue;
+                        }
+                        ops.push(ChunkOp::RsWrite(RegionOp { rect, time_step: s - 1 }));
+                        if devs.device_of(t) != devs.device_of(consumer) {
+                            ops.push(ChunkOp::D2D {
+                                src_dev: devs.device_of(t),
+                                dst_dev: devs.device_of(consumer),
+                                rect,
+                                time_step: s - 1,
+                                codec: CodecKind::Identity,
+                            });
+                        }
+                    }
+                    let north = dc.resreu_read_north(t, s);
+                    if !north.is_empty() {
+                        ops.push(ChunkOp::RsRead(RegionOp { rect: north, time_step: s - 1 }));
+                    }
+                    ops.push(ChunkOp::Kernel(KernelInvocation {
+                        first_step: s,
+                        windows: vec![dc.resreu_window(t, steps, s)],
+                        kind,
+                    }));
+                }
+            }
+            Scheme::InCore => unreachable!(),
         }
+        let settled_now = dc.settled_for(scheme, t, steps);
         if final_epoch {
-            ops.push(ChunkOp::DtoH { rect: settled, codec: CodecKind::Identity });
+            ops.push(ChunkOp::DtoH { rect: settled_now, codec: CodecKind::Identity });
         } else if !kept[t] {
-            ops.push(ChunkOp::Evict { rect: settled, codec: CodecKind::Identity });
+            ops.push(ChunkOp::Evict { rect: settled_now, codec: CodecKind::Identity });
         }
-        chunks.push(ChunkEpochPlan { chunk: t, device: devs.device_of(t), ops });
+        // Record the pass boundaries, merging structurally empty rounds
+        // so degenerate tilings keep the 1-D two-pass shape.
+        let pass_bounds = if tx == 1 {
+            vec![0, round2, ops.len()]
+        } else if ty == 1 {
+            vec![0, round1, ops.len()]
+        } else {
+            vec![0, round1, round2, ops.len()]
+        };
+        if scheme == Scheme::So2dr {
+            debug_assert_eq!(
+                resident_pass_bounds(&ops),
+                pass_bounds,
+                "structural pass detector disagrees with the recorded tile bounds"
+            );
+        }
+        chunks.push(ChunkEpochPlan { chunk: t, device: devs.device_of(t), ops, pass_bounds });
     }
     EpochPlan {
-        scheme: Scheme::So2dr,
+        scheme,
+        kind,
         steps,
         start_step,
         n_devices: devs.n_devices(),
@@ -1189,19 +1629,20 @@ fn resident_tiles_epoch(
 /// [`DeviceAssignment::resident_tile_keep_counts`] (all-or-nothing per
 /// device; spill victims re-fetch their settled rect). Falls back to
 /// the staged tile plan (summary `enabled: false`) for
-/// [`ResidentMode::Off`] or single-epoch runs; non-SO2DR schemes and
+/// [`ResidentMode::Off`] or single-epoch runs; the in-core scheme and
 /// infeasible tilings return the typed [`plan_run_tiles`] errors.
 #[allow(clippy::too_many_arguments)]
 pub fn plan_run_resident_tiles(
     scheme: Scheme,
     dc: &Decomposition2d,
     devs: &DeviceAssignment,
+    kind: StencilKind,
     n: usize,
     s_tb: usize,
     k_on: usize,
     cfg: &ResidencyConfig,
 ) -> Result<(Vec<EpochPlan>, ResidencySummary)> {
-    let staged = plan_run_tiles(scheme, dc, devs, n, s_tb, k_on)?;
+    let staged = plan_run_tiles(scheme, dc, devs, kind, n, s_tb, k_on)?;
     let staged_htod = htod_bytes_of(&staged);
     if cfg.mode == ResidentMode::Off || staged.len() < 2 {
         let summary = ResidencySummary::disabled(dc.n_tiles(), staged_htod);
@@ -1233,7 +1674,19 @@ pub fn plan_run_resident_tiles(
         let plan = if e == 0 {
             staged_epoch0_to_resident(p, &kept, final_epoch)
         } else {
-            resident_tiles_epoch(dc, devs, p.steps, k_on, p.start_step, &kept, final_epoch)
+            let prev_steps = staged[e - 1].steps;
+            resident_tiles_epoch(
+                scheme,
+                dc,
+                devs,
+                kind,
+                p.steps,
+                k_on,
+                p.start_step,
+                prev_steps,
+                &kept,
+                final_epoch,
+            )
         };
         plans.push(plan);
     }
@@ -1267,9 +1720,13 @@ mod tests {
         DeviceAssignment::single(4)
     }
 
+    fn kind() -> StencilKind {
+        StencilKind::Box { radius: 2 }
+    }
+
     #[test]
     fn so2dr_epoch_structure() {
-        let plan = so2dr_epoch(&dc(), &one_dev(), 8, 4, 0);
+        let plan = so2dr_epoch(&dc(), &one_dev(), kind(), 8, 4, 0);
         assert_eq!(plan.chunks.len(), 4);
         let c1 = &plan.chunks[1];
         // HtoD, RsRead, RsWrite, 2 kernels (8/4), DtoH.
@@ -1286,7 +1743,7 @@ mod tests {
 
     #[test]
     fn row_band_ops_are_full_width_rects() {
-        let plan = so2dr_epoch(&dc(), &one_dev(), 8, 4, 0);
+        let plan = so2dr_epoch(&dc(), &one_dev(), kind(), 8, 4, 0);
         for (_, _, op) in plan.iter_ops() {
             match op {
                 ChunkOp::HtoD { rect, .. } | ChunkOp::DtoH { rect, .. } => {
@@ -1308,7 +1765,7 @@ mod tests {
 
     #[test]
     fn so2dr_residual_kernel() {
-        let plan = so2dr_epoch(&dc(), &one_dev(), 7, 4, 0);
+        let plan = so2dr_epoch(&dc(), &one_dev(), kind(), 7, 4, 0);
         let kernels: Vec<&KernelInvocation> = plan.chunks[0]
             .ops
             .iter()
@@ -1326,7 +1783,7 @@ mod tests {
 
     #[test]
     fn resreu_epoch_structure() {
-        let plan = resreu_epoch(&dc(), &one_dev(), 5, 0);
+        let plan = resreu_epoch(&dc(), &one_dev(), kind(), 5, 0);
         let c1 = &plan.chunks[1];
         // HtoD + 5*(write+read+kernel) + DtoH
         assert_eq!(c1.ops.len(), 1 + 5 * 3 + 1);
@@ -1340,7 +1797,7 @@ mod tests {
 
     #[test]
     fn plan_run_epoch_split() {
-        let plans = plan_run(Scheme::So2dr, &dc(), 20, 8, 4);
+        let plans = plan_run(Scheme::So2dr, &dc(), kind(), 20, 8, 4);
         assert_eq!(plans.len(), 3);
         assert_eq!(plans[0].steps, 8);
         assert_eq!(plans[2].steps, 4); // n % s_tb
@@ -1349,7 +1806,7 @@ mod tests {
 
     #[test]
     fn incore_plan_has_no_transfers() {
-        let plans = plan_run(Scheme::InCore, &dc(), 10, 10, 4);
+        let plans = plan_run(Scheme::InCore, &dc(), kind(), 10, 10, 4);
         assert_eq!(plans.len(), 1);
         for (_, _, op) in plans[0].iter_ops() {
             assert!(matches!(op, ChunkOp::Kernel(_)));
@@ -1361,7 +1818,7 @@ mod tests {
     #[test]
     fn resreu_causality_pairs() {
         // RsWrite(i, s) rect+time must equal RsRead(i+1, s).
-        let plan = resreu_epoch(&dc(), &one_dev(), 5, 0);
+        let plan = resreu_epoch(&dc(), &one_dev(), kind(), 5, 0);
         for i in 0..3 {
             let writes: Vec<&RegionOp> = plan.chunks[i]
                 .ops
@@ -1418,7 +1875,8 @@ mod codec_tests {
     fn builders_emit_identity_and_off_keeps_it() {
         let dc = Decomposition::new(240, 64, 4, 2);
         let devs = DeviceAssignment::contiguous(4, 2);
-        let mut plans = plan_run_devices(Scheme::So2dr, &dc, &devs, 16, 8, 4);
+        let mut plans =
+            plan_run_devices(Scheme::So2dr, &dc, &devs, StencilKind::Box { radius: 2 }, 16, 8, 4);
         let (host, lossy, lossless) = count_codecs(&plans);
         assert!(host > 0);
         assert_eq!((lossy, lossless), (0, 0));
@@ -1430,7 +1888,8 @@ mod codec_tests {
     fn bf16_policy_tags_host_ops_but_never_the_link() {
         let dc = Decomposition::new(240, 64, 4, 2);
         let devs = DeviceAssignment::contiguous(4, 4);
-        let mut plans = plan_run_devices(Scheme::ResReu, &dc, &devs, 10, 5, 1);
+        let mut plans =
+            plan_run_devices(Scheme::ResReu, &dc, &devs, StencilKind::Box { radius: 2 }, 10, 5, 1);
         apply_codec_policy(&mut plans, CompressMode::Bf16);
         for (_, _, op) in plans.iter().flat_map(|p| p.iter_ops()) {
             match op {
@@ -1453,6 +1912,7 @@ mod codec_tests {
             Scheme::So2dr,
             &dc,
             &devs,
+            StencilKind::Box { radius: 2 },
             20,
             8,
             4,
@@ -1484,7 +1944,8 @@ mod codec_tests {
         let cols = (AUTO_MIN_BYTES as usize) / (4 * (rows / 4)) + 1;
         let dc = Decomposition::new(rows, cols, 4, 1);
         let devs = DeviceAssignment::contiguous(4, 4);
-        let mut plans = plan_run_devices(Scheme::ResReu, &dc, &devs, 4, 4, 1);
+        let mut plans =
+            plan_run_devices(Scheme::ResReu, &dc, &devs, StencilKind::Box { radius: 1 }, 4, 4, 1);
         apply_codec_policy(&mut plans, CompressMode::Auto);
         let (mut big_lossless, mut small_identity) = (false, false);
         for (_, _, op) in plans.iter().flat_map(|p| p.iter_ops()) {
@@ -1514,7 +1975,9 @@ mod codec_tests {
         // plan's strided column hops are tagged by rect size alone.
         let dc = Decomposition2d::try_new(96, 96, 2, 2, 1).unwrap();
         let devs = DeviceAssignment::contiguous(4, 4);
-        let mut plans = plan_run_tiles(Scheme::So2dr, &dc, &devs, 8, 4, 2).unwrap();
+        let mut plans =
+            plan_run_tiles(Scheme::So2dr, &dc, &devs, StencilKind::Box { radius: 1 }, 8, 4, 2)
+                .unwrap();
         apply_codec_policy(&mut plans, CompressMode::Lossless);
         let (host, _, lossless) = count_codecs(&plans);
         assert!(host > 0);
@@ -1535,6 +1998,10 @@ mod device_tests {
 
     fn dc() -> Decomposition {
         Decomposition::new(240, 64, 4, 2)
+    }
+
+    fn kind() -> StencilKind {
+        StencilKind::Box { radius: 2 }
     }
 
     /// Walk a plan in canonical execution order and verify plan causality:
@@ -1657,7 +2124,7 @@ mod device_tests {
     fn so2dr_causality_across_device_counts() {
         for n_dev in [1, 2, 4] {
             let devs = DeviceAssignment::contiguous(4, n_dev);
-            check_causality(&so2dr_epoch(&dc(), &devs, 8, 4, 0));
+            check_causality(&so2dr_epoch(&dc(), &devs, kind(), 8, 4, 0));
         }
     }
 
@@ -1665,7 +2132,7 @@ mod device_tests {
     fn resreu_causality_across_device_counts() {
         for n_dev in [1, 2, 4] {
             let devs = DeviceAssignment::contiguous(4, n_dev);
-            check_causality(&resreu_epoch(&dc(), &devs, 5, 0));
+            check_causality(&resreu_epoch(&dc(), &devs, kind(), 5, 0));
         }
     }
 
@@ -1674,7 +2141,7 @@ mod device_tests {
         let dc = Decomposition2d::try_new(120, 96, 2, 3, 2).unwrap();
         for n_dev in [1, 2, 3, 6] {
             let devs = DeviceAssignment::contiguous(6, n_dev);
-            check_causality(&so2dr_tiles_epoch(&dc, &devs, 4, 2, 0));
+            check_causality(&so2dr_tiles_epoch(&dc, &devs, kind(), 4, 2, 0));
         }
     }
 
@@ -1689,7 +2156,8 @@ mod device_tests {
             let devs = DeviceAssignment::contiguous(6, n_dev);
             for cfg in [ResidencyConfig::force(3), ResidencyConfig::auto(1, 3)] {
                 let (plans, _) =
-                    plan_run_resident_tiles(Scheme::So2dr, &dc, &devs, 12, 4, 2, &cfg).unwrap();
+                    plan_run_resident_tiles(Scheme::So2dr, &dc, &devs, kind(), 12, 4, 2, &cfg)
+                        .unwrap();
                 assert_eq!(plans.len(), 3);
                 for plan in &plans {
                     check_causality(plan);
@@ -1701,7 +2169,7 @@ mod device_tests {
     #[test]
     fn d2d_emitted_exactly_at_device_boundaries() {
         let devs = DeviceAssignment::contiguous(4, 2); // boundary between chunks 1|2
-        let plan = so2dr_epoch(&dc(), &devs, 8, 4, 0);
+        let plan = so2dr_epoch(&dc(), &devs, kind(), 8, 4, 0);
         for cp in &plan.chunks {
             let d2d: Vec<&ChunkOp> = cp
                 .ops
@@ -1726,7 +2194,7 @@ mod device_tests {
         // Only the south shares (consumer t+tx) cross the boundary.
         let dc = Decomposition2d::try_new(96, 96, 2, 2, 1).unwrap();
         let devs = DeviceAssignment::contiguous(4, 2);
-        let plan = so2dr_tiles_epoch(&dc, &devs, 4, 2, 0);
+        let plan = so2dr_tiles_epoch(&dc, &devs, StencilKind::Box { radius: 1 }, 4, 2, 0);
         let mut crossings = Vec::new();
         for cp in &plan.chunks {
             for op in &cp.ops {
@@ -1743,14 +2211,21 @@ mod device_tests {
             assert_eq!(*rect, dc.so2dr_write_south(*t, 4));
         }
         // East shares stay on-device (0->1 and 2->3 are same-device).
-        let plan1 = so2dr_tiles_epoch(&dc, &DeviceAssignment::single(4), 4, 2, 0);
+        let plan1 = so2dr_tiles_epoch(
+            &dc,
+            &DeviceAssignment::single(4),
+            StencilKind::Box { radius: 1 },
+            4,
+            2,
+            0,
+        );
         assert!(plan1.iter_ops().all(|(_, _, op)| !matches!(op, ChunkOp::D2D { .. })));
     }
 
     #[test]
     fn resreu_d2d_one_per_step_at_boundary() {
         let devs = DeviceAssignment::contiguous(4, 4);
-        let plan = resreu_epoch(&dc(), &devs, 5, 0);
+        let plan = resreu_epoch(&dc(), &devs, kind(), 5, 0);
         // Every non-last chunk crosses a boundary: one D2D per step.
         for cp in &plan.chunks {
             let n_d2d = cp.ops.iter().filter(|o| matches!(o, ChunkOp::D2D { .. })).count();
@@ -1767,9 +2242,9 @@ mod device_tests {
         let devs = DeviceAssignment::contiguous(4, 4);
         let dc2 = Decomposition2d::try_new(96, 96, 2, 2, 1).unwrap();
         for plan in [
-            so2dr_epoch(&dc(), &devs, 6, 2, 0),
-            resreu_epoch(&dc(), &devs, 5, 0),
-            so2dr_tiles_epoch(&dc2, &devs, 4, 2, 0),
+            so2dr_epoch(&dc(), &devs, kind(), 6, 2, 0),
+            resreu_epoch(&dc(), &devs, kind(), 5, 0),
+            so2dr_tiles_epoch(&dc2, &devs, StencilKind::Box { radius: 1 }, 4, 2, 0),
         ] {
             for cp in &plan.chunks {
                 for (oi, op) in cp.ops.iter().enumerate() {
@@ -1790,8 +2265,8 @@ mod device_tests {
     fn single_device_plans_have_no_d2d() {
         let devs = DeviceAssignment::single(4);
         for plan in [
-            so2dr_epoch(&dc(), &devs, 8, 4, 0),
-            resreu_epoch(&dc(), &devs, 5, 0),
+            so2dr_epoch(&dc(), &devs, kind(), 8, 4, 0),
+            resreu_epoch(&dc(), &devs, kind(), 5, 0),
         ] {
             assert_eq!(plan.n_devices, 1);
             for (_, _, op) in plan.iter_ops() {
@@ -1814,6 +2289,7 @@ mod device_tests {
                     scheme,
                     &dc,
                     &devs,
+                    kind(),
                     n,
                     s_tb,
                     k_on,
@@ -1856,6 +2332,7 @@ mod device_tests {
             Scheme::So2dr,
             &dc,
             &devs,
+            kind(),
             20,
             8,
             4,
@@ -1883,7 +2360,7 @@ mod device_tests {
             (Scheme::InCore, ResidencyConfig::force(3), 20),
             (Scheme::So2dr, ResidencyConfig::force(3), 6), // single epoch
         ] {
-            let (plans, summary) = plan_run_resident(scheme, &dc, &devs, n, 8, 4, &cfg);
+            let (plans, summary) = plan_run_resident(scheme, &dc, &devs, kind(), n, 8, 4, &cfg);
             assert!(!summary.enabled);
             assert_eq!(summary.saved_htod_bytes(), 0);
             for p in &plans {
@@ -1906,7 +2383,16 @@ mod device_tests {
         for (scheme, k_on) in [(Scheme::So2dr, 2), (Scheme::ResReu, 1)] {
             let devs = DeviceAssignment::contiguous(4, 4);
             let (plans, _) =
-                plan_run_resident(scheme, &dc, &devs, 20, 5, k_on, &ResidencyConfig::force(3));
+                plan_run_resident(
+                    scheme,
+                    &dc,
+                    &devs,
+                    kind(),
+                    20,
+                    5,
+                    k_on,
+                    &ResidencyConfig::force(3),
+                );
             for plan in plans.iter().skip(1) {
                 let mut published: HashSet<(Rect, usize, usize)> = HashSet::new();
                 for cp in &plan.chunks {
@@ -1944,11 +2430,19 @@ mod device_tests {
         let dc = dc();
         let devs = DeviceAssignment::contiguous(4, 2);
         // Staged epoch: phase A is the HtoD (chunk 1 reads before writing).
-        let staged = so2dr_epoch(&dc, &devs, 8, 4, 0);
+        let staged = so2dr_epoch(&dc, &devs, kind(), 8, 4, 0);
         assert_eq!(phase_a_len(&staged.chunks[1].ops), 1);
         // Resident epoch: marker + publishes (+ link hops), then fetches.
-        let (plans, _) =
-            plan_run_resident(Scheme::So2dr, &dc, &devs, 20, 8, 4, &ResidencyConfig::force(3));
+        let (plans, _) = plan_run_resident(
+            Scheme::So2dr,
+            &dc,
+            &devs,
+            kind(),
+            20,
+            8,
+            4,
+            &ResidencyConfig::force(3),
+        );
         let mid = &plans[1];
         for cp in &mid.chunks {
             let a = phase_a_len(&cp.ops);
@@ -1984,8 +2478,38 @@ mod tile_tests {
         let dc2 = Decomposition2d::try_new(rows, cols, d, 1, r).unwrap();
         for n_dev in [1usize, 2, 4] {
             let devs = DeviceAssignment::contiguous(d, n_dev);
-            let rows_plans = plan_run_devices(Scheme::So2dr, &dc1, &devs, 20, 8, 4);
-            let tile_plans = plan_run_tiles(Scheme::So2dr, &dc2, &devs, 20, 8, 4).unwrap();
+            let kind = StencilKind::Box { radius: r };
+            let rows_plans = plan_run_devices(Scheme::So2dr, &dc1, &devs, kind, 20, 8, 4);
+            let tile_plans = plan_run_tiles(Scheme::So2dr, &dc2, &devs, kind, 20, 8, 4).unwrap();
+            assert_eq!(rows_plans.len(), tile_plans.len());
+            for (a, b) in rows_plans.iter().zip(&tile_plans) {
+                assert_eq!(a.steps, b.steps);
+                assert_eq!(a.start_step, b.start_step);
+                assert_eq!(a.n_devices, b.n_devices);
+                assert_eq!(a.chunks.len(), b.chunks.len());
+                for (ca, cb) in a.chunks.iter().zip(&b.chunks) {
+                    assert_eq!(ca.chunk, cb.chunk);
+                    assert_eq!(ca.device, cb.device);
+                    assert_eq!(ca.ops, cb.ops, "chunk {} on {n_dev} devices", ca.chunk);
+                }
+            }
+        }
+    }
+
+    /// The ResReu analog of the degenerate-equivalence check: with one
+    /// tile column the west/east skew bands are empty and every step's
+    /// op run collapses to the 1-D `RsWrite -> RsRead -> Kernel` shape,
+    /// so the tile plan must equal the row plan op-for-op.
+    #[test]
+    fn resreu_tile_plans_degenerate_to_row_plans() {
+        let (rows, cols, d, r) = (240usize, 64usize, 4usize, 2usize);
+        let dc1 = Decomposition::new(rows, cols, d, r);
+        let dc2 = Decomposition2d::try_new(rows, cols, d, 1, r).unwrap();
+        for n_dev in [1usize, 2, 4] {
+            let devs = DeviceAssignment::contiguous(d, n_dev);
+            let kind = StencilKind::Box { radius: r };
+            let rows_plans = plan_run_devices(Scheme::ResReu, &dc1, &devs, kind, 15, 5, 1);
+            let tile_plans = plan_run_tiles(Scheme::ResReu, &dc2, &devs, kind, 15, 5, 1).unwrap();
             assert_eq!(rows_plans.len(), tile_plans.len());
             for (a, b) in rows_plans.iter().zip(&tile_plans) {
                 assert_eq!(a.steps, b.steps);
@@ -2006,7 +2530,14 @@ mod tile_tests {
         // 3x3 tiles: the center tile reads north + west, writes south +
         // east, and runs ceil(steps/k_on) kernels.
         let dc = Decomposition2d::try_new(120, 120, 3, 3, 1).unwrap();
-        let plan = so2dr_tiles_epoch(&dc, &DeviceAssignment::single(9), 6, 4, 0);
+        let plan = so2dr_tiles_epoch(
+            &dc,
+            &DeviceAssignment::single(9),
+            StencilKind::Box { radius: 1 },
+            6,
+            4,
+            0,
+        );
         let center = &plan.chunks[4]; // tile (1,1)
         assert!(matches!(center.ops[0], ChunkOp::HtoD { .. }));
         let reads = center.ops.iter().filter(|o| matches!(o, ChunkOp::RsRead(_))).count();
@@ -2030,7 +2561,14 @@ mod tile_tests {
         // after the tile's reads (its band may include read data) and
         // before its first kernel (which would overwrite it).
         let dc = Decomposition2d::try_new(90, 110, 3, 2, 1).unwrap();
-        let plan = so2dr_tiles_epoch(&dc, &DeviceAssignment::contiguous(6, 3), 5, 2, 0);
+        let plan = so2dr_tiles_epoch(
+            &dc,
+            &DeviceAssignment::contiguous(6, 3),
+            StencilKind::Box { radius: 1 },
+            5,
+            2,
+            0,
+        );
         for cp in &plan.chunks {
             let first_kernel =
                 cp.ops.iter().position(|o| matches!(o, ChunkOp::Kernel(_))).unwrap();
@@ -2048,15 +2586,31 @@ mod tile_tests {
         }
     }
 
+    /// The rejection matrix after closing the ResReu x tiles lattice
+    /// cell: both out-of-core schemes plan over tiles; only in-core —
+    /// which has no decomposition at all — is still refused.
     #[test]
-    fn plan_run_tiles_rejects_unsupported_schemes() {
+    fn tile_scheme_rejection_matrix_shrank_to_incore_only() {
         let dc = Decomposition2d::try_new(96, 96, 2, 2, 1).unwrap();
         let devs = DeviceAssignment::single(4);
-        let err = plan_run_tiles(Scheme::ResReu, &dc, &devs, 8, 4, 1).unwrap_err();
-        assert!(err.to_string().contains("resreu"), "{err}");
-        assert!(err.to_string().contains("--decomp rows"), "{err}");
-        let err = plan_run_tiles(Scheme::InCore, &dc, &devs, 8, 4, 1).unwrap_err();
-        assert!(err.to_string().contains("incore"), "{err}");
+        let kind = StencilKind::Box { radius: 1 };
+        for (scheme, k_on, accepted) in [
+            (Scheme::So2dr, 4usize, true),
+            (Scheme::ResReu, 1, true),
+            (Scheme::InCore, 4, false),
+        ] {
+            let got = plan_run_tiles(scheme, &dc, &devs, kind, 8, 4, k_on);
+            match got {
+                Ok(plans) => {
+                    assert!(accepted, "{} must be rejected over tiles", scheme.name());
+                    assert!(!plans.is_empty());
+                }
+                Err(err) => {
+                    assert!(!accepted, "{} must plan over tiles: {err}", scheme.name());
+                    assert!(err.to_string().contains("incore"), "{err}");
+                }
+            }
+        }
     }
 
     #[test]
@@ -2064,17 +2618,20 @@ mod tile_tests {
         // 4x4 tiles of 8x8 cells cannot host an s_tb=8 skirt at r=1.
         let dc = Decomposition2d::try_new(32, 32, 4, 4, 1).unwrap();
         let devs = DeviceAssignment::single(16);
-        let err = plan_run_tiles(Scheme::So2dr, &dc, &devs, 16, 8, 4).unwrap_err();
+        let kind = StencilKind::Box { radius: 1 };
+        let err = plan_run_tiles(Scheme::So2dr, &dc, &devs, kind, 16, 8, 4).unwrap_err();
         assert!(err.to_string().contains("infeasible"), "{err}");
         // But a single-step epoch fits (skirt 1 + r 1 <= 8).
-        assert!(plan_run_tiles(Scheme::So2dr, &dc, &devs, 4, 1, 1).is_ok());
+        assert!(plan_run_tiles(Scheme::So2dr, &dc, &devs, kind, 4, 1, 1).is_ok());
     }
 
     #[test]
     fn tile_epoch_split_matches_row_split() {
         let dc = Decomposition2d::try_new(96, 96, 2, 2, 1).unwrap();
         let devs = DeviceAssignment::single(4);
-        let plans = plan_run_tiles(Scheme::So2dr, &dc, &devs, 20, 8, 4).unwrap();
+        let plans =
+            plan_run_tiles(Scheme::So2dr, &dc, &devs, StencilKind::Box { radius: 1 }, 20, 8, 4)
+                .unwrap();
         assert_eq!(plans.len(), 3);
         assert_eq!(plans[0].steps, 8);
         assert_eq!(plans[2].steps, 4);
@@ -2085,7 +2642,14 @@ mod tile_tests {
     #[test]
     fn tile_transfers_partition_the_grid() {
         let dc = Decomposition2d::try_new(100, 120, 2, 3, 2).unwrap();
-        let plan = so2dr_tiles_epoch(&dc, &DeviceAssignment::single(6), 4, 2, 0);
+        let plan = so2dr_tiles_epoch(
+            &dc,
+            &DeviceAssignment::single(6),
+            StencilKind::Box { radius: 2 },
+            4,
+            2,
+            0,
+        );
         for pick in [0usize, 1] {
             let mut cover = vec![0u8; 100 * 120];
             for (_, _, op) in plan.iter_ops() {
@@ -2113,6 +2677,10 @@ mod resident_tile_tests {
         Decomposition2d::try_new(120, 96, 2, 3, 2).unwrap()
     }
 
+    fn kind() -> StencilKind {
+        StencilKind::Box { radius: 2 }
+    }
+
     fn count_ops(plans: &[EpochPlan], f: impl Fn(&ChunkOp) -> bool) -> usize {
         plans.iter().flat_map(|p| p.iter_ops()).filter(|&(_, _, op)| f(op)).count()
     }
@@ -2126,6 +2694,7 @@ mod resident_tile_tests {
                 Scheme::So2dr,
                 &dc,
                 &devs,
+                kind(),
                 12,
                 4,
                 2,
@@ -2163,6 +2732,7 @@ mod resident_tile_tests {
             Scheme::So2dr,
             &dc,
             &devs,
+            kind(),
             12,
             4,
             2,
@@ -2186,7 +2756,8 @@ mod resident_tile_tests {
             (ResidencyConfig::force(3), 4), // single epoch
         ] {
             let (plans, summary) =
-                plan_run_resident_tiles(Scheme::So2dr, &dc, &devs, n, 4, 2, &cfg).unwrap();
+                plan_run_resident_tiles(Scheme::So2dr, &dc, &devs, kind(), n, 4, 2, &cfg)
+                    .unwrap();
             assert!(!summary.enabled);
             assert_eq!(summary.saved_htod_bytes(), 0);
             for p in &plans {
@@ -2201,25 +2772,32 @@ mod resident_tile_tests {
         }
     }
 
+    /// The shrunk resident-tile rejection matrix: ResReu now plans and
+    /// pins tiles like SO2DR; only the in-core scheme is refused.
     #[test]
-    fn resident_tiles_reject_unsupported_schemes() {
+    fn resident_tile_scheme_rejection_matrix_shrank_to_incore_only() {
         let dc = Decomposition2d::try_new(96, 96, 2, 2, 1).unwrap();
         let devs = DeviceAssignment::single(4);
-        let err = plan_run_resident_tiles(
+        let k = StencilKind::Box { radius: 1 };
+        let (plans, summary) = plan_run_resident_tiles(
             Scheme::ResReu,
             &dc,
             &devs,
+            k,
             8,
             4,
             1,
             &ResidencyConfig::force(3),
         )
-        .unwrap_err();
-        assert!(err.to_string().contains("resreu"), "{err}");
+        .unwrap();
+        assert_eq!(plans.len(), 2);
+        assert!(summary.enabled && summary.fits);
+        assert!(plans[1].resident);
         let err = plan_run_resident_tiles(
             Scheme::InCore,
             &dc,
             &devs,
+            k,
             8,
             4,
             1,
@@ -2237,7 +2815,7 @@ mod resident_tile_tests {
         let dc = dc2();
         let devs = DeviceAssignment::single(6);
         let kept = vec![true; 6];
-        let mid = resident_tiles_epoch(&dc, &devs, 4, 2, 4, &kept, false);
+        let mid = resident_tiles_epoch(Scheme::So2dr, &dc, &devs, kind(), 4, 2, 4, 4, &kept, false);
         for cp in &mid.chunks {
             let b = resident_pass_bounds(&cp.ops);
             assert_eq!(b.len(), 4, "tile {}: {b:?}", cp.chunk);
@@ -2268,6 +2846,7 @@ mod resident_tile_tests {
             Scheme::So2dr,
             &dc1,
             &devs1,
+            kind(),
             20,
             8,
             4,
@@ -2290,10 +2869,12 @@ mod resident_tile_tests {
         let dc2 = Decomposition2d::try_new(rows, cols, d, 1, r).unwrap();
         for n_dev in [1usize, 2, 4] {
             let devs = DeviceAssignment::contiguous(d, n_dev);
+            let k = StencilKind::Box { radius: r };
             let (rows_plans, rows_summary) = plan_run_resident(
                 Scheme::So2dr,
                 &dc1,
                 &devs,
+                k,
                 20,
                 8,
                 4,
@@ -2303,6 +2884,7 @@ mod resident_tile_tests {
                 Scheme::So2dr,
                 &dc2,
                 &devs,
+                k,
                 20,
                 8,
                 4,
@@ -2340,6 +2922,7 @@ mod resident_tile_tests {
             Scheme::So2dr,
             &dc,
             &devs,
+            kind(),
             12,
             4,
             2,
@@ -2402,7 +2985,7 @@ mod incore_tests {
             (100, 100, 4, 7, 3),
         ];
         for &(rows, cols, r, steps, k_on) in accept {
-            let plan = try_incore_epoch(rows, cols, r, steps, k_on, 0)
+            let plan = try_incore_epoch(rows, cols, StencilKind::Box { radius: r }, steps, k_on, 0)
                 .unwrap_or_else(|e| panic!("({rows},{cols},r{r},{steps},{k_on}): {e}"));
             assert_eq!(plan.steps, steps);
             for (_, _, op) in plan.iter_ops() {
@@ -2424,7 +3007,7 @@ mod incore_tests {
             (100, 8, 4, 10, 4, "cols extent"), // cols == 2r at r=4
         ];
         for &(rows, cols, r, steps, k_on, needle) in reject {
-            let err = try_incore_epoch(rows, cols, r, steps, k_on, 0)
+            let err = try_incore_epoch(rows, cols, StencilKind::Box { radius: r }, steps, k_on, 0)
                 .expect_err(&format!("({rows},{cols},r{r},{steps},{k_on}) accepted"));
             assert!(
                 err.to_string().contains(needle),
@@ -2435,9 +3018,127 @@ mod incore_tests {
 
     #[test]
     fn incore_epoch_panics_with_the_validated_message() {
-        let got = std::panic::catch_unwind(|| incore_epoch(2, 64, 1, 10, 4, 0));
+        let got = std::panic::catch_unwind(|| {
+            incore_epoch(2, 64, StencilKind::Box { radius: 1 }, 10, 4, 0)
+        });
         let msg = *got.unwrap_err().downcast::<String>().unwrap();
         assert!(msg.contains("invalid in-core epoch"), "{msg}");
         assert!(msg.contains("rows extent"), "{msg}");
+    }
+}
+
+#[cfg(test)]
+mod pipeline_plan_tests {
+    use super::*;
+
+    fn count_ops(plans: &[EpochPlan], f: impl Fn(&ChunkOp) -> bool) -> usize {
+        plans.iter().flat_map(|p| p.iter_ops()).filter(|&(_, _, op)| f(op)).count()
+    }
+
+    fn segments() -> Vec<(StencilKind, usize, usize)> {
+        vec![
+            (StencilKind::Box { radius: 1 }, 8, 4),
+            (StencilKind::Box { radius: 2 }, 6, 3),
+            (StencilKind::Gradient2d, 4, 4),
+        ]
+    }
+
+    /// The cross-segment chain: one cold HtoD per chunk at the head of
+    /// the pipeline, one DtoH per chunk at its tail, resident arrivals
+    /// everywhere in between — including at both segment boundaries,
+    /// where the stencil kind (and radius) changes under the arenas.
+    #[test]
+    fn pipeline_chain_transfers_each_chunk_once_across_segments() {
+        let d = 4usize;
+        for n_dev in [1usize, 2, 4] {
+            let devs = DeviceAssignment::contiguous(d, n_dev);
+            let (plans, summary) = plan_pipeline_resident(
+                240,
+                64,
+                d,
+                &devs,
+                &segments(),
+                2,
+                &ResidencyConfig::force(3),
+            )
+            .unwrap();
+            // Epoch splits per segment: 8/4 -> 2, 6/3 -> 2, 4/4 -> 1.
+            assert_eq!(plans.len(), 5);
+            let starts: Vec<usize> = plans.iter().map(|p| p.start_step).collect();
+            assert_eq!(starts, vec![0, 4, 8, 11, 14], "globally re-based and monotone");
+            let kinds: Vec<StencilKind> = plans.iter().map(|p| p.kind).collect();
+            assert_eq!(
+                kinds,
+                vec![
+                    StencilKind::Box { radius: 1 },
+                    StencilKind::Box { radius: 1 },
+                    StencilKind::Box { radius: 2 },
+                    StencilKind::Box { radius: 2 },
+                    StencilKind::Gradient2d,
+                ],
+                "every epoch records its segment's stencil kind"
+            );
+            assert!(plans.iter().all(|p| p.scheme == Scheme::So2dr && p.resident));
+            assert!(summary.enabled && summary.fits);
+            assert!(summary.kept.iter().all(|&k| k));
+            assert_eq!(summary.planned_spills, 0);
+            // One HtoD per chunk (pipeline head), one DtoH per chunk
+            // (pipeline tail), resident markers everywhere else.
+            assert_eq!(count_ops(&plans, |op| matches!(op, ChunkOp::HtoD { .. })), d);
+            assert_eq!(count_ops(&plans, |op| matches!(op, ChunkOp::DtoH { .. })), d);
+            assert_eq!(count_ops(&plans, |op| matches!(op, ChunkOp::Evict { .. })), 0);
+            assert_eq!(
+                count_ops(&plans, |op| matches!(op, ChunkOp::Resident { .. })),
+                (plans.len() - 1) * d
+            );
+            assert!(
+                plans[..4].iter().all(|p| p
+                    .iter_ops()
+                    .all(|(_, _, op)| !matches!(op, ChunkOp::DtoH { .. }))),
+                "no writeback before the final epoch"
+            );
+            // The planned HtoD is exactly one grid (owned spans partition
+            // the rows); staged would pay it once per epoch.
+            assert_eq!(summary.planned_htod_bytes, 240 * 64 * 4);
+            assert_eq!(summary.staged_htod_bytes, 240 * 64 * 4 * plans.len() as u64);
+        }
+    }
+
+    /// Off-mode and degenerate-input behavior of the pipeline planner.
+    #[test]
+    fn pipeline_plan_degenerates_and_rejects() {
+        let d = 4usize;
+        let devs = DeviceAssignment::contiguous(d, 2);
+        // Off: concatenated staged segments, summary disabled.
+        let (plans, summary) =
+            plan_pipeline_resident(240, 64, d, &devs, &segments(), 2, &ResidencyConfig::off())
+                .unwrap();
+        assert_eq!(plans.len(), 5);
+        assert!(!summary.enabled);
+        assert_eq!(summary.saved_htod_bytes(), 0);
+        assert!(plans.iter().all(|p| !p.resident));
+        assert_eq!(count_ops(&plans, |op| matches!(op, ChunkOp::HtoD { .. })), 5 * d);
+        // Tight auto cap: every chunk spills at every non-final epoch.
+        let (plans, summary) =
+            plan_pipeline_resident(240, 64, d, &devs, &segments(), 2, &ResidencyConfig::auto(1, 3))
+                .unwrap();
+        assert!(summary.enabled && !summary.fits);
+        assert_eq!(summary.planned_spills, (plans.len() - 1) * d);
+        assert_eq!(summary.planned_htod_bytes, summary.staged_htod_bytes);
+        // Rejections name the offending input.
+        let err = plan_pipeline_resident(240, 64, d, &devs, &[], 2, &ResidencyConfig::force(3))
+            .unwrap_err();
+        assert!(err.to_string().contains("empty pipeline"), "{err}");
+        let err = plan_pipeline_resident(
+            240,
+            64,
+            d,
+            &devs,
+            &[(StencilKind::Box { radius: 2 }, 40, 40)],
+            2,
+            &ResidencyConfig::force(3),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("infeasible"), "{err}");
     }
 }

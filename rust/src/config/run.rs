@@ -1,7 +1,7 @@
 //! Run configuration (paper Table I) with TOML loading and validation.
 
 use super::toml_mini::{parse, Section};
-use crate::chunking::{DecompMode, ResidentMode, Scheme};
+use crate::chunking::{DecompMode, ResidentMode, Scheme, TilingConfig};
 use crate::stencil::StencilKind;
 use crate::transfer::CompressMode;
 use anyhow::{bail, Context, Result};
@@ -255,13 +255,15 @@ impl RunConfig {
             DecompMode::Tiles => {
                 // The tile planner re-validates with typed errors; this
                 // pre-flight keeps config files failing at load time.
-                // `resident` composes with tiles since the 2-D
-                // settled/fetch algebra landed (per-tile cross-epoch
-                // arenas) — no structural restriction here.
-                if self.scheme != Scheme::So2dr {
+                // Both out-of-core sharing schemes tile (SO2DR as a
+                // product of trapezoids, ResReu as a product of per-axis
+                // skews) and `resident` composes with both; only the
+                // in-core scheme — which has no decomposition at all —
+                // is rejected.
+                if self.scheme == Scheme::InCore {
                     bail!(
-                        "decomp = \"tiles\" supports scheme = \"so2dr\" only \
-                         (resreu's skew and incore's residency are 1-D)"
+                        "decomp = \"tiles\" is meaningless for scheme = \"incore\" \
+                         (the whole grid is resident; use decomp = \"rows\")"
                     );
                 }
                 validate_devices(self.scheme, self.chunks_x * self.chunks_y, self.devices)?;
@@ -291,6 +293,17 @@ impl RunConfig {
         match self.backend.as_str() {
             "host-naive" | "host-opt" | "pjrt" => Ok(()),
             other => bail!("unknown backend {other:?} (host-naive|host-opt|pjrt)"),
+        }
+    }
+
+    /// The hierarchical [`TilingConfig`] this config selects — the one
+    /// value unifying the `d` / `chunks_x` / `chunks_y` surface: rows
+    /// mode is the degenerate `d x 1` tiling, tiles mode is
+    /// `chunks_y x chunks_x`.
+    pub fn tiling(&self) -> TilingConfig {
+        match self.decomp {
+            DecompMode::Rows => TilingConfig::rows(self.d),
+            DecompMode::Tiles => TilingConfig::grid(self.chunks_y, self.chunks_x),
         }
     }
 
@@ -402,6 +415,27 @@ mod tests {
         assert_eq!(cfg.trace, Some(std::path::PathBuf::from("out/trace.json")));
         assert!(RunConfig::from_toml("trace = \"\"\n").is_err());
         assert!(RunConfig::from_toml("trace = 1\n").is_err());
+    }
+
+    /// The hierarchical tiling accessor unifies the two shape surfaces:
+    /// rows mode is the degenerate `d x 1` tiling (so every consumer
+    /// can treat row bands as 1-column tile grids), tiles mode is the
+    /// `chunks_y x chunks_x` grid.
+    #[test]
+    fn tiling_unifies_rows_and_tiles_shapes() {
+        let rows = RunConfig::default();
+        assert_eq!(rows.tiling(), TilingConfig::rows(rows.d));
+        assert!(rows.tiling().is_rows());
+        assert_eq!(rows.tiling().n_tiles(), rows.d);
+        let tiled = RunConfig {
+            decomp: DecompMode::Tiles,
+            chunks_x: 4,
+            chunks_y: 2,
+            ..RunConfig::default()
+        };
+        assert_eq!(tiled.tiling(), TilingConfig::grid(2, 4));
+        assert!(!tiled.tiling().is_rows());
+        assert_eq!(tiled.tiling().n_tiles(), 8);
     }
 
     #[test]
@@ -551,7 +585,16 @@ mod tests {
             ("decomp = 2\n", false),
             ("chunks_x = 2\n", false), // tiling shape without tiles mode
             ("decomp = \"tiles\"\nchunks_x = 0\n", false),
-            ("decomp = \"tiles\"\nscheme = \"resreu\"\nk_on = 1\n", false),
+            // ResReu x tiles is accepted since the per-axis skew algebra
+            // landed (rejected while the tile planner was SO2DR-only);
+            // the structural k_on = 1 rule still applies, and the
+            // decomposition-free in-core scheme still cannot tile.
+            ("decomp = \"tiles\"\nscheme = \"resreu\"\nk_on = 1\n", true),
+            (
+                "decomp = \"tiles\"\nscheme = \"resreu\"\nchunks_x = 2\nchunks_y = 2\nk_on = 1\n",
+                true,
+            ),
+            ("decomp = \"tiles\"\nscheme = \"resreu\"\nk_on = 4\n", false),
             ("decomp = \"tiles\"\nscheme = \"incore\"\n", false),
             // resident x tiles is accepted since the 2-D settled/fetch
             // algebra landed (rejected through PR 4).

@@ -69,9 +69,9 @@ pub fn run_scheme_on(
     } else {
         DeviceAssignment::contiguous(dc.n_chunks(), n_devices)
     };
-    let plans = plan_run_devices(scheme, &dc, &devs, n, s_tb, k_on);
+    let plans = plan_run_devices(scheme, &dc, &devs, kind, n, s_tb, k_on);
     let mut grid = initial.clone();
-    let mut exec = PlanExecutor::new(backend, kind);
+    let mut exec = PlanExecutor::new(backend);
     exec.run(&mut grid, &dc, &plans)?;
     let stats = exec.stats.clone();
     Ok(RunOutcome { grid, stats, residency: None })
@@ -163,10 +163,11 @@ pub fn run_scheme_full_threads_traced(
     } else {
         DeviceAssignment::contiguous(dc.n_chunks(), n_devices)
     };
-    let (mut plans, summary) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, resident);
+    let (mut plans, summary) =
+        plan_run_resident(scheme, &dc, &devs, kind, n, s_tb, k_on, resident);
     apply_codec_policy(&mut plans, compress);
     let mut grid = initial.clone();
-    let mut exec = PlanExecutor::new(backend, kind);
+    let mut exec = PlanExecutor::new(backend);
     exec.set_threads(threads);
     exec.set_trace(trace);
     exec.run(&mut grid, &dc, &plans)?;
@@ -177,12 +178,18 @@ pub fn run_scheme_full_threads_traced(
 
 /// Run `n` time steps under the 2-D tile decomposition (`--decomp
 /// tiles`): `chunks_y x chunks_x` tiles sharded over `n_devices`
-/// simulated GPUs in row-major contiguous blocks, with 4-neighbor region
-/// sharing (north/west bands in, south/east bands out, corner data
-/// riding the row bands) and [`ChunkOp::D2D`]-bridged shares at device
-/// boundaries. Composition rules are enforced at plan time with typed
-/// errors rather than silent mis-planning: only the SO2DR scheme tiles
-/// (ResReu's skew is 1-D; in-core has no decomposition). The resident
+/// simulated GPUs, with 4-neighbor region sharing (north/west bands in,
+/// south/east bands out, corner data riding the row bands) and
+/// [`ChunkOp::D2D`]-bridged shares at device boundaries. Tiles are
+/// assigned by [`DeviceAssignment::block_grid`] whenever the device
+/// count divides into whole tile rows (so a tile row is never split
+/// across devices and the east/west band traffic stays on-device),
+/// falling back to the row-major contiguous split otherwise.
+/// Composition rules are enforced at plan time with typed errors rather
+/// than silent mis-planning: both out-of-core sharing schemes tile
+/// (SO2DR as a product of trapezoids, ResReu as a product of per-axis
+/// skews); only the in-core scheme — which has no decomposition — is
+/// rejected. The resident
 /// execution model composes since the 2-D settled/fetch algebra landed:
 /// `resident` routes through
 /// [`chunking::plan::plan_run_resident_tiles`], which transfers each
@@ -265,12 +272,17 @@ pub fn run_scheme_tiles_threads_traced(
     let dc =
         Decomposition2d::try_new(initial.rows(), initial.cols(), chunks_y, chunks_x, kind.radius())?;
     crate::config::validate_devices(scheme, dc.n_tiles(), n_devices)?;
-    let devs = DeviceAssignment::contiguous(dc.n_tiles(), n_devices);
+    // Block-grid assignment keeps whole tile rows on one device (east/
+    // west bands never cross a device boundary); it needs at least one
+    // tile row per device, so [`DeviceAssignment::for_tiles`] falls
+    // back to the contiguous row-major split for over-subscribed
+    // device counts.
+    let devs = DeviceAssignment::for_tiles(&dc, n_devices);
     let (mut plans, summary) =
-        plan_run_resident_tiles(scheme, &dc, &devs, n, s_tb, k_on, resident)?;
+        plan_run_resident_tiles(scheme, &dc, &devs, kind, n, s_tb, k_on, resident)?;
     apply_codec_policy(&mut plans, compress);
     let mut grid = initial.clone();
-    let mut exec = PlanExecutor::new(backend, kind);
+    let mut exec = PlanExecutor::new(backend);
     exec.set_threads(threads);
     exec.set_trace(trace);
     exec.run_tiles(&mut grid, &dc, &plans)?;
@@ -784,23 +796,33 @@ mod tests {
                 2,
                 1,
                 4,
-                2,
+                1,
                 &mut backend,
                 resident,
                 CompressMode::Off,
             )
         };
         let off = crate::chunking::plan::ResidencyConfig::off();
-        let err = run(Scheme::ResReu, &off).unwrap_err();
-        assert!(err.to_string().contains("resreu"), "{err}");
+        // ResReu x tiles is ACCEPTED since the per-axis skew algebra
+        // landed (it was plan-time-rejected through PR 9) — staged and
+        // resident both run bit-exact.
+        let reference = reference_run(&initial, kind, 8, &NaiveEngine);
+        let out = run(Scheme::ResReu, &off).unwrap();
+        assert!(
+            out.grid.bit_eq(&reference),
+            "staged resreu tiles diverged: {}",
+            out.grid.max_abs_diff(&reference)
+        );
+        let out =
+            run(Scheme::ResReu, &crate::chunking::plan::ResidencyConfig::force(3)).unwrap();
+        assert!(
+            out.grid.bit_eq(&reference),
+            "resident resreu tiles diverged: {}",
+            out.grid.max_abs_diff(&reference)
+        );
+        // The in-core scheme has no decomposition: still a typed error.
         let err = run(Scheme::InCore, &off).unwrap_err();
         assert!(err.to_string().contains("incore"), "{err}");
-        // resident x tiles is ACCEPTED since the 2-D settled/fetch
-        // algebra landed (it was plan-time-rejected through PR 4); the
-        // scheme rejections still apply under residency.
-        let err = run(Scheme::ResReu, &crate::chunking::plan::ResidencyConfig::force(3))
-            .unwrap_err();
-        assert!(err.to_string().contains("resreu"), "{err}");
         // Structural rejections flow through the shared validators too.
         let mut backend = HostBackend::new(NaiveEngine);
         let err = run_scheme_tiles(

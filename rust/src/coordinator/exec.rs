@@ -29,8 +29,8 @@
 //! *data flow* — every dependency edge it emits points from a later op
 //! to an earlier one in the flattener's emission order, and this
 //! executor walks the plans in that same order (chunk-major staged
-//! epochs, pass-major resident epochs via
-//! [`resident_pass_sequences`]). The executed order is therefore a
+//! epochs, pass-major resident epochs via the builder-recorded
+//! [`EpochPlan::pass_sequences`]). The executed order is therefore a
 //! valid topological order of the dependency-edged graph under both
 //! `--overlap` modes, so enabling overlap changes modeled makespans
 //! only and can never perturb numerics — the randomized differential
@@ -64,8 +64,8 @@
 //!   in that order, waits always terminate for well-formed plans; a
 //!   plan bug where *all* live workers end up waiting is detected and
 //!   reported as an error instead of hanging.
-//! - **Pass boundaries.** Resident workers walk
-//!   [`resident_pass_sequences`] pass-major over their own chunks with
+//! - **Pass boundaries.** Resident workers walk the builder-recorded
+//!   [`EpochPlan::pass_sequences`] pass-major over their own chunks with
 //!   no global barrier — cross-worker pass ordering is enforced by the
 //!   blocking region-share reads alone, which is exactly the dependency
 //!   structure the PR 6 edge graph records.
@@ -77,9 +77,7 @@
 //! determinism property in `prop_schemes.rs`. Backends that cannot fork
 //! (e.g. a live PJRT client) simply fall back to sequential execution.
 
-use crate::chunking::plan::{
-    resident_pass_sequences, ChunkEpochPlan, ChunkOp, EpochPlan, Scheme,
-};
+use crate::chunking::plan::{ChunkEpochPlan, ChunkOp, EpochPlan, Scheme};
 use crate::chunking::{Decomposition, Decomposition2d};
 use crate::coordinator::backend::KernelBackend;
 use crate::coordinator::rs_buffer::RegionShareBuffer;
@@ -611,13 +609,15 @@ impl HostSide<'_> {
 }
 
 /// The single op interpreter every execution model *and* every worker
-/// shares: one kernel backend, one stencil kind, one stats record. The
-/// sequential paths borrow the executor's own backend/stats; each
-/// parallel worker brings a forked backend and a private stats record
-/// the coordinator later [`ExecStats::absorb`]s.
+/// shares: one kernel backend, one stats record. The stencil kind is
+/// *not* interpreter state — every `KernelInvocation` carries its
+/// own, which is what lets one executor run a multi-stencil plan
+/// sequence (pipeline segments with different radii) over persistent
+/// arenas. The sequential paths borrow the executor's own
+/// backend/stats; each parallel worker brings a forked backend and a
+/// private stats record the coordinator later [`ExecStats::absorb`]s.
 struct OpInterp<'a, B: KernelBackend + ?Sized> {
     backend: &'a mut B,
-    kind: crate::stencil::StencilKind,
     stats: &'a mut ExecStats,
     /// Row-band fan-out for large host-side gather/scatter copies. The
     /// sequential paths get the executor's full thread budget; parallel
@@ -920,7 +920,7 @@ impl<B: KernelBackend + ?Sized> OpInterp<'_, B> {
                 }
                 let pair = view.pair(cp)?;
                 self.backend
-                    .run_kernel(self.kind, &mut pair.0, &mut pair.1, &local_windows)
+                    .run_kernel(inv.kind, &mut pair.0, &mut pair.1, &local_windows)
                     .with_context(|| {
                         format!("kernel chunk {} step {}", cp.chunk, inv.first_step)
                     })?;
@@ -943,10 +943,12 @@ struct ParSetup {
     dev_ranges: Vec<(usize, usize)>,
 }
 
-/// Executes epoch plans with real numerics.
+/// Executes epoch plans with real numerics. The stencil kind of each
+/// kernel is read off the plan ops themselves, so one executor can run
+/// a plan sequence that changes stencil mid-run (multi-stencil
+/// pipelines over persistent arenas).
 pub struct PlanExecutor<'a, B: KernelBackend + ?Sized> {
     backend: &'a mut B,
-    kind: crate::stencil::StencilKind,
     /// Worker-thread budget for [`Self::run`] / [`Self::run_tiles`]
     /// (1 = strictly sequential, the default; see
     /// [`Self::set_threads`]).
@@ -958,8 +960,8 @@ pub struct PlanExecutor<'a, B: KernelBackend + ?Sized> {
 }
 
 impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
-    pub fn new(backend: &'a mut B, kind: crate::stencil::StencilKind) -> Self {
-        Self { backend, kind, threads: 1, stats: ExecStats::default(), trace: Recorder::off() }
+    pub fn new(backend: &'a mut B) -> Self {
+        Self { backend, threads: 1, stats: ExecStats::default(), trace: Recorder::off() }
     }
 
     /// Enable (or disable) wall-clock span tracing for subsequent runs.
@@ -1022,7 +1024,6 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
     fn interp(&mut self, epoch: usize, pass: Option<usize>) -> OpInterp<'_, B> {
         OpInterp {
             backend: &mut *self.backend,
-            kind: self.kind,
             stats: &mut self.stats,
             copy_threads: self.threads,
             trace: &mut self.trace,
@@ -1185,8 +1186,9 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         dc: &Decomposition2d,
         plans: &[EpochPlan],
     ) -> Result<()> {
+        let scheme = plans.first().map(|p| p.scheme).unwrap_or(Scheme::So2dr);
         let s_max = plans.iter().map(|p| p.steps).max().unwrap_or(1);
-        let (buf_rows, buf_cols) = dc.uniform_buffer_dims(s_max);
+        let (buf_rows, buf_cols) = dc.uniform_buffer_dims_for(scheme, s_max);
         let n_devices = plans.iter().map(|p| p.n_devices).max().unwrap_or(1);
         let resident = plans.iter().any(|p| p.resident);
         if let Some(ParSetup { mut forks, dev_ranges }) = self.forks_for(plans, n_devices) {
@@ -1195,13 +1197,13 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                     Self::resident_chunk_ranges(plans, dc.n_tiles(), &dev_ranges)
                 {
                     let bases: Vec<(i64, i64)> =
-                        (0..dc.n_tiles()).map(|t| dc.tile_base(t, s_max)).collect();
+                        (0..dc.n_tiles()).map(|t| dc.tile_base_for(scheme, t, s_max)).collect();
                     return self.run_par_resident(
                         grid,
                         plans,
                         (buf_rows, buf_cols),
                         &bases,
-                        dc.arena_bytes(s_max),
+                        dc.arena_bytes_for(scheme, s_max),
                         n_devices,
                         &chunk_ranges,
                         &mut forks,
@@ -1213,7 +1215,7 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                     grid,
                     plans,
                     (buf_rows, buf_cols),
-                    &|plan, cp| dc.tile_base(cp.chunk, plan.steps),
+                    &|plan, cp| dc.tile_base_for(plan.scheme, cp.chunk, plan.steps),
                     n_devices,
                     &dev_ranges,
                     &mut forks,
@@ -1238,7 +1240,7 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         self.stats.arena_peak_bytes = self.stats.arena_peak_bytes.max(arena_bytes);
         for (epoch, plan) in plans.iter().enumerate() {
             for cp in &plan.chunks {
-                let base = dc.tile_base(cp.chunk, plan.steps);
+                let base = dc.tile_base_for(plan.scheme, cp.chunk, plan.steps);
                 let mut side = HostSide::Seq { grid: &mut *grid, rs: &mut rs };
                 let mut view = store.view();
                 self.interp(epoch, None)
@@ -1266,14 +1268,14 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
 
     /// Resident tile execution: one persistent tile-shaped arena per
     /// tile, kept alive across epoch boundaries and pinned at the
-    /// run-maximum base ([`Decomposition2d::tile_base`] at `s_max`), so
-    /// settled data keeps its arena offset from one epoch to the next.
-    /// Each epoch executes in the passes [`resident_pass_sequences`]
-    /// derives from its op lists — arrival + column publishes, column
-    /// fetches + row publishes, row fetches + kernels + retirement —
-    /// because inter-epoch bands flow both up and down the row-major
-    /// tile order along both axes, which no single tile-major sweep can
-    /// serialize.
+    /// run-maximum base ([`Decomposition2d::tile_base_for`] at `s_max`),
+    /// so settled data keeps its arena offset from one epoch to the
+    /// next. Each epoch executes in the passes the *builder* recorded
+    /// in [`ChunkEpochPlan::pass_bounds`] — arrival + column publishes,
+    /// column fetches + row publishes, row fetches + kernels +
+    /// retirement — because inter-epoch bands flow both up and down the
+    /// row-major tile order along both axes, which no single tile-major
+    /// sweep can serialize.
     fn run_resident_tiles(
         &mut self,
         grid: &mut Array2,
@@ -1283,12 +1285,13 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         s_max: usize,
         rs: &mut [RegionShareBuffer],
     ) -> Result<()> {
+        let scheme = plans.first().map(|p| p.scheme).unwrap_or(Scheme::So2dr);
         let mut store = ArenaStore::Resident((0..dc.n_tiles()).map(|_| None).collect());
         for (epoch, plan) in plans.iter().enumerate() {
-            for (pass, segments) in resident_pass_sequences(plan).into_iter().enumerate() {
+            for (pass, segments) in plan.pass_sequences().into_iter().enumerate() {
                 for (ci, range) in segments {
                     let cp = &plan.chunks[ci];
-                    let base = dc.tile_base(cp.chunk, s_max);
+                    let base = dc.tile_base_for(scheme, cp.chunk, s_max);
                     let mut side = HostSide::Seq { grid: &mut *grid, rs: &mut *rs };
                     let mut view = store.view();
                     self.interp(epoch, Some(pass))
@@ -1301,8 +1304,10 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                     // Peak arena occupancy: right after arrivals, before
                     // this epoch's evictions.
                     let live = store.live_arenas() as u64;
-                    self.stats.arena_peak_bytes =
-                        self.stats.arena_peak_bytes.max(live * dc.arena_bytes(s_max));
+                    self.stats.arena_peak_bytes = self
+                        .stats
+                        .arena_peak_bytes
+                        .max(live * dc.arena_bytes_for(scheme, s_max));
                 }
             }
             for r in rs.iter_mut() {
@@ -1364,13 +1369,14 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
     }
 
     /// Resident execution model: one persistent arena per chunk, kept
-    /// alive across epoch boundaries. Each epoch runs in the passes
-    /// [`resident_pass_sequences`] derives from its op lists — every
-    /// chunk's arrival + epoch-start publishes (phase A), then all
-    /// fetches, kernels and retirements (phase B) — because inter-epoch
-    /// halo data flows both up and down the chunk order, which a single
-    /// chunk-major sweep cannot serialize (a chunk's kernels would
-    /// overwrite rows its neighbor still has to fetch).
+    /// alive across epoch boundaries. Each epoch runs in the passes the
+    /// *builder* recorded in [`ChunkEpochPlan::pass_bounds`]
+    /// ([`EpochPlan::pass_sequences`]) — every chunk's arrival +
+    /// epoch-start publishes (phase A), then all fetches, kernels and
+    /// retirements (phase B) — because inter-epoch halo data flows both
+    /// up and down the chunk order, which a single chunk-major sweep
+    /// cannot serialize (a chunk's kernels would overwrite rows its
+    /// neighbor still has to fetch).
     fn run_resident(
         &mut self,
         grid: &mut Array2,
@@ -1384,7 +1390,7 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         let s_max = plans.iter().map(|p| p.steps).max().unwrap_or(1);
         let mut store = ArenaStore::Resident((0..dc.n_chunks()).map(|_| None).collect());
         for (epoch, plan) in plans.iter().enumerate() {
-            for (pass, segments) in resident_pass_sequences(plan).into_iter().enumerate() {
+            for (pass, segments) in plan.pass_sequences().into_iter().enumerate() {
                 for (ci, range) in segments {
                     let cp = &plan.chunks[ci];
                     let base = (dc.resident_base(scheme, s_max, cp.chunk), 0);
@@ -1440,7 +1446,6 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         unit: &'static str,
     ) -> Result<()> {
         let workers = dev_ranges.len();
-        let kind = self.kind;
         let hub = RsHub::new(n_devices);
         let host = Mutex::new(std::mem::replace(grid, Array2::zeros(0, 0)));
         let mut bufs: Vec<(Array2, Array2)> = (0..n_devices)
@@ -1472,7 +1477,6 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                         let mut side = HostSide::Par { snap, grid: host, hub };
                         let mut interp = OpInterp {
                             backend: &mut **fork,
-                            kind,
                             stats: wstat,
                             copy_threads: 1,
                             trace: wtrace,
@@ -1537,7 +1541,7 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
 
     /// Parallel resident execution: one worker per contiguous *chunk*
     /// range (validated by [`Self::resident_chunk_ranges`]), each
-    /// walking [`resident_pass_sequences`] pass-major over its own
+    /// walking [`EpochPlan::pass_sequences`] pass-major over its own
     /// chunks with its own arena slice. No global pass barrier: the
     /// blocking region-share hub alone enforces cross-worker ordering.
     #[allow(clippy::too_many_arguments)]
@@ -1554,7 +1558,6 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         unit: &'static str,
     ) -> Result<()> {
         let workers = chunk_ranges.len();
-        let kind = self.kind;
         let hub = RsHub::new(n_devices);
         let host = Mutex::new(std::mem::replace(grid, Array2::zeros(0, 0)));
         let n_chunks = bases.len();
@@ -1564,7 +1567,7 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
         let mut result: Result<()> = Ok(());
         for (epoch, plan) in plans.iter().enumerate() {
             let snap = lock_grid(&host).clone();
-            let passes = resident_pass_sequences(plan);
+            let passes = plan.pass_sequences();
             hub.begin_epoch(workers);
             // Workers report their own live-arena count right after
             // their pass 0 (arenas are worker-exclusive, so the sum
@@ -1591,7 +1594,6 @@ impl<'a, B: KernelBackend + ?Sized> PlanExecutor<'a, B> {
                         let mut side = HostSide::Par { snap, grid: host, hub };
                         let mut interp = OpInterp {
                             backend: &mut **fork,
-                            kind,
                             stats: wstat,
                             copy_threads: 1,
                             trace: wtrace,

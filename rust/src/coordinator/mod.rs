@@ -24,5 +24,5 @@ pub use driver::{
     run_scheme_tiles_threads, run_scheme_tiles_threads_traced, RunOutcome,
 };
 pub use exec::{ExecStats, PlanExecutor};
-pub use pipeline::{run_pipeline, run_pipeline_on, PipelineStats, Segment};
+pub use pipeline::{run_pipeline, run_pipeline_on, run_pipeline_resident, PipelineStats, Segment};
 pub use rs_buffer::RegionShareBuffer;

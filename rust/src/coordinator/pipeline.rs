@@ -10,16 +10,25 @@
 //!
 //! Residency: each segment runs through the residency planner
 //! ([`ResidencyConfig`]), so multi-epoch segments keep their chunks
-//! device-resident *within* the segment. The segment boundary itself is
-//! still a host round trip: arenas are shaped by the segment's stencil
-//! radius (fixed-shape AOT kernels), so persisting them across a radius
-//! change needs a kind-carrying plan IR — a ROADMAP follow-on. The
-//! multi-device tests below lock today's boundary behavior in.
+//! device-resident *within* the segment — and, since the plan IR
+//! carries each kernel's [`StencilKind`], [`run_pipeline_resident`]
+//! chains arenas *across* segment boundaries too: the whole pipeline is
+//! planned as one global epoch sequence
+//! ([`chunking::plan::plan_pipeline_resident`]), so each chunk moves
+//! HtoD once on first touch and the stencil kind changes under the
+//! resident data. The per-segment entry points ([`run_pipeline_on`])
+//! keep today's host-round-trip boundary contract, locked in by the
+//! multi-device tests below.
+//!
+//! [`chunking::plan::plan_pipeline_resident`]: crate::chunking::plan::plan_pipeline_resident
 
-use crate::chunking::plan::{ResidencyConfig, Scheme};
+use crate::chunking::plan::{
+    apply_codec_policy, plan_pipeline_resident, ResidencyConfig, Scheme,
+};
+use crate::chunking::{Decomposition, DeviceAssignment};
 use crate::coordinator::backend::KernelBackend;
 use crate::coordinator::driver::{run_scheme_full, RunOutcome};
-use crate::coordinator::exec::ExecStats;
+use crate::coordinator::exec::{ExecStats, PlanExecutor};
 use crate::core::Array2;
 use crate::stencil::StencilKind;
 use crate::transfer::CompressMode;
@@ -98,6 +107,73 @@ pub fn run_pipeline_on(
     let mut outcome = last.unwrap();
     outcome.grid = grid;
     Ok((outcome, stats))
+}
+
+/// Run a multi-stencil pipeline with cross-segment resident arenas: the
+/// whole pipeline is planned as one global epoch sequence (SO2DR by
+/// construction — see [`plan_pipeline_resident`]), so when capacity
+/// fits, each chunk is transferred HtoD exactly once at pipeline start
+/// and the stencil kind changes under the device-resident data; every
+/// later epoch — including each segment's first — refreshes its skirt
+/// from neighbor arenas instead of the host. Per-segment `S_TB`
+/// clamping matches [`run_pipeline_on`]. With [`ResidentMode::Off`] the
+/// plan degenerates to the concatenated staged segments (summary
+/// `enabled: false`); capacity victims under `Auto` spill and re-fetch,
+/// keeping the run correct without the one-sweep promise. The returned
+/// [`RunOutcome`] carries whole-pipeline stats and the global
+/// [`ResidencySummary`].
+///
+/// [`ResidentMode::Off`]: crate::chunking::ResidentMode::Off
+/// [`ResidencySummary`]: crate::chunking::ResidencySummary
+#[allow(clippy::too_many_arguments)]
+pub fn run_pipeline_resident(
+    initial: &Array2,
+    segments: &[Segment],
+    d: usize,
+    devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    backend: &mut dyn KernelBackend,
+    resident: &ResidencyConfig,
+    compress: CompressMode,
+) -> Result<RunOutcome> {
+    if segments.is_empty() {
+        bail!("empty pipeline");
+    }
+    crate::config::validate_devices(Scheme::So2dr, d, devices)?;
+    let seg_tuples: Vec<(StencilKind, usize, usize)> = segments
+        .iter()
+        .map(|seg| {
+            // Same per-segment clamp as run_pipeline_on: the skirt plus
+            // one radius must fit inside every chunk.
+            let min_chunk = initial.rows() / d;
+            let max_tb = (min_chunk.saturating_sub(seg.kind.radius())) / seg.kind.radius();
+            (seg.kind, seg.steps, s_tb.min(max_tb.max(1)).min(seg.steps.max(1)))
+        })
+        .collect();
+    // The executor addresses every segment's rects through one covering
+    // decomposition built with the pipeline's largest radius: chunk
+    // bounds are radius-independent, and the covering skirt bounds every
+    // segment's, so the pinned arena bases and the uniform buffer height
+    // cover all plans.
+    let r_max = segments.iter().map(|s| s.kind.radius()).max().unwrap();
+    let dc = Decomposition::try_new(initial.rows(), initial.cols(), d, r_max)?;
+    let devs = DeviceAssignment::contiguous(dc.n_chunks(), devices);
+    let (mut plans, summary) = plan_pipeline_resident(
+        initial.rows(),
+        initial.cols(),
+        d,
+        &devs,
+        &seg_tuples,
+        k_on,
+        resident,
+    )?;
+    apply_codec_policy(&mut plans, compress);
+    let mut grid = initial.clone();
+    let mut exec = PlanExecutor::new(backend);
+    exec.run(&mut grid, &dc, &plans)?;
+    let stats = exec.stats.clone();
+    Ok(RunOutcome { grid, stats, residency: Some(summary) })
 }
 
 /// Single-device, staged-epoch, uncompressed [`run_pipeline_on`] (the
@@ -266,6 +342,139 @@ mod tests {
                 assert!(seg_stats.resident_hits > 0, "{}", kind.name());
             }
         }
+    }
+
+    #[test]
+    fn cross_segment_resident_pipeline_transfers_each_chunk_once() {
+        // The chained planner closes the segment-boundary round trip:
+        // under ample capacity, total HtoD over the whole pipeline is
+        // exactly one grid sweep (the per-segment resident path pays one
+        // sweep *per segment*), and the result stays bit-exact while the
+        // stencil kind — radius included — changes under the resident
+        // arenas.
+        let initial = Array2::synthetic(120, 80, 23);
+        let segs = vec![
+            Segment::new(StencilKind::Box { radius: 1 }, 8),
+            Segment::new(StencilKind::Box { radius: 2 }, 6),
+            Segment::new(StencilKind::Gradient2d, 4),
+        ];
+        let expect = reference_pipeline(&initial, &segs);
+        let grid_bytes = (120 * 80 * 4) as u64;
+        for devices in [1usize, 2, 3] {
+            let mut backend = HostBackend::new(NaiveEngine);
+            let out = run_pipeline_resident(
+                &initial,
+                &segs,
+                4,
+                devices,
+                4,
+                2,
+                &mut backend,
+                &ResidencyConfig::force(3),
+                CompressMode::Off,
+            )
+            .unwrap();
+            assert!(out.grid.bit_eq(&expect), "{devices} devices");
+            assert_eq!(
+                out.stats.htod_bytes, grid_bytes,
+                "{devices} devices: the whole pipeline transfers the grid exactly once"
+            );
+            assert!(out.stats.resident_hits > 0, "{devices} devices");
+            let summary = out.residency.expect("chained runs report residency");
+            assert!(summary.enabled);
+            assert!(summary.fits);
+            assert_eq!(summary.planned_htod_bytes, grid_bytes);
+            assert!(summary.saved_htod_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn cross_segment_entry_degenerates_to_staged_when_residency_off() {
+        let initial = Array2::synthetic(120, 80, 29);
+        let segs = vec![
+            Segment::new(StencilKind::Gradient2d, 6),
+            Segment::new(StencilKind::Box { radius: 2 }, 4),
+        ];
+        let expect = reference_pipeline(&initial, &segs);
+        let grid_bytes = (120 * 80 * 4) as u64;
+        let mut backend = HostBackend::new(NaiveEngine);
+        let out = run_pipeline_resident(
+            &initial,
+            &segs,
+            4,
+            2,
+            4,
+            2,
+            &mut backend,
+            &ResidencyConfig::off(),
+            CompressMode::Off,
+        )
+        .unwrap();
+        assert!(out.grid.bit_eq(&expect));
+        let summary = out.residency.expect("summary present even when disabled");
+        assert!(!summary.enabled);
+        // Staged epochs pay one grid sweep each (HtoD spans partition
+        // the rows per epoch): 6 steps at S_TB 4 is 2 epochs, 4 steps
+        // at S_TB 4 is 1 — three sweeps total.
+        assert_eq!(out.stats.htod_bytes, 3 * grid_bytes);
+    }
+
+    #[test]
+    fn cross_segment_capacity_victims_spill_and_stay_bit_exact() {
+        // A capacity too small for the whole working set forces spills;
+        // the chained plan still runs correctly, it just loses the
+        // one-sweep promise.
+        let initial = Array2::synthetic(120, 80, 31);
+        let segs = vec![
+            Segment::new(StencilKind::Box { radius: 1 }, 8),
+            Segment::new(StencilKind::Box { radius: 2 }, 6),
+        ];
+        let expect = reference_pipeline(&initial, &segs);
+        let grid_bytes = (120 * 80 * 4) as u64;
+        let mut backend = HostBackend::new(NaiveEngine);
+        let out = run_pipeline_resident(
+            &initial,
+            &segs,
+            4,
+            1,
+            4,
+            2,
+            &mut backend,
+            &ResidencyConfig::auto(1, 3),
+            CompressMode::Off,
+        )
+        .unwrap();
+        assert!(out.grid.bit_eq(&expect));
+        let summary = out.residency.expect("summary present");
+        assert!(!summary.fits);
+        assert!(summary.planned_spills > 0);
+        assert!(out.stats.htod_bytes > grid_bytes);
+    }
+
+    #[test]
+    fn cross_segment_resident_pipeline_composes_with_lossless_compression() {
+        let initial = Array2::synthetic(120, 80, 23);
+        let segs = vec![
+            Segment::new(StencilKind::Box { radius: 1 }, 8),
+            Segment::new(StencilKind::Box { radius: 2 }, 6),
+        ];
+        let expect = reference_pipeline(&initial, &segs);
+        let mut backend = HostBackend::new(NaiveEngine);
+        let out = run_pipeline_resident(
+            &initial,
+            &segs,
+            4,
+            2,
+            4,
+            2,
+            &mut backend,
+            &ResidencyConfig::force(3),
+            CompressMode::Lossless,
+        )
+        .unwrap();
+        assert!(out.grid.bit_eq(&expect));
+        assert!(out.stats.codec_ops > 0);
+        assert!(out.stats.htod_wire_bytes < out.stats.htod_bytes);
     }
 
     #[test]

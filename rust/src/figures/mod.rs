@@ -6,8 +6,8 @@
 //! shapes: who wins, by what factor, and where the crossovers fall.
 
 use crate::chunking::plan::{
-    apply_codec_policy, plan_run_resident, plan_run_resident_tiles, ResidencyConfig,
-    ResidencySummary, Scheme,
+    apply_codec_policy, plan_pipeline_resident, plan_run_resident, plan_run_resident_tiles,
+    plan_run_tiles, ResidencyConfig, ResidencySummary, Scheme,
 };
 use crate::chunking::{Decomposition, Decomposition2d, DeviceAssignment};
 use crate::coordinator::{HostBackend, PlanExecutor};
@@ -69,7 +69,8 @@ pub fn simulate_compressed_grid_devices_overlap(
     } else {
         DeviceAssignment::contiguous(dc.n_chunks(), devices)
     };
-    let (mut plans, summary) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, resident);
+    let (mut plans, summary) =
+        plan_run_resident(scheme, &dc, &devs, kind, n, s_tb, k_on, resident);
     apply_codec_policy(&mut plans, compress);
     let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
     let ops =
@@ -120,7 +121,8 @@ pub fn simulate_traced_grid_devices_overlap(
     } else {
         DeviceAssignment::contiguous(dc.n_chunks(), devices)
     };
-    let (mut plans, summary) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, resident);
+    let (mut plans, summary) =
+        plan_run_resident(scheme, &dc, &devs, kind, n, s_tb, k_on, resident);
     apply_codec_policy(&mut plans, compress);
     let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
     let ops =
@@ -161,13 +163,16 @@ pub fn simulate_compressed_grid_devices(
 /// over a [`Decomposition2d`] (through the tile residency planner —
 /// `ResidencyConfig::off()` degenerates to the staged tile plan), tag
 /// the transfer ops under the codec policy, flatten (tile-shaped
-/// arenas, cross-epoch lifetimes for resident plans), replay. Returns
-/// an error for the combinations the tile planner rejects (non-SO2DR
-/// schemes, infeasible tilings) so the CLI surfaces them instead of
-/// panicking.
+/// arenas, cross-epoch lifetimes for resident plans), replay. Both
+/// out-of-core sharing schemes tile; the combinations the tile planner
+/// rejects (the in-core scheme, infeasible tilings) come back as errors
+/// so the CLI surfaces them instead of panicking. Device assignment
+/// mirrors the real-numerics driver: block-grid (whole tile rows per
+/// device) when the device count allows, contiguous otherwise.
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_resident_tiles_grid_devices_overlap(
     machine: &MachineSpec,
+    scheme: Scheme,
     kind: StencilKind,
     rows: usize,
     cols: usize,
@@ -183,14 +188,19 @@ pub fn simulate_resident_tiles_grid_devices_overlap(
     overlap: bool,
 ) -> anyhow::Result<(SimReport, ResidencySummary)> {
     let dc = Decomposition2d::try_new(rows, cols, chunks_y, chunks_x, kind.radius())?;
-    crate::config::validate_devices(Scheme::So2dr, dc.n_tiles(), devices)?;
-    let devs = DeviceAssignment::contiguous(dc.n_tiles(), devices);
+    crate::config::validate_devices(scheme, dc.n_tiles(), devices)?;
+    let devs = DeviceAssignment::for_tiles(&dc, devices);
     let (mut plans, summary) =
-        plan_run_resident_tiles(Scheme::So2dr, &dc, &devs, n, s_tb, k_on, resident)?;
+        plan_run_resident_tiles(scheme, &dc, &devs, kind, n, s_tb, k_on, resident)?;
     apply_codec_policy(&mut plans, compress);
     let s_max = plans.iter().map(|p| p.steps).max().unwrap_or(1);
-    let ops =
-        flatten_run_opts(&plans, kind, n_strm, dc.arena_bytes(s_max), FlattenOpts { overlap });
+    let ops = flatten_run_opts(
+        &plans,
+        kind,
+        n_strm,
+        dc.arena_bytes_for(scheme, s_max),
+        FlattenOpts { overlap },
+    );
     let rep = simulate(&ops, &CostModel::new(machine.clone()), n_strm)?;
     Ok((rep, summary))
 }
@@ -201,6 +211,7 @@ pub fn simulate_resident_tiles_grid_devices_overlap(
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_traced_tiles_grid_devices_overlap(
     machine: &MachineSpec,
+    scheme: Scheme,
     kind: StencilKind,
     rows: usize,
     cols: usize,
@@ -216,14 +227,19 @@ pub fn simulate_traced_tiles_grid_devices_overlap(
     overlap: bool,
 ) -> anyhow::Result<(SimReport, ResidencySummary, Recorder)> {
     let dc = Decomposition2d::try_new(rows, cols, chunks_y, chunks_x, kind.radius())?;
-    crate::config::validate_devices(Scheme::So2dr, dc.n_tiles(), devices)?;
-    let devs = DeviceAssignment::contiguous(dc.n_tiles(), devices);
+    crate::config::validate_devices(scheme, dc.n_tiles(), devices)?;
+    let devs = DeviceAssignment::for_tiles(&dc, devices);
     let (mut plans, summary) =
-        plan_run_resident_tiles(Scheme::So2dr, &dc, &devs, n, s_tb, k_on, resident)?;
+        plan_run_resident_tiles(scheme, &dc, &devs, kind, n, s_tb, k_on, resident)?;
     apply_codec_policy(&mut plans, compress);
     let s_max = plans.iter().map(|p| p.steps).max().unwrap_or(1);
-    let ops =
-        flatten_run_opts(&plans, kind, n_strm, dc.arena_bytes(s_max), FlattenOpts { overlap });
+    let ops = flatten_run_opts(
+        &plans,
+        kind,
+        n_strm,
+        dc.arena_bytes_for(scheme, s_max),
+        FlattenOpts { overlap },
+    );
     let mut rec = Recorder::on();
     let rep = simulate_traced(&ops, &CostModel::new(machine.clone()), n_strm, &mut rec)?;
     name_des_tracks(&mut rec, n_strm, overlap);
@@ -249,8 +265,21 @@ pub fn simulate_resident_tiles_grid_devices(
     compress: CompressMode,
 ) -> anyhow::Result<(SimReport, ResidencySummary)> {
     simulate_resident_tiles_grid_devices_overlap(
-        machine, kind, rows, cols, chunks_y, chunks_x, devices, s_tb, k_on, n, n_strm,
-        resident, compress, true,
+        machine,
+        Scheme::So2dr,
+        kind,
+        rows,
+        cols,
+        chunks_y,
+        chunks_x,
+        devices,
+        s_tb,
+        k_on,
+        n,
+        n_strm,
+        resident,
+        compress,
+        true,
     )
 }
 
@@ -1316,6 +1345,134 @@ pub fn decomp_fig(machine: &MachineSpec) -> String {
     out
 }
 
+/// Composition-lattice audit: which scheme x decomposition x execution-
+/// model cells the planners accept, measured by *calling them* (the
+/// figure cannot drift from the code), plus the per-epoch halo volume
+/// each accepted layout moves — the quantity the 2-D tiling exists to
+/// shrink (O(perimeter) bands vs the row-band scheme's O(cols)
+/// boundaries). A machine-readable `lattice.json` lands in `dir` for
+/// the CI artifact.
+pub fn lattice_fig_to(_machine: &MachineSpec, dir: &std::path::Path) -> String {
+    let mut out = String::from(
+        "== Composition lattice: accepted cells and per-epoch halo volume ==\n\
+         (acceptance probed by invoking each planner on a small grid; halo \
+         bytes are pure geometry at paper scale)\n",
+    );
+    let kind = StencilKind::Box { radius: 1 };
+    let (sz, d, n, s_tb) = (256usize, 4usize, 32usize, 8usize);
+    let dc1 = Decomposition::new(sz, sz, d, kind.radius());
+    let devs1 = DeviceAssignment::single(dc1.n_chunks());
+    let dc2 = Decomposition2d::try_new(sz, sz, 2, 2, kind.radius())
+        .expect("probe tiling is feasible by construction");
+    let devs2 = DeviceAssignment::single(dc2.n_tiles());
+    let mut t = Table::new(vec![
+        "scheme", "rows", "tiles", "resident rows", "resident tiles", "chained pipeline",
+    ]);
+    let yn = |b: bool| if b { "yes".to_string() } else { "no".to_string() };
+    let mut accepted: Vec<String> = Vec::new();
+    for scheme in [Scheme::So2dr, Scheme::ResReu, Scheme::InCore] {
+        let k_on = if scheme == Scheme::ResReu { 1 } else { 4 };
+        // Staged row bands plan for every scheme (in-core ignores the
+        // decomposition); the probes below are the contested cells.
+        let rows_ok = true;
+        let tiles_ok = plan_run_tiles(scheme, &dc2, &devs2, kind, n, s_tb, k_on).is_ok();
+        let res_rows = plan_run_resident(
+            scheme, &dc1, &devs1, kind, n, s_tb, k_on, &ResidencyConfig::force(3),
+        )
+        .1
+        .enabled;
+        let res_tiles = plan_run_resident_tiles(
+            scheme, &dc2, &devs2, kind, n, s_tb, k_on, &ResidencyConfig::force(3),
+        )
+        .map(|(_, s)| s.enabled)
+        .unwrap_or(false);
+        // Cross-segment arena chaining is SO2DR-only by construction
+        // (its settled span is radius-independent).
+        let chained = scheme == Scheme::So2dr
+            && plan_pipeline_resident(
+                sz,
+                sz,
+                d,
+                &devs1,
+                &[(kind, 2 * s_tb, s_tb), (StencilKind::Box { radius: 2 }, s_tb, s_tb)],
+                k_on,
+                &ResidencyConfig::force(3),
+            )
+            .map(|(_, s)| s.enabled)
+            .unwrap_or(false);
+        t.row(vec![
+            scheme.name().to_string(),
+            yn(rows_ok),
+            yn(tiles_ok),
+            yn(res_rows),
+            yn(res_tiles),
+            yn(chained),
+        ]);
+        accepted.push(format!(
+            "    {{\"scheme\": \"{}\", \"rows\": {rows_ok}, \"tiles\": {tiles_ok}, \
+             \"resident_rows\": {res_rows}, \"resident_tiles\": {res_tiles}, \
+             \"chained_pipeline\": {chained}}}",
+            scheme.name(),
+        ));
+    }
+    out.push_str(&t.render());
+    let (_, halo_tb) = chosen_config(kind);
+    out.push_str(&format!(
+        "\n-- per-epoch sharing payload, box2d1r at {SZ_OOC}^2, S_TB = {halo_tb} --\n"
+    ));
+    let mut h = Table::new(vec!["chunks", "layout", "scheme", "halo bytes/epoch", "vs 1-D"]);
+    let mut halo: Vec<String> = Vec::new();
+    for (g, gy, gx) in [(4usize, 2usize, 2usize), (16, 4, 4)] {
+        let rows_dc = Decomposition2d::try_new(SZ_OOC, SZ_OOC, g, 1, kind.radius())
+            .expect("paper-scale row bands are feasible");
+        let tile_dc = Decomposition2d::try_new(SZ_OOC, SZ_OOC, gy, gx, kind.radius())
+            .expect("paper-scale tiling is feasible");
+        for scheme in [Scheme::So2dr, Scheme::ResReu] {
+            let bytes = |dc: &Decomposition2d| match scheme {
+                Scheme::So2dr => dc.halo_bytes_per_epoch(halo_tb),
+                Scheme::ResReu => dc.resreu_halo_bytes_per_epoch(halo_tb),
+                Scheme::InCore => 0,
+            };
+            let (b1, b2) = (bytes(&rows_dc), bytes(&tile_dc));
+            h.row(vec![
+                g.to_string(),
+                format!("1x{g} rows"),
+                scheme.name().to_string(),
+                crate::util::fmt_bytes(b1),
+                "1.00x".into(),
+            ]);
+            h.row(vec![
+                g.to_string(),
+                format!("{gy}x{gx} tiles"),
+                scheme.name().to_string(),
+                crate::util::fmt_bytes(b2),
+                format!("{:.2}x", b2 as f64 / b1.max(1) as f64),
+            ]);
+            halo.push(format!(
+                "    {{\"chunks\": {g}, \"scheme\": \"{}\", \"rows_bytes\": {b1}, \
+                 \"tiles_bytes\": {b2}}}",
+                scheme.name(),
+            ));
+        }
+    }
+    out.push_str(&h.render());
+    let json = format!(
+        "{{\n  \"what\": \"composition lattice: accepted cells and per-epoch halo volume\",\n  \
+         \"config\": {{\"probe_sz\": {sz}, \"halo_sz\": {SZ_OOC}, \"halo_s_tb\": {halo_tb}}},\n  \
+         \"accepted\": [\n{}\n  ],\n  \"halo\": [\n{}\n  ]\n}}\n",
+        accepted.join(",\n"),
+        halo.join(",\n"),
+    );
+    let _ = std::fs::create_dir_all(dir);
+    let _ = std::fs::write(dir.join("lattice.json"), &json);
+    out
+}
+
+/// Registry-shaped [`lattice_fig_to`]: writes `results/lattice.json`.
+pub fn lattice_fig(machine: &MachineSpec) -> String {
+    lattice_fig_to(machine, std::path::Path::new("results"))
+}
+
 /// Span-trace occupancy study (the observability layer at paper scale):
 /// replay the §V-B chosen box2d1r configuration on 1 and 4 simulated
 /// GPUs with the span recorder live, and table the per-device
@@ -1465,6 +1622,7 @@ pub fn registry() -> Vec<(&'static str, fn(&MachineSpec) -> String)> {
         ("resident", resident),
         ("compress", compress_fig),
         ("decomp", decomp_fig),
+        ("lattice", lattice_fig),
         ("overlap", overlap_fig),
         ("trace", trace_fig),
         ("bench_pr2", bench_pr2),
@@ -1735,6 +1893,43 @@ mod tests {
         assert!(txt.contains("row bands vs 2-D tiles"), "{txt}");
         assert!(txt.contains("2x2 tiles") && txt.contains("4x4 tiles"), "{txt}");
         assert!(txt.contains("1x4 rows") && txt.contains("1x16 rows"), "{txt}");
+    }
+
+    #[test]
+    fn lattice_figure_reports_shrunk_rejection_matrix_and_perimeter_halo() {
+        let m = MachineSpec::rtx3080();
+        let dir = crate::util::testkit::TempDir::new("lattice");
+        let txt = lattice_fig_to(&m, dir.path());
+        assert!(txt.contains("Composition lattice"), "{txt}");
+        let json = std::fs::read_to_string(dir.path().join("lattice.json")).unwrap();
+        // The contested cells: ResReu x tiles is accepted (the rejection
+        // matrix shrank), the in-core scheme still has no decomposition,
+        // and cross-segment chaining holds for SO2DR.
+        assert!(
+            json.contains("\"scheme\": \"resreu\", \"rows\": true, \"tiles\": true"),
+            "{json}"
+        );
+        assert!(
+            json.contains("\"scheme\": \"incore\", \"rows\": true, \"tiles\": false"),
+            "{json}"
+        );
+        assert!(json.contains("\"chained_pipeline\": true"), "{json}");
+        assert!(json.contains("\"rows_bytes\""), "{json}");
+        // Perimeter beats boundary at every tabled cell, both schemes.
+        for (g, gy, gx) in [(4usize, 2usize, 2usize), (16, 4, 4)] {
+            let rows_dc = Decomposition2d::try_new(SZ_OOC, SZ_OOC, g, 1, 1).unwrap();
+            let tile_dc = Decomposition2d::try_new(SZ_OOC, SZ_OOC, gy, gx, 1).unwrap();
+            let (_, s_tb) = chosen_config(StencilKind::Box { radius: 1 });
+            assert!(
+                tile_dc.halo_bytes_per_epoch(s_tb) < rows_dc.halo_bytes_per_epoch(s_tb),
+                "{gy}x{gx} so2dr"
+            );
+            assert!(
+                tile_dc.resreu_halo_bytes_per_epoch(s_tb)
+                    < rows_dc.resreu_halo_bytes_per_epoch(s_tb),
+                "{gy}x{gx} resreu"
+            );
+        }
     }
 
     #[test]

@@ -416,7 +416,7 @@ mod tests {
     fn sim(scheme: Scheme, d: usize, s_tb: usize, k_on: usize, n: usize) -> SimReport {
         let kind = StencilKind::Box { radius: 1 };
         let dc = Decomposition::new(38400, 38400, d, 1);
-        let plans = plan_run(scheme, &dc, n, s_tb, k_on);
+        let plans = plan_run(scheme, &dc, kind, n, s_tb, k_on);
         let buf_rows =
             PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
         let ops = flatten_run(&plans, &dc, kind, 3, buf_rows);
@@ -615,7 +615,7 @@ mod determinism_tests {
     #[test]
     fn replay_is_deterministic() {
         let dc = Decomposition::new(38400, 38400, 4, 1);
-        let plans = plan_run(Scheme::So2dr, &dc, 64, 16, 4);
+        let plans = plan_run(Scheme::So2dr, &dc, StencilKind::Box { radius: 1 }, 64, 16, 4);
         let buf_rows =
             PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
         let ops = flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows);
@@ -634,7 +634,7 @@ mod determinism_tests {
     #[test]
     fn more_streams_never_hurt() {
         let dc = Decomposition::new(38400, 38400, 8, 1);
-        let plans = plan_run(Scheme::So2dr, &dc, 80, 40, 4);
+        let plans = plan_run(Scheme::So2dr, &dc, StencilKind::Box { radius: 1 }, 80, 40, 4);
         let buf_rows =
             PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
         let cost = CostModel::new(MachineSpec::rtx3080());
@@ -663,7 +663,8 @@ mod trace_tests {
     fn traced_run() -> (Vec<SimOp>, SimReport, Recorder) {
         let dc = Decomposition::new(38400, 38400, 4, 1);
         let devs = DeviceAssignment::contiguous(dc.n_chunks(), 2);
-        let plans = plan_run_devices(Scheme::So2dr, &dc, &devs, 32, 8, 4);
+        let plans =
+            plan_run_devices(Scheme::So2dr, &dc, &devs, StencilKind::Box { radius: 1 }, 32, 8, 4);
         let buf_rows =
             PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
         let ops = flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows);
@@ -727,7 +728,8 @@ mod trace_tests {
     fn tracing_does_not_perturb_the_report() {
         let dc = Decomposition::new(38400, 38400, 4, 1);
         let devs = DeviceAssignment::contiguous(dc.n_chunks(), 2);
-        let plans = plan_run_devices(Scheme::So2dr, &dc, &devs, 32, 8, 4);
+        let plans =
+            plan_run_devices(Scheme::So2dr, &dc, &devs, StencilKind::Box { radius: 1 }, 32, 8, 4);
         let buf_rows =
             PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
         let ops = flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows);

@@ -46,7 +46,7 @@
 //! chain FIFO across epoch boundaries instead of through host `DtoH →
 //! HtoD` edges.
 
-use crate::chunking::plan::{resident_pass_sequences, ChunkOp, EpochPlan, Scheme};
+use crate::chunking::plan::{ChunkOp, EpochPlan, Scheme};
 use crate::core::Rect;
 use crate::stencil::StencilKind;
 use crate::transfer::CodecKind;
@@ -190,7 +190,8 @@ pub fn lane_label(stream: usize, n_strm: usize, overlap: bool) -> (usize, String
 /// allocates the whole grid once and is exempt from per-epoch transfers.
 ///
 /// Staged epochs are emitted chunk-major. Resident epochs are emitted in
-/// their execution passes ([`resident_pass_sequences`]) — every chunk's
+/// their builder-recorded execution passes
+/// ([`EpochPlan::pass_sequences`]) — every chunk's
 /// arrival + publishes, then every chunk's fetches/kernels/retirement
 /// (1-D plans), with resident tile plans adding a middle pass of column
 /// fetches + row publishes — so a `Fetch` always finds its provider
@@ -229,14 +230,15 @@ pub fn flatten_run_opts(
         let mut this_dtoh: Vec<(Rect, usize)> = Vec::new();
         // Emission order: (chunk index in plan, op range). Resident
         // epochs emit pass-major (every chunk's pass p before any
-        // chunk's pass p + 1): two passes for 1-D plans (phase A /
-        // phase B, as before), three for resident tile plans (column
-        // publishes, column fetches + row publishes, row fetches +
-        // kernels + retirement), so every fetch finds its provider
-        // already registered even when the publisher is a later chunk.
+        // chunk's pass p + 1), read from the builder-recorded
+        // `pass_bounds`: two passes for 1-D plans (phase A / phase B,
+        // as before), three for resident tile plans (column publishes,
+        // column fetches + row publishes, row fetches + kernels +
+        // retirement), so every fetch finds its provider already
+        // registered even when the publisher is a later chunk.
         let mut sequences: Vec<(usize, std::ops::Range<usize>)> = Vec::new();
         if plan.resident {
-            sequences.extend(resident_pass_sequences(plan).into_iter().flatten());
+            sequences.extend(plan.pass_sequences().into_iter().flatten());
         } else {
             for (ci, cp) in plan.chunks.iter().enumerate() {
                 sequences.push((ci, 0..cp.ops.len()));
@@ -389,6 +391,13 @@ pub fn flatten_run_opts(
                 }
                 deps.sort_unstable();
                 deps.dedup();
+                // Kernels bill at the op's own recorded stencil kind —
+                // plans in a multi-stencil sequence may differ from the
+                // run-level default `kind`.
+                let stencil = match op {
+                    ChunkOp::Kernel(inv) => inv.kind,
+                    _ => kind,
+                };
                 let (resource, mem_device) = match op {
                     ChunkOp::D2D { src_dev, dst_dev, .. } => {
                         (link_resource(*src_dev, *dst_dev), *dst_dev)
@@ -432,7 +441,7 @@ pub fn flatten_run_opts(
                         codec,
                         codec_offloaded: false,
                         areas: vec![],
-                        stencil: kind,
+                        stencil,
                         deps: std::mem::take(&mut deps),
                         alloc_delta: 0,
                         free_delta: 0,
@@ -453,7 +462,7 @@ pub fn flatten_run_opts(
                     codec,
                     codec_offloaded: wants_codec,
                     areas,
-                    stencil: kind,
+                    stencil,
                     deps,
                     alloc_delta,
                     free_delta,
@@ -498,7 +507,7 @@ mod tests {
 
     fn setup(scheme: Scheme) -> (Decomposition, Vec<SimOp>) {
         let dc = Decomposition::new(240, 64, 4, 1);
-        let plans = plan_run(scheme, &dc, 12, 6, 2);
+        let plans = plan_run(scheme, &dc, StencilKind::Box { radius: 1 }, 12, 6, 2);
         let buf_rows = crate::coordinator::PlanExecutor::<
             crate::coordinator::HostBackend<crate::stencil::NaiveEngine>,
         >::buffer_rows(&dc, &plans);
@@ -618,7 +627,7 @@ mod device_tests {
     fn setup(scheme: Scheme, n_dev: usize) -> Vec<SimOp> {
         let dc = Decomposition::new(240, 64, 4, 1);
         let devs = DeviceAssignment::contiguous(4, n_dev);
-        let plans = plan_run_devices(scheme, &dc, &devs, 12, 6, 2);
+        let plans = plan_run_devices(scheme, &dc, &devs, StencilKind::Box { radius: 1 }, 12, 6, 2);
         let buf_rows = crate::coordinator::PlanExecutor::<
             crate::coordinator::HostBackend<crate::stencil::NaiveEngine>,
         >::buffer_rows(&dc, &plans);
@@ -699,7 +708,8 @@ mod codec_tests {
     fn setup(mode: CompressMode) -> Vec<SimOp> {
         let dc = Decomposition::new(240, 64, 4, 1);
         let devs = DeviceAssignment::contiguous(4, 2);
-        let mut plans = plan_run_devices(Scheme::So2dr, &dc, &devs, 12, 6, 2);
+        let mut plans =
+            plan_run_devices(Scheme::So2dr, &dc, &devs, StencilKind::Box { radius: 1 }, 12, 6, 2);
         apply_codec_policy(&mut plans, mode);
         let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
         flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows)
@@ -756,7 +766,8 @@ mod codec_tests {
     fn overlap_off_reproduces_the_legacy_additive_layout() {
         let dc = Decomposition::new(240, 64, 4, 1);
         let devs = DeviceAssignment::contiguous(4, 2);
-        let mut plans = plan_run_devices(Scheme::So2dr, &dc, &devs, 12, 6, 2);
+        let mut plans =
+            plan_run_devices(Scheme::So2dr, &dc, &devs, StencilKind::Box { radius: 1 }, 12, 6, 2);
         apply_codec_policy(&mut plans, CompressMode::Bf16);
         let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
         let ops = flatten_run_opts(
@@ -804,7 +815,8 @@ mod resident_tests {
         let dc = Decomposition::new(240, 64, 4, 1);
         let devs = DeviceAssignment::contiguous(4, n_dev);
         let k_on = if scheme == Scheme::ResReu { 1 } else { 2 };
-        let (plans, _) = plan_run_resident(scheme, &dc, &devs, 18, 6, k_on, cfg);
+        let (plans, _) =
+            plan_run_resident(scheme, &dc, &devs, StencilKind::Box { radius: 1 }, 18, 6, k_on, cfg);
         let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
         let ops = flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, 3, buf_rows);
         (plans, ops)
@@ -925,7 +937,9 @@ mod tile_tests {
     fn setup(n_dev: usize) -> (Decomposition2d, Vec<SimOp>) {
         let dc = Decomposition2d::try_new(120, 96, 2, 2, 1).unwrap();
         let devs = DeviceAssignment::contiguous(4, n_dev);
-        let plans = plan_run_tiles(Scheme::So2dr, &dc, &devs, 12, 6, 2).unwrap();
+        let plans =
+            plan_run_tiles(Scheme::So2dr, &dc, &devs, StencilKind::Box { radius: 1 }, 12, 6, 2)
+                .unwrap();
         let s_max = plans.iter().map(|p| p.steps).max().unwrap();
         let ops =
             flatten_run_sized(&plans, StencilKind::Box { radius: 1 }, 3, dc.arena_bytes(s_max));
@@ -996,8 +1010,17 @@ mod resident_tile_tests {
     ) -> (Vec<crate::chunking::EpochPlan>, Vec<SimOp>) {
         let dc = Decomposition2d::try_new(120, 96, 2, 2, 1).unwrap();
         let devs = DeviceAssignment::contiguous(4, n_dev);
-        let (plans, _) =
-            plan_run_resident_tiles(Scheme::So2dr, &dc, &devs, 18, 6, 2, cfg).unwrap();
+        let (plans, _) = plan_run_resident_tiles(
+            Scheme::So2dr,
+            &dc,
+            &devs,
+            StencilKind::Box { radius: 1 },
+            18,
+            6,
+            2,
+            cfg,
+        )
+        .unwrap();
         let s_max = plans.iter().map(|p| p.steps).max().unwrap();
         let ops =
             flatten_run_sized(&plans, StencilKind::Box { radius: 1 }, 3, dc.arena_bytes(s_max));
@@ -1122,7 +1145,8 @@ mod lane_label_tests {
     fn labels_agree_with_emitted_streams() {
         let dc = Decomposition::new(512, 512, 4, 1);
         let devs = DeviceAssignment::contiguous(dc.n_chunks(), 2);
-        let plans = plan_run_devices(Scheme::So2dr, &dc, &devs, 8, 4, 2);
+        let plans =
+            plan_run_devices(Scheme::So2dr, &dc, &devs, StencilKind::Box { radius: 1 }, 8, 4, 2);
         let n_strm = 3;
         let buf_rows =
             PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);

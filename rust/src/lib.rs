@@ -11,15 +11,37 @@
 //!   device (DES) for paper-scale performance studies, and a PJRT runtime
 //!   that executes AOT-compiled chunk programs for real numerics.
 //!   - **Multi-device sharding:** epoch plans carry a chunk→device
-//!     assignment ([`chunking::DeviceAssignment`], contiguous blocks);
-//!     region shares that cross a device boundary become peer-to-peer
-//!     halo exchanges (`ChunkOp::D2D`). Both interpreters honor it: the
+//!     assignment ([`chunking::DeviceAssignment`]: contiguous blocks for
+//!     row bands; whole tile rows per device for tile grids
+//!     ([`chunking::DeviceAssignment::block_grid`]), so east/west bands
+//!     never cross the link); region shares that cross a device boundary
+//!     become peer-to-peer halo exchanges (`ChunkOp::D2D`). Both interpreters honor it: the
 //!     real-numerics executor runs per-device arenas + sharing buffers
 //!     (bit-exact vs. the reference at every device count), and the DES
 //!     models per-device PCIe/copy/kernel resources plus an inter-device
 //!     link channel (`MachineSpec::bw_link`, `--d2d-gbps`). Known
 //!     simplifications: homogeneous devices, one directed link per
 //!     adjacent pair.
+//!   - **Self-describing plan IR:** builders record what they know;
+//!     interpreters re-derive nothing. Every
+//!     [`chunking::plan::EpochPlan`] carries its scheme, its
+//!     [`StencilKind`] and its epoch geometry; every per-chunk plan
+//!     carries builder-recorded pass boundaries
+//!     ([`chunking::plan::ChunkEpochPlan::pass_bounds`]); every kernel
+//!     op carries the kind it fuses, so mixed-kind plan sequences
+//!     execute correctly. The executors, the flattener/DES and the
+//!     codec post-pass consume those fields directly — the structural
+//!     detectors ([`chunking::plan::resident_pass_bounds`],
+//!     [`chunking::plan::phase_a_len`]) survive only as debug-assert
+//!     cross-checks on the builders. Run-time tile geometry flows
+//!     through one hierarchical [`chunking::TilingConfig`] (`--chunks` /
+//!     `--chunks-x` / `--chunks-y`), the autotuner prices 2-D tilings
+//!     with a per-axis halo cost model next to row bands, and the
+//!     multi-stencil pipeline planner
+//!     ([`chunking::plan::plan_pipeline_resident`]) chains resident
+//!     arenas across segment boundaries: each chunk is transferred HtoD
+//!     once for the whole pipeline while the stencil kind — radius
+//!     included — changes under the resident data.
 //!   - **Resident execution model** (`--resident {off,auto,force}`):
 //!     epochs no longer synchronize through the host. The residency
 //!     planner ([`chunking::plan::plan_run_resident`]) emits one
@@ -108,13 +130,15 @@
 //!        *before* its kernels (bands are epoch-start data); `D2D` link
 //!        hops bridge the tile→device assignment's shard boundaries;
 //!     4. *degenerate tilings are the 1-D plans*: `chunks_x == 1`
-//!        reproduces the row-band epoch op-for-op (locked by
-//!        `tile_plans_degenerate_to_row_plans`), `chunks_y == 1` is its
-//!        transpose, and bit-exactness vs `reference_run` holds across
-//!        tilings x device counts x lossless codecs (randomized
-//!        differential suite); unsupported compositions (ResReu or
-//!        in-core tiling) are rejected at plan time with typed errors
-//!        rather than silently mis-planned.
+//!        reproduces the row-band epoch op-for-op for both sharing
+//!        schemes (locked by `tile_plans_degenerate_to_row_plans` and
+//!        `resreu_tile_plans_degenerate_to_row_plans`), `chunks_y == 1`
+//!        is its transpose, and bit-exactness vs `reference_run` holds
+//!        across tilings x device counts x lossless codecs (randomized
+//!        differential suite); the plan-time rejection matrix has
+//!        shrunk to the in-core scheme alone — ResReu tiles as a
+//!        product of per-axis skews — and the shrink is locked by
+//!        table tests so a stale rejection cannot silently return.
 //!   - **Resident tile arenas** (`--resident` × `--decomp tiles`): the
 //!     residency model composes with the 2-D decomposition through a
 //!     rect-based settled/fetch algebra
@@ -135,11 +159,11 @@
 //!        through the column fetches (two band hops, exactly as the
 //!        staged tile scheme's corners cascade through its row bands;
 //!        no dedicated corner ops). Both interpreters execute the
-//!        rounds as epoch-wide passes
-//!        ([`chunking::plan::resident_pass_bounds`]: arrival + column
-//!        publishes / column fetches + row publishes / row fetches +
-//!        kernels + retirement), because bands flow both up and down
-//!        the row-major tile order along both axes;
+//!        rounds as epoch-wide passes (the builder-recorded
+//!        [`chunking::plan::ChunkEpochPlan::pass_bounds`]: arrival +
+//!        column publishes / column fetches + row publishes / row
+//!        fetches + kernels + retirement), because bands flow both up
+//!        and down the row-major tile order along both axes;
 //!     3. *spill/re-fetch semantics and capacity honesty*: the
 //!        per-device capacity model charges every tile arena at the
 //!        uniform `s_max` shape plus a sharing-band slack
@@ -205,10 +229,10 @@
 //!     2. *synchronization points mirror the plan's data flow*: workers
 //!        rendezvous only where the plan itself has cross-device edges —
 //!        D2D/region-share publishes block their readers (a blocking hub
-//!        with a deadlock detector), resident pass boundaries
-//!        ([`chunking::plan::resident_pass_bounds`]) are epoch-wide
-//!        barriers, and the host grid is a lock (staged epochs read a
-//!        shared immutable snapshot instead);
+//!        with a deadlock detector), the plan's recorded pass
+//!        boundaries ([`chunking::plan::ChunkEpochPlan::pass_bounds`])
+//!        are epoch-wide barriers, and the host grid is a lock (staged
+//!        epochs read a shared immutable snapshot instead);
 //!     3. *the oracle stays sequential*: `reference_run` and the
 //!        `NaiveEngine` are untouched — the parallel executor is
 //!        validated against the same reference as the sequential one,

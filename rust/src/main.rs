@@ -12,7 +12,7 @@
 //! Run `so2dr <cmd> --help` for the options of each command.
 
 use anyhow::{bail, Context, Result};
-use so2dr::chunking::{DecompMode, ResidencyConfig, ResidentMode, Scheme};
+use so2dr::chunking::{DecompMode, ResidencyConfig, ResidentMode, Scheme, TilingConfig};
 use so2dr::config::RunConfig;
 use so2dr::coordinator::{reference_run, run_scheme, HostBackend, KernelBackend};
 use so2dr::gpu::MachineSpec;
@@ -271,22 +271,27 @@ fn cmd_run(args: &Args) -> Result<()> {
             cfg.threads,
             trace_on,
         )?,
-        DecompMode::Tiles => so2dr::coordinator::run_scheme_tiles_threads_traced(
-            cfg.scheme,
-            &initial,
-            cfg.kind,
-            cfg.n,
-            cfg.chunks_y,
-            cfg.chunks_x,
-            cfg.devices,
-            cfg.s_tb,
-            cfg.k_on,
-            backend.as_mut(),
-            &resident_cfg,
-            cfg.compress,
-            cfg.threads,
-            trace_on,
-        )?,
+        DecompMode::Tiles => {
+            // `cfg.tiling()` is the one shape value the executor and
+            // the DES pricing below both consume.
+            let tiling = cfg.tiling();
+            so2dr::coordinator::run_scheme_tiles_threads_traced(
+                cfg.scheme,
+                &initial,
+                cfg.kind,
+                cfg.n,
+                tiling.tiles_y,
+                tiling.tiles_x,
+                cfg.devices,
+                cfg.s_tb,
+                cfg.k_on,
+                backend.as_mut(),
+                &resident_cfg,
+                cfg.compress,
+                cfg.threads,
+                trace_on,
+            )?
+        }
     };
     let wall = t0.elapsed().as_secs_f64();
     let s = &out.stats;
@@ -346,11 +351,12 @@ fn cmd_run(args: &Args) -> Result<()> {
             DecompMode::Tiles => {
                 so2dr::figures::simulate_resident_tiles_grid_devices_overlap(
                     &machine,
+                    cfg.scheme,
                     cfg.kind,
                     cfg.rows,
                     cfg.cols,
-                    cfg.chunks_y,
-                    cfg.chunks_x,
+                    cfg.tiling().tiles_y,
+                    cfg.tiling().tiles_x,
                     cfg.devices,
                     cfg.s_tb,
                     cfg.k_on,
@@ -451,30 +457,75 @@ fn cmd_validate() -> Result<()> {
 
 fn cmd_autotune(args: &Args) -> Result<()> {
     if args.help() {
-        println!("so2dr autotune [--kind K] [--sz N] [--n N] [--machine M] [--decomp rows]");
+        println!("so2dr autotune [--kind K] [--sz N] [--n N] [--machine M] [--decomp rows|tiles]");
         return Ok(());
     }
-    // The §IV-C heuristic and its DES ranking model 1-D row bands
-    // (W_halo = 2r * row bytes, chunk height sz/d); silently accepting
-    // --decomp tiles here would rank configurations with the wrong halo
-    // model, so the composition is rejected with a typed error instead.
-    if let Some(v) = args.get("decomp") {
-        let mode =
-            DecompMode::parse(v).with_context(|| format!("bad --decomp {v:?} (rows|tiles)"))?;
-        if mode == DecompMode::Tiles {
-            bail!(
-                "autotune ranks 1-D row-band configurations only: the §IV-C heuristic \
-                 models row bands (W_halo = 2r per grid row), not tile perimeters. \
-                 Drop --decomp tiles here and size tilings with \
-                 `so2dr simulate --decomp tiles --chunks-x N --chunks-y M`; tile-aware \
-                 autotuning is a ROADMAP follow-on"
-            );
+    let decomp = match args.get("decomp") {
+        Some(v) => {
+            DecompMode::parse(v).with_context(|| format!("bad --decomp {v:?} (rows|tiles)"))?
         }
-    }
+        None => DecompMode::Rows,
+    };
     let machine = machine_of(args)?;
     let kind = StencilKind::parse(args.get("kind").unwrap_or("box2d1r")).context("bad kind")?;
     let sz = args.usize_or("sz", so2dr::figures::SZ_OOC)?;
     let n = args.usize_or("n", so2dr::figures::N_STEPS)?;
+    if decomp == DecompMode::Tiles {
+        // Tile-aware sweep: rank (tiling, S_TB) pairs under the 2-D
+        // perimeter halo model and DES pricing — the same candidates
+        // `simulate --decomp tiles --chunks-x/--chunks-y` prices one at
+        // a time.
+        let tilings = [
+            TilingConfig::rows(4),
+            TilingConfig::rows(8),
+            TilingConfig::grid(2, 2),
+            TilingConfig::grid(4, 2),
+            TilingConfig::grid(2, 4),
+            TilingConfig::grid(4, 4),
+            TilingConfig::grid(8, 4),
+        ];
+        let cands = so2dr::params::autotune_tiles(
+            &machine,
+            kind,
+            sz,
+            n,
+            so2dr::figures::K_ON,
+            so2dr::figures::N_STRM,
+            &tilings,
+            &[40, 80, 160],
+        );
+        let mut t = Table::new(vec![
+            "tiles",
+            "S_TB",
+            "feasibility",
+            "kernel/transfer",
+            "halo/epoch",
+            "makespan (s)",
+        ]);
+        for c in &cands {
+            t.row(vec![
+                format!("{}x{}", c.tiling.tiles_y, c.tiling.tiles_x),
+                c.s_tb.to_string(),
+                format!("{:?}", c.feasibility),
+                format!("{:.2}", c.ratio),
+                fmt_bytes(c.halo_bytes),
+                c.makespan.map(|m| format!("{m:.3}")).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        print!("{t}");
+        if let Some(best) =
+            cands.iter().find(|c| c.feasibility == so2dr::params::Feasibility::Ok)
+        {
+            println!(
+                "best: tiles={}x{} S_TB={} (perimeter halo {}/epoch)",
+                best.tiling.tiles_y,
+                best.tiling.tiles_x,
+                best.s_tb,
+                fmt_bytes(best.halo_bytes),
+            );
+        }
+        return Ok(());
+    }
     let cands = so2dr::params::autotune(
         &machine,
         kind,
@@ -548,11 +599,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         .context("bad --decomp (rows|tiles)")?;
     let overlap = parse_overlap(args.get("overlap").unwrap_or("on"))?;
     if decomp == DecompMode::Tiles {
-        // Tile pricing path: plan-time validation (feasibility, devices)
-        // lives in the planner; unsupported schemes are rejected here.
-        if scheme != Scheme::So2dr {
-            bail!("--decomp tiles supports --scheme so2dr only (use --decomp rows)");
-        }
+        // Tile pricing path: plan-time validation (scheme support,
+        // feasibility, devices) lives in the planner — both out-of-core
+        // schemes tile; the in-core scheme comes back as its typed error.
         let resident_cfg = match resident {
             ResidentMode::Off => ResidencyConfig::off(),
             ResidentMode::Force => ResidencyConfig::force(so2dr::figures::N_STRM),
@@ -564,6 +613,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             let (rep, summary, rec) =
                 so2dr::figures::simulate_traced_tiles_grid_devices_overlap(
                     &machine,
+                    scheme,
                     kind,
                     sz,
                     sz,
@@ -582,6 +632,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         } else {
             let (rep, summary) = so2dr::figures::simulate_resident_tiles_grid_devices_overlap(
                 &machine,
+                scheme,
                 kind,
                 sz,
                 sz,

@@ -17,12 +17,12 @@
 //! suboptimal points, so `autotune` additionally prices each candidate on
 //! the simulator — exactly what the paper does manually in §V-B.
 
-use crate::chunking::plan::{plan_run, Scheme};
-use crate::chunking::{Decomposition, DeviceAssignment};
+use crate::chunking::plan::{plan_run, plan_run_tiles, Scheme};
+use crate::chunking::{Decomposition, Decomposition2d, DeviceAssignment, TilingConfig};
 use crate::coordinator::{HostBackend, PlanExecutor};
 use crate::gpu::cost::{CostModel, DegenerateMachineError};
 use crate::gpu::des::simulate;
-use crate::gpu::flatten::flatten_run;
+use crate::gpu::flatten::{flatten_run, flatten_run_opts, FlattenOpts};
 use crate::gpu::MachineSpec;
 use crate::stencil::{NaiveEngine, StencilKind};
 use std::collections::HashMap;
@@ -124,6 +124,217 @@ pub fn kernel_transfer_ratio(
     kernel / transfer
 }
 
+/// 2-D tile analogue of [`check_feasible`]. The structural clauses use
+/// the exact tile geometry — the skirt must fit the smallest tile on
+/// *both* axes (per-axis `W_halo * S_TB <= D_chk`), and there must be
+/// more tiles than streams — and the memory clause prices the uniform
+/// double-buffered tile arena the executor actually allocates
+/// ([`Decomposition2d::arena_bytes_for`]) instead of the 1-D row-band
+/// closed form. A tiling the grid cannot host at all (zero or
+/// oversubscribed tile counts) reports under the geometry clause
+/// `HaloTooLarge` as well.
+pub fn check_feasible_tiles(
+    machine: &MachineSpec,
+    kind: StencilKind,
+    sz: usize,
+    tiling: TilingConfig,
+    s_tb: usize,
+    n_strm: usize,
+) -> Feasibility {
+    let Ok(dc) = Decomposition2d::try_new(sz, sz, tiling.tiles_y, tiling.tiles_x, kind.radius())
+    else {
+        return Feasibility::HaloTooLarge;
+    };
+    if !dc.feasible(s_tb) {
+        return Feasibility::HaloTooLarge;
+    }
+    if dc.n_tiles() <= n_strm {
+        return Feasibility::TooFewChunks;
+    }
+    // `arena_bytes_for` already counts the in/out double buffer — the
+    // row-band model's `N_buf = 2` factor.
+    let required = dc.arena_bytes_for(Scheme::So2dr, s_tb) * n_strm as u64;
+    if required > machine.c_dmem {
+        return Feasibility::Memory(required, machine.c_dmem);
+    }
+    Feasibility::Ok
+}
+
+/// Tile-model kernel-to-transfer ratio: one tile's fused-epoch kernel
+/// time against its HtoD plus its share of the per-epoch perimeter halo
+/// ([`Decomposition2d::halo_bytes_per_epoch`]) — the 2-D replacement
+/// for the row-band `W_halo = 2r * row` transfer term. Geometrically
+/// infeasible configurations ratio as 0 (pure transfer).
+pub fn tile_kernel_transfer_ratio(
+    machine: &MachineSpec,
+    kind: StencilKind,
+    sz: usize,
+    tiling: TilingConfig,
+    s_tb: usize,
+) -> f64 {
+    let Ok(dc) = Decomposition2d::try_new(sz, sz, tiling.tiles_y, tiling.tiles_x, kind.radius())
+    else {
+        return 0.0;
+    };
+    if !dc.feasible(s_tb) {
+        return 0.0;
+    }
+    let cost = CostModel::new(machine.clone());
+    let area = ((sz / tiling.tiles_y) * (sz / tiling.tiles_x)) as u64;
+    let kernel = (s_tb as f64 / 4.0) * cost.kernel_time(kind, &[area; 4]);
+    let halo_share = dc.halo_bytes_per_epoch(s_tb) / dc.n_tiles() as u64;
+    let transfer = cost.htod_time(area * 4 + halo_share);
+    kernel / transfer
+}
+
+/// A ranked 2-D tiling configuration ([`autotune_tiles`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TileCandidate {
+    pub tiling: TilingConfig,
+    pub s_tb: usize,
+    pub feasibility: Feasibility,
+    /// Predicted kernel/transfer ratio under the perimeter halo model.
+    pub ratio: f64,
+    /// Per-epoch north+west halo read volume in bytes — the
+    /// O(perimeter) traffic this tiling trades against the 1-D
+    /// row-band halo (0 for geometrically infeasible configurations).
+    pub halo_bytes: u64,
+    /// DES-predicted makespan in seconds (filled by [`autotune_tiles`]).
+    pub makespan: Option<f64>,
+}
+
+/// Enumerate `(tiling, S_TB)` candidates and tag feasibility under the
+/// 2-D perimeter model.
+pub fn tile_candidates(
+    machine: &MachineSpec,
+    kind: StencilKind,
+    sz: usize,
+    n_strm: usize,
+    tilings: &[TilingConfig],
+    s_tbs: &[usize],
+) -> Vec<TileCandidate> {
+    let mut out = Vec::new();
+    for &tiling in tilings {
+        for &s_tb in s_tbs {
+            let feasibility = check_feasible_tiles(machine, kind, sz, tiling, s_tb, n_strm);
+            let ratio = tile_kernel_transfer_ratio(machine, kind, sz, tiling, s_tb);
+            let halo_bytes =
+                Decomposition2d::try_new(sz, sz, tiling.tiles_y, tiling.tiles_x, kind.radius())
+                    .ok()
+                    .filter(|dc| dc.feasible(s_tb))
+                    .map(|dc| dc.halo_bytes_per_epoch(s_tb))
+                    .unwrap_or(0);
+            out.push(TileCandidate {
+                tiling,
+                s_tb,
+                feasibility,
+                ratio,
+                halo_bytes,
+                makespan: None,
+            });
+        }
+    }
+    out
+}
+
+/// DES-predicted makespan of one tile configuration: plan over the 2-D
+/// decomposition, flatten with the tile-shaped arena, replay. Plan-time
+/// rejections (a tiling the planner refuses) come back as `Ok(None)` so
+/// a sweep ranks them unpredicted; only a degenerate machine spec is an
+/// error.
+#[allow(clippy::too_many_arguments)]
+pub fn predict_tiles_checked(
+    machine: &MachineSpec,
+    kind: StencilKind,
+    sz: usize,
+    tiling: TilingConfig,
+    s_tb: usize,
+    k_on: usize,
+    n: usize,
+    n_strm: usize,
+) -> Result<Option<f64>, DegenerateMachineError> {
+    let Ok(dc) = Decomposition2d::try_new(sz, sz, tiling.tiles_y, tiling.tiles_x, kind.radius())
+    else {
+        return Ok(None);
+    };
+    let devs = DeviceAssignment::single(dc.n_tiles());
+    let Ok(plans) = plan_run_tiles(Scheme::So2dr, &dc, &devs, kind, n, s_tb, k_on) else {
+        return Ok(None);
+    };
+    let s_max = plans.iter().map(|p| p.steps).max().unwrap_or(1);
+    let ops = flatten_run_opts(
+        &plans,
+        kind,
+        n_strm,
+        dc.arena_bytes_for(Scheme::So2dr, s_max),
+        FlattenOpts { overlap: true },
+    );
+    let cost = CostModel::new(machine.clone());
+    simulate(&ops, &cost, n_strm).map(|rep| Some(rep.makespan))
+}
+
+/// Sort tile candidates best-first by predicted makespan; same
+/// `f64::total_cmp` policy as `rank_candidates`.
+fn rank_tile_candidates(cands: &mut [TileCandidate]) {
+    cands.sort_by(|a, b| {
+        let ka = a.makespan.unwrap_or(f64::INFINITY);
+        let kb = b.makespan.unwrap_or(f64::INFINITY);
+        ka.total_cmp(&kb)
+    });
+}
+
+/// Rank feasible `(tiling, S_TB)` candidates by simulated makespan
+/// (best first) — the tile-decomposition counterpart of [`autotune`].
+/// Degenerate machine specs rank +inf, exactly like the row sweep.
+#[allow(clippy::too_many_arguments)]
+pub fn autotune_tiles(
+    machine: &MachineSpec,
+    kind: StencilKind,
+    sz: usize,
+    n: usize,
+    k_on: usize,
+    n_strm: usize,
+    tilings: &[TilingConfig],
+    s_tbs: &[usize],
+) -> Vec<TileCandidate> {
+    let mut cands = tile_candidates(machine, kind, sz, n_strm, tilings, s_tbs);
+    for c in &mut cands {
+        if c.feasibility == Feasibility::Ok {
+            c.makespan =
+                predict_tiles_checked(machine, kind, sz, c.tiling, c.s_tb, k_on, n, n_strm)
+                    .unwrap_or(Some(f64::INFINITY));
+        }
+    }
+    rank_tile_candidates(&mut cands);
+    cands
+}
+
+/// [`autotune_tiles`] with degenerate machine specs surfaced as the
+/// typed [`DegenerateMachineError`] — the sweep the memo cache stores
+/// (same error-caching policy as [`autotune_checked`]).
+#[allow(clippy::too_many_arguments)]
+pub fn autotune_tiles_checked(
+    machine: &MachineSpec,
+    kind: StencilKind,
+    sz: usize,
+    n: usize,
+    k_on: usize,
+    n_strm: usize,
+    tilings: &[TilingConfig],
+    s_tbs: &[usize],
+) -> Result<Vec<TileCandidate>, DegenerateMachineError> {
+    machine.validate()?;
+    let mut cands = tile_candidates(machine, kind, sz, n_strm, tilings, s_tbs);
+    for c in &mut cands {
+        if c.feasibility == Feasibility::Ok {
+            c.makespan =
+                predict_tiles_checked(machine, kind, sz, c.tiling, c.s_tb, k_on, n, n_strm)?;
+        }
+    }
+    rank_tile_candidates(&mut cands);
+    Ok(cands)
+}
+
 /// A ranked run-time configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Candidate {
@@ -174,7 +385,7 @@ pub fn predict_checked(
     n_strm: usize,
 ) -> Result<f64, DegenerateMachineError> {
     let dc = Decomposition::new(sz, sz, d, kind.radius());
-    let plans = plan_run(scheme, &dc, n, s_tb, k_on);
+    let plans = plan_run(scheme, &dc, kind, n, s_tb, k_on);
     let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
     let ops = flatten_run(&plans, &dc, kind, n_strm, buf_rows);
     let cost = CostModel::new(machine.clone());
@@ -276,11 +487,15 @@ pub fn autotune_checked(
 
 /// Memoization key of one autotune sweep: the stencil kind, the job
 /// geometry (`sz`, `n`), the schedule shape (`k_on`, `n_strm`, the
-/// candidate grids) and the machine's *numeric* identity — every rate,
-/// effectivity, latency and capacity as exact bit patterns (display
-/// name excluded: two specs that price identically are the same
-/// machine). Bit-pattern keying means a what-if override as small as
-/// one ULP of bandwidth is a different machine, never a stale hit.
+/// candidate grids), the *decomposition geometry* of the sweep (the
+/// row-band `d` candidates in `ds`, the 2-D tilings in `tilings` — a
+/// row sweep and a tile sweep over the same numeric parameters rank
+/// with different halo models and must never alias), and the machine's
+/// *numeric* identity — every rate, effectivity, latency and capacity
+/// as exact bit patterns (display name excluded: two specs that price
+/// identically are the same machine). Bit-pattern keying means a
+/// what-if override as small as one ULP of bandwidth is a different
+/// machine, never a stale hit.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 struct MemoKey {
     kind: String,
@@ -289,11 +504,15 @@ struct MemoKey {
     k_on: usize,
     n_strm: usize,
     ds: Vec<usize>,
+    /// `(tiles_y, tiles_x)` candidates of a tile sweep; empty for a
+    /// row-band sweep.
+    tilings: Vec<(usize, usize)>,
     s_tbs: Vec<usize>,
     machine: [u64; 16],
 }
 
 impl MemoKey {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         machine: &MachineSpec,
         kind: StencilKind,
@@ -302,6 +521,7 @@ impl MemoKey {
         k_on: usize,
         n_strm: usize,
         ds: &[usize],
+        tilings: &[TilingConfig],
         s_tbs: &[usize],
     ) -> Self {
         let m = machine;
@@ -312,6 +532,7 @@ impl MemoKey {
             k_on,
             n_strm,
             ds: ds.to_vec(),
+            tilings: tilings.iter().map(|t| (t.tiles_y, t.tiles_x)).collect(),
             s_tbs: s_tbs.to_vec(),
             machine: [
                 m.bw_htod.to_bits(),
@@ -353,6 +574,9 @@ impl MemoKey {
 #[derive(Debug, Default)]
 pub struct AutotuneMemo {
     map: HashMap<MemoKey, Result<Vec<Candidate>, DegenerateMachineError>>,
+    /// Tile sweeps, same key type (geometry disambiguates) but a
+    /// tile-candidate table as the value.
+    tile_map: HashMap<MemoKey, Result<Vec<TileCandidate>, DegenerateMachineError>>,
     hits: u64,
     misses: u64,
 }
@@ -377,7 +601,7 @@ impl AutotuneMemo {
         ds: &[usize],
         s_tbs: &[usize],
     ) -> Result<Vec<Candidate>, DegenerateMachineError> {
-        let key = MemoKey::new(machine, kind, sz, n, k_on, n_strm, ds, s_tbs);
+        let key = MemoKey::new(machine, kind, sz, n, k_on, n_strm, ds, &[], s_tbs);
         if let Some(cached) = self.map.get(&key) {
             self.hits += 1;
             return cached.clone();
@@ -385,6 +609,32 @@ impl AutotuneMemo {
         self.misses += 1;
         let fresh = autotune_checked(machine, kind, sz, n, k_on, n_strm, ds, s_tbs);
         self.map.insert(key, fresh.clone());
+        fresh
+    }
+
+    /// Memoized [`autotune_tiles_checked`]: the tile-decomposition
+    /// sweep, cached under a key whose geometry (the tilings) can never
+    /// alias a row-band sweep's.
+    #[allow(clippy::too_many_arguments)]
+    pub fn autotune_tiles(
+        &mut self,
+        machine: &MachineSpec,
+        kind: StencilKind,
+        sz: usize,
+        n: usize,
+        k_on: usize,
+        n_strm: usize,
+        tilings: &[TilingConfig],
+        s_tbs: &[usize],
+    ) -> Result<Vec<TileCandidate>, DegenerateMachineError> {
+        let key = MemoKey::new(machine, kind, sz, n, k_on, n_strm, &[], tilings, s_tbs);
+        if let Some(cached) = self.tile_map.get(&key) {
+            self.hits += 1;
+            return cached.clone();
+        }
+        self.misses += 1;
+        let fresh = autotune_tiles_checked(machine, kind, sz, n, k_on, n_strm, tilings, s_tbs);
+        self.tile_map.insert(key, fresh.clone());
         fresh
     }
 
@@ -398,13 +648,13 @@ impl AutotuneMemo {
         self.misses
     }
 
-    /// Distinct sweeps stored.
+    /// Distinct sweeps stored (row-band and tile sweeps together).
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.map.len() + self.tile_map.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.map.is_empty() && self.tile_map.is_empty()
     }
 
     /// Fraction of lookups served from the cache (0 when none yet).
@@ -611,6 +861,90 @@ mod tests {
         memo.autotune(&m, StencilKind::Box { radius: 1 }, 512, 16, 2, 3, &ds, &s_tbs).unwrap();
         assert_eq!((memo.hits(), memo.misses()), (1, 4));
         assert!((memo.hit_rate() - 0.2).abs() < 1e-12);
+    }
+
+    /// Collision regression for the decomposition geometry in the memo
+    /// key: a row-band sweep over `d = 4` and a tile sweep over the
+    /// op-for-op equivalent 4x1 tiling share every numeric parameter
+    /// but rank with different halo models — they must be distinct
+    /// sweeps, as must two tilings with the same tile count.
+    #[test]
+    fn memo_keys_include_decomposition_geometry() {
+        let m = MachineSpec::rtx3080();
+        let kind = StencilKind::Box { radius: 1 };
+        let s_tbs = [2usize, 4];
+        let mut memo = AutotuneMemo::new();
+        memo.autotune(&m, kind, 512, 16, 2, 3, &[4], &s_tbs).unwrap();
+        memo.autotune_tiles(&m, kind, 512, 16, 2, 3, &[TilingConfig::rows(4)], &s_tbs).unwrap();
+        assert_eq!((memo.hits(), memo.misses()), (0, 2), "rows vs tiles geometry must not alias");
+        memo.autotune_tiles(&m, kind, 512, 16, 2, 3, &[TilingConfig::grid(2, 2)], &s_tbs)
+            .unwrap();
+        assert_eq!((memo.hits(), memo.misses()), (0, 3), "4x1 and 2x2 are different geometry");
+        // Repeats of each shape hit.
+        memo.autotune_tiles(&m, kind, 512, 16, 2, 3, &[TilingConfig::grid(2, 2)], &s_tbs)
+            .unwrap();
+        memo.autotune(&m, kind, 512, 16, 2, 3, &[4], &s_tbs).unwrap();
+        assert_eq!((memo.hits(), memo.misses()), (2, 3));
+        assert_eq!(memo.len(), 3);
+    }
+
+    /// Tile-sweep cache hits are the stored table unchanged, and a
+    /// degenerate spec stays a typed error through the tile cache too.
+    #[test]
+    fn tile_memo_matches_fresh_sweep_and_keeps_typed_errors() {
+        let m = MachineSpec::rtx3080();
+        let kind = StencilKind::Box { radius: 1 };
+        let tilings = [TilingConfig::grid(2, 2), TilingConfig::rows(4)];
+        let s_tbs = [2usize, 4];
+        let mut memo = AutotuneMemo::new();
+        let first = memo.autotune_tiles(&m, kind, 512, 16, 2, 3, &tilings, &s_tbs).unwrap();
+        let hit = memo.autotune_tiles(&m, kind, 512, 16, 2, 3, &tilings, &s_tbs).unwrap();
+        assert_eq!(hit, first, "hits return the stored table unchanged");
+        let fresh = autotune_tiles_checked(&m, kind, 512, 16, 2, 3, &tilings, &s_tbs).unwrap();
+        assert_eq!(hit.len(), fresh.len());
+        for (h, f) in hit.iter().zip(&fresh) {
+            assert_eq!((h.tiling, h.s_tb, &h.feasibility), (f.tiling, f.s_tb, &f.feasibility));
+            assert_eq!(h.makespan.map(f64::to_bits), f.makespan.map(f64::to_bits));
+        }
+        let mut broken = MachineSpec::rtx3080();
+        broken.bw_htod = 0.0;
+        let err = memo
+            .autotune_tiles(&broken, kind, 512, 16, 2, 3, &tilings, &s_tbs)
+            .expect_err("zero bandwidth is a degenerate spec");
+        assert_eq!(err.field, "bw_htod");
+        let again = memo.autotune_tiles(&broken, kind, 512, 16, 2, 3, &tilings, &s_tbs);
+        assert_eq!(again.expect_err("cached typed error").field, "bw_htod");
+    }
+
+    /// The tile sweep ranks feasible tilings, fills their makespans,
+    /// and prices the perimeter halo below the row-band halo at equal
+    /// chunk count — the lattice cell the 2-D cost model exists for.
+    #[test]
+    fn tile_autotune_ranks_by_perimeter_halo_model() {
+        let m = MachineSpec::rtx3080();
+        let kind = StencilKind::Box { radius: 1 };
+        let tilings =
+            [TilingConfig::rows(4), TilingConfig::grid(2, 2), TilingConfig::grid(256, 256)];
+        let cands = autotune_tiles(&m, kind, 512, 16, 2, 3, &tilings, &[2, 4]);
+        assert_eq!(cands.len(), 6, "every (tiling, s_tb) pair is ranked");
+        let best = &cands[0];
+        assert_eq!(best.feasibility, Feasibility::Ok);
+        assert!(best.makespan.unwrap().is_finite());
+        // 256x256 tiles of a 512 grid are 2x2 cells: the skirt cannot
+        // fit, so both S_TB values report the geometry clause.
+        for c in cands.iter().filter(|c| c.tiling == TilingConfig::grid(256, 256)) {
+            assert_eq!(c.feasibility, Feasibility::HaloTooLarge);
+            assert!(c.makespan.is_none());
+        }
+        // Perimeter vs row-band halo at the same chunk count (4) and
+        // S_TB: the 2x2 tiling reads strictly less halo than 4 bands.
+        let halo_of = |t: TilingConfig, s: usize| {
+            cands.iter().find(|c| c.tiling == t && c.s_tb == s).unwrap().halo_bytes
+        };
+        assert!(
+            halo_of(TilingConfig::grid(2, 2), 4) < halo_of(TilingConfig::rows(4), 4),
+            "2-D perimeter halo must undercut the 1-D row-band halo"
+        );
     }
 
     #[test]

@@ -3,6 +3,8 @@
 pub mod heuristic;
 
 pub use heuristic::{
-    autotune, autotune_checked, candidates, check_feasible, check_feasible_devices, predict,
-    predict_checked, select_target, AutotuneMemo, Candidate, Feasibility, OptimizationTarget,
+    autotune, autotune_checked, autotune_tiles, autotune_tiles_checked, candidates,
+    check_feasible, check_feasible_devices, check_feasible_tiles, predict, predict_checked,
+    predict_tiles_checked, select_target, tile_candidates, tile_kernel_transfer_ratio,
+    AutotuneMemo, Candidate, Feasibility, OptimizationTarget, TileCandidate,
 };

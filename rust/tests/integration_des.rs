@@ -32,7 +32,8 @@ fn flatten_paper(
 ) -> Vec<SimOp> {
     let dc = Decomposition::new(38400, 38400, d, 1);
     let devs = DeviceAssignment::contiguous(d, devices);
-    let plans = plan_run_devices(scheme, &dc, &devs, n, s_tb, k_on);
+    let plans =
+        plan_run_devices(scheme, &dc, &devs, StencilKind::Box { radius: 1 }, n, s_tb, k_on);
     let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
     flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, N_STRM, buf_rows)
 }
@@ -194,7 +195,8 @@ fn flatten_resident_paper(
 ) -> (Vec<SimOp>, ResidencySummary) {
     let dc = Decomposition::new(38400, 38400, d, 1);
     let devs = DeviceAssignment::contiguous(d, devices);
-    let (plans, summary) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, cfg);
+    let (plans, summary) =
+        plan_run_resident(scheme, &dc, &devs, StencilKind::Box { radius: 1 }, n, s_tb, k_on, cfg);
     let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
     (
         flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, N_STRM, buf_rows),
@@ -346,8 +348,17 @@ fn flatten_resident_tiles_paper(
 ) -> (Vec<SimOp>, ResidencySummary) {
     let dc = Decomposition2d::try_new(38400, 38400, chunks_y, chunks_x, 1).unwrap();
     let devs = DeviceAssignment::contiguous(chunks_y * chunks_x, devices);
-    let (plans, summary) =
-        plan_run_resident_tiles(Scheme::So2dr, &dc, &devs, n, s_tb, k_on, cfg).unwrap();
+    let (plans, summary) = plan_run_resident_tiles(
+        Scheme::So2dr,
+        &dc,
+        &devs,
+        StencilKind::Box { radius: 1 },
+        n,
+        s_tb,
+        k_on,
+        cfg,
+    )
+    .unwrap();
     let s_max = plans.iter().map(|p| p.steps).max().unwrap();
     (
         flatten_run_sized(&plans, StencilKind::Box { radius: 1 }, N_STRM, dc.arena_bytes(s_max)),
@@ -459,7 +470,16 @@ fn flatten_compressed_paper(
 ) -> Vec<SimOp> {
     let dc = Decomposition::new(38400, 38400, d, 1);
     let devs = DeviceAssignment::contiguous(d, devices);
-    let (mut plans, _) = plan_run_resident(scheme, &dc, &devs, n, s_tb, k_on, resident);
+    let (mut plans, _) = plan_run_resident(
+        scheme,
+        &dc,
+        &devs,
+        StencilKind::Box { radius: 1 },
+        n,
+        s_tb,
+        k_on,
+        resident,
+    );
     apply_codec_policy(&mut plans, compress);
     let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
     flatten_run(&plans, &dc, StencilKind::Box { radius: 1 }, N_STRM, buf_rows)
@@ -586,8 +606,16 @@ fn overlap_engine_beats_additive_model_on_tagged_transfers() {
     let machine = MachineSpec::rtx3080().with_pcie_gbps(4.0);
     let dc = Decomposition::new(38400, 38400, 4, 1);
     let devs = DeviceAssignment::contiguous(4, 1);
-    let (mut plans, _) =
-        plan_run_resident(Scheme::So2dr, &dc, &devs, 640, 160, 4, &ResidencyConfig::off());
+    let (mut plans, _) = plan_run_resident(
+        Scheme::So2dr,
+        &dc,
+        &devs,
+        StencilKind::Box { radius: 1 },
+        640,
+        160,
+        4,
+        &ResidencyConfig::off(),
+    );
     apply_codec_policy(&mut plans, CompressMode::Lossless);
     let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
     let flat = |overlap: bool| {

@@ -55,8 +55,9 @@ fn prop_transfers_partition_grid() {
         if !dc.feasible(c.steps) {
             return Ok(()); // generator slack can under-shoot; skip
         }
+        let kind = StencilKind::Box { radius: c.radius };
         for scheme in [Scheme::So2dr, Scheme::ResReu] {
-            let plans = plan_run(scheme, &dc, c.steps, c.steps, 2.min(c.steps));
+            let plans = plan_run(scheme, &dc, kind, c.steps, c.steps, 2.min(c.steps));
             let plan = &plans[0];
             for dir in ["htod", "dtoh"] {
                 let mut covered = vec![0u8; c.rows];
@@ -95,8 +96,9 @@ fn prop_rs_causality() {
         if !dc.feasible(c.steps) {
             return Ok(());
         }
+        let kind = StencilKind::Box { radius: c.radius };
         for scheme in [Scheme::So2dr, Scheme::ResReu] {
-            let plans = plan_run(scheme, &dc, c.steps, c.steps, 1);
+            let plans = plan_run(scheme, &dc, kind, c.steps, c.steps, 1);
             let mut written = std::collections::HashSet::new();
             for (_, _, op) in plans[0].iter_ops() {
                 match op {
@@ -171,7 +173,7 @@ fn prop_des_makespan_bounds() {
         }
         let kind = StencilKind::Box { radius: c.radius };
         for scheme in [Scheme::So2dr, Scheme::ResReu] {
-            let plans = plan_run(scheme, &dc, 2 * c.steps, c.steps, 2.min(c.steps));
+            let plans = plan_run(scheme, &dc, kind, 2 * c.steps, c.steps, 2.min(c.steps));
             let buf_rows = PlanExecutor::<HostBackend<NaiveEngine>>::buffer_rows(&dc, &plans);
             let ops = flatten_run(&plans, &dc, kind, 3, buf_rows);
             let n_ops = ops.len();

@@ -11,9 +11,9 @@
 
 use so2dr::chunking::{ResidencyConfig, Scheme};
 use so2dr::coordinator::{
-    reference_run, run_scheme_full, run_scheme_full_threads, run_scheme_full_threads_traced,
-    run_scheme_on, run_scheme_resident, run_scheme_tiles, run_scheme_tiles_threads,
-    run_scheme_tiles_threads_traced, ExecStats, HostBackend,
+    reference_run, run_pipeline_resident, run_scheme_full, run_scheme_full_threads,
+    run_scheme_full_threads_traced, run_scheme_on, run_scheme_resident, run_scheme_tiles,
+    run_scheme_tiles_threads, run_scheme_tiles_threads_traced, ExecStats, HostBackend, Segment,
 };
 use so2dr::stencil::{NaiveEngine, StencilKind};
 use so2dr::trace::Recorder;
@@ -503,51 +503,261 @@ fn prop_tiles_bit_exact_across_devices_and_codecs() {
 
 /// Tiles reject what they cannot plan — at plan time, with typed errors,
 /// never by silently mis-planning (the composition half of the tiles
-/// acceptance criterion). The resident execution model is no longer in
-/// this list: `resident x tiles` is accepted since the 2-D settled/fetch
-/// algebra landed, and the resident-tiles properties above prove it
-/// bit-exact instead.
+/// acceptance criterion). The rejection matrix has shrunk to the in-core
+/// scheme alone: `resident x tiles` is accepted since the 2-D
+/// settled/fetch algebra landed, `resreu x tiles` since the per-axis
+/// skew algebra landed — every formerly-rejected composition in this
+/// table must now plan, run, and reproduce the reference bit-exactly,
+/// and only the scheme with no decomposition still gets a typed error.
 #[test]
-fn tiles_reject_resreu_and_incore_compositions() {
+fn tile_scheme_rejection_matrix_shrank_to_incore_only() {
     let kind = StencilKind::Box { radius: 1 };
     let initial = Array2::synthetic(64, 64, 5);
-    for (scheme, resident, needle) in [
-        (Scheme::ResReu, ResidencyConfig::off(), "resreu"),
-        (Scheme::InCore, ResidencyConfig::off(), "incore"),
-        (Scheme::ResReu, ResidencyConfig::force(3), "resreu"),
-        (Scheme::InCore, ResidencyConfig::auto(1 << 30, 3), "incore"),
-    ] {
-        let mut backend = HostBackend::new(NaiveEngine);
-        let err = run_scheme_tiles(
-            scheme, &initial, kind, 8, 2, 2, 1, 4, 2, &mut backend, &resident,
-            CompressMode::Off,
-        )
-        .expect_err(&format!("{} must be rejected", scheme.name()));
-        assert!(
-            err.to_string().contains(needle),
-            "{}: {err:#} missing {needle:?}",
-            scheme.name()
-        );
-    }
-    // The formerly-rejected composition now plans and runs.
-    let mut backend = HostBackend::new(NaiveEngine);
     let reference = reference_run(&initial, kind, 8, &NaiveEngine);
-    let out = run_scheme_tiles(
-        Scheme::So2dr,
-        &initial,
-        kind,
-        8,
-        2,
-        2,
-        1,
-        4,
-        2,
-        &mut backend,
-        &ResidencyConfig::force(3),
-        CompressMode::Off,
-    )
-    .expect("resident x tiles is accepted now");
-    assert!(out.grid.bit_eq(&reference));
+    for (scheme, resident, accepted) in [
+        (Scheme::So2dr, ResidencyConfig::off(), true),
+        (Scheme::So2dr, ResidencyConfig::force(3), true),
+        (Scheme::ResReu, ResidencyConfig::off(), true),
+        (Scheme::ResReu, ResidencyConfig::force(3), true),
+        (Scheme::InCore, ResidencyConfig::off(), false),
+        (Scheme::InCore, ResidencyConfig::auto(1 << 30, 3), false),
+    ] {
+        let k_on = if scheme == Scheme::ResReu { 1 } else { 2 };
+        let mut backend = HostBackend::new(NaiveEngine);
+        let res = run_scheme_tiles(
+            scheme, &initial, kind, 8, 2, 2, 1, 4, k_on, &mut backend, &resident,
+            CompressMode::Off,
+        );
+        if accepted {
+            let out = res.unwrap_or_else(|e| {
+                panic!("{} x tiles ({:?}) must plan: {e:#}", scheme.name(), resident.mode)
+            });
+            assert!(
+                out.grid.bit_eq(&reference),
+                "{} x tiles ({:?}) diverged: {}",
+                scheme.name(),
+                resident.mode,
+                out.grid.max_abs_diff(&reference)
+            );
+        } else {
+            let err = res.expect_err("incore x tiles must still be rejected");
+            assert!(err.to_string().contains("incore"), "{err:#}");
+        }
+    }
+}
+
+/// ResReu x tiles differential property — the composition this refactor
+/// opened (the planner carries `StencilKind` and tiles the per-axis
+/// skews, so `--scheme resreu --decomp tiles` plans instead of erroring).
+/// Random 2-D tilings x device counts x resident off/force x codec
+/// off/lossless, threaded vs sequential, all bit-exact vs the in-core
+/// reference. Non-vacuity: multi-tile layouts must share bands, sharded
+/// layouts must cross the link, ample-cap resident runs must pin (one
+/// HtoD sweep, resident arrivals observed), and at least one threaded
+/// run must engage more than one worker.
+#[test]
+fn prop_resreu_tiles_bit_exact_across_devices_residency_codecs() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let max_workers = AtomicU64::new(0);
+    let hi = prop_threads(4);
+    let counts: Vec<usize> = if hi == 2 { vec![2] } else { vec![2, hi] };
+    forall(0x2E52E, 40, gen_tile_case, shrink_tile_case, |c| {
+        if !c.feasible() || c.devices > c.chunks_y * c.chunks_x {
+            return Ok(());
+        }
+        let kind = c.kind();
+        let seed = (c.rows * 59 + c.cols * 7 + c.n) as u64;
+        let initial = Array2::synthetic(c.rows, c.cols, seed);
+        let reference = reference_run(&initial, kind, c.n, &NaiveEngine);
+        let grid_bytes = (c.rows * c.cols * 4) as u64;
+        let multi_epoch = c.n > c.s_tb;
+        for (resident, pinned) in
+            [(ResidencyConfig::off(), false), (ResidencyConfig::force(3), true)]
+        {
+            for compress in [CompressMode::Off, CompressMode::Lossless] {
+                let what = format!(
+                    "resreu {}x{} tiles resident={:?} compress={compress:?}",
+                    c.chunks_y, c.chunks_x, resident.mode
+                );
+                let mut backend = HostBackend::new(NaiveEngine);
+                let seq = run_scheme_tiles_threads(
+                    Scheme::ResReu,
+                    &initial,
+                    kind,
+                    c.n,
+                    c.chunks_y,
+                    c.chunks_x,
+                    c.devices,
+                    c.s_tb,
+                    1,
+                    &mut backend,
+                    &resident,
+                    compress,
+                    1,
+                )
+                .map_err(|e| format!("{what} failed: {e:#}"))?;
+                if !seq.grid.bit_eq(&reference) {
+                    return Err(format!(
+                        "{what} on {} device(s) diverged: max |diff| = {}",
+                        c.devices,
+                        seq.grid.max_abs_diff(&reference)
+                    ));
+                }
+                if c.chunks_y * c.chunks_x > 1 && seq.stats.rs_reads == 0 {
+                    return Err(format!("{what}: multi-tile layout shared no bands"));
+                }
+                if c.devices > 1 && seq.stats.p2p_copies == 0 {
+                    return Err(format!("{what}: {} devices exchanged no halos", c.devices));
+                }
+                if pinned {
+                    if seq.stats.spills != 0 {
+                        return Err(format!("{what}: spilled under an ample cap"));
+                    }
+                    if seq.stats.htod_bytes != grid_bytes {
+                        return Err(format!(
+                            "{what}: pinned run moved HtoD {} (grid is {grid_bytes})",
+                            seq.stats.htod_bytes
+                        ));
+                    }
+                    if multi_epoch && seq.stats.resident_hits == 0 {
+                        return Err(format!("{what}: pinned run saw no resident arrivals"));
+                    }
+                }
+                for &threads in &counts {
+                    let mut backend = HostBackend::new(NaiveEngine);
+                    let par = run_scheme_tiles_threads(
+                        Scheme::ResReu,
+                        &initial,
+                        kind,
+                        c.n,
+                        c.chunks_y,
+                        c.chunks_x,
+                        c.devices,
+                        c.s_tb,
+                        1,
+                        &mut backend,
+                        &resident,
+                        compress,
+                        threads,
+                    )
+                    .map_err(|e| format!("{what} threads={threads} failed: {e:#}"))?;
+                    compare_runs(&what, threads, &seq, &par)?;
+                    max_workers.fetch_max(par.stats.workers, Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(())
+    });
+    assert!(
+        max_workers.load(Ordering::Relaxed) > 1,
+        "vacuous sweep: no resreu tile run engaged more than one worker"
+    );
+}
+
+/// Block-grid device-assignment differential property: dealing whole
+/// tile rows per device ([`DeviceAssignment::block_grid`], what the tile
+/// entry points use whenever the device count divides into tile rows)
+/// and the naive row-major contiguous split must both execute the same
+/// tile plan geometry bit-exactly — the assignment only moves *where*
+/// shares cross the link. Structurally, block-grid must never put an
+/// east/west-adjacent tile pair on two devices, and its link traffic is
+/// never above contiguous (strictly below whenever contiguous splits a
+/// tile row mid-row — witnessed at sweep level).
+///
+/// [`DeviceAssignment::block_grid`]: so2dr::chunking::DeviceAssignment::block_grid
+#[test]
+fn prop_block_grid_assignment_bit_exact_and_cuts_link_traffic() {
+    use so2dr::chunking::plan::plan_run_tiles;
+    use so2dr::chunking::{Decomposition2d, DeviceAssignment};
+    use so2dr::coordinator::PlanExecutor;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let strictly_fewer = AtomicU64::new(0);
+    forall(
+        0xB10C,
+        40,
+        |rng| {
+            let mut c = gen_tile_case(rng);
+            // Block-grid needs >= 2 tile rows and >= 2 devices; east/west
+            // bands only exist with >= 2 tile columns.
+            let r = c.kind().radius();
+            if c.chunks_y < 2 {
+                c.chunks_y = 2;
+                c.rows = c.chunks_y * (c.s_tb * r + r + 4);
+            }
+            if c.chunks_x < 2 {
+                c.chunks_x = 2;
+                c.cols = c.chunks_x * (c.s_tb * r + r + 4);
+            }
+            c.devices = rng.range_usize(2, c.chunks_y + 1);
+            c
+        },
+        shrink_tile_case,
+        |c| {
+            if !c.feasible() || c.devices < 2 || c.devices > c.chunks_y {
+                return Ok(());
+            }
+            let kind = c.kind();
+            let dc = Decomposition2d::try_new(c.rows, c.cols, c.chunks_y, c.chunks_x, kind.radius())
+                .map_err(|e| format!("{e:#}"))?;
+            let initial = Array2::synthetic(c.rows, c.cols, (c.rows * 61 + c.n) as u64);
+            let reference = reference_run(&initial, kind, c.n, &NaiveEngine);
+            let block = DeviceAssignment::block_grid(c.chunks_y, c.chunks_x, c.devices);
+            let contig = DeviceAssignment::contiguous(dc.n_tiles(), c.devices);
+            // The structural invariant: block-grid never splits a row.
+            let row_split = |devs: &DeviceAssignment| {
+                (0..c.chunks_y).any(|j| {
+                    (0..c.chunks_x - 1).any(|x| {
+                        devs.device_of(j * c.chunks_x + x)
+                            != devs.device_of(j * c.chunks_x + x + 1)
+                    })
+                })
+            };
+            if row_split(&block) {
+                return Err("block-grid split a tile row across devices".to_string());
+            }
+            let mut p2p = Vec::new();
+            for (label, devs) in [("block-grid", &block), ("contiguous", &contig)] {
+                let plans = plan_run_tiles(Scheme::So2dr, &dc, devs, kind, c.n, c.s_tb, c.k_on)
+                    .map_err(|e| format!("{label} plan failed: {e:#}"))?;
+                let mut backend = HostBackend::new(NaiveEngine);
+                let mut exec = PlanExecutor::new(&mut backend);
+                let mut grid = initial.clone();
+                exec.run_tiles(&mut grid, &dc, &plans)
+                    .map_err(|e| format!("{label} execution failed: {e:#}"))?;
+                if !grid.bit_eq(&reference) {
+                    return Err(format!(
+                        "{label} assignment diverged: max |diff| = {}",
+                        grid.max_abs_diff(&reference)
+                    ));
+                }
+                if exec.stats.p2p_copies == 0 {
+                    return Err(format!("{label}: {} devices exchanged no halos", c.devices));
+                }
+                p2p.push(exec.stats.p2p_bytes);
+            }
+            if p2p[0] > p2p[1] {
+                return Err(format!(
+                    "block-grid crossed more link bytes than contiguous: {} > {}",
+                    p2p[0], p2p[1]
+                ));
+            }
+            if row_split(&contig) && p2p[0] >= p2p[1] {
+                return Err(format!(
+                    "contiguous split a row mid-row but paid no extra link bytes \
+                     ({} vs {})",
+                    p2p[1], p2p[0]
+                ));
+            }
+            if p2p[0] < p2p[1] {
+                strictly_fewer.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(())
+        },
+    );
+    assert!(
+        strictly_fewer.load(Ordering::Relaxed) > 0,
+        "vacuous sweep: contiguous never split a tile row mid-row"
+    );
 }
 
 /// Check one tile case under the resident execution model with the
@@ -1030,6 +1240,179 @@ fn traced_tiles_pinned_config_is_inert_and_thread_invariant() {
     assert_eq!(logical_counters(&plain.stats), logical_counters(&seq.stats));
     assert!(!seq_rec.spans().is_empty(), "traced tile run recorded no spans");
     assert_eq!(span_multiset(&seq_rec), span_multiset(&par_rec));
+}
+
+/// A randomized multi-stencil pipeline (feasible by construction: the
+/// chunk height covers the worst radius in the kind pool, so every
+/// segment's clamped `S_TB` stays >= 1).
+#[derive(Debug, Clone)]
+struct PipeCase {
+    rows: usize,
+    cols: usize,
+    d: usize,
+    devices: usize,
+    s_tb: usize,
+    k_on: usize,
+    /// (kind_code, steps) per segment; codes as in [`Case`], radius <= 2.
+    segs: Vec<(usize, usize)>,
+}
+
+impl PipeCase {
+    fn segments(&self) -> Vec<Segment> {
+        self.segs
+            .iter()
+            .map(|&(code, steps)| {
+                let kind = if code == 0 {
+                    StencilKind::Gradient2d
+                } else {
+                    StencilKind::Box { radius: code }
+                };
+                Segment::new(kind, steps)
+            })
+            .collect()
+    }
+}
+
+fn gen_pipe_case(rng: &mut XorShift64) -> PipeCase {
+    let d = rng.range_usize(2, 6);
+    let s_tb = rng.range_usize(1, 5);
+    // Chunk sized for the worst radius in the pool (2), so every
+    // segment's skirt fits and the entry point's clamp never bottoms out.
+    let chunk = 2 * s_tb + 2 + rng.range_usize(0, 8);
+    let rows = d * chunk;
+    let cols = 6 + rng.range_usize(0, 16);
+    let devices = rng.range_usize(1, d.min(4) + 1);
+    let k_on = rng.range_usize(1, 4);
+    let n_segs = rng.range_usize(2, 4);
+    let segs = (0..n_segs)
+        .map(|_| (rng.range_usize(0, 3), rng.range_usize(1, 2 * s_tb + 3)))
+        .collect();
+    PipeCase { rows, cols, d, devices, s_tb, k_on, segs }
+}
+
+fn shrink_pipe_case(c: &PipeCase) -> Vec<PipeCase> {
+    let mut out = Vec::new();
+    if c.segs.len() > 2 {
+        let mut segs = c.segs.clone();
+        segs.pop();
+        out.push(PipeCase { segs, ..c.clone() });
+    }
+    for (i, &(code, steps)) in c.segs.iter().enumerate() {
+        for s in shrink_usize_toward(steps, 1) {
+            let mut segs = c.segs.clone();
+            segs[i] = (code, s);
+            out.push(PipeCase { segs, ..c.clone() });
+        }
+    }
+    for devices in shrink_usize_toward(c.devices, 1) {
+        out.push(PipeCase { devices, ..c.clone() });
+    }
+    for k_on in shrink_usize_toward(c.k_on, 1) {
+        out.push(PipeCase { k_on, ..c.clone() });
+    }
+    out
+}
+
+/// Cross-segment resident pipeline differential property: random
+/// multi-stencil pipelines (2-3 segments, mixed kinds and radii)
+/// chained through `run_pipeline_resident` under an ample capacity must
+/// reproduce the segment-wise reference bit-exactly while transferring
+/// each chunk HtoD exactly once across ALL segment boundaries — total
+/// host traffic is one grid sweep each way for the whole pipeline, with
+/// resident arrivals observed and zero spills; the lossless codec
+/// composes without moving the numerics. With residency off, the same
+/// entry point degenerates to the staged concatenation (at least one
+/// sweep per segment) and stays bit-exact.
+#[test]
+fn prop_pipeline_cross_segment_residency_bit_exact_and_one_sweep() {
+    forall(0x919E, 40, gen_pipe_case, shrink_pipe_case, |c| {
+        let segs = c.segments();
+        let initial = Array2::synthetic(c.rows, c.cols, (c.rows * 67 + c.cols) as u64);
+        let mut reference = initial.clone();
+        for s in &segs {
+            reference = reference_run(&reference, s.kind, s.steps, &NaiveEngine);
+        }
+        let grid_bytes = (c.rows * c.cols * 4) as u64;
+        for compress in [CompressMode::Off, CompressMode::Lossless] {
+            let mut backend = HostBackend::new(NaiveEngine);
+            let out = run_pipeline_resident(
+                &initial,
+                &segs,
+                c.d,
+                c.devices,
+                c.s_tb,
+                c.k_on,
+                &mut backend,
+                &ResidencyConfig::force(3),
+                compress,
+            )
+            .map_err(|e| format!("chained pipeline ({compress:?}) failed: {e:#}"))?;
+            if !out.grid.bit_eq(&reference) {
+                return Err(format!(
+                    "chained pipeline ({compress:?}) on {} device(s) diverged: \
+                     max |diff| = {}",
+                    c.devices,
+                    out.grid.max_abs_diff(&reference)
+                ));
+            }
+            if out.stats.spills != 0 {
+                return Err("ample-cap pipeline spilled".to_string());
+            }
+            if out.stats.htod_bytes != grid_bytes || out.stats.dtoh_bytes != grid_bytes {
+                return Err(format!(
+                    "chained pipeline moved HtoD {} / DtoH {} (grid is {grid_bytes})",
+                    out.stats.htod_bytes, out.stats.dtoh_bytes
+                ));
+            }
+            if out.stats.resident_hits == 0 {
+                return Err("chained pipeline observed no resident arrivals".to_string());
+            }
+            let summary = out
+                .residency
+                .ok_or_else(|| "chained pipeline reported no residency summary".to_string())?;
+            if !(summary.enabled && summary.fits) {
+                return Err("ample-cap pipeline did not pin".to_string());
+            }
+            if compress == CompressMode::Lossless
+                && (out.stats.codec_ops == 0
+                    || out.stats.htod_wire_bytes == out.stats.htod_bytes)
+            {
+                return Err("lossless pipeline left the wire volume untouched".to_string());
+            }
+        }
+        // Residency off: the same entry point degenerates to the staged
+        // concatenation — at least one host sweep per segment.
+        let mut backend = HostBackend::new(NaiveEngine);
+        let out = run_pipeline_resident(
+            &initial,
+            &segs,
+            c.d,
+            c.devices,
+            c.s_tb,
+            c.k_on,
+            &mut backend,
+            &ResidencyConfig::off(),
+            CompressMode::Off,
+        )
+        .map_err(|e| format!("staged pipeline failed: {e:#}"))?;
+        if !out.grid.bit_eq(&reference) {
+            return Err(format!(
+                "staged pipeline diverged: max |diff| = {}",
+                out.grid.max_abs_diff(&reference)
+            ));
+        }
+        if out.residency.map(|s| s.enabled) != Some(false) {
+            return Err("off-mode pipeline reported an enabled summary".to_string());
+        }
+        if out.stats.htod_bytes < grid_bytes * segs.len() as u64 {
+            return Err(format!(
+                "staged pipeline moved only {} bytes over {} segments",
+                out.stats.htod_bytes,
+                segs.len()
+            ));
+        }
+        Ok(())
+    });
 }
 
 /// The acceptance-criterion configuration, pinned: `--devices 4` at d=8
